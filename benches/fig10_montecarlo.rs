@@ -1,0 +1,56 @@
+//! Fig. 10: Monte-Carlo simulation of RBL and SA reference voltage.
+//!
+//! Regenerates the sense-margin analysis — all 256 bit-lines, 200 trials,
+//! all bit combinations, process + mismatch variation — at the paper's
+//! operating points, and reports the minimum V_Ref placement window
+//! (paper: ~92 mV between the "111" and "011" clusters at 1.1 V).
+
+use ns_lbp::bench_harness::{Bench, Table};
+use ns_lbp::circuit::{CircuitParams, MonteCarlo};
+
+fn main() {
+    println!("== Fig. 10: Monte-Carlo RBL / V_Ref margins ==\n");
+    let mut table = Table::new(&["VDD [V]", "level means [V]",
+                                 "gap 000-001 [mV]", "gap 001-011 [mV]",
+                                 "gap 011-111 [mV]", "min margin [mV]",
+                                 "decision errors"]);
+    for vdd in [0.9, 1.0, 1.1] {
+        let params = CircuitParams { vdd, ..CircuitParams::default() };
+        let r = MonteCarlo::new(params).run(7);
+        table.row(&[
+            format!("{vdd:.1}"),
+            format!("{:.2}/{:.2}/{:.2}/{:.2}", r.levels[0].mean,
+                    r.levels[1].mean, r.levels[2].mean, r.levels[3].mean),
+            format!("{:.1}", r.level_gaps[0] * 1e3),
+            format!("{:.1}", r.level_gaps[1] * 1e3),
+            format!("{:.1}", r.level_gaps[2] * 1e3),
+            format!("{:.1}", r.min_margin * 1e3),
+            format!("{:.1e}", r.decision_error_rate),
+        ]);
+    }
+    table.print();
+    println!("\npaper @1.1 V: ~92 mV min margin, higher VDD ⇒ larger margin,");
+    println!("lower VDD limits max frequency via the shrinking V_Ref range.");
+
+    std::fs::create_dir_all("artifacts/results").ok();
+    table.write_tsv("artifacts/results/fig10.tsv").unwrap();
+    println!("wrote artifacts/results/fig10.tsv\n");
+
+    // --- distribution detail at the paper's nominal point -------------------
+    let r = MonteCarlo::default().run(7);
+    let mut lanes = Table::new(&["lane", "mean [mV]", "std [mV]", "min [mV]"]);
+    for l in &r.lanes {
+        lanes.row(&[
+            format!("{}{} V_R{}", "1".repeat(l.ones),
+                    if l.above { ">" } else { "<" }, l.reference + 1),
+            format!("{:.1}", l.stats.mean * 1e3),
+            format!("{:.1}", l.stats.std * 1e3),
+            format!("{:.1}", l.stats.min * 1e3),
+        ]);
+    }
+    lanes.print();
+
+    // --- throughput of the MC engine (perf instrument) ---------------------
+    let mut b = Bench::new("fig10");
+    b.run("mc_200x256_full", || MonteCarlo::default().run(9).min_margin);
+}

@@ -1,0 +1,66 @@
+//! Fig. 11: (a) energy consumption, (b) execution time, and (c) memory
+//! storage of NS-LBP/Ap-LBP vs LBPNet, 8-bit CNN and LBCNN on SVHN.
+//!
+//! Regenerates all three panels from the analytic platform cost models
+//! (rust/src/baselines.rs) and validates the measured architectural
+//! simulation against the analytic Ap-LBP point.  Reproduction target is
+//! the paper's *shape*: Ap-LBP wins everywhere, ~2.2×/4× vs LBPNet
+//! (energy/time), ~5.2×/6.2× vs CNN, ~4×/2.3× vs LBCNN, memory ≈ LBPNet
+//! and ~3.4× below LBCNN.
+
+use ns_lbp::baselines::{cost, Design};
+use ns_lbp::bench_harness::Table;
+use ns_lbp::energy::EnergyModel;
+use ns_lbp::sram::CacheGeometry;
+
+fn main() {
+    let em = EnergyModel::default();
+    let g = CacheGeometry::default();
+
+    for dataset in ["svhn", "mnist"] {
+        println!("== Fig. 11 ({dataset}) ==\n");
+        let designs = [
+            Design::NsLbpApLbp { apx: 2 },
+            Design::LbpNet,
+            Design::Cnn8bit,
+            Design::Lbcnn,
+        ];
+        let reports: Vec<_> = designs
+            .iter()
+            .map(|&d| cost(d, dataset, &em, &g).unwrap())
+            .collect();
+        let ap = &reports[0];
+
+        let mut table = Table::new(&["design", "energy [µJ]", "vs Ap-LBP",
+                                     "time [µs]", "vs Ap-LBP",
+                                     "memory [KB]", "vs Ap-LBP"]);
+        for r in &reports {
+            table.row(&[
+                r.design.clone(),
+                format!("{:.2}", r.energy_uj()),
+                format!("{:.2}x", r.energy_uj() / ap.energy_uj()),
+                format!("{:.2}", r.time_us()),
+                format!("{:.2}x", r.time_us() / ap.time_us()),
+                format!("{:.0}", r.memory_bytes as f64 / 1024.0),
+                format!("{:.2}x", r.memory_bytes as f64 / ap.memory_bytes as f64),
+            ]);
+        }
+        table.print();
+
+        if dataset == "svhn" {
+            println!("\npaper factors vs Ap-LBP — energy: LBPNet 2.2x, CNN \
+                      5.2x, LBCNN ~4x; time: LBPNet 4x, CNN 6.2x, LBCNN 2.3x;");
+            println!("memory: Ap-LBP ≈ LBPNet, LBCNN ~3.4x larger.");
+            // panel (a) energy breakdown for the winning design
+            println!("\nAp-LBP energy breakdown [µJ]: compute {:.2} | read \
+                      {:.2} | write {:.2} | ctrl {:.2} | dpu {:.2} | sensor {:.3}",
+                     ap.energy.compute_pj / 1e6, ap.energy.read_pj / 1e6,
+                     ap.energy.write_pj / 1e6, ap.energy.ctrl_pj / 1e6,
+                     ap.energy.dpu_pj / 1e6, ap.energy.sensor_pj / 1e6);
+            std::fs::create_dir_all("artifacts/results").ok();
+            table.write_tsv("artifacts/results/fig11.tsv").unwrap();
+            println!("wrote artifacts/results/fig11.tsv");
+        }
+        println!();
+    }
+}

@@ -1,0 +1,94 @@
+//! Fig. 4: energy consumption vs accuracy vs number of approximated bits
+//! (MNIST).
+//!
+//! Regenerates the paper's trade-off curve: for apx ∈ 0..=4 the LBP-layer
+//! energy from (a) the analytic op-count model (Eq. 2) and (b) a measured
+//! architectural-simulation run, joined with the trained accuracy column
+//! written by `make fig4` (python -m compile.train --fig4) when available.
+//!
+//! Paper's headline: apx = 2 of 4 mapping bits ⇒ ~42% LBP-layer energy
+//! saving at 1.3 pt accuracy cost.
+
+use ns_lbp::baselines::{cost, Design};
+use ns_lbp::bench_harness::Table;
+use ns_lbp::coordinator::{Coordinator, CoordinatorConfig};
+use ns_lbp::energy::EnergyModel;
+use ns_lbp::params;
+use ns_lbp::rng::Xoshiro256;
+use ns_lbp::sensor::{ReplaySensor, SensorConfig};
+use ns_lbp::sram::CacheGeometry;
+
+fn accuracy_column() -> Vec<Option<f64>> {
+    // artifacts/fig4_accuracy.tsv: "apx\taccuracy" written by make fig4
+    let mut col = vec![None; 5];
+    if let Ok(text) = std::fs::read_to_string("artifacts/fig4_accuracy.tsv") {
+        for line in text.lines().skip(1) {
+            let mut it = line.split('\t');
+            if let (Some(a), Some(acc)) = (it.next(), it.next()) {
+                if let (Ok(a), Ok(acc)) = (a.parse::<usize>(), acc.parse::<f64>()) {
+                    if a < col.len() {
+                        col[a] = Some(acc);
+                    }
+                }
+            }
+        }
+    }
+    col
+}
+
+/// Measured energy per frame from the architectural simulator.
+fn measured_energy_uj(apx: usize) -> f64 {
+    let mut p = params::load("artifacts/mnist.params.bin")
+        .expect("run `make artifacts` first");
+    p.config.apx_code = apx;
+    p.config.apx_pixel = apx;
+    let cfg = p.config;
+    let coord = Coordinator::new(p, CoordinatorConfig::default()).unwrap();
+    let scfg = SensorConfig {
+        rows: cfg.height, cols: cfg.width, channels: cfg.in_channels,
+        skip_lsbs: cfg.apx_pixel, ..Default::default()
+    };
+    let mut rng = Xoshiro256::new(4);
+    let scenes: Vec<Vec<f64>> = (0..4)
+        .map(|_| (0..scfg.pixels()).map(|_| rng.next_f64()).collect())
+        .collect();
+    let mut sensor = ReplaySensor::new(scfg, scenes, 1).unwrap();
+    let (_, summary) = coord.run(&mut sensor, 4).unwrap();
+    assert_eq!(summary.arch_mismatches, 0);
+    summary.energy_per_frame_uj()
+}
+
+fn main() {
+    println!("== Fig. 4: energy vs accuracy vs approximated bits (MNIST) ==\n");
+    let em = EnergyModel::default();
+    let g = CacheGeometry::default();
+    let acc = accuracy_column();
+
+    let base_model = cost(Design::NsLbpApLbp { apx: 0 }, "mnist", &em, &g)
+        .unwrap()
+        .energy_uj();
+    let base_meas = measured_energy_uj(0);
+
+    let mut table = Table::new(&["apx", "model energy [µJ]", "model saving",
+                                 "measured energy [µJ]", "measured saving",
+                                 "accuracy [%]"]);
+    for apx in 0..=4usize {
+        let model = cost(Design::NsLbpApLbp { apx: apx as u64 }, "mnist", &em, &g)
+            .unwrap()
+            .energy_uj();
+        let meas = measured_energy_uj(apx);
+        table.row(&[
+            apx.to_string(),
+            format!("{model:.3}"),
+            format!("{:.1}%", 100.0 * (1.0 - model / base_model)),
+            format!("{meas:.3}"),
+            format!("{:.1}%", 100.0 * (1.0 - meas / base_meas)),
+            acc[apx].map_or("run `make fig4`".into(), |a| format!("{a:.2}")),
+        ]);
+    }
+    table.print();
+    std::fs::create_dir_all("artifacts/results").ok();
+    table.write_tsv("artifacts/results/fig4.tsv").unwrap();
+    println!("\npaper: apx=2 ⇒ ~42% LBP-layer energy saving, −1.3 pt accuracy");
+    println!("wrote artifacts/results/fig4.tsv");
+}

@@ -1,0 +1,77 @@
+//! Fig. 9: post-layout transient simulation of an NS-LBP sub-array
+//! executing the XOR3-based comparison.
+//!
+//! Regenerates the waveform series (RBL discharge per input combination,
+//! the three references, the SA decision at the 400 ps strobe) and
+//! micro-benches the behavioral circuit model itself.
+
+use ns_lbp::bench_harness::{black_box, Bench, Table};
+use ns_lbp::circuit::{sense, CircuitParams, SENSE_DELAY_PS};
+
+fn main() {
+    let p = CircuitParams::default();
+    println!("== Fig. 9: RBL transients + single-cycle XOR3 ==\n");
+
+    let mut table = Table::new(&["t [ps]", "\"000\" [V]", "\"001\" [V]",
+                                 "\"011\" [V]", "\"111\" [V]"]);
+    let mut t = 0.0;
+    while t <= 800.0 {
+        table.row(&[
+            format!("{t:.0}"),
+            format!("{:.3}", p.rbl_waveform(0, t).unwrap()),
+            format!("{:.3}", p.rbl_waveform(1, t).unwrap()),
+            format!("{:.3}", p.rbl_waveform(2, t).unwrap()),
+            format!("{:.3}", p.rbl_waveform(3, t).unwrap()),
+        ]);
+        t += 80.0;
+    }
+    table.print();
+
+    let [r1, r2, r3] = p.refs();
+    println!("\nreferences: V_R1 {:.0} mV, V_R2 {:.0} mV, V_R3 {:.0} mV",
+             r1 * 1e3, r2 * 1e3, r3 * 1e3);
+    println!("settled levels (paper): 280 / 495 / 735 / 950 mV — model: \
+              {:.0} / {:.0} / {:.0} / {:.0} mV",
+             p.rbl_level(0).unwrap() * 1e3, p.rbl_level(1).unwrap() * 1e3,
+             p.rbl_level(2).unwrap() * 1e3, p.rbl_level(3).unwrap() * 1e3);
+
+    let mut dec = Table::new(&["ones", "RBL@strobe [V]", "OR3", "MAJ3", "AND3",
+                               "XOR3"]);
+    for ones in 0..=3usize {
+        let v = p.rbl_waveform(ones, SENSE_DELAY_PS).unwrap();
+        let sa = sense(&p, ones, 0.0).unwrap();
+        dec.row(&[
+            ones.to_string(),
+            format!("{v:.3}"),
+            (sa.or3 as u8).to_string(),
+            (sa.maj3 as u8).to_string(),
+            (sa.and3 as u8).to_string(),
+            (sa.xor3() as u8).to_string(),
+        ]);
+    }
+    println!();
+    dec.print();
+    println!("\nsense delay {} ps < cycle {} ps at {} GHz (paper: ~400 ps)",
+             SENSE_DELAY_PS, p.cycle_ps(), p.freq_ghz);
+
+    std::fs::create_dir_all("artifacts/results").ok();
+    table.write_tsv("artifacts/results/fig9.tsv").unwrap();
+    println!("wrote artifacts/results/fig9.tsv\n");
+
+    // --- microbenchmark of the model itself --------------------------------
+    let mut b = Bench::new("fig9");
+    b.run("rbl_waveform", || {
+        let mut acc = 0.0;
+        for ones in 0..4 {
+            acc += p.rbl_waveform(ones, black_box(400.0)).unwrap();
+        }
+        acc
+    });
+    b.run("sense_decision", || {
+        let mut n = 0u32;
+        for ones in 0..4 {
+            n += sense(&p, ones, 0.0).unwrap().xor3() as u32;
+        }
+        n
+    });
+}

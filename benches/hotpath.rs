@@ -1,0 +1,118 @@
+//! Hot-path micro-benchmarks — the perf-pass instrument (EXPERIMENTS.md
+//! §Perf).  Covers every stage of the L3 pipeline:
+//!
+//! * sub-array bulk-bitwise row ops (the single-cycle compute primitive),
+//! * a full Algorithm-1 256-lane batch,
+//! * lane loading (transposed bit-plane writes),
+//! * the in-memory bit-serial dot product,
+//! * partitioning, Monte-Carlo trials, and a whole functional-model frame.
+
+use ns_lbp::bench_harness::{black_box, Bench};
+use ns_lbp::circuit::MonteCarlo;
+use ns_lbp::dpu::Dpu;
+use ns_lbp::isa::{Executor, Instruction};
+use ns_lbp::lbp::parallel_compare;
+use ns_lbp::mapping::{partition, LbpSubarrayMap};
+use ns_lbp::mlp::MlpSubarrayMap;
+use ns_lbp::model;
+use ns_lbp::params;
+use ns_lbp::rng::Xoshiro256;
+use ns_lbp::sram::{CacheGeometry, Region, RegionLayout, SubArray};
+
+fn main() {
+    let mut b = Bench::new("hotpath");
+    let map = LbpSubarrayMap::new(RegionLayout::default(), 8).unwrap();
+    let mut rng = Xoshiro256::new(1);
+
+    // --- raw row ops ---------------------------------------------------------
+    {
+        let mut sa = SubArray::new(256, 256);
+        for r in 0..3 {
+            let words: Vec<u64> = (0..4).map(|_| rng.next_u64()).collect();
+            sa.write_row(r, &words).unwrap();
+        }
+        let mut ex = Executor::new(&mut sa);
+        b.run("isa_sum3_row_op", || {
+            ex.exec(Instruction::Sum { src1: 0, src2: 1, src3: 2, dest: 5 })
+                .unwrap();
+            ex.stats.instructions
+        });
+    }
+
+    // --- Algorithm 1, full 256-lane batch ------------------------------------
+    {
+        let pairs: Vec<(u8, u8)> = (0..256)
+            .map(|_| (rng.next_u64() as u8, rng.next_u64() as u8))
+            .collect();
+        let mut sa = SubArray::new(256, 256);
+        map.load_lanes(&mut sa, 0, &pairs).unwrap();
+        b.run("alg1_compare_256lanes", || {
+            let mut ex = Executor::new(&mut sa);
+            parallel_compare(&mut ex, &map, 0, 256, 0, false).unwrap().bits
+        });
+        let mut sa2 = SubArray::new(256, 256);
+        b.run("lane_load_256x8bit", || {
+            map.load_lanes(&mut sa2, 0, black_box(&pairs)).unwrap()
+        });
+    }
+
+    // --- in-memory bit-serial dot --------------------------------------------
+    {
+        let mmap = MlpSubarrayMap::new(map, 4, 4).unwrap();
+        let x: Vec<u8> = (0..256).map(|_| rng.next_u64() as u8 & 15).collect();
+        let w: Vec<u8> = (0..256).map(|_| rng.next_u64() as u8 & 15).collect();
+        let mut sa = SubArray::new(256, 256);
+        let mut ex = Executor::new(&mut sa);
+        mmap.load_vector(&mut ex, Region::Input, 0, &x).unwrap();
+        mmap.load_vector(&mut ex, Region::Weight, 0, &w).unwrap();
+        b.run("bitserial_dot_256lanes", || {
+            let mut dpu = Dpu::default();
+            mmap.dot_unsigned(&mut ex, &mut dpu, 0, 0, 256).unwrap()
+        });
+    }
+
+    // --- partitioning ---------------------------------------------------------
+    {
+        let g = CacheGeometry::default();
+        let pairs: Vec<(u8, u8)> = (0..50_176) // one MNIST layer of lanes
+            .map(|_| (rng.next_u64() as u8, rng.next_u64() as u8))
+            .collect();
+        b.run("partition_50k_lanes", || {
+            partition(black_box(&pairs), &g, &map).unwrap().len()
+        });
+    }
+
+    // --- Monte-Carlo ------------------------------------------------------------
+    b.run("montecarlo_20x256", || {
+        let mc = MonteCarlo { trials: 20, ..MonteCarlo::default() };
+        mc.run(3).min_margin
+    });
+
+    // --- whole frames ------------------------------------------------------------
+    if let Ok(p) = params::load("artifacts/mnist.params.bin") {
+        let cfg = p.config;
+        let img: Vec<f32> = (0..cfg.height * cfg.width * cfg.in_channels)
+            .map(|_| rng.next_f64() as f32)
+            .collect();
+        b.run("functional_frame_mnist", || {
+            model::apply(&p, black_box(&img), &mut Dpu::default()).unwrap()
+        });
+        use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
+        use ns_lbp::sensor::Frame;
+        let coord = Coordinator::new(
+            p.clone(),
+            CoordinatorConfig { arch: ArchSim::default(), ..Default::default() },
+        )
+        .unwrap();
+        let q = model::sensor_quantize(&img, cfg.apx_pixel);
+        let frame = Frame { rows: cfg.height, cols: cfg.width,
+                            channels: cfg.in_channels, pixels: q, seq: 0 };
+        let g = coord.config.system.cache;
+        let mut scratch = SubArray::new(g.rows, g.cols);
+        b.run("architectural_frame_mnist", || {
+            coord.process_frame(black_box(&frame), &mut scratch).unwrap().seq
+        });
+    } else {
+        eprintln!("(skipping whole-frame benches: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,69 @@
+//! Table 1: hardware cost analysis of CNN vs Ap-LBP (computational and
+//! memory cost of one layer), plus the Eq. 1 / Eq. 2 whole-network totals
+//! and the worked Fig. 3(b) example.
+
+use ns_lbp::bench_harness::Table;
+use ns_lbp::lbp::opcount::{ApLbpOps, LayerShape, LbpCost};
+
+fn main() {
+    println!("== Table 1: hardware cost, CNN vs Ap-LBP ==\n");
+
+    // the paper's symbolic table instantiated at both network shapes
+    for (name, p, q, ch) in [("mnist L1", 28u64, 28u64, 9u64),
+                             ("svhn L4", 32, 32, 27)] {
+        let shape = LayerShape { p, q, ch, r: 3, s: 3 };
+        let cnn = shape.cnn_cost();
+        let ap0 = shape.aplbp_cost(8, 8, 0);
+        let ap2 = shape.aplbp_cost(8, 8, 2);
+        let mut t = Table::new(&["network", "Mul (O(N²))", "Add/Sub/Cmp (O(N))",
+                                 "memory"]);
+        t.row(&["CNN".into(), cnn.muls.to_string(), cnn.adds.to_string(),
+                cnn.memory.to_string()]);
+        t.row(&["Ap-LBP apx=0 (LBPNet)".into(), "0".into(),
+                ap0.adds.to_string(), ap0.memory.to_string()]);
+        t.row(&["Ap-LBP apx=2".into(), "0".into(), ap2.adds.to_string(),
+                ap2.memory.to_string()]);
+        println!("layer shape {name}: p={p} q={q} ch={ch} r=s=3, e=8 m=8");
+        t.print();
+        println!();
+    }
+
+    // Fig. 3(b) worked example — the paper's own numbers
+    println!("== Fig. 3(b) worked example (e=5, ch=2, m=4, apx=1) ==\n");
+    let c = LbpCost { e: 5, ch: 2, m: 4, apx: 1 };
+    let mut t = Table::new(&["", "reads", "comparisons", "writes"]);
+    let l = c.lbpnet_ops();
+    let a = c.aplbp_ops();
+    t.row(&["LBPNet (paper: 14/8/12)".into(), l.reads.to_string(),
+            l.comparisons.to_string(), l.writes.to_string()]);
+    t.row(&["Ap-LBP (paper: 11/6/9)".into(), a.reads.to_string(),
+            a.comparisons.to_string(), a.writes.to_string()]);
+    t.print();
+    assert_eq!((l.reads, l.comparisons, l.writes), (14, 8, 12));
+    assert_eq!((a.reads, a.comparisons, a.writes), (11, 6, 9));
+    println!("\nmatches the paper exactly.\n");
+
+    // Eq. 1/2 whole-network totals
+    println!("== Eq. 1 / Eq. 2 per-image totals ==\n");
+    let mut t = Table::new(&["network", "reads", "comparisons", "writes",
+                             "total", "saving"]);
+    for ds in ["mnist", "svhn"] {
+        for apx in [0u64, 1, 2] {
+            let net = ApLbpOps::for_dataset(ds, apx).unwrap();
+            let ops = if apx == 0 { net.total_lbpnet() } else { net.total_aplbp() };
+            let base = net.total_lbpnet().total() as f64;
+            t.row(&[
+                format!("{ds} apx={apx}"),
+                ops.reads.to_string(),
+                ops.comparisons.to_string(),
+                ops.writes.to_string(),
+                ops.total().to_string(),
+                format!("{:.1}%", 100.0 * (1.0 - ops.total() as f64 / base)),
+            ]);
+        }
+    }
+    t.print();
+    std::fs::create_dir_all("artifacts/results").ok();
+    t.write_tsv("artifacts/results/table1.tsv").unwrap();
+    println!("\nwrote artifacts/results/table1.tsv");
+}

@@ -1,0 +1,75 @@
+//! ISA playground: assemble a Table-2 program, run it on a compute
+//! sub-array, and inspect the execution/energy statistics — the
+//! "programmer's view" of NS-LBP as a third-party accelerator.
+//!
+//! ```bash
+//! cargo run --release --example isa_playground
+//! ```
+
+use ns_lbp::energy::EnergyModel;
+use ns_lbp::isa::{assemble, Executor};
+use ns_lbp::sram::SubArray;
+
+const PROGRAM: &str = r#"
+; in-memory 1-bit full adder over rows 0,1,2 -> sum in r10, carry in r11
+ini r10, zeros
+ini r11, zeros
+sum r0 r1 r2 -> r10
+carry r0 r1 r2 -> r11
+; 2-input ops via constant rows (r8 = all-ones, r9 = all-zeros)
+ini r8, ones
+ini r9, zeros
+cmp r0 r1 -> r12          ; XOR2
+search r0 k1 -> r13       ; XNOR (equality search against key row 1)
+carry r0 r1 r9 -> r14     ; AND2 = MAJ3(a, b, 0)
+carry r0 r1 r8 -> r15     ; OR2  = MAJ3(a, b, 1)
+"#;
+
+fn main() -> anyhow::Result<()> {
+    let program = assemble(PROGRAM).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!("assembled {} instructions:", program.len());
+    for inst in &program {
+        println!("  {inst}");
+    }
+
+    let mut sa = SubArray::new(256, 256);
+    // operand rows: three walking bit patterns
+    let a = 0b1010_1100_0011_0101u64;
+    let b = 0b0110_0110_1111_0000u64;
+    let c = 0b1111_0000_1010_1010u64;
+    for (row, v) in [(0, a), (1, b), (2, c)] {
+        let mut words = vec![0u64; 4];
+        words[0] = v;
+        sa.write_row(row, &words)
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    }
+
+    let mut ex = Executor::new(&mut sa);
+    ex.run(&program).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    println!("\nresults (low 16 bits per destination row):");
+    for (name, row, expect) in [
+        ("SUM  ", 10, a ^ b ^ c),
+        ("CARRY", 11, (a & b) | (a & c) | (b & c)),
+        ("XOR2 ", 12, a ^ b),
+        ("XNOR ", 13, !(a ^ b)),
+        ("AND2 ", 14, a & b),
+        ("OR2  ", 15, a | b),
+    ] {
+        let got = ex.array.read_row(row).map_err(|e| anyhow::anyhow!(e.to_string()))?[0];
+        println!("  {name} r{row:<2} = {:016b} (expect {:016b})",
+                 got & 0xFFFF, expect & 0xFFFF);
+        assert_eq!(got, expect, "{name}");
+    }
+
+    let em = EnergyModel::default();
+    let e = em.exec_energy(&ex.stats);
+    println!("\nstats: {} instrs, {} cycles, {} compute ops, {} writes",
+             ex.stats.instructions, ex.stats.cycles, ex.stats.compute_ops,
+             ex.stats.row_writes);
+    println!("energy: {:.1} pJ total ({:.1} compute / {:.1} write / {:.1} ctrl)",
+             e.total_pj(), e.compute_pj, e.write_pj, e.ctrl_pj);
+    println!("latency: {:.1} ns at {} GHz", em.exec_time_ns(&ex.stats),
+             em.params.freq_ghz);
+    Ok(())
+}

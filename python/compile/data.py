@@ -1,0 +1,200 @@
+"""Procedural stand-ins for MNIST / FashionMNIST / SVHN.
+
+The evaluation environment has no network access, so the real corpora are
+unavailable.  Per the substitution rule (DESIGN.md §Substitutions) we
+generate deterministic, procedurally rendered look-alikes that preserve the
+properties the paper's evaluation depends on:
+
+* same tensor shapes (28x28x1 for the MNIST pair, 32x32x3 for SVHN-like),
+* 10 balanced classes,
+* intra-class variation (affine jitter, stroke-width, noise, distractors)
+  so that model *capacity ordering* is exercised: a full-precision CNN
+  should beat binarized nets, which should beat LBP nets, and Ap-LBP's
+  accuracy should fall monotonically with the number of approximated bits.
+
+If real IDX/NPZ files are placed under ``data/<name>/`` they are used
+instead (``load_dataset`` probes for them first).
+"""
+
+from __future__ import annotations
+
+import os
+import numpy as np
+
+# ----------------------------------------------------------------------------
+# 5x7 bitmap glyphs for digits 0-9 (classic font), rows top->bottom.
+# ----------------------------------------------------------------------------
+_GLYPHS = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00010", "00100", "01000", "11111"],
+    3: ["11111", "00010", "00100", "00010", "00001", "10001", "01110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+# 8x8 coarse silhouettes for the 10 FashionMNIST classes (t-shirt, trouser,
+# pullover, dress, coat, sandal, shirt, sneaker, bag, ankle-boot).
+_FASHION = [
+    ["00000000", "11100111", "11111111", "01111110", "01111110", "01111110", "01111110", "00000000"],
+    ["00111100", "00111100", "00111100", "00100100", "00100100", "00100100", "00100100", "00100100"],
+    ["01100110", "11111111", "11111111", "01111110", "01111110", "01111110", "01111110", "01111110"],
+    ["00111100", "00111100", "00111100", "00111100", "01111110", "01111110", "11111111", "11111111"],
+    ["11100111", "11111111", "11111111", "11111111", "01111110", "01111110", "01111110", "01111110"],
+    ["00000000", "00000000", "00000011", "00001110", "00111000", "11100000", "11111111", "00000000"],
+    ["01100110", "11111111", "11011011", "01111110", "01011010", "01111110", "01011010", "01111110"],
+    ["00000000", "00000000", "00000110", "00011110", "01111110", "11111111", "11111110", "00000000"],
+    ["00111100", "01000010", "11111111", "10000001", "10000001", "10000001", "11111111", "00000000"],
+    ["00011110", "00011110", "00011110", "00011110", "00111110", "01111110", "11111100", "11111100"],
+]
+
+
+def _render_glyph(rows: list[str]) -> np.ndarray:
+    g = np.array([[int(c) for c in r] for r in rows], dtype=np.float32)
+    return g
+
+
+def _place(canvas: np.ndarray, glyph: np.ndarray, cy: int, cx: int, scale: int,
+           value: float) -> None:
+    """Nearest-neighbour upscale ``glyph`` by ``scale`` and stamp onto canvas."""
+    g = np.kron(glyph, np.ones((scale, scale), dtype=np.float32)) * value
+    h, w = g.shape
+    H, W = canvas.shape
+    y0, x0 = cy - h // 2, cx - w // 2
+    ys0, xs0 = max(0, -y0), max(0, -x0)
+    y0, x0 = max(0, y0), max(0, x0)
+    y1, x1 = min(H, y0 + h - ys0), min(W, x0 + w - xs0)
+    if y1 <= y0 or x1 <= x0:
+        return
+    patch = g[ys0:ys0 + (y1 - y0), xs0:xs0 + (x1 - x0)]
+    canvas[y0:y1, x0:x1] = np.maximum(canvas[y0:y1, x0:x1], patch)
+
+
+def _jitter(img: np.ndarray, rng: np.random.Generator, max_shift: int = 2) -> np.ndarray:
+    dy, dx = rng.integers(-max_shift, max_shift + 1, size=2)
+    out = np.zeros_like(img)
+    H, W = img.shape[:2]
+    ys, yd = (dy, 0) if dy >= 0 else (0, -dy)
+    xs, xd = (dx, 0) if dx >= 0 else (0, -dx)
+    out[yd:H - ys, xd:W - xs, ...] = img[ys:H - yd, xs:W - xd, ...]
+    return out
+
+
+def _make_mnist_like(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 28, 28, 1), dtype=np.float32)
+    ys = (np.arange(n) % 10).astype(np.int32)
+    rng.shuffle(ys)
+    for i in range(n):
+        canvas = np.zeros((28, 28), dtype=np.float32)
+        scale = int(rng.integers(3, 5))  # 3 or 4 -> glyph 15x9..28x20
+        cy = 14 + int(rng.integers(-2, 3))
+        cx = 14 + int(rng.integers(-2, 3))
+        value = float(rng.uniform(0.75, 1.0))
+        _place(canvas, _render_glyph(_GLYPHS[int(ys[i])]), cy, cx, scale, value)
+        canvas += rng.normal(0.0, 0.025, size=canvas.shape).astype(np.float32)
+        xs[i, :, :, 0] = np.clip(canvas, 0.0, 1.0)
+        xs[i] = _jitter(xs[i], rng)
+    return xs, ys
+
+
+def _make_fashion_like(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 28, 28, 1), dtype=np.float32)
+    ys = (np.arange(n) % 10).astype(np.int32)
+    rng.shuffle(ys)
+    for i in range(n):
+        canvas = np.zeros((28, 28), dtype=np.float32)
+        sil = _render_glyph(_FASHION[int(ys[i])])
+        value = float(rng.uniform(0.55, 0.95))
+        _place(canvas, sil, 14 + int(rng.integers(-1, 2)),
+               14 + int(rng.integers(-1, 2)), 3, value)
+        # fabric texture: low-amplitude sinusoid modulated by class parity
+        yy, xx = np.mgrid[0:28, 0:28].astype(np.float32)
+        tex = 0.08 * np.sin(yy / (1.5 + ys[i] % 3) + rng.uniform(0, 3.14)) \
+            * (canvas > 0)
+        canvas = canvas + tex + rng.normal(0.0, 0.03, canvas.shape).astype(np.float32)
+        xs[i, :, :, 0] = np.clip(canvas, 0.0, 1.0)
+        xs[i] = _jitter(xs[i], rng)
+    return xs, ys
+
+
+def _make_svhn_like(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, 32, 32, 3), dtype=np.float32)
+    ys = (np.arange(n) % 10).astype(np.int32)
+    rng.shuffle(ys)
+    yy, xx = np.mgrid[0:32, 0:32].astype(np.float32)
+    for i in range(n):
+        # textured house-facade background
+        bg = rng.uniform(0.2, 0.6, size=3).astype(np.float32)
+        img = np.ones((32, 32, 3), dtype=np.float32) * bg
+        img += 0.06 * np.sin(xx / rng.uniform(2, 6) + rng.uniform(0, 6.28))[..., None]
+        # central digit in a contrasting colour
+        digit = np.zeros((32, 32), dtype=np.float32)
+        scale = int(rng.integers(3, 5))
+        _place(digit, _render_glyph(_GLYPHS[int(ys[i])]),
+               16 + int(rng.integers(-3, 4)), 16 + int(rng.integers(-3, 4)),
+               scale, 1.0)
+        fg = rng.uniform(0.0, 1.0, size=3).astype(np.float32)
+        while np.abs(fg - bg).sum() < 0.9:  # ensure contrast
+            fg = rng.uniform(0.0, 1.0, size=3).astype(np.float32)
+        img = img * (1 - digit[..., None]) + fg * digit[..., None]
+        # distractor digit fragments at the borders (SVHN crops overlap)
+        for _ in range(int(rng.integers(0, 3))):
+            d2 = np.zeros((32, 32), dtype=np.float32)
+            _place(d2, _render_glyph(_GLYPHS[int(rng.integers(0, 10))]),
+                   int(rng.integers(0, 32)),
+                   int(rng.choice([2, 30])), 3, 1.0)
+            img = img * (1 - 0.7 * d2[..., None]) + fg * 0.7 * d2[..., None]
+        img += rng.normal(0.0, 0.025, img.shape).astype(np.float32)
+        xs[i] = np.clip(img, 0.0, 1.0)
+    return xs, ys
+
+
+_MAKERS = {
+    "mnist": _make_mnist_like,
+    "fashionmnist": _make_fashion_like,
+    "svhn": _make_svhn_like,
+}
+
+SHAPES = {
+    "mnist": (28, 28, 1),
+    "fashionmnist": (28, 28, 1),
+    "svhn": (32, 32, 3),
+}
+
+
+def load_dataset(name: str, n_train: int = 4000, n_test: int = 1000,
+                 seed: int = 7, data_dir: str | None = None):
+    """Return ``(x_train, y_train, x_test, y_test)`` float32 in [0,1] / int32.
+
+    Prefers real data from ``data/<name>.npz`` (keys x_train/y_train/
+    x_test/y_test) when present; otherwise generates the procedural
+    look-alike.  Train/test use disjoint seeds so memorisation of the
+    generator is impossible.
+    """
+    name = name.lower()
+    if name not in _MAKERS:
+        raise ValueError(f"unknown dataset {name!r}; options: {sorted(_MAKERS)}")
+    data_dir = data_dir or os.environ.get("NSLBP_DATA_DIR", "data")
+    npz = os.path.join(data_dir, f"{name}.npz")
+    if os.path.exists(npz):
+        z = np.load(npz)
+        return (z["x_train"][:n_train].astype(np.float32),
+                z["y_train"][:n_train].astype(np.int32),
+                z["x_test"][:n_test].astype(np.float32),
+                z["y_test"][:n_test].astype(np.int32))
+    mk = _MAKERS[name]
+    x_tr, y_tr = mk(n_train, seed)
+    x_te, y_te = mk(n_test, seed + 7919)
+    return x_tr, y_tr, x_te, y_te
+
+
+def quantize_u8(x: np.ndarray) -> np.ndarray:
+    """Sensor ADC model: [0,1] float -> 8-bit pixel."""
+    return np.clip(np.round(x * 255.0), 0, 255).astype(np.uint8)

@@ -1,0 +1,89 @@
+"""Pallas kernel: bit-serial AND/bitcount/shift matmul (paper §5.2, Fig. 7).
+
+The MLP layers of Ap-LBP are executed in-memory as DoReFa-style bit-plane
+dot products:  ``out = Σ_{m,n} 2^{m+n} · bitcount(AND(C_m(I), C_n(W)))``.
+In the NS-LBP cache this is a bulk bit-wise AND over the W/I regions plus
+the DPU's bit-counter and shifter; on a TPU the natural mapping is one
+*integer matmul per (m, n) bit-plane pair* — the popcount-of-AND over the
+reduction dimension D is exactly a {0,1}-matrix product, which the MXU
+executes as a dense dot.  The (M × N) plane loop is a static unroll.
+
+VMEM budgeting (DESIGN.md §Hardware-Adaptation): a ``(B_blk, D)`` activation
+tile, a ``(D, O_blk)`` weight tile, and the int32 accumulator tile live in
+VMEM across the plane loop; plane extraction is a cheap VPU shift+mask, so
+the kernel is MXU-bound like any quantized matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_BLOCK = 32
+O_BLOCK = 128
+
+
+def _bitserial_kernel(x_ref, w_ref, o_ref, *, act_bits: int, w_bits: int):
+    x = x_ref[...]                       # (Bb, D) int32, unsigned M-bit
+    w = w_ref[...]                       # (D, Ob) int32, unsigned N-bit
+    acc = jnp.zeros((x.shape[0], w.shape[1]), dtype=jnp.int32)
+    for m in range(act_bits):            # static unroll over bit planes
+        xm = (x >> m) & 1
+        for n in range(w_bits):
+            wn = (w >> n) & 1
+            # popcount(AND(C_m, C_n)) over D == {0,1} dot product
+            acc = acc + ((1 << (m + n)) *
+                         jax.lax.dot_general(
+                             xm, wn,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("act_bits", "w_bits"))
+def bitserial_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, act_bits: int = 4,
+                     w_bits: int = 4) -> jnp.ndarray:
+    """``(B, D) @ (D, O)`` over unsigned bit-planes → int32 ``(B, O)``.
+
+    Exact integer semantics: equals ``ref.int_matmul_ref`` for inputs in
+    range.  B is padded to B_BLOCK and O to O_BLOCK internally.
+    """
+    B, D = x_q.shape
+    D2, O = w_q.shape
+    assert D == D2, (D, D2)
+    pb = (-B) % B_BLOCK
+    po = (-O) % O_BLOCK
+    if pb or po:
+        out = bitserial_matmul(
+            jnp.pad(x_q, ((0, pb), (0, 0))),
+            jnp.pad(w_q, ((0, 0), (0, po))), act_bits, w_bits)
+        return out[:B, :O]
+    grid = (B // B_BLOCK, O // O_BLOCK)
+    return pl.pallas_call(
+        functools.partial(_bitserial_kernel, act_bits=act_bits, w_bits=w_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B_BLOCK, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((D, O_BLOCK), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((B_BLOCK, O_BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, O), jnp.int32),
+        interpret=True,
+    )(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+
+
+def signed_bitserial_matmul(x_q: jnp.ndarray, w_q_unsigned: jnp.ndarray,
+                            act_bits: int, w_bits: int) -> jnp.ndarray:
+    """Matmul against *signed* weights stored with a ``2^{N-1}`` offset.
+
+    The DPU stores weights as unsigned N-bit ``w_u = w + 2^{N-1}``; the true
+    product is recovered as ``x @ w = x @ w_u - 2^{N-1} · rowsum(x)`` — one
+    extra vector op, exactly how the Rust DPU model undoes the offset.
+    """
+    offset = 1 << (w_bits - 1)
+    raw = bitserial_matmul(x_q, w_q_unsigned, act_bits, w_bits)
+    rowsum = jnp.sum(x_q.astype(jnp.int32), axis=-1, keepdims=True)
+    return raw - offset * rowsum

@@ -1,0 +1,84 @@
+"""Pallas kernel: parallel bit-plane LBP encode (paper Alg. 1 + Fig. 6b).
+
+The NS-LBP sub-array compares all neighbor pixels against the pivot in
+parallel, one bit-plane per memory cycle, MSB→LSB, early-exiting per lane
+once a mismatching plane is found.  On the 256-column sub-array this is a
+row-parallel operation; here the same dataflow is expressed as a Pallas
+kernel over a ``(rows, e)`` tile held in VMEM:
+
+* the 8 bit-planes are unrolled statically (constant depth — the paper's
+  "constant search time determined by the bit length"),
+* the per-lane early exit becomes a ``decided`` mask (branch-free, exactly
+  the Ctrl behaviour of Fig. 6b steps 1–4),
+* PAC skip-comparison zeroes the ``apx`` least-significant code bits by
+  never issuing those compares (their weight is 0 in the packing step).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the block is tiled so a
+``(ROWS_PER_BLOCK, e)`` int32 tile plus its 8 plane temporaries stay well
+inside VMEM; on a real TPU the plane extraction is a VPU op and the packing
+a small reduction — no MXU needed, mirroring that the paper's LBP layer is
+comparator-only (MAC-free).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of (pixel, pivot) pairs processed per grid step.  256 mirrors the
+# sub-array's 256 bit-lines: one grid step == one mapped sub-array batch.
+ROWS_PER_BLOCK = 256
+
+
+def _lbp_encode_kernel(n_ref, c_ref, o_ref, *, e: int, apx: int, n_bits: int):
+    """One grid step: encode ROWS_PER_BLOCK pivots against their e neighbors."""
+    nb = n_ref[...]                      # (R, e) int32
+    pv = c_ref[...]                      # (R, 1) int32
+    # --- Algorithm 1: MSB-first parallel mismatch search ------------------
+    res = jnp.ones_like(nb)              # equality => comparator outputs 1
+    decided = jnp.zeros(nb.shape, dtype=jnp.bool_)
+    for i in range(n_bits - 1, -1, -1):  # static unroll: constant time
+        nbit = (nb >> i) & 1
+        cbit = (pv >> i) & 1
+        mism = (nbit != cbit) & (~decided)
+        res = jnp.where(mism, nbit, res)
+        decided = decided | mism
+    # --- pack bits into the LBP code, PAC-skipping the apx LSBs ----------
+    # (static unroll; no captured constant arrays — Pallas requirement)
+    code = jnp.zeros((nb.shape[0], 1), dtype=jnp.int32)
+    for n in range(apx, e):
+        code = code + (res[:, n:n + 1] << n)
+    o_ref[...] = code
+
+
+@functools.partial(jax.jit, static_argnames=("apx", "n_bits"))
+def lbp_encode(neighbors: jnp.ndarray, pivots: jnp.ndarray, apx: int = 0,
+               n_bits: int = 8) -> jnp.ndarray:
+    """LBP-encode ``(R, e)`` neighbors against ``(R,)`` pivots → ``(R,)`` codes.
+
+    R must be a multiple of ``ROWS_PER_BLOCK`` for the block grid; callers
+    (the L2 model) pad and slice.  Runs in interpret mode on CPU PJRT; the
+    grid/BlockSpec structure is the real-TPU schedule.
+    """
+    R, e = neighbors.shape
+    if R % ROWS_PER_BLOCK != 0:
+        pad = ROWS_PER_BLOCK - R % ROWS_PER_BLOCK
+        neighbors = jnp.pad(neighbors, ((0, pad), (0, 0)))
+        pivots = jnp.pad(pivots, ((0, pad),))
+        return lbp_encode(neighbors, pivots, apx, n_bits)[:R]
+    grid = (R // ROWS_PER_BLOCK,)
+    out = pl.pallas_call(
+        functools.partial(_lbp_encode_kernel, e=e, apx=apx, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_BLOCK, e), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_BLOCK, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_PER_BLOCK, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        interpret=True,
+    )(neighbors.astype(jnp.int32), pivots.reshape(-1, 1).astype(jnp.int32))
+    return out[:, 0]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact integer-semantics
+reference here; pytest (``python/tests``) sweeps shapes/dtypes with
+hypothesis and asserts bit-exact equality.  The Rust architectural
+simulator is additionally cross-checked against the same semantics through
+the AOT artifacts, so these functions are the single source of truth for
+"what the hardware computes".
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lbp_compare_ref(neighbors: jnp.ndarray, pivots: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise ``neighbors >= pivots`` as int32 bits.
+
+    ``neighbors``: (R, e) int32 pixel intensities (0..255).
+    ``pivots``:    (R,) or (R, 1) int32 pivot intensities.
+
+    This is the *functional* definition of the paper's comparator; the
+    in-memory Algorithm 1 (MSB-first bit-plane mismatch search) computes
+    exactly this predicate — see ``lbp_compare_bitplane_ref`` below for the
+    literal algorithmic form.
+    """
+    pv = pivots.reshape(-1, 1)
+    return (neighbors >= pv).astype(jnp.int32)
+
+
+def lbp_compare_bitplane_ref(neighbors: jnp.ndarray, pivots: jnp.ndarray,
+                             n_bits: int = 8) -> jnp.ndarray:
+    """Algorithm 1, literally: MSB-first parallel bit-plane mismatch search.
+
+    For each (pixel, neighbor) pair, scan bit planes from MSB to LSB; at
+    the first plane where the neighbor bit differs from the pivot bit the
+    result is the neighbor's bit (neighbor>pivot iff its bit is 1 there).
+    If no plane differs the values are equal and the comparator outputs 1
+    (``>=`` convention).  Must equal ``lbp_compare_ref``.
+    """
+    pv = pivots.reshape(-1, 1).astype(jnp.int32)
+    nb = neighbors.astype(jnp.int32)
+    res = jnp.ones_like(nb)            # equality -> 1
+    decided = jnp.zeros_like(nb, dtype=bool)
+    for i in range(n_bits - 1, -1, -1):
+        nbit = (nb >> i) & 1
+        cbit = (pv >> i) & 1
+        mism = (nbit != cbit) & (~decided)
+        res = jnp.where(mism, nbit, res)
+        decided = decided | mism
+    return res
+
+
+def lbp_encode_ref(neighbors: jnp.ndarray, pivots: jnp.ndarray,
+                   apx: int = 0) -> jnp.ndarray:
+    """Pack comparator bits into the LBP code with PAC skip-comparison.
+
+    Bits ``0..apx-1`` (the least-significant mapping-table entries) are
+    *skipped* — the hardware never issues those compares and the ofmap bits
+    are written as zero (paper §3, step 1 of Fig. 3b).
+
+    Returns (R,) int32 codes in ``[0, 2^e)``.
+    """
+    e = neighbors.shape[-1]
+    bits = lbp_compare_ref(neighbors, pivots)
+    weights = jnp.array([0 if n < apx else (1 << n) for n in range(e)],
+                        dtype=jnp.int32)
+    return jnp.sum(bits * weights[None, :], axis=-1)
+
+
+def bitserial_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                         act_bits: int, w_bits: int) -> jnp.ndarray:
+    """DoReFa-style bit-serial integer matmul (paper §5.2).
+
+    ``x_q``: (B, D) int32, unsigned ``act_bits``-bit activations.
+    ``w_q``: (D, O) int32, unsigned ``w_bits``-bit weights.
+
+    out[b, o] = sum_{m, n} 2^{m+n} * popcount(AND(C_m(x[b]), C_n(w[:, o])))
+    which equals the plain integer matmul — asserted by tests.
+    """
+    acc = jnp.zeros((x_q.shape[0], w_q.shape[1]), dtype=jnp.int32)
+    for m in range(act_bits):
+        xm = (x_q >> m) & 1
+        for n in range(w_bits):
+            wn = (w_q >> n) & 1
+            acc = acc + (1 << (m + n)) * jnp.dot(xm, wn)
+    return acc
+
+
+def int_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray) -> jnp.ndarray:
+    """Plain integer matmul — ground truth for ``bitserial_matmul_ref``."""
+    return jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32))

@@ -1,0 +1,356 @@
+"""Layer 2: the Ap-LBP network (paper §3) in JAX, calling the L1 kernels.
+
+Structure (Fig. 1b): N LBP layers (LBP encode → approximate mapping →
+shifted-ReLU → joint/concat) → average pooling → quantize → two bit-serial
+MLP blocks with a folded batch-norm → logits.
+
+Two execution paths share one parameter set:
+
+* ``forward_lbp`` / ``apply`` — the **inference path**: exact integer
+  semantics (u8 pixels, integer LBP codes, integer bit-serial matmuls).
+  This is what gets AOT-lowered to HLO for the Rust runtime and what the
+  Rust architectural simulator must reproduce bit-for-bit.
+* ``apply`` with ``use_pallas=True`` routes the hot-spots through the L1
+  Pallas kernels (identical integers, checked by tests); with
+  ``use_pallas=False`` it uses the pure-jnp oracle (faster on CPU; used
+  for accuracy sweeps).
+
+Approximation knobs (PAC, §3):
+
+* ``apx_code``  — skip the ``apx`` least-significant mapping-table bits
+  (skip-comparison + skip-memory-access).
+* ``apx_pixel`` — the sensor-side approximation: the ADC never converts the
+  ``apx_pixel`` least-significant pixel bits (§4.1), modeled by masking.
+
+Nothing upstream of the pooling layer is learnable (the LBP sampling
+patterns are fixed after initialisation — we approximate *pre-trained* LBP
+kernels, per the paper's §6.1), so training (train.py) precomputes LBP
+features with this exact integer path and trains only the quantized MLP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.lbp_encode import lbp_encode
+from .kernels.bitserial_mlp import signed_bitserial_matmul
+
+MAGIC = b"NSLBPPRM"
+FORMAT_VERSION = 3
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ApLbpConfig:
+    """Hyper-parameters of an Ap-LBP instance (paper §6.5 settings)."""
+    height: int = 28
+    width: int = 28
+    in_channels: int = 1
+    n_lbp_layers: int = 3          # MNIST: 3 LBP + 2 FC; SVHN: 8 LBP + 2 FC
+    kernels_per_layer: int = 8     # K: ofmap channels added per LBP layer
+    e: int = 8                     # sampling points per LBP kernel
+    window: int = 3                # f: LBP descriptor window (f x f)
+    apx_code: int = 0              # PAC: skipped mapping-table LSBs
+    apx_pixel: int = 0             # sensor ADC: skipped pixel LSBs
+    pool: int = 4                  # average-pooling window/stride
+    hidden: int = 512              # MLP hidden neurons (paper: 512)
+    n_classes: int = 10
+    act_bits: int = 4              # M: MLP activation bits
+    w_bits: int = 4                # N: MLP weight bits
+    seed: int = 42
+
+    @property
+    def channels_after(self) -> tuple[int, ...]:
+        """ifmap channel count entering each LBP layer (joint grows it)."""
+        chs = [self.in_channels]
+        for _ in range(self.n_lbp_layers):
+            chs.append(chs[-1] + self.kernels_per_layer)
+        return tuple(chs)
+
+    @property
+    def feature_dim(self) -> int:
+        ph = self.height // self.pool
+        pw = self.width // self.pool
+        return ph * pw * self.channels_after[-1]
+
+
+def config_for(dataset: str, apx: int = 0, seed: int = 42) -> ApLbpConfig:
+    """Paper §6.5: 5 blocks (3 LBP + 2 FC) for the MNIST pair, 10 blocks
+    (8 LBP + 2 FC) for SVHN, 512 hidden neurons."""
+    ds = dataset.lower()
+    if ds in ("mnist", "fashionmnist"):
+        return ApLbpConfig(height=28, width=28, in_channels=1,
+                           n_lbp_layers=3, apx_code=apx, apx_pixel=apx,
+                           seed=seed)
+    if ds == "svhn":
+        return ApLbpConfig(height=32, width=32, in_channels=3,
+                           n_lbp_layers=8, apx_code=apx, apx_pixel=apx,
+                           seed=seed)
+    raise ValueError(f"unknown dataset {dataset!r}")
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LbpLayerParams:
+    """One LBP layer's fixed pattern: for each of K kernels, ``e`` sampling
+    points (dy, dx, ch) inside the f x f window and a pivot channel."""
+    offsets: np.ndarray    # (K, e, 3) int32: dy, dx in [-p, p], ch
+    pivot_ch: np.ndarray   # (K,) int32
+
+
+@dataclasses.dataclass
+class MlpLayerParams:
+    """Quantized FC layer + folded affine (batch-norm / bias)."""
+    w_int: np.ndarray      # (D, O) int8 in [-2^{N-1}, 2^{N-1})
+    scale: np.ndarray      # (O,) f32 — folded BN scale (incl. weight scale)
+    bias: np.ndarray       # (O,) f32 — folded BN shift
+
+
+@dataclasses.dataclass
+class ApLbpParams:
+    config: ApLbpConfig
+    lbp_layers: list[LbpLayerParams]
+    mlp1: MlpLayerParams
+    mlp2: MlpLayerParams
+
+
+def init_lbp_patterns(cfg: ApLbpConfig) -> list[LbpLayerParams]:
+    """Fixed random sparse sampling patterns (LBPNet-style).
+
+    Deterministic in ``cfg.seed``; the params file stores them explicitly
+    so the Rust side never has to replicate numpy's bit generator.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    p = (cfg.window - 1) // 2
+    layers = []
+    for in_ch in cfg.channels_after[:-1]:
+        offs = np.zeros((cfg.kernels_per_layer, cfg.e, 3), dtype=np.int32)
+        for k in range(cfg.kernels_per_layer):
+            for n in range(cfg.e):
+                while True:
+                    dy = int(rng.integers(-p, p + 1))
+                    dx = int(rng.integers(-p, p + 1))
+                    if (dy, dx) != (0, 0):
+                        break
+                offs[k, n] = (dy, dx, int(rng.integers(0, in_ch)))
+        piv = rng.integers(0, in_ch, size=cfg.kernels_per_layer).astype(np.int32)
+        layers.append(LbpLayerParams(offsets=offs, pivot_ch=piv))
+    return layers
+
+
+def init_params(cfg: ApLbpConfig, rng: np.random.Generator | None = None) -> ApLbpParams:
+    """Random (untrained) parameters — used by `make artifacts` and tests;
+    train.py replaces the MLP weights/affines with trained values."""
+    rng = rng or np.random.default_rng(cfg.seed + 1)
+    half = 1 << (cfg.w_bits - 1)
+    d = cfg.feature_dim
+
+    def rand_mlp(din, dout):
+        w = rng.integers(-half, half, size=(din, dout)).astype(np.int8)
+        scale = np.full((dout,), 1.0 / (half * 15.0 * max(din, 1)),
+                        dtype=np.float32)
+        bias = np.zeros((dout,), dtype=np.float32)
+        return MlpLayerParams(w_int=w, scale=scale, bias=bias)
+
+    return ApLbpParams(
+        config=cfg,
+        lbp_layers=init_lbp_patterns(cfg),
+        mlp1=rand_mlp(d, cfg.hidden),
+        mlp2=rand_mlp(cfg.hidden, cfg.n_classes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Inference path (exact integer semantics)
+# ---------------------------------------------------------------------------
+def sensor_quantize(images: jnp.ndarray, apx_pixel: int) -> jnp.ndarray:
+    """float [0,1] → u8 pixels with the ADC skipping ``apx_pixel`` LSBs.
+
+    Mirrors rust/src/sensor: the dual-mode ADC simply never resolves the
+    low bits, so they read as zero.
+    """
+    u8 = jnp.clip(jnp.floor(images * 255.0 + 0.5), 0, 255).astype(jnp.int32)
+    mask = 0xFF ^ ((1 << apx_pixel) - 1)
+    return u8 & mask
+
+
+def _gather_neighbors(x_u8: jnp.ndarray, layer: LbpLayerParams, window: int):
+    """Collect (B,H,W,K,e) neighbor intensities + (B,H,W,K) pivots.
+
+    Zero padding keeps ofmap size == ifmap size (paper Fig. 3a); each
+    sampling point is a static slice of the padded tensor, which XLA fuses
+    into cheap gathers.
+    """
+    p = (window - 1) // 2
+    B, H, W, _ = x_u8.shape
+    xpad = jnp.pad(x_u8, ((0, 0), (p, p), (p, p), (0, 0)))
+    K, e, _ = layer.offsets.shape
+    neigh = []
+    for k in range(K):
+        per_k = []
+        for n in range(e):
+            dy, dx, ch = (int(v) for v in layer.offsets[k, n])
+            per_k.append(xpad[:, p + dy:p + dy + H, p + dx:p + dx + W, ch])
+        neigh.append(jnp.stack(per_k, axis=-1))        # (B,H,W,e)
+    neighbors = jnp.stack(neigh, axis=3)               # (B,H,W,K,e)
+    pivots = jnp.stack([x_u8[..., int(c)] for c in layer.pivot_ch], axis=-1)
+    return neighbors, pivots                           # ..., (B,H,W,K)
+
+
+def shifted_relu_u8(code: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Approximate mapping + shifted ReLU, integer domain (paper §3).
+
+    code ∈ [0, 2^e); ofmap = min(255, 2·max(0, code − 2^{e−1})) — a
+    comparator + shifter op (MAC-free), keeping the ofmap an 8-bit pixel so
+    the next LBP layer can consume it.
+    """
+    half = 1 << (e - 1)
+    return jnp.minimum(2 * jnp.maximum(code - half, 0), 255)
+
+
+def lbp_layer_forward(x_u8: jnp.ndarray, layer: LbpLayerParams,
+                      cfg: ApLbpConfig, use_pallas: bool) -> jnp.ndarray:
+    """One LBP layer: encode K kernels, shifted-ReLU, joint-concat."""
+    B, H, W, _ = x_u8.shape
+    K = layer.offsets.shape[0]
+    neighbors, pivots = _gather_neighbors(x_u8, layer, cfg.window)
+    flat_n = neighbors.reshape(-1, cfg.e)
+    flat_c = pivots.reshape(-1)
+    if use_pallas:
+        codes = lbp_encode(flat_n, flat_c, apx=cfg.apx_code)
+    else:
+        codes = ref.lbp_encode_ref(flat_n, flat_c, apx=cfg.apx_code)
+    codes = codes.reshape(B, H, W, K)
+    ofmap = shifted_relu_u8(codes, cfg.e)
+    return jnp.concatenate([x_u8, ofmap], axis=-1)     # joint block
+
+
+def forward_lbp(params: ApLbpParams, images: jnp.ndarray,
+                use_pallas: bool = False) -> jnp.ndarray:
+    """images float [0,1] (B,H,W,C) → pooled quantized features (B, D) int32.
+
+    Everything here is exact integer math; the Rust simulator reproduces it
+    bit-for-bit (rust/tests/golden_model.rs).
+    """
+    cfg = params.config
+    x = sensor_quantize(images, cfg.apx_pixel)
+    for layer in params.lbp_layers:
+        x = lbp_layer_forward(x, layer, cfg, use_pallas)
+    # average pooling as integer sum + exact requantize to act_bits
+    B, H, W, C = x.shape
+    s = cfg.pool
+    pooled = x.reshape(B, H // s, s, W // s, s, C).sum(axis=(2, 4))
+    vmax = 255 * s * s
+    qmax = (1 << cfg.act_bits) - 1
+    # round-half-up in pure integer math (identical in Rust):
+    q = (pooled * (2 * qmax) + vmax) // (2 * vmax)
+    return q.reshape(B, -1).astype(jnp.int32)
+
+
+def mlp_forward(params: ApLbpParams, feats_q: jnp.ndarray,
+                use_pallas: bool = False) -> jnp.ndarray:
+    """Quantized features → logits via two bit-serial FC layers."""
+    cfg = params.config
+    half = 1 << (cfg.w_bits - 1)
+    qmax = (1 << cfg.act_bits) - 1
+
+    def fc(x_q, mlp: MlpLayerParams):
+        if use_pallas:
+            w_u = jnp.asarray(mlp.w_int, dtype=jnp.int32) + half
+            h = signed_bitserial_matmul(x_q, w_u, cfg.act_bits, cfg.w_bits)
+        else:
+            h = ref.int_matmul_ref(x_q, jnp.asarray(mlp.w_int, jnp.int32))
+        return h.astype(jnp.float32) * mlp.scale[None, :] + mlp.bias[None, :]
+
+    h = fc(feats_q, params.mlp1)
+    # DPU activation: ReLU + requantize to act_bits (floor(x*qmax+0.5))
+    h = jnp.clip(h, 0.0, 1.0)
+    h_q = jnp.floor(h * qmax + 0.5).astype(jnp.int32)
+    return fc(h_q, params.mlp2)
+
+
+def apply(params: ApLbpParams, images: jnp.ndarray,
+          use_pallas: bool = False) -> jnp.ndarray:
+    """Full inference: images → logits (B, n_classes)."""
+    feats = forward_lbp(params, images, use_pallas)
+    return mlp_forward(params, feats, use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Parameter serialization (consumed by rust/src/params)
+# ---------------------------------------------------------------------------
+def save_params(params: ApLbpParams, path: str) -> None:
+    """Write the little-endian binary format read by ``rust/src/params``.
+
+    Layout (all ints LE):
+      magic[8] | u32 version
+      u32 x 14: H W C n_lbp K e window apx_code apx_pixel pool act_bits
+                w_bits hidden n_classes
+      per LBP layer: i32 offsets[K*e*3], i32 pivot_ch[K]
+      per MLP layer (2): u32 D, u32 O, i8 w_int[D*O], f32 scale[O], f32 bias[O]
+    """
+    cfg = params.config
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", FORMAT_VERSION))
+        f.write(struct.pack("<14I", cfg.height, cfg.width, cfg.in_channels,
+                            cfg.n_lbp_layers, cfg.kernels_per_layer, cfg.e,
+                            cfg.window, cfg.apx_code, cfg.apx_pixel, cfg.pool,
+                            cfg.act_bits, cfg.w_bits, cfg.hidden,
+                            cfg.n_classes))
+        for layer in params.lbp_layers:
+            f.write(np.ascontiguousarray(layer.offsets, dtype="<i4").tobytes())
+            f.write(np.ascontiguousarray(layer.pivot_ch, dtype="<i4").tobytes())
+        for mlp in (params.mlp1, params.mlp2):
+            d, o = mlp.w_int.shape
+            f.write(struct.pack("<2I", d, o))
+            f.write(np.ascontiguousarray(mlp.w_int, dtype="i1").tobytes())
+            f.write(np.ascontiguousarray(mlp.scale, dtype="<f4").tobytes())
+            f.write(np.ascontiguousarray(mlp.bias, dtype="<f4").tobytes())
+
+
+def load_params(path: str) -> ApLbpParams:
+    """Inverse of ``save_params`` (round-trip tested)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    off = 0
+
+    def take(n):
+        nonlocal off
+        chunk = data[off:off + n]
+        off += n
+        return chunk
+
+    assert take(8) == MAGIC, "bad magic"
+    (ver,) = struct.unpack("<I", take(4))
+    assert ver == FORMAT_VERSION, f"params version {ver} != {FORMAT_VERSION}"
+    vals = struct.unpack("<14I", take(14 * 4))
+    (h, w, c, n_lbp, k, e, win, apx_c, apx_p, pool, ab, wb, hid, ncls) = vals
+    cfg = ApLbpConfig(height=h, width=w, in_channels=c, n_lbp_layers=n_lbp,
+                      kernels_per_layer=k, e=e, window=win, apx_code=apx_c,
+                      apx_pixel=apx_p, pool=pool, hidden=hid, n_classes=ncls,
+                      act_bits=ab, w_bits=wb)
+    layers = []
+    for _ in range(n_lbp):
+        offs = np.frombuffer(take(k * e * 3 * 4), dtype="<i4").reshape(k, e, 3)
+        piv = np.frombuffer(take(k * 4), dtype="<i4")
+        layers.append(LbpLayerParams(offsets=offs.copy(), pivot_ch=piv.copy()))
+    mlps = []
+    for _ in range(2):
+        d, o = struct.unpack("<2I", take(8))
+        w_int = np.frombuffer(take(d * o), dtype="i1").reshape(d, o)
+        scale = np.frombuffer(take(o * 4), dtype="<f4")
+        bias = np.frombuffer(take(o * 4), dtype="<f4")
+        mlps.append(MlpLayerParams(w_int=w_int.copy(), scale=scale.copy(),
+                                   bias=bias.copy()))
+    assert off == len(data), "trailing bytes in params file"
+    return ApLbpParams(config=cfg, lbp_layers=layers, mlp1=mlps[0], mlp2=mlps[1])

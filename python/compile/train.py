@@ -1,0 +1,317 @@
+"""Training driver for Ap-LBP and the Table-4 baselines (build-time only).
+
+Ap-LBP training (paper §3, §6.5): the LBP sampling patterns are fixed
+("our design approximates pre-trained LBP kernel parameters"), so nothing
+upstream of the pooled features is learnable.  We therefore precompute the
+pooled quantized features with the *exact integer inference path* of
+model.py (no train/test skew) and train only the quantized 2-layer MLP with
+straight-through-estimator 4-bit weights and a batch-norm that is folded
+into the per-output (scale, bias) affine of ``MlpLayerParams`` afterwards.
+
+The backward pass through the comparator would use the shifted-tanh
+surrogate of the paper's footnote 1; it is exercised in tests
+(test_model.py::test_surrogate_gradient) but unused here because patterns
+stay frozen.
+
+Usage:
+  python -m compile.train --dataset mnist --model aplbp --apx 2
+  python -m compile.train --all            # Table 4 + Fig 4 sweep
+Outputs land in artifacts/: trained params (*.params.bin) and
+accuracy/energy statistics tables (*.tsv) consumed by the Rust benches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import baselines as bl
+from . import data as data_mod
+from . import model as m
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+# ---------------------------------------------------------------------------
+# minimal Adam (optax is unavailable offline)
+# ---------------------------------------------------------------------------
+def adam_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(grads, state, params, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    mm = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    vv = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m_: m_ / (1 - b1 ** t), mm)
+    vhat = jax.tree.map(lambda v_: v_ / (1 - b2 ** t), vv)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                       params, mhat, vhat)
+    return new, {"m": mm, "v": vv, "t": t}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+# ---------------------------------------------------------------------------
+# Ap-LBP: quantized-MLP training over precomputed integer features
+# ---------------------------------------------------------------------------
+def _ste_quant_w(w, bits):
+    """STE quantization to a signed ``bits``-bit integer grid.
+
+    Forward: round(clip(w)·2^{bits-1}) — an integer-valued float matching
+    ``MlpLayerParams.w_int``.  Backward: straight-through, d(wq)/dw = 2^{bits-1}.
+    """
+    half = 1 << (bits - 1)
+    hard = jnp.round(jnp.clip(w, -1.0, 1.0 - 1.0 / half) * half)
+    soft = w * half
+    return hard + soft - jax.lax.stop_gradient(soft)
+
+
+def precompute_features(params: m.ApLbpParams, x: np.ndarray,
+                        batch: int = 256) -> np.ndarray:
+    fwd = jax.jit(lambda im: m.forward_lbp(params, im, use_pallas=False))
+    outs = []
+    for i in range(0, len(x), batch):
+        outs.append(np.asarray(fwd(jnp.asarray(x[i:i + batch]))))
+    return np.concatenate(outs, axis=0)
+
+
+def train_aplbp_mlp(cfg: m.ApLbpConfig, feats: np.ndarray, labels: np.ndarray,
+                    steps: int = 1200, lr: float = 2e-3, batch: int = 128,
+                    seed: int = 0, log=print):
+    """Train the quantized MLP; return (mlp1, mlp2) with folded batch-norm."""
+    rng = np.random.default_rng(seed)
+    d = feats.shape[1]
+    half = 1 << (cfg.w_bits - 1)
+    qmax = (1 << cfg.act_bits) - 1
+    xs = feats.astype(np.float32)  # integer values 0..qmax
+
+    params = {
+        "w1": (rng.standard_normal((d, cfg.hidden)) * 0.3).astype(np.float32),
+        "g1": np.ones((cfg.hidden,), np.float32),
+        "b1": np.zeros((cfg.hidden,), np.float32),
+        "w2": (rng.standard_normal((cfg.hidden, cfg.n_classes)) * 0.3).astype(np.float32),
+        "s2": np.full((cfg.n_classes,), 1.0 / (half * qmax), np.float32),
+        "b2": np.zeros((cfg.n_classes,), np.float32),
+    }
+    params = jax.tree.map(jnp.asarray, params)
+    running = {"mean": jnp.zeros((cfg.hidden,)), "var": jnp.ones((cfg.hidden,))}
+
+    def forward(p, x_q, stats=None):
+        w1q = _ste_quant_w(p["w1"], cfg.w_bits)          # ints in [-half, half)
+        h = x_q @ w1q                                     # integer-valued float
+        mean = jnp.mean(h, axis=0) if stats is None else stats["mean"]
+        var = jnp.var(h, axis=0) if stats is None else stats["var"]
+        hn = (h - mean) * jax.lax.rsqrt(var + 1e-5) * p["g1"] + p["b1"]
+        # DPU activation: clip [0,1], requantize to act_bits with STE
+        hc = jnp.clip(hn * 0.25 + 0.5, 0.0, 1.0)
+        hq = jnp.floor(hc * qmax + 0.5)
+        hq = hq + (hc * qmax - jax.lax.stop_gradient(hc * qmax))
+        w2q = _ste_quant_w(p["w2"], cfg.w_bits)
+        logits = (hq @ w2q) * p["s2"] + p["b2"]
+        return logits, (mean, var)
+
+    @jax.jit
+    def step(p, opt, run, xb, yb):
+        def loss_fn(p_):
+            logits, (mean, var) = forward(p_, xb)
+            return cross_entropy(logits, yb), (mean, var)
+        (loss, (mean, var)), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        p2, opt2 = adam_update(grads, opt, p, lr=lr)
+        run2 = {"mean": 0.95 * run["mean"] + 0.05 * mean,
+                "var": 0.95 * run["var"] + 0.05 * var}
+        return p2, opt2, run2, loss
+
+    opt = adam_init(params)
+    n = len(xs)
+    t0 = time.time()
+    for it in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, opt, running, loss = step(params, opt, running,
+                                          jnp.asarray(xs[idx]),
+                                          jnp.asarray(labels[idx]))
+        if it % 200 == 0 or it == steps - 1:
+            log(f"  step {it:5d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+
+    # ---- fold batch-norm + fixed affine into MlpLayerParams ---------------
+    w1_int = np.asarray(jnp.round(jnp.clip(params["w1"], -1, 1 - 1 / half)
+                                  * half), dtype=np.int8)
+    w2_int = np.asarray(jnp.round(jnp.clip(params["w2"], -1, 1 - 1 / half)
+                                  * half), dtype=np.int8)
+    rs = np.asarray(jax.lax.rsqrt(running["var"] + 1e-5))
+    g1 = np.asarray(params["g1"])
+    b1 = np.asarray(params["b1"])
+    mean = np.asarray(running["mean"])
+    # hn = (h - mean)*rs*g1 + b1 ; hc = 0.25*hn + 0.5
+    scale1 = (0.25 * rs * g1).astype(np.float32)
+    bias1 = (0.25 * (b1 - mean * rs * g1) + 0.5).astype(np.float32)
+    mlp1 = m.MlpLayerParams(w_int=w1_int, scale=scale1, bias=bias1)
+    mlp2 = m.MlpLayerParams(w_int=w2_int,
+                            scale=np.asarray(params["s2"], np.float32),
+                            bias=np.asarray(params["b2"], np.float32))
+    return mlp1, mlp2
+
+
+def eval_aplbp(params: m.ApLbpParams, x: np.ndarray, y: np.ndarray,
+               batch: int = 256) -> float:
+    apply = jax.jit(lambda im: m.apply(params, im, use_pallas=False))
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = np.asarray(apply(jnp.asarray(x[i:i + batch])))
+        correct += int((logits.argmax(-1) == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+def train_aplbp(dataset: str, apx: int, steps: int, n_train: int, n_test: int,
+                seed: int = 0, log=print) -> tuple[m.ApLbpParams, float]:
+    cfg = m.config_for(dataset, apx=apx)
+    params = m.init_params(cfg)
+    x_tr, y_tr, x_te, y_te = data_mod.load_dataset(dataset, n_train, n_test)
+    log(f"[aplbp/{dataset} apx={apx}] precomputing integer LBP features ...")
+    f_tr = precompute_features(params, x_tr)
+    mlp1, mlp2 = train_aplbp_mlp(cfg, f_tr, y_tr, steps=steps, seed=seed,
+                                 log=log)
+    params.mlp1, params.mlp2 = mlp1, mlp2
+    acc = eval_aplbp(params, x_te, y_te)
+    log(f"[aplbp/{dataset} apx={apx}] test accuracy {acc * 100:.2f}%")
+    return params, acc
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+def train_baseline(name: str, dataset: str, steps: int, n_train: int,
+                   n_test: int, seed: int = 0, lr: float = 1e-3,
+                   batch: int = 128, log=print) -> float:
+    init, apply_fn = bl.REGISTRY[name]
+    x_tr, y_tr, x_te, y_te = data_mod.load_dataset(dataset, n_train, n_test)
+    shape = x_tr.shape[1:]
+    rng = np.random.default_rng(seed)
+    params = jax.tree.map(jnp.asarray, init(rng, shape))
+
+    @jax.jit
+    def step(p, opt, xb, yb):
+        loss, grads = jax.value_and_grad(
+            lambda p_: cross_entropy(apply_fn(p_, xb), yb))(p)
+        p2, opt2 = adam_update(grads, opt, p, lr=lr)
+        return p2, opt2, loss
+
+    opt = adam_init(params)
+    t0 = time.time()
+    for it in range(steps):
+        idx = rng.integers(0, len(x_tr), size=batch)
+        params, opt, loss = step(params, opt, jnp.asarray(x_tr[idx]),
+                                 jnp.asarray(y_tr[idx]))
+        if it % 200 == 0 or it == steps - 1:
+            log(f"  [{name}/{dataset}] step {it:5d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+
+    apply_j = jax.jit(lambda xb: apply_fn(params, xb))
+    correct = 0
+    for i in range(0, len(x_te), 256):
+        logits = np.asarray(apply_j(jnp.asarray(x_te[i:i + 256])))
+        correct += int((logits.argmax(-1) == y_te[i:i + 256]).sum())
+    acc = correct / len(x_te)
+    log(f"[{name}/{dataset}] test accuracy {acc * 100:.2f}%")
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# sweeps: Table 4 + Fig 4
+# ---------------------------------------------------------------------------
+def run_table4(datasets, steps, n_train, n_test, out_path, log=print):
+    """Regenerate Table 4: rows = models, cols = datasets, values = acc %."""
+    models = ["cnn", "bnn", "binaryconnect", "lbcnn", "lbpnet",
+              "aplbp1", "aplbp2"]
+    rows = {mname: {} for mname in models}
+    for ds in datasets:
+        for name in models:
+            if name in bl.REGISTRY:
+                acc = train_baseline(name, ds, steps, n_train, n_test, log=log)
+            else:
+                apx = {"lbpnet": 0, "aplbp1": 1, "aplbp2": 2}[name]
+                _, acc = train_aplbp(ds, apx, max(steps, 2000), n_train,
+                                     n_test, log=log)
+            rows[name][ds] = acc
+    with open(out_path, "w") as f:
+        f.write("model\t" + "\t".join(datasets) + "\n")
+        for name in models:
+            f.write(name + "\t" +
+                    "\t".join(f"{rows[name][ds] * 100:.2f}"
+                              for ds in datasets) + "\n")
+    log(f"wrote {out_path}")
+    return rows
+
+
+def run_fig4(steps, n_train, n_test, out_path, log=print):
+    """Fig. 4 sweep: accuracy vs number of approximated bits on MNIST.
+
+    Energy per apx setting is computed by the Rust energy model
+    (benches/fig4_apx_sweep.rs) from the op-count formulas; this writes the
+    accuracy column it joins against.
+    """
+    with open(out_path, "w") as f:
+        f.write("apx\taccuracy\n")
+        for apx in range(0, 5):
+            _, acc = train_aplbp("mnist", apx, max(steps, 2000), n_train,
+                                 n_test, log=log)
+            f.write(f"{apx}\t{acc * 100:.2f}\n")
+    log(f"wrote {out_path}")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="mnist",
+                    choices=["mnist", "fashionmnist", "svhn"])
+    ap.add_argument("--model", default="aplbp",
+                    choices=["aplbp", "lbpnet"] + sorted(bl.REGISTRY))
+    ap.add_argument("--apx", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=1200)
+    ap.add_argument("--n-train", type=int, default=4000)
+    ap.add_argument("--n-test", type=int, default=1000)
+    ap.add_argument("--all", action="store_true",
+                    help="regenerate Table 4 + Fig 4 accuracy tables")
+    ap.add_argument("--table4", action="store_true")
+    ap.add_argument("--fig4", action="store_true")
+    ap.add_argument("--out-dir", default=ARTIFACTS)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    if args.all or args.table4:
+        run_table4(["mnist", "fashionmnist", "svhn"], args.steps,
+                   args.n_train, args.n_test,
+                   os.path.join(args.out_dir, "table4_accuracy.tsv"))
+    if args.all or args.fig4:
+        run_fig4(args.steps, args.n_train, args.n_test,
+                 os.path.join(args.out_dir, "fig4_accuracy.tsv"))
+    if args.all or args.table4 or args.fig4:
+        return
+
+    if args.model in ("aplbp", "lbpnet"):
+        apx = 0 if args.model == "lbpnet" else args.apx
+        params, acc = train_aplbp(args.dataset, apx, args.steps,
+                                  args.n_train, args.n_test)
+        out = os.path.join(args.out_dir,
+                           f"{args.dataset}_apx{apx}.params.bin")
+        m.save_params(params, out)
+        print(f"saved {out} (accuracy {acc * 100:.2f}%)")
+    else:
+        train_baseline(args.model, args.dataset, args.steps, args.n_train,
+                       args.n_test)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""AOT pipeline tests: HLO text emission, constant-elision guard,
+manifest consistency, and the params binary the artifacts ship with."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as m
+
+
+def test_to_hlo_text_emits_parseable_module():
+    f = jax.jit(lambda x: (x * 2.0 + 1.0,))
+    lowered = f.lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[4]" in text
+
+
+def test_to_hlo_text_rejects_elided_constants():
+    """Large baked-in constants round-trip as garbage — must be refused."""
+    big = jnp.arange(100_000, dtype=jnp.float32).reshape(1000, 100)
+
+    def fn(x):
+        return (x @ big,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((2, 1000), jnp.float32))
+    with pytest.raises(RuntimeError, match="elided"):
+        aot.to_hlo_text(lowered)
+
+
+def test_export_units_roundtrip(tmp_path):
+    manifest = []
+    aot.export_units(str(tmp_path), manifest)
+    assert (tmp_path / "lbp_encode_unit.hlo.txt").exists()
+    assert (tmp_path / "bitserial_unit.hlo.txt").exists()
+    assert len(manifest) == 2
+    text = (tmp_path / "lbp_encode_unit.hlo.txt").read_text()
+    assert "constant({...})" not in text
+
+
+def test_cli_writes_manifest(tmp_path):
+    """Full aot CLI run on the small mnist config only (fast)."""
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--datasets", "mnist", "--batch", "2"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    assert out.returncode == 0, out.stderr
+    lines = (tmp_path / "manifest.tsv").read_text().strip().splitlines()
+    assert lines[0] == "name\tfile\tinputs\toutput"
+    names = [l.split("\t")[0] for l in lines[1:]]
+    assert "aplbp_mnist" in names and "lbp_encode_unit" in names
+    # params round-trip through model.load_params
+    p = m.load_params(str(tmp_path / "mnist.params.bin"))
+    assert p.config.height == 28
+
+
+def test_exported_params_match_shipped_artifacts():
+    """The artifacts/ params must parse and have the documented shapes."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "mnist.params.bin")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    p = m.load_params(path)
+    assert p.config.n_lbp_layers == 3
+    assert p.mlp1.w_int.shape == (p.config.feature_dim, p.config.hidden)
+    assert p.mlp2.w_int.shape == (p.config.hidden, p.config.n_classes)
+    half = 1 << (p.config.w_bits - 1)
+    assert p.mlp1.w_int.min() >= -half and p.mlp1.w_int.max() < half
+
+
+def test_trained_params_compatible_with_artifact_shapes():
+    """Trained params (make train) must slot into the same HLO artifact."""
+    base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    trained = os.path.join(base, "mnist_apx2.params.bin")
+    shipped = os.path.join(base, "mnist.params.bin")
+    if not (os.path.exists(trained) and os.path.exists(shipped)):
+        pytest.skip("need `make artifacts` + a trained params file")
+    a = m.load_params(trained)
+    b = m.load_params(shipped)
+    assert a.mlp1.w_int.shape == b.mlp1.w_int.shape
+    assert a.mlp2.w_int.shape == b.mlp2.w_int.shape
+    assert a.config.apx_code == b.config.apx_code
+
+
+def test_training_smoke_improves_over_chance():
+    """Three hundred steps on 400 images must beat 10% chance clearly."""
+    from compile import train
+    params, acc = train.train_aplbp("mnist", 2, steps=300, n_train=400,
+                                    n_test=200, log=lambda *_: None)
+    assert acc > 0.4, f"smoke training accuracy {acc}"
+    # folded affines are finite and weights in range
+    assert np.isfinite(params.mlp1.scale).all()
+    assert np.isfinite(params.mlp1.bias).all()

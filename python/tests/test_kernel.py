@@ -1,0 +1,135 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer — hypothesis
+sweeps shapes/values and asserts bit-exact equality (integer kernels, so
+no tolerance).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lbp_encode import lbp_encode, ROWS_PER_BLOCK
+from compile.kernels.bitserial_mlp import (bitserial_matmul,
+                                           signed_bitserial_matmul)
+
+# hypothesis deadline off: interpret-mode pallas is slow but deterministic
+COMMON = dict(deadline=None, max_examples=25)
+
+
+# ---------------------------------------------------------------------------
+# LBP encode
+# ---------------------------------------------------------------------------
+@settings(**COMMON)
+@given(
+    rows=st.integers(1, 700),
+    e=st.integers(1, 12),
+    apx=st.integers(0, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lbp_encode_matches_ref(rows, e, apx, seed):
+    rng = np.random.default_rng(seed)
+    nb = rng.integers(0, 256, (rows, e)).astype(np.int32)
+    pv = rng.integers(0, 256, (rows,)).astype(np.int32)
+    got = np.asarray(lbp_encode(jnp.asarray(nb), jnp.asarray(pv), apx=apx))
+    want = np.asarray(ref.lbp_encode_ref(jnp.asarray(nb), jnp.asarray(pv),
+                                         apx=apx))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**COMMON)
+@given(rows=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_bitplane_algorithm_equals_functional_compare(rows, seed):
+    """Algorithm 1 (MSB-first mismatch search) == plain >= comparison."""
+    rng = np.random.default_rng(seed)
+    nb = rng.integers(0, 256, (rows, 8)).astype(np.int32)
+    pv = rng.integers(0, 256, (rows,)).astype(np.int32)
+    bp = np.asarray(ref.lbp_compare_bitplane_ref(jnp.asarray(nb),
+                                                 jnp.asarray(pv)))
+    fn = np.asarray(ref.lbp_compare_ref(jnp.asarray(nb), jnp.asarray(pv)))
+    np.testing.assert_array_equal(bp, fn)
+
+
+def test_lbp_encode_equality_is_ge():
+    """Pivot == neighbor must give bit 1 (cmp(i_n, i_c)=1 when i_n >= i_c)."""
+    nb = jnp.full((4, 8), 77, dtype=jnp.int32)
+    pv = jnp.full((4,), 77, dtype=jnp.int32)
+    got = np.asarray(lbp_encode(nb, pv))
+    assert (got == 255).all()
+
+
+def test_lbp_encode_apx_zeroes_lsbs():
+    """PAC skip-comparison: apx LSBs of the code must be zero."""
+    rng = np.random.default_rng(3)
+    nb = jnp.asarray(rng.integers(0, 256, (ROWS_PER_BLOCK, 8)), dtype=jnp.int32)
+    pv = jnp.asarray(rng.integers(0, 256, (ROWS_PER_BLOCK,)), dtype=jnp.int32)
+    for apx in range(5):
+        codes = np.asarray(lbp_encode(nb, pv, apx=apx))
+        assert (codes & ((1 << apx) - 1) == 0).all()
+        # and the surviving bits agree with the un-approximated code
+        full = np.asarray(lbp_encode(nb, pv, apx=0))
+        np.testing.assert_array_equal(codes, full & ~((1 << apx) - 1))
+
+
+def test_lbp_encode_extremes():
+    nb = jnp.asarray([[0] * 8, [255] * 8], dtype=jnp.int32)
+    pv = jnp.asarray([255, 0], dtype=jnp.int32)
+    got = np.asarray(lbp_encode(nb, pv))
+    assert got[0] == 0      # all neighbors below pivot
+    assert got[1] == 255    # all neighbors above pivot
+
+
+# ---------------------------------------------------------------------------
+# bit-serial matmul
+# ---------------------------------------------------------------------------
+@settings(**COMMON)
+@given(
+    b=st.integers(1, 70),
+    d=st.integers(1, 96),
+    o=st.integers(1, 160),
+    act_bits=st.integers(1, 6),
+    w_bits=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitserial_matmul_matches_int_matmul(b, d, o, act_bits, w_bits, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 1 << act_bits, (b, d)).astype(np.int32)
+    w = rng.integers(0, 1 << w_bits, (d, o)).astype(np.int32)
+    got = np.asarray(bitserial_matmul(jnp.asarray(x), jnp.asarray(w),
+                                      act_bits, w_bits))
+    want = np.asarray(ref.int_matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_bitserial_ref_decomposition(seed):
+    """The Σ 2^{m+n} popcount(AND) identity itself (paper §5.2 / [45])."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 16, (9, 33)).astype(np.int32)
+    w = rng.integers(0, 16, (33, 21)).astype(np.int32)
+    a = np.asarray(ref.bitserial_matmul_ref(jnp.asarray(x), jnp.asarray(w), 4, 4))
+    b_ = np.asarray(ref.int_matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(a, b_)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 2**31 - 1), w_bits=st.integers(2, 5))
+def test_signed_bitserial_offset_correction(seed, w_bits):
+    """Unsigned-storage offset trick recovers the signed product exactly."""
+    rng = np.random.default_rng(seed)
+    half = 1 << (w_bits - 1)
+    x = rng.integers(0, 16, (5, 40)).astype(np.int32)
+    w_signed = rng.integers(-half, half, (40, 17)).astype(np.int32)
+    got = np.asarray(signed_bitserial_matmul(
+        jnp.asarray(x), jnp.asarray(w_signed + half), 4, w_bits))
+    want = x.astype(np.int64) @ w_signed.astype(np.int64)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bitserial_zero_dims_rejected():
+    with pytest.raises(Exception):
+        bitserial_matmul(jnp.zeros((2, 3), jnp.int32),
+                         jnp.zeros((4, 5), jnp.int32), 4, 4)

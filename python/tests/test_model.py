@@ -1,0 +1,183 @@
+"""L2 model tests: shapes, integer semantics, pallas/jnp path equality,
+PAC monotonicity, params round-trip."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as m
+from compile import data as data_mod
+
+
+def tiny_cfg(**kw):
+    base = dict(height=12, width=12, in_channels=1, n_lbp_layers=2,
+                kernels_per_layer=4, pool=4, hidden=32, seed=5)
+    base.update(kw)
+    return m.ApLbpConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return m.init_params(tiny_cfg())
+
+
+@pytest.fixture(scope="module")
+def tiny_images():
+    rng = np.random.default_rng(11)
+    return jnp.asarray(rng.random((3, 12, 12, 1)).astype(np.float32))
+
+
+def test_channels_after():
+    cfg = tiny_cfg()
+    assert cfg.channels_after == (1, 5, 9)
+    assert cfg.feature_dim == (12 // 4) * (12 // 4) * 9
+
+
+def test_config_for_matches_paper():
+    assert m.config_for("mnist").n_lbp_layers == 3      # 5 blocks: 3 LBP + 2 FC
+    assert m.config_for("svhn").n_lbp_layers == 8       # 10 blocks: 8 LBP + 2 FC
+    assert m.config_for("mnist").hidden == 512
+    assert m.config_for("svhn").in_channels == 3
+    with pytest.raises(ValueError):
+        m.config_for("cifar10")
+
+
+def test_sensor_quantize_masks_lsbs():
+    imgs = jnp.asarray(np.linspace(0, 1, 64, dtype=np.float32).reshape(1, 8, 8, 1))
+    for apx in range(4):
+        q = np.asarray(m.sensor_quantize(imgs, apx))
+        assert q.min() >= 0 and q.max() <= 255
+        assert (q & ((1 << apx) - 1) == 0).all()
+    # apx=0 is plain round-to-nearest
+    q0 = np.asarray(m.sensor_quantize(imgs, 0))
+    np.testing.assert_array_equal(
+        q0, np.clip(np.floor(np.asarray(imgs) * 255 + 0.5), 0, 255).astype(np.int32))
+
+
+def test_shifted_relu_u8_range_and_knee():
+    codes = jnp.arange(256, dtype=jnp.int32)
+    out = np.asarray(m.shifted_relu_u8(codes, 8))
+    assert out.min() == 0 and out.max() <= 255
+    assert (out[:129] == 0).all()          # below/at the 2^{e-1} shift
+    assert out[129] == 2 and out[255] == 254
+    assert np.all(np.diff(out) >= 0)       # monotone
+
+
+def test_forward_shapes(tiny_params, tiny_images):
+    feats = m.forward_lbp(tiny_params, tiny_images)
+    assert feats.shape == (3, tiny_params.config.feature_dim)
+    logits = m.apply(tiny_params, tiny_images)
+    assert logits.shape == (3, 10)
+
+
+def test_features_are_act_bits_bounded(tiny_params, tiny_images):
+    feats = np.asarray(m.forward_lbp(tiny_params, tiny_images))
+    qmax = (1 << tiny_params.config.act_bits) - 1
+    assert feats.min() >= 0 and feats.max() <= qmax
+
+
+def test_pallas_and_jnp_paths_identical(tiny_params, tiny_images):
+    """The L1 Pallas kernels and the oracle must agree through the whole
+    network — logits bit-identical (all-integer until the final affine)."""
+    a = np.asarray(m.apply(tiny_params, tiny_images, use_pallas=False))
+    b = np.asarray(m.apply(tiny_params, tiny_images, use_pallas=True))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_apx_code_prunes_feature_information():
+    """More approximated bits ⇒ codes lose only their LSBs (Fig. 3b)."""
+    rng = np.random.default_rng(0)
+    imgs = jnp.asarray(rng.random((2, 12, 12, 1)).astype(np.float32))
+    cfgs = [tiny_cfg(apx_code=a, apx_pixel=0) for a in (0, 2)]
+    ps = [m.init_params(c) for c in cfgs]
+    # identical patterns (same seed) ⇒ codes differ only in masked bits.
+    f0 = np.asarray(m.forward_lbp(ps[0], imgs))
+    f2 = np.asarray(m.forward_lbp(ps[1], imgs))
+    assert f0.shape == f2.shape
+    assert not (f0 == f2).all() or True  # features may coincide after pooling
+    # direct check at the code level:
+    x = m.sensor_quantize(imgs, 0)
+    lay = ps[0].lbp_layers[0]
+    n, c = m._gather_neighbors(x, lay, 3)
+    from compile.kernels import ref
+    c0 = np.asarray(ref.lbp_encode_ref(n.reshape(-1, 8), c.reshape(-1), 0))
+    c2 = np.asarray(ref.lbp_encode_ref(n.reshape(-1, 8), c.reshape(-1), 2))
+    np.testing.assert_array_equal(c2, c0 & ~3)
+
+
+def test_joint_block_preserves_input(tiny_params, tiny_images):
+    """The joint op cascades ifmaps with ofmaps: first C channels pass through."""
+    cfg = tiny_params.config
+    x = m.sensor_quantize(tiny_images, cfg.apx_pixel)
+    out = m.lbp_layer_forward(x, tiny_params.lbp_layers[0], cfg, False)
+    np.testing.assert_array_equal(np.asarray(out[..., :1]), np.asarray(x))
+    assert out.shape[-1] == 1 + cfg.kernels_per_layer
+
+
+def test_params_roundtrip(tmp_path, tiny_params):
+    p = tmp_path / "t.params.bin"
+    m.save_params(tiny_params, str(p))
+    back = m.load_params(str(p))
+    # seed is not serialized (patterns are stored explicitly)
+    import dataclasses
+    assert dataclasses.replace(back.config, seed=tiny_params.config.seed) \
+        == tiny_params.config
+    for a, b in zip(back.lbp_layers, tiny_params.lbp_layers):
+        np.testing.assert_array_equal(a.offsets, b.offsets)
+        np.testing.assert_array_equal(a.pivot_ch, b.pivot_ch)
+    for ga, gb in ((back.mlp1, tiny_params.mlp1), (back.mlp2, tiny_params.mlp2)):
+        np.testing.assert_array_equal(ga.w_int, gb.w_int)
+        np.testing.assert_array_equal(ga.scale, gb.scale)
+        np.testing.assert_array_equal(ga.bias, gb.bias)
+
+
+def test_params_roundtrip_inference_identical(tmp_path, tiny_params, tiny_images):
+    p = tmp_path / "t.params.bin"
+    m.save_params(tiny_params, str(p))
+    back = m.load_params(str(p))
+    np.testing.assert_array_equal(np.asarray(m.apply(back, tiny_images)),
+                                  np.asarray(m.apply(tiny_params, tiny_images)))
+
+
+def test_patterns_never_sample_pivot_position():
+    for lay in m.init_lbp_patterns(m.config_for("mnist")):
+        dy, dx = lay.offsets[..., 0], lay.offsets[..., 1]
+        assert not ((dy == 0) & (dx == 0)).any()
+
+
+def test_patterns_deterministic_in_seed():
+    a = m.init_lbp_patterns(tiny_cfg(seed=9))
+    b = m.init_lbp_patterns(tiny_cfg(seed=9))
+    c = m.init_lbp_patterns(tiny_cfg(seed=10))
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(la.offsets, lb.offsets)
+    assert any(not np.array_equal(la.offsets, lc.offsets)
+               for la, lc in zip(a, c))
+
+
+def test_surrogate_gradient_flows():
+    """Paper footnote 1: binary comparisons are replaced by a shifted tanh
+    in the backward pass.  Verify the surrogate has usable gradients."""
+    def soft_compare(n, c, tau=0.1):
+        return 0.5 * (jnp.tanh((n - c) / tau) + 1.0)
+
+    g = jax.grad(lambda c: soft_compare(0.6, c).sum())(0.55)
+    assert np.isfinite(g) and g < 0  # raising the pivot lowers the bit
+
+
+def test_datasets_shapes_and_determinism():
+    for name, shape in data_mod.SHAPES.items():
+        x, y, xt, yt = data_mod.load_dataset(name, n_train=64, n_test=32)
+        assert x.shape == (64, *shape) and xt.shape == (32, *shape)
+        assert x.dtype == np.float32 and 0.0 <= x.min() and x.max() <= 1.0
+        assert set(np.unique(y)) <= set(range(10))
+        x2, y2, _, _ = data_mod.load_dataset(name, n_train=64, n_test=32)
+        np.testing.assert_array_equal(x, x2)
+        np.testing.assert_array_equal(y, y2)
+
+
+def test_dataset_classes_balanced():
+    _, y, _, _ = data_mod.load_dataset("mnist", n_train=200, n_test=10)
+    counts = np.bincount(y, minlength=10)
+    assert counts.min() >= 15  # 200/10 = 20 ± shuffle

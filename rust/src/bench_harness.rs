@@ -1,0 +1,250 @@
+//! Micro/macro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iteration with robust statistics (median, MAD,
+//! p05/p95, throughput), a `black_box` to defeat const-folding, and a
+//! tabular reporter used by every `benches/*.rs` target (all built with
+//! `harness = false`).
+//!
+//! ```no_run
+//! use ns_lbp::bench_harness::{Bench, black_box};
+//! let mut b = Bench::new("sum");
+//! let r = b.run("1..1000", || black_box((0u64..1000).sum::<u64>()));
+//! r.print();
+//! ```
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+/// Opaque value sink; prevents the optimizer from deleting the benched code.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub group: String,
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p05: Duration,
+    pub p95: Duration,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: Duration,
+}
+
+impl CaseResult {
+    /// items/second given `items` work items per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median.as_secs_f64()
+    }
+
+    pub fn print(&self) {
+        println!(
+            "{:<40} median {:>12?} mean {:>12?} p05 {:>12?} p95 {:>12?} ({} iters)",
+            format!("{}/{}", self.group, self.name),
+            self.median,
+            self.mean,
+            self.p05,
+            self.p95,
+            self.iters
+        );
+    }
+}
+
+/// Benchmark group runner.
+pub struct Bench {
+    group: String,
+    /// Target measurement time per case.
+    pub measure_time: Duration,
+    /// Warmup time per case.
+    pub warmup_time: Duration,
+    /// Upper bound on timed samples.
+    pub max_samples: usize,
+    results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // NSLBP_BENCH_FAST=1 shrinks times for CI smoke runs.
+        let fast = std::env::var("NSLBP_BENCH_FAST").is_ok();
+        Self {
+            group: group.to_string(),
+            measure_time: if fast {
+                Duration::from_millis(200)
+            } else {
+                Duration::from_secs(2)
+            },
+            warmup_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(500)
+            },
+            max_samples: 10_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (called repeatedly); returns robust statistics.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> CaseResult {
+        // Warmup and initial calibration of per-iteration cost.
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || calib_iters == 0 {
+            black_box(f());
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / calib_iters as f64;
+
+        // Choose a batch size so one sample costs ≥ ~50 µs (timer noise floor).
+        let batch = ((50e-6 / per_iter.max(1e-12)).ceil() as u64).max(1);
+        let target_samples = ((self.measure_time.as_secs_f64()
+            / (per_iter * batch as f64).max(1e-9)) as usize)
+            .clamp(10, self.max_samples);
+
+        let mut samples = Vec::with_capacity(target_samples);
+        let mut total_iters = 0u64;
+        for _ in 0..target_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| -> Duration {
+            let idx = ((samples.len() - 1) as f64 * q).round() as usize;
+            Duration::from_secs_f64(samples[idx])
+        };
+        let median = pick(0.5);
+        let mean = Duration::from_secs_f64(
+            samples.iter().sum::<f64>() / samples.len() as f64,
+        );
+        let med = median.as_secs_f64();
+        let mut devs: Vec<f64> = samples.iter().map(|s| (s - med).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = Duration::from_secs_f64(devs[devs.len() / 2]);
+
+        let result = CaseResult {
+            group: self.group.clone(),
+            name: name.to_string(),
+            iters: total_iters,
+            median,
+            mean,
+            p05: pick(0.05),
+            p95: pick(0.95),
+            mad,
+        };
+        result.print();
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn results(&self) -> &[CaseResult] {
+        &self.results
+    }
+}
+
+/// Simple fixed-width table printer for paper-figure outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("| {:<w$} ", c, w = widths[i]));
+            }
+            s.push('|');
+            s
+        };
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("|{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "|";
+        println!("{}", line(&self.headers));
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+
+    /// Write the table as TSV (for EXPERIMENTS.md ingestion).
+    pub fn write_tsv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join("\t"))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join("\t"))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("NSLBP_BENCH_FAST", "1");
+        let mut b = Bench::new("test");
+        let r = b.run("noop-ish", || black_box(1u64 + 1));
+        assert!(r.median.as_nanos() < 1_000_000); // well under 1 ms
+        assert!(r.p05 <= r.median && r.median <= r.p95);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = CaseResult {
+            group: "g".into(),
+            name: "n".into(),
+            iters: 1,
+            median: Duration::from_millis(10),
+            mean: Duration::from_millis(10),
+            p05: Duration::from_millis(9),
+            p95: Duration::from_millis(11),
+            mad: Duration::from_millis(1),
+        };
+        assert!((r.throughput(100.0) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()]);
+        }));
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, repeated
+//! options, positional arguments, and generated `--help` text.  Used by
+//! `rust/src/main.rs` and the examples.
+
+use crate::error::{Error, Result};
+
+/// Option specification.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    /// None for boolean flags; Some(placeholder) for valued options.
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+    pub repeated: bool,
+}
+
+/// A parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub subcommand: Option<String>,
+    flags: Vec<String>,
+    options: Vec<(String, String)>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn opt_all(&self, name: &str) -> Vec<String> {
+        self.options
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.clone())
+            .collect()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Usage(format!("--{name}: cannot parse {v:?}"))
+            }),
+        }
+    }
+}
+
+/// Command definition: subcommands + options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub subcommands: Vec<(&'static str, &'static str)>,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, subcommands: Vec::new(), opts: Vec::new() }
+    }
+
+    pub fn subcommand(mut self, name: &'static str, about: &'static str) -> Self {
+        self.subcommands.push((name, about));
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, value: None, help, repeated: false });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, placeholder: &'static str,
+               help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, value: Some(placeholder), help,
+                                 repeated: false });
+        self
+    }
+
+    pub fn opt_repeated(mut self, name: &'static str, placeholder: &'static str,
+                        help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, value: Some(placeholder), help,
+                                 repeated: true });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Render `--help`.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n    {} ", self.name, self.about,
+                            self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str("<SUBCOMMAND> ");
+        }
+        s.push_str("[OPTIONS]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for (n, about) in &self.subcommands {
+                s.push_str(&format!("    {n:<14} {about}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let lhs = match o.value {
+                Some(ph) => format!("--{} <{}>", o.name, ph),
+                None => format!("--{}", o.name),
+            };
+            s.push_str(&format!("    {lhs:<26} {}\n", o.help));
+        }
+        s.push_str("    --help                     print this help\n");
+        s
+    }
+
+    /// Parse argv (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let mut parsed = Parsed::default();
+        let mut it = args.iter().peekable();
+
+        if !self.subcommands.is_empty() {
+            match it.peek() {
+                Some(first) if !first.starts_with('-') => {
+                    let name = it.next().unwrap();
+                    if !self.subcommands.iter().any(|(n, _)| n == name) {
+                        return Err(Error::Usage(format!(
+                            "unknown subcommand {name:?}; try --help"
+                        )));
+                    }
+                    parsed.subcommand = Some(name.clone());
+                }
+                _ => {}
+            }
+        }
+
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::Usage(self.help()));
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self.spec(name).ok_or_else(|| {
+                    Error::Usage(format!("unknown option --{name}; try --help"))
+                })?;
+                match (spec.value, inline_val) {
+                    (None, None) => parsed.flags.push(name.to_string()),
+                    (None, Some(_)) => {
+                        return Err(Error::Usage(format!(
+                            "--{name} is a flag and takes no value"
+                        )))
+                    }
+                    (Some(_), Some(v)) => {
+                        if !spec.repeated && parsed.opt(name).is_some() {
+                            return Err(Error::Usage(format!(
+                                "--{name} given more than once"
+                            )));
+                        }
+                        parsed.options.push((name.to_string(), v));
+                    }
+                    (Some(_), None) => {
+                        let v = it.next().ok_or_else(|| {
+                            Error::Usage(format!("--{name} expects a value"))
+                        })?;
+                        if !spec.repeated && parsed.opt(name).is_some() {
+                            return Err(Error::Usage(format!(
+                                "--{name} given more than once"
+                            )));
+                        }
+                        parsed.options.push((name.to_string(), v.clone()));
+                    }
+                }
+            } else {
+                parsed.positionals.push(arg.clone());
+            }
+        }
+        Ok(parsed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("ns-lbp", "test")
+            .subcommand("run", "run the pipeline")
+            .subcommand("bench", "benchmarks")
+            .flag("verbose", "chatty")
+            .opt("config", "FILE", "config path")
+            .opt_repeated("set", "K=V", "override")
+    }
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_options() {
+        let p = cmd()
+            .parse(&args(&["run", "--verbose", "--config", "x.toml",
+                           "--set", "a=1", "--set=b=2", "pos1"]))
+            .unwrap();
+        assert_eq!(p.subcommand.as_deref(), Some("run"));
+        assert!(p.flag("verbose"));
+        assert!(!p.flag("quiet"));
+        assert_eq!(p.opt("config"), Some("x.toml"));
+        assert_eq!(p.opt_all("set"), vec!["a=1".to_string(), "b=2".to_string()]);
+        assert_eq!(p.positionals, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_misused() {
+        assert!(cmd().parse(&args(&["frobnicate"])).is_err());
+        assert!(cmd().parse(&args(&["--nope"])).is_err());
+        assert!(cmd().parse(&args(&["--config"])).is_err()); // missing value
+        assert!(cmd().parse(&args(&["--verbose=1"])).is_err()); // flag w/ value
+        assert!(cmd()
+            .parse(&args(&["--config", "a", "--config", "b"]))
+            .is_err()); // non-repeated repeated
+    }
+
+    #[test]
+    fn opt_parse_with_default() {
+        let p = cmd().parse(&args(&["--config", "x"])).unwrap();
+        let n: usize = p.opt_parse("missing-not-declared", 7).unwrap();
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = cmd().help();
+        for needle in ["run", "bench", "--verbose", "--config", "--set"] {
+            assert!(h.contains(needle), "missing {needle} in help");
+        }
+    }
+}

@@ -1,0 +1,407 @@
+//! Hand-rolled configuration system (serde/toml are unavailable offline).
+//!
+//! Parses a pragmatic TOML subset — `[section]` headers, `key = value` with
+//! string / integer / float / bool / homogeneous-array values, `#` comments —
+//! into a [`ConfigFile`] with typed, error-reporting accessors, and maps it
+//! onto the NS-LBP system configuration [`SystemConfig`] (cache geometry,
+//! circuit calibration, sensor and network settings).
+//!
+//! The default configuration reproduces the paper's setup exactly
+//! (2.5 MB slice, 80×32 KB banks, 256×256 sub-arrays, 65 nm @ 1.1 V,
+//! 1.25 GHz); `configs/nslbp_default.toml` spells it out and any field can
+//! be overridden from a user file or `--set section.key=value` CLI options.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "bool",
+            Value::Array(_) => "array",
+        }
+    }
+}
+
+/// Parsed config file: `section.key -> Value` (root section is `""`).
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    entries: BTreeMap<String, Value>,
+}
+
+impl ConfigFile {
+    /// Parse from text. Line-oriented; errors carry line numbers.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| err_at(lineno, "unterminated [section]"))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| err_at(lineno, "expected key = value"))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim())
+                .map_err(|e| err_at(lineno, &format!("bad value for {full_key}: {e}")))?;
+            entries.insert(full_key, value);
+        }
+        Ok(Self { entries })
+    }
+
+    /// Parse from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Config(format!("cannot read {}: {e}", path.as_ref().display()))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Apply a `section.key=value` override (CLI `--set`).
+    pub fn set_override(&mut self, spec: &str) -> Result<()> {
+        let (key, val) = spec
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("--set expects k=v, got {spec:?}")))?;
+        let value = parse_value(val.trim())
+            .map_err(|e| Error::Config(format!("bad value in --set {spec:?}: {e}")))?;
+        self.entries.insert(key.trim().to_string(), value);
+        Ok(())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> Result<i64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Int(v)) => Ok(*v),
+            Some(other) => Err(type_err(key, "integer", other)),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        let v = self.get_i64(key, default as i64)?;
+        usize::try_from(v)
+            .map_err(|_| Error::Config(format!("{key} must be non-negative, got {v}")))
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Float(v)) => Ok(*v),
+            Some(Value::Int(v)) => Ok(*v as f64),
+            Some(other) => Err(type_err(key, "float", other)),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Bool(v)) => Ok(*v),
+            Some(other) => Err(type_err(key, "bool", other)),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(Value::Str(v)) => Ok(v.clone()),
+            Some(other) => Err(type_err(key, "string", other)),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    // underscores as digit separators, like real TOML
+    let cleaned = s.replace('_', "");
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("cannot parse {s:?}"))
+}
+
+fn err_at(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+fn type_err(key: &str, want: &str, got: &Value) -> Error {
+    Error::Config(format!("{key}: expected {want}, got {}", got.type_name()))
+}
+
+// ---------------------------------------------------------------------------
+// System configuration
+// ---------------------------------------------------------------------------
+
+/// Complete NS-LBP system configuration (paper defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    pub cache: crate::sram::CacheGeometry,
+    pub circuit: crate::circuit::CircuitParams,
+    pub sensor: crate::sensor::SensorConfig,
+    /// Worker threads for the coordinator (0 = one per bank group).
+    pub workers: usize,
+    /// Artifacts directory for HLO/params files.
+    pub artifacts_dir: String,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            cache: crate::sram::CacheGeometry::default(),
+            circuit: crate::circuit::CircuitParams::default(),
+            sensor: crate::sensor::SensorConfig::default(),
+            workers: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Build from a parsed file; unknown keys are rejected so typos fail
+    /// loudly rather than silently falling back to defaults.
+    pub fn from_file(file: &ConfigFile) -> Result<Self> {
+        const KNOWN: &[&str] = &[
+            "cache.banks", "cache.mats_per_bank", "cache.subarrays_per_mat",
+            "cache.rows", "cache.cols",
+            "cache.pixel_rows", "cache.pivot_rows", "cache.reserved_rows",
+            "cache.weight_rows", "cache.input_rows",
+            "circuit.vdd", "circuit.rwl_voltage", "circuit.v_r1",
+            "circuit.v_r2", "circuit.v_r3", "circuit.freq_ghz",
+            "circuit.sigma_process", "circuit.sigma_mismatch",
+            "sensor.rows", "sensor.cols", "sensor.channels",
+            "sensor.adc_bits", "sensor.skip_lsbs", "sensor.fps",
+            "runtime.workers", "runtime.artifacts_dir",
+        ];
+        for key in file.keys() {
+            if !KNOWN.contains(&key) {
+                return Err(Error::Config(format!("unknown config key {key:?}")));
+            }
+        }
+
+        let d = Self::default();
+        let cache = crate::sram::CacheGeometry {
+            banks: file.get_usize("cache.banks", d.cache.banks)?,
+            mats_per_bank: file
+                .get_usize("cache.mats_per_bank", d.cache.mats_per_bank)?,
+            subarrays_per_mat: file
+                .get_usize("cache.subarrays_per_mat", d.cache.subarrays_per_mat)?,
+            rows: file.get_usize("cache.rows", d.cache.rows)?,
+            cols: file.get_usize("cache.cols", d.cache.cols)?,
+            region: crate::sram::RegionLayout {
+                pixel_rows: file
+                    .get_usize("cache.pixel_rows", d.cache.region.pixel_rows)?,
+                pivot_rows: file
+                    .get_usize("cache.pivot_rows", d.cache.region.pivot_rows)?,
+                reserved_rows: file
+                    .get_usize("cache.reserved_rows", d.cache.region.reserved_rows)?,
+                weight_rows: file
+                    .get_usize("cache.weight_rows", d.cache.region.weight_rows)?,
+                input_rows: file
+                    .get_usize("cache.input_rows", d.cache.region.input_rows)?,
+            },
+        };
+        cache.validate()?;
+
+        let circuit = crate::circuit::CircuitParams {
+            vdd: file.get_f64("circuit.vdd", d.circuit.vdd)?,
+            rwl_voltage: file.get_f64("circuit.rwl_voltage", d.circuit.rwl_voltage)?,
+            v_r1: file.get_f64("circuit.v_r1", d.circuit.v_r1)?,
+            v_r2: file.get_f64("circuit.v_r2", d.circuit.v_r2)?,
+            v_r3: file.get_f64("circuit.v_r3", d.circuit.v_r3)?,
+            freq_ghz: file.get_f64("circuit.freq_ghz", d.circuit.freq_ghz)?,
+            sigma_process: file
+                .get_f64("circuit.sigma_process", d.circuit.sigma_process)?,
+            sigma_mismatch: file
+                .get_f64("circuit.sigma_mismatch", d.circuit.sigma_mismatch)?,
+        };
+        circuit.validate()?;
+
+        let sensor = crate::sensor::SensorConfig {
+            rows: file.get_usize("sensor.rows", d.sensor.rows)?,
+            cols: file.get_usize("sensor.cols", d.sensor.cols)?,
+            channels: file.get_usize("sensor.channels", d.sensor.channels)?,
+            adc_bits: file.get_usize("sensor.adc_bits", d.sensor.adc_bits)?,
+            skip_lsbs: file.get_usize("sensor.skip_lsbs", d.sensor.skip_lsbs)?,
+            fps: file.get_f64("sensor.fps", d.sensor.fps)?,
+        };
+        sensor.validate()?;
+
+        Ok(Self {
+            cache,
+            circuit,
+            sensor,
+            workers: file.get_usize("runtime.workers", d.workers)?,
+            artifacts_dir: file.get_str("runtime.artifacts_dir", &d.artifacts_dir)?,
+        })
+    }
+
+    /// Load defaults, then an optional file, then CLI overrides.
+    pub fn load(path: Option<&str>, overrides: &[String]) -> Result<Self> {
+        let mut file = match path {
+            Some(p) => ConfigFile::load(p)?,
+            None => ConfigFile::default(),
+        };
+        for o in overrides {
+            file.set_override(o)?;
+        }
+        Self::from_file(&file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # NS-LBP sample
+        [cache]
+        banks = 80
+        rows = 256          # per sub-array
+        [circuit]
+        vdd = 1.1
+        freq_ghz = 1.25
+        [sensor]
+        adc_bits = 8
+        [runtime]
+        artifacts_dir = "artifacts"
+    "#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let f = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(f.get_i64("cache.banks", 0).unwrap(), 80);
+        assert_eq!(f.get_f64("circuit.vdd", 0.0).unwrap(), 1.1);
+        assert_eq!(f.get_str("runtime.artifacts_dir", "").unwrap(), "artifacts");
+        assert_eq!(f.get_i64("cache.missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_type_mismatch() {
+        let f = ConfigFile::parse("x = \"hello\"").unwrap();
+        assert!(f.get_i64("x", 0).is_err());
+    }
+
+    #[test]
+    fn parses_arrays_bools_underscores() {
+        let f = ConfigFile::parse("a = [1, 2, 3]\nb = true\nc = 1_000_000").unwrap();
+        assert!(matches!(f.get("a"), Some(Value::Array(v)) if v.len() == 3));
+        assert!(f.get_bool("b", false).unwrap());
+        assert_eq!(f.get_i64("c", 0).unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let f = ConfigFile::parse("k = \"a#b\"").unwrap();
+        assert_eq!(f.get_str("k", "").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let err = ConfigFile::parse("ok = 1\nnot a kv line").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn system_config_defaults_match_paper() {
+        let sc = SystemConfig::default();
+        assert_eq!(sc.cache.banks, 80);
+        assert_eq!(sc.cache.rows, 256);
+        assert_eq!(sc.cache.cols, 256);
+        assert!((sc.circuit.freq_ghz - 1.25).abs() < 1e-9);
+        assert!((sc.circuit.vdd - 1.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn system_config_rejects_unknown_keys() {
+        let f = ConfigFile::parse("[cache]\nbnaks = 80").unwrap();
+        assert!(SystemConfig::from_file(&f).is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut f = ConfigFile::default();
+        f.set_override("cache.banks=40").unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(sc.cache.banks, 40);
+    }
+}

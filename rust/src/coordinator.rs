@@ -1,0 +1,523 @@
+//! The near-sensor coordinator: sensor → mapper → in-memory execution →
+//! DPU → classification.
+//!
+//! This is the L3 runtime that ties the whole system together.  Each frame
+//! flows through two redundant paths:
+//!
+//! * the **functional path** ([`crate::model`]) — fast bit-exact integer
+//!   inference used for the logits, and
+//! * the **architectural path** — the same LBP comparisons executed as
+//!   Algorithm 1 over simulated compute sub-arrays
+//!   ([`crate::lbp::parallel_compare`]) and, optionally, the MLP as
+//!   in-memory AND/bitcount ([`crate::mlp`]), producing cycle/energy
+//!   statistics *and* a per-frame equivalence check (any divergence is
+//!   counted in [`FrameReport::arch_mismatches`] — it must be 0).
+//!
+//! Frames are independent, so the run loop fans out over worker threads
+//! (std::thread — tokio is unavailable offline), each with its own
+//! scratch sub-array; the modeled accelerator time still assumes the
+//! paper's geometry (batches spread across the cache's sub-arrays).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::SystemConfig;
+use crate::dpu::{Dpu, DpuStats};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::error::{Error, Result};
+use crate::isa::{ExecStats, Executor};
+use crate::lbp::parallel_compare;
+use crate::mapping::LbpSubarrayMap;
+use crate::mlp::MlpSubarrayMap;
+use crate::model::{self, TensorU8};
+use crate::params::{LbpLayer, NetParams};
+use crate::sensor::{Frame, FrameSource};
+use crate::sram::{Region, SubArray};
+
+/// What the architectural path simulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArchSim {
+    /// Run every LBP comparison through the ISA-level Algorithm 1.
+    pub lbp: bool,
+    /// Run the MLP through the in-memory AND/bitcount path.
+    pub mlp: bool,
+    /// Let the Ctrl early-exit Algorithm 1 once all lanes are decided.
+    pub early_exit: bool,
+}
+
+impl Default for ArchSim {
+    fn default() -> Self {
+        Self { lbp: true, mlp: false, early_exit: false }
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorConfig {
+    pub system: SystemConfig,
+    pub arch: ArchSim,
+}
+
+/// Per-frame outcome.
+#[derive(Clone, Debug)]
+pub struct FrameReport {
+    pub seq: u64,
+    pub predicted: usize,
+    pub logits: Vec<f32>,
+    pub exec: ExecStats,
+    pub dpu: DpuStats,
+    pub energy: EnergyBreakdown,
+    /// Modeled accelerator latency for this frame [ns].
+    pub arch_time_ns: f64,
+    /// Architectural-vs-functional divergences (must be 0).
+    pub arch_mismatches: u64,
+}
+
+/// Aggregate over a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    pub frames: u64,
+    pub exec: ExecStats,
+    pub dpu: DpuStats,
+    pub energy: EnergyBreakdown,
+    pub total_arch_time_ns: f64,
+    pub arch_mismatches: u64,
+    /// Host wall-clock of the whole run [s].
+    pub wall_seconds: f64,
+}
+
+impl RunSummary {
+    pub fn frames_per_second_modeled(&self) -> f64 {
+        if self.total_arch_time_ns == 0.0 {
+            return 0.0;
+        }
+        self.frames as f64 / (self.total_arch_time_ns * 1e-9)
+    }
+
+    pub fn energy_per_frame_uj(&self) -> f64 {
+        if self.frames == 0 {
+            return 0.0;
+        }
+        self.energy.total_pj() / 1e6 / self.frames as f64
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub params: NetParams,
+    pub config: CoordinatorConfig,
+    pub energy_model: EnergyModel,
+}
+
+impl Coordinator {
+    pub fn new(params: NetParams, config: CoordinatorConfig) -> Result<Self> {
+        config.system.cache.validate()?;
+        let mut em = EnergyModel::default();
+        em.params.freq_ghz = config.system.circuit.freq_ghz;
+        Ok(Self { params, config, energy_model: em })
+    }
+
+    /// Lane order for one LBP layer: (y, x, kernel, sample≥apx).
+    fn gather_pairs(&self, x: &TensorU8, layer: &LbpLayer) -> Vec<(u8, u8)> {
+        let apx = self.params.config.apx_code;
+        let mut pairs = Vec::with_capacity(
+            x.h * x.w * layer.offsets.len() * (self.params.config.e - apx),
+        );
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                for (k, pts) in layer.offsets.iter().enumerate() {
+                    let pivot = x.get(y, xx, layer.pivot_ch[k] as usize);
+                    for pt in pts.iter().skip(apx) {
+                        let v = x.get_padded(
+                            y as i64 + pt.dy as i64,
+                            xx as i64 + pt.dx as i64,
+                            pt.ch as usize,
+                        );
+                        pairs.push((v, pivot));
+                    }
+                }
+            }
+        }
+        pairs
+    }
+
+    /// One LBP layer on the architectural path; returns the joint output
+    /// and the number of bit mismatches against the functional path.
+    fn lbp_layer_arch(&self, x: &TensorU8, layer: &LbpLayer, scratch: &mut SubArray,
+                      map: &LbpSubarrayMap, exec: &mut ExecStats, dpu: &mut Dpu)
+                      -> Result<(TensorU8, u64, f64)> {
+        let cfg = &self.params.config;
+        let apx = cfg.apx_code;
+        let samples = cfg.e - apx;
+        let pairs = self.gather_pairs(x, layer);
+        let cols = scratch.cols();
+
+        // run Algorithm 1 per ≤cols-lane batch on the scratch sub-array
+        let mut bits = Vec::with_capacity(pairs.len());
+        let mut batches = 0u64;
+        for chunk in pairs.chunks(cols) {
+            map.load_lanes(scratch, 0, chunk)?;
+            exec.row_writes += 2 * map.bits as u64; // transposed lane load
+            exec.cycles += 2 * map.bits as u64;
+            let mut ex = Executor::new(scratch);
+            let out = parallel_compare(&mut ex, map, 0, chunk.len(),
+                                       cfg.apx_pixel,
+                                       self.config.arch.early_exit)?;
+            exec.merge(&ex.stats);
+            bits.extend(out.bits);
+            batches += 1;
+        }
+
+        // assemble codes in the same lane order and cross-check
+        let k_n = layer.offsets.len();
+        let mut out = TensorU8::zeros(x.h, x.w, x.c + k_n);
+        let mut mismatches = 0u64;
+        let mut lane = 0usize;
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                for ch in 0..x.c {
+                    out.set(y, xx, ch, x.get(y, xx, ch));
+                }
+                for k in 0..k_n {
+                    let mut code = 0u32;
+                    for n in 0..samples {
+                        if bits[lane + n] {
+                            code |= 1 << (n + apx);
+                        }
+                    }
+                    lane += samples;
+                    let want = model::lbp_code(x, layer, k, y, xx, apx);
+                    if code != want {
+                        mismatches += 1;
+                    }
+                    out.set(y, xx, x.c + k, dpu.shifted_relu_u8(code, cfg.e as u32));
+                }
+            }
+        }
+
+        // modeled time: batches spread across the cache's sub-arrays
+        let subarrays = self.config.system.cache.total_subarrays() as f64;
+        let cycles_per_batch = (2.0 * map.bits as f64)
+            + 4.0 + 7.0 * (map.bits - cfg.apx_pixel) as f64 + 3.0;
+        let time_ns = (batches as f64 / subarrays).ceil() * cycles_per_batch
+            * self.energy_model.cycle_ns();
+        Ok((out, mismatches, time_ns))
+    }
+
+    /// In-memory MLP layer (architectural); returns raw integer accums and
+    /// mismatch count vs the functional matmul.
+    fn mlp_layer_arch(&self, feats: &[u8], mlp: &crate::params::MlpLayer,
+                      scratch: &mut SubArray, mmap: &MlpSubarrayMap,
+                      exec: &mut ExecStats, dpu: &mut Dpu)
+                      -> Result<(Vec<i64>, u64, f64)> {
+        let cols = scratch.cols();
+        let half = 1u8 << (self.params.config.w_bits - 1);
+        let chunks: Vec<&[u8]> = feats.chunks(cols).collect();
+        let mut accs = vec![0i64; mlp.o];
+        let mut and_batches = 0u64;
+
+        for (ci, chunk) in chunks.iter().enumerate() {
+            let mut ex = Executor::new(scratch);
+            mmap.load_vector(&mut ex, Region::Input, 0, chunk)?;
+            let rowsum: i64 = chunk.iter().map(|&v| v as i64).sum();
+            for o in 0..mlp.o {
+                // weight column chunk, offset-stored unsigned
+                let w_col: Vec<u8> = (0..chunk.len())
+                    .map(|di| (mlp.weight(ci * cols + di, o) as i16 + half as i16) as u8)
+                    .collect();
+                mmap.load_vector(&mut ex, Region::Weight, 0, &w_col)?;
+                accs[o] += mmap.dot_signed(&mut ex, dpu, 0, 0, chunk.len(),
+                                           rowsum)?;
+                and_batches += (mmap.act_bits * mmap.w_bits) as u64;
+            }
+            exec.merge(&ex.stats);
+        }
+
+        // cross-check against the functional integer matmul
+        let want = model::int_matmul(feats, mlp);
+        let mismatches = accs.iter().zip(&want).filter(|(a, w)| a != w).count() as u64;
+        let subarrays = self.config.system.cache.total_subarrays() as f64;
+        let time_ns = (and_batches as f64 * 2.0 / subarrays).ceil()
+            * self.energy_model.cycle_ns();
+        Ok((accs, mismatches, time_ns))
+    }
+
+    /// Process one digitized frame.
+    pub fn process_frame(&self, frame: &Frame, scratch: &mut SubArray)
+                         -> Result<FrameReport> {
+        let cfg = &self.params.config;
+        if frame.rows != cfg.height || frame.cols != cfg.width
+            || frame.channels != cfg.in_channels
+        {
+            return Err(Error::Coordinator(format!(
+                "frame {}x{}x{} vs network {}x{}x{}",
+                frame.rows, frame.cols, frame.channels,
+                cfg.height, cfg.width, cfg.in_channels
+            )));
+        }
+        let map = LbpSubarrayMap::new(self.config.system.cache.region, 8)?;
+        let mut exec = ExecStats::default();
+        let mut dpu = Dpu::default();
+        let mut mismatches = 0u64;
+        let mut arch_time_ns = 0.0;
+
+        // the ADC already applied the pixel-LSB skip; mask again defensively
+        let mask = 0xFFu8 ^ ((1u8 << cfg.apx_pixel).wrapping_sub(1));
+        let data: Vec<u8> = frame.pixels.iter().map(|&p| p & mask).collect();
+        let mut x = TensorU8 { h: cfg.height, w: cfg.width, c: cfg.in_channels,
+                               data };
+
+        // --- LBP layers -----------------------------------------------------
+        for layer in &self.params.lbp_layers {
+            if self.config.arch.lbp {
+                let (nx, mm, t) =
+                    self.lbp_layer_arch(&x, layer, scratch, &map, &mut exec,
+                                        &mut dpu)?;
+                mismatches += mm;
+                arch_time_ns += t;
+                x = nx;
+            } else {
+                x = model::lbp_layer_forward(&x, layer, cfg.e, cfg.apx_code,
+                                             &mut dpu);
+            }
+        }
+
+        // --- pooling + quantization (DPU) ------------------------------------
+        let s = cfg.pool;
+        let vmax = (255 * s * s) as u32;
+        let (ph, pw) = (x.h / s, x.w / s);
+        let mut feats = Vec::with_capacity(ph * pw * x.c);
+        for py in 0..ph {
+            for px in 0..pw {
+                for ch in 0..x.c {
+                    let mut sum = 0u32;
+                    for dy in 0..s {
+                        for dx in 0..s {
+                            sum += x.get(py * s + dy, px * s + dx, ch) as u32;
+                        }
+                    }
+                    feats.push(dpu.quantize_pooled(sum, vmax, cfg.act_bits as u32)?);
+                }
+            }
+        }
+
+        // --- MLP --------------------------------------------------------------
+        let logits = if self.config.arch.mlp {
+            let mmap = MlpSubarrayMap::new(map, cfg.act_bits, cfg.w_bits)?;
+            let (acc1, mm1, t1) = self.mlp_layer_arch(&feats, &self.params.mlp1,
+                                                      scratch, &mmap, &mut exec,
+                                                      &mut dpu)?;
+            mismatches += mm1;
+            arch_time_ns += t1;
+            let hidden: Vec<u8> = acc1.iter().enumerate()
+                .map(|(o, &h)| dpu.activation(h, self.params.mlp1.scale[o],
+                                              self.params.mlp1.bias[o],
+                                              cfg.act_bits as u32))
+                .collect();
+            let (acc2, mm2, t2) = self.mlp_layer_arch(&hidden, &self.params.mlp2,
+                                                      scratch, &mmap, &mut exec,
+                                                      &mut dpu)?;
+            mismatches += mm2;
+            arch_time_ns += t2;
+            acc2.iter().enumerate()
+                .map(|(o, &h)| dpu.affine(h, self.params.mlp2.scale[o],
+                                          self.params.mlp2.bias[o]))
+                .collect()
+        } else {
+            model::mlp_forward(&self.params, &feats, &mut dpu)?
+        };
+
+        // --- energy ------------------------------------------------------------
+        let mut energy = self.energy_model.exec_energy(&exec);
+        energy.add(&self.energy_model.dpu_energy(&dpu.stats));
+        let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
+        energy.add(&self.energy_model.sensor_energy(pixels,
+                                                    (8 - cfg.apx_pixel) as u64));
+
+        Ok(FrameReport {
+            seq: frame.seq,
+            predicted: model::argmax(&logits),
+            logits,
+            exec,
+            dpu: dpu.stats,
+            energy,
+            arch_time_ns,
+            arch_mismatches: mismatches,
+        })
+    }
+
+    /// Run the pipeline over a frame source with worker-thread fan-out.
+    pub fn run(&self, source: &mut dyn FrameSource, limit: usize)
+               -> Result<(Vec<FrameReport>, RunSummary)> {
+        let t0 = std::time::Instant::now();
+        // rolling shutter digitizes frames sequentially
+        let mut frames = Vec::new();
+        while frames.len() < limit {
+            match source.next_frame() {
+                Some(f) => frames.push(f),
+                None => break,
+            }
+        }
+        let workers = if self.config.system.workers > 0 {
+            self.config.system.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(frames.len().max(1))
+        };
+        let g = &self.config.system.cache;
+        let next = AtomicUsize::new(0);
+        let results: Mutex<Vec<FrameReport>> =
+            Mutex::new(Vec::with_capacity(frames.len()));
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut scratch = SubArray::new(g.rows, g.cols);
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= frames.len() {
+                            break;
+                        }
+                        match self.process_frame(&frames[i], &mut scratch) {
+                            Ok(report) => {
+                                results.lock().unwrap().push(report);
+                            }
+                            Err(e) => {
+                                *first_err.lock().unwrap() = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(e) = first_err.into_inner().unwrap() {
+            return Err(e);
+        }
+        let mut reports = results.into_inner().unwrap();
+        reports.sort_by_key(|r| r.seq);
+
+        let mut summary = RunSummary {
+            frames: reports.len() as u64,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            ..Default::default()
+        };
+        for r in &reports {
+            summary.exec.merge(&r.exec);
+            summary.dpu.merge(&r.dpu);
+            summary.energy.add(&r.energy);
+            summary.total_arch_time_ns += r.arch_time_ns;
+            summary.arch_mismatches += r.arch_mismatches;
+        }
+        Ok((reports, summary))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::testutil::synth_params;
+    use crate::rng::Xoshiro256;
+    use crate::sensor::{ReplaySensor, SensorConfig};
+
+    fn setup(arch: ArchSim) -> (Coordinator, ReplaySensor) {
+        let (_, params) = synth_params(5);
+        let cfg = params.config;
+        let mut sys = SystemConfig::default();
+        sys.workers = 2;
+        let coord = Coordinator::new(
+            params,
+            CoordinatorConfig { system: sys, arch },
+        )
+        .unwrap();
+        let sensor_cfg = SensorConfig {
+            rows: cfg.height,
+            cols: cfg.width,
+            channels: cfg.in_channels,
+            skip_lsbs: cfg.apx_pixel,
+            ..Default::default()
+        };
+        let mut rng = Xoshiro256::new(31);
+        let scenes: Vec<Vec<f64>> = (0..6)
+            .map(|_| (0..sensor_cfg.pixels()).map(|_| rng.next_f64()).collect())
+            .collect();
+        let sensor = ReplaySensor::new(sensor_cfg, scenes, 8).unwrap();
+        (coord, sensor)
+    }
+
+    #[test]
+    fn functional_pipeline_runs() {
+        let (coord, mut sensor) = setup(ArchSim { lbp: false, mlp: false,
+                                                  early_exit: false });
+        let (reports, summary) = coord.run(&mut sensor, 6).unwrap();
+        assert_eq!(reports.len(), 6);
+        assert_eq!(summary.frames, 6);
+        assert_eq!(summary.arch_mismatches, 0);
+        // frames come back in order
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+            assert!(r.predicted < 10);
+        }
+    }
+
+    #[test]
+    fn architectural_path_matches_functional() {
+        let (coord, mut sensor) = setup(ArchSim { lbp: true, mlp: true,
+                                                  early_exit: false });
+        let (reports, summary) = coord.run(&mut sensor, 3).unwrap();
+        assert_eq!(summary.arch_mismatches, 0, "arch != functional");
+        assert!(summary.exec.compute_ops > 0);
+        assert!(summary.energy.total_pj() > 0.0);
+        assert!(summary.total_arch_time_ns > 0.0);
+        // logits equal to the purely functional run on the same frames
+        let (coord_f, mut sensor_f) = setup(ArchSim { lbp: false, mlp: false,
+                                                      early_exit: false });
+        let (reports_f, _) = coord_f.run(&mut sensor_f, 3).unwrap();
+        for (a, b) in reports.iter().zip(&reports_f) {
+            assert_eq!(a.logits, b.logits, "frame {}", a.seq);
+        }
+    }
+
+    #[test]
+    fn early_exit_preserves_results_and_saves_cycles() {
+        let (coord_e, mut sensor_e) = setup(ArchSim { lbp: true, mlp: false,
+                                                      early_exit: true });
+        let (reports_e, summary_e) = coord_e.run(&mut sensor_e, 2).unwrap();
+        let (coord_n, mut sensor_n) = setup(ArchSim { lbp: true, mlp: false,
+                                                      early_exit: false });
+        let (reports_n, summary_n) = coord_n.run(&mut sensor_n, 2).unwrap();
+        assert_eq!(summary_e.arch_mismatches, 0);
+        for (a, b) in reports_e.iter().zip(&reports_n) {
+            assert_eq!(a.logits, b.logits);
+        }
+        // early exit trades compute instructions for Ctrl reads; on random
+        // data it must never *increase* the compute-op count
+        assert!(summary_e.exec.compute_ops <= summary_n.exec.compute_ops);
+        let _ = summary_n;
+    }
+
+    #[test]
+    fn frame_shape_mismatch_rejected() {
+        let (coord, _) = setup(ArchSim::default());
+        let bad = Frame { rows: 5, cols: 5, channels: 1, pixels: vec![0; 25],
+                          seq: 0 };
+        let g = &coord.config.system.cache;
+        let mut scratch = SubArray::new(g.rows, g.cols);
+        assert!(coord.process_frame(&bad, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn summary_metrics_consistent() {
+        let (coord, mut sensor) = setup(ArchSim { lbp: true, mlp: false,
+                                                  early_exit: false });
+        let (reports, summary) = coord.run(&mut sensor, 4).unwrap();
+        let sum_pj: f64 = reports.iter().map(|r| r.energy.total_pj()).sum();
+        assert!((summary.energy.total_pj() - sum_pj).abs() < 1e-6);
+        assert!(summary.energy_per_frame_uj() > 0.0);
+        assert!(summary.frames_per_second_modeled() > 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! The Digital Processing Unit (paper §4.1, Fig. 5a) shared by all banks.
+//!
+//! The DPU performs the non-bitwise digital steps of the pipeline:
+//! activation quantization, the bit-counter + shifter + adder tree of the
+//! MLP layer (Fig. 7), and the shifted-ReLU activation.  Every helper is
+//! *exact integer math* mirroring `python/compile/model.py`, so the
+//! architectural path stays bit-identical to the AOT golden model, and
+//! every call is counted in [`DpuStats`] for the energy model.
+
+use crate::error::{Error, Result};
+
+/// DPU activity counters (inputs to the energy model).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DpuStats {
+    /// Pooled-activation quantizations.
+    pub quantize_ops: u64,
+    /// 256-bit population counts.
+    pub bitcounts: u64,
+    /// Barrel-shifter uses.
+    pub shifts: u64,
+    /// Adder-tree accumulations.
+    pub adds: u64,
+    /// Activation-function evaluations (ReLU + requantize).
+    pub activations: u64,
+    /// Shifted-ReLU mapping evaluations (LBP ofmap pixels).
+    pub shifted_relus: u64,
+}
+
+impl DpuStats {
+    pub fn merge(&mut self, o: &DpuStats) {
+        self.quantize_ops += o.quantize_ops;
+        self.bitcounts += o.bitcounts;
+        self.shifts += o.shifts;
+        self.adds += o.adds;
+        self.activations += o.activations;
+        self.shifted_relus += o.shifted_relus;
+    }
+}
+
+/// The DPU proper.
+#[derive(Clone, Debug, Default)]
+pub struct Dpu {
+    pub stats: DpuStats,
+}
+
+impl Dpu {
+    /// Shifted ReLU + approximate mapping of an LBP code to an 8-bit ofmap
+    /// pixel: `min(255, 2·max(0, code − 2^{e−1}))` (model.shifted_relu_u8).
+    pub fn shifted_relu_u8(&mut self, code: u32, e: u32) -> u8 {
+        self.stats.shifted_relus += 1;
+        let half = 1u32 << (e - 1);
+        (2 * code.saturating_sub(half)).min(255) as u8
+    }
+
+    /// Quantize an integer pooled sum to `act_bits` with round-half-up:
+    /// `q = (sum · 2·qmax + vmax) // (2·vmax)` (model.forward_lbp).
+    pub fn quantize_pooled(&mut self, sum: u32, vmax: u32, act_bits: u32) -> Result<u8> {
+        if vmax == 0 {
+            return Err(Error::Isa("quantize_pooled: vmax = 0".into()));
+        }
+        if sum > vmax {
+            return Err(Error::Isa(format!(
+                "pooled sum {sum} exceeds vmax {vmax}"
+            )));
+        }
+        self.stats.quantize_ops += 1;
+        let qmax = (1u32 << act_bits) - 1;
+        Ok(((sum as u64 * 2 * qmax as u64 + vmax as u64)
+            / (2 * vmax as u64)) as u8)
+    }
+
+    /// Population count of a packed row (the Fig.-7 bit-counter).
+    pub fn bitcount(&mut self, words: &[u64]) -> u32 {
+        self.stats.bitcounts += 1;
+        words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Barrel shift: `value << amount` (the `×2^{m+n}` step of Fig. 7).
+    pub fn shift(&mut self, value: i64, amount: u32) -> i64 {
+        self.stats.shifts += 1;
+        value << amount
+    }
+
+    /// Adder-tree accumulate.
+    pub fn add(&mut self, acc: i64, value: i64) -> i64 {
+        self.stats.adds += 1;
+        acc + value
+    }
+
+    /// MLP activation: folded-affine + ReLU-clip + requantize to
+    /// `act_bits` (`floor(clip(h·scale + bias, 0, 1)·qmax + 0.5)`),
+    /// mirroring `model.mlp_forward` exactly (f32 arithmetic).
+    pub fn activation(&mut self, h: i64, scale: f32, bias: f32, act_bits: u32) -> u8 {
+        self.stats.activations += 1;
+        let qmax = ((1u32 << act_bits) - 1) as f32;
+        let v = (h as f32) * scale + bias;
+        let v = v.clamp(0.0, 1.0);
+        (v * qmax + 0.5).floor() as u8
+    }
+
+    /// Final-layer affine (logits): no clipping/quantization.
+    pub fn affine(&mut self, h: i64, scale: f32, bias: f32) -> f32 {
+        self.stats.adds += 1;
+        (h as f32) * scale + bias
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shifted_relu_matches_model() {
+        let mut d = Dpu::default();
+        assert_eq!(d.shifted_relu_u8(0, 8), 0);
+        assert_eq!(d.shifted_relu_u8(128, 8), 0);
+        assert_eq!(d.shifted_relu_u8(129, 8), 2);
+        assert_eq!(d.shifted_relu_u8(255, 8), 254);
+        assert_eq!(d.shifted_relu_u8(255, 4), 255); // saturates for small e
+        assert_eq!(d.stats.shifted_relus, 5);
+    }
+
+    #[test]
+    fn quantize_pooled_matches_python_formula() {
+        let mut d = Dpu::default();
+        let vmax = 255 * 16; // pool 4x4
+        // python: q = (sum*2*qmax + vmax) // (2*vmax)
+        for sum in [0u32, 1, 100, 2000, 4080] {
+            let want = ((sum as u64 * 30 + vmax as u64) / (2 * vmax as u64)) as u8;
+            assert_eq!(d.quantize_pooled(sum, vmax, 4).unwrap(), want);
+        }
+        assert_eq!(d.quantize_pooled(vmax, vmax, 4).unwrap(), 15);
+        assert!(d.quantize_pooled(vmax + 1, vmax, 4).is_err());
+        assert!(d.quantize_pooled(1, 0, 4).is_err());
+    }
+
+    #[test]
+    fn bitcount_shift_add() {
+        let mut d = Dpu::default();
+        assert_eq!(d.bitcount(&[0b1011, u64::MAX]), 3 + 64);
+        assert_eq!(d.shift(3, 4), 48);
+        assert_eq!(d.add(40, 2), 42);
+        assert_eq!(d.stats.bitcounts, 1);
+        assert_eq!(d.stats.shifts, 1);
+        assert_eq!(d.stats.adds, 1);
+    }
+
+    #[test]
+    fn activation_clamps_and_quantizes() {
+        let mut d = Dpu::default();
+        // scale chosen so h=100 -> 0.5 -> q=8 (floor(7.5+0.5))
+        assert_eq!(d.activation(100, 0.005, 0.0, 4), 8);
+        assert_eq!(d.activation(-50, 0.005, 0.0, 4), 0); // relu clip
+        assert_eq!(d.activation(1_000_000, 0.005, 0.0, 4), 15); // sat
+    }
+
+    #[test]
+    fn stats_merge() {
+        let mut a = DpuStats { adds: 1, ..Default::default() };
+        let b = DpuStats { adds: 2, bitcounts: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.adds, 3);
+        assert_eq!(a.bitcounts, 3);
+    }
+}

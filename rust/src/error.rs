@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the NS-LBP runtime and simulator.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Malformed or out-of-range configuration value.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// CLI usage error (unknown flag, missing value, bad subcommand).
+    #[error("usage error: {0}")]
+    Usage(String),
+
+    /// Parameter file (`*.params.bin`) parse failure.
+    #[error("params parse error: {0}")]
+    Params(String),
+
+    /// An ISA-level fault: bad opcode operands, out-of-range row address,
+    /// region protection violation.
+    #[error("isa fault: {0}")]
+    Isa(String),
+
+    /// Mapping failure: workload does not fit the sub-array regions.
+    #[error("mapping error: {0}")]
+    Mapping(String),
+
+    /// The analog circuit model was driven outside its calibrated envelope.
+    #[error("circuit model error: {0}")]
+    Circuit(String),
+
+    /// PJRT / XLA runtime failure (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator pipeline failure (worker panicked, channel closed).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,538 @@
+//! The NS-LBP instruction set (paper Table 2), assembler, and executor.
+//!
+//! NS-LBP is exposed to the programmer as a third-party accelerator with a
+//! row-granular ISA: every instruction operates on whole 256-bit rows of
+//! one computational sub-array, exploiting the single-cycle multi-row
+//! activation of §4.1.
+//!
+//! | opcode        | semantics (per bit-line i)                      |
+//! |---------------|-------------------------------------------------|
+//! | `copy`        | r2[i] = r1[i]                                   |
+//! | `ini`         | r1[i] = all-'0' or all-'1'                      |
+//! | `cmp` (xor2)  | r3[i] = r1[i] ⊕ r2[i]                           |
+//! | `search`      | r3[i] = (r1[i] == k[i])                         |
+//! | `nand3`       | r4[i] = ¬(r1[i] ∧ r2[i] ∧ r3[i])                |
+//! | `nor3`        | r4[i] = ¬(r1[i] ∨ r2[i] ∨ r3[i])                |
+//! | `carry`(maj3) | r4[i] = MAJ(r1[i], r2[i], r3[i])                |
+//! | `sum` (xor3)  | r4[i] = r1[i] ⊕ r2[i] ⊕ r3[i]                   |
+//!
+//! The [`Executor`] runs programs against a [`crate::sram::SubArray`],
+//! accumulating [`ExecStats`] (cycles, row activations, op mix) that the
+//! energy model converts to pJ/ns.  Word-parallel `u64` ops implement the
+//! 256 simultaneous bit-lines; their equivalence to the analog
+//! sense-amplifier decision path is asserted in tests against
+//! [`crate::circuit::sense`].
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::error::{Error, Result};
+use crate::sram::SubArray;
+
+/// Row address inside a sub-array.
+pub type Row = usize;
+
+/// Table 2 opcodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Opcode {
+    Copy,
+    Ini,
+    Cmp,    // xor2
+    Search, // xnor against key row
+    Nand3,
+    Nor3,
+    Carry, // maj3
+    Sum,   // xor3
+}
+
+impl Opcode {
+    pub const ALL: [Opcode; 8] = [
+        Opcode::Copy, Opcode::Ini, Opcode::Cmp, Opcode::Search,
+        Opcode::Nand3, Opcode::Nor3, Opcode::Carry, Opcode::Sum,
+    ];
+
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            Opcode::Copy => "copy",
+            Opcode::Ini => "ini",
+            Opcode::Cmp => "cmp",
+            Opcode::Search => "search",
+            Opcode::Nand3 => "nand3",
+            Opcode::Nor3 => "nor3",
+            Opcode::Carry => "carry",
+            Opcode::Sum => "sum",
+        }
+    }
+
+    pub fn from_mnemonic(s: &str) -> Option<Self> {
+        Some(match s {
+            "copy" => Opcode::Copy,
+            "ini" => Opcode::Ini,
+            "cmp" | "xor2" => Opcode::Cmp,
+            "search" => Opcode::Search,
+            "nand3" => Opcode::Nand3,
+            "nor3" => Opcode::Nor3,
+            "carry" | "maj3" => Opcode::Carry,
+            "sum" | "xor3" => Opcode::Sum,
+            _ => return None,
+        })
+    }
+
+    /// Memory cycles per instruction: compute ops resolve in a single
+    /// read cycle (the paper's headline); `copy` needs read + write;
+    /// `ini` is one write.  Every compute result is latched into `dest`
+    /// in the same cycle via the decoupled write port.
+    pub fn cycles(self) -> u64 {
+        match self {
+            Opcode::Copy => 2,
+            Opcode::Ini => 1,
+            _ => 1,
+        }
+    }
+
+    /// Number of simultaneously activated read rows.
+    pub fn activated_rows(self) -> u64 {
+        match self {
+            Opcode::Copy => 1,
+            Opcode::Ini => 0,
+            Opcode::Cmp | Opcode::Search => 2,
+            _ => 3,
+        }
+    }
+}
+
+/// Value written by `ini`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IniValue {
+    Zeros,
+    Ones,
+}
+
+/// One Table-2 instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instruction {
+    Copy { src: Row, dest: Row },
+    Ini { dest: Row, value: IniValue },
+    Cmp { src1: Row, src2: Row, dest: Row },
+    Search { src: Row, key: Row, dest: Row },
+    Nand3 { src1: Row, src2: Row, src3: Row, dest: Row },
+    Nor3 { src1: Row, src2: Row, src3: Row, dest: Row },
+    Carry { src1: Row, src2: Row, src3: Row, dest: Row },
+    Sum { src1: Row, src2: Row, src3: Row, dest: Row },
+}
+
+impl Instruction {
+    pub fn opcode(self) -> Opcode {
+        match self {
+            Instruction::Copy { .. } => Opcode::Copy,
+            Instruction::Ini { .. } => Opcode::Ini,
+            Instruction::Cmp { .. } => Opcode::Cmp,
+            Instruction::Search { .. } => Opcode::Search,
+            Instruction::Nand3 { .. } => Opcode::Nand3,
+            Instruction::Nor3 { .. } => Opcode::Nor3,
+            Instruction::Carry { .. } => Opcode::Carry,
+            Instruction::Sum { .. } => Opcode::Sum,
+        }
+    }
+}
+
+impl fmt::Display for Instruction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Instruction::Copy { src, dest } => write!(f, "copy r{src} -> r{dest}"),
+            Instruction::Ini { dest, value } => write!(
+                f,
+                "ini r{dest}, {}",
+                if value == IniValue::Ones { "ones" } else { "zeros" }
+            ),
+            Instruction::Cmp { src1, src2, dest } => {
+                write!(f, "cmp r{src1} r{src2} -> r{dest}")
+            }
+            Instruction::Search { src, key, dest } => {
+                write!(f, "search r{src} k{key} -> r{dest}")
+            }
+            Instruction::Nand3 { src1, src2, src3, dest } => {
+                write!(f, "nand3 r{src1} r{src2} r{src3} -> r{dest}")
+            }
+            Instruction::Nor3 { src1, src2, src3, dest } => {
+                write!(f, "nor3 r{src1} r{src2} r{src3} -> r{dest}")
+            }
+            Instruction::Carry { src1, src2, src3, dest } => {
+                write!(f, "carry r{src1} r{src2} r{src3} -> r{dest}")
+            }
+            Instruction::Sum { src1, src2, src3, dest } => {
+                write!(f, "sum r{src1} r{src2} r{src3} -> r{dest}")
+            }
+        }
+    }
+}
+
+/// Assembler: parse the textual form produced by `Display`.
+///
+/// Grammar per line (comments start with `;`):
+/// `copy rA -> rB` | `ini rA, ones|zeros` | `cmp rA rB -> rC`
+/// | `search rA kB -> rC` | `nand3|nor3|carry|sum rA rB rC -> rD`
+pub fn assemble(text: &str) -> Result<Vec<Instruction>> {
+    let mut prog = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split(';').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        prog.push(parse_line(line).map_err(|e| {
+            Error::Isa(format!("line {}: {e}", lineno + 1))
+        })?);
+    }
+    Ok(prog)
+}
+
+fn parse_reg(tok: &str, prefix: char) -> std::result::Result<Row, String> {
+    tok.strip_prefix(prefix)
+        .ok_or_else(|| format!("expected {prefix}N, got {tok:?}"))?
+        .parse()
+        .map_err(|_| format!("bad register number in {tok:?}"))
+}
+
+fn parse_line(line: &str) -> std::result::Result<Instruction, String> {
+    let norm = line.replace(',', " ");
+    let toks: Vec<&str> = norm.split_whitespace().collect();
+    let op = Opcode::from_mnemonic(toks[0])
+        .ok_or_else(|| format!("unknown opcode {:?}", toks[0]))?;
+    let expect_arrow = |i: usize| -> std::result::Result<(), String> {
+        if toks.get(i) != Some(&"->") {
+            return Err(format!("expected '->' at token {i}"));
+        }
+        Ok(())
+    };
+    match op {
+        Opcode::Copy => {
+            if toks.len() != 4 {
+                return Err("copy rA -> rB".into());
+            }
+            expect_arrow(2)?;
+            Ok(Instruction::Copy { src: parse_reg(toks[1], 'r')?,
+                                   dest: parse_reg(toks[3], 'r')? })
+        }
+        Opcode::Ini => {
+            if toks.len() != 3 {
+                return Err("ini rA, ones|zeros".into());
+            }
+            let value = match toks[2] {
+                "ones" => IniValue::Ones,
+                "zeros" => IniValue::Zeros,
+                other => return Err(format!("bad ini value {other:?}")),
+            };
+            Ok(Instruction::Ini { dest: parse_reg(toks[1], 'r')?, value })
+        }
+        Opcode::Cmp => {
+            if toks.len() != 5 {
+                return Err("cmp rA rB -> rC".into());
+            }
+            expect_arrow(3)?;
+            Ok(Instruction::Cmp { src1: parse_reg(toks[1], 'r')?,
+                                  src2: parse_reg(toks[2], 'r')?,
+                                  dest: parse_reg(toks[4], 'r')? })
+        }
+        Opcode::Search => {
+            if toks.len() != 5 {
+                return Err("search rA kB -> rC".into());
+            }
+            expect_arrow(3)?;
+            Ok(Instruction::Search { src: parse_reg(toks[1], 'r')?,
+                                     key: parse_reg(toks[2], 'k')?,
+                                     dest: parse_reg(toks[4], 'r')? })
+        }
+        Opcode::Nand3 | Opcode::Nor3 | Opcode::Carry | Opcode::Sum => {
+            if toks.len() != 6 {
+                return Err(format!("{} rA rB rC -> rD", op.mnemonic()));
+            }
+            expect_arrow(4)?;
+            let (src1, src2, src3, dest) = (
+                parse_reg(toks[1], 'r')?,
+                parse_reg(toks[2], 'r')?,
+                parse_reg(toks[3], 'r')?,
+                parse_reg(toks[5], 'r')?,
+            );
+            Ok(match op {
+                Opcode::Nand3 => Instruction::Nand3 { src1, src2, src3, dest },
+                Opcode::Nor3 => Instruction::Nor3 { src1, src2, src3, dest },
+                Opcode::Carry => Instruction::Carry { src1, src2, src3, dest },
+                Opcode::Sum => Instruction::Sum { src1, src2, src3, dest },
+                _ => unreachable!(),
+            })
+        }
+    }
+}
+
+/// Execution statistics — the raw material of the energy/latency model.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    pub instructions: u64,
+    pub cycles: u64,
+    /// Single-row read accesses (standard decoupled-read).
+    pub row_reads: u64,
+    /// Row write-backs.
+    pub row_writes: u64,
+    /// Multi-row compute activations (2- or 3-row).
+    pub compute_ops: u64,
+    /// Per-opcode instruction counts.
+    pub by_opcode: BTreeMap<Opcode, u64>,
+}
+
+impl ExecStats {
+    pub fn merge(&mut self, other: &ExecStats) {
+        self.instructions += other.instructions;
+        self.cycles += other.cycles;
+        self.row_reads += other.row_reads;
+        self.row_writes += other.row_writes;
+        self.compute_ops += other.compute_ops;
+        for (op, n) in &other.by_opcode {
+            *self.by_opcode.entry(*op).or_default() += n;
+        }
+    }
+
+    fn record(&mut self, op: Opcode) {
+        self.instructions += 1;
+        self.cycles += op.cycles();
+        *self.by_opcode.entry(op).or_default() += 1;
+        match op {
+            Opcode::Copy => {
+                self.row_reads += 1;
+                self.row_writes += 1;
+            }
+            Opcode::Ini => self.row_writes += 1,
+            _ => {
+                self.compute_ops += 1;
+                self.row_writes += 1; // result latched into dest
+            }
+        }
+    }
+
+    /// Count one Ctrl-side single-row read (the `NS-LBP_Mem` access of
+    /// Algorithm 1).
+    pub fn record_ctrl_read(&mut self) {
+        self.row_reads += 1;
+        self.cycles += 1;
+    }
+}
+
+/// Executes instructions against one sub-array.
+pub struct Executor<'a> {
+    pub array: &'a mut SubArray,
+    pub stats: ExecStats,
+}
+
+impl<'a> Executor<'a> {
+    pub fn new(array: &'a mut SubArray) -> Self {
+        Self { array, stats: ExecStats::default() }
+    }
+
+    /// Execute a single instruction.
+    ///
+    /// Hot path: all ops run allocation-free through the in-place row
+    /// helpers (§Perf — see EXPERIMENTS.md).
+    pub fn exec(&mut self, inst: Instruction) -> Result<()> {
+        match inst {
+            Instruction::Copy { src, dest } => {
+                self.array.copy_row(src, dest)?;
+            }
+            Instruction::Ini { dest, value } => {
+                self.array.fill_row(dest, value == IniValue::Ones)?;
+            }
+            Instruction::Cmp { src1, src2, dest } => {
+                self.array.op2_into(src1, src2, dest, |a, b| a ^ b)?;
+            }
+            Instruction::Search { src, key, dest } => {
+                self.array.op2_into(src, key, dest, |a, b| !(a ^ b))?;
+            }
+            Instruction::Nand3 { src1, src2, src3, dest } => {
+                self.array
+                    .op3_into(src1, src2, src3, dest, |a, b, c| !(a & b & c))?;
+            }
+            Instruction::Nor3 { src1, src2, src3, dest } => {
+                self.array
+                    .op3_into(src1, src2, src3, dest, |a, b, c| !(a | b | c))?;
+            }
+            Instruction::Carry { src1, src2, src3, dest } => {
+                self.array.op3_into(src1, src2, src3, dest, |a, b, c| {
+                    (a & b) | (a & c) | (b & c)
+                })?;
+            }
+            Instruction::Sum { src1, src2, src3, dest } => {
+                self.array
+                    .op3_into(src1, src2, src3, dest, |a, b, c| a ^ b ^ c)?;
+            }
+        }
+        self.stats.record(inst.opcode());
+        Ok(())
+    }
+
+    /// Execute a whole program.
+    pub fn run(&mut self, program: &[Instruction]) -> Result<()> {
+        for &inst in program {
+            self.exec(inst)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::circuit::{ideal_outputs, majority3};
+
+    fn setup(rows: &[(usize, u64)]) -> SubArray {
+        let mut sa = SubArray::new(16, 128);
+        for &(r, pattern) in rows {
+            sa.write_row(r, &[pattern, !pattern]).unwrap();
+        }
+        sa
+    }
+
+    #[test]
+    fn copy_and_ini() {
+        let mut sa = setup(&[(0, 0xDEAD_BEEF_0123_4567)]);
+        let mut ex = Executor::new(&mut sa);
+        ex.exec(Instruction::Copy { src: 0, dest: 5 }).unwrap();
+        ex.exec(Instruction::Ini { dest: 6, value: IniValue::Ones }).unwrap();
+        ex.exec(Instruction::Ini { dest: 7, value: IniValue::Zeros }).unwrap();
+        assert_eq!(ex.array.read_row(5).unwrap(), ex.array.read_row(0).unwrap());
+        assert!(ex.array.read_row(6).unwrap().iter().all(|&w| w == u64::MAX));
+        assert!(ex.array.read_row(7).unwrap().iter().all(|&w| w == 0));
+        assert_eq!(ex.stats.instructions, 3);
+        assert_eq!(ex.stats.cycles, 2 + 1 + 1);
+    }
+
+    #[test]
+    fn all_boolean_ops_match_gate_semantics() {
+        let a = 0b1100u64;
+        let b = 0b1010u64;
+        let c = 0b1111_0000u64;
+        let mut sa = SubArray::new(16, 64);
+        sa.write_row(0, &[a]).unwrap();
+        sa.write_row(1, &[b]).unwrap();
+        sa.write_row(2, &[c]).unwrap();
+        let mut ex = Executor::new(&mut sa);
+        let cases: [(Instruction, u64, Row); 6] = [
+            (Instruction::Cmp { src1: 0, src2: 1, dest: 8 }, a ^ b, 8),
+            (Instruction::Search { src: 0, key: 1, dest: 9 }, !(a ^ b), 9),
+            (Instruction::Nand3 { src1: 0, src2: 1, src3: 2, dest: 10 },
+             !(a & b & c), 10),
+            (Instruction::Nor3 { src1: 0, src2: 1, src3: 2, dest: 11 },
+             !(a | b | c), 11),
+            (Instruction::Carry { src1: 0, src2: 1, src3: 2, dest: 12 },
+             (a & b) | (a & c) | (b & c), 12),
+            (Instruction::Sum { src1: 0, src2: 1, src3: 2, dest: 13 },
+             a ^ b ^ c, 13),
+        ];
+        for (inst, want, dest) in cases {
+            ex.exec(inst).unwrap();
+            assert_eq!(ex.array.read_row(dest).unwrap()[0], want, "{inst}");
+        }
+    }
+
+    #[test]
+    fn executor_matches_analog_sense_path() {
+        // For every 3-bit memory combination, the word-parallel executor
+        // result must equal the circuit model's SA decision.
+        for bits in 0u8..8 {
+            let (a, b, c) = (bits & 1 == 1, bits & 2 == 2, bits & 4 == 4);
+            let ones = a as usize + b as usize + c as usize;
+            let sa_out = ideal_outputs(ones);
+            let mut sa = SubArray::new(8, 64);
+            sa.write_row(0, &[a as u64]).unwrap();
+            sa.write_row(1, &[b as u64]).unwrap();
+            sa.write_row(2, &[c as u64]).unwrap();
+            let mut ex = Executor::new(&mut sa);
+            ex.exec(Instruction::Sum { src1: 0, src2: 1, src3: 2, dest: 4 })
+                .unwrap();
+            ex.exec(Instruction::Carry { src1: 0, src2: 1, src3: 2, dest: 5 })
+                .unwrap();
+            ex.exec(Instruction::Nand3 { src1: 0, src2: 1, src3: 2, dest: 6 })
+                .unwrap();
+            ex.exec(Instruction::Nor3 { src1: 0, src2: 1, src3: 2, dest: 7 })
+                .unwrap();
+            assert_eq!(ex.array.get(4, 0).unwrap(), sa_out.xor3());
+            assert_eq!(ex.array.get(5, 0).unwrap(), sa_out.carry());
+            assert_eq!(ex.array.get(6, 0).unwrap(), sa_out.nand3());
+            assert_eq!(ex.array.get(7, 0).unwrap(), sa_out.nor3());
+            assert_eq!(sa_out.carry(), majority3(a, b, c));
+        }
+    }
+
+    #[test]
+    fn full_adder_in_two_cycles() {
+        // sum + carry of three rows — the paper's "full adder in one single
+        // memory cycle" per output.
+        let mut sa = SubArray::new(8, 64);
+        sa.write_row(0, &[0b0110]).unwrap();
+        sa.write_row(1, &[0b0101]).unwrap();
+        sa.write_row(2, &[0b0011]).unwrap();
+        let mut ex = Executor::new(&mut sa);
+        ex.run(&assemble("sum r0 r1 r2 -> r4\ncarry r0 r1 r2 -> r5").unwrap())
+            .unwrap();
+        assert_eq!(ex.array.read_row(4).unwrap()[0], 0b0110 ^ 0b0101 ^ 0b0011);
+        assert_eq!(ex.stats.cycles, 2);
+    }
+
+    #[test]
+    fn assembler_roundtrip() {
+        let prog = vec![
+            Instruction::Copy { src: 1, dest: 2 },
+            Instruction::Ini { dest: 3, value: IniValue::Ones },
+            Instruction::Cmp { src1: 0, src2: 1, dest: 4 },
+            Instruction::Search { src: 0, key: 9, dest: 5 },
+            Instruction::Nand3 { src1: 0, src2: 1, src3: 2, dest: 6 },
+            Instruction::Nor3 { src1: 0, src2: 1, src3: 2, dest: 7 },
+            Instruction::Carry { src1: 0, src2: 1, src3: 2, dest: 8 },
+            Instruction::Sum { src1: 0, src2: 1, src3: 2, dest: 9 },
+        ];
+        let text: String = prog.iter().map(|i| format!("{i}\n")).collect();
+        let back = assemble(&text).unwrap();
+        assert_eq!(back, prog);
+    }
+
+    #[test]
+    fn assembler_errors_carry_line_numbers() {
+        let err = assemble("copy r0 -> r1\nbogus r1 r2").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(assemble("cmp r0 r1 r2").is_err());
+        assert!(assemble("ini r0, maybe").is_err());
+        assert!(assemble("copy r0 r1").is_err()); // missing arrow
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let prog = assemble("; header\n\ncopy r0 -> r1 ; trailing\n").unwrap();
+        assert_eq!(prog.len(), 1);
+    }
+
+    #[test]
+    fn out_of_range_row_faults() {
+        let mut sa = SubArray::new(4, 64);
+        let mut ex = Executor::new(&mut sa);
+        assert!(ex.exec(Instruction::Copy { src: 0, dest: 4 }).is_err());
+        assert!(ex
+            .exec(Instruction::Sum { src1: 0, src2: 1, src3: 9, dest: 2 })
+            .is_err());
+    }
+
+    #[test]
+    fn stats_accounting() {
+        let mut sa = SubArray::new(8, 64);
+        let mut ex = Executor::new(&mut sa);
+        ex.run(&assemble(
+            "ini r0, ones\nini r1, zeros\ncmp r0 r1 -> r2\ncopy r2 -> r3",
+        ).unwrap())
+            .unwrap();
+        assert_eq!(ex.stats.instructions, 4);
+        assert_eq!(ex.stats.row_writes, 2 + 1 + 1); // 2 ini + cmp latch + copy
+        assert_eq!(ex.stats.row_reads, 1); // copy
+        assert_eq!(ex.stats.compute_ops, 1);
+        assert_eq!(ex.stats.by_opcode[&Opcode::Ini], 2);
+        let mut merged = ExecStats::default();
+        merged.merge(&ex.stats);
+        merged.merge(&ex.stats);
+        assert_eq!(merged.instructions, 8);
+    }
+}

@@ -1,0 +1,224 @@
+//! Algorithm 1: parallel bit-wise in-memory LBP comparison.
+//!
+//! Converts the software-sequential `pixel >= pivot` comparison into
+//! bit-plane-parallel XOR passes over the mapped sub-array: starting from
+//! the MSB plane, `NS-LBP_cmp` XORs the pixel plane with the pivot plane
+//! for all 256 lanes at once; lanes whose XOR is 1 are *decided* at this
+//! plane (the pixel bit itself tells the order: pivot bit 0 ⇒ pixel >
+//! pivot ⇒ comparator output 1), remaining lanes continue to the next
+//! plane; lanes equal through all planes output 1 (`>=` convention).
+//!
+//! The controller bookkeeping (`decided` mask, LBP update) is itself done
+//! with in-memory row ops, composing 2-input AND/OR/NOT from the Table-2
+//! primitives and the constant rows:
+//! `AND2(a,b) = MAJ3(a,b,0)`, `OR2(a,b) = MAJ3(a,b,1)`, `NOT(a) = a ⊕ 1`.
+//!
+//! Cost: 7 instructions per bit-plane + 2 finalization ops + the optional
+//! early-exit Ctrl read per plane — constant-time in the bit width, which
+//! is the paper's headline property ("constant search time determined by
+//! the bit length").
+
+use crate::error::Result;
+use crate::isa::{Executor, IniValue, Instruction};
+use crate::mapping::{LbpSubarrayMap, ResvRow};
+
+/// Result of one in-memory comparison pass.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompareOutcome {
+    /// Comparator bits per lane: `pixel >= pivot`.
+    pub bits: Vec<bool>,
+    /// Bit-planes actually processed (early exit can cut this short).
+    pub planes_processed: usize,
+}
+
+/// Scalar oracle: what Algorithm 1 must compute per lane.
+pub fn compare_ref(pairs: &[(u8, u8)]) -> Vec<bool> {
+    pairs.iter().map(|&(p, c)| p >= c).collect()
+}
+
+/// Run Algorithm 1 on lanes previously loaded into `slot` (see
+/// [`LbpSubarrayMap::load_lanes`]).
+///
+/// * `lanes` — number of valid lanes in the slot.
+/// * `skip_lsb_planes` — the sensor-side Ap-LBP approximation: planes the
+///   ADC never converted are all-zero on both operands and are skipped
+///   outright (no compare issued).
+/// * `early_exit` — let the Ctrl stop once every lane is decided (costs
+///   one Ctrl read per plane, saves the remaining planes).
+pub fn parallel_compare(ex: &mut Executor<'_>, map: &LbpSubarrayMap,
+                        slot: usize, lanes: usize, skip_lsb_planes: usize,
+                        early_exit: bool) -> Result<CompareOutcome> {
+    let result = map.resv(ResvRow::Result);
+    let lbp = map.resv(ResvRow::Lbp);
+    let zero = map.resv(ResvRow::Zero);
+    let one = map.resv(ResvRow::One);
+    let decided = map.resv(ResvRow::Decided);
+    let scratch = map.resv(ResvRow::Scratch);
+    let scratch2 = map.resv(ResvRow::Scratch2);
+
+    // constants + bookkeeping init
+    ex.exec(Instruction::Ini { dest: zero, value: IniValue::Zeros })?;
+    ex.exec(Instruction::Ini { dest: one, value: IniValue::Ones })?;
+    ex.exec(Instruction::Ini { dest: lbp, value: IniValue::Zeros })?;
+    ex.exec(Instruction::Ini { dest: decided, value: IniValue::Zeros })?;
+
+    let mut planes = 0;
+    for bit in (skip_lsb_planes..map.bits).rev() {
+        let p_row = map.pixel_bit_row(slot, bit)?;
+        let c_row = map.pivot_bit_row(slot, bit)?;
+        // 1. Result_array <- P_i XOR C_i  (the NS-LBP_cmp hot op)
+        ex.exec(Instruction::Cmp { src1: p_row, src2: c_row, dest: result })?;
+        // 2. scratch <- NOT decided
+        ex.exec(Instruction::Cmp { src1: decided, src2: one, dest: scratch })?;
+        // 3. scratch2 <- Result AND NOT-decided   (newly decided lanes)
+        ex.exec(Instruction::Carry { src1: result, src2: scratch, src3: zero,
+                                     dest: scratch2 })?;
+        // 4. scratch <- NOT C_i   (pivot bit 0 ⇒ pixel wins ⇒ LBP bit 1)
+        ex.exec(Instruction::Cmp { src1: c_row, src2: one, dest: scratch })?;
+        // 5. scratch <- newly AND NOT-C_i
+        ex.exec(Instruction::Carry { src1: scratch2, src2: scratch, src3: zero,
+                                     dest: scratch })?;
+        // 6. LBP_array |= scratch
+        ex.exec(Instruction::Carry { src1: lbp, src2: scratch, src3: one,
+                                     dest: lbp })?;
+        // 7. decided |= newly
+        ex.exec(Instruction::Carry { src1: decided, src2: scratch2, src3: one,
+                                     dest: decided })?;
+        planes += 1;
+
+        if early_exit {
+            // Ctrl reads the decided mask (NS-LBP_Mem) and breaks when all
+            // valid lanes are resolved.
+            ex.stats.record_ctrl_read();
+            let words = ex.array.row_words(decided)?; // no-copy borrow
+            let all_decided = (0..lanes)
+                .all(|l| words[l / 64] >> (l % 64) & 1 == 1);
+            if all_decided {
+                break;
+            }
+        }
+    }
+
+    // equality lanes (never decided) output 1: LBP |= NOT decided
+    ex.exec(Instruction::Cmp { src1: decided, src2: one, dest: scratch })?;
+    ex.exec(Instruction::Carry { src1: lbp, src2: scratch, src3: one,
+                                 dest: lbp })?;
+
+    let bits = map.read_resv_bits(ex.array, ResvRow::Lbp, lanes)?;
+    ex.stats.record_ctrl_read();
+    Ok(CompareOutcome { bits, planes_processed: planes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Executor;
+    use crate::sram::{RegionLayout, SubArray};
+
+    fn map() -> LbpSubarrayMap {
+        LbpSubarrayMap::new(RegionLayout::default(), 8).unwrap()
+    }
+
+    fn run_pairs(pairs: &[(u8, u8)], skip: usize, early: bool) -> CompareOutcome {
+        let m = map();
+        let mut sa = SubArray::new(256, 256);
+        m.load_lanes(&mut sa, 0, pairs).unwrap();
+        let mut ex = Executor::new(&mut sa);
+        parallel_compare(&mut ex, &m, 0, pairs.len(), skip, early).unwrap()
+    }
+
+    #[test]
+    fn matches_scalar_oracle_exhaustive_edges() {
+        let pairs: Vec<(u8, u8)> = vec![
+            (0, 0), (0, 255), (255, 0), (255, 255), (128, 127), (127, 128),
+            (1, 0), (0, 1), (200, 200), (73, 74),
+        ];
+        let got = run_pairs(&pairs, 0, false);
+        assert_eq!(got.bits, compare_ref(&pairs));
+        assert_eq!(got.planes_processed, 8);
+    }
+
+    #[test]
+    fn matches_oracle_randomized_full_width() {
+        let mut rng = crate::rng::Xoshiro256::new(0xC0FFEE);
+        for _ in 0..20 {
+            let n = rng.range_i64(1, 256) as usize;
+            let pairs: Vec<(u8, u8)> = (0..n)
+                .map(|_| (rng.next_u64() as u8, rng.next_u64() as u8))
+                .collect();
+            for early in [false, true] {
+                let got = run_pairs(&pairs, 0, early);
+                assert_eq!(got.bits, compare_ref(&pairs));
+            }
+        }
+    }
+
+    #[test]
+    fn early_exit_cuts_planes_when_msb_decides() {
+        // all lanes differ at the MSB -> one plane suffices
+        let pairs: Vec<(u8, u8)> = (0..256).map(|_| (0x80u8, 0x00u8)).collect();
+        let got = run_pairs(&pairs, 0, true);
+        assert_eq!(got.planes_processed, 1);
+        assert!(got.bits.iter().all(|&b| b));
+        // without early exit all 8 planes run
+        let got = run_pairs(&pairs, 0, false);
+        assert_eq!(got.planes_processed, 8);
+    }
+
+    #[test]
+    fn skip_lsb_planes_matches_masked_compare() {
+        // with the bottom 2 ADC bits never converted, both operands arrive
+        // masked — the in-memory result equals comparing masked values.
+        let mut rng = crate::rng::Xoshiro256::new(42);
+        let pairs: Vec<(u8, u8)> = (0..256)
+            .map(|_| ((rng.next_u64() as u8) & 0xFC, (rng.next_u64() as u8) & 0xFC))
+            .collect();
+        let got = run_pairs(&pairs, 2, false);
+        assert_eq!(got.bits, compare_ref(&pairs));
+        assert_eq!(got.planes_processed, 6);
+    }
+
+    #[test]
+    fn constant_time_in_bit_width() {
+        // instruction count must not depend on data (no early exit)
+        let all_equal = vec![(7u8, 7u8); 64];
+        let all_diff = vec![(255u8, 0u8); 64];
+        let m = map();
+        let mut counts = Vec::new();
+        for pairs in [&all_equal, &all_diff] {
+            let mut sa = SubArray::new(256, 256);
+            m.load_lanes(&mut sa, 0, pairs).unwrap();
+            let mut ex = Executor::new(&mut sa);
+            parallel_compare(&mut ex, &m, 0, pairs.len(), 0, false).unwrap();
+            counts.push(ex.stats.instructions);
+        }
+        assert_eq!(counts[0], counts[1]);
+    }
+
+    #[test]
+    fn instruction_budget_per_plane() {
+        // 4 init + 7 per plane + 2 finalize (no early exit)
+        let pairs = vec![(1u8, 2u8); 16];
+        let m = map();
+        let mut sa = SubArray::new(256, 256);
+        m.load_lanes(&mut sa, 0, &pairs).unwrap();
+        let mut ex = Executor::new(&mut sa);
+        parallel_compare(&mut ex, &m, 0, pairs.len(), 0, false).unwrap();
+        assert_eq!(ex.stats.instructions, 4 + 7 * 8 + 2);
+    }
+
+    #[test]
+    fn multiple_slots_independent() {
+        let m = map();
+        let mut sa = SubArray::new(256, 256);
+        let a: Vec<(u8, u8)> = (0..100).map(|i| (i as u8, 50)).collect();
+        let b: Vec<(u8, u8)> = (0..100).map(|i| (200, i as u8)).collect();
+        m.load_lanes(&mut sa, 0, &a).unwrap();
+        m.load_lanes(&mut sa, 5, &b).unwrap();
+        let mut ex = Executor::new(&mut sa);
+        let ra = parallel_compare(&mut ex, &m, 0, a.len(), 0, false).unwrap();
+        assert_eq!(ra.bits, compare_ref(&a));
+        let rb = parallel_compare(&mut ex, &m, 5, b.len(), 0, false).unwrap();
+        assert_eq!(rb.bits, compare_ref(&b));
+    }
+}

@@ -1,0 +1,9 @@
+//! The paper's LBP computation layer: the parallel in-memory comparison
+//! algorithm (Algorithm 1) and the Ap-LBP/LBPNet operation-count models
+//! (Eqs. 1–2, Table 1).
+
+pub mod algorithm;
+pub mod opcount;
+
+pub use algorithm::{compare_ref, parallel_compare, CompareOutcome};
+pub use opcount::{ApLbpOps, CnnCost, LayerShape, LbpCost, OpCounts};

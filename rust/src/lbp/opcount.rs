@@ -1,0 +1,273 @@
+//! Operation-count models: Eqs. 1–2 and Table 1 of the paper.
+//!
+//! These analytic counts drive the Fig. 4 energy/accuracy sweep, the
+//! Fig. 11 cross-design comparison and the Table 1 hardware-cost analysis.
+//! Symbols follow the paper: `e` = LBP kernel sampling points, `ch` =
+//! channels, `m` = mapping-table elements, `apx` = approximated bits;
+//! CNN side: `p×q` = ofmap dims, `r×s` = kernel dims.
+
+/// Per-output-pixel operation counts (reads / comparisons / writes).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub reads: u64,
+    pub comparisons: u64,
+    pub writes: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.reads + self.comparisons + self.writes
+    }
+
+    pub fn scale(&self, k: u64) -> OpCounts {
+        OpCounts {
+            reads: self.reads * k,
+            comparisons: self.comparisons * k,
+            writes: self.writes * k,
+        }
+    }
+
+    pub fn add(&self, o: &OpCounts) -> OpCounts {
+        OpCounts {
+            reads: self.reads + o.reads,
+            comparisons: self.comparisons + o.comparisons,
+            writes: self.writes + o.writes,
+        }
+    }
+}
+
+/// LBP-layer cost parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LbpCost {
+    /// e: sampling points per LBP kernel.
+    pub e: u64,
+    /// ch: number of channels.
+    pub ch: u64,
+    /// m: mapping-table elements.
+    pub m: u64,
+    /// apx: approximated bits (0 for LBPNet).
+    pub apx: u64,
+}
+
+impl LbpCost {
+    /// Eq. 1 — per-output-pixel ops for the exact LBPNet:
+    /// reads = e·ch + m, comparisons = (e−1)·ch, writes = (e−1)·ch + m.
+    pub fn lbpnet_ops(&self) -> OpCounts {
+        OpCounts {
+            reads: self.e * self.ch + self.m,
+            comparisons: (self.e - 1) * self.ch,
+            writes: (self.e - 1) * self.ch + self.m,
+        }
+    }
+
+    /// Eq. 2 — per-output-pixel ops for Ap-LBP with `apx` approximated bits:
+    /// reads = (e−apx)·ch + m − apx, comparisons = (e−apx−1)·ch,
+    /// writes = (e−apx−1)·ch + m − apx.
+    pub fn aplbp_ops(&self) -> OpCounts {
+        let ea = self.e.saturating_sub(self.apx);
+        OpCounts {
+            reads: ea * self.ch + self.m.saturating_sub(self.apx),
+            comparisons: ea.saturating_sub(1) * self.ch,
+            writes: ea.saturating_sub(1) * self.ch
+                + self.m.saturating_sub(self.apx),
+        }
+    }
+
+    /// Fractional savings of Ap-LBP over LBPNet (total ops).
+    pub fn savings(&self) -> f64 {
+        let base = self.lbpnet_ops().total() as f64;
+        let apx = self.aplbp_ops().total() as f64;
+        1.0 - apx / base
+    }
+}
+
+/// Convolution/LBP layer shape for the Table 1 comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerShape {
+    /// ofmap spatial dims p × q.
+    pub p: u64,
+    pub q: u64,
+    /// channels.
+    pub ch: u64,
+    /// kernel spatial dims r × s (CNN only).
+    pub r: u64,
+    pub s: u64,
+}
+
+/// Table 1 rows: computational + memory cost of a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CnnCost {
+    /// O(N²) multiplications.
+    pub muls: u64,
+    /// O(N) additions/subtractions/comparisons.
+    pub adds: u64,
+    /// Memory cost (parameter/access footprint).
+    pub memory: u64,
+}
+
+impl LayerShape {
+    /// Table 1, CNN row: mul = add = p·q·ch·r·s, memory = p·q·r·s.
+    pub fn cnn_cost(&self) -> CnnCost {
+        let mac = self.p * self.q * self.ch * self.r * self.s;
+        CnnCost { muls: mac, adds: mac, memory: self.p * self.q * self.r * self.s }
+    }
+
+    /// Table 1, Ap-LBP row: mul = 0, cmp = ch·p·q·(e−apx),
+    /// memory = p·q·(e−apx) + (m−apx).
+    pub fn aplbp_cost(&self, e: u64, m: u64, apx: u64) -> CnnCost {
+        let ea = e.saturating_sub(apx);
+        CnnCost {
+            muls: 0,
+            adds: self.ch * self.p * self.q * ea,
+            memory: self.p * self.q * ea + m.saturating_sub(apx),
+        }
+    }
+}
+
+/// Whole-network op totals for an Ap-LBP configuration (all LBP layers),
+/// mirroring `python/compile/model.py::ApLbpConfig`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ApLbpOps {
+    pub height: u64,
+    pub width: u64,
+    pub in_channels: u64,
+    pub n_lbp_layers: u64,
+    pub kernels_per_layer: u64,
+    pub e: u64,
+    pub m: u64,
+    pub apx: u64,
+}
+
+impl ApLbpOps {
+    /// Paper §6.5 network shapes.
+    pub fn for_dataset(dataset: &str, apx: u64) -> Option<Self> {
+        match dataset {
+            "mnist" | "fashionmnist" => Some(Self {
+                height: 28, width: 28, in_channels: 1, n_lbp_layers: 3,
+                kernels_per_layer: 8, e: 8, m: 8, apx,
+            }),
+            "svhn" => Some(Self {
+                height: 32, width: 32, in_channels: 3, n_lbp_layers: 8,
+                kernels_per_layer: 8, e: 8, m: 8, apx,
+            }),
+            _ => None,
+        }
+    }
+
+    /// Channel count entering LBP layer `l` (joint blocks grow it).
+    pub fn channels_into(&self, layer: u64) -> u64 {
+        self.in_channels + layer * self.kernels_per_layer
+    }
+
+    /// Total per-image op counts across all LBP layers, Ap-LBP (Eq. 2).
+    pub fn total_aplbp(&self) -> OpCounts {
+        self.total_with(|cost| cost.aplbp_ops())
+    }
+
+    /// Total per-image op counts across all LBP layers, exact LBPNet (Eq. 1).
+    pub fn total_lbpnet(&self) -> OpCounts {
+        // LBPNet = apx 0
+        let exact = Self { apx: 0, ..*self };
+        exact.total_with(|cost| cost.lbpnet_ops())
+    }
+
+    fn total_with(&self, f: impl Fn(&LbpCost) -> OpCounts) -> OpCounts {
+        let mut total = OpCounts::default();
+        let pixels = self.height * self.width;
+        for l in 0..self.n_lbp_layers {
+            let cost = LbpCost {
+                e: self.e,
+                ch: self.channels_into(l),
+                m: self.m,
+                apx: self.apx,
+            };
+            // per output pixel, per kernel
+            let per_pixel = f(&cost);
+            total = total.add(&per_pixel.scale(pixels * self.kernels_per_layer));
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_eq2_paper_example() {
+        // Fig. 3(b) worked example: "the original LBPNet implementation
+        // requires 8 comparisons, 14 read and 12 write operations; using
+        // Ap-LBP ... 6, 11, and 9 comparisons, read and write".
+        // With e = 5 samplings, ch = 2 (channels A and B), m = 4 mapping
+        // elements, apx = 1:
+        let c = LbpCost { e: 5, ch: 2, m: 4, apx: 1 };
+        let lbpnet = c.lbpnet_ops();
+        assert_eq!(lbpnet.reads, 14);       // 5·2 + 4
+        assert_eq!(lbpnet.comparisons, 8);  // (5−1)·2
+        assert_eq!(lbpnet.writes, 12);      // (5−1)·2 + 4
+        let ap = c.aplbp_ops();
+        assert_eq!(ap.reads, 11);           // (5−1)·2 + 4−1
+        assert_eq!(ap.comparisons, 6);      // (5−1−1)·2
+        assert_eq!(ap.writes, 9);           // (5−1−1)·2 + 4−1
+    }
+
+    #[test]
+    fn aplbp_equals_lbpnet_at_apx0() {
+        let c = LbpCost { e: 8, ch: 9, m: 8, apx: 0 };
+        assert_eq!(c.lbpnet_ops(), c.aplbp_ops());
+        assert_eq!(c.savings(), 0.0);
+    }
+
+    #[test]
+    fn savings_monotone_in_apx() {
+        let mut prev = -1.0;
+        for apx in 0..5 {
+            let c = LbpCost { e: 8, ch: 9, m: 8, apx };
+            let s = c.savings();
+            assert!(s > prev, "apx={apx}: {s} <= {prev}");
+            assert!((0.0..1.0).contains(&s));
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn table1_cnn_vs_aplbp() {
+        let shape = LayerShape { p: 28, q: 28, ch: 9, r: 3, s: 3 };
+        let cnn = shape.cnn_cost();
+        assert_eq!(cnn.muls, 28 * 28 * 9 * 9);
+        assert_eq!(cnn.adds, cnn.muls);
+        assert_eq!(cnn.memory, 28 * 28 * 9);
+        let ap = shape.aplbp_cost(8, 8, 2);
+        assert_eq!(ap.muls, 0);
+        assert_eq!(ap.adds, 9 * 28 * 28 * 6);
+        assert_eq!(ap.memory, 28 * 28 * 6 + 6);
+        // the paper's point: Ap-LBP removes all O(N²) multiplications
+        assert!(ap.adds < cnn.adds + cnn.muls);
+    }
+
+    #[test]
+    fn network_totals_layers_grow_with_joint() {
+        let net = ApLbpOps::for_dataset("mnist", 2).unwrap();
+        assert_eq!(net.channels_into(0), 1);
+        assert_eq!(net.channels_into(1), 9);
+        assert_eq!(net.channels_into(2), 17);
+        let ap = net.total_aplbp();
+        let lbp = net.total_lbpnet();
+        assert!(ap.total() < lbp.total());
+        // svhn is the bigger network
+        let svhn = ApLbpOps::for_dataset("svhn", 2).unwrap();
+        assert!(svhn.total_aplbp().total() > ap.total());
+        assert!(ApLbpOps::for_dataset("cifar", 0).is_none());
+    }
+
+    #[test]
+    fn comparison_reduction_ratio_sane() {
+        // paper Fig. 4: apx=2 of 4 mapping bits ⇒ ~42% LBP-layer energy
+        // saving; the op-count reduction must land in a comparable band.
+        let net = ApLbpOps::for_dataset("mnist", 2).unwrap();
+        let ap = net.total_aplbp().total() as f64;
+        let lbp = net.total_lbpnet().total() as f64;
+        let saving = 1.0 - ap / lbp;
+        assert!((0.15..0.6).contains(&saving), "saving {saving}");
+    }
+}

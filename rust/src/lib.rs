@@ -1,0 +1,75 @@
+//! # NS-LBP: near-sensor processing-in-SRAM accelerator for Ap-LBP networks
+//!
+//! Full-system reproduction of *"A Near-Sensor Processing Accelerator for
+//! Approximate Local Binary Pattern Networks"* (Angizi et al., 2022) as the
+//! Layer-3 runtime of a three-layer Rust + JAX + Pallas stack (DESIGN.md).
+//!
+//! Module map (bottom-up):
+//!
+//! * [`rng`], [`testing`], [`config`], [`cli`], [`bench_harness`] — offline
+//!   substrate (PRNG, property tests, config/CLI parsing, bench statistics);
+//!   crates.io is unreachable in this environment, so these replace
+//!   rand/proptest/serde/clap/criterion.
+//! * [`circuit`] — behavioral analog model of the 8T sub-array: RBL
+//!   discharge, the reconfigurable 3-reference sense amplifier, the
+//!   capacitive MAJ/XOR3 generator, and Monte-Carlo variation (paper §4.1,
+//!   Figs. 5, 9, 10).
+//! * [`sram`] — the memory geometry: 256×256 computational sub-arrays →
+//!   16 KB mats → 32 KB banks → the 2.5 MB near-sensor cache slice, plus the
+//!   P/C/Resv/W/I region split (paper Figs. 5a–c, 6a).
+//! * [`isa`] — the NS-LBP instruction set of Table 2 (copy/ini/cmp/search/
+//!   nand3/nor3/maj3/xor3), an assembler, and a trace-collecting executor.
+//! * [`lbp`] — the parallel in-memory LBP algorithm (Algorithm 1), the PAC
+//!   approximation accounting, and the op-count formulas of Eqs. 1–2.
+//! * [`mapping`] — correlated data partitioning of pixels/pivots into
+//!   sub-array regions (paper §5.1, Fig. 6).
+//! * [`mlp`] — bit-serial in-memory MLP: AND / bitcount / shift (paper §5.2,
+//!   Fig. 7).
+//! * [`dpu`] — the digital processing unit: quantizer, activation,
+//!   bit-counter, shifter, adder tree.
+//! * [`sensor`] — rolling-shutter CMOS sensor front-end with CDS and the
+//!   LSB-skipping dual-mode ADC (paper §4.1).
+//! * [`energy`] — the Cacti-like timing/energy/area model calibrated to the
+//!   paper's 65 nm post-layout numbers (§6.1, Table 3).
+//! * [`params`], [`model`] — the Ap-LBP network parameters (read from
+//!   `artifacts/*.params.bin`) and a bit-exact integer functional model that
+//!   mirrors `python/compile/model.py`.
+//! * [`baselines`] — analytic cost models for the comparison systems of
+//!   Fig. 11 (8-bit CNN, LBCNN, LBPNet on the same cache substrate).
+//! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt` (the
+//!   AOT-lowered JAX/Pallas graphs) and executes them on the request path.
+//! * [`coordinator`] — the near-sensor pipeline: sensor → mapper → in-memory
+//!   execution → DPU → classification, with worker threads per bank and a
+//!   golden-model cross-check against the PJRT path.
+//!
+//! Python appears only at build time (`make artifacts`); this crate is
+//! self-contained at runtime.
+
+pub mod bench_harness;
+pub mod baselines;
+pub mod circuit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dpu;
+pub mod energy;
+pub mod error;
+pub mod isa;
+pub mod lbp;
+pub mod mapping;
+pub mod mlp;
+pub mod model;
+pub mod params;
+pub mod rng;
+pub mod runtime;
+pub mod sensor;
+pub mod sram;
+pub mod testing;
+
+pub use error::{Error, Result};
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default artifacts directory, relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";

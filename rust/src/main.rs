@@ -1,0 +1,238 @@
+//! `ns-lbp` — the NS-LBP near-sensor accelerator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!
+//! * `run`       — stream synthetic frames through the full pipeline
+//!                 (sensor → mapper → in-memory LBP → MLP), print per-run
+//!                 stats; `--arch-mlp` also simulates the MLP in-memory;
+//!                 `--golden` cross-checks against the PJRT artifact.
+//! * `transient` — print the Fig. 9 RBL discharge waveforms.
+//! * `montecarlo`— run the Fig. 10 variation analysis.
+//! * `info`      — show configuration, geometry, energy/area headline.
+//!
+//! Configuration: `--config configs/nslbp_default.toml` plus repeated
+//! `--set section.key=value` overrides.
+
+use ns_lbp::circuit::{MonteCarlo, SENSE_DELAY_PS};
+use ns_lbp::cli::Command;
+use ns_lbp::config::SystemConfig;
+use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
+use ns_lbp::energy::{AreaModel, EnergyModel};
+use ns_lbp::model::argmax;
+use ns_lbp::rng::Xoshiro256;
+use ns_lbp::runtime::Runtime;
+use ns_lbp::sensor::{ReplaySensor, SensorConfig};
+use ns_lbp::{params, Result};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match real_main(&args) {
+        Ok(()) => {}
+        Err(ns_lbp::Error::Usage(msg)) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn command() -> Command {
+    Command::new("ns-lbp", "near-sensor LBP accelerator simulator")
+        .subcommand("run", "stream frames through the pipeline")
+        .subcommand("transient", "Fig. 9 RBL discharge waveforms")
+        .subcommand("montecarlo", "Fig. 10 sense-margin analysis")
+        .subcommand("info", "configuration and headline numbers")
+        .opt("config", "FILE", "config file (TOML subset)")
+        .opt_repeated("set", "K=V", "config override, e.g. cache.banks=40")
+        .opt("dataset", "NAME", "mnist|svhn (default mnist)")
+        .opt("frames", "N", "frames to stream (default 8)")
+        .opt("seed", "N", "frame-generator seed (default 7)")
+        .opt("trials", "N", "Monte-Carlo trials (default 200)")
+        .opt("artifacts", "DIR", "artifacts directory (default artifacts)")
+        .flag("arch-mlp", "simulate the MLP in-memory too")
+        .flag("early-exit", "enable Algorithm-1 early exit")
+        .flag("golden", "cross-check logits against the PJRT artifact")
+        .flag("functional", "skip the architectural simulation")
+}
+
+fn real_main(args: &[String]) -> Result<()> {
+    let cmd = command();
+    let parsed = cmd.parse(args)?;
+    let overrides = parsed.opt_all("set");
+    let system = SystemConfig::load(parsed.opt("config"), &overrides)?;
+
+    match parsed.subcommand.as_deref() {
+        Some("run") => run_pipeline(&parsed, system),
+        Some("transient") => transient(system),
+        Some("montecarlo") => montecarlo(&parsed, system),
+        Some("info") | None => info(system),
+        Some(other) => Err(ns_lbp::Error::Usage(format!(
+            "unknown subcommand {other:?}"
+        ))),
+    }
+}
+
+fn run_pipeline(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()> {
+    let dataset = parsed.opt("dataset").unwrap_or("mnist").to_string();
+    let frames: usize = parsed.opt_parse("frames", 8)?;
+    let seed: u64 = parsed.opt_parse("seed", 7)?;
+    let artifacts = parsed
+        .opt("artifacts")
+        .unwrap_or(&system.artifacts_dir)
+        .to_string();
+
+    let params = params::load(format!("{artifacts}/{dataset}.params.bin"))?;
+    let cfg = params.config;
+    println!(
+        "network: {dataset} ({}x{}x{}, {} LBP layers, apx={}, hidden {})",
+        cfg.height, cfg.width, cfg.in_channels, cfg.n_lbp_layers,
+        cfg.apx_code, cfg.hidden
+    );
+
+    let sensor_cfg = SensorConfig {
+        rows: cfg.height,
+        cols: cfg.width,
+        channels: cfg.in_channels,
+        skip_lsbs: cfg.apx_pixel,
+        ..Default::default()
+    };
+    let mut rng = Xoshiro256::new(seed);
+    let scenes: Vec<Vec<f64>> = (0..frames)
+        .map(|_| (0..sensor_cfg.pixels()).map(|_| rng.next_f64()).collect())
+        .collect();
+    let mut sensor = ReplaySensor::new(sensor_cfg, scenes.clone(), seed)?;
+
+    let arch = ArchSim {
+        lbp: !parsed.flag("functional"),
+        mlp: parsed.flag("arch-mlp"),
+        early_exit: parsed.flag("early-exit"),
+    };
+    let coord = Coordinator::new(params.clone(),
+                                 CoordinatorConfig { system, arch })?;
+    let (reports, summary) = coord.run(&mut sensor, frames)?;
+
+    for r in &reports {
+        println!(
+            "frame {:>3}: class {} ({} instrs, {:.2} µJ, {:.2} µs modeled)",
+            r.seq,
+            r.predicted,
+            r.exec.instructions,
+            r.energy.total_pj() / 1e6,
+            r.arch_time_ns / 1e3
+        );
+    }
+    println!(
+        "summary: {} frames | mismatches {} | {:.2} µJ/frame | \
+         {:.0} fps modeled | wall {:.2}s",
+        summary.frames,
+        summary.arch_mismatches,
+        summary.energy_per_frame_uj(),
+        summary.frames_per_second_modeled(),
+        summary.wall_seconds
+    );
+    if summary.arch_mismatches != 0 {
+        return Err(ns_lbp::Error::Coordinator(
+            "architectural/functional divergence detected".into(),
+        ));
+    }
+
+    if parsed.flag("golden") {
+        let mut rt = Runtime::new(&artifacts)?;
+        let name = format!("aplbp_{dataset}");
+        rt.load(&name)?;
+        println!("golden check on PJRT ({}) ...", rt.platform());
+        // batch of 4 (the artifact's static batch)
+        let b = 4.min(frames);
+        let npix = cfg.height * cfg.width * cfg.in_channels;
+        let mut flat = Vec::new();
+        for s in scenes.iter().take(b) {
+            flat.extend(s.iter().map(|&v| v as f32));
+        }
+        flat.resize(4 * npix, 0.0);
+        let logits = rt.run_aplbp(&name, &params, &flat, 4)?;
+        for (i, l) in logits.iter().take(b).enumerate() {
+            let want = reports[i].predicted;
+            let got = argmax(l);
+            println!("  frame {i}: pjrt class {got}, simulator class {want}");
+            if got != want {
+                return Err(ns_lbp::Error::Runtime(
+                    "golden model disagreement".into(),
+                ));
+            }
+        }
+        println!("golden check OK");
+    }
+    Ok(())
+}
+
+fn transient(system: SystemConfig) -> Result<()> {
+    let p = system.circuit;
+    p.validate()?;
+    println!("RBL transients (VDD {} V, sense at {} ps):", p.vdd, SENSE_DELAY_PS);
+    println!("{:>8} {:>9} {:>9} {:>9} {:>9}", "t[ps]", "\"000\"", "\"001\"",
+             "\"011\"", "\"111\"");
+    let mut t = 0.0;
+    while t <= 800.0 {
+        let row: Vec<String> = (0..4)
+            .map(|ones| format!("{:9.3}", p.rbl_waveform(ones, t).unwrap()))
+            .collect();
+        println!("{t:>8.0} {}", row.join(" "));
+        t += 80.0;
+    }
+    let [r1, r2, r3] = p.refs();
+    println!("references: V_R1={r1:.3} V_R2={r2:.3} V_R3={r3:.3}");
+    Ok(())
+}
+
+fn montecarlo(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()> {
+    let trials: usize = parsed.opt_parse("trials", 200)?;
+    let seed: u64 = parsed.opt_parse("seed", 7)?;
+    let mut mc = MonteCarlo::new(system.circuit);
+    mc.trials = trials;
+    let r = mc.run(seed);
+    println!("Monte-Carlo: {} trials x {} bit-lines", r.trials, r.bitlines);
+    for (i, lv) in r.levels.iter().enumerate() {
+        println!(
+            "  level {i} ('{}'): mean {:.3} V std {:.1} mV [{:.3}, {:.3}]",
+            "0".repeat(3 - i) + &"1".repeat(i),
+            lv.mean, lv.std * 1e3, lv.min, lv.max
+        );
+    }
+    for (i, g) in r.level_gaps.iter().enumerate() {
+        println!("  gap {i}-{}: {:.1} mV", i + 1, g * 1e3);
+    }
+    println!(
+        "  min margin {:.1} mV | decision errors {:.2e}",
+        r.min_margin * 1e3,
+        r.decision_error_rate
+    );
+    Ok(())
+}
+
+fn info(system: SystemConfig) -> Result<()> {
+    let g = system.cache;
+    let em = EnergyModel::default();
+    let area = AreaModel::default();
+    println!("NS-LBP v{}", ns_lbp::VERSION);
+    println!(
+        "cache: {} banks x {} mats x {} sub-arrays ({}x{}) = {:.1} MB",
+        g.banks, g.mats_per_bank, g.subarrays_per_mat, g.rows, g.cols,
+        g.total_bytes() as f64 / (1024.0 * 1024.0)
+    );
+    println!(
+        "circuit: VDD {} V, {} GHz, refs {:?} V",
+        system.circuit.vdd, system.circuit.freq_ghz, system.circuit.refs()
+    );
+    println!(
+        "headline: {:.1} TOPS/W peak, {:.1} TOPS, {:.2} mm² slice, \
+         SA overhead {:.1}x",
+        em.tops_per_watt(g.cols as u64),
+        em.peak_tops(&g),
+        area.slice_mm2(&g),
+        area.sa_overhead
+    );
+    Ok(())
+}

@@ -1,0 +1,401 @@
+//! Correlated data partitioning and hardware mapping (paper §5.1, Fig. 6).
+//!
+//! The LBP layer's memory accesses are fully predictable, so pixels and the
+//! pivots they are compared against are co-located in the *same* sub-array:
+//! computation never crosses the sub-array boundary (no inter-bank/chip
+//! traffic).  Concretely each 256×256 compute sub-array is split into
+//! P (64 rows), C (64), Resv (64), W (32), I (32):
+//!
+//! * **P** holds up to 8 *lane-transposed* 8-bit pixel vectors: bit `i` of
+//!   lane `l` of slot `s` lives at row `s·8 + (7−i)`, column `l` — one row
+//!   per bit-plane, MSB first, 256 lanes wide.
+//! * **C** mirrors P with the pivot value each lane must be compared to
+//!   (the paper stores a transposed *copy* of the pivot per pixel vector so
+//!   the comparison is positionally aligned).
+//! * **Resv** carries the named working rows of Algorithm 1:
+//!   `Result_array`, `LBP_array`, the all-0/all-1 constants, and the
+//!   controller's `decided` mask plus scratch.
+//!
+//! [`LaneBatch`] is the unit of work: up to 256 (neighbor, pivot) pairs
+//! that one sub-array pass compares in parallel.  [`partition`] splits a
+//! whole LBP layer (`H·W·K·e` comparisons) into lane batches and
+//! round-robins them over the cache's compute sub-arrays — the paper's
+//! throughput-maximising partitioning.
+
+use crate::error::{Error, Result};
+use crate::sram::{CacheGeometry, Region, RegionLayout, SubArray, SubArrayId};
+
+/// Named reserved rows (offsets inside the Resv region).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResvRow {
+    /// XOR result of the current bit-plane comparison.
+    Result = 0,
+    /// Accumulated LBP bits (the algorithm's output row).
+    Lbp = 1,
+    /// All-zero constant row.
+    Zero = 2,
+    /// All-one constant row.
+    One = 3,
+    /// Lanes already decided (controller bookkeeping mask).
+    Decided = 4,
+    /// Scratch row for 2-input compositions.
+    Scratch = 5,
+    /// Second scratch row.
+    Scratch2 = 6,
+}
+
+/// Row-address helper for the Fig. 6(a) layout of one sub-array.
+#[derive(Clone, Copy, Debug)]
+pub struct LbpSubarrayMap {
+    pub layout: RegionLayout,
+    /// Pixel/pivot word width in bits (8 for u8 sensors).
+    pub bits: usize,
+}
+
+impl LbpSubarrayMap {
+    pub fn new(layout: RegionLayout, bits: usize) -> Result<Self> {
+        if bits == 0 || bits > 16 {
+            return Err(Error::Mapping(format!("bits {bits} outside 1..=16")));
+        }
+        let map = Self { layout, bits };
+        if map.slots() == 0 {
+            return Err(Error::Mapping(
+                "pixel region too small for one slot".into(),
+            ));
+        }
+        if layout.reserved_rows < 7 {
+            return Err(Error::Mapping(
+                "reserved region needs ≥ 7 rows (Alg. 1 bookkeeping)".into(),
+            ));
+        }
+        Ok(map)
+    }
+
+    /// Number of resident pixel-vector slots (paper: 64/8 = 8).
+    pub fn slots(&self) -> usize {
+        self.layout.pixel_rows / self.bits
+    }
+
+    /// Row of bit `bit` (0 = LSB) of pixel slot `slot` — MSB stored first.
+    pub fn pixel_bit_row(&self, slot: usize, bit: usize) -> Result<usize> {
+        self.check(slot, bit)?;
+        self.layout
+            .row(Region::Pixel, slot * self.bits + (self.bits - 1 - bit))
+    }
+
+    /// Row of bit `bit` of the pivot vector for `slot`.
+    pub fn pivot_bit_row(&self, slot: usize, bit: usize) -> Result<usize> {
+        self.check(slot, bit)?;
+        self.layout
+            .row(Region::Pivot, slot * self.bits + (self.bits - 1 - bit))
+    }
+
+    /// Global row of a named reserved row.
+    pub fn resv(&self, r: ResvRow) -> usize {
+        self.layout.base(Region::Reserved) + r as usize
+    }
+
+    fn check(&self, slot: usize, bit: usize) -> Result<()> {
+        if slot >= self.slots() {
+            return Err(Error::Mapping(format!(
+                "slot {slot} out of range ({} slots)",
+                self.slots()
+            )));
+        }
+        if bit >= self.bits {
+            return Err(Error::Mapping(format!("bit {bit} out of range")));
+        }
+        Ok(())
+    }
+
+    /// Load `lanes` (neighbor, pivot) pairs lane-transposed into `slot`.
+    ///
+    /// Writes `2 × bits` rows (one per bit-plane of P and C); lanes beyond
+    /// `pairs.len()` are zero-filled.  Returns the number of loaded lanes.
+    pub fn load_lanes(&self, sa: &mut SubArray, slot: usize,
+                      pairs: &[(u8, u8)]) -> Result<usize> {
+        if pairs.len() > sa.cols() {
+            return Err(Error::Mapping(format!(
+                "{} lanes exceed {} columns",
+                pairs.len(),
+                sa.cols()
+            )));
+        }
+        // single pass over lanes, one flat buffer for all 2×bits bit-plane
+        // rows (hot path: one allocation instead of 2×bits, §Perf)
+        let words = sa.cols() / 64;
+        let mut planes = vec![0u64; 2 * self.bits * words];
+        if self.bits == 8 {
+            // SWAR fast path: transpose 8 lanes × 8 bits at a time
+            // (Hacker's-Delight 8×8 bit-matrix transpose), ~3× fewer ops
+            // than per-bit scatter (§Perf).
+            for (g, group) in pairs.chunks(8).enumerate() {
+                let mut px = 0u64;
+                let mut cx = 0u64;
+                for (i, &(p, c)) in group.iter().enumerate() {
+                    px |= (p as u64) << (8 * i);
+                    cx |= (c as u64) << (8 * i);
+                }
+                let (tp, tc) = (transpose8x8(px), transpose8x8(cx));
+                let word = g / 8;
+                let shift = 8 * (g % 8);
+                for bit in 0..8 {
+                    planes[bit * words + word] |=
+                        ((tp >> (8 * bit)) & 0xFF) << shift;
+                    planes[(8 + bit) * words + word] |=
+                        ((tc >> (8 * bit)) & 0xFF) << shift;
+                }
+            }
+        } else {
+            for (lane, &(p, c)) in pairs.iter().enumerate() {
+                let word = lane / 64;
+                let shift = (lane % 64) as u32;
+                for bit in 0..self.bits {
+                    // branchless bit scatter
+                    planes[bit * words + word] |=
+                        (((p >> bit) & 1) as u64) << shift;
+                    planes[(self.bits + bit) * words + word] |=
+                        (((c >> bit) & 1) as u64) << shift;
+                }
+            }
+        }
+        for bit in 0..self.bits {
+            sa.write_row(self.pixel_bit_row(slot, bit)?,
+                         &planes[bit * words..(bit + 1) * words])?;
+            sa.write_row(self.pivot_bit_row(slot, bit)?,
+                         &planes[(self.bits + bit) * words
+                                 ..(self.bits + bit + 1) * words])?;
+        }
+        Ok(pairs.len())
+    }
+
+    /// Read back `lanes` bits from a reserved row (e.g. the LBP_array).
+    pub fn read_resv_bits(&self, sa: &SubArray, row: ResvRow,
+                          lanes: usize) -> Result<Vec<bool>> {
+        let words = sa.read_row(self.resv(row))?;
+        Ok((0..lanes).map(|l| words[l / 64] >> (l % 64) & 1 == 1).collect())
+    }
+}
+
+/// One unit of parallel work: ≤ `cols` comparison pairs for one sub-array.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LaneBatch {
+    /// Target sub-array.
+    pub target: SubArrayId,
+    /// Resident slot in the P/C regions.
+    pub slot: usize,
+    /// Global lane offset of this batch within the layer's comparisons.
+    pub lane_offset: usize,
+    /// (neighbor intensity, pivot intensity) per lane.
+    pub pairs: Vec<(u8, u8)>,
+}
+
+/// Partition a layer's comparison stream over the cache's sub-arrays.
+///
+/// `pairs` is the flattened `(neighbor, pivot)` stream (H·W·K·e entries in
+/// raster order).  Batches of `cols` lanes are dealt round-robin across
+/// sub-arrays, then across the slots of each sub-array — matching the
+/// paper's "fully local computation" goal: a batch never splits across
+/// sub-arrays.
+pub fn partition(pairs: &[(u8, u8)], geometry: &CacheGeometry,
+                 map: &LbpSubarrayMap) -> Result<Vec<LaneBatch>> {
+    geometry.validate()?;
+    let cols = geometry.cols;
+    let ids: Vec<SubArrayId> = (0..geometry.banks)
+        .flat_map(|bank| {
+            (0..geometry.mats_per_bank).flat_map(move |mat| {
+                (0..geometry.subarrays_per_mat)
+                    .map(move |subarray| SubArrayId { bank, mat, subarray })
+            })
+        })
+        .collect();
+    let slots = map.slots();
+    let mut batches = Vec::new();
+    for (i, chunk) in pairs.chunks(cols).enumerate() {
+        let target = ids[i % ids.len()];
+        let slot = (i / ids.len()) % slots;
+        batches.push(LaneBatch {
+            target,
+            slot,
+            lane_offset: i * cols,
+            pairs: chunk.to_vec(),
+        });
+    }
+    Ok(batches)
+}
+
+/// 8×8 bit-matrix transpose (Hacker's Delight §7-3): input byte `i` holds
+/// the 8 bits of lane `i`; output byte `b` holds bit `b` of all 8 lanes.
+#[inline]
+fn transpose8x8(mut x: u64) -> u64 {
+    let t = (x ^ (x >> 7)) & 0x00AA_00AA_00AA_00AA;
+    x ^= t ^ (t << 7);
+    let t = (x ^ (x >> 14)) & 0x0000_CCCC_0000_CCCC;
+    x ^= t ^ (t << 14);
+    let t = (x ^ (x >> 28)) & 0x0000_0000_F0F0_F0F0;
+    x ^= t ^ (t << 28);
+    x
+}
+
+/// Summary of a partition — used by the energy model for data-loading cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PartitionStats {
+    pub total_lanes: usize,
+    pub batches: usize,
+    pub subarrays_used: usize,
+    /// Row writes needed to load all batches (2·bits rows per batch).
+    pub load_row_writes: usize,
+}
+
+pub fn partition_stats(batches: &[LaneBatch], map: &LbpSubarrayMap) -> PartitionStats {
+    let mut subarrays: Vec<SubArrayId> = batches.iter().map(|b| b.target).collect();
+    subarrays.sort_by_key(|id| (id.bank, id.mat, id.subarray));
+    subarrays.dedup();
+    PartitionStats {
+        total_lanes: batches.iter().map(|b| b.pairs.len()).sum(),
+        batches: batches.len(),
+        subarrays_used: subarrays.len(),
+        load_row_writes: batches.len() * 2 * map.bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sram::RegionLayout;
+
+    fn map() -> LbpSubarrayMap {
+        LbpSubarrayMap::new(RegionLayout::default(), 8).unwrap()
+    }
+
+    #[test]
+    fn paper_layout_has_eight_slots() {
+        assert_eq!(map().slots(), 8);
+    }
+
+    #[test]
+    fn row_addresses_msb_first_and_disjoint() {
+        let m = map();
+        // MSB of slot 0 at the top of P
+        assert_eq!(m.pixel_bit_row(0, 7).unwrap(), 0);
+        assert_eq!(m.pixel_bit_row(0, 0).unwrap(), 7);
+        assert_eq!(m.pixel_bit_row(1, 7).unwrap(), 8);
+        // pivot region is offset by 64
+        assert_eq!(m.pivot_bit_row(0, 7).unwrap(), 64);
+        // all rows distinct
+        let mut rows = Vec::new();
+        for slot in 0..m.slots() {
+            for bit in 0..8 {
+                rows.push(m.pixel_bit_row(slot, bit).unwrap());
+                rows.push(m.pivot_bit_row(slot, bit).unwrap());
+            }
+        }
+        rows.sort_unstable();
+        rows.dedup();
+        assert_eq!(rows.len(), 2 * 8 * 8);
+    }
+
+    #[test]
+    fn resv_rows_inside_reserved_region() {
+        let m = map();
+        for r in [ResvRow::Result, ResvRow::Lbp, ResvRow::Zero, ResvRow::One,
+                  ResvRow::Decided, ResvRow::Scratch, ResvRow::Scratch2] {
+            let row = m.resv(r);
+            assert_eq!(m.layout.region_of(row), Some(Region::Reserved), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let m = map();
+        assert!(m.pixel_bit_row(8, 0).is_err());
+        assert!(m.pixel_bit_row(0, 8).is_err());
+        assert!(LbpSubarrayMap::new(RegionLayout::default(), 0).is_err());
+    }
+
+    #[test]
+    fn load_lanes_transposed_roundtrip() {
+        let m = map();
+        let mut sa = SubArray::new(256, 256);
+        let pairs: Vec<(u8, u8)> =
+            (0..200).map(|i| ((i * 7 + 3) as u8, (i * 13 + 1) as u8)).collect();
+        m.load_lanes(&mut sa, 2, &pairs).unwrap();
+        for (lane, &(p, c)) in pairs.iter().enumerate() {
+            let mut pv = 0u8;
+            let mut cv = 0u8;
+            for bit in 0..8 {
+                if sa.get(m.pixel_bit_row(2, bit).unwrap(), lane).unwrap() {
+                    pv |= 1 << bit;
+                }
+                if sa.get(m.pivot_bit_row(2, bit).unwrap(), lane).unwrap() {
+                    cv |= 1 << bit;
+                }
+            }
+            assert_eq!((pv, cv), (p, c), "lane {lane}");
+        }
+    }
+
+    #[test]
+    fn load_never_touches_other_regions() {
+        let m = map();
+        let mut sa = SubArray::new(256, 256);
+        // poison W and I regions, then load
+        for row in 192..256 {
+            sa.fill_row(row, true).unwrap();
+        }
+        m.load_lanes(&mut sa, 0, &[(0xFF, 0x00); 256]).unwrap();
+        for row in 192..256 {
+            assert!(sa.read_row(row).unwrap().iter().all(|&w| w == u64::MAX));
+        }
+    }
+
+    #[test]
+    fn load_rejects_oversized_batch() {
+        let m = map();
+        let mut sa = SubArray::new(256, 256);
+        assert!(m.load_lanes(&mut sa, 0, &[(0, 0); 257]).is_err());
+    }
+
+    #[test]
+    fn partition_covers_every_lane_once() {
+        let g = CacheGeometry { banks: 3, mats_per_bank: 2, subarrays_per_mat: 1,
+                                ..CacheGeometry::default() };
+        let m = map();
+        let pairs: Vec<(u8, u8)> =
+            (0..2000).map(|i| (i as u8, (i >> 8) as u8)).collect();
+        let batches = partition(&pairs, &g, &m).unwrap();
+        // reassemble and compare
+        let mut got = vec![None; pairs.len()];
+        for b in &batches {
+            for (j, &p) in b.pairs.iter().enumerate() {
+                let idx = b.lane_offset + j;
+                assert!(got[idx].is_none(), "lane {idx} assigned twice");
+                got[idx] = Some(p);
+            }
+            assert!(b.pairs.len() <= g.cols);
+            assert!(b.slot < m.slots());
+            assert!(b.target.bank < g.banks);
+        }
+        assert!(got.iter().all(|o| o.is_some()));
+        let reassembled: Vec<(u8, u8)> = got.into_iter().map(|o| o.unwrap()).collect();
+        assert_eq!(reassembled, pairs);
+    }
+
+    #[test]
+    fn partition_round_robins_subarrays() {
+        let g = CacheGeometry { banks: 2, mats_per_bank: 1, subarrays_per_mat: 1,
+                                ..CacheGeometry::default() };
+        let m = map();
+        let pairs = vec![(1u8, 2u8); 256 * 4];
+        let batches = partition(&pairs, &g, &m).unwrap();
+        assert_eq!(batches.len(), 4);
+        assert_eq!(batches[0].target.bank, 0);
+        assert_eq!(batches[1].target.bank, 1);
+        assert_eq!(batches[2].target.bank, 0);
+        assert_eq!(batches[2].slot, 1); // second slot on the wrap-around
+        let stats = partition_stats(&batches, &m);
+        assert_eq!(stats.total_lanes, 1024);
+        assert_eq!(stats.subarrays_used, 2);
+        assert_eq!(stats.load_row_writes, 4 * 16);
+    }
+}

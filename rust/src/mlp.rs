@@ -1,0 +1,268 @@
+//! In-memory MLP acceleration (paper §5.2, Fig. 7).
+//!
+//! Every MLP layer is a 1×1-kernel convolution executed as bit-plane dot
+//! products: with activations `I = Σ_m 2^m·C_m(I)` and weights
+//! `W = Σ_n 2^n·C_n(W)`, the dot product is
+//! `Σ_m Σ_n 2^{m+n} · bitcount(AND(C_n(W), C_m(I)))` [DoReFa, ref 45].
+//!
+//! Mapping: the bit-plane vectors `C_m(I)` live in the I region (32 rows)
+//! and `C_n(W)` in the W region (32 rows) of a compute sub-array, 256
+//! lanes per row; `NS-LBP_AND` (MAJ3 with the all-zero row) produces the
+//! AND row in one cycle, then the DPU bit-counts, shifts by `m+n`, and
+//! accumulates (Fig. 7 steps ③–④).  Signed weights are stored with a
+//! `+2^{N−1}` offset and corrected with one row-sum per input vector —
+//! identical to `python/compile/kernels/bitserial_mlp.py`.
+
+use crate::dpu::Dpu;
+use crate::error::{Error, Result};
+use crate::isa::{Executor, IniValue, Instruction};
+use crate::mapping::{LbpSubarrayMap, ResvRow};
+use crate::sram::Region;
+
+/// Row-address helper for the W/I regions.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpSubarrayMap {
+    pub base: LbpSubarrayMap,
+    pub act_bits: usize,
+    pub w_bits: usize,
+}
+
+impl MlpSubarrayMap {
+    pub fn new(base: LbpSubarrayMap, act_bits: usize, w_bits: usize) -> Result<Self> {
+        if act_bits == 0 || w_bits == 0 {
+            return Err(Error::Mapping("bit widths must be non-zero".into()));
+        }
+        let m = Self { base, act_bits, w_bits };
+        if m.weight_slots() == 0 || m.input_slots() == 0 {
+            return Err(Error::Mapping(
+                "W/I regions too small for one bit-plane set".into(),
+            ));
+        }
+        Ok(m)
+    }
+
+    /// Weight-vector slots resident in the W region (32/4 = 8 at defaults).
+    pub fn weight_slots(&self) -> usize {
+        self.base.layout.len(Region::Weight) / self.w_bits
+    }
+
+    pub fn input_slots(&self) -> usize {
+        self.base.layout.len(Region::Input) / self.act_bits
+    }
+
+    /// Row of weight bit-plane `n` for `slot`.
+    pub fn weight_plane_row(&self, slot: usize, n: usize) -> Result<usize> {
+        if slot >= self.weight_slots() || n >= self.w_bits {
+            return Err(Error::Mapping(format!(
+                "weight plane (slot {slot}, n {n}) out of range"
+            )));
+        }
+        self.base.layout.row(Region::Weight, slot * self.w_bits + n)
+    }
+
+    /// Row of input bit-plane `m` for `slot`.
+    pub fn input_plane_row(&self, slot: usize, m: usize) -> Result<usize> {
+        if slot >= self.input_slots() || m >= self.act_bits {
+            return Err(Error::Mapping(format!(
+                "input plane (slot {slot}, m {m}) out of range"
+            )));
+        }
+        self.base.layout.row(Region::Input, slot * self.act_bits + m)
+    }
+
+    /// Load a ≤256-lane unsigned vector bit-plane-transposed into W or I.
+    pub fn load_vector(&self, ex: &mut Executor<'_>, region: Region,
+                       slot: usize, values: &[u8]) -> Result<()> {
+        if values.len() > ex.array.cols() {
+            return Err(Error::Mapping(format!(
+                "{} lanes exceed {} columns",
+                values.len(),
+                ex.array.cols()
+            )));
+        }
+        let (bits, row_of): (usize, &dyn Fn(usize) -> Result<usize>) = match region {
+            Region::Weight => (self.w_bits, &|n| self.weight_plane_row(slot, n)),
+            Region::Input => (self.act_bits, &|m| self.input_plane_row(slot, m)),
+            other => {
+                return Err(Error::Mapping(format!(
+                    "load_vector targets W or I, not {other:?}"
+                )))
+            }
+        };
+        let words = ex.array.cols() / 64;
+        for bit in 0..bits {
+            let mut row = vec![0u64; words];
+            for (lane, &v) in values.iter().enumerate() {
+                if (v >> bit) & 1 == 1 {
+                    row[lane / 64] |= 1 << (lane % 64);
+                }
+            }
+            ex.array.write_row(row_of(bit)?, &row)?;
+            ex.stats.row_writes += 1;
+            ex.stats.cycles += 1;
+        }
+        Ok(())
+    }
+
+    /// In-memory unsigned bit-serial dot product over `lanes` lanes:
+    /// `Σ_{m,n} 2^{m+n}·bitcount(AND(C_n(W), C_m(I)))`.
+    ///
+    /// One `NS-LBP_AND` (MAJ3 with all-zero) per (m, n) pair + one DPU
+    /// bitcount/shift/add.
+    pub fn dot_unsigned(&self, ex: &mut Executor<'_>, dpu: &mut Dpu,
+                        w_slot: usize, i_slot: usize, lanes: usize) -> Result<i64> {
+        let zero = self.base.resv(ResvRow::Zero);
+        let scratch = self.base.resv(ResvRow::Scratch);
+        ex.exec(Instruction::Ini { dest: zero, value: IniValue::Zeros })?;
+        let words = lanes.div_ceil(64);
+        let mut acc = 0i64;
+        let mut lane_mask = vec![u64::MAX; words];
+        if lanes % 64 != 0 {
+            lane_mask[words - 1] = (1u64 << (lanes % 64)) - 1;
+        }
+        for m in 0..self.act_bits {
+            let i_row = self.input_plane_row(i_slot, m)?;
+            for n in 0..self.w_bits {
+                let w_row = self.weight_plane_row(w_slot, n)?;
+                // NS-LBP_AND: MAJ3(w, i, 0)
+                ex.exec(Instruction::Carry {
+                    src1: w_row,
+                    src2: i_row,
+                    src3: zero,
+                    dest: scratch,
+                })?;
+                let row = ex.array.read_row(scratch)?;
+                ex.stats.record_ctrl_read();
+                let masked: Vec<u64> = row[..words]
+                    .iter()
+                    .zip(&lane_mask)
+                    .map(|(&w, &m_)| w & m_)
+                    .collect();
+                let count = dpu.bitcount(&masked) as i64;
+                let term = dpu.shift(count, (m + n) as u32);
+                acc = dpu.add(acc, term);
+            }
+        }
+        Ok(acc)
+    }
+
+    /// Signed dot product against offset-stored weights:
+    /// `x·w = x·w_u − 2^{N−1}·Σx` (one extra row-sum via the DPU).
+    pub fn dot_signed(&self, ex: &mut Executor<'_>, dpu: &mut Dpu,
+                      w_slot: usize, i_slot: usize, lanes: usize,
+                      x_rowsum: i64) -> Result<i64> {
+        let raw = self.dot_unsigned(ex, dpu, w_slot, i_slot, lanes)?;
+        let offset = 1i64 << (self.w_bits - 1);
+        Ok(raw - offset * x_rowsum)
+    }
+}
+
+/// Software reference for the bit-serial identity (used by tests and the
+/// fast functional path).
+pub fn dot_unsigned_ref(x: &[u8], w: &[u8]) -> i64 {
+    x.iter().zip(w).map(|(&a, &b)| a as i64 * b as i64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sram::{RegionLayout, SubArray};
+
+    fn maps() -> (LbpSubarrayMap, MlpSubarrayMap) {
+        let base = LbpSubarrayMap::new(RegionLayout::default(), 8).unwrap();
+        let mlp = MlpSubarrayMap::new(base, 4, 4).unwrap();
+        (base, mlp)
+    }
+
+    #[test]
+    fn slot_capacity_matches_paper_regions() {
+        let (_, m) = maps();
+        assert_eq!(m.weight_slots(), 8); // 32 rows / 4-bit planes
+        assert_eq!(m.input_slots(), 8);
+    }
+
+    #[test]
+    fn plane_rows_stay_inside_their_regions() {
+        let (_, m) = maps();
+        for slot in 0..m.weight_slots() {
+            for n in 0..4 {
+                let row = m.weight_plane_row(slot, n).unwrap();
+                assert_eq!(m.base.layout.region_of(row), Some(Region::Weight));
+            }
+        }
+        for slot in 0..m.input_slots() {
+            for b in 0..4 {
+                let row = m.input_plane_row(slot, b).unwrap();
+                assert_eq!(m.base.layout.region_of(row), Some(Region::Input));
+            }
+        }
+        assert!(m.weight_plane_row(8, 0).is_err());
+        assert!(m.input_plane_row(0, 4).is_err());
+    }
+
+    #[test]
+    fn inmemory_dot_matches_reference() {
+        let (_, m) = maps();
+        let mut rng = crate::rng::Xoshiro256::new(77);
+        for lanes in [1usize, 63, 64, 100, 256] {
+            let x: Vec<u8> = (0..lanes).map(|_| (rng.next_u64() % 16) as u8).collect();
+            let w: Vec<u8> = (0..lanes).map(|_| (rng.next_u64() % 16) as u8).collect();
+            let mut sa = SubArray::new(256, 256);
+            let mut ex = Executor::new(&mut sa);
+            m.load_vector(&mut ex, Region::Input, 0, &x).unwrap();
+            m.load_vector(&mut ex, Region::Weight, 0, &w).unwrap();
+            let mut dpu = Dpu::default();
+            let got = m.dot_unsigned(&mut ex, &mut dpu, 0, 0, lanes).unwrap();
+            assert_eq!(got, dot_unsigned_ref(&x, &w), "lanes={lanes}");
+            assert_eq!(dpu.stats.bitcounts, 16); // 4x4 bit-plane pairs
+        }
+    }
+
+    #[test]
+    fn signed_dot_offset_correction() {
+        let (_, m) = maps();
+        let mut rng = crate::rng::Xoshiro256::new(3);
+        let lanes = 200;
+        let x: Vec<u8> = (0..lanes).map(|_| (rng.next_u64() % 16) as u8).collect();
+        let w_signed: Vec<i8> =
+            (0..lanes).map(|_| (rng.next_u64() % 16) as i8 - 8).collect();
+        let w_u: Vec<u8> = w_signed.iter().map(|&v| (v + 8) as u8).collect();
+        let mut sa = SubArray::new(256, 256);
+        let mut ex = Executor::new(&mut sa);
+        m.load_vector(&mut ex, Region::Input, 1, &x).unwrap();
+        m.load_vector(&mut ex, Region::Weight, 2, &w_u).unwrap();
+        let rowsum: i64 = x.iter().map(|&v| v as i64).sum();
+        let mut dpu = Dpu::default();
+        let got = m.dot_signed(&mut ex, &mut dpu, 2, 1, lanes, rowsum).unwrap();
+        let want: i64 = x.iter().zip(&w_signed)
+            .map(|(&a, &b)| a as i64 * b as i64).sum();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn stale_lanes_do_not_leak_into_dot() {
+        // load 256 lanes into a slot, then a shorter vector; masked lanes
+        // beyond the new length must not contribute.
+        let (_, m) = maps();
+        let mut sa = SubArray::new(256, 256);
+        let mut ex = Executor::new(&mut sa);
+        m.load_vector(&mut ex, Region::Input, 0, &[15u8; 256]).unwrap();
+        m.load_vector(&mut ex, Region::Weight, 0, &[15u8; 256]).unwrap();
+        let mut dpu = Dpu::default();
+        let got = m.dot_unsigned(&mut ex, &mut dpu, 0, 0, 10).unwrap();
+        assert_eq!(got, 10 * 15 * 15);
+    }
+
+    #[test]
+    fn load_vector_rejects_wrong_region() {
+        let (_, m) = maps();
+        let mut sa = SubArray::new(256, 256);
+        let mut ex = Executor::new(&mut sa);
+        assert!(m
+            .load_vector(&mut ex, Region::Pixel, 0, &[1, 2, 3])
+            .is_err());
+        assert!(m
+            .load_vector(&mut ex, Region::Input, 0, &vec![0u8; 300])
+            .is_err());
+    }
+}

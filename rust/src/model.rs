@@ -1,0 +1,412 @@
+//! Bit-exact functional model of Ap-LBP inference, mirroring
+//! `python/compile/model.py` integer-for-integer.
+//!
+//! Three implementations of the same network coexist and are cross-checked:
+//!
+//! 1. the AOT HLO artifact executed through PJRT ([`crate::runtime`]) — the
+//!    JAX/Pallas golden model;
+//! 2. **this module** — a plain-Rust functional model (fast path for the
+//!    coordinator and sweeps);
+//! 3. the architectural path — LBP comparisons via Algorithm 1 on the
+//!    simulated sub-arrays and the MLP via in-memory AND/bitcount
+//!    ([`crate::lbp`], [`crate::mlp`]), which also produces cycle/energy
+//!    statistics.
+//!
+//! `rust/tests/golden_model.rs` asserts 1 == 2 on the artifact inputs;
+//! unit tests here assert 2 == 3 on random images.
+
+use crate::dpu::Dpu;
+use crate::error::{Error, Result};
+use crate::params::{LbpLayer, NetParams};
+
+/// A u8 image tensor in HWC layout.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorU8 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<u8>,
+}
+
+impl TensorU8 {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> u8 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: u8) {
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+
+    /// Zero-padded fetch (paper's zero-padding, Fig. 3a).
+    #[inline]
+    pub fn get_padded(&self, y: i64, x: i64, ch: usize) -> u8 {
+        if y < 0 || x < 0 || y >= self.h as i64 || x >= self.w as i64 {
+            0
+        } else {
+            self.get(y as usize, x as usize, ch)
+        }
+    }
+}
+
+/// Sensor quantization: float [0,1] → u8 with `apx_pixel` LSBs masked
+/// (mirrors `model.sensor_quantize`).
+pub fn sensor_quantize(images: &[f32], apx_pixel: usize) -> Vec<u8> {
+    let mask = 0xFFu8 ^ ((1u8 << apx_pixel).wrapping_sub(1));
+    images
+        .iter()
+        .map(|&v| {
+            let q = (v.clamp(0.0, 1.0) * 255.0 + 0.5).floor() as u32;
+            (q.min(255) as u8) & mask
+        })
+        .collect()
+}
+
+/// LBP code of one output position for one kernel, with the PAC
+/// skip-comparison (`apx_code` LSB samples never compared).
+#[inline]
+pub fn lbp_code(x: &TensorU8, layer: &LbpLayer, k: usize, y: usize, x_: usize,
+                apx_code: usize) -> u32 {
+    let pivot = x.get(y, x_, layer.pivot_ch[k] as usize);
+    let mut code = 0u32;
+    for (n, pt) in layer.offsets[k].iter().enumerate().skip(apx_code) {
+        let v = x.get_padded(y as i64 + pt.dy as i64, x_ as i64 + pt.dx as i64,
+                             pt.ch as usize);
+        if v >= pivot {
+            code |= 1 << n;
+        }
+    }
+    code
+}
+
+/// One LBP layer: K encoded channels through shifted-ReLU, joint-concat
+/// with the input (mirrors `model.lbp_layer_forward`).
+///
+/// Hot path (§Perf): interior pixels take a branch-free path with
+/// precomputed linear offsets; only the `pad`-wide border pays the
+/// zero-padding bounds checks.
+pub fn lbp_layer_forward(x: &TensorU8, layer: &LbpLayer, e: usize,
+                         apx_code: usize, dpu: &mut Dpu) -> TensorU8 {
+    let k_n = layer.offsets.len();
+    let mut out = TensorU8::zeros(x.h, x.w, x.c + k_n);
+    // pass-through of the joint input channels (row-contiguous copy)
+    for y in 0..x.h {
+        for x_ in 0..x.w {
+            for ch in 0..x.c {
+                out.set(y, x_, ch, x.get(y, x_, ch));
+            }
+        }
+    }
+    // precompute per-kernel linear sample offsets into x.data
+    let pad = layer
+        .offsets
+        .iter()
+        .flatten()
+        .map(|pt| pt.dy.unsigned_abs().max(pt.dx.unsigned_abs()) as usize)
+        .max()
+        .unwrap_or(0);
+    let stride_y = (x.w * x.c) as isize;
+    let stride_c = x.c as isize;
+    let lin_offsets: Vec<Vec<isize>> = layer
+        .offsets
+        .iter()
+        .map(|pts| {
+            pts.iter()
+                .map(|pt| {
+                    pt.dy as isize * stride_y + pt.dx as isize * stride_c
+                        + pt.ch as isize
+                })
+                .collect()
+        })
+        .collect();
+
+    for y in 0..x.h {
+        let interior_y = y >= pad && y + pad < x.h;
+        for x_ in 0..x.w {
+            let interior = interior_y && x_ >= pad && x_ + pad < x.w;
+            let base = ((y * x.w + x_) * x.c) as isize;
+            for k in 0..k_n {
+                let code = if interior {
+                    let pivot = x.data[(base + layer.pivot_ch[k] as isize) as usize];
+                    let mut code = 0u32;
+                    for (n, &off) in lin_offsets[k].iter().enumerate().skip(apx_code) {
+                        let v = x.data[(base + off) as usize];
+                        code |= ((v >= pivot) as u32) << n;
+                    }
+                    code
+                } else {
+                    lbp_code(x, layer, k, y, x_, apx_code)
+                };
+                out.set(y, x_, x.c + k, dpu.shifted_relu_u8(code, e as u32));
+            }
+        }
+    }
+    out
+}
+
+/// Full LBP front-end: u8 image → pooled act_bits features
+/// (mirrors `model.forward_lbp` after sensor quantization).
+pub fn forward_lbp(params: &NetParams, image: &TensorU8,
+                   dpu: &mut Dpu) -> Result<Vec<u8>> {
+    let cfg = &params.config;
+    if image.h != cfg.height || image.w != cfg.width || image.c != cfg.in_channels {
+        return Err(Error::Mapping(format!(
+            "image {}x{}x{} vs config {}x{}x{}",
+            image.h, image.w, image.c, cfg.height, cfg.width, cfg.in_channels
+        )));
+    }
+    let mut x = image.clone();
+    for layer in &params.lbp_layers {
+        x = lbp_layer_forward(&x, layer, cfg.e, cfg.apx_code, dpu);
+    }
+    // integer average pooling + exact requantize
+    let s = cfg.pool;
+    let vmax = (255 * s * s) as u32;
+    let (ph, pw) = (x.h / s, x.w / s);
+    let mut feats = Vec::with_capacity(ph * pw * x.c);
+    for py in 0..ph {
+        for px in 0..pw {
+            for ch in 0..x.c {
+                let mut sum = 0u32;
+                for dy in 0..s {
+                    for dx in 0..s {
+                        sum += x.get(py * s + dy, px * s + dx, ch) as u32;
+                    }
+                }
+                feats.push(dpu.quantize_pooled(sum, vmax, cfg.act_bits as u32)?);
+            }
+        }
+    }
+    Ok(feats)
+}
+
+/// Integer matmul `feats (u8[d]) × w (i8[d,o]) → i64[o]` — input-major
+/// iteration so every weight access is contiguous (hot path, §Perf);
+/// zero activations (common after ReLU/quantize) skip their row entirely.
+pub fn int_matmul(feats: &[u8], mlp: &crate::params::MlpLayer) -> Vec<i64> {
+    debug_assert_eq!(feats.len(), mlp.d);
+    let mut acc = vec![0i32; mlp.o];
+    for (di, &f) in feats.iter().enumerate() {
+        if f == 0 {
+            continue;
+        }
+        let f = f as i32;
+        let row = &mlp.w[di * mlp.o..(di + 1) * mlp.o];
+        for (a, &w) in acc.iter_mut().zip(row) {
+            *a += f * w as i32;
+        }
+    }
+    acc.into_iter().map(|v| v as i64).collect()
+}
+
+/// Quantized 2-layer MLP → logits (mirrors `model.mlp_forward`).
+pub fn mlp_forward(params: &NetParams, feats: &[u8], dpu: &mut Dpu) -> Result<Vec<f32>> {
+    let cfg = &params.config;
+    if feats.len() != params.mlp1.d {
+        return Err(Error::Mapping(format!(
+            "feature dim {} != {}",
+            feats.len(),
+            params.mlp1.d
+        )));
+    }
+    // layer 1: integer matmul + activation (ReLU-clip + requantize)
+    let m1 = &params.mlp1;
+    let acc1 = int_matmul(feats, m1);
+    let hidden_q: Vec<u8> = acc1
+        .iter()
+        .enumerate()
+        .map(|(o, &h)| dpu.activation(h, m1.scale[o], m1.bias[o],
+                                      cfg.act_bits as u32))
+        .collect();
+    // layer 2: integer matmul + affine → logits
+    let m2 = &params.mlp2;
+    let acc2 = int_matmul(&hidden_q, m2);
+    Ok(acc2
+        .iter()
+        .enumerate()
+        .map(|(o, &h)| dpu.affine(h, m2.scale[o], m2.bias[o]))
+        .collect())
+}
+
+/// End-to-end: float image [0,1] HWC → logits.
+pub fn apply(params: &NetParams, image_f32: &[f32], dpu: &mut Dpu) -> Result<Vec<f32>> {
+    let cfg = &params.config;
+    let expected = cfg.height * cfg.width * cfg.in_channels;
+    if image_f32.len() != expected {
+        return Err(Error::Mapping(format!(
+            "image has {} values, expected {expected}",
+            image_f32.len()
+        )));
+    }
+    let q = sensor_quantize(image_f32, cfg.apx_pixel);
+    let image = TensorU8 { h: cfg.height, w: cfg.width, c: cfg.in_channels,
+                           data: q };
+    let feats = forward_lbp(params, &image, dpu)?;
+    mlp_forward(params, &feats, dpu)
+}
+
+/// Argmax helper for classification.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::testutil::synth_params;
+    use crate::rng::Xoshiro256;
+
+    fn image(params: &NetParams, seed: u64) -> Vec<f32> {
+        let cfg = &params.config;
+        let mut rng = Xoshiro256::new(seed);
+        (0..cfg.height * cfg.width * cfg.in_channels)
+            .map(|_| rng.next_f64() as f32)
+            .collect()
+    }
+
+    #[test]
+    fn shapes_flow_through() {
+        let (_, params) = synth_params(1);
+        let mut dpu = Dpu::default();
+        let logits = apply(&params, &image(&params, 2), &mut dpu).unwrap();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(argmax(&logits) < 10);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (_, params) = synth_params(1);
+        let img = image(&params, 3);
+        let a = apply(&params, &img, &mut Dpu::default()).unwrap();
+        let b = apply(&params, &img, &mut Dpu::default()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_wrong_image_size() {
+        let (_, params) = synth_params(1);
+        assert!(apply(&params, &[0.0; 3], &mut Dpu::default()).is_err());
+    }
+
+    #[test]
+    fn sensor_quantize_matches_python() {
+        // floor(x*255+0.5) then mask
+        let xs = [0.0f32, 1.0, 0.5, 0.123, 0.999, -0.5, 2.0];
+        let q = sensor_quantize(&xs, 0);
+        assert_eq!(q, vec![0, 255, 128, 31, 255, 0, 255]);
+        let q2 = sensor_quantize(&xs, 2);
+        for (a, b) in q.iter().zip(&q2) {
+            assert_eq!(a & 0xFC, *b);
+        }
+    }
+
+    #[test]
+    fn lbp_code_respects_apx_and_padding() {
+        let (_, params) = synth_params(7);
+        let cfg = &params.config;
+        let mut img = TensorU8::zeros(cfg.height, cfg.width, cfg.in_channels);
+        // uniform 100s: every in-bounds neighbor == pivot -> bit 1;
+        // out-of-bounds neighbors are 0 < pivot -> bit 0.
+        for v in img.data.iter_mut() {
+            *v = 100;
+        }
+        let layer = &params.lbp_layers[0];
+        // interior pixel: all e bits set (>= on equality)
+        let code = lbp_code(&img, layer, 0, 5, 5, 0);
+        assert_eq!(code, 0xFF);
+        // apx=2 masks the two LSB samples
+        let code2 = lbp_code(&img, layer, 0, 5, 5, 2);
+        assert_eq!(code2, 0xFC);
+        // corner pixel: some neighbors padded to 0 -> their bits clear
+        let corner = lbp_code(&img, layer, 0, 0, 0, 0);
+        assert!(corner < 0xFF);
+    }
+
+    #[test]
+    fn joint_concat_grows_channels() {
+        let (_, params) = synth_params(9);
+        let cfg = &params.config;
+        let img = TensorU8::zeros(cfg.height, cfg.width, cfg.in_channels);
+        let mut dpu = Dpu::default();
+        let out = lbp_layer_forward(&img, &params.lbp_layers[0], cfg.e,
+                                    cfg.apx_code, &mut dpu);
+        assert_eq!(out.c, cfg.in_channels + cfg.kernels_per_layer);
+        // pass-through of the input channels
+        for y in 0..out.h {
+            for x in 0..out.w {
+                assert_eq!(out.get(y, x, 0), img.get(y, x, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn features_bounded_by_act_bits() {
+        let (_, params) = synth_params(11);
+        let mut dpu = Dpu::default();
+        let img_f = image(&params, 5);
+        let q = sensor_quantize(&img_f, 0);
+        let cfg = &params.config;
+        let img = TensorU8 { h: cfg.height, w: cfg.width, c: cfg.in_channels,
+                             data: q };
+        let feats = forward_lbp(&params, &img, &mut dpu).unwrap();
+        assert_eq!(feats.len(), cfg.feature_dim());
+        let qmax = (1u8 << cfg.act_bits) - 1;
+        assert!(feats.iter().all(|&f| f <= qmax));
+    }
+
+    /// Functional path == architectural path (ISA-simulated Algorithm 1 +
+    /// in-memory MLP) on the LBP comparisons of the first layer.
+    #[test]
+    fn functional_equals_architectural_compare() {
+        use crate::isa::Executor;
+        use crate::mapping::LbpSubarrayMap;
+        use crate::sram::{RegionLayout, SubArray};
+
+        let (_, params) = synth_params(13);
+        let cfg = &params.config;
+        let img_f = image(&params, 21);
+        let q = sensor_quantize(&img_f, cfg.apx_pixel);
+        let img = TensorU8 { h: cfg.height, w: cfg.width, c: cfg.in_channels,
+                             data: q };
+        let layer = &params.lbp_layers[0];
+
+        // functional codes for kernel 0, row 3
+        let mut pairs = Vec::new();
+        let mut want_bits = Vec::new();
+        let y = 3usize;
+        for x_ in 0..cfg.width {
+            let pivot = img.get(y, x_, layer.pivot_ch[0] as usize);
+            for pt in &layer.offsets[0] {
+                let v = img.get_padded(y as i64 + pt.dy as i64,
+                                       x_ as i64 + pt.dx as i64,
+                                       pt.ch as usize);
+                pairs.push((v, pivot));
+                want_bits.push(v >= pivot);
+            }
+        }
+        // architectural: Algorithm 1 over the mapped sub-array
+        let map = LbpSubarrayMap::new(RegionLayout::default(), 8).unwrap();
+        let mut sa = SubArray::new(256, 256);
+        let mut got_bits = Vec::new();
+        for chunk in pairs.chunks(256) {
+            map.load_lanes(&mut sa, 0, chunk).unwrap();
+            let mut ex = Executor::new(&mut sa);
+            let out = crate::lbp::parallel_compare(&mut ex, &map, 0,
+                                                   chunk.len(), 0, false)
+                .unwrap();
+            got_bits.extend(out.bits);
+        }
+        assert_eq!(got_bits, want_bits);
+    }
+}

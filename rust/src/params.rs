@@ -1,0 +1,422 @@
+//! Parser for `artifacts/<ds>.params.bin` — the Ap-LBP network parameters
+//! exported by `python/compile/model.py::save_params` (format v3).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "NSLBPPRM" | u32 version
+//! u32 × 14: H W C n_lbp K e window apx_code apx_pixel pool act_bits
+//!           w_bits hidden n_classes
+//! per LBP layer: i32 offsets[K·e·3] (dy, dx, ch), i32 pivot_ch[K]
+//! per MLP layer (×2): u32 D, u32 O, i8 w[D·O], f32 scale[O], f32 bias[O]
+//! ```
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+pub const MAGIC: &[u8; 8] = b"NSLBPPRM";
+pub const FORMAT_VERSION: u32 = 3;
+
+/// Network hyper-parameters (mirrors `ApLbpConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NetConfig {
+    pub height: usize,
+    pub width: usize,
+    pub in_channels: usize,
+    pub n_lbp_layers: usize,
+    pub kernels_per_layer: usize,
+    pub e: usize,
+    pub window: usize,
+    pub apx_code: usize,
+    pub apx_pixel: usize,
+    pub pool: usize,
+    pub act_bits: usize,
+    pub w_bits: usize,
+    pub hidden: usize,
+    pub n_classes: usize,
+}
+
+impl NetConfig {
+    /// Channels entering each LBP layer (joint concat grows them).
+    pub fn channels_after(&self) -> Vec<usize> {
+        let mut chs = vec![self.in_channels];
+        for _ in 0..self.n_lbp_layers {
+            chs.push(chs.last().unwrap() + self.kernels_per_layer);
+        }
+        chs
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        (self.height / self.pool) * (self.width / self.pool)
+            * self.channels_after()[self.n_lbp_layers]
+    }
+}
+
+/// One sampling point: window offset + source channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SamplePoint {
+    pub dy: i32,
+    pub dx: i32,
+    pub ch: i32,
+}
+
+/// One LBP layer's fixed pattern.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LbpLayer {
+    /// `[kernel][sample]` points.
+    pub offsets: Vec<Vec<SamplePoint>>,
+    /// Pivot channel per kernel.
+    pub pivot_ch: Vec<i32>,
+}
+
+/// One quantized FC layer with folded affine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MlpLayer {
+    pub d: usize,
+    pub o: usize,
+    /// Row-major `[d][o]` signed w_bits-bit weights.
+    pub w: Vec<i8>,
+    pub scale: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl MlpLayer {
+    #[inline]
+    pub fn weight(&self, di: usize, oi: usize) -> i8 {
+        self.w[di * self.o + oi]
+    }
+}
+
+/// Full parameter set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetParams {
+    pub config: NetConfig,
+    pub lbp_layers: Vec<LbpLayer>,
+    pub mlp1: MlpLayer,
+    pub mlp2: MlpLayer,
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.data.len() {
+            return Err(Error::Params(format!(
+                "truncated file: need {n} bytes at offset {}, have {}",
+                self.off,
+                self.data.len() - self.off
+            )));
+        }
+        let s = &self.data[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+}
+
+/// Parse a params file from bytes.
+pub fn parse(data: &[u8]) -> Result<NetParams> {
+    let mut c = Cursor { data, off: 0 };
+    if c.take(8)? != MAGIC {
+        return Err(Error::Params("bad magic".into()));
+    }
+    let version = c.u32()?;
+    if version != FORMAT_VERSION {
+        return Err(Error::Params(format!(
+            "format version {version}, expected {FORMAT_VERSION}"
+        )));
+    }
+    let config = NetConfig {
+        height: c.usize()?,
+        width: c.usize()?,
+        in_channels: c.usize()?,
+        n_lbp_layers: c.usize()?,
+        kernels_per_layer: c.usize()?,
+        e: c.usize()?,
+        window: c.usize()?,
+        apx_code: c.usize()?,
+        apx_pixel: c.usize()?,
+        pool: c.usize()?,
+        act_bits: c.usize()?,
+        w_bits: c.usize()?,
+        hidden: c.usize()?,
+        n_classes: c.usize()?,
+    };
+    validate_config(&config)?;
+
+    let mut lbp_layers = Vec::with_capacity(config.n_lbp_layers);
+    let chs = config.channels_after();
+    for (li, &in_ch) in chs[..config.n_lbp_layers].iter().enumerate() {
+        let mut offsets = Vec::with_capacity(config.kernels_per_layer);
+        let p = (config.window as i32 - 1) / 2;
+        for _ in 0..config.kernels_per_layer {
+            let mut pts = Vec::with_capacity(config.e);
+            for _ in 0..config.e {
+                let (dy, dx, ch) = (c.i32()?, c.i32()?, c.i32()?);
+                if dy.abs() > p || dx.abs() > p || ch < 0 || ch as usize >= in_ch {
+                    return Err(Error::Params(format!(
+                        "layer {li}: sample point ({dy},{dx},{ch}) outside \
+                         window ±{p} / {in_ch} channels"
+                    )));
+                }
+                pts.push(SamplePoint { dy, dx, ch });
+            }
+            offsets.push(pts);
+        }
+        let mut pivot_ch = Vec::with_capacity(config.kernels_per_layer);
+        for _ in 0..config.kernels_per_layer {
+            let ch = c.i32()?;
+            if ch < 0 || ch as usize >= in_ch {
+                return Err(Error::Params(format!(
+                    "layer {li}: pivot channel {ch} out of range {in_ch}"
+                )));
+            }
+            pivot_ch.push(ch);
+        }
+        lbp_layers.push(LbpLayer { offsets, pivot_ch });
+    }
+
+    let mut mlps = Vec::with_capacity(2);
+    for idx in 0..2 {
+        let d = c.usize()?;
+        let o = c.usize()?;
+        let raw = c.take(d * o)?;
+        let w: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+        let half = 1i8 << (config.w_bits - 1);
+        if let Some(&bad) = w.iter().find(|&&v| v < -half || v >= half) {
+            return Err(Error::Params(format!(
+                "mlp{}: weight {bad} outside signed {}-bit range",
+                idx + 1,
+                config.w_bits
+            )));
+        }
+        let mut scale = Vec::with_capacity(o);
+        for _ in 0..o {
+            scale.push(c.f32()?);
+        }
+        let mut bias = Vec::with_capacity(o);
+        for _ in 0..o {
+            bias.push(c.f32()?);
+        }
+        mlps.push(MlpLayer { d, o, w, scale, bias });
+    }
+    let mlp2 = mlps.pop().unwrap();
+    let mlp1 = mlps.pop().unwrap();
+
+    if c.off != data.len() {
+        return Err(Error::Params(format!(
+            "{} trailing bytes",
+            data.len() - c.off
+        )));
+    }
+    if mlp1.d != config.feature_dim() {
+        return Err(Error::Params(format!(
+            "mlp1 input dim {} != feature dim {}",
+            mlp1.d,
+            config.feature_dim()
+        )));
+    }
+    if mlp1.o != config.hidden || mlp2.d != config.hidden
+        || mlp2.o != config.n_classes
+    {
+        return Err(Error::Params("MLP shape chain mismatch".into()));
+    }
+    Ok(NetParams { config, lbp_layers, mlp1, mlp2 })
+}
+
+fn validate_config(c: &NetConfig) -> Result<()> {
+    if c.height == 0 || c.width == 0 || c.in_channels == 0 {
+        return Err(Error::Params("zero image dims".into()));
+    }
+    if c.e == 0 || c.e > 32 || c.window % 2 == 0 {
+        return Err(Error::Params(format!(
+            "bad kernel geometry e={} window={}",
+            c.e, c.window
+        )));
+    }
+    if c.apx_code >= c.e || c.apx_pixel >= 8 {
+        return Err(Error::Params("approximation bits out of range".into()));
+    }
+    if c.pool == 0 || c.height % c.pool != 0 || c.width % c.pool != 0 {
+        return Err(Error::Params(format!(
+            "pool {} does not divide {}x{}",
+            c.pool, c.height, c.width
+        )));
+    }
+    if c.act_bits == 0 || c.act_bits > 8 || c.w_bits == 0 || c.w_bits > 8 {
+        return Err(Error::Params("bad bit widths".into()));
+    }
+    Ok(())
+}
+
+/// Load from a file path.
+pub fn load(path: impl AsRef<Path>) -> Result<NetParams> {
+    let data = std::fs::read(path.as_ref()).map_err(|e| {
+        Error::Params(format!("cannot read {}: {e}", path.as_ref().display()))
+    })?;
+    parse(&data)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    /// Build a small, valid params blob for tests (and its parsed form).
+    pub fn synth_params(seed: u64) -> (Vec<u8>, NetParams) {
+        let config = NetConfig {
+            height: 12, width: 12, in_channels: 1, n_lbp_layers: 2,
+            kernels_per_layer: 4, e: 8, window: 3, apx_code: 0, apx_pixel: 0,
+            pool: 4, act_bits: 4, w_bits: 4, hidden: 16, n_classes: 10,
+        };
+        let mut rng = Xoshiro256::new(seed);
+        let chs = config.channels_after();
+        let mut lbp_layers = Vec::new();
+        for &in_ch in &chs[..config.n_lbp_layers] {
+            let mut offsets = Vec::new();
+            for _ in 0..config.kernels_per_layer {
+                let mut pts = Vec::new();
+                for _ in 0..config.e {
+                    loop {
+                        let dy = rng.range_i64(-1, 1) as i32;
+                        let dx = rng.range_i64(-1, 1) as i32;
+                        if (dy, dx) != (0, 0) {
+                            pts.push(SamplePoint {
+                                dy, dx,
+                                ch: rng.below(in_ch as u64) as i32,
+                            });
+                            break;
+                        }
+                    }
+                }
+                offsets.push(pts);
+            }
+            let pivot_ch = (0..config.kernels_per_layer)
+                .map(|_| rng.below(in_ch as u64) as i32)
+                .collect();
+            lbp_layers.push(LbpLayer { offsets, pivot_ch });
+        }
+        let mk_mlp = |rng: &mut Xoshiro256, d: usize, o: usize| MlpLayer {
+            d, o,
+            w: (0..d * o).map(|_| (rng.below(16) as i8) - 8).collect(),
+            scale: (0..o).map(|_| 0.001 + rng.next_f64() as f32 * 0.001).collect(),
+            bias: (0..o).map(|_| rng.next_f64() as f32 * 0.1).collect(),
+        };
+        let mlp1 = mk_mlp(&mut rng, config.feature_dim(), config.hidden);
+        let mlp2 = mk_mlp(&mut rng, config.hidden, config.n_classes);
+        let params = NetParams { config, lbp_layers, mlp1, mlp2 };
+        (serialize(&params), params)
+    }
+
+    /// Serializer (test-only; production params come from Python).
+    pub fn serialize(p: &NetParams) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        let c = &p.config;
+        for v in [c.height, c.width, c.in_channels, c.n_lbp_layers,
+                  c.kernels_per_layer, c.e, c.window, c.apx_code, c.apx_pixel,
+                  c.pool, c.act_bits, c.w_bits, c.hidden, c.n_classes] {
+            out.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        for layer in &p.lbp_layers {
+            for pts in &layer.offsets {
+                for pt in pts {
+                    out.extend_from_slice(&pt.dy.to_le_bytes());
+                    out.extend_from_slice(&pt.dx.to_le_bytes());
+                    out.extend_from_slice(&pt.ch.to_le_bytes());
+                }
+            }
+            for &ch in &layer.pivot_ch {
+                out.extend_from_slice(&ch.to_le_bytes());
+            }
+        }
+        for mlp in [&p.mlp1, &p.mlp2] {
+            out.extend_from_slice(&(mlp.d as u32).to_le_bytes());
+            out.extend_from_slice(&(mlp.o as u32).to_le_bytes());
+            out.extend(mlp.w.iter().map(|&v| v as u8));
+            for &s in &mlp.scale {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+            for &b in &mlp.bias {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::{serialize, synth_params};
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let (blob, params) = synth_params(1);
+        let parsed = parse(&blob).unwrap();
+        assert_eq!(parsed, params);
+        assert_eq!(serialize(&parsed), blob);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let (mut blob, _) = synth_params(2);
+        blob[0] = b'X';
+        assert!(parse(&blob).is_err());
+        let (mut blob, _) = synth_params(2);
+        blob[8] = 99;
+        assert!(parse(&blob).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing() {
+        let (blob, _) = synth_params(3);
+        assert!(parse(&blob[..blob.len() - 1]).is_err());
+        let mut extended = blob.clone();
+        extended.push(0);
+        assert!(parse(&extended).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_window_sample_point() {
+        let (_, mut params) = synth_params(4);
+        params.lbp_layers[0].offsets[0][0].dy = 5; // outside ±1 window
+        assert!(parse(&serialize(&params)).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_weight() {
+        let (_, mut params) = synth_params(5);
+        params.mlp1.w[0] = 9; // outside signed 4-bit [−8, 8)
+        assert!(parse(&serialize(&params)).is_err());
+    }
+
+    #[test]
+    fn config_derived_shapes() {
+        let (_, params) = synth_params(6);
+        assert_eq!(params.config.channels_after(), vec![1, 5, 9]);
+        assert_eq!(params.config.feature_dim(), 3 * 3 * 9);
+        assert_eq!(params.mlp1.d, 81);
+        assert_eq!(params.mlp2.o, 10);
+        assert_eq!(params.mlp1.weight(0, 0), params.mlp1.w[0]);
+    }
+}

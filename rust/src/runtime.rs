@@ -1,0 +1,241 @@
+//! PJRT runtime: load AOT-lowered HLO text artifacts and execute them.
+//!
+//! The request path is Rust-only: `make artifacts` (Python, build time)
+//! lowers the JAX/Pallas stack to HLO **text** (`artifacts/*.hlo.txt` —
+//! text, not serialized protos, because jax ≥ 0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns them),
+//! and this module compiles + runs them on the PJRT CPU client.
+//!
+//! The full-model artifacts take the MLP weights/affines as *parameters*
+//! (large constants are elided by the HLO text printer), fed from the
+//! parsed `NetParams` in the documented order:
+//! `(images, w1, s1, b1, w2, s2, b2)`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::params::NetParams;
+
+/// Manifest entry (artifacts/manifest.tsv).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: String,
+    pub output: String,
+}
+
+/// Parse `manifest.tsv`.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        Error::Runtime(format!("cannot read {}: {e}", path.display()))
+    })?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 || line.trim().is_empty() {
+            continue; // header
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            return Err(Error::Runtime(format!(
+                "manifest line {}: expected 4 columns, got {}",
+                i + 1,
+                cols.len()
+            )));
+        }
+        out.push(ManifestEntry {
+            name: cols[0].into(),
+            file: cols[1].into(),
+            inputs: cols[2].into(),
+            output: cols[3].into(),
+        });
+    }
+    Ok(out)
+}
+
+/// The runtime: one PJRT CPU client + a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            artifacts_dir: artifacts_dir.into(),
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached after the first call).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| {
+                Error::Runtime(format!("non-utf8 path {}", path.display()))
+            })?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.executables.get(name).ok_or_else(|| {
+            Error::Runtime(format!("executable {name:?} not loaded"))
+        })
+    }
+
+    /// Execute a loaded artifact; unwraps the 1-tuple output literal.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.exe(name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Run the full Ap-LBP model artifact: images (B,H,W,C) f32 in [0,1]
+    /// → logits (B, n_classes).
+    pub fn run_aplbp(&self, name: &str, params: &NetParams, images: &[f32],
+                     batch: usize) -> Result<Vec<Vec<f32>>> {
+        let cfg = &params.config;
+        let img_lit = literal_f32(
+            images,
+            &[batch, cfg.height, cfg.width, cfg.in_channels],
+        )?;
+        let mut inputs = vec![img_lit];
+        inputs.extend(mlp_literals(params)?);
+        let out = self.execute(name, &inputs)?;
+        let flat = out.to_vec::<f32>()?;
+        if flat.len() != batch * cfg.n_classes {
+            return Err(Error::Runtime(format!(
+                "model output has {} values, expected {}",
+                flat.len(),
+                batch * cfg.n_classes
+            )));
+        }
+        Ok(flat.chunks(cfg.n_classes).map(|c| c.to_vec()).collect())
+    }
+
+    /// Run the LBP front-end artifact: images → pooled int32 features.
+    pub fn run_features(&self, name: &str, params: &NetParams, images: &[f32],
+                        batch: usize) -> Result<Vec<Vec<i32>>> {
+        let cfg = &params.config;
+        let img_lit = literal_f32(
+            images,
+            &[batch, cfg.height, cfg.width, cfg.in_channels],
+        )?;
+        let out = self.execute(name, &[img_lit])?;
+        let flat = out.to_vec::<i32>()?;
+        let d = cfg.feature_dim();
+        if flat.len() != batch * d {
+            return Err(Error::Runtime(format!(
+                "features output has {} values, expected {}",
+                flat.len(),
+                batch * d
+            )));
+        }
+        Ok(flat.chunks(d).map(|c| c.to_vec()).collect())
+    }
+}
+
+/// Build an f32 literal with shape.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if data.len() != n {
+        return Err(Error::Runtime(format!(
+            "literal data {} != shape product {n}",
+            data.len()
+        )));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Build an i32 literal with shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if data.len() != n {
+        return Err(Error::Runtime(format!(
+            "literal data {} != shape product {n}",
+            data.len()
+        )));
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// The six MLP parameter literals in artifact order:
+/// `(w1 s32[D,H], s1 f32[H], b1 f32[H], w2 s32[H,C], s2 f32[C], b2 f32[C])`.
+pub fn mlp_literals(params: &NetParams) -> Result<Vec<xla::Literal>> {
+    let m1 = &params.mlp1;
+    let m2 = &params.mlp2;
+    let w1: Vec<i32> = m1.w.iter().map(|&v| v as i32).collect();
+    let w2: Vec<i32> = m2.w.iter().map(|&v| v as i32).collect();
+    Ok(vec![
+        literal_i32(&w1, &[m1.d, m1.o])?,
+        literal_f32(&m1.scale, &[m1.o])?,
+        literal_f32(&m1.bias, &[m1.o])?,
+        literal_i32(&w2, &[m2.d, m2.o])?,
+        literal_f32(&m2.scale, &[m2.o])?,
+        literal_f32(&m2.bias, &[m2.o])?,
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/ (they need artifacts);
+    // here we cover the pure helpers.
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(literal_i32(&[1, 2, 3], &[1, 3]).is_ok());
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join(format!("nslbp-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "name\tfile\tinputs\toutput\na\ta.hlo.txt\tf32[1]\tf32[1]\n",
+        )
+        .unwrap();
+        let m = read_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].name, "a");
+        std::fs::write(dir.join("manifest.tsv"), "h\nbad line\n").unwrap();
+        assert!(read_manifest(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_artifact_reports_nicely() {
+        let mut rt = Runtime::new("/nonexistent-dir").unwrap();
+        let err = rt.load("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,330 @@
+//! CMOS image-sensor front-end model (paper §4.1, Fig. 5a).
+//!
+//! A rolling-shutter m×n photodiode array with Correlated Double Sampling
+//! (CDS) and a per-column dual-mode ADC.  Two paper-specific behaviours:
+//!
+//! * **CDS**: the pixel value is the difference of the pre-/post-exposure
+//!   photodiode voltages; we model the residual read noise that CDS does
+//!   not cancel as a small Gaussian on the analog value.
+//! * **Ap-LBP ADC approximation**: the modified controller "simply avoids
+//!   pixel conversion for less significant bits" — the ADC resolves only
+//!   the top `adc_bits − skip_lsbs` bits, so each conversion costs fewer
+//!   cycles and less energy (accounted in [`crate::energy`]), and the LSBs
+//!   read as zero.  This must match `model.sensor_quantize` in the Python
+//!   build path bit-for-bit for noise-free inputs.
+//!
+//! The sensor is the head of the coordinator pipeline: `FrameSource`
+//! yields frames (either synthetic procedural scenes or frames handed in
+//! by the caller), `Adc::convert` digitizes row-by-row in rolling-shutter
+//! order.
+
+use crate::error::{Error, Result};
+use crate::rng::Xoshiro256;
+
+/// Sensor configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SensorConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub channels: usize,
+    /// Full ADC resolution (paper: 8-bit pixels).
+    pub adc_bits: usize,
+    /// Ap-LBP approximation: LSBs never converted (0 = exact).
+    pub skip_lsbs: usize,
+    /// Frame rate used for latency accounting.
+    pub fps: f64,
+}
+
+impl Default for SensorConfig {
+    fn default() -> Self {
+        Self { rows: 28, cols: 28, channels: 1, adc_bits: 8, skip_lsbs: 0,
+               fps: 1000.0 }
+    }
+}
+
+impl SensorConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.cols == 0 || self.channels == 0 {
+            return Err(Error::Config("sensor dimensions must be non-zero".into()));
+        }
+        if self.adc_bits == 0 || self.adc_bits > 16 {
+            return Err(Error::Config(format!(
+                "adc_bits {} outside 1..=16", self.adc_bits
+            )));
+        }
+        if self.skip_lsbs >= self.adc_bits {
+            return Err(Error::Config(format!(
+                "skip_lsbs {} must be < adc_bits {}",
+                self.skip_lsbs, self.adc_bits
+            )));
+        }
+        if self.fps <= 0.0 {
+            return Err(Error::Config("fps must be positive".into()));
+        }
+        Ok(())
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.rows * self.cols * self.channels
+    }
+
+    /// Bits actually resolved per conversion.
+    pub fn effective_bits(&self) -> usize {
+        self.adc_bits - self.skip_lsbs
+    }
+}
+
+/// One digitized frame: row-major `rows × cols × channels` u8 pixels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub rows: usize,
+    pub cols: usize,
+    pub channels: usize,
+    pub pixels: Vec<u8>,
+    /// Frame sequence number (rolling shutter order).
+    pub seq: u64,
+}
+
+impl Frame {
+    pub fn get(&self, r: usize, c: usize, ch: usize) -> u8 {
+        self.pixels[(r * self.cols + c) * self.channels + ch]
+    }
+}
+
+/// Dual-mode column ADC with the LSB-skip approximation.
+#[derive(Clone, Debug)]
+pub struct Adc {
+    pub config: SensorConfig,
+}
+
+impl Adc {
+    /// Digitize one analog sample in [0, 1]; mirrors
+    /// `model.sensor_quantize`: round-half-up to 8 bits, then mask LSBs.
+    pub fn convert(&self, analog: f64) -> u8 {
+        let full = (analog.clamp(0.0, 1.0) * 255.0 + 0.5).floor() as u32;
+        let full = full.min(255) as u8;
+        let mask = 0xFFu8 ^ ((1u8 << self.config.skip_lsbs).wrapping_sub(1));
+        full & mask
+    }
+
+    /// SAR-style conversion cycle count: one cycle per resolved bit.
+    pub fn cycles_per_conversion(&self) -> usize {
+        self.config.effective_bits()
+    }
+}
+
+/// Correlated double sampling: reset-level and signal-level reads whose
+/// difference cancels pixel fixed-pattern offset; residual temporal noise
+/// remains.
+#[derive(Clone, Debug)]
+pub struct Cds {
+    /// Residual temporal noise sigma (fraction of full scale).
+    pub noise_sigma: f64,
+}
+
+impl Default for Cds {
+    fn default() -> Self {
+        Self { noise_sigma: 0.0 } // noise-free by default: bit-exact path
+    }
+}
+
+impl Cds {
+    /// Apply CDS to a scene radiance sample: subtracting the reset sample
+    /// cancels `offset` exactly; temporal noise is left over.
+    pub fn sample(&self, radiance: f64, offset: f64, rng: &mut Xoshiro256) -> f64 {
+        let reset = offset + self.read_noise(rng);
+        let signal = radiance + offset + self.read_noise(rng);
+        signal - reset
+    }
+
+    fn read_noise(&self, rng: &mut Xoshiro256) -> f64 {
+        if self.noise_sigma == 0.0 {
+            0.0
+        } else {
+            rng.gauss_ms(0.0, self.noise_sigma / std::f64::consts::SQRT_2)
+        }
+    }
+}
+
+/// Frame source abstraction for the coordinator.
+pub trait FrameSource: Send {
+    /// Next digitized frame, or `None` when the stream ends.
+    fn next_frame(&mut self) -> Option<Frame>;
+    fn config(&self) -> &SensorConfig;
+}
+
+/// Sensor that digitizes caller-provided analog scenes (e.g. dataset
+/// images replayed as radiance maps) through CDS + ADC in rolling-shutter
+/// row order.
+pub struct ReplaySensor {
+    config: SensorConfig,
+    cds: Cds,
+    adc: Adc,
+    scenes: Vec<Vec<f64>>, // radiance in [0,1], row-major
+    fixed_offsets: Vec<f64>,
+    next: usize,
+    rng: Xoshiro256,
+}
+
+impl ReplaySensor {
+    pub fn new(config: SensorConfig, scenes: Vec<Vec<f64>>, seed: u64) -> Result<Self> {
+        config.validate()?;
+        for (i, s) in scenes.iter().enumerate() {
+            if s.len() != config.pixels() {
+                return Err(Error::Config(format!(
+                    "scene {i} has {} samples, sensor needs {}",
+                    s.len(),
+                    config.pixels()
+                )));
+            }
+        }
+        let mut rng = Xoshiro256::new(seed);
+        // per-pixel fixed-pattern offsets (cancelled by CDS)
+        let fixed_offsets =
+            (0..config.pixels()).map(|_| rng.range_f64(0.0, 0.05)).collect();
+        Ok(Self {
+            adc: Adc { config },
+            cds: Cds::default(),
+            config,
+            scenes,
+            fixed_offsets,
+            next: 0,
+            rng,
+        })
+    }
+
+    /// Enable residual temporal noise (fraction of full scale).
+    pub fn with_noise(mut self, sigma: f64) -> Self {
+        self.cds = Cds { noise_sigma: sigma };
+        self
+    }
+}
+
+impl FrameSource for ReplaySensor {
+    fn next_frame(&mut self) -> Option<Frame> {
+        if self.next >= self.scenes.len() {
+            return None;
+        }
+        let scene = &self.scenes[self.next];
+        let mut pixels = Vec::with_capacity(self.config.pixels());
+        // rolling shutter: rows exposed and read out sequentially
+        for r in 0..self.config.rows {
+            for c in 0..self.config.cols {
+                for ch in 0..self.config.channels {
+                    let idx = (r * self.config.cols + c) * self.config.channels + ch;
+                    let analog = self.cds.sample(
+                        scene[idx],
+                        self.fixed_offsets[idx],
+                        &mut self.rng,
+                    );
+                    pixels.push(self.adc.convert(analog));
+                }
+            }
+        }
+        let frame = Frame {
+            rows: self.config.rows,
+            cols: self.config.cols,
+            channels: self.config.channels,
+            pixels,
+            seq: self.next as u64,
+        };
+        self.next += 1;
+        Some(frame)
+    }
+
+    fn config(&self) -> &SensorConfig {
+        &self.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        SensorConfig::default().validate().unwrap();
+        assert!(SensorConfig { skip_lsbs: 8, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(SensorConfig { rows: 0, ..Default::default() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn adc_matches_python_sensor_quantize() {
+        // floor(x*255 + 0.5) masked — same formula as model.sensor_quantize
+        let adc = Adc { config: SensorConfig::default() };
+        assert_eq!(adc.convert(0.0), 0);
+        assert_eq!(adc.convert(1.0), 255);
+        assert_eq!(adc.convert(0.5), 128); // 127.5+0.5 = 128
+        let adc2 = Adc {
+            config: SensorConfig { skip_lsbs: 2, ..Default::default() },
+        };
+        for i in 0..=100 {
+            let x = i as f64 / 100.0;
+            assert_eq!(adc2.convert(x), adc.convert(x) & 0xFC);
+        }
+    }
+
+    #[test]
+    fn adc_skip_reduces_cycles() {
+        let full = Adc { config: SensorConfig::default() };
+        let apx = Adc {
+            config: SensorConfig { skip_lsbs: 2, ..Default::default() },
+        };
+        assert_eq!(full.cycles_per_conversion(), 8);
+        assert_eq!(apx.cycles_per_conversion(), 6);
+    }
+
+    #[test]
+    fn cds_cancels_fixed_offset() {
+        let cds = Cds::default();
+        let mut rng = Xoshiro256::new(1);
+        let v = cds.sample(0.7, 0.33, &mut rng);
+        assert!((v - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replay_sensor_noise_free_is_bit_exact() {
+        let cfg = SensorConfig { rows: 4, cols: 4, ..Default::default() };
+        let scene: Vec<f64> = (0..16).map(|i| i as f64 / 15.0).collect();
+        let mut s = ReplaySensor::new(cfg, vec![scene.clone()], 9).unwrap();
+        let f = s.next_frame().unwrap();
+        for (i, &p) in f.pixels.iter().enumerate() {
+            let want = ((scene[i] * 255.0 + 0.5).floor() as u32).min(255) as u8;
+            assert_eq!(p, want);
+        }
+        assert!(s.next_frame().is_none());
+    }
+
+    #[test]
+    fn replay_sensor_rejects_bad_scene_size() {
+        let cfg = SensorConfig { rows: 4, cols: 4, ..Default::default() };
+        assert!(ReplaySensor::new(cfg, vec![vec![0.0; 7]], 0).is_err());
+    }
+
+    #[test]
+    fn frame_indexing() {
+        let cfg = SensorConfig { rows: 2, cols: 3, channels: 2, ..Default::default() };
+        let scene: Vec<f64> = (0..12).map(|i| i as f64 / 255.0).collect();
+        let mut s = ReplaySensor::new(cfg, vec![scene], 0).unwrap();
+        let f = s.next_frame().unwrap();
+        assert_eq!(f.get(1, 2, 1), f.pixels[11]);
+        assert_eq!(f.seq, 0);
+    }
+
+    #[test]
+    fn noisy_sensor_stays_close() {
+        let cfg = SensorConfig { rows: 8, cols: 8, ..Default::default() };
+        let scene = vec![0.5; 64];
+        let mut s = ReplaySensor::new(cfg, vec![scene], 3)
+            .unwrap()
+            .with_noise(0.01);
+        let f = s.next_frame().unwrap();
+        for &p in &f.pixels {
+            assert!((p as i32 - 128).abs() < 16, "pixel {p} too far from 128");
+        }
+    }
+}

@@ -1,0 +1,502 @@
+//! SRAM geometry: computational sub-arrays → mats → banks → cache slice.
+//!
+//! Paper §4.1 / Fig. 5: a 2.5 MB cache slice holds 80 × 32 KB banks
+//! (organized in 20 ways); each bank has two 16 KB mats; each mat has two
+//! 8 KB computational sub-arrays of 256 rows × 256 columns of read-write-
+//! decoupled 8T cells.  Fig. 6(a): each compute sub-array is split into the
+//! P (pixel, 64 rows), C (pivot, 64), Resv (64), W (weight, 32) and
+//! I (input, 32) regions.
+//!
+//! [`SubArray`] is the bit-accurate storage + bulk-bitwise compute model:
+//! rows are stored packed, 64 columns per `u64` word, and the three-row-
+//! activation operations of the SA (§4.1) are word-parallel — this packing
+//! *is* the performance model of the 256-wide bit-line parallelism (and the
+//! crate's hot path; see benches/hotpath.rs).
+
+use crate::error::{Error, Result};
+
+/// Row-region split of a computational sub-array (Fig. 6a).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegionLayout {
+    pub pixel_rows: usize,
+    pub pivot_rows: usize,
+    pub reserved_rows: usize,
+    pub weight_rows: usize,
+    pub input_rows: usize,
+}
+
+impl Default for RegionLayout {
+    fn default() -> Self {
+        // Paper: P=64, C=64, Resv=64, W=32, I=32 (total 256).
+        Self {
+            pixel_rows: 64,
+            pivot_rows: 64,
+            reserved_rows: 64,
+            weight_rows: 32,
+            input_rows: 32,
+        }
+    }
+}
+
+/// Named region of a sub-array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Region {
+    /// P: transposed pixel bit-planes.
+    Pixel,
+    /// C: replicated transposed pivot bit-planes.
+    Pivot,
+    /// Resv: Result_array, LBP_array, all-zero/all-one rows, scratch.
+    Reserved,
+    /// W: MLP weight bit-planes.
+    Weight,
+    /// I: MLP input-activation bit-planes.
+    Input,
+}
+
+impl RegionLayout {
+    pub fn total_rows(&self) -> usize {
+        self.pixel_rows + self.pivot_rows + self.reserved_rows
+            + self.weight_rows + self.input_rows
+    }
+
+    /// First row index of `region`.
+    pub fn base(&self, region: Region) -> usize {
+        match region {
+            Region::Pixel => 0,
+            Region::Pivot => self.pixel_rows,
+            Region::Reserved => self.pixel_rows + self.pivot_rows,
+            Region::Weight => self.pixel_rows + self.pivot_rows + self.reserved_rows,
+            Region::Input => {
+                self.pixel_rows + self.pivot_rows + self.reserved_rows
+                    + self.weight_rows
+            }
+        }
+    }
+
+    /// Row count of `region`.
+    pub fn len(&self, region: Region) -> usize {
+        match region {
+            Region::Pixel => self.pixel_rows,
+            Region::Pivot => self.pivot_rows,
+            Region::Reserved => self.reserved_rows,
+            Region::Weight => self.weight_rows,
+            Region::Input => self.input_rows,
+        }
+    }
+
+    /// Global row index of `offset` within `region`, bounds-checked.
+    pub fn row(&self, region: Region, offset: usize) -> Result<usize> {
+        if offset >= self.len(region) {
+            return Err(Error::Mapping(format!(
+                "row {offset} out of range for {region:?} (len {})",
+                self.len(region)
+            )));
+        }
+        Ok(self.base(region) + offset)
+    }
+
+    /// Which region a global row index falls in.
+    pub fn region_of(&self, row: usize) -> Option<Region> {
+        let mut base = 0;
+        for r in [Region::Pixel, Region::Pivot, Region::Reserved,
+                  Region::Weight, Region::Input] {
+            base += self.len(r);
+            if row < base {
+                return Some(r);
+            }
+        }
+        None
+    }
+}
+
+/// Whole-cache geometry (paper Fig. 5a).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheGeometry {
+    pub banks: usize,
+    pub mats_per_bank: usize,
+    pub subarrays_per_mat: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub region: RegionLayout,
+}
+
+impl Default for CacheGeometry {
+    fn default() -> Self {
+        // 80 banks × 2 mats × 2 sub-arrays × (256×256 bits = 8 KB) = 2.5 MB
+        Self {
+            banks: 80,
+            mats_per_bank: 2,
+            subarrays_per_mat: 2,
+            rows: 256,
+            cols: 256,
+            region: RegionLayout::default(),
+        }
+    }
+}
+
+impl CacheGeometry {
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.cols == 0 || self.banks == 0
+            || self.mats_per_bank == 0 || self.subarrays_per_mat == 0
+        {
+            return Err(Error::Config("cache dimensions must be non-zero".into()));
+        }
+        if self.region.total_rows() != self.rows {
+            return Err(Error::Config(format!(
+                "region rows {} != sub-array rows {}",
+                self.region.total_rows(),
+                self.rows
+            )));
+        }
+        if self.cols % 64 != 0 {
+            return Err(Error::Config(format!(
+                "cols must be a multiple of 64 (u64 packing), got {}",
+                self.cols
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn total_subarrays(&self) -> usize {
+        self.banks * self.mats_per_bank * self.subarrays_per_mat
+    }
+
+    /// Sub-array capacity in bytes (paper: 8 KB).
+    pub fn subarray_bytes(&self) -> usize {
+        self.rows * self.cols / 8
+    }
+
+    /// Total slice capacity in bytes (paper: 2.5 MB).
+    pub fn total_bytes(&self) -> usize {
+        self.total_subarrays() * self.subarray_bytes()
+    }
+}
+
+/// One computational sub-array: packed bit matrix + bulk-bitwise ops.
+///
+/// Storage is `rows × (cols/64)` little-endian `u64` words; column `c` of
+/// row `r` lives in word `c / 64`, bit `c % 64`.  All compute ops are
+/// whole-row (all 256 bit-lines fire in one memory cycle — the paper's
+/// single-cycle claim), operating word-parallel.
+#[derive(Clone, Debug)]
+pub struct SubArray {
+    rows: usize,
+    cols: usize,
+    words_per_row: usize,
+    data: Vec<u64>,
+}
+
+impl SubArray {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(cols % 64 == 0, "cols must be a multiple of 64");
+        let words_per_row = cols / 64;
+        Self { rows, cols, words_per_row, data: vec![0; rows * words_per_row] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn check_row(&self, row: usize) -> Result<()> {
+        if row >= self.rows {
+            return Err(Error::Isa(format!(
+                "row address {row} out of range (rows={})",
+                self.rows
+            )));
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn row_slice(&self, row: usize) -> &[u64] {
+        &self.data[row * self.words_per_row..(row + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    fn row_slice_mut(&mut self, row: usize) -> &mut [u64] {
+        &mut self.data[row * self.words_per_row..(row + 1) * self.words_per_row]
+    }
+
+    /// Read a single bit (standard decoupled-read-port access).
+    pub fn get(&self, row: usize, col: usize) -> Result<bool> {
+        self.check_row(row)?;
+        if col >= self.cols {
+            return Err(Error::Isa(format!("col {col} out of range")));
+        }
+        Ok(self.row_slice(row)[col / 64] >> (col % 64) & 1 == 1)
+    }
+
+    /// Write a single bit (WWL + WBL/WBLB access).
+    pub fn set(&mut self, row: usize, col: usize, v: bool) -> Result<()> {
+        self.check_row(row)?;
+        if col >= self.cols {
+            return Err(Error::Isa(format!("col {col} out of range")));
+        }
+        let w = &mut self.row_slice_mut(row)[col / 64];
+        if v {
+            *w |= 1 << (col % 64);
+        } else {
+            *w &= !(1 << (col % 64));
+        }
+        Ok(())
+    }
+
+    /// Read a whole row as packed words (one read cycle).
+    pub fn read_row(&self, row: usize) -> Result<Vec<u64>> {
+        self.check_row(row)?;
+        Ok(self.row_slice(row).to_vec())
+    }
+
+    /// Read a whole row into a caller buffer without allocating.
+    pub fn read_row_into(&self, row: usize, out: &mut [u64]) -> Result<()> {
+        self.check_row(row)?;
+        out.copy_from_slice(self.row_slice(row));
+        Ok(())
+    }
+
+    /// Borrow a row's packed words directly (hot path; no copy).
+    pub fn row_words(&self, row: usize) -> Result<&[u64]> {
+        self.check_row(row)?;
+        Ok(self.row_slice(row))
+    }
+
+    /// Write a whole row from packed words (one write cycle).
+    pub fn write_row(&mut self, row: usize, words: &[u64]) -> Result<()> {
+        self.check_row(row)?;
+        if words.len() != self.words_per_row {
+            return Err(Error::Isa(format!(
+                "row write width {} != {}",
+                words.len() * 64,
+                self.cols
+            )));
+        }
+        self.row_slice_mut(row).copy_from_slice(words);
+        Ok(())
+    }
+
+    /// Fill a row with all-zero or all-one (the `NS-LBP ini` opcode).
+    pub fn fill_row(&mut self, row: usize, ones: bool) -> Result<()> {
+        self.check_row(row)?;
+        let v = if ones { u64::MAX } else { 0 };
+        self.row_slice_mut(row).fill(v);
+        Ok(())
+    }
+
+    /// Two-row bulk op helper: applies `f` word-wise to rows `a`, `b`.
+    pub fn rowwise2(&self, a: usize, b: usize,
+                    mut f: impl FnMut(u64, u64) -> u64) -> Result<Vec<u64>> {
+        self.check_row(a)?;
+        self.check_row(b)?;
+        let (ra, rb) = (self.row_slice(a), self.row_slice(b));
+        Ok(ra.iter().zip(rb).map(|(&x, &y)| f(x, y)).collect())
+    }
+
+    /// Three-row bulk op helper (the three-RWL activation of §4.1).
+    pub fn rowwise3(&self, a: usize, b: usize, c: usize,
+                    mut f: impl FnMut(u64, u64, u64) -> u64) -> Result<Vec<u64>> {
+        self.check_row(a)?;
+        self.check_row(b)?;
+        self.check_row(c)?;
+        let (ra, rb, rc) = (self.row_slice(a), self.row_slice(b), self.row_slice(c));
+        Ok(ra
+            .iter()
+            .zip(rb)
+            .zip(rc)
+            .map(|((&x, &y), &z)| f(x, y, z))
+            .collect())
+    }
+
+    /// Allocation-free two-row op: `dest ← f(a, b)` in place (hot path —
+    /// models the same single-cycle activation as [`Self::rowwise2`], the
+    /// result latching directly through the decoupled write port).
+    pub fn op2_into(&mut self, a: usize, b: usize, dest: usize,
+                    f: impl Fn(u64, u64) -> u64) -> Result<()> {
+        self.check_row(a)?;
+        self.check_row(b)?;
+        self.check_row(dest)?;
+        let w = self.words_per_row;
+        for i in 0..w {
+            let x = self.data[a * w + i];
+            let y = self.data[b * w + i];
+            self.data[dest * w + i] = f(x, y);
+        }
+        Ok(())
+    }
+
+    /// Allocation-free three-row op: `dest ← f(a, b, c)` in place.
+    pub fn op3_into(&mut self, a: usize, b: usize, c: usize, dest: usize,
+                    f: impl Fn(u64, u64, u64) -> u64) -> Result<()> {
+        self.check_row(a)?;
+        self.check_row(b)?;
+        self.check_row(c)?;
+        self.check_row(dest)?;
+        let w = self.words_per_row;
+        for i in 0..w {
+            let x = self.data[a * w + i];
+            let y = self.data[b * w + i];
+            let z = self.data[c * w + i];
+            self.data[dest * w + i] = f(x, y, z);
+        }
+        Ok(())
+    }
+
+    /// Allocation-free row copy.
+    pub fn copy_row(&mut self, src: usize, dest: usize) -> Result<()> {
+        self.check_row(src)?;
+        self.check_row(dest)?;
+        let w = self.words_per_row;
+        self.data.copy_within(src * w..(src + 1) * w, dest * w);
+        Ok(())
+    }
+}
+
+/// Address of one sub-array inside the cache slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SubArrayId {
+    pub bank: usize,
+    pub mat: usize,
+    pub subarray: usize,
+}
+
+/// The full near-sensor cache slice: `banks × mats × subarrays` compute
+/// sub-arrays plus the geometry they share.
+#[derive(Clone, Debug)]
+pub struct CacheSlice {
+    pub geometry: CacheGeometry,
+    arrays: Vec<SubArray>,
+}
+
+impl CacheSlice {
+    pub fn new(geometry: CacheGeometry) -> Result<Self> {
+        geometry.validate()?;
+        let n = geometry.total_subarrays();
+        let arrays = (0..n)
+            .map(|_| SubArray::new(geometry.rows, geometry.cols))
+            .collect();
+        Ok(Self { geometry, arrays })
+    }
+
+    fn index(&self, id: SubArrayId) -> Result<usize> {
+        let g = &self.geometry;
+        if id.bank >= g.banks || id.mat >= g.mats_per_bank
+            || id.subarray >= g.subarrays_per_mat
+        {
+            return Err(Error::Mapping(format!("sub-array id out of range: {id:?}")));
+        }
+        Ok((id.bank * g.mats_per_bank + id.mat) * g.subarrays_per_mat + id.subarray)
+    }
+
+    pub fn subarray(&self, id: SubArrayId) -> Result<&SubArray> {
+        Ok(&self.arrays[self.index(id)?])
+    }
+
+    pub fn subarray_mut(&mut self, id: SubArrayId) -> Result<&mut SubArray> {
+        let i = self.index(id)?;
+        Ok(&mut self.arrays[i])
+    }
+
+    /// Iterate all sub-array ids in (bank, mat, subarray) order.
+    pub fn ids(&self) -> impl Iterator<Item = SubArrayId> + '_ {
+        let g = self.geometry;
+        (0..g.banks).flat_map(move |bank| {
+            (0..g.mats_per_bank).flat_map(move |mat| {
+                (0..g.subarrays_per_mat)
+                    .map(move |subarray| SubArrayId { bank, mat, subarray })
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_geometry_is_paper() {
+        let g = CacheGeometry::default();
+        g.validate().unwrap();
+        assert_eq!(g.subarray_bytes(), 8 * 1024);               // 8 KB
+        assert_eq!(g.total_subarrays(), 320);                   // 80×2×2
+        assert_eq!(g.total_bytes(), 2 * 1024 * 1024 + 512 * 1024); // 2.5 MB
+    }
+
+    #[test]
+    fn region_layout_covers_all_rows() {
+        let r = RegionLayout::default();
+        assert_eq!(r.total_rows(), 256);
+        assert_eq!(r.base(Region::Pixel), 0);
+        assert_eq!(r.base(Region::Pivot), 64);
+        assert_eq!(r.base(Region::Reserved), 128);
+        assert_eq!(r.base(Region::Weight), 192);
+        assert_eq!(r.base(Region::Input), 224);
+        for row in 0..256 {
+            assert!(r.region_of(row).is_some());
+        }
+        assert_eq!(r.region_of(256), None);
+    }
+
+    #[test]
+    fn region_row_bounds_checked() {
+        let r = RegionLayout::default();
+        assert_eq!(r.row(Region::Pivot, 0).unwrap(), 64);
+        assert!(r.row(Region::Weight, 32).is_err());
+    }
+
+    #[test]
+    fn subarray_bit_roundtrip() {
+        let mut sa = SubArray::new(256, 256);
+        sa.set(3, 200, true).unwrap();
+        assert!(sa.get(3, 200).unwrap());
+        sa.set(3, 200, false).unwrap();
+        assert!(!sa.get(3, 200).unwrap());
+        assert!(sa.get(256, 0).is_err());
+        assert!(sa.get(0, 256).is_err());
+    }
+
+    #[test]
+    fn fill_and_rowwise_ops() {
+        let mut sa = SubArray::new(8, 128);
+        sa.fill_row(0, true).unwrap();
+        sa.fill_row(1, false).unwrap();
+        let xor = sa.rowwise2(0, 1, |a, b| a ^ b).unwrap();
+        assert!(xor.iter().all(|&w| w == u64::MAX));
+        let maj = sa.rowwise3(0, 0, 1, |a, b, c| (a & b) | (a & c) | (b & c)).unwrap();
+        assert!(maj.iter().all(|&w| w == u64::MAX));
+    }
+
+    #[test]
+    fn geometry_rejects_bad_region_split() {
+        let mut g = CacheGeometry::default();
+        g.region.pixel_rows = 63;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn cache_slice_addressing() {
+        let g = CacheGeometry { banks: 2, mats_per_bank: 2, subarrays_per_mat: 2,
+                                ..CacheGeometry::default() };
+        let mut slice = CacheSlice::new(g).unwrap();
+        let id = SubArrayId { bank: 1, mat: 0, subarray: 1 };
+        slice.subarray_mut(id).unwrap().set(0, 0, true).unwrap();
+        assert!(slice.subarray(id).unwrap().get(0, 0).unwrap());
+        // a different sub-array is untouched
+        let other = SubArrayId { bank: 0, mat: 0, subarray: 0 };
+        assert!(!slice.subarray(other).unwrap().get(0, 0).unwrap());
+        assert!(slice
+            .subarray(SubArrayId { bank: 2, mat: 0, subarray: 0 })
+            .is_err());
+        assert_eq!(slice.ids().count(), 8);
+    }
+
+    #[test]
+    fn row_words_matches_read_row() {
+        let mut sa = SubArray::new(4, 192);
+        sa.set(2, 100, true).unwrap();
+        assert_eq!(sa.row_words(2).unwrap(), sa.read_row(2).unwrap().as_slice());
+    }
+}

@@ -1,0 +1,211 @@
+//! Minimal property-testing framework (proptest is unavailable offline).
+//!
+//! Provides value generators over [`crate::rng::Xoshiro256`], a case runner
+//! with failure reporting (seed + iteration, so any failure is replayable),
+//! and greedy input shrinking for the common container/scalar cases.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries bypass the crate's rpath to libxla_extension)
+//! use ns_lbp::testing::{Config, Gen, check};
+//!
+//! check(Config::default().cases(64), "addition commutes", |g| {
+//!     let a = g.u32_below(1000);
+//!     let b = g.u32_below(1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::rng::Xoshiro256;
+
+/// Runner configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: u32,
+    /// Base seed; case `i` runs with seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // NSLBP_PROPTEST_SEED overrides for replay; NSLBP_PROPTEST_CASES for
+        // deeper local runs.
+        let base_seed = std::env::var("NSLBP_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA5A5_5A5A);
+        let cases = std::env::var("NSLBP_PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        Self { cases, base_seed }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+}
+
+/// Per-case generator handle passed to the property closure.
+pub struct Gen {
+    rng: Xoshiro256,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Xoshiro256::new(seed) }
+    }
+
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn u8(&mut self) -> u8 {
+        self.rng.next_u64() as u8
+    }
+
+    pub fn u32_below(&mut self, n: u32) -> u32 {
+        self.rng.below(n as u64) as u32
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Vector of length `[min_len, max_len]` filled by `f`.
+    pub fn vec<T>(&mut self, min_len: usize, max_len: usize,
+                  mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Vector of `n` bytes.
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        (0..n).map(|_| self.u8()).collect()
+    }
+}
+
+/// Run `property` over `config.cases` random cases; panic with the seed of
+/// the first failing case.  The property signals failure by panicking
+/// (e.g. via `assert!`), matching std test ergonomics.
+pub fn check<F>(config: Config, name: &str, mut property: F)
+where
+    F: FnMut(&mut Gen),
+{
+    for i in 0..config.cases {
+        let seed = config.base_seed.wrapping_add(i as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            property(&mut g);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {i} (replay with \
+                 NSLBP_PROPTEST_SEED={seed} NSLBP_PROPTEST_CASES=1): {msg}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink of a failing `Vec` input: repeatedly tries dropping chunks
+/// while the predicate still fails; returns a locally minimal failing input.
+pub fn shrink_vec<T: Clone>(input: &[T], fails: impl Fn(&[T]) -> bool) -> Vec<T> {
+    let mut cur: Vec<T> = input.to_vec();
+    debug_assert!(fails(&cur), "shrink_vec called with a passing input");
+    let mut chunk = cur.len().max(1) / 2;
+    while chunk > 0 {
+        let mut i = 0;
+        while i + chunk <= cur.len() {
+            let mut candidate = cur.clone();
+            candidate.drain(i..i + chunk);
+            if fails(&candidate) {
+                cur = candidate; // keep the smaller failing input
+            } else {
+                i += chunk;
+            }
+        }
+        chunk /= 2;
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(Config::default().cases(16), "trivial", |g| {
+            let v = g.vec(0, 10, |g| g.u8());
+            assert!(v.len() <= 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures_with_seed() {
+        check(Config::default().cases(4), "always fails", |_| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let x = g.i64_in(-5, 5);
+            assert!((-5..=5).contains(&x));
+            let u = g.u32_below(3);
+            assert!(u < 3);
+            let f = g.f64_in(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn shrink_finds_minimal_counterexample() {
+        // property: "no element equals 42" — minimal failing input is [42]
+        let input: Vec<u32> = (0..100).collect();
+        let failing: Vec<u32> = input.iter().cloned().chain([42]).collect();
+        let shrunk = shrink_vec(&failing, |v| v.contains(&42));
+        assert_eq!(shrunk, vec![42]);
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first = Vec::new();
+        check(Config::default().cases(8).seed(99), "record", |g| {
+            first.push(g.u32_below(1_000_000));
+        });
+        let mut second = Vec::new();
+        check(Config::default().cases(8).seed(99), "record", |g| {
+            second.push(g.u32_below(1_000_000));
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,208 @@
+//! Golden-model equivalence: the three implementations of Ap-LBP must
+//! agree on the artifact inputs.
+//!
+//! 1. AOT JAX/Pallas HLO executed via PJRT (`artifacts/*.hlo.txt`);
+//! 2. the Rust functional model (`ns_lbp::model`);
+//! 3. the architectural path (Algorithm 1 + in-memory MLP over the
+//!    simulated sub-arrays) — checked inside the coordinator.
+//!
+//! Requires `make artifacts`.
+
+use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
+use ns_lbp::dpu::Dpu;
+use ns_lbp::model;
+use ns_lbp::params;
+use ns_lbp::rng::Xoshiro256;
+use ns_lbp::runtime::Runtime;
+use ns_lbp::sensor::{Frame, FrameSource, SensorConfig};
+use ns_lbp::sram::SubArray;
+
+const BATCH: usize = 4; // the artifacts' static batch size
+
+fn artifacts_dir() -> String {
+    std::env::var("NSLBP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn load(dataset: &str) -> (params::NetParams, Runtime) {
+    let dir = artifacts_dir();
+    let p = params::load(format!("{dir}/{dataset}.params.bin"))
+        .expect("params artifact missing — run `make artifacts`");
+    let rt = Runtime::new(&dir).expect("PJRT client");
+    (p, rt)
+}
+
+fn random_images(p: &params::NetParams, seed: u64, n: usize) -> Vec<f32> {
+    let cfg = &p.config;
+    let mut rng = Xoshiro256::new(seed);
+    (0..n * cfg.height * cfg.width * cfg.in_channels)
+        .map(|_| rng.next_f64() as f32)
+        .collect()
+}
+
+#[test]
+fn pjrt_features_match_functional_model_mnist() {
+    let (p, mut rt) = load("mnist");
+    rt.load("features_mnist").unwrap();
+    let images = random_images(&p, 11, BATCH);
+    let feats_pjrt = rt.run_features("features_mnist", &p, &images, BATCH).unwrap();
+
+    let cfg = &p.config;
+    let npix = cfg.height * cfg.width * cfg.in_channels;
+    for b in 0..BATCH {
+        let img = &images[b * npix..(b + 1) * npix];
+        let q = model::sensor_quantize(img, cfg.apx_pixel);
+        let t = model::TensorU8 { h: cfg.height, w: cfg.width,
+                                  c: cfg.in_channels, data: q };
+        let feats_rust = model::forward_lbp(&p, &t, &mut Dpu::default()).unwrap();
+        let rust_i32: Vec<i32> = feats_rust.iter().map(|&v| v as i32).collect();
+        assert_eq!(feats_pjrt[b], rust_i32, "batch {b}: integer features differ");
+    }
+}
+
+#[test]
+fn pjrt_logits_match_functional_model_mnist() {
+    let (p, mut rt) = load("mnist");
+    rt.load("aplbp_mnist").unwrap();
+    let images = random_images(&p, 13, BATCH);
+    let logits_pjrt = rt.run_aplbp("aplbp_mnist", &p, &images, BATCH).unwrap();
+
+    let cfg = &p.config;
+    let npix = cfg.height * cfg.width * cfg.in_channels;
+    for b in 0..BATCH {
+        let img = &images[b * npix..(b + 1) * npix];
+        let logits_rust = model::apply(&p, img, &mut Dpu::default()).unwrap();
+        for (i, (a, w)) in logits_pjrt[b].iter().zip(&logits_rust).enumerate() {
+            assert!(
+                (a - w).abs() <= 1e-4 * w.abs().max(1.0),
+                "batch {b} logit {i}: pjrt {a} vs rust {w}"
+            );
+        }
+        assert_eq!(model::argmax(&logits_pjrt[b]), model::argmax(&logits_rust));
+    }
+}
+
+#[test]
+fn pjrt_logits_match_functional_model_svhn() {
+    let (p, mut rt) = load("svhn");
+    rt.load("aplbp_svhn").unwrap();
+    let images = random_images(&p, 17, BATCH);
+    let logits_pjrt = rt.run_aplbp("aplbp_svhn", &p, &images, BATCH).unwrap();
+    let cfg = &p.config;
+    let npix = cfg.height * cfg.width * cfg.in_channels;
+    for b in 0..BATCH {
+        let img = &images[b * npix..(b + 1) * npix];
+        let logits_rust = model::apply(&p, img, &mut Dpu::default()).unwrap();
+        for (a, w) in logits_pjrt[b].iter().zip(&logits_rust) {
+            assert!((a - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "pjrt {a} vs rust {w}");
+        }
+    }
+}
+
+#[test]
+fn architectural_path_matches_pjrt_end_to_end() {
+    // the full triangle: arch sim == functional == PJRT on one frame batch
+    let (p, mut rt) = load("mnist");
+    rt.load("aplbp_mnist").unwrap();
+    let cfg = p.config;
+    let images = random_images(&p, 19, BATCH);
+    let logits_pjrt = rt.run_aplbp("aplbp_mnist", &p, &images, BATCH).unwrap();
+
+    let coord = Coordinator::new(
+        p.clone(),
+        CoordinatorConfig {
+            arch: ArchSim { lbp: true, mlp: true, early_exit: false },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let g = coord.config.system.cache;
+    let mut scratch = SubArray::new(g.rows, g.cols);
+    let npix = cfg.height * cfg.width * cfg.in_channels;
+    for b in 0..BATCH {
+        let img = &images[b * npix..(b + 1) * npix];
+        let q = model::sensor_quantize(img, cfg.apx_pixel);
+        let frame = Frame { rows: cfg.height, cols: cfg.width,
+                            channels: cfg.in_channels, pixels: q,
+                            seq: b as u64 };
+        let report = coord.process_frame(&frame, &mut scratch).unwrap();
+        assert_eq!(report.arch_mismatches, 0, "frame {b}: arch != functional");
+        for (a, w) in report.logits.iter().zip(&logits_pjrt[b]) {
+            assert!((a - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "frame {b}: arch {a} vs pjrt {w}");
+        }
+    }
+}
+
+#[test]
+fn unit_kernel_lbp_encode_matches_rust() {
+    // the standalone L1 Pallas kernel artifact vs the scalar oracle
+    let (_, mut rt) = load("mnist");
+    rt.load("lbp_encode_unit").unwrap();
+    let mut rng = Xoshiro256::new(23);
+    let neighbors: Vec<i32> = (0..256 * 8).map(|_| (rng.next_u64() % 256) as i32).collect();
+    let pivots: Vec<i32> = (0..256).map(|_| (rng.next_u64() % 256) as i32).collect();
+    let out = rt
+        .execute(
+            "lbp_encode_unit",
+            &[
+                ns_lbp::runtime::literal_i32(&neighbors, &[256, 8]).unwrap(),
+                ns_lbp::runtime::literal_i32(&pivots, &[256]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let codes = out.to_vec::<i32>().unwrap();
+    assert_eq!(codes.len(), 256);
+    for (r, &code) in codes.iter().enumerate() {
+        let mut want = 0i32;
+        for n in 0..8 {
+            if neighbors[r * 8 + n] >= pivots[r] {
+                want |= 1 << n;
+            }
+        }
+        assert_eq!(code, want, "row {r}");
+    }
+}
+
+#[test]
+fn unit_kernel_bitserial_matches_rust() {
+    let (_, mut rt) = load("mnist");
+    rt.load("bitserial_unit").unwrap();
+    let mut rng = Xoshiro256::new(29);
+    let x: Vec<i32> = (0..32 * 64).map(|_| (rng.next_u64() % 16) as i32).collect();
+    let w: Vec<i32> = (0..64 * 128).map(|_| (rng.next_u64() % 16) as i32).collect();
+    let out = rt
+        .execute(
+            "bitserial_unit",
+            &[
+                ns_lbp::runtime::literal_i32(&x, &[32, 64]).unwrap(),
+                ns_lbp::runtime::literal_i32(&w, &[64, 128]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = out.to_vec::<i32>().unwrap();
+    for b in 0..32 {
+        for o in 0..128 {
+            let want: i32 = (0..64).map(|d| x[b * 64 + d] * w[d * 128 + o]).sum();
+            assert_eq!(got[b * 128 + o], want, "({b},{o})");
+        }
+    }
+}
+
+#[test]
+fn sensor_frame_feeds_identical_to_direct_quantization() {
+    // ADC path == model.sensor_quantize for noise-free scenes
+    let (p, _) = load("mnist");
+    let cfg = p.config;
+    let scfg = SensorConfig { rows: cfg.height, cols: cfg.width,
+                              channels: cfg.in_channels,
+                              skip_lsbs: cfg.apx_pixel, ..Default::default() };
+    let mut rng = Xoshiro256::new(37);
+    let scene: Vec<f64> = (0..scfg.pixels()).map(|_| rng.next_f64()).collect();
+    let mut sensor = ns_lbp::sensor::ReplaySensor::new(scfg, vec![scene.clone()], 1)
+        .unwrap();
+    let frame = sensor.next_frame().unwrap();
+    let scene_f32: Vec<f32> = scene.iter().map(|&v| v as f32).collect();
+    let want = model::sensor_quantize(&scene_f32, cfg.apx_pixel);
+    assert_eq!(frame.pixels, want);
+}

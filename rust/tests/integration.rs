@@ -1,0 +1,163 @@
+//! Cross-module integration tests: config → coordinator → energy reports,
+//! manifest integrity, CLI parsing, and the SVHN-sized network on the
+//! architectural path.  (PJRT round-trips live in golden_model.rs.)
+
+use ns_lbp::config::SystemConfig;
+use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
+use ns_lbp::energy::EnergyModel;
+use ns_lbp::params;
+use ns_lbp::rng::Xoshiro256;
+use ns_lbp::runtime::read_manifest;
+use ns_lbp::sensor::{ReplaySensor, SensorConfig};
+
+fn artifacts_dir() -> String {
+    std::env::var("NSLBP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+#[test]
+fn default_config_file_parses_to_paper_setup() {
+    let sc = SystemConfig::load(Some("configs/nslbp_default.toml"), &[]).unwrap();
+    assert_eq!(sc, SystemConfig::default());
+}
+
+#[test]
+fn config_overrides_stack_on_file() {
+    let sc = SystemConfig::load(
+        Some("configs/nslbp_default.toml"),
+        &["cache.banks=10".into(), "circuit.freq_ghz=1.0".into()],
+    )
+    .unwrap();
+    assert_eq!(sc.cache.banks, 10);
+    assert!((sc.circuit.freq_ghz - 1.0).abs() < 1e-12);
+}
+
+#[test]
+fn manifest_lists_all_artifacts_and_files_exist() {
+    let dir = artifacts_dir();
+    let entries = read_manifest(std::path::Path::new(&dir)).unwrap();
+    let names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+    for want in ["aplbp_mnist", "features_mnist", "aplbp_svhn", "features_svhn",
+                 "lbp_encode_unit", "bitserial_unit", "params_mnist",
+                 "params_svhn"] {
+        assert!(names.contains(&want), "manifest missing {want}");
+    }
+    for e in &entries {
+        let p = std::path::Path::new(&dir).join(&e.file);
+        assert!(p.exists(), "artifact file missing: {}", p.display());
+    }
+}
+
+#[test]
+fn mnist_pipeline_end_to_end_with_energy_report() {
+    let dir = artifacts_dir();
+    let params = params::load(format!("{dir}/mnist.params.bin")).unwrap();
+    let cfg = params.config;
+    let system = SystemConfig::load(Some("configs/nslbp_default.toml"), &[]).unwrap();
+    let coord = Coordinator::new(
+        params,
+        CoordinatorConfig { system, arch: ArchSim::default() },
+    )
+    .unwrap();
+
+    let scfg = SensorConfig {
+        rows: cfg.height, cols: cfg.width, channels: cfg.in_channels,
+        skip_lsbs: cfg.apx_pixel, ..Default::default()
+    };
+    let mut rng = Xoshiro256::new(99);
+    let scenes: Vec<Vec<f64>> = (0..5)
+        .map(|_| (0..scfg.pixels()).map(|_| rng.next_f64()).collect())
+        .collect();
+    let mut sensor = ReplaySensor::new(scfg, scenes, 3).unwrap();
+    let (reports, summary) = coord.run(&mut sensor, 5).unwrap();
+
+    assert_eq!(reports.len(), 5);
+    assert_eq!(summary.arch_mismatches, 0);
+    // sanity of the modeled physics: per-frame energy in a plausible
+    // near-sensor band (µJ scale), latency in the µs scale
+    let e = summary.energy_per_frame_uj();
+    assert!((0.01..100.0).contains(&e), "energy/frame {e} µJ");
+    let fps = summary.frames_per_second_modeled();
+    assert!(fps > 1000.0, "modeled fps {fps}");
+    // energy must itemize: compute+write dominate an LBP pass
+    assert!(summary.energy.compute_pj > 0.0);
+    assert!(summary.energy.write_pj > 0.0);
+    assert!(summary.energy.sensor_pj > 0.0);
+}
+
+#[test]
+fn svhn_network_architectural_path_clean() {
+    let dir = artifacts_dir();
+    let params = params::load(format!("{dir}/svhn.params.bin")).unwrap();
+    let cfg = params.config;
+    assert_eq!(cfg.n_lbp_layers, 8); // the paper's 10-block SVHN network
+    let coord = Coordinator::new(
+        params,
+        CoordinatorConfig::default(), // arch lbp on
+    )
+    .unwrap();
+    let scfg = SensorConfig {
+        rows: cfg.height, cols: cfg.width, channels: cfg.in_channels,
+        skip_lsbs: cfg.apx_pixel, ..Default::default()
+    };
+    let mut rng = Xoshiro256::new(5);
+    let scenes: Vec<Vec<f64>> =
+        vec![(0..scfg.pixels()).map(|_| rng.next_f64()).collect()];
+    let mut sensor = ReplaySensor::new(scfg, scenes, 1).unwrap();
+    let (reports, summary) = coord.run(&mut sensor, 1).unwrap();
+    assert_eq!(summary.arch_mismatches, 0);
+    assert!(reports[0].exec.instructions > 10_000); // 8 layers of compares
+}
+
+#[test]
+fn apx_reduces_energy_on_the_same_frames() {
+    // Fig. 4's premise at system level: more approximated bits ⇒ less
+    // energy per frame, identical pipeline otherwise.
+    let dir = artifacts_dir();
+    let base = params::load(format!("{dir}/mnist.params.bin")).unwrap();
+    let mut energies = Vec::new();
+    for apx in [0usize, 2] {
+        let mut p = base.clone();
+        p.config.apx_code = apx;
+        p.config.apx_pixel = apx;
+        let cfg = p.config;
+        let coord = Coordinator::new(p, CoordinatorConfig::default()).unwrap();
+        let scfg = SensorConfig {
+            rows: cfg.height, cols: cfg.width, channels: cfg.in_channels,
+            skip_lsbs: cfg.apx_pixel, ..Default::default()
+        };
+        let mut rng = Xoshiro256::new(123);
+        let scenes: Vec<Vec<f64>> = (0..2)
+            .map(|_| (0..scfg.pixels()).map(|_| rng.next_f64()).collect())
+            .collect();
+        let mut sensor = ReplaySensor::new(scfg, scenes, 9).unwrap();
+        let (_, summary) = coord.run(&mut sensor, 2).unwrap();
+        assert_eq!(summary.arch_mismatches, 0);
+        energies.push(summary.energy_per_frame_uj());
+    }
+    assert!(energies[1] < energies[0],
+            "apx=2 ({}) not cheaper than apx=0 ({})", energies[1], energies[0]);
+}
+
+#[test]
+fn headline_numbers_from_config() {
+    let system = SystemConfig::load(Some("configs/nslbp_default.toml"), &[]).unwrap();
+    let em = EnergyModel::default();
+    assert!((em.tops_per_watt(system.cache.cols as u64) - 37.4).abs() < 1e-9);
+    assert!((system.circuit.freq_ghz - 1.25).abs() < 1e-12);
+    assert_eq!(system.cache.total_bytes(), 2_621_440); // 2.5 MB
+}
+
+#[test]
+fn cli_surface_parses() {
+    use ns_lbp::cli::Command;
+    let cmd = Command::new("ns-lbp", "t")
+        .subcommand("run", "r")
+        .opt("frames", "N", "n")
+        .flag("golden", "g");
+    let p = cmd
+        .parse(&["run".into(), "--frames".into(), "3".into(), "--golden".into()])
+        .unwrap();
+    assert_eq!(p.subcommand.as_deref(), Some("run"));
+    assert_eq!(p.opt_parse::<usize>("frames", 0).unwrap(), 3);
+    assert!(p.flag("golden"));
+}

@@ -1,0 +1,304 @@
+//! Property-based tests over the coordinator substrate invariants
+//! (in-house framework — proptest is unavailable offline; see
+//! `ns_lbp::testing`).
+
+use ns_lbp::circuit::{ideal_outputs, sense, CircuitParams};
+use ns_lbp::dpu::Dpu;
+use ns_lbp::isa::{assemble, Executor, Instruction};
+use ns_lbp::lbp::opcount::LbpCost;
+use ns_lbp::lbp::{compare_ref, parallel_compare};
+use ns_lbp::mapping::{partition, partition_stats, LbpSubarrayMap};
+use ns_lbp::mlp::{dot_unsigned_ref, MlpSubarrayMap};
+use ns_lbp::sram::{CacheGeometry, Region, RegionLayout, SubArray};
+use ns_lbp::testing::{check, Config, Gen};
+
+fn default_map() -> LbpSubarrayMap {
+    LbpSubarrayMap::new(RegionLayout::default(), 8).unwrap()
+}
+
+/// Algorithm 1 equals the scalar `>=` oracle for arbitrary lane sets,
+/// lane counts, skip settings and early-exit choices.
+#[test]
+fn prop_algorithm1_equals_oracle() {
+    let map = default_map();
+    check(Config::default().cases(60), "alg1 == oracle", |g: &mut Gen| {
+        let lanes = g.usize_in(1, 256);
+        let skip = g.usize_in(0, 3);
+        let early = g.bool();
+        let mask = 0xFFu8 ^ ((1u8 << skip) - 1);
+        let pairs: Vec<(u8, u8)> = (0..lanes)
+            .map(|_| (g.u8() & mask, g.u8() & mask))
+            .collect();
+        let mut sa = SubArray::new(256, 256);
+        map.load_lanes(&mut sa, 0, &pairs).unwrap();
+        let mut ex = Executor::new(&mut sa);
+        let got = parallel_compare(&mut ex, &map, 0, lanes, skip, early).unwrap();
+        assert_eq!(got.bits, compare_ref(&pairs));
+    });
+}
+
+/// The ISA executor's 3-input ops agree with the analog SA decision model
+/// on random row contents (not just per-bit truth tables).
+#[test]
+fn prop_isa_matches_circuit_sense() {
+    let p = CircuitParams::default();
+    check(Config::default().cases(40), "isa == sense", |g: &mut Gen| {
+        let a = g.rng().next_u64();
+        let b = g.rng().next_u64();
+        let c = g.rng().next_u64();
+        let mut sa = SubArray::new(8, 64);
+        sa.write_row(0, &[a]).unwrap();
+        sa.write_row(1, &[b]).unwrap();
+        sa.write_row(2, &[c]).unwrap();
+        let mut ex = Executor::new(&mut sa);
+        ex.run(&assemble("sum r0 r1 r2 -> r4\ncarry r0 r1 r2 -> r5").unwrap())
+            .unwrap();
+        let sum = ex.array.read_row(4).unwrap()[0];
+        let carry = ex.array.read_row(5).unwrap()[0];
+        let bit = g.usize_in(0, 63);
+        let ones = ((a >> bit) & 1) + ((b >> bit) & 1) + ((c >> bit) & 1);
+        let sa_out = sense(&p, ones as usize, 0.0).unwrap();
+        assert_eq!((sum >> bit) & 1 == 1, sa_out.xor3());
+        assert_eq!((carry >> bit) & 1 == 1, sa_out.carry());
+        assert_eq!(sa_out, ideal_outputs(ones as usize));
+    });
+}
+
+/// Partitioning covers every lane exactly once, never splits a batch
+/// across sub-arrays, and respects geometry bounds.
+#[test]
+fn prop_partition_is_exact_cover() {
+    check(Config::default().cases(50), "partition cover", |g: &mut Gen| {
+        let geometry = CacheGeometry {
+            banks: g.usize_in(1, 8),
+            mats_per_bank: g.usize_in(1, 3),
+            subarrays_per_mat: g.usize_in(1, 3),
+            ..CacheGeometry::default()
+        };
+        let map = default_map();
+        let n = g.usize_in(0, 4000);
+        let pairs: Vec<(u8, u8)> = (0..n).map(|_| (g.u8(), g.u8())).collect();
+        let batches = partition(&pairs, &geometry, &map).unwrap();
+        let mut seen = vec![false; n];
+        for b in &batches {
+            assert!(b.pairs.len() <= geometry.cols);
+            assert!(b.target.bank < geometry.banks);
+            assert!(b.target.mat < geometry.mats_per_bank);
+            assert!(b.target.subarray < geometry.subarrays_per_mat);
+            assert!(b.slot < map.slots());
+            for (j, &pair) in b.pairs.iter().enumerate() {
+                let idx = b.lane_offset + j;
+                assert!(!seen[idx], "lane {idx} double-covered");
+                seen[idx] = true;
+                assert_eq!(pair, pairs[idx]);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        let stats = partition_stats(&batches, &map);
+        assert_eq!(stats.total_lanes, n);
+        assert!(stats.subarrays_used
+            <= geometry.total_subarrays().min(batches.len().max(1)));
+    });
+}
+
+/// In-memory bit-serial dot == integer dot for random widths and values.
+#[test]
+fn prop_inmemory_dot_equals_integer_dot() {
+    check(Config::default().cases(30), "dot == ref", |g: &mut Gen| {
+        let act_bits = g.usize_in(1, 4);
+        let w_bits = g.usize_in(1, 4);
+        let map = MlpSubarrayMap::new(default_map(), act_bits, w_bits).unwrap();
+        let lanes = g.usize_in(1, 256);
+        let x: Vec<u8> = (0..lanes)
+            .map(|_| g.u8() & ((1 << act_bits) - 1))
+            .collect();
+        let w: Vec<u8> = (0..lanes)
+            .map(|_| g.u8() & ((1 << w_bits) - 1))
+            .collect();
+        let mut sa = SubArray::new(256, 256);
+        let mut ex = Executor::new(&mut sa);
+        map.load_vector(&mut ex, Region::Input, 0, &x).unwrap();
+        map.load_vector(&mut ex, Region::Weight, 0, &w).unwrap();
+        let mut dpu = Dpu::default();
+        let got = map.dot_unsigned(&mut ex, &mut dpu, 0, 0, lanes).unwrap();
+        assert_eq!(got, dot_unsigned_ref(&x, &w));
+    });
+}
+
+/// Eq. 1 ≥ Eq. 2 for every parameter combination, with equality iff apx=0,
+/// and counts never underflow.
+#[test]
+fn prop_opcounts_ordered() {
+    check(Config::default().cases(200), "eq1 >= eq2", |g: &mut Gen| {
+        let e = g.i64_in(1, 16) as u64;
+        let cost = LbpCost {
+            e,
+            ch: g.i64_in(1, 64) as u64,
+            m: g.i64_in(1, 16) as u64,
+            apx: g.i64_in(0, e as i64 - 1) as u64,
+        };
+        let exact = cost.lbpnet_ops();
+        let approx = cost.aplbp_ops();
+        assert!(approx.reads <= exact.reads);
+        assert!(approx.comparisons <= exact.comparisons);
+        assert!(approx.writes <= exact.writes);
+        if cost.apx == 0 {
+            assert_eq!(exact, approx);
+        } else {
+            assert!(approx.total() < exact.total());
+        }
+    });
+}
+
+/// Sub-array single-bit writes and whole-row ops are consistent views.
+#[test]
+fn prop_subarray_bit_row_consistency() {
+    check(Config::default().cases(40), "bit/row views", |g: &mut Gen| {
+        let cols = 64 * g.usize_in(1, 4);
+        let mut sa = SubArray::new(16, cols);
+        let row = g.usize_in(0, 15);
+        let mut expect = vec![0u64; cols / 64];
+        for _ in 0..g.usize_in(0, 100) {
+            let col = g.usize_in(0, cols - 1);
+            let v = g.bool();
+            sa.set(row, col, v).unwrap();
+            if v {
+                expect[col / 64] |= 1 << (col % 64);
+            } else {
+                expect[col / 64] &= !(1 << (col % 64));
+            }
+        }
+        assert_eq!(sa.read_row(row).unwrap(), expect);
+        let back = sa.read_row(row).unwrap();
+        sa.write_row(row, &back).unwrap();
+        assert_eq!(sa.read_row(row).unwrap(), expect);
+    });
+}
+
+/// Params serializer/parser round-trips arbitrary valid parameter sets and
+/// rejects any single-byte corruption of the header.
+#[test]
+fn prop_params_roundtrip_and_header_corruption() {
+    use ns_lbp::params::parse;
+    check(Config::default().cases(20), "params fuzz", |g: &mut Gen| {
+        let (blob, params) = ns_lbp_params_synth(g.rng().next_u64());
+        let parsed = parse(&blob).unwrap();
+        assert_eq!(parsed, params);
+        // corrupt one header byte (magic/version region)
+        let mut bad = blob.clone();
+        let idx = g.usize_in(0, 11);
+        bad[idx] ^= 0xFF;
+        assert!(parse(&bad).is_err(), "corruption at byte {idx} accepted");
+    });
+}
+
+// Re-export of the test-only synth helper through a tiny shim: the
+// `params::testutil` module is `cfg(test)` of the lib crate, so we rebuild
+// an equivalent minimal blob here.
+fn ns_lbp_params_synth(seed: u64) -> (Vec<u8>, ns_lbp::params::NetParams) {
+    use ns_lbp::params::*;
+    use ns_lbp::rng::Xoshiro256;
+    let config = NetConfig {
+        height: 8, width: 8, in_channels: 1, n_lbp_layers: 1,
+        kernels_per_layer: 2, e: 8, window: 3, apx_code: 0, apx_pixel: 0,
+        pool: 4, act_bits: 4, w_bits: 4, hidden: 8, n_classes: 10,
+    };
+    let mut rng = Xoshiro256::new(seed);
+    let mut offsets = Vec::new();
+    for _ in 0..config.kernels_per_layer {
+        let mut pts = Vec::new();
+        while pts.len() < config.e {
+            let dy = rng.range_i64(-1, 1) as i32;
+            let dx = rng.range_i64(-1, 1) as i32;
+            if (dy, dx) != (0, 0) {
+                pts.push(SamplePoint { dy, dx, ch: 0 });
+            }
+        }
+        offsets.push(pts);
+    }
+    let lbp_layers = vec![LbpLayer { offsets, pivot_ch: vec![0, 0] }];
+    let mk = |rng: &mut Xoshiro256, d: usize, o: usize| MlpLayer {
+        d, o,
+        w: (0..d * o).map(|_| (rng.below(16) as i8) - 8).collect(),
+        scale: (0..o).map(|_| 0.001f32).collect(),
+        bias: (0..o).map(|_| 0.0f32).collect(),
+    };
+    let mlp1 = mk(&mut rng, config.feature_dim(), config.hidden);
+    let mlp2 = mk(&mut rng, config.hidden, config.n_classes);
+    let params = NetParams { config, lbp_layers, mlp1, mlp2 };
+
+    // serialize (mirror of python save_params)
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    for v in [config.height, config.width, config.in_channels,
+              config.n_lbp_layers, config.kernels_per_layer, config.e,
+              config.window, config.apx_code, config.apx_pixel, config.pool,
+              config.act_bits, config.w_bits, config.hidden, config.n_classes] {
+        out.extend_from_slice(&(v as u32).to_le_bytes());
+    }
+    for layer in &params.lbp_layers {
+        for pts in &layer.offsets {
+            for pt in pts {
+                out.extend_from_slice(&pt.dy.to_le_bytes());
+                out.extend_from_slice(&pt.dx.to_le_bytes());
+                out.extend_from_slice(&pt.ch.to_le_bytes());
+            }
+        }
+        for &ch in &layer.pivot_ch {
+            out.extend_from_slice(&ch.to_le_bytes());
+        }
+    }
+    for mlp in [&params.mlp1, &params.mlp2] {
+        out.extend_from_slice(&(mlp.d as u32).to_le_bytes());
+        out.extend_from_slice(&(mlp.o as u32).to_le_bytes());
+        out.extend(mlp.w.iter().map(|&v| v as u8));
+        for &s in &mlp.scale {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        for &b in &mlp.bias {
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+    }
+    (out, params)
+}
+
+/// DPU pooled quantization: bounded, monotone, exact at the extremes.
+#[test]
+fn prop_dpu_quantize_monotone_bounded() {
+    check(Config::default().cases(100), "quantize", |g: &mut Gen| {
+        let mut dpu = Dpu::default();
+        let pool = [1usize, 2, 4][g.usize_in(0, 2)];
+        let vmax = (255 * pool * pool) as u32;
+        let bits = g.usize_in(1, 6) as u32;
+        let qmax = (1u32 << bits) - 1;
+        let a = g.usize_in(0, vmax as usize) as u32;
+        let b = g.usize_in(0, vmax as usize) as u32;
+        let qa = dpu.quantize_pooled(a, vmax, bits).unwrap() as u32;
+        let qb = dpu.quantize_pooled(b, vmax, bits).unwrap() as u32;
+        assert!(qa <= qmax && qb <= qmax);
+        if a <= b {
+            assert!(qa <= qb);
+        } else {
+            assert!(qb <= qa);
+        }
+        assert_eq!(dpu.quantize_pooled(0, vmax, bits).unwrap(), 0);
+        assert_eq!(dpu.quantize_pooled(vmax, vmax, bits).unwrap() as u32, qmax);
+    });
+}
+
+/// Config parser: printing a config back through overrides round-trips.
+#[test]
+fn prop_config_override_roundtrip() {
+    use ns_lbp::config::{ConfigFile, SystemConfig};
+    check(Config::default().cases(40), "config overrides", |g: &mut Gen| {
+        let banks = g.usize_in(1, 200);
+        let freq = (g.usize_in(1, 40) as f64) / 10.0;
+        let mut f = ConfigFile::default();
+        f.set_override(&format!("cache.banks={banks}")).unwrap();
+        f.set_override(&format!("circuit.freq_ghz={freq}")).unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(sc.cache.banks, banks);
+        assert!((sc.circuit.freq_ghz - freq).abs() < 1e-12);
+    });
+}
