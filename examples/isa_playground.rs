@@ -25,8 +25,8 @@ carry r0 r1 r9 -> r14     ; AND2 = MAJ3(a, b, 0)
 carry r0 r1 r8 -> r15     ; OR2  = MAJ3(a, b, 1)
 "#;
 
-fn main() -> anyhow::Result<()> {
-    let program = assemble(PROGRAM).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+fn main() -> ns_lbp::Result<()> {
+    let program = assemble(PROGRAM)?;
     println!("assembled {} instructions:", program.len());
     for inst in &program {
         println!("  {inst}");
@@ -40,12 +40,11 @@ fn main() -> anyhow::Result<()> {
     for (row, v) in [(0, a), (1, b), (2, c)] {
         let mut words = vec![0u64; 4];
         words[0] = v;
-        sa.write_row(row, &words)
-            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        sa.write_row(row, &words)?;
     }
 
     let mut ex = Executor::new(&mut sa);
-    ex.run(&program).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    ex.run(&program)?;
 
     println!("\nresults (low 16 bits per destination row):");
     for (name, row, expect) in [
@@ -56,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         ("AND2 ", 14, a & b),
         ("OR2  ", 15, a | b),
     ] {
-        let got = ex.array.read_row(row).map_err(|e| anyhow::anyhow!(e.to_string()))?[0];
+        let got = ex.array.read_row(row)?[0];
         println!("  {name} r{row:<2} = {:016b} (expect {:016b})",
                  got & 0xFFFF, expect & 0xFFFF);
         assert_eq!(got, expect, "{name}");

@@ -11,9 +11,17 @@ use ns_lbp::params;
 use ns_lbp::rng::Xoshiro256;
 use ns_lbp::sensor::{ReplaySensor, SensorConfig};
 
-fn main() -> anyhow::Result<()> {
-    // 1. network parameters exported by `make artifacts`
-    let params = params::load("artifacts/mnist.params.bin")?;
+fn main() -> ns_lbp::Result<()> {
+    // 1. network parameters exported by `make artifacts` (deterministic
+    //    synthetic fallback keeps the example runnable from a bare checkout)
+    let params = match params::load("artifacts/mnist.params.bin") {
+        Ok(p) => p,
+        Err(_) => {
+            println!("artifacts missing — using a synthetic network \
+                      (run `make artifacts` for the real one)");
+            params::synth::synth_params(7).1
+        }
+    };
     let cfg = params.config;
     println!(
         "Ap-LBP: {}x{}x{} input, {} LBP layers (K={}, e={}), apx={}, {} hidden",

@@ -9,9 +9,9 @@
 
 use ns_lbp::circuit::{sense, CircuitParams, MonteCarlo, SENSE_DELAY_PS};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ns_lbp::Result<()> {
     let p = CircuitParams::default();
-    p.validate().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    p.validate()?;
 
     // --- Fig. 9: transient waveforms ------------------------------------
     println!("== RBL discharge transients (VDD {} V) ==", p.vdd);

@@ -212,12 +212,53 @@ fn type_err(key: &str, want: &str, got: &Value) -> Error {
 // System configuration
 // ---------------------------------------------------------------------------
 
+/// Frame-serving subsystem knobs (see [`crate::serve`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Shard workers; each owns a disjoint bank slice of the cache.
+    pub shards: usize,
+    /// Admission-control bound: requests beyond this depth are rejected.
+    pub queue_depth: usize,
+    /// Dispatch a batch once it reaches this many frames ...
+    pub max_batch: usize,
+    /// ... or once the oldest queued frame is this old [µs].
+    pub batch_deadline_us: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { shards: 4, queue_depth: 256, max_batch: 16,
+               batch_deadline_us: 2000 }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::Config("serve.shards must be >= 1".into()));
+        }
+        if self.queue_depth == 0 {
+            return Err(Error::Config("serve.queue_depth must be >= 1".into()));
+        }
+        if self.max_batch == 0 {
+            return Err(Error::Config("serve.max_batch must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    pub fn batch_deadline(&self) -> std::time::Duration {
+        std::time::Duration::from_micros(self.batch_deadline_us)
+    }
+}
+
 /// Complete NS-LBP system configuration (paper defaults).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SystemConfig {
     pub cache: crate::sram::CacheGeometry,
     pub circuit: crate::circuit::CircuitParams,
     pub sensor: crate::sensor::SensorConfig,
+    /// Frame-serving subsystem knobs.
+    pub serve: ServeConfig,
     /// Worker threads for the coordinator (0 = one per bank group).
     pub workers: usize,
     /// Artifacts directory for HLO/params files.
@@ -230,6 +271,7 @@ impl Default for SystemConfig {
             cache: crate::sram::CacheGeometry::default(),
             circuit: crate::circuit::CircuitParams::default(),
             sensor: crate::sensor::SensorConfig::default(),
+            serve: ServeConfig::default(),
             workers: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -250,6 +292,8 @@ impl SystemConfig {
             "circuit.sigma_process", "circuit.sigma_mismatch",
             "sensor.rows", "sensor.cols", "sensor.channels",
             "sensor.adc_bits", "sensor.skip_lsbs", "sensor.fps",
+            "serve.shards", "serve.queue_depth", "serve.max_batch",
+            "serve.batch_deadline_us",
             "runtime.workers", "runtime.artifacts_dir",
         ];
         for key in file.keys() {
@@ -306,10 +350,22 @@ impl SystemConfig {
         };
         sensor.validate()?;
 
+        let serve = ServeConfig {
+            shards: file.get_usize("serve.shards", d.serve.shards)?,
+            queue_depth: file
+                .get_usize("serve.queue_depth", d.serve.queue_depth)?,
+            max_batch: file.get_usize("serve.max_batch", d.serve.max_batch)?,
+            batch_deadline_us: file
+                .get_usize("serve.batch_deadline_us",
+                           d.serve.batch_deadline_us as usize)? as u64,
+        };
+        serve.validate()?;
+
         Ok(Self {
             cache,
             circuit,
             sensor,
+            serve,
             workers: file.get_usize("runtime.workers", d.workers)?,
             artifacts_dir: file.get_str("runtime.artifacts_dir", &d.artifacts_dir)?,
         })
@@ -403,5 +459,22 @@ mod tests {
         f.set_override("cache.banks=40").unwrap();
         let sc = SystemConfig::from_file(&f).unwrap();
         assert_eq!(sc.cache.banks, 40);
+    }
+
+    #[test]
+    fn serve_knobs_parse_and_validate() {
+        let f = ConfigFile::parse(
+            "[serve]\nshards = 2\nqueue_depth = 64\nmax_batch = 8\n\
+             batch_deadline_us = 500",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(sc.serve.shards, 2);
+        assert_eq!(sc.serve.queue_depth, 64);
+        assert_eq!(sc.serve.max_batch, 8);
+        assert_eq!(sc.serve.batch_deadline().as_micros(), 500);
+
+        let bad = ConfigFile::parse("[serve]\nshards = 0").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
     }
 }

@@ -18,8 +18,7 @@
 //! scratch sub-array; the modeled accelerator time still assumes the
 //! paper's geometry (batches spread across the cache's sub-arrays).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use crate::config::SystemConfig;
 use crate::dpu::{Dpu, DpuStats};
@@ -51,11 +50,32 @@ impl Default for ArchSim {
     }
 }
 
+/// A shard's slice of the cache: shard `index` of `count` owns a disjoint
+/// group of banks (the paper's parallelism unit), so concurrent shards
+/// model concurrent traffic over *disjoint* compute sub-arrays instead of
+/// all of them claiming the whole 2.5 MB slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSlice {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSlice {
+    /// Banks owned by this shard out of `banks` total (remainder banks go
+    /// to the lowest-indexed shards).
+    pub fn banks(&self, banks: usize) -> usize {
+        banks / self.count + usize::from(self.index < banks % self.count)
+    }
+}
+
 /// Coordinator configuration.
 #[derive(Clone, Debug, Default)]
 pub struct CoordinatorConfig {
     pub system: SystemConfig,
     pub arch: ArchSim,
+    /// When set, the modeled accelerator time assumes only this shard's
+    /// bank slice is available (functional results are unaffected).
+    pub shard: Option<ShardSlice>,
 }
 
 /// Per-frame outcome.
@@ -112,9 +132,32 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(params: NetParams, config: CoordinatorConfig) -> Result<Self> {
         config.system.cache.validate()?;
+        if let Some(s) = config.shard {
+            if s.count == 0 || s.index >= s.count {
+                return Err(Error::Coordinator(format!(
+                    "shard slice {}/{} invalid", s.index, s.count
+                )));
+            }
+            if s.count > config.system.cache.banks {
+                return Err(Error::Coordinator(format!(
+                    "{} shards cannot split {} banks",
+                    s.count, config.system.cache.banks
+                )));
+            }
+        }
         let mut em = EnergyModel::default();
         em.params.freq_ghz = config.system.circuit.freq_ghz;
         Ok(Self { params, config, energy_model: em })
+    }
+
+    /// Compute sub-arrays available to this coordinator instance — the
+    /// whole cache, or just this shard's bank slice.
+    pub fn subarray_budget(&self) -> usize {
+        let g = &self.config.system.cache;
+        match self.config.shard {
+            None => g.total_subarrays(),
+            Some(s) => s.banks(g.banks) * g.mats_per_bank * g.subarrays_per_mat,
+        }
     }
 
     /// Lane order for one LBP layer: (y, x, kernel, sample≥apx).
@@ -195,8 +238,8 @@ impl Coordinator {
             }
         }
 
-        // modeled time: batches spread across the cache's sub-arrays
-        let subarrays = self.config.system.cache.total_subarrays() as f64;
+        // modeled time: batches spread across this shard's sub-arrays
+        let subarrays = self.subarray_budget() as f64;
         let cycles_per_batch = (2.0 * map.bits as f64)
             + 4.0 + 7.0 * (map.bits - cfg.apx_pixel) as f64 + 3.0;
         let time_ns = (batches as f64 / subarrays).ceil() * cycles_per_batch
@@ -236,7 +279,7 @@ impl Coordinator {
         // cross-check against the functional integer matmul
         let want = model::int_matmul(feats, mlp);
         let mismatches = accs.iter().zip(&want).filter(|(a, w)| a != w).count() as u64;
-        let subarrays = self.config.system.cache.total_subarrays() as f64;
+        let subarrays = self.subarray_budget() as f64;
         let time_ns = (and_batches as f64 * 2.0 / subarrays).ceil()
             * self.energy_model.cycle_ns();
         Ok((accs, mismatches, time_ns))
@@ -346,6 +389,12 @@ impl Coordinator {
         })
     }
 
+    /// A reusable per-shard processing handle bound to this coordinator.
+    pub fn frame_handle(&self) -> FrameHandle<'_> {
+        let g = &self.config.system.cache;
+        FrameHandle { coord: self, scratch: SubArray::new(g.rows, g.cols) }
+    }
+
     /// Run the pipeline over a frame source with worker-thread fan-out.
     pub fn run(&self, source: &mut dyn FrameSource, limit: usize)
                -> Result<(Vec<FrameReport>, RunSummary)> {
@@ -366,44 +415,71 @@ impl Coordinator {
                 .unwrap_or(4)
                 .min(frames.len().max(1))
         };
-        let g = &self.config.system.cache;
         let next = AtomicUsize::new(0);
-        let results: Mutex<Vec<FrameReport>> =
-            Mutex::new(Vec::with_capacity(frames.len()));
-        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        let mismatches = AtomicU64::new(0);
+        let abort = AtomicBool::new(false);
 
+        // Per-worker accumulators merged at join time — no lock on the
+        // per-frame path; only the divergence counter is shared (atomic).
+        let mut reports: Vec<FrameReport> = Vec::with_capacity(frames.len());
+        let mut first_err: Option<Error> = None;
         std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| {
-                    let mut scratch = SubArray::new(g.rows, g.cols);
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= frames.len() {
-                            break;
-                        }
-                        match self.process_frame(&frames[i], &mut scratch) {
-                            Ok(report) => {
-                                results.lock().unwrap().push(report);
-                            }
-                            Err(e) => {
-                                *first_err.lock().unwrap() = Some(e);
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut handle = self.frame_handle();
+                        let mut local: Vec<FrameReport> = Vec::new();
+                        loop {
+                            if abort.load(Ordering::Relaxed) {
                                 break;
                             }
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= frames.len() {
+                                break;
+                            }
+                            match handle.process(&frames[i]) {
+                                Ok(report) => {
+                                    mismatches.fetch_add(report.arch_mismatches,
+                                                         Ordering::Relaxed);
+                                    local.push(report);
+                                }
+                                Err(e) => {
+                                    abort.store(true, Ordering::Relaxed);
+                                    return (local, Some(e));
+                                }
+                            }
+                        }
+                        (local, None)
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok((local, err)) => {
+                        reports.extend(local);
+                        if first_err.is_none() {
+                            first_err = err;
                         }
                     }
-                });
+                    Err(_) => {
+                        if first_err.is_none() {
+                            first_err = Some(Error::Coordinator(
+                                "worker thread panicked".into(),
+                            ));
+                        }
+                    }
+                }
             }
         });
-
-        if let Some(e) = first_err.into_inner().unwrap() {
+        if let Some(e) = first_err {
             return Err(e);
         }
-        let mut reports = results.into_inner().unwrap();
         reports.sort_by_key(|r| r.seq);
 
         let mut summary = RunSummary {
             frames: reports.len() as u64,
             wall_seconds: t0.elapsed().as_secs_f64(),
+            arch_mismatches: mismatches.load(Ordering::Relaxed),
             ..Default::default()
         };
         for r in &reports {
@@ -411,16 +487,37 @@ impl Coordinator {
             summary.dpu.merge(&r.dpu);
             summary.energy.add(&r.energy);
             summary.total_arch_time_ns += r.arch_time_ns;
-            summary.arch_mismatches += r.arch_mismatches;
         }
+        debug_assert_eq!(
+            summary.arch_mismatches,
+            reports.iter().map(|r| r.arch_mismatches).sum::<u64>(),
+        );
         Ok((reports, summary))
+    }
+}
+
+/// A reusable frame-processing handle: owns the scratch compute sub-array
+/// so the coordinator itself stays shareable (`&self`) across workers.
+/// One handle per shard/worker thread; see [`crate::serve::ShardPool`].
+pub struct FrameHandle<'c> {
+    coord: &'c Coordinator,
+    scratch: SubArray,
+}
+
+impl FrameHandle<'_> {
+    pub fn process(&mut self, frame: &Frame) -> Result<FrameReport> {
+        self.coord.process_frame(frame, &mut self.scratch)
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        self.coord
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::params::testutil::synth_params;
+    use crate::params::synth::synth_params;
     use crate::rng::Xoshiro256;
     use crate::sensor::{ReplaySensor, SensorConfig};
 
@@ -431,7 +528,7 @@ mod tests {
         sys.workers = 2;
         let coord = Coordinator::new(
             params,
-            CoordinatorConfig { system: sys, arch },
+            CoordinatorConfig { system: sys, arch, shard: None },
         )
         .unwrap();
         let sensor_cfg = SensorConfig {
@@ -498,6 +595,70 @@ mod tests {
         // data it must never *increase* the compute-op count
         assert!(summary_e.exec.compute_ops <= summary_n.exec.compute_ops);
         let _ = summary_n;
+    }
+
+    #[test]
+    fn shard_slice_banks_partition_exactly() {
+        for count in [1, 3, 4, 7, 80] {
+            let total: usize = (0..count)
+                .map(|index| ShardSlice { index, count }.banks(80))
+                .sum();
+            assert_eq!(total, 80, "count {count}");
+        }
+    }
+
+    #[test]
+    fn sharding_scales_modeled_time_not_results() {
+        let (_, params) = synth_params(5);
+        let mut sys = SystemConfig::default();
+        sys.workers = 1;
+        let arch = ArchSim { lbp: true, mlp: false, early_exit: false };
+        let full = Coordinator::new(
+            params.clone(),
+            CoordinatorConfig { system: sys.clone(), arch, shard: None },
+        )
+        .unwrap();
+        let quarter = Coordinator::new(
+            params,
+            CoordinatorConfig {
+                system: sys,
+                arch,
+                shard: Some(ShardSlice { index: 0, count: 4 }),
+            },
+        )
+        .unwrap();
+        assert_eq!(full.subarray_budget(), 320);
+        assert_eq!(quarter.subarray_budget(), 80);
+
+        let frame = {
+            let (_, mut sensor) = setup(arch);
+            sensor.next_frame().unwrap()
+        };
+        let mut hf = full.frame_handle();
+        let mut hq = quarter.frame_handle();
+        let rf = hf.process(&frame).unwrap();
+        let rq = hq.process(&frame).unwrap();
+        // functional results are shard-independent ...
+        assert_eq!(rf.logits, rq.logits);
+        assert_eq!(rf.arch_mismatches, 0);
+        assert_eq!(rq.arch_mismatches, 0);
+        // ... only the modeled accelerator time sees the smaller slice
+        assert!(rq.arch_time_ns >= rf.arch_time_ns);
+    }
+
+    #[test]
+    fn shard_slice_validation() {
+        let (_, params) = synth_params(5);
+        let bad = CoordinatorConfig {
+            shard: Some(ShardSlice { index: 2, count: 2 }),
+            ..Default::default()
+        };
+        assert!(Coordinator::new(params.clone(), bad).is_err());
+        let too_many = CoordinatorConfig {
+            shard: Some(ShardSlice { index: 0, count: 81 }),
+            ..Default::default()
+        };
+        assert!(Coordinator::new(params, too_many).is_err());
     }
 
     #[test]

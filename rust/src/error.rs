@@ -1,47 +1,74 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — thiserror is unavailable offline).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the NS-LBP runtime and simulator.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed or out-of-range configuration value.
-    #[error("config error: {0}")]
     Config(String),
 
     /// CLI usage error (unknown flag, missing value, bad subcommand).
-    #[error("usage error: {0}")]
     Usage(String),
 
     /// Parameter file (`*.params.bin`) parse failure.
-    #[error("params parse error: {0}")]
     Params(String),
 
     /// An ISA-level fault: bad opcode operands, out-of-range row address,
     /// region protection violation.
-    #[error("isa fault: {0}")]
     Isa(String),
 
     /// Mapping failure: workload does not fit the sub-array regions.
-    #[error("mapping error: {0}")]
     Mapping(String),
 
     /// The analog circuit model was driven outside its calibrated envelope.
-    #[error("circuit model error: {0}")]
     Circuit(String),
 
     /// PJRT / XLA runtime failure (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Coordinator pipeline failure (worker panicked, channel closed).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// Serving-layer failure (admission rejection, drain fault, dead shard).
+    Serve(String),
+
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Usage(m) => write!(f, "usage error: {m}"),
+            Error::Params(m) => write!(f, "params parse error: {m}"),
+            Error::Isa(m) => write!(f, "isa fault: {m}"),
+            Error::Mapping(m) => write!(f, "mapping error: {m}"),
+            Error::Circuit(m) => write!(f, "circuit model error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -49,3 +76,24 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variants() {
+        assert!(Error::Config("x".into()).to_string().starts_with("config error"));
+        assert!(Error::Serve("x".into()).to_string().starts_with("serve error"));
+        assert!(Error::Runtime("x".into()).to_string().starts_with("runtime error"));
+    }
+
+    #[test]
+    fn io_error_is_transparent_with_source() {
+        use std::error::Error as _;
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = Error::from(io);
+        assert!(e.to_string().contains("gone"));
+        assert!(e.source().is_some());
+    }
+}

@@ -41,6 +41,11 @@
 //! * [`coordinator`] — the near-sensor pipeline: sensor → mapper → in-memory
 //!   execution → DPU → classification, with worker threads per bank and a
 //!   golden-model cross-check against the PJRT path.
+//! * [`serve`] — the traffic-facing layer on top of the coordinator: a
+//!   bounded admission queue with backpressure, dynamic (size/deadline)
+//!   batching, a shard pool where each shard's coordinator is pinned to a
+//!   disjoint bank slice, p50/p95/p99 latency + throughput/energy metrics,
+//!   and graceful drain (`ns-lbp serve-bench` drives it end to end).
 //!
 //! Python appears only at build time (`make artifacts`); this crate is
 //! self-contained at runtime.
@@ -63,6 +68,7 @@ pub mod params;
 pub mod rng;
 pub mod runtime;
 pub mod sensor;
+pub mod serve;
 pub mod sram;
 pub mod testing;
 

@@ -6,6 +6,10 @@
 //!                 (sensor → mapper → in-memory LBP → MLP), print per-run
 //!                 stats; `--arch-mlp` also simulates the MLP in-memory;
 //!                 `--golden` cross-checks against the PJRT artifact.
+//! * `serve-bench` — replay synthetic frames through the sharded, batching
+//!                 serving layer at a configurable offered load and print
+//!                 the latency/throughput/energy report; `--compare` also
+//!                 runs the 1-shard baseline and prints the speedup.
 //! * `transient` — print the Fig. 9 RBL discharge waveforms.
 //! * `montecarlo`— run the Fig. 10 variation analysis.
 //! * `info`      — show configuration, geometry, energy/area headline.
@@ -19,9 +23,11 @@ use ns_lbp::config::SystemConfig;
 use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
 use ns_lbp::energy::{AreaModel, EnergyModel};
 use ns_lbp::model::argmax;
+use ns_lbp::params::NetParams;
 use ns_lbp::rng::Xoshiro256;
 use ns_lbp::runtime::Runtime;
-use ns_lbp::sensor::{ReplaySensor, SensorConfig};
+use ns_lbp::sensor::{Frame, ReplaySensor, SensorConfig};
+use ns_lbp::serve::{Server, Ticket};
 use ns_lbp::{params, Result};
 
 fn main() {
@@ -42,16 +48,23 @@ fn main() {
 fn command() -> Command {
     Command::new("ns-lbp", "near-sensor LBP accelerator simulator")
         .subcommand("run", "stream frames through the pipeline")
+        .subcommand("serve-bench", "drive the sharded, batching serve layer")
         .subcommand("transient", "Fig. 9 RBL discharge waveforms")
         .subcommand("montecarlo", "Fig. 10 sense-margin analysis")
         .subcommand("info", "configuration and headline numbers")
         .opt("config", "FILE", "config file (TOML subset)")
         .opt_repeated("set", "K=V", "config override, e.g. cache.banks=40")
         .opt("dataset", "NAME", "mnist|svhn (default mnist)")
-        .opt("frames", "N", "frames to stream (default 8)")
+        .opt("frames", "N", "frames to stream (default 8; serve-bench 256)")
         .opt("seed", "N", "frame-generator seed (default 7)")
         .opt("trials", "N", "Monte-Carlo trials (default 200)")
         .opt("artifacts", "DIR", "artifacts directory (default artifacts)")
+        .opt("shards", "N", "serve-bench: shard workers (default serve.shards)")
+        .opt("batch-size", "N", "serve-bench: max dispatch batch")
+        .opt("deadline-us", "US", "serve-bench: batch deadline [µs]")
+        .opt("queue-depth", "N", "serve-bench: admission-control depth")
+        .opt("load", "FPS", "serve-bench: offered load (0 = unthrottled)")
+        .flag("compare", "serve-bench: also run 1 shard, print speedup")
         .flag("arch-mlp", "simulate the MLP in-memory too")
         .flag("early-exit", "enable Algorithm-1 early exit")
         .flag("golden", "cross-check logits against the PJRT artifact")
@@ -66,6 +79,7 @@ fn real_main(args: &[String]) -> Result<()> {
 
     match parsed.subcommand.as_deref() {
         Some("run") => run_pipeline(&parsed, system),
+        Some("serve-bench") => serve_bench(&parsed, system),
         Some("transient") => transient(system),
         Some("montecarlo") => montecarlo(&parsed, system),
         Some("info") | None => info(system),
@@ -111,7 +125,7 @@ fn run_pipeline(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()
         early_exit: parsed.flag("early-exit"),
     };
     let coord = Coordinator::new(params.clone(),
-                                 CoordinatorConfig { system, arch })?;
+                                 CoordinatorConfig { system, arch, shard: None })?;
     let (reports, summary) = coord.run(&mut sensor, frames)?;
 
     for r in &reports {
@@ -164,6 +178,133 @@ fn run_pipeline(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()
             }
         }
         println!("golden check OK");
+    }
+    Ok(())
+}
+
+/// Replay `frames` through one server instance at `load` offered fps
+/// (0 = unthrottled); rejected submissions are retried so every frame
+/// completes and shard counts stay comparable.
+fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
+                shards: usize, frames: &[Frame], load: f64)
+                -> Result<ns_lbp::serve::metrics::MetricsReport> {
+    let mut system = system.clone();
+    system.serve.shards = shards;
+    let server = Server::start(
+        params.clone(),
+        CoordinatorConfig { system, arch, shard: None },
+    )?;
+    let t0 = std::time::Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(frames.len());
+    for (i, frame) in frames.iter().enumerate() {
+        if load > 0.0 {
+            let due = t0 + std::time::Duration::from_secs_f64(i as f64 / load);
+            let now = std::time::Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        loop {
+            match server.submit(frame.clone()) {
+                Ok(t) => {
+                    tickets.push(t);
+                    break;
+                }
+                // admission-control rejection: back off and retry
+                Err(ns_lbp::Error::Serve(_)) => {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    let mut mismatches = 0u64;
+    for t in tickets {
+        mismatches += t.wait()?.report.arch_mismatches;
+    }
+    let report = server.drain()?;
+    if mismatches != 0 {
+        return Err(ns_lbp::Error::Coordinator(format!(
+            "{mismatches} architectural/functional divergences under serve"
+        )));
+    }
+    Ok(report)
+}
+
+fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()> {
+    let frames_n: usize = parsed.opt_parse("frames", 256)?;
+    let seed: u64 = parsed.opt_parse("seed", 7)?;
+    let load: f64 = parsed.opt_parse("load", 0.0)?;
+
+    let mut system = system;
+    system.serve.shards = parsed.opt_parse("shards", system.serve.shards)?;
+    system.serve.max_batch =
+        parsed.opt_parse("batch-size", system.serve.max_batch)?;
+    system.serve.batch_deadline_us =
+        parsed.opt_parse("deadline-us", system.serve.batch_deadline_us)?;
+    system.serve.queue_depth =
+        parsed.opt_parse("queue-depth", system.serve.queue_depth)?;
+    system.serve.validate()?;
+
+    let dataset = parsed.opt("dataset").unwrap_or("mnist").to_string();
+    let artifacts = parsed
+        .opt("artifacts")
+        .unwrap_or(&system.artifacts_dir)
+        .to_string();
+    let params = match params::load(format!("{artifacts}/{dataset}.params.bin")) {
+        Ok(p) => {
+            println!("network: {dataset} artifact");
+            p
+        }
+        Err(_) => {
+            println!(
+                "network: synthetic (artifact {artifacts}/{dataset}.params.bin \
+                 absent — run `make artifacts` for the real one)"
+            );
+            params::synth::synth_params(seed).1
+        }
+    };
+
+    let arch = ArchSim {
+        lbp: !parsed.flag("functional"),
+        mlp: parsed.flag("arch-mlp"),
+        early_exit: parsed.flag("early-exit"),
+    };
+    let frames = ns_lbp::testing::synth_frames(&params, frames_n, seed)?;
+    println!(
+        "offered: {} frames at {} | shards {} | batch ≤{} | deadline {} µs | \
+         queue depth {}",
+        frames.len(),
+        if load > 0.0 { format!("{load:.0} fps") } else { "full rate".into() },
+        system.serve.shards,
+        system.serve.max_batch,
+        system.serve.batch_deadline_us,
+        system.serve.queue_depth,
+    );
+
+    let shard_counts: Vec<usize> = if parsed.flag("compare") {
+        vec![1, system.serve.shards]
+    } else {
+        vec![system.serve.shards]
+    };
+    let mut results = Vec::new();
+    for &n in &shard_counts {
+        let report = serve_replay(&params, &system, arch, n, &frames, load)?;
+        report.print(&format!("{n} shard(s)"));
+        println!(
+            "  modeled   : {:.0} fps on the accelerator's {}-way bank split",
+            report.modeled_fps(n), n
+        );
+        results.push((n, report));
+    }
+    if let [(n1, r1), (n2, r2)] = results.as_slice() {
+        println!(
+            "speedup: {n2} shards vs {n1} → {:.2}x wall throughput \
+             ({:.1} vs {:.1} fps)",
+            r2.throughput_fps / r1.throughput_fps.max(1e-12),
+            r2.throughput_fps,
+            r1.throughput_fps
+        );
     }
     Ok(())
 }

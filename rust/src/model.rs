@@ -263,7 +263,7 @@ pub fn argmax(logits: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::params::testutil::synth_params;
+    use crate::params::synth::synth_params;
     use crate::rng::Xoshiro256;
 
     fn image(params: &NetParams, seed: u64) -> Vec<f32> {

@@ -275,12 +275,14 @@ pub fn load(path: impl AsRef<Path>) -> Result<NetParams> {
     parse(&data)
 }
 
-#[cfg(test)]
-pub(crate) mod testutil {
+/// Synthetic parameter generation — the deterministic fallback used by
+/// tests, benches, and `serve-bench` when `artifacts/*.params.bin` are
+/// absent (production params come from the Python build path).
+pub mod synth {
     use super::*;
     use crate::rng::Xoshiro256;
 
-    /// Build a small, valid params blob for tests (and its parsed form).
+    /// Build a small, valid params blob (and its parsed form).
     pub fn synth_params(seed: u64) -> (Vec<u8>, NetParams) {
         let config = NetConfig {
             height: 12, width: 12, in_channels: 1, n_lbp_layers: 2,
@@ -326,7 +328,7 @@ pub(crate) mod testutil {
         (serialize(&params), params)
     }
 
-    /// Serializer (test-only; production params come from Python).
+    /// Serializer (mirrors `python/compile/model.py::save_params`).
     pub fn serialize(p: &NetParams) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
@@ -366,7 +368,7 @@ pub(crate) mod testutil {
 
 #[cfg(test)]
 mod tests {
-    use super::testutil::{serialize, synth_params};
+    use super::synth::{serialize, synth_params};
     use super::*;
 
     #[test]

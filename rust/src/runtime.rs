@@ -1,4 +1,4 @@
-//! PJRT runtime: load AOT-lowered HLO text artifacts and execute them.
+//! Artifact runtime: load AOT-lowered HLO text artifacts and execute them.
 //!
 //! The request path is Rust-only: `make artifacts` (Python, build time)
 //! lowers the JAX/Pallas stack to HLO **text** (`artifacts/*.hlo.txt` —
@@ -6,16 +6,27 @@
 //! ids that xla_extension 0.5.1 rejects; the text parser reassigns them),
 //! and this module compiles + runs them on the PJRT CPU client.
 //!
+//! The PJRT backend itself lives behind the `pjrt` cargo feature because
+//! the `xla` crate cannot be fetched in this offline environment.  The
+//! default build keeps the full module surface — manifest parsing,
+//! [`Literal`] construction/validation, artifact-presence checks — but
+//! [`Runtime::load`] reports the backend as unavailable.  Callers that
+//! want to degrade gracefully should consult [`pjrt_available`].
+//!
 //! The full-model artifacts take the MLP weights/affines as *parameters*
 //! (large constants are elided by the HLO text printer), fed from the
 //! parsed `NetParams` in the documented order:
 //! `(images, w1, s1, b1, w2, s2, b2)`.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::params::NetParams;
+
+/// Whether this build carries the PJRT/XLA execution backend.
+pub const fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 /// Manifest entry (artifacts/manifest.tsv).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -55,33 +66,153 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
     Ok(out)
 }
 
-/// The runtime: one PJRT CPU client + a cache of compiled executables.
+// ---------------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------------
+
+/// Host-side tensor literal handed to / returned from the backend.
+///
+/// Backend-neutral so the non-`pjrt` build keeps the full call surface;
+/// the `pjrt` backend converts to/from `xla::Literal` at the boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<usize>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Literal {
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Extract the flat element buffer; errors on element-type mismatch.
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait LiteralElem: Sized {
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl LiteralElem for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>> {
+        match &lit.data {
+            LiteralData::F32(v) => Ok(v.clone()),
+            LiteralData::I32(_) => {
+                Err(Error::Runtime("literal holds i32, asked for f32".into()))
+            }
+        }
+    }
+}
+
+impl LiteralElem for i32 {
+    fn extract(lit: &Literal) -> Result<Vec<i32>> {
+        match &lit.data {
+            LiteralData::I32(v) => Ok(v.clone()),
+            LiteralData::F32(_) => {
+                Err(Error::Runtime("literal holds f32, asked for i32".into()))
+            }
+        }
+    }
+}
+
+fn check_shape(len: usize, dims: &[usize]) -> Result<()> {
+    let n: usize = dims.iter().product();
+    if len != n {
+        return Err(Error::Runtime(format!(
+            "literal data {len} != shape product {n}"
+        )));
+    }
+    Ok(())
+}
+
+/// Build an f32 literal with shape.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    check_shape(data.len(), dims)?;
+    Ok(Literal { data: LiteralData::F32(data.to_vec()), dims: dims.to_vec() })
+}
+
+/// Build an i32 literal with shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    check_shape(data.len(), dims)?;
+    Ok(Literal { data: LiteralData::I32(data.to_vec()), dims: dims.to_vec() })
+}
+
+/// The six MLP parameter literals in artifact order:
+/// `(w1 s32[D,H], s1 f32[H], b1 f32[H], w2 s32[H,C], s2 f32[C], b2 f32[C])`.
+pub fn mlp_literals(params: &NetParams) -> Result<Vec<Literal>> {
+    let m1 = &params.mlp1;
+    let m2 = &params.mlp2;
+    let w1: Vec<i32> = m1.w.iter().map(|&v| v as i32).collect();
+    let w2: Vec<i32> = m2.w.iter().map(|&v| v as i32).collect();
+    Ok(vec![
+        literal_i32(&w1, &[m1.d, m1.o])?,
+        literal_f32(&m1.scale, &[m1.o])?,
+        literal_f32(&m1.bias, &[m1.o])?,
+        literal_i32(&w2, &[m2.d, m2.o])?,
+        literal_f32(&m2.scale, &[m2.o])?,
+        literal_f32(&m2.bias, &[m2.o])?,
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Runtime
+// ---------------------------------------------------------------------------
+
+/// The runtime: one PJRT CPU client + a cache of compiled executables
+/// (stubbed without the `pjrt` feature — see module docs).
 pub struct Runtime {
-    client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    #[cfg(feature = "pjrt")]
+    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
+    executables: std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    /// Create a runtime rooted at `artifacts_dir`.
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
         Ok(Self {
-            client,
             artifacts_dir: artifacts_dir.into(),
-            executables: HashMap::new(),
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu()?,
+            #[cfg(feature = "pjrt")]
+            executables: std::collections::HashMap::new(),
         })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
-    /// Load + compile `<name>.hlo.txt` (cached after the first call).
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
-            return Ok(());
-        }
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
+    }
+
+    /// Path to the `<name>.hlo.txt` artifact, erroring if the file is
+    /// missing so the "run `make artifacts`" hint precedes backend errors.
+    fn artifact_path(&self, name: &str) -> Result<PathBuf> {
         let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
         if !path.exists() {
             return Err(Error::Runtime(format!(
@@ -89,6 +220,16 @@ impl Runtime {
                 path.display()
             )));
         }
+        Ok(path)
+    }
+
+    /// Load + compile `<name>.hlo.txt` (cached after the first call).
+    #[cfg(feature = "pjrt")]
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_path(name)?;
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| {
                 Error::Runtime(format!("non-utf8 path {}", path.display()))
@@ -100,17 +241,30 @@ impl Runtime {
         Ok(())
     }
 
-    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        self.executables.get(name).ok_or_else(|| {
-            Error::Runtime(format!("executable {name:?} not loaded"))
-        })
+    /// Stub `load`: checks artifact presence, then reports the missing
+    /// backend so callers can skip the golden path with a clear message.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        self.artifact_path(name)?;
+        Err(backend_unavailable())
     }
 
     /// Execute a loaded artifact; unwraps the 1-tuple output literal.
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
-        let exe = self.exe(name)?;
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?)
+    #[cfg(feature = "pjrt")]
+    pub fn execute(&self, name: &str, inputs: &[Literal]) -> Result<Literal> {
+        let exe = self.executables.get(name).ok_or_else(|| {
+            Error::Runtime(format!("executable {name:?} not loaded"))
+        })?;
+        let xla_inputs: Vec<xla::Literal> =
+            inputs.iter().map(to_xla).collect::<Result<_>>()?;
+        let result =
+            exe.execute::<xla::Literal>(&xla_inputs)?[0][0].to_literal_sync()?;
+        from_xla(result.to_tuple1()?)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(&self, _name: &str, _inputs: &[Literal]) -> Result<Literal> {
+        Err(backend_unavailable())
     }
 
     /// Run the full Ap-LBP model artifact: images (B,H,W,C) f32 in [0,1]
@@ -158,47 +312,36 @@ impl Runtime {
     }
 }
 
-/// Build an f32 literal with shape.
-pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    if data.len() != n {
-        return Err(Error::Runtime(format!(
-            "literal data {} != shape product {n}",
-            data.len()
-        )));
-    }
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+#[cfg(not(feature = "pjrt"))]
+fn backend_unavailable() -> Error {
+    Error::Runtime(
+        "PJRT backend not compiled into this build (rebuild with \
+         `--features pjrt` and a vendored xla crate)"
+            .into(),
+    )
 }
 
-/// Build an i32 literal with shape.
-pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    if data.len() != n {
-        return Err(Error::Runtime(format!(
-            "literal data {} != shape product {n}",
-            data.len()
-        )));
-    }
-    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+#[cfg(feature = "pjrt")]
+fn to_xla(lit: &Literal) -> Result<xla::Literal> {
+    let dims_i64: Vec<i64> = lit.dims.iter().map(|&d| d as i64).collect();
+    let flat = match &lit.data {
+        LiteralData::F32(v) => xla::Literal::vec1(v),
+        LiteralData::I32(v) => xla::Literal::vec1(v),
+    };
+    Ok(flat.reshape(&dims_i64)?)
 }
 
-/// The six MLP parameter literals in artifact order:
-/// `(w1 s32[D,H], s1 f32[H], b1 f32[H], w2 s32[H,C], s2 f32[C], b2 f32[C])`.
-pub fn mlp_literals(params: &NetParams) -> Result<Vec<xla::Literal>> {
-    let m1 = &params.mlp1;
-    let m2 = &params.mlp2;
-    let w1: Vec<i32> = m1.w.iter().map(|&v| v as i32).collect();
-    let w2: Vec<i32> = m2.w.iter().map(|&v| v as i32).collect();
-    Ok(vec![
-        literal_i32(&w1, &[m1.d, m1.o])?,
-        literal_f32(&m1.scale, &[m1.o])?,
-        literal_f32(&m1.bias, &[m1.o])?,
-        literal_i32(&w2, &[m2.d, m2.o])?,
-        literal_f32(&m2.scale, &[m2.o])?,
-        literal_f32(&m2.bias, &[m2.o])?,
-    ])
+#[cfg(feature = "pjrt")]
+fn from_xla(lit: xla::Literal) -> Result<Literal> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => literal_f32(&lit.to_vec::<f32>()?, &dims),
+        xla::ElementType::S32 => literal_i32(&lit.to_vec::<i32>()?, &dims),
+        other => Err(Error::Runtime(format!(
+            "unsupported artifact output element type {other:?}"
+        ))),
+    }
 }
 
 #[cfg(test)]
@@ -213,6 +356,15 @@ mod tests {
         assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
         assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
         assert!(literal_i32(&[1, 2, 3], &[1, 3]).is_ok());
+    }
+
+    #[test]
+    fn literal_typed_extraction() {
+        let l = literal_i32(&[1, 2, 3], &[3]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.dims(), &[3]);
+        assert!(!l.is_empty());
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Dynamic batch formation: size- and deadline-triggered.
+//!
+//! The paper's cache earns its throughput by spreading one batch across
+//! many compute sub-arrays, so the serving layer wants batches as large
+//! as possible — but an always-on sensor pipeline cannot hold a lone
+//! frame hostage waiting for peers.  [`Batcher::next_batch`] therefore
+//! ships a batch when either trigger fires:
+//!
+//! * **size** — `max_batch` requests have accumulated, or
+//! * **deadline** — `max_delay` has elapsed since the *first* request of
+//!   the forming batch arrived (partial batches ship at the deadline).
+
+use std::time::Instant;
+
+use crate::config::ServeConfig;
+
+use super::queue::{BoundedQueue, PopResult};
+
+/// When a forming batch must ship.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_delay: std::time::Duration,
+}
+
+impl BatchPolicy {
+    pub fn from_serve(cfg: &ServeConfig) -> Self {
+        Self { max_batch: cfg.max_batch, max_delay: cfg.batch_deadline() }
+    }
+}
+
+/// Default deadline anchor: the moment the batcher popped the item.
+fn pop_time_anchor<T>(_: &T) -> Instant {
+    Instant::now()
+}
+
+/// Pulls items off a request queue and groups them into batches.
+pub struct Batcher<'q, T> {
+    queue: &'q BoundedQueue<T>,
+    policy: BatchPolicy,
+    anchor: fn(&T) -> Instant,
+}
+
+impl<'q, T> Batcher<'q, T> {
+    pub fn new(queue: &'q BoundedQueue<T>, policy: BatchPolicy) -> Self {
+        Self { queue, policy, anchor: pop_time_anchor::<T> }
+    }
+
+    /// Anchor the deadline to a timestamp carried by the item (its
+    /// enqueue time) instead of the pop time, so `max_delay` bounds the
+    /// item's *total* staleness: a request that already sat in the queue
+    /// past its deadline ships immediately with whatever backlog is on
+    /// hand, rather than waiting another full `max_delay`.
+    pub fn with_anchor(mut self, anchor: fn(&T) -> Instant) -> Self {
+        self.anchor = anchor;
+        self
+    }
+
+    /// Block for the next batch; `None` once the queue is closed and
+    /// drained.  Never returns an empty batch.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        let first = self.queue.pop()?;
+        let deadline = (self.anchor)(&first) + self.policy.max_delay;
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        batch.push(first);
+        while batch.len() < self.policy.max_batch {
+            // past the deadline this is a zero-wait poll: it drains the
+            // already-queued backlog into the batch but never waits
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match self.queue.pop_timeout(wait) {
+                PopResult::Item(item) => batch.push(item),
+                // deadline flush: ship what we have
+                PopResult::TimedOut => break,
+                // drain: ship the partial batch; the next call returns None
+                PopResult::Closed => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn size_trigger_ships_full_batches() {
+        let q = BoundedQueue::new(16);
+        for i in 0..7u32 {
+            q.try_push(i).unwrap();
+        }
+        let b = Batcher::new(&q, BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_secs(10),
+        });
+        // full batch ships immediately — the long deadline never engages
+        let t0 = Instant::now();
+        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn deadline_trigger_ships_partial_batch() {
+        let q = BoundedQueue::new(16);
+        q.try_push(42u32).unwrap();
+        let delay = Duration::from_millis(25);
+        let b = Batcher::new(&q, BatchPolicy { max_batch: 8, max_delay: delay });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(batch, vec![42]);
+        // shipped at (not far past, not before) the deadline
+        assert!(waited >= Duration::from_millis(20), "waited {waited:?}");
+        assert!(waited < Duration::from_millis(500), "waited {waited:?}");
+    }
+
+    #[test]
+    fn enqueue_anchor_ships_stale_backlog_without_waiting() {
+        // items carry their own enqueue timestamps, already past deadline
+        let q: BoundedQueue<Instant> = BoundedQueue::new(16);
+        let stale = Instant::now() - Duration::from_millis(50);
+        q.try_push(stale).unwrap();
+        q.try_push(stale).unwrap();
+        q.try_push(stale).unwrap();
+        let b = Batcher::new(&q, BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(10),
+        })
+        .with_anchor(|t: &Instant| *t);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        // the whole backlog ships at once, with zero additional delay
+        assert_eq!(batch.len(), 3);
+        assert!(t0.elapsed() < Duration::from_millis(10),
+                "waited a fresh deadline for already-stale items");
+    }
+
+    #[test]
+    fn close_flushes_partial_batch_then_ends() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.try_push(1u32).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        let b = Batcher::new(&q, BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_secs(10),
+        });
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_the_forming_batch() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.try_push(1u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let feeder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            q2.try_push(2).unwrap();
+        });
+        let b = Batcher::new(&q, BatchPolicy {
+            max_batch: 2,
+            max_delay: Duration::from_millis(250),
+        });
+        assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
+        feeder.join().unwrap();
+    }
+}

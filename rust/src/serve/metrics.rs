@@ -1,0 +1,290 @@
+//! Serving metrics: request counters, per-request latency percentiles,
+//! throughput, and the accelerator's energy/time account aggregated
+//! across shards.
+//!
+//! Counters are atomics (touched on every request); the latency
+//! reservoir and energy accumulators sit behind one mutex that is taken
+//! once per *completed* frame — far off the admission hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::FrameReport;
+use crate::energy::EnergyBreakdown;
+use crate::rng::Xoshiro256;
+
+/// Latency samples kept for percentile estimation.  Beyond this the
+/// sink switches to uniform reservoir sampling (Vitter's Algorithm R),
+/// so an always-on server holds O(1) memory no matter how many frames
+/// it has served.
+pub const LATENCY_RESERVOIR: usize = 1 << 16;
+
+/// Shared metrics sink for one server instance.
+pub struct Metrics {
+    accepted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    arch_mismatches: AtomicU64,
+    batches: AtomicU64,
+    inner: Mutex<Aggregates>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            arch_mismatches: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            inner: Mutex::new(Aggregates {
+                latencies_ns: Vec::new(),
+                samples_seen: 0,
+                rng: Xoshiro256::new(0x6c62_7031),
+                energy: EnergyBreakdown::default(),
+                arch_time_ns: 0.0,
+            }),
+        }
+    }
+}
+
+struct Aggregates {
+    /// Uniform sample of per-request latencies (≤ [`LATENCY_RESERVOIR`]).
+    latencies_ns: Vec<u64>,
+    /// Completions offered to the reservoir so far.
+    samples_seen: u64,
+    rng: Xoshiro256,
+    energy: EnergyBreakdown,
+    arch_time_ns: f64,
+}
+
+impl Metrics {
+    pub fn record_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One frame finished: queue→response latency plus its report.
+    pub fn record_completion(&self, latency: Duration, report: &FrameReport) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.arch_mismatches
+            .fetch_add(report.arch_mismatches, Ordering::Relaxed);
+        let mut agg = self.inner.lock().unwrap();
+        let ns = latency.as_nanos() as u64;
+        agg.samples_seen += 1;
+        if agg.latencies_ns.len() < LATENCY_RESERVOIR {
+            agg.latencies_ns.push(ns);
+        } else {
+            // Algorithm R: keep each of the n samples with prob. cap/n
+            let j = agg.rng.below(agg.samples_seen);
+            if (j as usize) < LATENCY_RESERVOIR {
+                agg.latencies_ns[j as usize] = ns;
+            }
+        }
+        agg.energy.add(&report.energy);
+        agg.arch_time_ns += report.arch_time_ns;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Freeze a report over everything recorded so far.
+    pub fn snapshot(&self, wall: Duration) -> MetricsReport {
+        let agg = self.inner.lock().unwrap();
+        let mut lat = agg.latencies_ns.clone();
+        lat.sort_unstable();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let wall_seconds = wall.as_secs_f64();
+        MetricsReport {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
+            arch_mismatches: self.arch_mismatches.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches == 0 {
+                0.0
+            } else {
+                completed as f64 / batches as f64
+            },
+            p50_ms: percentile_ns(&lat, 0.50) as f64 / 1e6,
+            p95_ms: percentile_ns(&lat, 0.95) as f64 / 1e6,
+            p99_ms: percentile_ns(&lat, 0.99) as f64 / 1e6,
+            max_ms: lat.last().copied().unwrap_or(0) as f64 / 1e6,
+            wall_seconds,
+            throughput_fps: if wall_seconds > 0.0 {
+                completed as f64 / wall_seconds
+            } else {
+                0.0
+            },
+            energy_per_frame_uj: if completed == 0 {
+                0.0
+            } else {
+                agg.energy.total_pj() / 1e6 / completed as f64
+            },
+            total_arch_time_ns: agg.arch_time_ns,
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (0 on empty).
+pub fn percentile_ns(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize)
+        .clamp(1, sorted.len())
+        - 1;
+    sorted[idx]
+}
+
+/// Frozen metrics for one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsReport {
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub arch_mismatches: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub wall_seconds: f64,
+    /// Host throughput: completed frames / wall clock.
+    pub throughput_fps: f64,
+    pub energy_per_frame_uj: f64,
+    /// Summed modeled accelerator busy time across shards [ns].
+    pub total_arch_time_ns: f64,
+}
+
+impl MetricsReport {
+    /// Modeled accelerator throughput with `shards` slices running
+    /// concurrently (busy time is summed, so divide it back out).
+    pub fn modeled_fps(&self, shards: usize) -> f64 {
+        if self.total_arch_time_ns <= 0.0 || self.completed == 0 {
+            return 0.0;
+        }
+        let per_shard_ns = self.total_arch_time_ns / shards.max(1) as f64;
+        self.completed as f64 / (per_shard_ns * 1e-9)
+    }
+
+    pub fn print(&self, label: &str) {
+        println!("== serve report: {label} ==");
+        println!(
+            "  requests  : {} accepted, {} rejected, {} completed, {} failed",
+            self.accepted, self.rejected, self.completed, self.failed
+        );
+        println!(
+            "  batches   : {} dispatched, {:.1} frames/batch mean",
+            self.batches, self.mean_batch
+        );
+        println!(
+            "  latency   : p50 {:.2} ms | p95 {:.2} ms | p99 {:.2} ms | \
+             max {:.2} ms",
+            self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms
+        );
+        println!(
+            "  throughput: {:.1} frames/s over {:.2} s wall",
+            self.throughput_fps, self.wall_seconds
+        );
+        println!(
+            "  energy    : {:.3} µJ/frame | arch mismatches {}",
+            self.energy_per_frame_uj, self.arch_mismatches
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_ns(&v, 0.50), 50);
+        assert_eq!(percentile_ns(&v, 0.95), 95);
+        assert_eq!(percentile_ns(&v, 0.99), 99);
+        assert_eq!(percentile_ns(&v, 1.0), 100);
+        assert_eq!(percentile_ns(&[7], 0.99), 7);
+        assert_eq!(percentile_ns(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn latency_reservoir_stays_bounded() {
+        let m = Metrics::default();
+        let report = FrameReport {
+            seq: 0,
+            predicted: 0,
+            logits: vec![],
+            exec: Default::default(),
+            dpu: Default::default(),
+            energy: Default::default(),
+            arch_time_ns: 0.0,
+            arch_mismatches: 0,
+        };
+        let n = LATENCY_RESERVOIR as u64 + 5000;
+        for i in 0..n {
+            m.record_completion(Duration::from_nanos(i + 1), &report);
+        }
+        let agg = m.inner.lock().unwrap();
+        assert_eq!(agg.latencies_ns.len(), LATENCY_RESERVOIR);
+        assert_eq!(agg.samples_seen, n);
+        // every retained sample is a real observation
+        assert!(agg.latencies_ns.iter().all(|&v| v >= 1 && v <= n));
+    }
+
+    #[test]
+    fn counters_and_snapshot() {
+        let m = Metrics::default();
+        m.record_accepted();
+        m.record_accepted();
+        m.record_rejected();
+        m.record_batch();
+        let report = FrameReport {
+            seq: 0,
+            predicted: 1,
+            logits: vec![0.0, 1.0],
+            exec: Default::default(),
+            dpu: Default::default(),
+            energy: Default::default(),
+            arch_time_ns: 1000.0,
+            arch_mismatches: 0,
+        };
+        m.record_completion(Duration::from_millis(2), &report);
+        m.record_completion(Duration::from_millis(4), &report);
+        let s = m.snapshot(Duration::from_secs(1));
+        assert_eq!(s.accepted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.batches, 1);
+        assert!((s.mean_batch - 2.0).abs() < 1e-12);
+        assert!((s.p50_ms - 2.0).abs() < 0.5);
+        assert!((s.max_ms - 4.0).abs() < 0.5);
+        assert!((s.throughput_fps - 2.0).abs() < 1e-9);
+        assert!((s.total_arch_time_ns - 2000.0).abs() < 1e-9);
+        assert!(s.modeled_fps(2) > s.modeled_fps(1) * 1.99);
+    }
+}

@@ -1,0 +1,333 @@
+//! `serve` — the sharded, batching frame-serving layer on top of the
+//! NS-LBP coordinator.
+//!
+//! The seed coordinator is a one-shot, run-to-completion loop; the paper
+//! (and the PISA/LBPNet line of work it extends) frames the accelerator
+//! as an *always-on* edge inference engine fed by continuous sensor
+//! streams.  This module supplies that missing layer:
+//!
+//! ```text
+//!  submit() ──► BoundedQueue ──► Batcher ──► BoundedQueue ──► ShardPool
+//!  (admission    (backpressure:   (size/      (of batches)    shard 0: banks 0..19
+//!   control)      reject past      deadline                   shard 1: banks 20..39
+//!                 queue_depth)     triggers)                  ...      ──► Ticket
+//! ```
+//!
+//! * [`queue`] — bounded MPMC queue; full ⇒ reject-with-error, closed ⇒
+//!   drain semantics.
+//! * [`batcher`] — dynamic batching, shipped at `max_batch` or at the
+//!   `batch_deadline_us` of the oldest queued frame.
+//! * [`shard`] — worker pool; each shard's [`Coordinator`] is pinned to a
+//!   disjoint bank slice ([`crate::coordinator::ShardSlice`]), so shards
+//!   model disjoint compute sub-arrays.  Sharding never changes logits —
+//!   only which banks (and therefore whose modeled time budget) do the
+//!   work; `rust/tests/serve.rs` proves 1-shard vs 4-shard equivalence.
+//! * [`metrics`] — accepted/rejected/completed counters, p50/p95/p99
+//!   latency, throughput, and the energy-per-frame account.
+//!
+//! Shutdown is a graceful drain: [`Server::drain`] stops admission,
+//! flushes the request queue through the batcher, lets every shard
+//! finish its in-flight batches, then returns the final
+//! [`MetricsReport`].  Knobs live in `[serve]` of the system config
+//! ([`crate::config::ServeConfig`]); `ns-lbp serve-bench` exercises the
+//! whole stack from the CLI.
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod shard;
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::coordinator::{CoordinatorConfig, FrameReport};
+use crate::error::{Error, Result};
+use crate::params::NetParams;
+use crate::sensor::Frame;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Metrics, MetricsReport};
+pub use queue::{BoundedQueue, PopResult, PushError};
+pub use shard::{Batch, ShardPool};
+
+/// One admitted inference request flowing through the pipeline.
+pub struct Request {
+    pub frame: Frame,
+    pub(crate) enqueued_at: Instant,
+    pub(crate) slot: ResponseSlot,
+}
+
+/// A completed inference plus its serving metadata.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    /// The coordinator's full per-frame report (logits, energy, stats).
+    pub report: FrameReport,
+    /// Which shard processed the frame.
+    pub shard: usize,
+    /// Size of the dispatch batch this frame rode in.
+    pub batch_size: usize,
+    /// Queue-entry to completion latency.
+    pub latency: Duration,
+}
+
+impl InferResponse {
+    pub fn seq(&self) -> u64 {
+        self.report.seq
+    }
+
+    pub fn predicted(&self) -> usize {
+        self.report.predicted
+    }
+}
+
+/// One-shot completion slot shared between a [`Ticket`] and the shard
+/// that fulfills it.
+pub(crate) struct SlotState {
+    result: Mutex<Option<Result<InferResponse>>>,
+    ready: Condvar,
+}
+
+pub(crate) type ResponseSlot = Arc<SlotState>;
+
+impl SlotState {
+    fn new() -> Self {
+        Self { result: Mutex::new(None), ready: Condvar::new() }
+    }
+
+    pub(crate) fn fulfill(&self, r: Result<InferResponse>) {
+        *self.result.lock().unwrap() = Some(r);
+        self.ready.notify_all();
+    }
+}
+
+/// Claim check for an admitted request.
+pub struct Ticket {
+    slot: ResponseSlot,
+}
+
+impl Ticket {
+    /// Block until the shard pool delivers the response.
+    pub fn wait(self) -> Result<InferResponse> {
+        let mut g = self.slot.result.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.slot.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking poll; `None` while the frame is still in flight.
+    pub fn try_take(&self) -> Option<Result<InferResponse>> {
+        self.slot.result.lock().unwrap().take()
+    }
+}
+
+/// The serving front-end: admission queue + batcher thread + shard pool.
+pub struct Server {
+    requests: Arc<BoundedQueue<Request>>,
+    batches: Arc<BoundedQueue<Batch>>,
+    metrics: Arc<Metrics>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    pool: Option<ShardPool>,
+    started: Instant,
+    shards: usize,
+}
+
+impl Server {
+    /// Spin up the pipeline: `config.system.serve` supplies the knobs,
+    /// the rest of `config` (cache geometry, arch-sim switches) is
+    /// inherited by every shard's coordinator.
+    pub fn start(params: NetParams, config: CoordinatorConfig) -> Result<Self> {
+        let serve: ServeConfig = config.system.serve;
+        serve.validate()?;
+        let requests = Arc::new(BoundedQueue::new(serve.queue_depth));
+        // a couple of in-flight batches per shard keeps workers fed
+        // without hiding queueing latency inside the dispatch stage
+        let batches = Arc::new(BoundedQueue::new(serve.shards * 2));
+        let metrics = Arc::new(Metrics::default());
+
+        // spawn() validates the shard slicing against the cache geometry
+        // and errors before any worker thread starts
+        let pool = ShardPool::spawn(&params, &config, serve.shards, &batches,
+                                    &metrics)?;
+
+        let policy = BatchPolicy::from_serve(&serve);
+        let spawned = {
+            let requests = Arc::clone(&requests);
+            let batches = Arc::clone(&batches);
+            std::thread::Builder::new()
+                .name("nslbp-batcher".into())
+                .spawn(move || {
+                    // deadline anchored to enqueue time: max_delay bounds a
+                    // frame's total queue staleness, not time-since-pop
+                    let b = Batcher::new(&requests, policy)
+                        .with_anchor(|r: &Request| r.enqueued_at);
+                    while let Some(batch) = b.next_batch() {
+                        if batches.push(batch).is_err() {
+                            break; // batch queue force-closed
+                        }
+                    }
+                    batches.close();
+                })
+        };
+        let batcher = match spawned {
+            Ok(handle) => handle,
+            Err(e) => {
+                // unwind cleanly: release the already-running shard pool
+                requests.close();
+                batches.close();
+                let _ = pool.join();
+                return Err(Error::Io(e));
+            }
+        };
+
+        Ok(Self {
+            requests,
+            batches,
+            metrics,
+            batcher: Some(batcher),
+            pool: Some(pool),
+            started: Instant::now(),
+            shards: serve.shards,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Admit one frame.  Backpressure is an error, not a wait: past
+    /// `serve.queue_depth` the frame is rejected immediately.
+    pub fn submit(&self, frame: Frame) -> Result<Ticket> {
+        let slot = Arc::new(SlotState::new());
+        let req = Request {
+            frame,
+            enqueued_at: Instant::now(),
+            slot: Arc::clone(&slot),
+        };
+        match self.requests.try_push(req) {
+            Ok(()) => {
+                self.metrics.record_accepted();
+                Ok(Ticket { slot })
+            }
+            Err((PushError::Full, _)) => {
+                self.metrics.record_rejected();
+                Err(Error::Serve(format!(
+                    "admission rejected: queue at configured depth {}",
+                    self.requests.capacity()
+                )))
+            }
+            Err((PushError::Closed, _)) => {
+                Err(Error::Serve("server is draining".into()))
+            }
+        }
+    }
+
+    /// Live view of the metrics sink.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Graceful drain: stop admission, flush every queued request through
+    /// batcher and shards, join all threads, and return the final report.
+    pub fn drain(mut self) -> Result<MetricsReport> {
+        self.requests.close();
+        if let Some(b) = self.batcher.take() {
+            b.join()
+                .map_err(|_| Error::Serve("batcher thread panicked".into()))?;
+        }
+        // the batcher closed `batches` on exit; shards drain it and stop
+        if let Some(pool) = self.pool.take() {
+            pool.join()?;
+        }
+        Ok(self.metrics.snapshot(self.started.elapsed()))
+    }
+}
+
+impl Drop for Server {
+    /// Dropping without [`Server::drain`] still releases the worker
+    /// threads (close both queues); in-flight tickets may stay pending.
+    fn drop(&mut self) {
+        self.requests.close();
+        self.batches.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ArchSim;
+    use crate::params::synth::synth_params;
+
+    fn synth_frames(n: usize, seed: u64) -> (NetParams, Vec<Frame>) {
+        let (_, params) = synth_params(5);
+        let frames = crate::testing::synth_frames(&params, n, seed).unwrap();
+        (params, frames)
+    }
+
+    fn test_config(shards: usize) -> CoordinatorConfig {
+        let mut config = CoordinatorConfig {
+            arch: ArchSim { lbp: false, mlp: false, early_exit: false },
+            ..Default::default()
+        };
+        config.system.serve.shards = shards;
+        config.system.serve.max_batch = 4;
+        config.system.serve.batch_deadline_us = 500;
+        config
+    }
+
+    #[test]
+    fn server_round_trip_and_drain() {
+        let (params, frames) = synth_frames(10, 3);
+        let server = Server::start(params, test_config(2)).unwrap();
+        let tickets: Vec<Ticket> = frames
+            .into_iter()
+            .map(|f| server.submit(f).unwrap())
+            .collect();
+        let mut responses: Vec<InferResponse> =
+            tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        responses.sort_by_key(|r| r.seq());
+        for (i, r) in responses.iter().enumerate() {
+            assert_eq!(r.seq(), i as u64);
+            assert!(r.predicted() < 10);
+            assert!(r.shard < 2);
+            assert!(r.batch_size >= 1);
+        }
+        let report = server.drain().unwrap();
+        assert_eq!(report.accepted, 10);
+        assert_eq!(report.completed, 10);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.arch_mismatches, 0);
+        assert!(report.batches >= 3, "10 frames / max_batch 4");
+        assert!(report.p50_ms <= report.p95_ms);
+        assert!(report.p95_ms <= report.p99_ms);
+        assert!(report.throughput_fps > 0.0);
+    }
+
+    #[test]
+    fn bad_frame_shape_fails_just_that_ticket() {
+        let (params, frames) = synth_frames(2, 4);
+        let server = Server::start(params, test_config(1)).unwrap();
+        let good = server.submit(frames[0].clone()).unwrap();
+        let bad = server
+            .submit(Frame { rows: 1, cols: 1, channels: 1, pixels: vec![0],
+                            seq: 99 })
+            .unwrap();
+        assert!(good.wait().is_ok());
+        assert!(bad.wait().is_err());
+        let report = server.drain().unwrap();
+        assert_eq!(report.failed, 1);
+        assert_eq!(report.completed, 1);
+    }
+
+    #[test]
+    fn submit_after_drop_semantics_and_shard_validation() {
+        let (params, _) = synth_frames(1, 5);
+        // more shards than banks must fail fast at start()
+        let mut config = test_config(81);
+        config.system.serve.shards = 81;
+        assert!(Server::start(params, config).is_err());
+    }
+}

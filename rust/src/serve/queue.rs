@@ -1,0 +1,258 @@
+//! Bounded MPMC queue with admission control (crossbeam is unavailable
+//! offline; this is a Mutex + Condvar ring shared by producers and
+//! consumers).
+//!
+//! Two properties matter to the serving layer:
+//!
+//! * **Backpressure is explicit.** [`BoundedQueue::try_push`] never
+//!   blocks: past the configured depth it hands the item back with
+//!   [`PushError::Full`] so the caller can reject the request instead of
+//!   letting an unbounded backlog destroy tail latency.  Producers that
+//!   *are* allowed to wait (the batcher feeding shard workers) use
+//!   [`BoundedQueue::push`].
+//! * **Shutdown is a drain, not a drop.** [`BoundedQueue::close`] stops
+//!   new work; consumers keep popping until the queue is empty and only
+//!   then observe the closed state, so every admitted item is processed.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a non-blocking push was refused (the item is handed back).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue at capacity — admission control rejected the item.
+    Full,
+    /// Queue closed for new work (draining / shut down).
+    Closed,
+}
+
+/// Outcome of a bounded-wait pop.
+#[derive(Debug)]
+pub enum PopResult<T> {
+    Item(T),
+    /// Nothing arrived within the timeout; the queue is still open.
+    TimedOut,
+    /// Queue closed and fully drained.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer / multi-consumer queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    capacity: usize,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be >= 1");
+        Self {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            capacity,
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Non-blocking admission-controlled push; hands the item back when
+    /// the queue is full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), (PushError, T)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((PushError::Closed, item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err((PushError::Full, item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for space.  Returns the item back only if the
+    /// queue is closed while waiting.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a bounded wait (used by the batcher's deadline logic).
+    pub fn pop_timeout(&self, timeout: Duration) -> PopResult<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return PopResult::Item(item);
+            }
+            if g.closed {
+                return PopResult::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopResult::TimedOut;
+            }
+            let (guard, res) =
+                self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.items.is_empty() && !g.closed {
+                return PopResult::TimedOut;
+            }
+        }
+    }
+
+    /// Close for new work; wakes every waiter so consumers can drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_queue_rejects_and_returns_item() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        let (err, item) = q.try_push(3).unwrap_err();
+        assert_eq!(err, PushError::Full);
+        assert_eq!(item, 3);
+        assert_eq!(q.len(), 2);
+        // space frees up after a pop
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn closed_queue_rejects_pushes_but_drains_pops() {
+        let q = BoundedQueue::new(4);
+        q.try_push("a").unwrap();
+        q.close();
+        assert!(q.is_closed());
+        let (err, _) = q.try_push("b").unwrap_err();
+        assert_eq!(err, PushError::Closed);
+        assert_eq!(q.push("c"), Err("c"));
+        // the admitted item still comes out, then Closed
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), None);
+        assert!(matches!(q.pop_timeout(Duration::from_millis(1)),
+                         PopResult::Closed));
+    }
+
+    #[test]
+    fn pop_timeout_expires_on_empty_open_queue() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        let t0 = Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(20)),
+                         PopResult::TimedOut));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1u32).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || q2.push(2).is_ok());
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.pop(), Some(1));
+        assert!(producer.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn mpmc_under_contention_delivers_everything_once() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let n_items = 200u32;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..n_items / 4 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n_items as usize);
+    }
+}

@@ -1,0 +1,98 @@
+//! Shard worker pool: each shard owns a [`Coordinator`] pinned to a
+//! disjoint slice of the cache's banks ([`ShardSlice`]), mirroring the
+//! paper's parallelism model — different frames proceed on different
+//! bank groups, so one hot request cannot monopolize the whole 2.5 MB
+//! slice.  Workers pull *batches* (not single frames) so a shard keeps
+//! its sub-arrays busy across a whole dispatch.
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, ShardSlice};
+use crate::error::{Error, Result};
+use crate::params::NetParams;
+
+use super::metrics::Metrics;
+use super::queue::BoundedQueue;
+use super::{InferResponse, Request};
+
+/// A dispatched batch of admitted requests.
+pub type Batch = Vec<Request>;
+
+/// Fixed pool of shard worker threads consuming from a shared batch queue.
+pub struct ShardPool {
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Build `count` sharded coordinators (erroring early on an invalid
+    /// slice) and spawn one worker thread per shard.
+    pub fn spawn(params: &NetParams, base: &CoordinatorConfig, count: usize,
+                 batches: &Arc<BoundedQueue<Batch>>, metrics: &Arc<Metrics>)
+                 -> Result<Self> {
+        let mut coordinators = Vec::with_capacity(count);
+        for index in 0..count {
+            let config = CoordinatorConfig {
+                shard: Some(ShardSlice { index, count }),
+                ..base.clone()
+            };
+            coordinators.push(Coordinator::new(params.clone(), config)?);
+        }
+        let workers = coordinators
+            .into_iter()
+            .enumerate()
+            .map(|(index, coord)| {
+                let batches = Arc::clone(batches);
+                let metrics = Arc::clone(metrics);
+                std::thread::Builder::new()
+                    .name(format!("nslbp-shard-{index}"))
+                    .spawn(move || shard_main(index, coord, &batches, &metrics))
+                    .map_err(Error::Io)
+            })
+            .collect::<Result<Vec<_>>>()
+            .map_err(|e| {
+                // release any workers that did start before the failure
+                batches.close();
+                e
+            })?;
+        Ok(Self { workers })
+    }
+
+    /// Wait for every worker to finish (the batch queue must be closed
+    /// first, or this blocks forever).
+    pub fn join(self) -> Result<()> {
+        for w in self.workers {
+            w.join().map_err(|_| {
+                Error::Serve("shard worker panicked".into())
+            })?;
+        }
+        Ok(())
+    }
+}
+
+fn shard_main(index: usize, coord: Coordinator,
+              batches: &BoundedQueue<Batch>, metrics: &Metrics) {
+    let mut handle = coord.frame_handle();
+    while let Some(batch) = batches.pop() {
+        metrics.record_batch();
+        let batch_size = batch.len();
+        for req in batch {
+            match handle.process(&req.frame) {
+                Ok(report) => {
+                    let latency = req.enqueued_at.elapsed();
+                    metrics.record_completion(latency, &report);
+                    req.slot.fulfill(Ok(InferResponse {
+                        report,
+                        shard: index,
+                        batch_size,
+                        latency,
+                    }));
+                }
+                Err(e) => {
+                    metrics.record_failure();
+                    req.slot.fulfill(Err(e));
+                }
+            }
+        }
+    }
+}

@@ -2,7 +2,9 @@
 //!
 //! Provides value generators over [`crate::rng::Xoshiro256`], a case runner
 //! with failure reporting (seed + iteration, so any failure is replayable),
-//! and greedy input shrinking for the common container/scalar cases.
+//! greedy input shrinking for the common container/scalar cases, and the
+//! shared synthetic-frame replay ([`synth_frames`]) used by `serve-bench`,
+//! the serving benches, and the serve tests.
 //!
 //! ```no_run
 //! // (no_run: doctest binaries bypass the crate's rpath to libxla_extension)
@@ -16,6 +18,47 @@
 //! ```
 
 use crate::rng::Xoshiro256;
+
+/// Digitize `n` random synthetic scenes through the sensor model for the
+/// given network shape — the deterministic frame workload behind
+/// `serve-bench`, `benches/serve_throughput.rs`, and the serve tests.
+pub fn synth_frames(params: &crate::params::NetParams, n: usize, seed: u64)
+                    -> crate::error::Result<Vec<crate::sensor::Frame>> {
+    use crate::sensor::{FrameSource, ReplaySensor, SensorConfig};
+    let cfg = params.config;
+    let sensor_cfg = SensorConfig {
+        rows: cfg.height,
+        cols: cfg.width,
+        channels: cfg.in_channels,
+        skip_lsbs: cfg.apx_pixel,
+        ..Default::default()
+    };
+    let mut rng = Xoshiro256::new(seed);
+    let scenes: Vec<Vec<f64>> = (0..n)
+        .map(|_| (0..sensor_cfg.pixels()).map(|_| rng.next_f64()).collect())
+        .collect();
+    let mut sensor = ReplaySensor::new(sensor_cfg, scenes, seed)?;
+    let mut frames = Vec::with_capacity(n);
+    while let Some(f) = sensor.next_frame() {
+        frames.push(f);
+    }
+    Ok(frames)
+}
+
+/// Load `artifacts/<dataset>.params.bin` (honoring the `NSLBP_ARTIFACTS`
+/// env var), or `None` with a skip message when the artifact is absent —
+/// the gating helper the artifact-dependent test suites share so
+/// `cargo test` stays green from a bare checkout.
+pub fn artifact_params(dataset: &str) -> Option<crate::params::NetParams> {
+    let dir = std::env::var("NSLBP_ARTIFACTS")
+        .unwrap_or_else(|_| crate::ARTIFACTS_DIR.into());
+    let path = format!("{dir}/{dataset}.params.bin");
+    if !std::path::Path::new(&path).exists() {
+        eprintln!("skipping: artifact {path} missing — run `make artifacts`");
+        return None;
+    }
+    Some(crate::params::load(path).expect("corrupt params artifact"))
+}
 
 /// Runner configuration.
 #[derive(Clone, Debug)]

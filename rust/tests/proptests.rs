@@ -192,9 +192,9 @@ fn prop_params_roundtrip_and_header_corruption() {
     });
 }
 
-// Re-export of the test-only synth helper through a tiny shim: the
-// `params::testutil` module is `cfg(test)` of the lib crate, so we rebuild
-// an equivalent minimal blob here.
+// A minimal local blob generator, intentionally *independent* of the
+// crate's own `params::synth` so the property tests do not share a code
+// path with the serializer under test.
 fn ns_lbp_params_synth(seed: u64) -> (Vec<u8>, ns_lbp::params::NetParams) {
     use ns_lbp::params::*;
     use ns_lbp::rng::Xoshiro256;
