@@ -107,10 +107,9 @@ fn main() {
         let q = model::sensor_quantize(&img, cfg.apx_pixel);
         let frame = Frame { rows: cfg.height, cols: cfg.width,
                             channels: cfg.in_channels, pixels: q, seq: 0 };
-        let g = coord.config.system.cache;
-        let mut scratch = SubArray::new(g.rows, g.cols);
+        let mut handle = coord.frame_handle().unwrap();
         b.run("architectural_frame_mnist", || {
-            coord.process_frame(black_box(&frame), &mut scratch).unwrap().seq
+            handle.process(black_box(&frame)).unwrap().seq
         });
     } else {
         eprintln!("(skipping whole-frame benches: run `make artifacts`)");

@@ -1,6 +1,9 @@
 //! Serving-layer macro-benchmark: wall-clock throughput and tail latency
 //! of the sharded, batching serve subsystem, swept over
-//! batch size × shard count on a fixed synthetic frame replay.
+//! backend × batch size × shard count on a fixed synthetic frame replay.
+//! Every shard constructs its execution path through the engine layer
+//! (`engine.backend`), so the same harness A/B-compares the functional
+//! and architectural backends.
 //!
 //! ```bash
 //! cargo bench --bench serve_throughput            # full sweep
@@ -10,6 +13,7 @@
 use ns_lbp::bench_harness::Table;
 use ns_lbp::config::SystemConfig;
 use ns_lbp::coordinator::{ArchSim, CoordinatorConfig};
+use ns_lbp::engine::BackendKind;
 use ns_lbp::params::synth::synth_params;
 use ns_lbp::serve::Server;
 use ns_lbp::testing::synth_frames;
@@ -19,6 +23,7 @@ fn main() {
     let n_frames = if fast { 64 } else { 256 };
     let shard_counts: &[usize] = if fast { &[1, 4] } else { &[1, 2, 4, 8] };
     let batch_sizes: &[usize] = if fast { &[8] } else { &[1, 8, 32] };
+    let backends = [BackendKind::Architectural, BackendKind::Functional];
 
     // prefer the trained artifact network; otherwise a synthetic one so
     // the bench runs from a bare checkout
@@ -26,50 +31,55 @@ fn main() {
         .unwrap_or_else(|_| synth_params(7).1);
     let frames = synth_frames(&params, n_frames, 11).unwrap();
     println!(
-        "serve_throughput: {} frames of {}x{}x{}, arch LBP on\n",
+        "serve_throughput: {} frames of {}x{}x{}\n",
         frames.len(), params.config.height, params.config.width,
         params.config.in_channels
     );
 
     let mut table = Table::new(&[
-        "shards", "batch", "fps", "p50_ms", "p95_ms", "p99_ms",
+        "backend", "shards", "batch", "fps", "p50_ms", "p95_ms", "p99_ms",
         "mean_batch", "uJ_frame", "mismatches",
     ]);
-    for &batch in batch_sizes {
-        for &shards in shard_counts {
-            let mut system = SystemConfig::default();
-            system.serve.shards = shards;
-            system.serve.max_batch = batch;
-            system.serve.queue_depth = n_frames; // replay never rejects
-            system.serve.batch_deadline_us = 2000;
-            let server = Server::start(
-                params.clone(),
-                CoordinatorConfig {
-                    system,
-                    arch: ArchSim { lbp: true, mlp: false, early_exit: false },
-                    shard: None,
-                },
-            )
-            .unwrap();
-            let tickets: Vec<_> = frames
-                .iter()
-                .map(|f| server.submit(f.clone()).unwrap())
-                .collect();
-            for t in tickets {
-                t.wait().unwrap();
+    for &backend in &backends {
+        for &batch in batch_sizes {
+            for &shards in shard_counts {
+                let mut system = SystemConfig::default();
+                system.engine.backend = backend;
+                system.serve.shards = shards;
+                system.serve.max_batch = batch;
+                system.serve.queue_depth = n_frames; // replay never rejects
+                system.serve.batch_deadline_us = 2000;
+                let server = Server::start(
+                    params.clone(),
+                    CoordinatorConfig {
+                        system,
+                        arch: ArchSim { lbp: true, mlp: false,
+                                        early_exit: false },
+                        shard: None,
+                    },
+                )
+                .unwrap();
+                let tickets: Vec<_> = frames
+                    .iter()
+                    .map(|f| server.submit(f.clone()).unwrap())
+                    .collect();
+                for t in tickets {
+                    t.wait().unwrap();
+                }
+                let r = server.drain().unwrap();
+                table.row(&[
+                    backend.to_string(),
+                    shards.to_string(),
+                    batch.to_string(),
+                    format!("{:.1}", r.throughput_fps),
+                    format!("{:.2}", r.p50_ms),
+                    format!("{:.2}", r.p95_ms),
+                    format!("{:.2}", r.p99_ms),
+                    format!("{:.1}", r.mean_batch),
+                    format!("{:.3}", r.energy_per_frame_uj),
+                    r.arch_mismatches.to_string(),
+                ]);
             }
-            let r = server.drain().unwrap();
-            table.row(&[
-                shards.to_string(),
-                batch.to_string(),
-                format!("{:.1}", r.throughput_fps),
-                format!("{:.2}", r.p50_ms),
-                format!("{:.2}", r.p95_ms),
-                format!("{:.2}", r.p99_ms),
-                format!("{:.1}", r.mean_batch),
-                format!("{:.3}", r.energy_per_frame_uj),
-                r.arch_mismatches.to_string(),
-            ]);
         }
     }
     table.print();

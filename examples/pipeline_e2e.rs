@@ -23,11 +23,10 @@
 
 use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
 use ns_lbp::energy::EnergyModel;
-use ns_lbp::model::argmax;
+use ns_lbp::engine::{BackendKind, Engine};
 use ns_lbp::params;
 use ns_lbp::rng::Xoshiro256;
-use ns_lbp::runtime::Runtime;
-use ns_lbp::sensor::{ReplaySensor, SensorConfig};
+use ns_lbp::sensor::{FrameSource, ReplaySensor, SensorConfig};
 
 const FRAMES: usize = 64;
 
@@ -107,6 +106,10 @@ fn main() -> ns_lbp::Result<()> {
         skip_lsbs: cfg.apx_pixel, ..Default::default()
     };
     let mut sensor = ReplaySensor::new(scfg, scenes.clone(), 11)?;
+    let mut frames = Vec::with_capacity(FRAMES);
+    while let Some(f) = sensor.next_frame() {
+        frames.push(f);
+    }
     let coord = Coordinator::new(
         params.clone(),
         CoordinatorConfig {
@@ -115,7 +118,7 @@ fn main() -> ns_lbp::Result<()> {
         },
     )?;
     let t0 = std::time::Instant::now();
-    let (reports, summary) = coord.run(&mut sensor, FRAMES)?;
+    let (reports, summary) = coord.run_frames(&frames)?;
     let wall = t0.elapsed();
 
     if summary.arch_mismatches != 0 {
@@ -127,27 +130,29 @@ fn main() -> ns_lbp::Result<()> {
         .filter(|(r, &l)| r.predicted == l)
         .count();
 
-    // --- golden check: one batch through the PJRT artifact ------------------
+    // --- golden check: one batch through the PJRT engine backend ------------
     // (skipped gracefully when the HLO artifact or the PJRT backend —
-    // cargo feature `pjrt` — is unavailable)
-    let mut rt = Runtime::new("artifacts")?;
-    let golden = match rt.load("aplbp_mnist") {
-        Ok(()) => {
-            let npix = cfg.height * cfg.width * cfg.in_channels;
-            let mut flat = Vec::with_capacity(4 * npix);
-            for s in scenes.iter().take(4) {
-                // feed the *digitized* pixels so PJRT sees exactly what the
-                // simulator saw (the sensor is deterministic and noise adds
-                // only what CDS leaves, which is 0 here)
-                flat.extend(s.iter().map(|&v| v as f32));
-            }
-            let pjrt_logits = rt.run_aplbp("aplbp_mnist", &params, &flat, 4)?;
+    // cargo feature `pjrt` — is unavailable; the engine's capabilities
+    // probe turns that into one early error instead of a late failure)
+    let golden_engine = Engine::builder()
+        .config(coord.config.clone())
+        .params(params.clone())
+        .backend(BackendKind::Pjrt)
+        .no_cross_check()
+        .artifact("aplbp_mnist")
+        .build();
+    let golden = match golden_engine {
+        Ok(mut engine) => {
+            // feed the *digitized* frames so PJRT sees exactly what the
+            // simulator saw (the sensor is deterministic and noise adds
+            // only what CDS leaves, which is 0 here)
+            let out = engine.infer_batch(&frames[..4])?;
             let mut golden_ok = true;
-            for (i, l) in pjrt_logits.iter().enumerate() {
-                if argmax(l) != reports[i].predicted {
+            for (o, r) in out.frames.iter().zip(&reports) {
+                if o.predicted != r.predicted {
                     golden_ok = false;
-                    eprintln!("golden mismatch on frame {i}: pjrt {} vs sim {}",
-                              argmax(l), reports[i].predicted);
+                    eprintln!("golden mismatch on frame {}: pjrt {} vs sim {}",
+                              o.seq, o.predicted, r.predicted);
                 }
             }
             if !golden_ok {

@@ -54,8 +54,9 @@ fn main() -> ns_lbp::Result<()> {
     for r in &reports {
         println!(
             "frame {}: class {} | {} ISA instrs | {:.2} µJ | {:.2} µs modeled",
-            r.seq, r.predicted, r.exec.instructions,
-            r.energy.total_pj() / 1e6, r.arch_time_ns / 1e3
+            r.seq, r.predicted, r.telemetry.exec.instructions,
+            r.telemetry.energy.total_pj() / 1e6,
+            r.telemetry.arch_time_ns / 1e3
         );
     }
     println!(

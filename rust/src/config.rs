@@ -14,6 +14,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::engine::BackendKind;
 use crate::error::{Error, Result};
 
 /// A parsed scalar or array value.
@@ -212,6 +213,34 @@ fn type_err(key: &str, want: &str, got: &Value) -> Error {
 // System configuration
 // ---------------------------------------------------------------------------
 
+/// Engine-layer backend selection (see [`crate::engine`]): which
+/// [`BackendKind`] executes inference, and an optional reference backend
+/// every frame is cross-checked against (logit divergences are counted in
+/// the telemetry).  Settable from the `[engine]` config section or
+/// `--set engine.backend=functional` / `--set engine.cross_check=...`;
+/// the CLI `--backend` / `--cross-check` options override both.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EngineSelection {
+    /// Primary inference backend (default: architectural).
+    pub backend: BackendKind,
+    /// Reference backend for per-frame cross-checking (default: none).
+    pub cross_check: Option<BackendKind>,
+    /// HLO artifact the PJRT backend executes, resolved inside
+    /// `artifacts_dir` (the CLI derives `aplbp_<dataset>` from
+    /// `--dataset`).
+    pub pjrt_artifact: String,
+}
+
+impl Default for EngineSelection {
+    fn default() -> Self {
+        Self {
+            backend: BackendKind::default(),
+            cross_check: None,
+            pjrt_artifact: "aplbp_mnist".into(),
+        }
+    }
+}
+
 /// Frame-serving subsystem knobs (see [`crate::serve`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServeConfig {
@@ -259,6 +288,8 @@ pub struct SystemConfig {
     pub sensor: crate::sensor::SensorConfig,
     /// Frame-serving subsystem knobs.
     pub serve: ServeConfig,
+    /// Engine-layer backend selection.
+    pub engine: EngineSelection,
     /// Worker threads for the coordinator (0 = one per bank group).
     pub workers: usize,
     /// Artifacts directory for HLO/params files.
@@ -272,6 +303,7 @@ impl Default for SystemConfig {
             circuit: crate::circuit::CircuitParams::default(),
             sensor: crate::sensor::SensorConfig::default(),
             serve: ServeConfig::default(),
+            engine: EngineSelection::default(),
             workers: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -294,6 +326,7 @@ impl SystemConfig {
             "sensor.adc_bits", "sensor.skip_lsbs", "sensor.fps",
             "serve.shards", "serve.queue_depth", "serve.max_batch",
             "serve.batch_deadline_us",
+            "engine.backend", "engine.cross_check", "engine.pjrt_artifact",
             "runtime.workers", "runtime.artifacts_dir",
         ];
         for key in file.keys() {
@@ -361,11 +394,24 @@ impl SystemConfig {
         };
         serve.validate()?;
 
+        let engine = EngineSelection {
+            backend: file
+                .get_str("engine.backend", d.engine.backend.as_str())?
+                .parse()?,
+            cross_check: BackendKind::parse_optional(&file.get_str(
+                "engine.cross_check",
+                d.engine.cross_check.map_or("none", |k| k.as_str()),
+            )?)?,
+            pjrt_artifact: file
+                .get_str("engine.pjrt_artifact", &d.engine.pjrt_artifact)?,
+        };
+
         Ok(Self {
             cache,
             circuit,
             sensor,
             serve,
+            engine,
             workers: file.get_usize("runtime.workers", d.workers)?,
             artifacts_dir: file.get_str("runtime.artifacts_dir", &d.artifacts_dir)?,
         })
@@ -459,6 +505,29 @@ mod tests {
         f.set_override("cache.banks=40").unwrap();
         let sc = SystemConfig::from_file(&f).unwrap();
         assert_eq!(sc.cache.banks, 40);
+    }
+
+    #[test]
+    fn engine_selection_parses_and_rejects_unknown() {
+        let f = ConfigFile::parse(
+            "[engine]\nbackend = \"functional\"\ncross_check = \"architectural\"",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(sc.engine.backend, BackendKind::Functional);
+        assert_eq!(sc.engine.cross_check, Some(BackendKind::Architectural));
+
+        let off = ConfigFile::parse(
+            "[engine]\ncross_check = \"none\"\npjrt_artifact = \"aplbp_svhn\"",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&off).unwrap();
+        assert_eq!(sc.engine.backend, BackendKind::Architectural);
+        assert_eq!(sc.engine.cross_check, None);
+        assert_eq!(sc.engine.pjrt_artifact, "aplbp_svhn");
+
+        let bad = ConfigFile::parse("[engine]\nbackend = \"warp\"").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
     }
 
     #[test]

@@ -1,97 +1,36 @@
-//! The near-sensor coordinator: sensor → mapper → in-memory execution →
-//! DPU → classification.
+//! The near-sensor coordinator: sensor → engine → classification, with
+//! worker-thread fan-out and run-level aggregation.
 //!
-//! This is the L3 runtime that ties the whole system together.  Each frame
-//! flows through two redundant paths:
-//!
-//! * the **functional path** ([`crate::model`]) — fast bit-exact integer
-//!   inference used for the logits, and
-//! * the **architectural path** — the same LBP comparisons executed as
-//!   Algorithm 1 over simulated compute sub-arrays
-//!   ([`crate::lbp::parallel_compare`]) and, optionally, the MLP as
-//!   in-memory AND/bitcount ([`crate::mlp`]), producing cycle/energy
-//!   statistics *and* a per-frame equivalence check (any divergence is
-//!   counted in [`FrameReport::arch_mismatches`] — it must be 0).
-//!
-//! Frames are independent, so the run loop fans out over worker threads
+//! Since the engine redesign the coordinator no longer owns any inference
+//! logic; it builds one [`crate::engine::Engine`] per worker thread from
+//! its configuration (`system.engine.backend` selects the execution path,
+//! `system.engine.cross_check` an optional reference backend) and merges
+//! the per-frame [`FrameReport`]s into a [`RunSummary`].  Frames are
+//! independent, so the run loop fans out over worker threads
 //! (std::thread — tokio is unavailable offline), each with its own
-//! scratch sub-array; the modeled accelerator time still assumes the
-//! paper's geometry (batches spread across the cache's sub-arrays).
+//! engine (and therefore its own scratch sub-array); the modeled
+//! accelerator time still assumes the paper's geometry (batches spread
+//! across the cache's sub-arrays).
+//!
+//! `ArchSim`, `ShardSlice`, and the configuration struct now live in
+//! [`crate::engine`]; this module re-exports them under their historical
+//! names so existing call sites keep working.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
-use crate::config::SystemConfig;
-use crate::dpu::{Dpu, DpuStats};
-use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::dpu::DpuStats;
+use crate::energy::EnergyBreakdown;
+use crate::engine::Engine;
 use crate::error::{Error, Result};
-use crate::isa::{ExecStats, Executor};
-use crate::lbp::parallel_compare;
-use crate::mapping::LbpSubarrayMap;
-use crate::mlp::MlpSubarrayMap;
-use crate::model::{self, TensorU8};
-use crate::params::{LbpLayer, NetParams};
+use crate::isa::ExecStats;
+use crate::params::NetParams;
 use crate::sensor::{Frame, FrameSource};
-use crate::sram::{Region, SubArray};
 
-/// What the architectural path simulates.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ArchSim {
-    /// Run every LBP comparison through the ISA-level Algorithm 1.
-    pub lbp: bool,
-    /// Run the MLP through the in-memory AND/bitcount path.
-    pub mlp: bool,
-    /// Let the Ctrl early-exit Algorithm 1 once all lanes are decided.
-    pub early_exit: bool,
-}
+pub use crate::engine::{ArchSim, EngineConfig, ShardSlice};
+pub use crate::engine::FrameOutput as FrameReport;
 
-impl Default for ArchSim {
-    fn default() -> Self {
-        Self { lbp: true, mlp: false, early_exit: false }
-    }
-}
-
-/// A shard's slice of the cache: shard `index` of `count` owns a disjoint
-/// group of banks (the paper's parallelism unit), so concurrent shards
-/// model concurrent traffic over *disjoint* compute sub-arrays instead of
-/// all of them claiming the whole 2.5 MB slice.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct ShardSlice {
-    pub index: usize,
-    pub count: usize,
-}
-
-impl ShardSlice {
-    /// Banks owned by this shard out of `banks` total (remainder banks go
-    /// to the lowest-indexed shards).
-    pub fn banks(&self, banks: usize) -> usize {
-        banks / self.count + usize::from(self.index < banks % self.count)
-    }
-}
-
-/// Coordinator configuration.
-#[derive(Clone, Debug, Default)]
-pub struct CoordinatorConfig {
-    pub system: SystemConfig,
-    pub arch: ArchSim,
-    /// When set, the modeled accelerator time assumes only this shard's
-    /// bank slice is available (functional results are unaffected).
-    pub shard: Option<ShardSlice>,
-}
-
-/// Per-frame outcome.
-#[derive(Clone, Debug)]
-pub struct FrameReport {
-    pub seq: u64,
-    pub predicted: usize,
-    pub logits: Vec<f32>,
-    pub exec: ExecStats,
-    pub dpu: DpuStats,
-    pub energy: EnergyBreakdown,
-    /// Modeled accelerator latency for this frame [ns].
-    pub arch_time_ns: f64,
-    /// Architectural-vs-functional divergences (must be 0).
-    pub arch_mismatches: u64,
-}
+/// Coordinator configuration (alias of [`crate::engine::EngineConfig`]).
+pub type CoordinatorConfig = EngineConfig;
 
 /// Aggregate over a run.
 #[derive(Clone, Debug, Default)]
@@ -102,6 +41,10 @@ pub struct RunSummary {
     pub energy: EnergyBreakdown,
     pub total_arch_time_ns: f64,
     pub arch_mismatches: u64,
+    /// Frames whose logits diverged from the cross-check reference
+    /// backend (0 unless `engine.cross_check` is configured — and must
+    /// stay 0 then, too).
+    pub cross_check_mismatches: u64,
     /// Host wall-clock of the whole run [s].
     pub wall_seconds: f64,
 }
@@ -126,279 +69,39 @@ impl RunSummary {
 pub struct Coordinator {
     pub params: NetParams,
     pub config: CoordinatorConfig,
-    pub energy_model: EnergyModel,
 }
 
 impl Coordinator {
     pub fn new(params: NetParams, config: CoordinatorConfig) -> Result<Self> {
-        config.system.cache.validate()?;
-        if let Some(s) = config.shard {
-            if s.count == 0 || s.index >= s.count {
-                return Err(Error::Coordinator(format!(
-                    "shard slice {}/{} invalid", s.index, s.count
-                )));
-            }
-            if s.count > config.system.cache.banks {
-                return Err(Error::Coordinator(format!(
-                    "{} shards cannot split {} banks",
-                    s.count, config.system.cache.banks
-                )));
-            }
-        }
-        let mut em = EnergyModel::default();
-        em.params.freq_ghz = config.system.circuit.freq_ghz;
-        Ok(Self { params, config, energy_model: em })
+        config.validate()?;
+        Ok(Self { params, config })
+    }
+
+    /// Build a fresh engine over this coordinator's parameters and
+    /// configuration (one per worker/shard thread).
+    pub fn engine(&self) -> Result<Engine> {
+        Engine::builder()
+            .config(self.config.clone())
+            .params(self.params.clone())
+            .build()
     }
 
     /// Compute sub-arrays available to this coordinator instance — the
     /// whole cache, or just this shard's bank slice.
     pub fn subarray_budget(&self) -> usize {
-        let g = &self.config.system.cache;
-        match self.config.shard {
-            None => g.total_subarrays(),
-            Some(s) => s.banks(g.banks) * g.mats_per_bank * g.subarrays_per_mat,
-        }
+        self.config.subarray_budget()
     }
 
-    /// Lane order for one LBP layer: (y, x, kernel, sample≥apx).
-    fn gather_pairs(&self, x: &TensorU8, layer: &LbpLayer) -> Vec<(u8, u8)> {
-        let apx = self.params.config.apx_code;
-        let mut pairs = Vec::with_capacity(
-            x.h * x.w * layer.offsets.len() * (self.params.config.e - apx),
-        );
-        for y in 0..x.h {
-            for xx in 0..x.w {
-                for (k, pts) in layer.offsets.iter().enumerate() {
-                    let pivot = x.get(y, xx, layer.pivot_ch[k] as usize);
-                    for pt in pts.iter().skip(apx) {
-                        let v = x.get_padded(
-                            y as i64 + pt.dy as i64,
-                            xx as i64 + pt.dx as i64,
-                            pt.ch as usize,
-                        );
-                        pairs.push((v, pivot));
-                    }
-                }
-            }
-        }
-        pairs
-    }
-
-    /// One LBP layer on the architectural path; returns the joint output
-    /// and the number of bit mismatches against the functional path.
-    fn lbp_layer_arch(&self, x: &TensorU8, layer: &LbpLayer, scratch: &mut SubArray,
-                      map: &LbpSubarrayMap, exec: &mut ExecStats, dpu: &mut Dpu)
-                      -> Result<(TensorU8, u64, f64)> {
-        let cfg = &self.params.config;
-        let apx = cfg.apx_code;
-        let samples = cfg.e - apx;
-        let pairs = self.gather_pairs(x, layer);
-        let cols = scratch.cols();
-
-        // run Algorithm 1 per ≤cols-lane batch on the scratch sub-array
-        let mut bits = Vec::with_capacity(pairs.len());
-        let mut batches = 0u64;
-        for chunk in pairs.chunks(cols) {
-            map.load_lanes(scratch, 0, chunk)?;
-            exec.row_writes += 2 * map.bits as u64; // transposed lane load
-            exec.cycles += 2 * map.bits as u64;
-            let mut ex = Executor::new(scratch);
-            let out = parallel_compare(&mut ex, map, 0, chunk.len(),
-                                       cfg.apx_pixel,
-                                       self.config.arch.early_exit)?;
-            exec.merge(&ex.stats);
-            bits.extend(out.bits);
-            batches += 1;
-        }
-
-        // assemble codes in the same lane order and cross-check
-        let k_n = layer.offsets.len();
-        let mut out = TensorU8::zeros(x.h, x.w, x.c + k_n);
-        let mut mismatches = 0u64;
-        let mut lane = 0usize;
-        for y in 0..x.h {
-            for xx in 0..x.w {
-                for ch in 0..x.c {
-                    out.set(y, xx, ch, x.get(y, xx, ch));
-                }
-                for k in 0..k_n {
-                    let mut code = 0u32;
-                    for n in 0..samples {
-                        if bits[lane + n] {
-                            code |= 1 << (n + apx);
-                        }
-                    }
-                    lane += samples;
-                    let want = model::lbp_code(x, layer, k, y, xx, apx);
-                    if code != want {
-                        mismatches += 1;
-                    }
-                    out.set(y, xx, x.c + k, dpu.shifted_relu_u8(code, cfg.e as u32));
-                }
-            }
-        }
-
-        // modeled time: batches spread across this shard's sub-arrays
-        let subarrays = self.subarray_budget() as f64;
-        let cycles_per_batch = (2.0 * map.bits as f64)
-            + 4.0 + 7.0 * (map.bits - cfg.apx_pixel) as f64 + 3.0;
-        let time_ns = (batches as f64 / subarrays).ceil() * cycles_per_batch
-            * self.energy_model.cycle_ns();
-        Ok((out, mismatches, time_ns))
-    }
-
-    /// In-memory MLP layer (architectural); returns raw integer accums and
-    /// mismatch count vs the functional matmul.
-    fn mlp_layer_arch(&self, feats: &[u8], mlp: &crate::params::MlpLayer,
-                      scratch: &mut SubArray, mmap: &MlpSubarrayMap,
-                      exec: &mut ExecStats, dpu: &mut Dpu)
-                      -> Result<(Vec<i64>, u64, f64)> {
-        let cols = scratch.cols();
-        let half = 1u8 << (self.params.config.w_bits - 1);
-        let chunks: Vec<&[u8]> = feats.chunks(cols).collect();
-        let mut accs = vec![0i64; mlp.o];
-        let mut and_batches = 0u64;
-
-        for (ci, chunk) in chunks.iter().enumerate() {
-            let mut ex = Executor::new(scratch);
-            mmap.load_vector(&mut ex, Region::Input, 0, chunk)?;
-            let rowsum: i64 = chunk.iter().map(|&v| v as i64).sum();
-            for o in 0..mlp.o {
-                // weight column chunk, offset-stored unsigned
-                let w_col: Vec<u8> = (0..chunk.len())
-                    .map(|di| (mlp.weight(ci * cols + di, o) as i16 + half as i16) as u8)
-                    .collect();
-                mmap.load_vector(&mut ex, Region::Weight, 0, &w_col)?;
-                accs[o] += mmap.dot_signed(&mut ex, dpu, 0, 0, chunk.len(),
-                                           rowsum)?;
-                and_batches += (mmap.act_bits * mmap.w_bits) as u64;
-            }
-            exec.merge(&ex.stats);
-        }
-
-        // cross-check against the functional integer matmul
-        let want = model::int_matmul(feats, mlp);
-        let mismatches = accs.iter().zip(&want).filter(|(a, w)| a != w).count() as u64;
-        let subarrays = self.subarray_budget() as f64;
-        let time_ns = (and_batches as f64 * 2.0 / subarrays).ceil()
-            * self.energy_model.cycle_ns();
-        Ok((accs, mismatches, time_ns))
-    }
-
-    /// Process one digitized frame.
-    pub fn process_frame(&self, frame: &Frame, scratch: &mut SubArray)
-                         -> Result<FrameReport> {
-        let cfg = &self.params.config;
-        if frame.rows != cfg.height || frame.cols != cfg.width
-            || frame.channels != cfg.in_channels
-        {
-            return Err(Error::Coordinator(format!(
-                "frame {}x{}x{} vs network {}x{}x{}",
-                frame.rows, frame.cols, frame.channels,
-                cfg.height, cfg.width, cfg.in_channels
-            )));
-        }
-        let map = LbpSubarrayMap::new(self.config.system.cache.region, 8)?;
-        let mut exec = ExecStats::default();
-        let mut dpu = Dpu::default();
-        let mut mismatches = 0u64;
-        let mut arch_time_ns = 0.0;
-
-        // the ADC already applied the pixel-LSB skip; mask again defensively
-        let mask = 0xFFu8 ^ ((1u8 << cfg.apx_pixel).wrapping_sub(1));
-        let data: Vec<u8> = frame.pixels.iter().map(|&p| p & mask).collect();
-        let mut x = TensorU8 { h: cfg.height, w: cfg.width, c: cfg.in_channels,
-                               data };
-
-        // --- LBP layers -----------------------------------------------------
-        for layer in &self.params.lbp_layers {
-            if self.config.arch.lbp {
-                let (nx, mm, t) =
-                    self.lbp_layer_arch(&x, layer, scratch, &map, &mut exec,
-                                        &mut dpu)?;
-                mismatches += mm;
-                arch_time_ns += t;
-                x = nx;
-            } else {
-                x = model::lbp_layer_forward(&x, layer, cfg.e, cfg.apx_code,
-                                             &mut dpu);
-            }
-        }
-
-        // --- pooling + quantization (DPU) ------------------------------------
-        let s = cfg.pool;
-        let vmax = (255 * s * s) as u32;
-        let (ph, pw) = (x.h / s, x.w / s);
-        let mut feats = Vec::with_capacity(ph * pw * x.c);
-        for py in 0..ph {
-            for px in 0..pw {
-                for ch in 0..x.c {
-                    let mut sum = 0u32;
-                    for dy in 0..s {
-                        for dx in 0..s {
-                            sum += x.get(py * s + dy, px * s + dx, ch) as u32;
-                        }
-                    }
-                    feats.push(dpu.quantize_pooled(sum, vmax, cfg.act_bits as u32)?);
-                }
-            }
-        }
-
-        // --- MLP --------------------------------------------------------------
-        let logits = if self.config.arch.mlp {
-            let mmap = MlpSubarrayMap::new(map, cfg.act_bits, cfg.w_bits)?;
-            let (acc1, mm1, t1) = self.mlp_layer_arch(&feats, &self.params.mlp1,
-                                                      scratch, &mmap, &mut exec,
-                                                      &mut dpu)?;
-            mismatches += mm1;
-            arch_time_ns += t1;
-            let hidden: Vec<u8> = acc1.iter().enumerate()
-                .map(|(o, &h)| dpu.activation(h, self.params.mlp1.scale[o],
-                                              self.params.mlp1.bias[o],
-                                              cfg.act_bits as u32))
-                .collect();
-            let (acc2, mm2, t2) = self.mlp_layer_arch(&hidden, &self.params.mlp2,
-                                                      scratch, &mmap, &mut exec,
-                                                      &mut dpu)?;
-            mismatches += mm2;
-            arch_time_ns += t2;
-            acc2.iter().enumerate()
-                .map(|(o, &h)| dpu.affine(h, self.params.mlp2.scale[o],
-                                          self.params.mlp2.bias[o]))
-                .collect()
-        } else {
-            model::mlp_forward(&self.params, &feats, &mut dpu)?
-        };
-
-        // --- energy ------------------------------------------------------------
-        let mut energy = self.energy_model.exec_energy(&exec);
-        energy.add(&self.energy_model.dpu_energy(&dpu.stats));
-        let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
-        energy.add(&self.energy_model.sensor_energy(pixels,
-                                                    (8 - cfg.apx_pixel) as u64));
-
-        Ok(FrameReport {
-            seq: frame.seq,
-            predicted: model::argmax(&logits),
-            logits,
-            exec,
-            dpu: dpu.stats,
-            energy,
-            arch_time_ns,
-            arch_mismatches: mismatches,
-        })
-    }
-
-    /// A reusable per-shard processing handle bound to this coordinator.
-    pub fn frame_handle(&self) -> FrameHandle<'_> {
-        let g = &self.config.system.cache;
-        FrameHandle { coord: self, scratch: SubArray::new(g.rows, g.cols) }
+    /// A reusable per-shard processing handle bound to this coordinator's
+    /// configuration (owns its engine, and through it the scratch
+    /// sub-array, so the coordinator itself stays shareable).
+    pub fn frame_handle(&self) -> Result<FrameHandle> {
+        Ok(FrameHandle { engine: self.engine()? })
     }
 
     /// Run the pipeline over a frame source with worker-thread fan-out.
     pub fn run(&self, source: &mut dyn FrameSource, limit: usize)
                -> Result<(Vec<FrameReport>, RunSummary)> {
-        let t0 = std::time::Instant::now();
         // rolling shutter digitizes frames sequentially
         let mut frames = Vec::new();
         while frames.len() < limit {
@@ -407,6 +110,14 @@ impl Coordinator {
                 None => break,
             }
         }
+        self.run_frames(&frames)
+    }
+
+    /// Run the pipeline over already-digitized frames with worker-thread
+    /// fan-out.
+    pub fn run_frames(&self, frames: &[Frame])
+                      -> Result<(Vec<FrameReport>, RunSummary)> {
+        let t0 = std::time::Instant::now();
         let workers = if self.config.system.workers > 0 {
             self.config.system.workers
         } else {
@@ -427,7 +138,13 @@ impl Coordinator {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     scope.spawn(|| {
-                        let mut handle = self.frame_handle();
+                        let mut engine = match self.engine() {
+                            Ok(e) => e,
+                            Err(e) => {
+                                abort.store(true, Ordering::Relaxed);
+                                return (Vec::new(), Some(e));
+                            }
+                        };
                         let mut local: Vec<FrameReport> = Vec::new();
                         loop {
                             if abort.load(Ordering::Relaxed) {
@@ -437,10 +154,12 @@ impl Coordinator {
                             if i >= frames.len() {
                                 break;
                             }
-                            match handle.process(&frames[i]) {
+                            match engine.infer_frame(&frames[i]) {
                                 Ok(report) => {
-                                    mismatches.fetch_add(report.arch_mismatches,
-                                                         Ordering::Relaxed);
+                                    mismatches.fetch_add(
+                                        report.telemetry.arch_mismatches,
+                                        Ordering::Relaxed,
+                                    );
                                     local.push(report);
                                 }
                                 Err(e) => {
@@ -483,40 +202,46 @@ impl Coordinator {
             ..Default::default()
         };
         for r in &reports {
-            summary.exec.merge(&r.exec);
-            summary.dpu.merge(&r.dpu);
-            summary.energy.add(&r.energy);
-            summary.total_arch_time_ns += r.arch_time_ns;
+            summary.exec.merge(&r.telemetry.exec);
+            summary.dpu.merge(&r.telemetry.dpu);
+            summary.energy.add(&r.telemetry.energy);
+            summary.total_arch_time_ns += r.telemetry.arch_time_ns;
+            summary.cross_check_mismatches +=
+                r.telemetry.cross_check_mismatches;
         }
         debug_assert_eq!(
             summary.arch_mismatches,
-            reports.iter().map(|r| r.arch_mismatches).sum::<u64>(),
+            reports
+                .iter()
+                .map(|r| r.telemetry.arch_mismatches)
+                .sum::<u64>(),
         );
         Ok((reports, summary))
     }
 }
 
-/// A reusable frame-processing handle: owns the scratch compute sub-array
-/// so the coordinator itself stays shareable (`&self`) across workers.
-/// One handle per shard/worker thread; see [`crate::serve::ShardPool`].
-pub struct FrameHandle<'c> {
-    coord: &'c Coordinator,
-    scratch: SubArray,
+/// A reusable frame-processing handle: owns an engine (and through it the
+/// scratch compute sub-array) so the coordinator itself stays shareable
+/// (`&self`) across workers.  One handle per shard/worker thread; see
+/// [`crate::serve::ShardPool`].
+pub struct FrameHandle {
+    engine: Engine,
 }
 
-impl FrameHandle<'_> {
+impl FrameHandle {
     pub fn process(&mut self, frame: &Frame) -> Result<FrameReport> {
-        self.coord.process_frame(frame, &mut self.scratch)
+        self.engine.infer_frame(frame)
     }
 
-    pub fn coordinator(&self) -> &Coordinator {
-        self.coord
+    pub fn engine(&self) -> &Engine {
+        &self.engine
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::BackendKind;
     use crate::params::synth::synth_params;
     use crate::rng::Xoshiro256;
     use crate::sensor::{ReplaySensor, SensorConfig};
@@ -524,7 +249,7 @@ mod tests {
     fn setup(arch: ArchSim) -> (Coordinator, ReplaySensor) {
         let (_, params) = synth_params(5);
         let cfg = params.config;
-        let mut sys = SystemConfig::default();
+        let mut sys = crate::config::SystemConfig::default();
         sys.workers = 2;
         let coord = Coordinator::new(
             params,
@@ -580,6 +305,35 @@ mod tests {
     }
 
     #[test]
+    fn functional_backend_selection_matches_architectural_logits() {
+        // BackendKind::Functional through the coordinator: same logits,
+        // no modeled hardware statistics
+        let (mut coord, mut sensor) = setup(ArchSim::default());
+        coord.config.system.engine.backend = BackendKind::Functional;
+        let (reports, summary) = coord.run(&mut sensor, 2).unwrap();
+        assert_eq!(summary.exec.compute_ops, 0);
+        assert_eq!(summary.total_arch_time_ns, 0.0);
+        let (coord_a, mut sensor_a) = setup(ArchSim::default());
+        let (reports_a, _) = coord_a.run(&mut sensor_a, 2).unwrap();
+        for (f, a) in reports.iter().zip(&reports_a) {
+            assert_eq!(f.logits, a.logits);
+        }
+    }
+
+    #[test]
+    fn cross_check_reports_zero_mismatches() {
+        let (mut coord, mut sensor) = setup(ArchSim::default());
+        coord.config.system.engine.cross_check =
+            Some(BackendKind::Functional);
+        let (reports, summary) = coord.run(&mut sensor, 2).unwrap();
+        assert_eq!(summary.cross_check_mismatches, 0);
+        for r in &reports {
+            assert_eq!(r.telemetry.cross_check_frames, 1);
+            assert_eq!(r.telemetry.cross_check_mismatches, 0);
+        }
+    }
+
+    #[test]
     fn early_exit_preserves_results_and_saves_cycles() {
         let (coord_e, mut sensor_e) = setup(ArchSim { lbp: true, mlp: false,
                                                       early_exit: true });
@@ -610,7 +364,7 @@ mod tests {
     #[test]
     fn sharding_scales_modeled_time_not_results() {
         let (_, params) = synth_params(5);
-        let mut sys = SystemConfig::default();
+        let mut sys = crate::config::SystemConfig::default();
         sys.workers = 1;
         let arch = ArchSim { lbp: true, mlp: false, early_exit: false };
         let full = Coordinator::new(
@@ -634,16 +388,16 @@ mod tests {
             let (_, mut sensor) = setup(arch);
             sensor.next_frame().unwrap()
         };
-        let mut hf = full.frame_handle();
-        let mut hq = quarter.frame_handle();
+        let mut hf = full.frame_handle().unwrap();
+        let mut hq = quarter.frame_handle().unwrap();
         let rf = hf.process(&frame).unwrap();
         let rq = hq.process(&frame).unwrap();
         // functional results are shard-independent ...
         assert_eq!(rf.logits, rq.logits);
-        assert_eq!(rf.arch_mismatches, 0);
-        assert_eq!(rq.arch_mismatches, 0);
+        assert_eq!(rf.telemetry.arch_mismatches, 0);
+        assert_eq!(rq.telemetry.arch_mismatches, 0);
         // ... only the modeled accelerator time sees the smaller slice
-        assert!(rq.arch_time_ns >= rf.arch_time_ns);
+        assert!(rq.telemetry.arch_time_ns >= rf.telemetry.arch_time_ns);
     }
 
     #[test]
@@ -666,9 +420,8 @@ mod tests {
         let (coord, _) = setup(ArchSim::default());
         let bad = Frame { rows: 5, cols: 5, channels: 1, pixels: vec![0; 25],
                           seq: 0 };
-        let g = &coord.config.system.cache;
-        let mut scratch = SubArray::new(g.rows, g.cols);
-        assert!(coord.process_frame(&bad, &mut scratch).is_err());
+        let mut handle = coord.frame_handle().unwrap();
+        assert!(handle.process(&bad).is_err());
     }
 
     #[test]
@@ -676,7 +429,8 @@ mod tests {
         let (coord, mut sensor) = setup(ArchSim { lbp: true, mlp: false,
                                                   early_exit: false });
         let (reports, summary) = coord.run(&mut sensor, 4).unwrap();
-        let sum_pj: f64 = reports.iter().map(|r| r.energy.total_pj()).sum();
+        let sum_pj: f64 =
+            reports.iter().map(|r| r.telemetry.energy.total_pj()).sum();
         assert!((summary.energy.total_pj() - sum_pj).abs() < 1e-6);
         assert!(summary.energy_per_frame_uj() > 0.0);
         assert!(summary.frames_per_second_modeled() > 0.0);

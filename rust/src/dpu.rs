@@ -46,10 +46,17 @@ pub struct Dpu {
 impl Dpu {
     /// Shifted ReLU + approximate mapping of an LBP code to an 8-bit ofmap
     /// pixel: `min(255, 2·max(0, code − 2^{e−1}))` (model.shifted_relu_u8).
+    ///
+    /// Degenerate widths saturate instead of faulting: `e == 0` (no
+    /// samples) uses a zero threshold — `1 << (e-1)` would underflow —
+    /// and `e > 32` pins the threshold at `u32::MAX`.
     pub fn shifted_relu_u8(&mut self, code: u32, e: u32) -> u8 {
         self.stats.shifted_relus += 1;
-        let half = 1u32 << (e - 1);
-        (2 * code.saturating_sub(half)).min(255) as u8
+        let half = match e {
+            0 => 0,
+            _ => 1u32.checked_shl(e - 1).unwrap_or(u32::MAX),
+        };
+        2u32.saturating_mul(code.saturating_sub(half)).min(255) as u8
     }
 
     /// Quantize an integer pooled sum to `act_bits` with round-half-up:
@@ -118,6 +125,20 @@ mod tests {
         assert_eq!(d.shifted_relu_u8(255, 8), 254);
         assert_eq!(d.shifted_relu_u8(255, 4), 255); // saturates for small e
         assert_eq!(d.stats.shifted_relus, 5);
+    }
+
+    #[test]
+    fn shifted_relu_degenerate_widths_saturate() {
+        // regression: e == 0 used to underflow `1 << (e - 1)` and panic
+        // in debug builds
+        let mut d = Dpu::default();
+        assert_eq!(d.shifted_relu_u8(0, 0), 0);
+        assert_eq!(d.shifted_relu_u8(5, 0), 10); // zero threshold: 2*code
+        assert_eq!(d.shifted_relu_u8(200, 0), 255);
+        // e > 32 pins the threshold at u32::MAX -> everything clips to 0
+        assert_eq!(d.shifted_relu_u8(u32::MAX, 40), 0);
+        // huge codes cannot overflow the doubling
+        assert_eq!(d.shifted_relu_u8(u32::MAX, 1), 255);
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! The architectural backend: the near-sensor in-SRAM simulation.
+//!
+//! Each frame flows through two redundant paths:
+//!
+//! * the **functional path** (`crate::model`) — fast bit-exact integer
+//!   inference used for the logits, and
+//! * the **architectural path** — the same LBP comparisons executed as
+//!   Algorithm 1 over simulated compute sub-arrays
+//!   (`crate::lbp::parallel_compare`) and, optionally, the MLP as
+//!   in-memory AND/bitcount (`crate::mlp`), producing cycle/energy
+//!   statistics *and* a per-frame equivalence check (any divergence is
+//!   counted in `Telemetry::arch_mismatches` — it must be 0).
+//!
+//! Which pieces are simulated is controlled by `EngineConfig::arch`
+//! ([`super::ArchSim`]); the modeled accelerator time assumes the
+//! configured shard's sub-array budget (`EngineConfig::subarray_budget`).
+
+use crate::dpu::Dpu;
+use crate::energy::EnergyModel;
+use crate::error::Result;
+use crate::isa::{ExecStats, Executor};
+use crate::lbp::parallel_compare;
+use crate::mapping::LbpSubarrayMap;
+use crate::mlp::MlpSubarrayMap;
+use crate::model::{self, TensorU8};
+use crate::params::{LbpLayer, NetParams};
+use crate::sensor::Frame;
+use crate::sram::{Region, SubArray};
+
+use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
+            FrameOutput, InferenceBackend, Telemetry};
+
+/// The in-SRAM simulation backend.  Owns its scratch compute sub-array,
+/// so one backend instance serves one worker/shard thread.
+pub struct ArchitecturalBackend {
+    params: NetParams,
+    config: EngineConfig,
+    energy_model: EnergyModel,
+    scratch: SubArray,
+}
+
+impl ArchitecturalBackend {
+    pub fn new(params: NetParams, config: EngineConfig) -> Result<Self> {
+        config.validate()?;
+        let mut energy_model = EnergyModel::default();
+        energy_model.params.freq_ghz = config.system.circuit.freq_ghz;
+        let g = &config.system.cache;
+        let scratch = SubArray::new(g.rows, g.cols);
+        Ok(Self { params, config, energy_model, scratch })
+    }
+
+    /// Compute sub-arrays available to this backend instance — the whole
+    /// cache, or just the configured shard's bank slice.
+    pub fn subarray_budget(&self) -> usize {
+        self.config.subarray_budget()
+    }
+
+    /// Run one frame (borrow-splitting wrapper around the core logic).
+    pub fn infer_frame(&mut self, frame: &Frame) -> Result<FrameOutput> {
+        let core = ArchCore {
+            params: &self.params,
+            config: &self.config,
+            energy_model: &self.energy_model,
+        };
+        core.process(frame, &mut self.scratch)
+    }
+}
+
+impl InferenceBackend for ArchitecturalBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Architectural
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            available: true,
+            produces_features: true,
+            modeled_telemetry: true,
+            detail: "in-SRAM architectural simulation (cycles/energy modeled)"
+                .into(),
+        }
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
+        let mut out = Vec::with_capacity(frames.len());
+        for frame in frames {
+            out.push(self.infer_frame(frame)?);
+        }
+        Ok(BackendOutput { frames: out })
+    }
+}
+
+/// Shared-state view used while the scratch sub-array is mutably borrowed.
+struct ArchCore<'a> {
+    params: &'a NetParams,
+    config: &'a EngineConfig,
+    energy_model: &'a EnergyModel,
+}
+
+impl ArchCore<'_> {
+    fn subarray_budget(&self) -> usize {
+        self.config.subarray_budget()
+    }
+
+    /// Lane order for one LBP layer: (y, x, kernel, sample≥apx).
+    fn gather_pairs(&self, x: &TensorU8, layer: &LbpLayer) -> Vec<(u8, u8)> {
+        let apx = self.params.config.apx_code;
+        let mut pairs = Vec::with_capacity(
+            x.h * x.w * layer.offsets.len() * (self.params.config.e - apx),
+        );
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                for (k, pts) in layer.offsets.iter().enumerate() {
+                    let pivot = x.get(y, xx, layer.pivot_ch[k] as usize);
+                    for pt in pts.iter().skip(apx) {
+                        let v = x.get_padded(
+                            y as i64 + pt.dy as i64,
+                            xx as i64 + pt.dx as i64,
+                            pt.ch as usize,
+                        );
+                        pairs.push((v, pivot));
+                    }
+                }
+            }
+        }
+        pairs
+    }
+
+    /// One LBP layer on the architectural path; returns the joint output
+    /// and the number of bit mismatches against the functional path.
+    fn lbp_layer_arch(&self, x: &TensorU8, layer: &LbpLayer,
+                      scratch: &mut SubArray, map: &LbpSubarrayMap,
+                      exec: &mut ExecStats, dpu: &mut Dpu)
+                      -> Result<(TensorU8, u64, f64)> {
+        let cfg = &self.params.config;
+        let apx = cfg.apx_code;
+        let samples = cfg.e - apx;
+        let pairs = self.gather_pairs(x, layer);
+        let cols = scratch.cols();
+
+        // run Algorithm 1 per ≤cols-lane batch on the scratch sub-array
+        let mut bits = Vec::with_capacity(pairs.len());
+        let mut batches = 0u64;
+        for chunk in pairs.chunks(cols) {
+            map.load_lanes(scratch, 0, chunk)?;
+            exec.row_writes += 2 * map.bits as u64; // transposed lane load
+            exec.cycles += 2 * map.bits as u64;
+            let mut ex = Executor::new(scratch);
+            let out = parallel_compare(&mut ex, map, 0, chunk.len(),
+                                       cfg.apx_pixel,
+                                       self.config.arch.early_exit)?;
+            exec.merge(&ex.stats);
+            bits.extend(out.bits);
+            batches += 1;
+        }
+
+        // assemble codes in the same lane order and cross-check
+        let k_n = layer.offsets.len();
+        let mut out = TensorU8::zeros(x.h, x.w, x.c + k_n);
+        let mut mismatches = 0u64;
+        let mut lane = 0usize;
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                for ch in 0..x.c {
+                    out.set(y, xx, ch, x.get(y, xx, ch));
+                }
+                for k in 0..k_n {
+                    let mut code = 0u32;
+                    for n in 0..samples {
+                        if bits[lane + n] {
+                            code |= 1 << (n + apx);
+                        }
+                    }
+                    lane += samples;
+                    let want = model::lbp_code(x, layer, k, y, xx, apx);
+                    if code != want {
+                        mismatches += 1;
+                    }
+                    out.set(y, xx, x.c + k,
+                            dpu.shifted_relu_u8(code, cfg.e as u32));
+                }
+            }
+        }
+
+        // modeled time: batches spread across this shard's sub-arrays
+        let subarrays = self.subarray_budget() as f64;
+        let cycles_per_batch = (2.0 * map.bits as f64)
+            + 4.0 + 7.0 * (map.bits - cfg.apx_pixel) as f64 + 3.0;
+        let time_ns = (batches as f64 / subarrays).ceil() * cycles_per_batch
+            * self.energy_model.cycle_ns();
+        Ok((out, mismatches, time_ns))
+    }
+
+    /// In-memory MLP layer (architectural); returns raw integer accums and
+    /// mismatch count vs the functional matmul.
+    fn mlp_layer_arch(&self, feats: &[u8], mlp: &crate::params::MlpLayer,
+                      scratch: &mut SubArray, mmap: &MlpSubarrayMap,
+                      exec: &mut ExecStats, dpu: &mut Dpu)
+                      -> Result<(Vec<i64>, u64, f64)> {
+        let cols = scratch.cols();
+        let half = 1u8 << (self.params.config.w_bits - 1);
+        let chunks: Vec<&[u8]> = feats.chunks(cols).collect();
+        let mut accs = vec![0i64; mlp.o];
+        let mut and_batches = 0u64;
+
+        for (ci, chunk) in chunks.iter().enumerate() {
+            let mut ex = Executor::new(scratch);
+            mmap.load_vector(&mut ex, Region::Input, 0, chunk)?;
+            let rowsum: i64 = chunk.iter().map(|&v| v as i64).sum();
+            for o in 0..mlp.o {
+                // weight column chunk, offset-stored unsigned
+                let w_col: Vec<u8> = (0..chunk.len())
+                    .map(|di| {
+                        (mlp.weight(ci * cols + di, o) as i16 + half as i16)
+                            as u8
+                    })
+                    .collect();
+                mmap.load_vector(&mut ex, Region::Weight, 0, &w_col)?;
+                accs[o] += mmap.dot_signed(&mut ex, dpu, 0, 0, chunk.len(),
+                                           rowsum)?;
+                and_batches += (mmap.act_bits * mmap.w_bits) as u64;
+            }
+            exec.merge(&ex.stats);
+        }
+
+        // cross-check against the functional integer matmul
+        let want = model::int_matmul(feats, mlp);
+        let mismatches =
+            accs.iter().zip(&want).filter(|(a, w)| a != w).count() as u64;
+        let subarrays = self.subarray_budget() as f64;
+        let time_ns = (and_batches as f64 * 2.0 / subarrays).ceil()
+            * self.energy_model.cycle_ns();
+        Ok((accs, mismatches, time_ns))
+    }
+
+    /// Process one digitized frame.
+    fn process(&self, frame: &Frame, scratch: &mut SubArray)
+               -> Result<FrameOutput> {
+        let cfg = &self.params.config;
+        let mut x = super::digitize(frame, cfg)?;
+        let map = LbpSubarrayMap::new(self.config.system.cache.region, 8)?;
+        let mut exec = ExecStats::default();
+        let mut dpu = Dpu::default();
+        let mut mismatches = 0u64;
+        let mut arch_time_ns = 0.0;
+
+        // --- LBP layers -----------------------------------------------------
+        for layer in &self.params.lbp_layers {
+            if self.config.arch.lbp {
+                let (nx, mm, t) =
+                    self.lbp_layer_arch(&x, layer, scratch, &map, &mut exec,
+                                        &mut dpu)?;
+                mismatches += mm;
+                arch_time_ns += t;
+                x = nx;
+            } else {
+                x = model::lbp_layer_forward(&x, layer, cfg.e, cfg.apx_code,
+                                             &mut dpu);
+            }
+        }
+
+        // --- pooling + quantization (DPU) ------------------------------------
+        let s = cfg.pool;
+        let vmax = (255 * s * s) as u32;
+        let (ph, pw) = (x.h / s, x.w / s);
+        let mut feats = Vec::with_capacity(ph * pw * x.c);
+        for py in 0..ph {
+            for px in 0..pw {
+                for ch in 0..x.c {
+                    let mut sum = 0u32;
+                    for dy in 0..s {
+                        for dx in 0..s {
+                            sum += x.get(py * s + dy, px * s + dx, ch) as u32;
+                        }
+                    }
+                    feats.push(dpu.quantize_pooled(sum, vmax,
+                                                   cfg.act_bits as u32)?);
+                }
+            }
+        }
+
+        // --- MLP --------------------------------------------------------------
+        let logits = if self.config.arch.mlp {
+            let mmap = MlpSubarrayMap::new(map, cfg.act_bits, cfg.w_bits)?;
+            let (acc1, mm1, t1) =
+                self.mlp_layer_arch(&feats, &self.params.mlp1, scratch, &mmap,
+                                    &mut exec, &mut dpu)?;
+            mismatches += mm1;
+            arch_time_ns += t1;
+            let hidden: Vec<u8> = acc1.iter().enumerate()
+                .map(|(o, &h)| dpu.activation(h, self.params.mlp1.scale[o],
+                                              self.params.mlp1.bias[o],
+                                              cfg.act_bits as u32))
+                .collect();
+            let (acc2, mm2, t2) =
+                self.mlp_layer_arch(&hidden, &self.params.mlp2, scratch, &mmap,
+                                    &mut exec, &mut dpu)?;
+            mismatches += mm2;
+            arch_time_ns += t2;
+            acc2.iter().enumerate()
+                .map(|(o, &h)| dpu.affine(h, self.params.mlp2.scale[o],
+                                          self.params.mlp2.bias[o]))
+                .collect()
+        } else {
+            model::mlp_forward(self.params, &feats, &mut dpu)?
+        };
+
+        // --- energy ------------------------------------------------------------
+        let mut energy = self.energy_model.exec_energy(&exec);
+        energy.add(&self.energy_model.dpu_energy(&dpu.stats));
+        let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
+        energy.add(&self.energy_model.sensor_energy(
+            pixels,
+            (8 - cfg.apx_pixel) as u64,
+        ));
+
+        Ok(FrameOutput {
+            seq: frame.seq,
+            predicted: model::argmax(&logits),
+            logits,
+            features: Some(feats),
+            telemetry: Telemetry {
+                exec,
+                dpu: dpu.stats,
+                energy,
+                arch_time_ns,
+                arch_mismatches: mismatches,
+                ..Default::default()
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ArchSim, ShardSlice};
+    use crate::params::synth::synth_params;
+    use crate::testing::synth_frames;
+
+    fn backend(arch: ArchSim, shard: Option<ShardSlice>)
+               -> ArchitecturalBackend {
+        let (_, params) = synth_params(5);
+        let config = EngineConfig { arch, shard, ..Default::default() };
+        ArchitecturalBackend::new(params, config).unwrap()
+    }
+
+    #[test]
+    fn arch_lbp_matches_functional_bits() {
+        let (_, params) = synth_params(5);
+        let frames = synth_frames(&params, 2, 31).unwrap();
+        let mut b = backend(
+            ArchSim { lbp: true, mlp: true, early_exit: false }, None);
+        let out = b.infer_batch(&frames).unwrap();
+        let t = out.telemetry();
+        assert_eq!(t.arch_mismatches, 0, "arch != functional");
+        assert!(t.exec.compute_ops > 0);
+        assert!(t.energy.total_pj() > 0.0);
+        assert!(t.arch_time_ns > 0.0);
+    }
+
+    #[test]
+    fn shard_slice_stretches_modeled_time_only() {
+        let (_, params) = synth_params(5);
+        let frames = synth_frames(&params, 1, 31).unwrap();
+        let arch = ArchSim { lbp: true, mlp: false, early_exit: false };
+        let mut full = backend(arch, None);
+        let mut quarter = backend(arch, Some(ShardSlice { index: 0, count: 4 }));
+        assert_eq!(full.subarray_budget(), 320);
+        assert_eq!(quarter.subarray_budget(), 80);
+        let rf = full.infer_frame(&frames[0]).unwrap();
+        let rq = quarter.infer_frame(&frames[0]).unwrap();
+        assert_eq!(rf.logits, rq.logits);
+        assert_eq!(rf.telemetry.arch_mismatches, 0);
+        assert_eq!(rq.telemetry.arch_mismatches, 0);
+        assert!(rq.telemetry.arch_time_ns >= rf.telemetry.arch_time_ns);
+    }
+
+    #[test]
+    fn rejects_wrong_frame_shape() {
+        let mut b = backend(ArchSim::default(), None);
+        let bad = Frame { rows: 5, cols: 5, channels: 1, pixels: vec![0; 25],
+                          seq: 0 };
+        assert!(b.infer_frame(&bad).is_err());
+    }
+}

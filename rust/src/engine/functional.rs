@@ -1,0 +1,125 @@
+//! The functional backend: plain-Rust bit-exact integer inference
+//! (`crate::model`), the fast path with no modeled hardware statistics.
+
+use crate::dpu::Dpu;
+use crate::energy::EnergyModel;
+use crate::error::Result;
+use crate::model;
+use crate::params::NetParams;
+use crate::sensor::Frame;
+
+use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
+            FrameOutput, InferenceBackend, Telemetry};
+
+/// Wraps the functional model: LBP layers, pooling/quantization, and the
+/// integer MLP, exactly as `python/compile/model.py` specifies them.
+/// DPU activity and sensor readout energy are accounted; there is no
+/// cycle model (`Telemetry::arch_time_ns` stays 0).
+pub struct FunctionalBackend {
+    params: NetParams,
+    energy_model: EnergyModel,
+}
+
+impl FunctionalBackend {
+    pub fn new(params: NetParams, config: &EngineConfig) -> Result<Self> {
+        config.validate()?;
+        let mut energy_model = EnergyModel::default();
+        energy_model.params.freq_ghz = config.system.circuit.freq_ghz;
+        Ok(Self { params, energy_model })
+    }
+
+    fn infer_frame(&self, frame: &Frame) -> Result<FrameOutput> {
+        let cfg = self.params.config;
+        let image = super::digitize(frame, &cfg)?;
+
+        let mut dpu = Dpu::default();
+        let feats = model::forward_lbp(&self.params, &image, &mut dpu)?;
+        let logits = model::mlp_forward(&self.params, &feats, &mut dpu)?;
+
+        let mut energy = self.energy_model.dpu_energy(&dpu.stats);
+        let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
+        energy.add(&self.energy_model.sensor_energy(
+            pixels,
+            (8 - cfg.apx_pixel) as u64,
+        ));
+
+        Ok(FrameOutput {
+            seq: frame.seq,
+            predicted: model::argmax(&logits),
+            logits,
+            features: Some(feats),
+            telemetry: Telemetry { dpu: dpu.stats, energy,
+                                   ..Default::default() },
+        })
+    }
+}
+
+impl InferenceBackend for FunctionalBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Functional
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            available: true,
+            produces_features: true,
+            modeled_telemetry: false,
+            detail: "bit-exact integer functional model (no cycle model)"
+                .into(),
+        }
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
+        let mut out = Vec::with_capacity(frames.len());
+        for frame in frames {
+            out.push(self.infer_frame(frame)?);
+        }
+        Ok(BackendOutput { frames: out })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dpu::Dpu;
+    use crate::model::TensorU8;
+    use crate::params::synth::synth_params;
+    use crate::testing::synth_frames;
+
+    #[test]
+    fn matches_direct_model_apply_on_digitized_frames() {
+        let (_, params) = synth_params(3);
+        let frames = synth_frames(&params, 2, 9).unwrap();
+        let mut backend =
+            FunctionalBackend::new(params.clone(), &EngineConfig::default())
+                .unwrap();
+        let out = backend.infer_batch(&frames).unwrap();
+        for (frame, got) in frames.iter().zip(&out.frames) {
+            // direct functional reference on the same digitized pixels
+            let cfg = params.config;
+            let image = TensorU8 { h: cfg.height, w: cfg.width,
+                                   c: cfg.in_channels,
+                                   data: frame.pixels.clone() };
+            let mut dpu = Dpu::default();
+            let feats =
+                model::forward_lbp(&params, &image, &mut dpu).unwrap();
+            let logits =
+                model::mlp_forward(&params, &feats, &mut dpu).unwrap();
+            assert_eq!(got.logits, logits);
+            assert_eq!(got.features.as_deref(), Some(feats.as_slice()));
+            assert_eq!(got.predicted, model::argmax(&logits));
+            assert!(got.telemetry.energy.total_pj() > 0.0);
+            assert_eq!(got.telemetry.arch_time_ns, 0.0);
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_frame_shape() {
+        let (_, params) = synth_params(3);
+        let mut backend =
+            FunctionalBackend::new(params, &EngineConfig::default()).unwrap();
+        let bad = Frame { rows: 2, cols: 2, channels: 1, pixels: vec![0; 4],
+                          seq: 0 };
+        assert!(backend.infer_batch(&[bad]).is_err());
+    }
+}

@@ -1,0 +1,648 @@
+//! `engine` — the unified inference API over the three Ap-LBP execution
+//! paths.
+//!
+//! The paper's contribution is *one* network executed three ways: a
+//! bit-exact functional golden model, an in-SRAM architectural simulation
+//! with cycle/energy accounting, and the AOT-lowered JAX/Pallas graph on
+//! PJRT.  This module makes that triplet a first-class abstraction:
+//!
+//! * [`InferenceBackend`] — the trait every execution path implements:
+//!   `infer_batch(&[Frame]) -> BackendOutput` carrying logits, optional
+//!   pooled features, and a unified [`Telemetry`] of cycle/energy/DPU
+//!   statistics.  Backends advertise what they can do through
+//!   [`Capabilities`] (probed at build time, so an unavailable backend is
+//!   an early, explicit error instead of a late one).
+//! * [`FunctionalBackend`] — wraps the plain-Rust integer model
+//!   (`crate::model`); fast, no modeled hardware statistics.
+//! * [`ArchitecturalBackend`] — wraps the Algorithm-1 / in-memory-MLP
+//!   simulation over compute sub-arrays, producing cycle/energy telemetry
+//!   and an internal bit-level cross-check against the functional math
+//!   (`Telemetry::arch_mismatches`).
+//! * [`PjrtBackend`] — wraps `crate::runtime::Runtime` (the `pjrt` cargo
+//!   feature); without the feature it reports itself unavailable through
+//!   `capabilities()`.
+//! * [`Engine`] — owns backend selection, optional pluggable
+//!   cross-checking against a reference backend (logit divergences are
+//!   counted in `Telemetry::cross_check_mismatches`), and telemetry
+//!   accumulation across batches.  Built through [`EngineBuilder`]:
+//!
+//! ```no_run
+//! use ns_lbp::engine::{BackendKind, Engine};
+//! use ns_lbp::params::synth::synth_params;
+//!
+//! let (_, params) = synth_params(1);
+//! let mut engine = Engine::builder()
+//!     .params(params)
+//!     .backend(BackendKind::Architectural)
+//!     .cross_check(BackendKind::Functional)
+//!     .build()
+//!     .unwrap();
+//! # let frames: Vec<ns_lbp::sensor::Frame> = Vec::new();
+//! let out = engine.infer_batch(&frames).unwrap();
+//! assert_eq!(engine.telemetry().cross_check_mismatches, 0);
+//! ```
+//!
+//! The coordinator, the serving layer, the CLI, and the benches all
+//! construct backends exclusively through this module; new workloads
+//! (backend routing per request class, A/B energy comparisons, future
+//! execution paths) are an `InferenceBackend` impl, not another fork of
+//! the pipeline.
+
+pub mod architectural;
+pub mod functional;
+pub mod pjrt;
+
+use crate::config::SystemConfig;
+use crate::dpu::DpuStats;
+use crate::energy::EnergyBreakdown;
+use crate::error::{Error, Result};
+use crate::isa::ExecStats;
+use crate::model::TensorU8;
+use crate::params::{NetConfig, NetParams};
+use crate::sensor::Frame;
+
+pub use architectural::ArchitecturalBackend;
+pub use functional::FunctionalBackend;
+pub use pjrt::PjrtBackend;
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// The execution paths a frame can take through the system.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Plain-Rust bit-exact integer model (`crate::model`).
+    Functional,
+    /// In-SRAM simulation: Algorithm-1 LBP comparisons and (optionally)
+    /// the bit-serial in-memory MLP, with cycle/energy accounting.
+    #[default]
+    Architectural,
+    /// AOT JAX/Pallas HLO executed through PJRT (`pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Functional => "functional",
+            BackendKind::Architectural => "architectural",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse an optional backend: `"none"` / `"off"` mean "no backend"
+    /// (used for the cross-check selector).
+    pub fn parse_optional(s: &str) -> Result<Option<BackendKind>> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "off" | "" => Ok(None),
+            other => other.parse().map(Some),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "functional" | "func" => Ok(BackendKind::Functional),
+            "architectural" | "arch" => Ok(BackendKind::Architectural),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => Err(Error::Config(format!(
+                "unknown backend {other:?} (functional|architectural|pjrt)"
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration (shared with the coordinator)
+// ---------------------------------------------------------------------------
+
+/// What the architectural path simulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArchSim {
+    /// Run every LBP comparison through the ISA-level Algorithm 1.
+    pub lbp: bool,
+    /// Run the MLP through the in-memory AND/bitcount path.
+    pub mlp: bool,
+    /// Let the Ctrl early-exit Algorithm 1 once all lanes are decided.
+    pub early_exit: bool,
+}
+
+impl Default for ArchSim {
+    fn default() -> Self {
+        Self { lbp: true, mlp: false, early_exit: false }
+    }
+}
+
+/// A shard's slice of the cache: shard `index` of `count` owns a disjoint
+/// group of banks (the paper's parallelism unit), so concurrent shards
+/// model concurrent traffic over *disjoint* compute sub-arrays instead of
+/// all of them claiming the whole 2.5 MB slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSlice {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSlice {
+    /// Banks owned by this shard out of `banks` total (remainder banks go
+    /// to the lowest-indexed shards).
+    pub fn banks(&self, banks: usize) -> usize {
+        banks / self.count + usize::from(self.index < banks % self.count)
+    }
+}
+
+/// Engine configuration: the system setup, the architectural-simulation
+/// switches, and an optional shard slice.  (The coordinator re-exports
+/// this as `CoordinatorConfig`.)  Backend selection itself lives in
+/// `SystemConfig::engine` so it is settable from the config file and
+/// `--set engine.backend=...`; [`EngineBuilder::backend`] overrides it.
+#[derive(Clone, Debug, Default)]
+pub struct EngineConfig {
+    pub system: SystemConfig,
+    pub arch: ArchSim,
+    /// When set, the modeled accelerator time assumes only this shard's
+    /// bank slice is available (functional results are unaffected).
+    pub shard: Option<ShardSlice>,
+}
+
+impl EngineConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.system.cache.validate()?;
+        if let Some(s) = self.shard {
+            if s.count == 0 || s.index >= s.count {
+                return Err(Error::Engine(format!(
+                    "shard slice {}/{} invalid",
+                    s.index, s.count
+                )));
+            }
+            if s.count > self.system.cache.banks {
+                return Err(Error::Engine(format!(
+                    "{} shards cannot split {} banks",
+                    s.count, self.system.cache.banks
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Compute sub-arrays available under this configuration — the whole
+    /// cache, or just the configured shard's bank slice.
+    pub fn subarray_budget(&self) -> usize {
+        let g = &self.system.cache;
+        match self.shard {
+            None => g.total_subarrays(),
+            Some(s) => s.banks(g.banks) * g.mats_per_bank * g.subarrays_per_mat,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Outputs
+// ---------------------------------------------------------------------------
+
+/// Unified per-frame (or per-run, once merged) execution statistics.
+/// Backends without a hardware model leave the modeled fields at zero
+/// (see `Capabilities::modeled_telemetry`).
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    /// ISA-level execution statistics (cycles, row accesses, opcodes).
+    pub exec: ExecStats,
+    /// Digital-processing-unit activity counters.
+    pub dpu: DpuStats,
+    /// Itemized energy account.
+    pub energy: EnergyBreakdown,
+    /// Modeled accelerator latency [ns].
+    pub arch_time_ns: f64,
+    /// In-backend bit-level divergences of the architectural path against
+    /// the functional math (must be 0).
+    pub arch_mismatches: u64,
+    /// Frames compared against the engine's cross-check reference backend.
+    pub cross_check_frames: u64,
+    /// Frames whose logits diverged from the reference backend (must be 0).
+    pub cross_check_mismatches: u64,
+}
+
+impl Telemetry {
+    pub fn merge(&mut self, o: &Telemetry) {
+        self.exec.merge(&o.exec);
+        self.dpu.merge(&o.dpu);
+        self.energy.add(&o.energy);
+        self.arch_time_ns += o.arch_time_ns;
+        self.arch_mismatches += o.arch_mismatches;
+        self.cross_check_frames += o.cross_check_frames;
+        self.cross_check_mismatches += o.cross_check_mismatches;
+    }
+}
+
+/// One frame's inference result.  (The coordinator re-exports this as
+/// `FrameReport`.)
+#[derive(Clone, Debug)]
+pub struct FrameOutput {
+    pub seq: u64,
+    /// Argmax class of `logits`.
+    pub predicted: usize,
+    pub logits: Vec<f32>,
+    /// Pooled `act_bits` features, when the backend produces them.
+    pub features: Option<Vec<u8>>,
+    pub telemetry: Telemetry,
+}
+
+/// A batch of inference results, in the order of the submitted frames.
+#[derive(Clone, Debug, Default)]
+pub struct BackendOutput {
+    pub frames: Vec<FrameOutput>,
+}
+
+impl BackendOutput {
+    /// Merge of every frame's telemetry.
+    pub fn telemetry(&self) -> Telemetry {
+        let mut t = Telemetry::default();
+        for f in &self.frames {
+            t.merge(&f.telemetry);
+        }
+        t
+    }
+}
+
+/// What a backend can do, probed before any frame is submitted.
+#[derive(Clone, Debug)]
+pub struct Capabilities {
+    /// Whether the backend can execute at all in this build/environment.
+    pub available: bool,
+    /// Whether `FrameOutput::features` is populated.
+    pub produces_features: bool,
+    /// Whether cycle/energy telemetry is modeled (vs left at zero).
+    pub modeled_telemetry: bool,
+    /// Human-readable description (or the reason it is unavailable).
+    pub detail: String,
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// One execution path for the Ap-LBP network.
+///
+/// Implementations consume digitized sensor frames (`u8` pixels with the
+/// ADC's LSB skip already applied) and return per-frame logits plus
+/// telemetry.  A failed batch returns `Err`; per-frame granularity is
+/// available through `Engine::infer_frame`.
+pub trait InferenceBackend {
+    /// Which execution path this is.
+    fn kind(&self) -> BackendKind;
+
+    /// Probe availability and feature support without running anything.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Run inference over a batch of frames.
+    fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput>;
+}
+
+/// Shape-check a digitized frame against the network geometry (shared by
+/// every backend so the error reads the same everywhere).
+pub(crate) fn validate_frame(frame: &Frame, cfg: &NetConfig) -> Result<()> {
+    if frame.rows != cfg.height || frame.cols != cfg.width
+        || frame.channels != cfg.in_channels
+    {
+        return Err(Error::Engine(format!(
+            "frame {}x{}x{} vs network {}x{}x{}",
+            frame.rows, frame.cols, frame.channels,
+            cfg.height, cfg.width, cfg.in_channels
+        )));
+    }
+    Ok(())
+}
+
+/// Validate a frame and lift it into an HWC tensor.  The ADC already
+/// applied the pixel-LSB skip; the mask is re-applied defensively.
+pub(crate) fn digitize(frame: &Frame, cfg: &NetConfig) -> Result<TensorU8> {
+    validate_frame(frame, cfg)?;
+    let mask = 0xFFu8 ^ ((1u8 << cfg.apx_pixel).wrapping_sub(1));
+    let data = frame.pixels.iter().map(|&p| p & mask).collect();
+    Ok(TensorU8 { h: cfg.height, w: cfg.width, c: cfg.in_channels, data })
+}
+
+fn make_backend(kind: BackendKind, params: &NetParams, config: &EngineConfig,
+                artifact: &str) -> Result<Box<dyn InferenceBackend + Send>> {
+    let backend: Box<dyn InferenceBackend + Send> = match kind {
+        BackendKind::Functional => {
+            Box::new(FunctionalBackend::new(params.clone(), config)?)
+        }
+        BackendKind::Architectural => {
+            Box::new(ArchitecturalBackend::new(params.clone(), config.clone())?)
+        }
+        BackendKind::Pjrt => {
+            Box::new(PjrtBackend::new(params.clone(), config,
+                                      artifact.to_string())?)
+        }
+    };
+    let caps = backend.capabilities();
+    if !caps.available {
+        return Err(Error::Engine(format!(
+            "backend {kind} unavailable: {}",
+            caps.detail
+        )));
+    }
+    Ok(backend)
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+/// The engine: a selected primary backend, an optional cross-check
+/// reference backend, and accumulated telemetry.
+pub struct Engine {
+    params: NetParams,
+    config: EngineConfig,
+    primary: Box<dyn InferenceBackend + Send>,
+    reference: Option<Box<dyn InferenceBackend + Send>>,
+    telemetry: Telemetry,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Run a batch through the primary backend and, when configured,
+    /// through the reference backend; logit divergences are counted per
+    /// frame in `Telemetry::cross_check_mismatches`.
+    pub fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
+        let mut out = self.primary.infer_batch(frames)?;
+        if let Some(reference) = self.reference.as_mut() {
+            let ref_out = reference.infer_batch(frames)?;
+            if ref_out.frames.len() != out.frames.len() {
+                return Err(Error::Engine(format!(
+                    "cross-check returned {} outputs for {} frames",
+                    ref_out.frames.len(),
+                    out.frames.len()
+                )));
+            }
+            for (f, r) in out.frames.iter_mut().zip(&ref_out.frames) {
+                f.telemetry.cross_check_frames += 1;
+                if !logits_match(&f.logits, &r.logits) {
+                    f.telemetry.cross_check_mismatches += 1;
+                }
+            }
+        }
+        for f in &out.frames {
+            self.telemetry.merge(&f.telemetry);
+        }
+        Ok(out)
+    }
+
+    /// Single-frame convenience wrapper around [`Engine::infer_batch`].
+    pub fn infer_frame(&mut self, frame: &Frame) -> Result<FrameOutput> {
+        let out = self.infer_batch(std::slice::from_ref(frame))?;
+        out.frames.into_iter().next().ok_or_else(|| {
+            Error::Engine("backend returned no output for the frame".into())
+        })
+    }
+
+    /// Primary backend kind.
+    pub fn kind(&self) -> BackendKind {
+        self.primary.kind()
+    }
+
+    /// Primary backend capabilities.
+    pub fn capabilities(&self) -> Capabilities {
+        self.primary.capabilities()
+    }
+
+    /// Reference backend kind, when cross-checking is enabled.
+    pub fn cross_check_kind(&self) -> Option<BackendKind> {
+        self.reference.as_ref().map(|r| r.kind())
+    }
+
+    /// Telemetry accumulated over every batch this engine has run.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    pub fn params(&self) -> &NetParams {
+        &self.params
+    }
+}
+
+/// Logit equivalence: exact for the integer paths, within the golden-model
+/// tolerance (1e-4 relative) so the PJRT float path can be a reference.
+fn logits_match(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= 1e-4 * y.abs().max(1.0))
+}
+
+/// Builder for [`Engine`].  Backend and cross-check selection default to
+/// `config.system.engine` (file / `--set` controlled); explicit calls to
+/// [`EngineBuilder::backend`] / [`EngineBuilder::cross_check`] win.
+#[derive(Default)]
+pub struct EngineBuilder {
+    config: EngineConfig,
+    params: Option<NetParams>,
+    backend: Option<BackendKind>,
+    cross_check: Option<Option<BackendKind>>,
+    artifact: Option<String>,
+}
+
+impl EngineBuilder {
+    pub fn config(mut self, config: EngineConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn params(mut self, params: NetParams) -> Self {
+        self.params = Some(params);
+        self
+    }
+
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = Some(kind);
+        self
+    }
+
+    pub fn cross_check(mut self, kind: BackendKind) -> Self {
+        self.cross_check = Some(Some(kind));
+        self
+    }
+
+    /// Disable cross-checking even if the config requests it.
+    pub fn no_cross_check(mut self) -> Self {
+        self.cross_check = Some(None);
+        self
+    }
+
+    /// HLO artifact name for the PJRT backend (default:
+    /// `engine.pjrt_artifact` from the config, `aplbp_mnist` out of the
+    /// box).
+    pub fn artifact(mut self, name: impl Into<String>) -> Self {
+        self.artifact = Some(name.into());
+        self
+    }
+
+    pub fn build(self) -> Result<Engine> {
+        let params = self.params.ok_or_else(|| {
+            Error::Engine("EngineBuilder: params not set".into())
+        })?;
+        self.config.validate()?;
+        let kind = self.backend.unwrap_or(self.config.system.engine.backend);
+        let cross = self
+            .cross_check
+            .unwrap_or(self.config.system.engine.cross_check);
+        let artifact = self
+            .artifact
+            .unwrap_or_else(|| self.config.system.engine.pjrt_artifact.clone());
+        let primary = make_backend(kind, &params, &self.config, &artifact)?;
+        let reference = match cross {
+            Some(k) => Some(make_backend(k, &params, &self.config, &artifact)?),
+            None => None,
+        };
+        Ok(Engine {
+            params,
+            config: self.config,
+            primary,
+            reference,
+            telemetry: Telemetry::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::synth::synth_params;
+    use crate::testing::synth_frames;
+
+    fn setup(n: usize) -> (NetParams, Vec<Frame>) {
+        let (_, params) = synth_params(5);
+        let frames = synth_frames(&params, n, 17).unwrap();
+        (params, frames)
+    }
+
+    #[test]
+    fn backend_kind_parses_and_displays() {
+        assert_eq!("functional".parse::<BackendKind>().unwrap(),
+                   BackendKind::Functional);
+        assert_eq!("ARCH".parse::<BackendKind>().unwrap(),
+                   BackendKind::Architectural);
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("frobnicate".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::Architectural.to_string(), "architectural");
+        assert_eq!(BackendKind::parse_optional("none").unwrap(), None);
+        assert_eq!(BackendKind::parse_optional("functional").unwrap(),
+                   Some(BackendKind::Functional));
+        assert!(BackendKind::parse_optional("nope").is_err());
+    }
+
+    #[test]
+    fn builder_requires_params() {
+        assert!(Engine::builder().build().is_err());
+    }
+
+    #[test]
+    fn engine_runs_functional_backend() {
+        let (params, frames) = setup(3);
+        let mut engine = Engine::builder()
+            .params(params)
+            .backend(BackendKind::Functional)
+            .build()
+            .unwrap();
+        assert_eq!(engine.kind(), BackendKind::Functional);
+        assert!(engine.capabilities().available);
+        let out = engine.infer_batch(&frames).unwrap();
+        assert_eq!(out.frames.len(), 3);
+        for (i, f) in out.frames.iter().enumerate() {
+            assert_eq!(f.seq, i as u64);
+            assert_eq!(f.logits.len(), 10);
+            assert!(f.predicted < 10);
+            assert!(f.features.is_some());
+        }
+        assert_eq!(engine.telemetry().arch_mismatches, 0);
+    }
+
+    #[test]
+    fn cross_check_counts_frames_and_agrees() {
+        let (params, frames) = setup(2);
+        let mut engine = Engine::builder()
+            .params(params)
+            .backend(BackendKind::Architectural)
+            .cross_check(BackendKind::Functional)
+            .build()
+            .unwrap();
+        assert_eq!(engine.cross_check_kind(), Some(BackendKind::Functional));
+        let out = engine.infer_batch(&frames).unwrap();
+        let t = out.telemetry();
+        assert_eq!(t.cross_check_frames, 2);
+        assert_eq!(t.cross_check_mismatches, 0);
+        assert_eq!(engine.telemetry().cross_check_frames, 2);
+        assert_eq!(engine.telemetry().cross_check_mismatches, 0);
+    }
+
+    #[test]
+    fn pjrt_backend_unavailable_is_an_early_error() {
+        if crate::runtime::pjrt_available() {
+            return; // pjrt-featured builds construct a real client instead
+        }
+        let (params, _) = setup(1);
+        let err = Engine::builder()
+            .params(params)
+            .backend(BackendKind::Pjrt)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unavailable"), "{err}");
+    }
+
+    #[test]
+    fn shard_slice_banks_partition_exactly() {
+        for count in [1, 3, 4, 7, 80] {
+            let total: usize = (0..count)
+                .map(|index| ShardSlice { index, count }.banks(80))
+                .sum();
+            assert_eq!(total, 80, "count {count}");
+        }
+    }
+
+    #[test]
+    fn engine_config_validates_shard_slices() {
+        let bad = EngineConfig {
+            shard: Some(ShardSlice { index: 2, count: 2 }),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let too_many = EngineConfig {
+            shard: Some(ShardSlice { index: 0, count: 81 }),
+            ..Default::default()
+        };
+        assert!(too_many.validate().is_err());
+        assert!(EngineConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn telemetry_merges_additively() {
+        let mut a = Telemetry { arch_time_ns: 1.5, arch_mismatches: 1,
+                                ..Default::default() };
+        let b = Telemetry { arch_time_ns: 2.5, cross_check_frames: 3,
+                            cross_check_mismatches: 1, ..Default::default() };
+        a.merge(&b);
+        assert!((a.arch_time_ns - 4.0).abs() < 1e-12);
+        assert_eq!(a.arch_mismatches, 1);
+        assert_eq!(a.cross_check_frames, 3);
+        assert_eq!(a.cross_check_mismatches, 1);
+    }
+}

@@ -1,0 +1,148 @@
+//! The PJRT backend: the AOT-lowered JAX/Pallas HLO graph executed
+//! through `crate::runtime::Runtime`.
+//!
+//! Only compiled into a real executor when the `pjrt` cargo feature is
+//! enabled; otherwise the backend's `capabilities()` probe reports it
+//! unavailable, and `Engine::builder()` refuses to select it — an early,
+//! explicit error instead of a failure on the first frame.
+
+use crate::error::{Error, Result};
+use crate::model;
+use crate::params::NetParams;
+use crate::runtime::{pjrt_available, Runtime};
+use crate::sensor::Frame;
+
+use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
+            FrameOutput, InferenceBackend, Telemetry};
+
+/// The artifacts' static batch size (set at AOT-lowering time).
+pub const ARTIFACT_BATCH: usize = 4;
+
+/// Wraps the PJRT runtime over one `aplbp_*` HLO artifact.  Frames are
+/// fed as f32 images in [0,1]; since the artifact re-applies the sensor
+/// quantization, feeding back `pixels/255` reproduces the digitized
+/// values bit-exactly.  No hardware statistics are modeled.
+pub struct PjrtBackend {
+    params: NetParams,
+    runtime: Runtime,
+    artifact: String,
+    loaded: bool,
+}
+
+impl PjrtBackend {
+    pub fn new(params: NetParams, config: &EngineConfig,
+               artifact: String) -> Result<Self> {
+        config.validate()?;
+        let runtime = Runtime::new(config.system.artifacts_dir.clone())?;
+        // Surface a missing artifact at construction time (the engine's
+        // early-error contract) — but only when the backend is otherwise
+        // available; feature absence is reported through capabilities().
+        if pjrt_available() {
+            let path = std::path::Path::new(&config.system.artifacts_dir)
+                .join(format!("{artifact}.hlo.txt"));
+            if !path.exists() {
+                return Err(Error::Engine(format!(
+                    "artifact {} not found — run `make artifacts`",
+                    path.display()
+                )));
+            }
+        }
+        Ok(Self { params, runtime, artifact, loaded: false })
+    }
+
+    fn ensure_loaded(&mut self) -> Result<()> {
+        if !self.loaded {
+            self.runtime.load(&self.artifact)?;
+            self.loaded = true;
+        }
+        Ok(())
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        if pjrt_available() {
+            Capabilities {
+                available: true,
+                produces_features: false,
+                modeled_telemetry: false,
+                detail: format!(
+                    "PJRT ({}) on artifact {:?}",
+                    self.runtime.platform(),
+                    self.artifact
+                ),
+            }
+        } else {
+            Capabilities {
+                available: false,
+                produces_features: false,
+                modeled_telemetry: false,
+                detail: "PJRT backend not compiled into this build \
+                         (rebuild with `--features pjrt` and a vendored \
+                         xla crate)"
+                    .into(),
+            }
+        }
+    }
+
+    fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
+        let caps = self.capabilities();
+        if !caps.available {
+            return Err(Error::Engine(caps.detail));
+        }
+        self.ensure_loaded()?;
+        let cfg = self.params.config;
+        let npix = cfg.height * cfg.width * cfg.in_channels;
+        for frame in frames {
+            super::validate_frame(frame, &cfg)?;
+        }
+        let mut out = Vec::with_capacity(frames.len());
+        for chunk in frames.chunks(ARTIFACT_BATCH) {
+            // pad the final chunk to the artifact's static batch
+            let mut flat = Vec::with_capacity(ARTIFACT_BATCH * npix);
+            for frame in chunk {
+                flat.extend(frame.pixels.iter().map(|&p| p as f32 / 255.0));
+            }
+            flat.resize(ARTIFACT_BATCH * npix, 0.0);
+            let logits = self.runtime.run_aplbp(&self.artifact, &self.params,
+                                                &flat, ARTIFACT_BATCH)?;
+            for (frame, l) in chunk.iter().zip(logits) {
+                out.push(FrameOutput {
+                    seq: frame.seq,
+                    predicted: model::argmax(&l),
+                    logits: l,
+                    features: None,
+                    telemetry: Telemetry::default(),
+                });
+            }
+        }
+        Ok(BackendOutput { frames: out })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::synth::synth_params;
+
+    #[test]
+    fn reports_unavailability_without_the_feature() {
+        if pjrt_available() {
+            return;
+        }
+        let (_, params) = synth_params(1);
+        let mut b = PjrtBackend::new(params, &EngineConfig::default(),
+                                     "aplbp_mnist".into())
+            .unwrap();
+        let caps = b.capabilities();
+        assert!(!caps.available);
+        assert!(caps.detail.contains("pjrt"), "{}", caps.detail);
+        let frame = Frame { rows: 1, cols: 1, channels: 1, pixels: vec![0],
+                            seq: 0 };
+        assert!(b.infer_batch(&[frame]).is_err());
+    }
+}

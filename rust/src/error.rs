@@ -30,6 +30,10 @@ pub enum Error {
     /// Coordinator pipeline failure (worker panicked, channel closed).
     Coordinator(String),
 
+    /// Engine-layer failure (backend unavailable, bad selection,
+    /// cross-check wiring fault, frame/network shape mismatch).
+    Engine(String),
+
     /// Serving-layer failure (admission rejection, drain fault, dead shard).
     Serve(String),
 
@@ -47,6 +51,7 @@ impl fmt::Display for Error {
             Error::Circuit(m) => write!(f, "circuit model error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }

@@ -38,12 +38,19 @@
 //!   Fig. 11 (8-bit CNN, LBCNN, LBPNet on the same cache substrate).
 //! * [`runtime`] — PJRT client wrapper: loads `artifacts/*.hlo.txt` (the
 //!   AOT-lowered JAX/Pallas graphs) and executes them on the request path.
-//! * [`coordinator`] — the near-sensor pipeline: sensor → mapper → in-memory
-//!   execution → DPU → classification, with worker threads per bank and a
-//!   golden-model cross-check against the PJRT path.
-//! * [`serve`] — the traffic-facing layer on top of the coordinator: a
+//! * [`engine`] — the unified inference API: the `InferenceBackend` trait
+//!   with one implementation per execution path (functional model,
+//!   in-SRAM architectural simulation, PJRT golden graph), backend
+//!   selection via `BackendKind`, pluggable cross-checking with mismatch
+//!   accounting, and the merged cycle/energy/DPU `Telemetry`.  Everything
+//!   above this layer constructs backends exclusively through
+//!   `engine::Engine`.
+//! * [`coordinator`] — the near-sensor run loop: digitizes frames from a
+//!   sensor, fans them out over worker threads (one engine each), and
+//!   aggregates per-frame reports into a `RunSummary`.
+//! * [`serve`] — the traffic-facing layer on top of the engine: a
 //!   bounded admission queue with backpressure, dynamic (size/deadline)
-//!   batching, a shard pool where each shard's coordinator is pinned to a
+//!   batching, a shard pool where each shard's engine is pinned to a
 //!   disjoint bank slice, p50/p95/p99 latency + throughput/energy metrics,
 //!   and graceful drain (`ns-lbp serve-bench` drives it end to end).
 //!
@@ -58,6 +65,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dpu;
 pub mod energy;
+pub mod engine;
 pub mod error;
 pub mod isa;
 pub mod lbp;

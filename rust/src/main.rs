@@ -4,30 +4,34 @@
 //!
 //! * `run`       — stream synthetic frames through the full pipeline
 //!                 (sensor → mapper → in-memory LBP → MLP), print per-run
-//!                 stats; `--arch-mlp` also simulates the MLP in-memory;
+//!                 stats; `--backend functional|architectural|pjrt` picks
+//!                 the execution path, `--cross-check KIND` re-runs every
+//!                 frame on a reference backend and counts divergences;
+//!                 `--arch-mlp` also simulates the MLP in-memory;
 //!                 `--golden` cross-checks against the PJRT artifact.
 //! * `serve-bench` — replay synthetic frames through the sharded, batching
 //!                 serving layer at a configurable offered load and print
-//!                 the latency/throughput/energy report; `--compare` also
-//!                 runs the 1-shard baseline and prints the speedup.
+//!                 the latency/throughput/energy report; `--backend` and
+//!                 `--cross-check` select the per-shard engine; `--compare`
+//!                 also runs the 1-shard baseline and prints the speedup.
 //! * `transient` — print the Fig. 9 RBL discharge waveforms.
 //! * `montecarlo`— run the Fig. 10 variation analysis.
 //! * `info`      — show configuration, geometry, energy/area headline.
 //!
 //! Configuration: `--config configs/nslbp_default.toml` plus repeated
-//! `--set section.key=value` overrides.
+//! `--set section.key=value` overrides (backend selection is also
+//! reachable as `--set engine.backend=...`).
 
 use ns_lbp::circuit::{MonteCarlo, SENSE_DELAY_PS};
 use ns_lbp::cli::Command;
 use ns_lbp::config::SystemConfig;
 use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
 use ns_lbp::energy::{AreaModel, EnergyModel};
-use ns_lbp::model::argmax;
+use ns_lbp::engine::{BackendKind, Engine};
 use ns_lbp::params::NetParams;
-use ns_lbp::rng::Xoshiro256;
-use ns_lbp::runtime::Runtime;
-use ns_lbp::sensor::{Frame, ReplaySensor, SensorConfig};
+use ns_lbp::sensor::Frame;
 use ns_lbp::serve::{Server, Ticket};
+use ns_lbp::testing::synth_frames;
 use ns_lbp::{params, Result};
 
 fn main() {
@@ -54,6 +58,8 @@ fn command() -> Command {
         .subcommand("info", "configuration and headline numbers")
         .opt("config", "FILE", "config file (TOML subset)")
         .opt_repeated("set", "K=V", "config override, e.g. cache.banks=40")
+        .opt("backend", "KIND", "inference backend: functional|architectural|pjrt")
+        .opt("cross-check", "KIND", "reference backend to cross-check (or none)")
         .opt("dataset", "NAME", "mnist|svhn (default mnist)")
         .opt("frames", "N", "frames to stream (default 8; serve-bench 256)")
         .opt("seed", "N", "frame-generator seed (default 7)")
@@ -75,7 +81,8 @@ fn real_main(args: &[String]) -> Result<()> {
     let cmd = command();
     let parsed = cmd.parse(args)?;
     let overrides = parsed.opt_all("set");
-    let system = SystemConfig::load(parsed.opt("config"), &overrides)?;
+    let mut system = SystemConfig::load(parsed.opt("config"), &overrides)?;
+    apply_engine_opts(&parsed, &mut system)?;
 
     match parsed.subcommand.as_deref() {
         Some("run") => run_pipeline(&parsed, system),
@@ -89,53 +96,78 @@ fn real_main(args: &[String]) -> Result<()> {
     }
 }
 
-fn run_pipeline(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()> {
+/// Fold `--backend` / `--cross-check` into the engine selection (they
+/// override both the config file and `--set engine.*`).
+fn apply_engine_opts(parsed: &ns_lbp::cli::Parsed, system: &mut SystemConfig)
+                     -> Result<()> {
+    if let Some(b) = parsed.opt("backend") {
+        system.engine.backend = b.parse()?;
+    }
+    if let Some(c) = parsed.opt("cross-check") {
+        system.engine.cross_check = BackendKind::parse_optional(c)?;
+    }
+    Ok(())
+}
+
+/// Resolve `--dataset` / `--artifacts` and keep the engine's artifact
+/// view in sync, so a PJRT backend resolves the same files the params
+/// came from.  Returns `(dataset, artifacts_dir)`.
+fn resolve_artifacts(parsed: &ns_lbp::cli::Parsed, system: &mut SystemConfig)
+                     -> (String, String) {
     let dataset = parsed.opt("dataset").unwrap_or("mnist").to_string();
-    let frames: usize = parsed.opt_parse("frames", 8)?;
-    let seed: u64 = parsed.opt_parse("seed", 7)?;
     let artifacts = parsed
         .opt("artifacts")
         .unwrap_or(&system.artifacts_dir)
         .to_string();
+    system.artifacts_dir = artifacts.clone();
+    if parsed.opt("dataset").is_some() {
+        system.engine.pjrt_artifact = format!("aplbp_{dataset}");
+    }
+    (dataset, artifacts)
+}
+
+fn engine_banner(system: &SystemConfig) -> String {
+    match system.engine.cross_check {
+        Some(c) => format!("{} (cross-check: {})", system.engine.backend, c),
+        None => system.engine.backend.to_string(),
+    }
+}
+
+fn run_pipeline(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig)
+                -> Result<()> {
+    let frames_n: usize = parsed.opt_parse("frames", 8)?;
+    let seed: u64 = parsed.opt_parse("seed", 7)?;
+    let (dataset, artifacts) = resolve_artifacts(parsed, &mut system);
 
     let params = params::load(format!("{artifacts}/{dataset}.params.bin"))?;
     let cfg = params.config;
     println!(
-        "network: {dataset} ({}x{}x{}, {} LBP layers, apx={}, hidden {})",
+        "network: {dataset} ({}x{}x{}, {} LBP layers, apx={}, hidden {}) | \
+         backend: {}",
         cfg.height, cfg.width, cfg.in_channels, cfg.n_lbp_layers,
-        cfg.apx_code, cfg.hidden
+        cfg.apx_code, cfg.hidden, engine_banner(&system)
     );
 
-    let sensor_cfg = SensorConfig {
-        rows: cfg.height,
-        cols: cfg.width,
-        channels: cfg.in_channels,
-        skip_lsbs: cfg.apx_pixel,
-        ..Default::default()
-    };
-    let mut rng = Xoshiro256::new(seed);
-    let scenes: Vec<Vec<f64>> = (0..frames)
-        .map(|_| (0..sensor_cfg.pixels()).map(|_| rng.next_f64()).collect())
-        .collect();
-    let mut sensor = ReplaySensor::new(sensor_cfg, scenes.clone(), seed)?;
-
+    let frames = synth_frames(&params, frames_n, seed)?;
     let arch = ArchSim {
         lbp: !parsed.flag("functional"),
         mlp: parsed.flag("arch-mlp"),
         early_exit: parsed.flag("early-exit"),
     };
-    let coord = Coordinator::new(params.clone(),
-                                 CoordinatorConfig { system, arch, shard: None })?;
-    let (reports, summary) = coord.run(&mut sensor, frames)?;
+    let coord = Coordinator::new(
+        params.clone(),
+        CoordinatorConfig { system, arch, shard: None },
+    )?;
+    let (reports, summary) = coord.run_frames(&frames)?;
 
     for r in &reports {
         println!(
             "frame {:>3}: class {} ({} instrs, {:.2} µJ, {:.2} µs modeled)",
             r.seq,
             r.predicted,
-            r.exec.instructions,
-            r.energy.total_pj() / 1e6,
-            r.arch_time_ns / 1e3
+            r.telemetry.exec.instructions,
+            r.telemetry.energy.total_pj() / 1e6,
+            r.telemetry.arch_time_ns / 1e3
         );
     }
     println!(
@@ -147,31 +179,40 @@ fn run_pipeline(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()
         summary.frames_per_second_modeled(),
         summary.wall_seconds
     );
+    if coord.config.system.engine.cross_check.is_some() {
+        println!(
+            "cross-check: {} logit mismatches over {} frames",
+            summary.cross_check_mismatches, summary.frames
+        );
+    }
     if summary.arch_mismatches != 0 {
         return Err(ns_lbp::Error::Coordinator(
             "architectural/functional divergence detected".into(),
         ));
     }
+    if summary.cross_check_mismatches != 0 {
+        return Err(ns_lbp::Error::Engine(
+            "cross-check divergence detected".into(),
+        ));
+    }
 
     if parsed.flag("golden") {
-        let mut rt = Runtime::new(&artifacts)?;
-        let name = format!("aplbp_{dataset}");
-        rt.load(&name)?;
-        println!("golden check on PJRT ({}) ...", rt.platform());
-        // batch of 4 (the artifact's static batch)
-        let b = 4.min(frames);
-        let npix = cfg.height * cfg.width * cfg.in_channels;
-        let mut flat = Vec::new();
-        for s in scenes.iter().take(b) {
-            flat.extend(s.iter().map(|&v| v as f32));
-        }
-        flat.resize(4 * npix, 0.0);
-        let logits = rt.run_aplbp(&name, &params, &flat, 4)?;
-        for (i, l) in logits.iter().take(b).enumerate() {
-            let want = reports[i].predicted;
-            let got = argmax(l);
-            println!("  frame {i}: pjrt class {got}, simulator class {want}");
-            if got != want {
+        let mut engine = Engine::builder()
+            .config(coord.config.clone())
+            .params(params)
+            .backend(BackendKind::Pjrt)
+            .no_cross_check()
+            .artifact(format!("aplbp_{dataset}"))
+            .build()?;
+        println!("golden check on {} ...", engine.capabilities().detail);
+        let b = 4.min(frames.len());
+        let out = engine.infer_batch(&frames[..b])?;
+        for (o, r) in out.frames.iter().zip(&reports) {
+            println!(
+                "  frame {}: pjrt class {}, simulator class {}",
+                o.seq, o.predicted, r.predicted
+            );
+            if o.predicted != r.predicted {
                 return Err(ns_lbp::Error::Runtime(
                     "golden model disagreement".into(),
                 ));
@@ -219,13 +260,21 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
         }
     }
     let mut mismatches = 0u64;
+    let mut cross_mismatches = 0u64;
     for t in tickets {
-        mismatches += t.wait()?.report.arch_mismatches;
+        let r = t.wait()?;
+        mismatches += r.report.telemetry.arch_mismatches;
+        cross_mismatches += r.report.telemetry.cross_check_mismatches;
     }
     let report = server.drain()?;
     if mismatches != 0 {
         return Err(ns_lbp::Error::Coordinator(format!(
             "{mismatches} architectural/functional divergences under serve"
+        )));
+    }
+    if cross_mismatches != 0 {
+        return Err(ns_lbp::Error::Engine(format!(
+            "{cross_mismatches} cross-check divergences under serve"
         )));
     }
     Ok(report)
@@ -246,11 +295,7 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
         parsed.opt_parse("queue-depth", system.serve.queue_depth)?;
     system.serve.validate()?;
 
-    let dataset = parsed.opt("dataset").unwrap_or("mnist").to_string();
-    let artifacts = parsed
-        .opt("artifacts")
-        .unwrap_or(&system.artifacts_dir)
-        .to_string();
+    let (dataset, artifacts) = resolve_artifacts(parsed, &mut system);
     let params = match params::load(format!("{artifacts}/{dataset}.params.bin")) {
         Ok(p) => {
             println!("network: {dataset} artifact");
@@ -270,12 +315,13 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
         mlp: parsed.flag("arch-mlp"),
         early_exit: parsed.flag("early-exit"),
     };
-    let frames = ns_lbp::testing::synth_frames(&params, frames_n, seed)?;
+    let frames = synth_frames(&params, frames_n, seed)?;
     println!(
-        "offered: {} frames at {} | shards {} | batch ≤{} | deadline {} µs | \
-         queue depth {}",
+        "offered: {} frames at {} | backend {} | shards {} | batch ≤{} | \
+         deadline {} µs | queue depth {}",
         frames.len(),
         if load > 0.0 { format!("{load:.0} fps") } else { "full rate".into() },
+        engine_banner(&system),
         system.serve.shards,
         system.serve.max_batch,
         system.serve.batch_deadline_us,
@@ -366,6 +412,10 @@ fn info(system: SystemConfig) -> Result<()> {
     println!(
         "circuit: VDD {} V, {} GHz, refs {:?} V",
         system.circuit.vdd, system.circuit.freq_ghz, system.circuit.refs()
+    );
+    println!(
+        "engine: backend {} (set with --backend or --set engine.backend=...)",
+        engine_banner(&system)
     );
     println!(
         "headline: {:.1} TOPS/W peak, {:.1} TOPS, {:.2} mm² slice, \

@@ -37,7 +37,9 @@ pub struct ManifestEntry {
     pub output: String,
 }
 
-/// Parse `manifest.tsv`.
+/// Parse `manifest.tsv`.  Tolerates CRLF line endings and stray
+/// whitespace around columns — manifests written on Windows or
+/// hand-edited must not break artifact resolution.
 pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
     let path = dir.join("manifest.tsv");
     let text = std::fs::read_to_string(&path).map_err(|e| {
@@ -45,10 +47,12 @@ pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
     })?;
     let mut out = Vec::new();
     for (i, line) in text.lines().enumerate() {
-        if i == 0 || line.trim().is_empty() {
+        // `str::lines` strips `\r\n`, but not trailing spaces or tabs
+        let line = line.trim_end();
+        if i == 0 || line.is_empty() {
             continue; // header
         }
-        let cols: Vec<&str> = line.split('\t').collect();
+        let cols: Vec<&str> = line.split('\t').map(str::trim).collect();
         if cols.len() != 4 {
             return Err(Error::Runtime(format!(
                 "manifest line {}: expected 4 columns, got {}",
@@ -105,6 +109,28 @@ impl Literal {
     /// Extract the flat element buffer; errors on element-type mismatch.
     pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>> {
         T::extract(self)
+    }
+
+    /// Borrow the flat f32 buffer without cloning (hot-path accessor);
+    /// errors on element-type mismatch.
+    pub fn as_f32_slice(&self) -> Result<&[f32]> {
+        match &self.data {
+            LiteralData::F32(v) => Ok(v),
+            LiteralData::I32(_) => {
+                Err(Error::Runtime("literal holds i32, asked for f32".into()))
+            }
+        }
+    }
+
+    /// Borrow the flat i32 buffer without cloning (hot-path accessor);
+    /// errors on element-type mismatch.
+    pub fn as_i32_slice(&self) -> Result<&[i32]> {
+        match &self.data {
+            LiteralData::I32(v) => Ok(v),
+            LiteralData::F32(_) => {
+                Err(Error::Runtime("literal holds f32, asked for i32".into()))
+            }
+        }
     }
 }
 
@@ -279,7 +305,7 @@ impl Runtime {
         let mut inputs = vec![img_lit];
         inputs.extend(mlp_literals(params)?);
         let out = self.execute(name, &inputs)?;
-        let flat = out.to_vec::<f32>()?;
+        let flat = out.as_f32_slice()?;
         if flat.len() != batch * cfg.n_classes {
             return Err(Error::Runtime(format!(
                 "model output has {} values, expected {}",
@@ -299,7 +325,7 @@ impl Runtime {
             &[batch, cfg.height, cfg.width, cfg.in_channels],
         )?;
         let out = self.execute(name, &[img_lit])?;
-        let flat = out.to_vec::<i32>()?;
+        let flat = out.as_i32_slice()?;
         let d = cfg.feature_dim();
         if flat.len() != batch * d {
             return Err(Error::Runtime(format!(
@@ -365,6 +391,37 @@ mod tests {
         assert!(l.to_vec::<f32>().is_err());
         assert_eq!(l.dims(), &[3]);
         assert!(!l.is_empty());
+    }
+
+    #[test]
+    fn literal_borrowing_accessors() {
+        let i = literal_i32(&[4, 5], &[2]).unwrap();
+        assert_eq!(i.as_i32_slice().unwrap(), &[4, 5]);
+        assert!(i.as_f32_slice().is_err());
+        let f = literal_f32(&[1.5, 2.5], &[2]).unwrap();
+        assert_eq!(f.as_f32_slice().unwrap(), &[1.5, 2.5]);
+        assert!(f.as_i32_slice().is_err());
+    }
+
+    #[test]
+    fn manifest_tolerates_crlf_and_stray_whitespace() {
+        let dir = std::env::temp_dir()
+            .join(format!("nslbp-man-crlf-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "name\tfile\tinputs\toutput\r\n\
+             a\ta.hlo.txt \tf32[1]\tf32[1]\r\n\
+             b \tb.hlo.txt\tf32[2]\tf32[2]\t\r\n",
+        )
+        .unwrap();
+        let m = read_manifest(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].name, "a");
+        assert_eq!(m[0].file, "a.hlo.txt");
+        assert_eq!(m[1].name, "b");
+        assert_eq!(m[1].file, "b.hlo.txt");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

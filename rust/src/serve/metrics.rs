@@ -10,8 +10,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::coordinator::FrameReport;
 use crate::energy::EnergyBreakdown;
+use crate::engine::FrameOutput;
 use crate::rng::Xoshiro256;
 
 /// Latency samples kept for percentile estimation.  Beyond this the
@@ -27,6 +27,8 @@ pub struct Metrics {
     completed: AtomicU64,
     failed: AtomicU64,
     arch_mismatches: AtomicU64,
+    cross_checked: AtomicU64,
+    cross_check_mismatches: AtomicU64,
     batches: AtomicU64,
     inner: Mutex<Aggregates>,
 }
@@ -39,6 +41,8 @@ impl Default for Metrics {
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             arch_mismatches: AtomicU64::new(0),
+            cross_checked: AtomicU64::new(0),
+            cross_check_mismatches: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             inner: Mutex::new(Aggregates {
                 latencies_ns: Vec::new(),
@@ -78,11 +82,17 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One frame finished: queue→response latency plus its report.
-    pub fn record_completion(&self, latency: Duration, report: &FrameReport) {
+    /// One frame finished: queue→response latency plus its engine output.
+    pub fn record_completion(&self, latency: Duration, report: &FrameOutput) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.arch_mismatches
-            .fetch_add(report.arch_mismatches, Ordering::Relaxed);
+            .fetch_add(report.telemetry.arch_mismatches, Ordering::Relaxed);
+        self.cross_checked
+            .fetch_add(report.telemetry.cross_check_frames, Ordering::Relaxed);
+        self.cross_check_mismatches.fetch_add(
+            report.telemetry.cross_check_mismatches,
+            Ordering::Relaxed,
+        );
         let mut agg = self.inner.lock().unwrap();
         let ns = latency.as_nanos() as u64;
         agg.samples_seen += 1;
@@ -95,8 +105,8 @@ impl Metrics {
                 agg.latencies_ns[j as usize] = ns;
             }
         }
-        agg.energy.add(&report.energy);
-        agg.arch_time_ns += report.arch_time_ns;
+        agg.energy.add(&report.telemetry.energy);
+        agg.arch_time_ns += report.telemetry.arch_time_ns;
     }
 
     pub fn completed(&self) -> u64 {
@@ -121,6 +131,10 @@ impl Metrics {
             completed,
             failed: self.failed.load(Ordering::Relaxed),
             arch_mismatches: self.arch_mismatches.load(Ordering::Relaxed),
+            cross_checked: self.cross_checked.load(Ordering::Relaxed),
+            cross_check_mismatches: self
+                .cross_check_mismatches
+                .load(Ordering::Relaxed),
             batches,
             mean_batch: if batches == 0 {
                 0.0
@@ -166,6 +180,10 @@ pub struct MetricsReport {
     pub completed: u64,
     pub failed: u64,
     pub arch_mismatches: u64,
+    /// Frames cross-checked against the engine's reference backend.
+    pub cross_checked: u64,
+    /// Frames whose logits diverged from the reference backend (must be 0).
+    pub cross_check_mismatches: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub p50_ms: f64,
@@ -214,6 +232,12 @@ impl MetricsReport {
             "  energy    : {:.3} µJ/frame | arch mismatches {}",
             self.energy_per_frame_uj, self.arch_mismatches
         );
+        if self.cross_checked > 0 {
+            println!(
+                "  cross-chk : {} frames checked, {} mismatches",
+                self.cross_checked, self.cross_check_mismatches
+            );
+        }
     }
 }
 
@@ -232,19 +256,23 @@ mod tests {
         assert_eq!(percentile_ns(&[], 0.5), 0);
     }
 
-    #[test]
-    fn latency_reservoir_stays_bounded() {
-        let m = Metrics::default();
-        let report = FrameReport {
+    fn report(arch_time_ns: f64) -> FrameOutput {
+        FrameOutput {
             seq: 0,
             predicted: 0,
             logits: vec![],
-            exec: Default::default(),
-            dpu: Default::default(),
-            energy: Default::default(),
-            arch_time_ns: 0.0,
-            arch_mismatches: 0,
-        };
+            features: None,
+            telemetry: crate::engine::Telemetry {
+                arch_time_ns,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn latency_reservoir_stays_bounded() {
+        let m = Metrics::default();
+        let report = report(0.0);
         let n = LATENCY_RESERVOIR as u64 + 5000;
         for i in 0..n {
             m.record_completion(Duration::from_nanos(i + 1), &report);
@@ -263,16 +291,7 @@ mod tests {
         m.record_accepted();
         m.record_rejected();
         m.record_batch();
-        let report = FrameReport {
-            seq: 0,
-            predicted: 1,
-            logits: vec![0.0, 1.0],
-            exec: Default::default(),
-            dpu: Default::default(),
-            energy: Default::default(),
-            arch_time_ns: 1000.0,
-            arch_mismatches: 0,
-        };
+        let report = report(1000.0);
         m.record_completion(Duration::from_millis(2), &report);
         m.record_completion(Duration::from_millis(4), &report);
         let s = m.snapshot(Duration::from_secs(1));

@@ -1,5 +1,5 @@
 //! `serve` — the sharded, batching frame-serving layer on top of the
-//! NS-LBP coordinator.
+//! NS-LBP inference engine.
 //!
 //! The seed coordinator is a one-shot, run-to-completion loop; the paper
 //! (and the PISA/LBPNet line of work it extends) frames the accelerator
@@ -17,11 +17,15 @@
 //!   drain semantics.
 //! * [`batcher`] — dynamic batching, shipped at `max_batch` or at the
 //!   `batch_deadline_us` of the oldest queued frame.
-//! * [`shard`] — worker pool; each shard's [`Coordinator`] is pinned to a
-//!   disjoint bank slice ([`crate::coordinator::ShardSlice`]), so shards
-//!   model disjoint compute sub-arrays.  Sharding never changes logits —
-//!   only which banks (and therefore whose modeled time budget) do the
-//!   work; `rust/tests/serve.rs` proves 1-shard vs 4-shard equivalence.
+//! * [`shard`] — worker pool; each shard owns an [`crate::engine::Engine`]
+//!   whose backend is pinned to a disjoint bank slice
+//!   ([`crate::engine::ShardSlice`]), so shards model disjoint compute
+//!   sub-arrays.  Which execution path runs (functional, architectural,
+//!   PJRT) is the engine's backend selection (`system.engine.backend`,
+//!   or `ns-lbp serve-bench --backend ...`).  Sharding never changes
+//!   logits — only which banks (and therefore whose modeled time budget)
+//!   do the work; `rust/tests/serve.rs` proves 1-shard vs 4-shard
+//!   equivalence.
 //! * [`metrics`] — accepted/rejected/completed counters, p50/p95/p99
 //!   latency, throughput, and the energy-per-frame account.
 //!
@@ -41,7 +45,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::ServeConfig;
-use crate::coordinator::{CoordinatorConfig, FrameReport};
+use crate::engine::{EngineConfig, FrameOutput};
 use crate::error::{Error, Result};
 use crate::params::NetParams;
 use crate::sensor::Frame;
@@ -61,8 +65,8 @@ pub struct Request {
 /// A completed inference plus its serving metadata.
 #[derive(Clone, Debug)]
 pub struct InferResponse {
-    /// The coordinator's full per-frame report (logits, energy, stats).
-    pub report: FrameReport,
+    /// The engine's full per-frame output (logits, telemetry).
+    pub report: FrameOutput,
     /// Which shard processed the frame.
     pub shard: usize,
     /// Size of the dispatch batch this frame rode in.
@@ -137,9 +141,10 @@ pub struct Server {
 
 impl Server {
     /// Spin up the pipeline: `config.system.serve` supplies the knobs,
-    /// the rest of `config` (cache geometry, arch-sim switches) is
-    /// inherited by every shard's coordinator.
-    pub fn start(params: NetParams, config: CoordinatorConfig) -> Result<Self> {
+    /// the rest of `config` (cache geometry, arch-sim switches, backend
+    /// selection in `config.system.engine`) is inherited by every
+    /// shard's engine.
+    pub fn start(params: NetParams, config: EngineConfig) -> Result<Self> {
         let serve: ServeConfig = config.system.serve;
         serve.validate()?;
         let requests = Arc::new(BoundedQueue::new(serve.queue_depth));
@@ -267,8 +272,8 @@ mod tests {
         (params, frames)
     }
 
-    fn test_config(shards: usize) -> CoordinatorConfig {
-        let mut config = CoordinatorConfig {
+    fn test_config(shards: usize) -> EngineConfig {
+        let mut config = EngineConfig {
             arch: ArchSim { lbp: false, mlp: false, early_exit: false },
             ..Default::default()
         };

@@ -1,14 +1,15 @@
-//! Shard worker pool: each shard owns a [`Coordinator`] pinned to a
-//! disjoint slice of the cache's banks ([`ShardSlice`]), mirroring the
-//! paper's parallelism model — different frames proceed on different
-//! bank groups, so one hot request cannot monopolize the whole 2.5 MB
-//! slice.  Workers pull *batches* (not single frames) so a shard keeps
-//! its sub-arrays busy across a whole dispatch.
+//! Shard worker pool: each shard owns an [`Engine`] whose backend is
+//! pinned to a disjoint slice of the cache's banks
+//! ([`crate::engine::ShardSlice`]), mirroring the paper's parallelism
+//! model — different frames proceed on different bank groups, so one hot
+//! request cannot monopolize the whole 2.5 MB slice.  Workers pull
+//! *batches* (not single frames) so a shard keeps its sub-arrays busy
+//! across a whole dispatch.
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::coordinator::{Coordinator, CoordinatorConfig, ShardSlice};
+use crate::engine::{Engine, EngineConfig, ShardSlice};
 use crate::error::{Error, Result};
 use crate::params::NetParams;
 
@@ -25,28 +26,33 @@ pub struct ShardPool {
 }
 
 impl ShardPool {
-    /// Build `count` sharded coordinators (erroring early on an invalid
-    /// slice) and spawn one worker thread per shard.
-    pub fn spawn(params: &NetParams, base: &CoordinatorConfig, count: usize,
+    /// Build `count` sharded engines (erroring early on an invalid slice
+    /// or an unavailable backend) and spawn one worker thread per shard.
+    pub fn spawn(params: &NetParams, base: &EngineConfig, count: usize,
                  batches: &Arc<BoundedQueue<Batch>>, metrics: &Arc<Metrics>)
                  -> Result<Self> {
-        let mut coordinators = Vec::with_capacity(count);
+        let mut engines = Vec::with_capacity(count);
         for index in 0..count {
-            let config = CoordinatorConfig {
+            let config = EngineConfig {
                 shard: Some(ShardSlice { index, count }),
                 ..base.clone()
             };
-            coordinators.push(Coordinator::new(params.clone(), config)?);
+            engines.push(
+                Engine::builder()
+                    .config(config)
+                    .params(params.clone())
+                    .build()?,
+            );
         }
-        let workers = coordinators
+        let workers = engines
             .into_iter()
             .enumerate()
-            .map(|(index, coord)| {
+            .map(|(index, engine)| {
                 let batches = Arc::clone(batches);
                 let metrics = Arc::clone(metrics);
                 std::thread::Builder::new()
                     .name(format!("nslbp-shard-{index}"))
-                    .spawn(move || shard_main(index, coord, &batches, &metrics))
+                    .spawn(move || shard_main(index, engine, &batches, &metrics))
                     .map_err(Error::Io)
             })
             .collect::<Result<Vec<_>>>()
@@ -70,14 +76,13 @@ impl ShardPool {
     }
 }
 
-fn shard_main(index: usize, coord: Coordinator,
+fn shard_main(index: usize, mut engine: Engine,
               batches: &BoundedQueue<Batch>, metrics: &Metrics) {
-    let mut handle = coord.frame_handle();
     while let Some(batch) = batches.pop() {
         metrics.record_batch();
         let batch_size = batch.len();
         for req in batch {
-            match handle.process(&req.frame) {
+            match engine.infer_frame(&req.frame) {
                 Ok(report) => {
                     let latency = req.enqueued_at.elapsed();
                     metrics.record_completion(latency, &report);

@@ -1,0 +1,175 @@
+//! Engine-layer integration tests: trait-level backend parity, the
+//! builder's backend/cross-check selection, and end-to-end engine use by
+//! the serving layer — generalizing the earlier ad-hoc 1-vs-4-shard
+//! determinism check into "any two available backends agree on logits".
+
+use ns_lbp::coordinator::{ArchSim, CoordinatorConfig};
+use ns_lbp::engine::{ArchitecturalBackend, BackendKind, Engine, EngineConfig,
+                     FunctionalBackend, InferenceBackend};
+use ns_lbp::params::synth::synth_params;
+use ns_lbp::params::NetParams;
+use ns_lbp::sensor::Frame;
+use ns_lbp::serve::Server;
+use ns_lbp::testing::synth_frames;
+
+fn setup(n: usize, seed: u64) -> (NetParams, Vec<Frame>) {
+    let (_, params) = synth_params(5);
+    let frames = synth_frames(&params, n, seed).unwrap();
+    (params, frames)
+}
+
+/// Trait-level parity: every available backend produces identical logits
+/// (and identical argmax classes) on the same seeded random frames.
+#[test]
+fn functional_and_architectural_backends_agree_on_logits() {
+    let (params, frames) = setup(6, 41);
+    let config = EngineConfig {
+        arch: ArchSim { lbp: true, mlp: true, early_exit: false },
+        ..Default::default()
+    };
+    let mut backends: Vec<Box<dyn InferenceBackend>> = vec![
+        Box::new(FunctionalBackend::new(params.clone(), &config).unwrap()),
+        Box::new(ArchitecturalBackend::new(params.clone(), config.clone())
+            .unwrap()),
+    ];
+    let outputs: Vec<_> = backends
+        .iter_mut()
+        .map(|b| {
+            assert!(b.capabilities().available, "{}", b.kind());
+            b.infer_batch(&frames).unwrap()
+        })
+        .collect();
+    let reference = &outputs[0];
+    for (b, out) in backends.iter().zip(&outputs) {
+        assert_eq!(out.frames.len(), frames.len(), "{}", b.kind());
+        for (r, f) in reference.frames.iter().zip(&out.frames) {
+            assert_eq!(r.seq, f.seq);
+            assert_eq!(r.logits, f.logits,
+                       "backend {} diverges on frame {}", b.kind(), f.seq);
+            assert_eq!(r.predicted, f.predicted);
+        }
+        // the architectural path's internal bit-level check must be clean
+        assert_eq!(out.telemetry().arch_mismatches, 0, "{}", b.kind());
+    }
+    // only the architectural backend models hardware time
+    assert_eq!(outputs[0].telemetry().arch_time_ns, 0.0);
+    assert!(outputs[1].telemetry().arch_time_ns > 0.0);
+}
+
+/// The engine's pluggable cross-check: architectural primary vs
+/// functional reference, zero mismatches, counts present in telemetry.
+#[test]
+fn engine_cross_check_is_clean_and_counted() {
+    let (params, frames) = setup(4, 43);
+    let mut engine = Engine::builder()
+        .params(params)
+        .backend(BackendKind::Architectural)
+        .cross_check(BackendKind::Functional)
+        .build()
+        .unwrap();
+    let out = engine.infer_batch(&frames).unwrap();
+    assert_eq!(out.frames.len(), 4);
+    let t = engine.telemetry();
+    assert_eq!(t.cross_check_frames, 4);
+    assert_eq!(t.cross_check_mismatches, 0);
+    assert_eq!(t.arch_mismatches, 0);
+}
+
+/// Backend selection flows from the config (`engine.backend`), and the
+/// builder override wins over it.
+#[test]
+fn backend_selection_from_config_and_builder() {
+    let (params, frames) = setup(1, 47);
+    let mut config = CoordinatorConfig::default();
+    config.system.engine.backend = BackendKind::Functional;
+    let mut from_config = Engine::builder()
+        .config(config.clone())
+        .params(params.clone())
+        .build()
+        .unwrap();
+    assert_eq!(from_config.kind(), BackendKind::Functional);
+    let mut overridden = Engine::builder()
+        .config(config)
+        .params(params)
+        .backend(BackendKind::Architectural)
+        .build()
+        .unwrap();
+    assert_eq!(overridden.kind(), BackendKind::Architectural);
+    let a = from_config.infer_frame(&frames[0]).unwrap();
+    let b = overridden.infer_frame(&frames[0]).unwrap();
+    assert_eq!(a.logits, b.logits);
+}
+
+/// The serving layer inherits the engine's backend selection: a
+/// functional-backend server and an architectural-backend server return
+/// identical logits on the same frames.
+#[test]
+fn serve_layer_backend_parity() {
+    let (params, frames) = setup(8, 53);
+    let mut logits_by_kind = Vec::new();
+    for kind in [BackendKind::Functional, BackendKind::Architectural] {
+        let mut config = CoordinatorConfig::default();
+        config.system.engine.backend = kind;
+        config.system.serve.shards = 2;
+        config.system.serve.max_batch = 4;
+        config.system.serve.queue_depth = frames.len();
+        let server = Server::start(params.clone(), config).unwrap();
+        let tickets: Vec<_> = frames
+            .iter()
+            .map(|f| server.submit(f.clone()).unwrap())
+            .collect();
+        let mut responses: Vec<_> =
+            tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+        responses.sort_by_key(|r| r.seq());
+        let report = server.drain().unwrap();
+        assert_eq!(report.completed, frames.len() as u64);
+        assert_eq!(report.arch_mismatches, 0);
+        logits_by_kind.push(
+            responses
+                .into_iter()
+                .map(|r| r.report.logits)
+                .collect::<Vec<_>>(),
+        );
+    }
+    assert_eq!(logits_by_kind[0], logits_by_kind[1]);
+}
+
+/// Cross-check mismatch counts surface in the serve metrics report.
+#[test]
+fn serve_layer_reports_cross_check_counts() {
+    let (params, frames) = setup(3, 59);
+    let mut config = CoordinatorConfig::default();
+    config.system.engine.cross_check = Some(BackendKind::Functional);
+    config.system.serve.shards = 1;
+    config.system.serve.queue_depth = frames.len();
+    let server = Server::start(params, config).unwrap();
+    let tickets: Vec<_> = frames
+        .iter()
+        .map(|f| server.submit(f.clone()).unwrap())
+        .collect();
+    for t in tickets {
+        let r = t.wait().unwrap();
+        assert_eq!(r.report.telemetry.cross_check_frames, 1);
+        assert_eq!(r.report.telemetry.cross_check_mismatches, 0);
+    }
+    let report = server.drain().unwrap();
+    assert_eq!(report.cross_checked, 3);
+    assert_eq!(report.cross_check_mismatches, 0);
+}
+
+/// Without the `pjrt` cargo feature the PJRT backend must fail at
+/// build time with the capabilities detail, not on the first frame.
+#[test]
+fn pjrt_selection_fails_early_when_unavailable() {
+    if ns_lbp::runtime::pjrt_available() {
+        return;
+    }
+    let (params, _) = setup(1, 61);
+    let err = Engine::builder()
+        .params(params)
+        .backend(BackendKind::Pjrt)
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unavailable"), "{err}");
+}

@@ -16,7 +16,6 @@ use ns_lbp::params;
 use ns_lbp::rng::Xoshiro256;
 use ns_lbp::runtime::Runtime;
 use ns_lbp::sensor::{Frame, FrameSource, SensorConfig};
-use ns_lbp::sram::SubArray;
 
 const BATCH: usize = 4; // the artifacts' static batch size
 
@@ -125,8 +124,7 @@ fn architectural_path_matches_pjrt_end_to_end() {
         },
     )
     .unwrap();
-    let g = coord.config.system.cache;
-    let mut scratch = SubArray::new(g.rows, g.cols);
+    let mut handle = coord.frame_handle().unwrap();
     let npix = cfg.height * cfg.width * cfg.in_channels;
     for b in 0..BATCH {
         let img = &images[b * npix..(b + 1) * npix];
@@ -134,8 +132,9 @@ fn architectural_path_matches_pjrt_end_to_end() {
         let frame = Frame { rows: cfg.height, cols: cfg.width,
                             channels: cfg.in_channels, pixels: q,
                             seq: b as u64 };
-        let report = coord.process_frame(&frame, &mut scratch).unwrap();
-        assert_eq!(report.arch_mismatches, 0, "frame {b}: arch != functional");
+        let report = handle.process(&frame).unwrap();
+        assert_eq!(report.telemetry.arch_mismatches, 0,
+                   "frame {b}: arch != functional");
         for (a, w) in report.logits.iter().zip(&logits_pjrt[b]) {
             assert!((a - w).abs() <= 1e-4 * w.abs().max(1.0),
                     "frame {b}: arch {a} vs pjrt {w}");

@@ -108,7 +108,7 @@ fn svhn_network_architectural_path_clean() {
     let mut sensor = ReplaySensor::new(scfg, scenes, 1).unwrap();
     let (reports, summary) = coord.run(&mut sensor, 1).unwrap();
     assert_eq!(summary.arch_mismatches, 0);
-    assert!(reports[0].exec.instructions > 10_000); // 8 layers of compares
+    assert!(reports[0].telemetry.exec.instructions > 10_000); // 8 layers of compares
 }
 
 #[test]

@@ -131,7 +131,7 @@ fn shard_determinism_one_vs_four_shards() {
         CoordinatorConfig { arch, ..Default::default() },
     )
     .unwrap();
-    let mut handle = coord.frame_handle();
+    let mut handle = coord.frame_handle().unwrap();
     for r in &one {
         let direct = handle.process(&frames[r.seq() as usize]).unwrap();
         assert_eq!(direct.logits, r.report.logits);
