@@ -13,9 +13,9 @@
 use ns_lbp::bench_harness::Table;
 use ns_lbp::config::SystemConfig;
 use ns_lbp::coordinator::{ArchSim, CoordinatorConfig};
-use ns_lbp::engine::BackendKind;
+use ns_lbp::engine::{BackendKind, QosClass};
 use ns_lbp::params::synth::synth_params;
-use ns_lbp::serve::Server;
+use ns_lbp::serve::{Request, Server};
 use ns_lbp::testing::synth_frames;
 
 fn main() {
@@ -61,7 +61,9 @@ fn main() {
                 .unwrap();
                 let tickets: Vec<_> = frames
                     .iter()
-                    .map(|f| server.submit(f.clone()).unwrap())
+                    .map(|f| {
+                        server.submit(Request::from_frame(f.clone())).unwrap()
+                    })
                     .collect();
                 for t in tickets {
                     t.wait().unwrap();
@@ -86,4 +88,56 @@ fn main() {
     std::fs::create_dir_all("artifacts/results").ok();
     table.write_tsv("artifacts/results/serve_throughput.tsv").unwrap();
     println!("\nwrote artifacts/results/serve_throughput.tsv");
+
+    // routed two-class scenario: cheap best-effort traffic on the
+    // functional path, billed traffic on the architectural path, both
+    // through one server — the class-differentiated near-sensor split
+    println!("\nrouted two-class (best_effort=functional, \
+              billed=architectural):");
+    let mut system = SystemConfig::default();
+    system.serve.shards = if fast { 2 } else { 4 };
+    system.serve.max_batch = 8;
+    system.serve.queue_depth = n_frames * 2;
+    // shallow best-effort queue so the drop-oldest admission policy is
+    // actually exercised under the open-loop replay
+    system.serve.classes[QosClass::BestEffort.index()].queue_depth = Some(8);
+    system.engine.routing
+        .set(QosClass::BestEffort, BackendKind::Functional);
+    system.engine.routing
+        .set(QosClass::Billed, BackendKind::Architectural);
+    let shards = system.serve.shards;
+    let server = Server::start(
+        params.clone(),
+        CoordinatorConfig {
+            system,
+            arch: ArchSim { lbp: true, mlp: false, early_exit: false },
+            shard: None,
+        },
+    )
+    .unwrap();
+    let cheap = server.session(0).with_class(QosClass::BestEffort);
+    let billed = server.session(1).with_class(QosClass::Billed);
+    let tickets: Vec<_> = frames
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let session = if i % 2 == 0 { &cheap } else { &billed };
+            session.submit(f.clone()).unwrap()
+        })
+        .collect();
+    drop(cheap);
+    drop(billed);
+    let mut shed = 0u64;
+    for t in tickets {
+        match t.wait() {
+            Ok(_) => {}
+            // drop-oldest shedding under open-loop load; anything else
+            // is a real failure
+            Err(ns_lbp::Error::Dropped(_)) => shed += 1,
+            Err(e) => panic!("serve error: {e}"),
+        }
+    }
+    let r = server.drain().unwrap();
+    r.print(&format!("{shards} shard(s), routed"));
+    println!("  (drop-oldest shed {shed} best-effort tickets)");
 }

@@ -1,0 +1,92 @@
+//! QoS-routed serving: two sensor streams with different service
+//! classes fan into one server — always-on best-effort pixels ride the
+//! cheap functional path with drop-oldest admission, billed frames ride
+//! the fully accounted architectural path — and the final report breaks
+//! latency and drop/reject counts down per class.
+//!
+//! ```bash
+//! cargo run --release --example serve_qos
+//! ```
+
+use std::time::Duration;
+
+use ns_lbp::coordinator::{ArchSim, CoordinatorConfig};
+use ns_lbp::engine::{BackendKind, QosClass};
+use ns_lbp::params;
+use ns_lbp::serve::Server;
+use ns_lbp::testing::synth_frames;
+
+fn main() -> ns_lbp::Result<()> {
+    // 1. network parameters (synthetic fallback keeps the example
+    //    runnable from a bare checkout)
+    let params = match params::load("artifacts/mnist.params.bin") {
+        Ok(p) => p,
+        Err(_) => {
+            println!("artifacts missing — using a synthetic network \
+                      (run `make artifacts` for the real one)");
+            params::synth::synth_params(7).1
+        }
+    };
+
+    // 2. a server with class-differentiated routing: best-effort pixels
+    //    on the functional path, billed output on the architectural one
+    let mut config = CoordinatorConfig {
+        arch: ArchSim { lbp: true, mlp: false, early_exit: false },
+        ..Default::default()
+    };
+    config.system.serve.shards = 2;
+    config.system.serve.max_batch = 8;
+    config.system.serve.queue_depth = 128;
+    config.system.engine.routing
+        .set(QosClass::BestEffort, BackendKind::Functional);
+    config.system.engine.routing
+        .set(QosClass::Billed, BackendKind::Architectural);
+    let server = Server::start(params.clone(), config)?;
+
+    // 3. two sensor streams, each with its own session (and therefore
+    //    its own sequence space), different classes and freshness bounds
+    let doorbell = server
+        .session(0)
+        .with_class(QosClass::BestEffort)
+        .with_deadline(Duration::from_millis(50)); // stale pixels are waste
+    let turnstile = server.session(1).with_class(QosClass::Billed);
+
+    let frames = synth_frames(&params, 32, 42)?;
+    let mut tickets = Vec::new();
+    for frame in &frames {
+        tickets.push(doorbell.submit(frame.clone())?);
+        tickets.push(turnstile.submit(frame.clone())?);
+    }
+    drop(doorbell);
+    drop(turnstile);
+
+    // 4. tickets resolve to typed responses (or drop errors for shed
+    //    best-effort frames); wait_timeout bounds every wait
+    let mut shed = 0u32;
+    for ticket in tickets {
+        match ticket.wait_timeout(Duration::from_secs(10)) {
+            Some(Ok(r)) => {
+                if r.seq() < 2 {
+                    println!(
+                        "sensor {} seq {} [{} → {}]: predicted {} in \
+                         {:.2} ms (batch of {}, shard {})",
+                        r.sensor_id, r.seq(), r.class, r.backend,
+                        r.predicted(), r.latency.as_secs_f64() * 1e3,
+                        r.batch_size, r.shard
+                    );
+                }
+            }
+            Some(Err(ns_lbp::Error::Dropped(_))) => shed += 1,
+            Some(Err(e)) => println!("serve error: {e}"),
+            None => println!("a ticket timed out (wedged shard?)"),
+        }
+    }
+    if shed > 0 {
+        println!("{shed} best-effort frames shed (drop-oldest/deadline)");
+    }
+
+    // 5. the drained report carries the per-class breakdown
+    let report = server.drain()?;
+    report.print("qos-routed example");
+    Ok(())
+}

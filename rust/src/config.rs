@@ -14,7 +14,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::engine::BackendKind;
+use crate::engine::{BackendKind, QosClass, RoutingPolicy};
 use crate::error::{Error, Result};
 
 /// A parsed scalar or array value.
@@ -229,6 +229,9 @@ pub struct EngineSelection {
     /// `artifacts_dir` (the CLI derives `aplbp_<dataset>` from
     /// `--dataset`).
     pub pjrt_artifact: String,
+    /// Per-QoS-class backend routing (`[engine.routing]`, `--route`);
+    /// unrouted classes run on `backend`.
+    pub routing: RoutingPolicy,
 }
 
 impl Default for EngineSelection {
@@ -237,7 +240,42 @@ impl Default for EngineSelection {
             backend: BackendKind::default(),
             cross_check: None,
             pjrt_artifact: "aplbp_mnist".into(),
+            routing: RoutingPolicy::default(),
         }
+    }
+}
+
+/// Per-QoS-class overrides of the `[serve]` defaults, written as
+/// `[serve.best_effort]` / `[serve.standard]` / `[serve.billed]`
+/// sections.  Unset fields fall back to the class-independent knobs
+/// (except `drop_oldest`, whose default is class-dependent: sensor-style
+/// best-effort traffic prefers fresh frames).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassPolicy {
+    /// Admission depth for this class's queue.
+    pub queue_depth: Option<usize>,
+    /// Batch-size trigger for this class's batcher.
+    pub max_batch: Option<usize>,
+    /// Batch-deadline trigger for this class's batcher [µs].
+    pub deadline_us: Option<u64>,
+    /// Full queue: displace the oldest queued request (true) or reject
+    /// the new one (false).
+    pub drop_oldest: Option<bool>,
+}
+
+/// Fully resolved per-class serving knobs (see
+/// [`ServeConfig::class_knobs`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClassKnobs {
+    pub queue_depth: usize,
+    pub max_batch: usize,
+    pub deadline_us: u64,
+    pub drop_oldest: bool,
+}
+
+impl ClassKnobs {
+    pub fn deadline(&self) -> std::time::Duration {
+        std::time::Duration::from_micros(self.deadline_us)
     }
 }
 
@@ -252,12 +290,15 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// ... or once the oldest queued frame is this old [µs].
     pub batch_deadline_us: u64,
+    /// Per-class overrides, indexed by [`QosClass::index`].
+    pub classes: [ClassPolicy; QosClass::COUNT],
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self { shards: 4, queue_depth: 256, max_batch: 16,
-               batch_deadline_us: 2000 }
+               batch_deadline_us: 2000,
+               classes: [ClassPolicy::default(); QosClass::COUNT] }
     }
 }
 
@@ -272,11 +313,40 @@ impl ServeConfig {
         if self.max_batch == 0 {
             return Err(Error::Config("serve.max_batch must be >= 1".into()));
         }
+        for class in QosClass::ALL {
+            let k = self.class_knobs(class);
+            if k.queue_depth == 0 {
+                return Err(Error::Config(format!(
+                    "serve.{}.queue_depth must be >= 1", class
+                )));
+            }
+            if k.max_batch == 0 {
+                return Err(Error::Config(format!(
+                    "serve.{}.max_batch must be >= 1", class
+                )));
+            }
+        }
         Ok(())
     }
 
     pub fn batch_deadline(&self) -> std::time::Duration {
         std::time::Duration::from_micros(self.batch_deadline_us)
+    }
+
+    /// Resolve the effective knobs for one class: explicit per-class
+    /// values win, then the class-independent `[serve]` defaults.
+    /// `drop_oldest` defaults to true only for best-effort (always-on
+    /// sensor streams prefer fresh frames over queue completeness).
+    pub fn class_knobs(&self, class: QosClass) -> ClassKnobs {
+        let p = self.classes[class.index()];
+        ClassKnobs {
+            queue_depth: p.queue_depth.unwrap_or(self.queue_depth),
+            max_batch: p.max_batch.unwrap_or(self.max_batch),
+            deadline_us: p.deadline_us.unwrap_or(self.batch_deadline_us),
+            drop_oldest: p
+                .drop_oldest
+                .unwrap_or(class == QosClass::BestEffort),
+        }
     }
 }
 
@@ -326,7 +396,15 @@ impl SystemConfig {
             "sensor.adc_bits", "sensor.skip_lsbs", "sensor.fps",
             "serve.shards", "serve.queue_depth", "serve.max_batch",
             "serve.batch_deadline_us",
+            "serve.best_effort.queue_depth", "serve.best_effort.max_batch",
+            "serve.best_effort.deadline_us", "serve.best_effort.drop_oldest",
+            "serve.standard.queue_depth", "serve.standard.max_batch",
+            "serve.standard.deadline_us", "serve.standard.drop_oldest",
+            "serve.billed.queue_depth", "serve.billed.max_batch",
+            "serve.billed.deadline_us", "serve.billed.drop_oldest",
             "engine.backend", "engine.cross_check", "engine.pjrt_artifact",
+            "engine.routing.best_effort", "engine.routing.standard",
+            "engine.routing.billed",
             "runtime.workers", "runtime.artifacts_dir",
         ];
         for key in file.keys() {
@@ -383,6 +461,28 @@ impl SystemConfig {
         };
         sensor.validate()?;
 
+        let mut classes = [ClassPolicy::default(); QosClass::COUNT];
+        for class in QosClass::ALL {
+            let p = &mut classes[class.index()];
+            let key = |field: &str| format!("serve.{class}.{field}");
+            let depth_key = key("queue_depth");
+            if file.contains(&depth_key) {
+                p.queue_depth = Some(file.get_usize(&depth_key, 0)?);
+            }
+            let batch_key = key("max_batch");
+            if file.contains(&batch_key) {
+                p.max_batch = Some(file.get_usize(&batch_key, 0)?);
+            }
+            let deadline_key = key("deadline_us");
+            if file.contains(&deadline_key) {
+                p.deadline_us =
+                    Some(file.get_usize(&deadline_key, 0)? as u64);
+            }
+            let drop_key = key("drop_oldest");
+            if file.contains(&drop_key) {
+                p.drop_oldest = Some(file.get_bool(&drop_key, false)?);
+            }
+        }
         let serve = ServeConfig {
             shards: file.get_usize("serve.shards", d.serve.shards)?,
             queue_depth: file
@@ -391,9 +491,19 @@ impl SystemConfig {
             batch_deadline_us: file
                 .get_usize("serve.batch_deadline_us",
                            d.serve.batch_deadline_us as usize)? as u64,
+            classes,
         };
         serve.validate()?;
 
+        let mut routing = RoutingPolicy::default();
+        for class in QosClass::ALL {
+            let key = format!("engine.routing.{class}");
+            if let Some(kind) = BackendKind::parse_optional(
+                &file.get_str(&key, "none")?,
+            )? {
+                routing.set(class, kind);
+            }
+        }
         let engine = EngineSelection {
             backend: file
                 .get_str("engine.backend", d.engine.backend.as_str())?
@@ -404,6 +514,7 @@ impl SystemConfig {
             )?)?,
             pjrt_artifact: file
                 .get_str("engine.pjrt_artifact", &d.engine.pjrt_artifact)?,
+            routing,
         };
 
         Ok(Self {
@@ -527,6 +638,58 @@ mod tests {
         assert_eq!(sc.engine.pjrt_artifact, "aplbp_svhn");
 
         let bad = ConfigFile::parse("[engine]\nbackend = \"warp\"").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn routing_section_parses_per_class_backends() {
+        let f = ConfigFile::parse(
+            "[engine.routing]\nbest_effort = \"functional\"\n\
+             billed = \"architectural\"",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(sc.engine.routing.route(QosClass::BestEffort),
+                   Some(BackendKind::Functional));
+        assert_eq!(sc.engine.routing.route(QosClass::Standard), None);
+        assert_eq!(sc.engine.routing.route(QosClass::Billed),
+                   Some(BackendKind::Architectural));
+
+        let off = ConfigFile::parse("[engine.routing]\nbilled = \"none\"")
+            .unwrap();
+        let sc = SystemConfig::from_file(&off).unwrap();
+        assert!(sc.engine.routing.is_empty());
+
+        let bad = ConfigFile::parse("[engine.routing]\ngold = \"functional\"")
+            .unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn per_class_serve_knobs_resolve_with_fallbacks() {
+        let f = ConfigFile::parse(
+            "[serve]\nqueue_depth = 64\nmax_batch = 8\n\
+             batch_deadline_us = 1000\n\
+             [serve.best_effort]\nqueue_depth = 4\ndeadline_us = 100\n\
+             [serve.billed]\nmax_batch = 32\ndrop_oldest = true",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        let be = sc.serve.class_knobs(QosClass::BestEffort);
+        assert_eq!(be.queue_depth, 4);
+        assert_eq!(be.max_batch, 8); // falls back to [serve]
+        assert_eq!(be.deadline_us, 100);
+        assert!(be.drop_oldest); // best-effort default
+        let std_k = sc.serve.class_knobs(QosClass::Standard);
+        assert_eq!(std_k.queue_depth, 64);
+        assert!(!std_k.drop_oldest);
+        let billed = sc.serve.class_knobs(QosClass::Billed);
+        assert_eq!(billed.max_batch, 32);
+        assert_eq!(billed.deadline_us, 1000);
+        assert!(billed.drop_oldest); // explicit override
+
+        let bad =
+            ConfigFile::parse("[serve.standard]\nmax_batch = 0").unwrap();
         assert!(SystemConfig::from_file(&bad).is_err());
     }
 

@@ -14,6 +14,16 @@
 //! Which pieces are simulated is controlled by `EngineConfig::arch`
 //! ([`super::ArchSim`]); the modeled accelerator time assumes the
 //! configured shard's sub-array budget (`EngineConfig::subarray_budget`).
+//!
+//! The batch path is where the paper's parallelism pays off: all frames
+//! of one `infer_batch` call gather their LBP comparison lanes into a
+//! *shared* lane list, so one Algorithm-1 pass over the sub-array fleet
+//! packs lanes (and, at the tail of each frame's lane list, whole
+//! chunks) from multiple frames.  The modeled time counts
+//! `ceil(total_chunks / subarray_budget)` fleet passes for the whole
+//! batch instead of per frame — batching a near-empty fleet amortizes to
+//! a fraction of the per-frame cost, while logits stay bit-identical to
+//! the per-frame path (chunk boundaries never change lane results).
 
 use crate::dpu::Dpu;
 use crate::energy::EnergyModel;
@@ -55,14 +65,17 @@ impl ArchitecturalBackend {
         self.config.subarray_budget()
     }
 
-    /// Run one frame (borrow-splitting wrapper around the core logic).
+    /// Single-frame convenience wrapper around the batch path (a batch
+    /// of one chunks and times exactly like the historical per-frame
+    /// loop).
     pub fn infer_frame(&mut self, frame: &Frame) -> Result<FrameOutput> {
-        let core = ArchCore {
-            params: &self.params,
-            config: &self.config,
-            energy_model: &self.energy_model,
-        };
-        core.process(frame, &mut self.scratch)
+        let out = self.infer_batch(std::slice::from_ref(frame))?;
+        out.frames.into_iter().next().ok_or_else(|| {
+            crate::error::Error::Engine(
+                "architectural backend returned no output for the frame"
+                    .into(),
+            )
+        })
     }
 }
 
@@ -82,12 +95,25 @@ impl InferenceBackend for ArchitecturalBackend {
     }
 
     fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
-        let mut out = Vec::with_capacity(frames.len());
-        for frame in frames {
-            out.push(self.infer_frame(frame)?);
-        }
-        Ok(BackendOutput { frames: out })
+        let core = ArchCore {
+            params: &self.params,
+            config: &self.config,
+            energy_model: &self.energy_model,
+        };
+        Ok(BackendOutput { frames: core.process_batch(frames,
+                                                      &mut self.scratch)? })
     }
+}
+
+/// Per-frame accumulator threaded through the batched layers: ISA
+/// activity, DPU counters, bit-level divergences, and this frame's share
+/// of the modeled fleet time.
+#[derive(Default)]
+struct FrameAcc {
+    exec: ExecStats,
+    dpu: Dpu,
+    mismatches: u64,
+    arch_time_ns: f64,
 }
 
 /// Shared-state view used while the scratch sub-array is mutably borrowed.
@@ -126,69 +152,110 @@ impl ArchCore<'_> {
         pairs
     }
 
-    /// One LBP layer on the architectural path; returns the joint output
-    /// and the number of bit mismatches against the functional path.
-    fn lbp_layer_arch(&self, x: &TensorU8, layer: &LbpLayer,
-                      scratch: &mut SubArray, map: &LbpSubarrayMap,
-                      exec: &mut ExecStats, dpu: &mut Dpu)
-                      -> Result<(TensorU8, u64, f64)> {
+    /// One LBP layer on the architectural path, over *every* frame of the
+    /// batch at once.  All frames' comparison lanes concatenate into one
+    /// shared lane list before chunking, so a single ≤`cols`-lane
+    /// sub-array pass can pack lanes from more than one frame, and the
+    /// fleet-pass count (the modeled-time unit) is amortized batch-wide.
+    /// Returns every frame's joint output tensor; ISA activity is
+    /// attributed to the frame owning each chunk's first lane, modeled
+    /// time is split evenly (frames are shape-identical, so their lane
+    /// counts are equal).
+    ///
+    /// Attribution granularity: when a frame's lane count is not a
+    /// multiple of `cols`, a straddling chunk's stats (and therefore a
+    /// sliver of per-frame energy) land on its first-lane owner — batch
+    /// *totals* are exact, per-frame splits are chunk-granular.  Callers
+    /// needing exact per-frame accounting should submit frames
+    /// individually (`infer_frame` is bit- and stat-identical to the
+    /// historical per-frame path).
+    fn lbp_layer_arch_batch(&self, xs: &[TensorU8], layer: &LbpLayer,
+                            scratch: &mut SubArray, map: &LbpSubarrayMap,
+                            accs: &mut [FrameAcc]) -> Result<Vec<TensorU8>> {
         let cfg = &self.params.config;
         let apx = cfg.apx_code;
         let samples = cfg.e - apx;
-        let pairs = self.gather_pairs(x, layer);
         let cols = scratch.cols();
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
 
-        // run Algorithm 1 per ≤cols-lane batch on the scratch sub-array
+        // one shared lane list for the whole batch
+        let mut pairs: Vec<(u8, u8)> = Vec::new();
+        let mut frame_ends = Vec::with_capacity(xs.len());
+        for x in xs {
+            pairs.extend(self.gather_pairs(x, layer));
+            frame_ends.push(pairs.len());
+        }
+
+        // run Algorithm 1 per ≤cols-lane chunk on the scratch sub-array;
+        // chunks are cut from the shared list, not per frame
         let mut bits = Vec::with_capacity(pairs.len());
-        let mut batches = 0u64;
+        let mut chunks = 0u64;
+        let mut lane_base = 0usize;
+        let mut owner = 0usize;
         for chunk in pairs.chunks(cols) {
+            while lane_base >= frame_ends[owner] {
+                owner += 1;
+            }
+            let acc = &mut accs[owner];
             map.load_lanes(scratch, 0, chunk)?;
-            exec.row_writes += 2 * map.bits as u64; // transposed lane load
-            exec.cycles += 2 * map.bits as u64;
+            acc.exec.row_writes += 2 * map.bits as u64; // transposed load
+            acc.exec.cycles += 2 * map.bits as u64;
             let mut ex = Executor::new(scratch);
             let out = parallel_compare(&mut ex, map, 0, chunk.len(),
                                        cfg.apx_pixel,
                                        self.config.arch.early_exit)?;
-            exec.merge(&ex.stats);
+            acc.exec.merge(&ex.stats);
             bits.extend(out.bits);
-            batches += 1;
+            chunks += 1;
+            lane_base += chunk.len();
         }
 
-        // assemble codes in the same lane order and cross-check
-        let k_n = layer.offsets.len();
-        let mut out = TensorU8::zeros(x.h, x.w, x.c + k_n);
-        let mut mismatches = 0u64;
-        let mut lane = 0usize;
-        for y in 0..x.h {
-            for xx in 0..x.w {
-                for ch in 0..x.c {
-                    out.set(y, xx, ch, x.get(y, xx, ch));
-                }
-                for k in 0..k_n {
-                    let mut code = 0u32;
-                    for n in 0..samples {
-                        if bits[lane + n] {
-                            code |= 1 << (n + apx);
-                        }
-                    }
-                    lane += samples;
-                    let want = model::lbp_code(x, layer, k, y, xx, apx);
-                    if code != want {
-                        mismatches += 1;
-                    }
-                    out.set(y, xx, x.c + k,
-                            dpu.shifted_relu_u8(code, cfg.e as u32));
-                }
-            }
-        }
-
-        // modeled time: batches spread across this shard's sub-arrays
+        // modeled time: the whole batch shares ceil(chunks / budget)
+        // fleet passes — the parallel-LBP amortization
         let subarrays = self.subarray_budget() as f64;
         let cycles_per_batch = (2.0 * map.bits as f64)
             + 4.0 + 7.0 * (map.bits - cfg.apx_pixel) as f64 + 3.0;
-        let time_ns = (batches as f64 / subarrays).ceil() * cycles_per_batch
-            * self.energy_model.cycle_ns();
-        Ok((out, mismatches, time_ns))
+        let layer_time_ns = (chunks as f64 / subarrays).ceil()
+            * cycles_per_batch * self.energy_model.cycle_ns();
+        let share_ns = layer_time_ns / xs.len() as f64;
+        for acc in accs.iter_mut() {
+            acc.arch_time_ns += share_ns;
+        }
+
+        // split the bit stream back per frame; assemble codes in the
+        // same lane order and cross-check against the functional math
+        let k_n = layer.offsets.len();
+        let mut outs = Vec::with_capacity(xs.len());
+        let mut lane = 0usize;
+        for (x, acc) in xs.iter().zip(accs.iter_mut()) {
+            let mut out = TensorU8::zeros(x.h, x.w, x.c + k_n);
+            for y in 0..x.h {
+                for xx in 0..x.w {
+                    for ch in 0..x.c {
+                        out.set(y, xx, ch, x.get(y, xx, ch));
+                    }
+                    for k in 0..k_n {
+                        let mut code = 0u32;
+                        for s in 0..samples {
+                            if bits[lane + s] {
+                                code |= 1 << (s + apx);
+                            }
+                        }
+                        lane += samples;
+                        let want = model::lbp_code(x, layer, k, y, xx, apx);
+                        if code != want {
+                            acc.mismatches += 1;
+                        }
+                        out.set(y, xx, x.c + k,
+                                acc.dpu.shifted_relu_u8(code, cfg.e as u32));
+                    }
+                }
+            }
+            outs.push(out);
+        }
+        Ok(outs)
     }
 
     /// In-memory MLP layer (architectural); returns raw integer accums and
@@ -233,101 +300,115 @@ impl ArchCore<'_> {
         Ok((accs, mismatches, time_ns))
     }
 
-    /// Process one digitized frame.
-    fn process(&self, frame: &Frame, scratch: &mut SubArray)
-               -> Result<FrameOutput> {
+    /// Process a whole batch of digitized frames, sharing sub-array
+    /// passes across frames in the LBP stage.
+    fn process_batch(&self, frames: &[Frame], scratch: &mut SubArray)
+                     -> Result<Vec<FrameOutput>> {
         let cfg = &self.params.config;
-        let mut x = super::digitize(frame, cfg)?;
+        let mut xs = Vec::with_capacity(frames.len());
+        for frame in frames {
+            xs.push(super::digitize(frame, cfg)?);
+        }
         let map = LbpSubarrayMap::new(self.config.system.cache.region, 8)?;
-        let mut exec = ExecStats::default();
-        let mut dpu = Dpu::default();
-        let mut mismatches = 0u64;
-        let mut arch_time_ns = 0.0;
+        let mut accs: Vec<FrameAcc> =
+            (0..frames.len()).map(|_| FrameAcc::default()).collect();
 
-        // --- LBP layers -----------------------------------------------------
+        // --- LBP layers (batched across frames) ------------------------------
         for layer in &self.params.lbp_layers {
             if self.config.arch.lbp {
-                let (nx, mm, t) =
-                    self.lbp_layer_arch(&x, layer, scratch, &map, &mut exec,
-                                        &mut dpu)?;
-                mismatches += mm;
-                arch_time_ns += t;
-                x = nx;
+                xs = self.lbp_layer_arch_batch(&xs, layer, scratch, &map,
+                                               &mut accs)?;
             } else {
-                x = model::lbp_layer_forward(&x, layer, cfg.e, cfg.apx_code,
-                                             &mut dpu);
-            }
-        }
-
-        // --- pooling + quantization (DPU) ------------------------------------
-        let s = cfg.pool;
-        let vmax = (255 * s * s) as u32;
-        let (ph, pw) = (x.h / s, x.w / s);
-        let mut feats = Vec::with_capacity(ph * pw * x.c);
-        for py in 0..ph {
-            for px in 0..pw {
-                for ch in 0..x.c {
-                    let mut sum = 0u32;
-                    for dy in 0..s {
-                        for dx in 0..s {
-                            sum += x.get(py * s + dy, px * s + dx, ch) as u32;
-                        }
-                    }
-                    feats.push(dpu.quantize_pooled(sum, vmax,
-                                                   cfg.act_bits as u32)?);
+                for (x, acc) in xs.iter_mut().zip(accs.iter_mut()) {
+                    *x = model::lbp_layer_forward(x, layer, cfg.e,
+                                                  cfg.apx_code, &mut acc.dpu);
                 }
             }
         }
 
-        // --- MLP --------------------------------------------------------------
-        let logits = if self.config.arch.mlp {
-            let mmap = MlpSubarrayMap::new(map, cfg.act_bits, cfg.w_bits)?;
-            let (acc1, mm1, t1) =
-                self.mlp_layer_arch(&feats, &self.params.mlp1, scratch, &mmap,
-                                    &mut exec, &mut dpu)?;
-            mismatches += mm1;
-            arch_time_ns += t1;
-            let hidden: Vec<u8> = acc1.iter().enumerate()
-                .map(|(o, &h)| dpu.activation(h, self.params.mlp1.scale[o],
-                                              self.params.mlp1.bias[o],
-                                              cfg.act_bits as u32))
-                .collect();
-            let (acc2, mm2, t2) =
-                self.mlp_layer_arch(&hidden, &self.params.mlp2, scratch, &mmap,
-                                    &mut exec, &mut dpu)?;
-            mismatches += mm2;
-            arch_time_ns += t2;
-            acc2.iter().enumerate()
-                .map(|(o, &h)| dpu.affine(h, self.params.mlp2.scale[o],
-                                          self.params.mlp2.bias[o]))
-                .collect()
+        // the MLP map consumes the LBP map; build it once per batch
+        let mmap = if self.config.arch.mlp {
+            Some(MlpSubarrayMap::new(map, cfg.act_bits, cfg.w_bits)?)
         } else {
-            model::mlp_forward(self.params, &feats, &mut dpu)?
+            None
         };
 
-        // --- energy ------------------------------------------------------------
-        let mut energy = self.energy_model.exec_energy(&exec);
-        energy.add(&self.energy_model.dpu_energy(&dpu.stats));
-        let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
-        energy.add(&self.energy_model.sensor_energy(
-            pixels,
-            (8 - cfg.apx_pixel) as u64,
-        ));
+        let mut outputs = Vec::with_capacity(frames.len());
+        for ((frame, x), acc) in
+            frames.iter().zip(&xs).zip(accs.iter_mut())
+        {
+            // --- pooling + quantization (DPU) --------------------------------
+            let s = cfg.pool;
+            let vmax = (255 * s * s) as u32;
+            let (ph, pw) = (x.h / s, x.w / s);
+            let mut feats = Vec::with_capacity(ph * pw * x.c);
+            for py in 0..ph {
+                for px in 0..pw {
+                    for ch in 0..x.c {
+                        let mut sum = 0u32;
+                        for dy in 0..s {
+                            for dx in 0..s {
+                                sum += x.get(py * s + dy, px * s + dx, ch)
+                                    as u32;
+                            }
+                        }
+                        feats.push(acc.dpu.quantize_pooled(
+                            sum, vmax, cfg.act_bits as u32)?);
+                    }
+                }
+            }
 
-        Ok(FrameOutput {
-            seq: frame.seq,
-            predicted: model::argmax(&logits),
-            logits,
-            features: Some(feats),
-            telemetry: Telemetry {
-                exec,
-                dpu: dpu.stats,
-                energy,
-                arch_time_ns,
-                arch_mismatches: mismatches,
-                ..Default::default()
-            },
-        })
+            // --- MLP ---------------------------------------------------------
+            let logits = if let Some(mmap) = mmap.as_ref() {
+                let (acc1, mm1, t1) =
+                    self.mlp_layer_arch(&feats, &self.params.mlp1, scratch,
+                                        mmap, &mut acc.exec, &mut acc.dpu)?;
+                acc.mismatches += mm1;
+                acc.arch_time_ns += t1;
+                let hidden: Vec<u8> = acc1.iter().enumerate()
+                    .map(|(o, &h)| acc.dpu.activation(
+                        h, self.params.mlp1.scale[o],
+                        self.params.mlp1.bias[o], cfg.act_bits as u32))
+                    .collect();
+                let (acc2, mm2, t2) =
+                    self.mlp_layer_arch(&hidden, &self.params.mlp2, scratch,
+                                        mmap, &mut acc.exec, &mut acc.dpu)?;
+                acc.mismatches += mm2;
+                acc.arch_time_ns += t2;
+                acc2.iter().enumerate()
+                    .map(|(o, &h)| acc.dpu.affine(
+                        h, self.params.mlp2.scale[o],
+                        self.params.mlp2.bias[o]))
+                    .collect()
+            } else {
+                model::mlp_forward(self.params, &feats, &mut acc.dpu)?
+            };
+
+            // --- energy ------------------------------------------------------
+            let mut energy = self.energy_model.exec_energy(&acc.exec);
+            energy.add(&self.energy_model.dpu_energy(&acc.dpu.stats));
+            let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
+            energy.add(&self.energy_model.sensor_energy(
+                pixels,
+                (8 - cfg.apx_pixel) as u64,
+            ));
+
+            outputs.push(FrameOutput {
+                seq: frame.seq,
+                predicted: model::argmax(&logits),
+                logits,
+                features: Some(feats),
+                telemetry: Telemetry {
+                    exec: std::mem::take(&mut acc.exec),
+                    dpu: acc.dpu.stats,
+                    energy,
+                    arch_time_ns: acc.arch_time_ns,
+                    arch_mismatches: acc.mismatches,
+                    ..Default::default()
+                },
+            });
+        }
+        Ok(outputs)
     }
 }
 
@@ -382,5 +463,35 @@ mod tests {
         let bad = Frame { rows: 5, cols: 5, channels: 1, pixels: vec![0; 25],
                           seq: 0 };
         assert!(b.infer_frame(&bad).is_err());
+    }
+
+    #[test]
+    fn batched_frames_share_fleet_passes_with_identical_logits() {
+        let (_, params) = synth_params(5);
+        let frames = synth_frames(&params, 4, 37).unwrap();
+        let arch = ArchSim { lbp: true, mlp: false, early_exit: false };
+        let mut b = backend(arch, None);
+        let singles: Vec<FrameOutput> = frames
+            .iter()
+            .map(|f| b.infer_frame(f).unwrap())
+            .collect();
+        let batched = b.infer_batch(&frames).unwrap();
+        assert_eq!(batched.frames.len(), frames.len());
+        for (s, f) in singles.iter().zip(&batched.frames) {
+            assert_eq!(s.seq, f.seq);
+            assert_eq!(s.logits, f.logits, "frame {}", f.seq);
+            assert_eq!(f.telemetry.arch_mismatches, 0);
+        }
+        // the whole batch shares fleet passes: its modeled time must be
+        // well under the sum of the per-frame runs (4x18 chunks/layer all
+        // fit a single 320-sub-array pass under the default geometry)
+        let sum_single: f64 =
+            singles.iter().map(|r| r.telemetry.arch_time_ns).sum();
+        let batched_total = batched.telemetry().arch_time_ns;
+        assert!(batched_total > 0.0);
+        assert!(
+            batched_total < 0.5 * sum_single,
+            "no amortization: batched {batched_total} vs {sum_single}"
+        );
     }
 }

@@ -15,6 +15,12 @@ use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
 /// integer MLP, exactly as `python/compile/model.py` specifies them.
 /// DPU activity and sensor readout energy are accounted; there is no
 /// cycle model (`Telemetry::arch_time_ns` stays 0).
+///
+/// The batch path is vectorized: LBP feature extraction runs per frame,
+/// then both MLP layers run weight-stationary over the whole batch
+/// ([`model::mlp_forward_batch`]) — the weight matrices stream through
+/// the cache once per batch instead of once per frame, with bit-identical
+/// logits and per-frame DPU counters.
 pub struct FunctionalBackend {
     params: NetParams,
     energy_model: EnergyModel,
@@ -26,31 +32,6 @@ impl FunctionalBackend {
         let mut energy_model = EnergyModel::default();
         energy_model.params.freq_ghz = config.system.circuit.freq_ghz;
         Ok(Self { params, energy_model })
-    }
-
-    fn infer_frame(&self, frame: &Frame) -> Result<FrameOutput> {
-        let cfg = self.params.config;
-        let image = super::digitize(frame, &cfg)?;
-
-        let mut dpu = Dpu::default();
-        let feats = model::forward_lbp(&self.params, &image, &mut dpu)?;
-        let logits = model::mlp_forward(&self.params, &feats, &mut dpu)?;
-
-        let mut energy = self.energy_model.dpu_energy(&dpu.stats);
-        let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
-        energy.add(&self.energy_model.sensor_energy(
-            pixels,
-            (8 - cfg.apx_pixel) as u64,
-        ));
-
-        Ok(FrameOutput {
-            seq: frame.seq,
-            predicted: model::argmax(&logits),
-            logits,
-            features: Some(feats),
-            telemetry: Telemetry { dpu: dpu.stats, energy,
-                                   ..Default::default() },
-        })
     }
 }
 
@@ -70,10 +51,46 @@ impl InferenceBackend for FunctionalBackend {
     }
 
     fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
-        let mut out = Vec::with_capacity(frames.len());
+        let cfg = self.params.config;
+
+        // stage 1 (per frame): digitize + LBP layers + pooled features
+        let mut dpus: Vec<Dpu> = Vec::with_capacity(frames.len());
+        let mut feats_batch: Vec<Vec<u8>> = Vec::with_capacity(frames.len());
         for frame in frames {
-            out.push(self.infer_frame(frame)?);
+            let image = super::digitize(frame, &cfg)?;
+            let mut dpu = Dpu::default();
+            feats_batch.push(model::forward_lbp(&self.params, &image,
+                                                &mut dpu)?);
+            dpus.push(dpu);
         }
+
+        // stage 2 (whole batch): weight-stationary MLP over all frames
+        let logits_batch =
+            model::mlp_forward_batch(&self.params, &feats_batch, &mut dpus)?;
+
+        // stage 3 (per frame): assemble outputs and the energy account
+        let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
+        let out = frames
+            .iter()
+            .zip(feats_batch)
+            .zip(logits_batch)
+            .zip(dpus)
+            .map(|(((frame, feats), logits), dpu)| {
+                let mut energy = self.energy_model.dpu_energy(&dpu.stats);
+                energy.add(&self.energy_model.sensor_energy(
+                    pixels,
+                    (8 - cfg.apx_pixel) as u64,
+                ));
+                FrameOutput {
+                    seq: frame.seq,
+                    predicted: model::argmax(&logits),
+                    logits,
+                    features: Some(feats),
+                    telemetry: Telemetry { dpu: dpu.stats, energy,
+                                           ..Default::default() },
+                }
+            })
+            .collect();
         Ok(BackendOutput { frames: out })
     }
 }

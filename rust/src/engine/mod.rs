@@ -43,10 +43,15 @@
 //! ```
 //!
 //! The coordinator, the serving layer, the CLI, and the benches all
-//! construct backends exclusively through this module; new workloads
-//! (backend routing per request class, A/B energy comparisons, future
-//! execution paths) are an `InferenceBackend` impl, not another fork of
-//! the pipeline.
+//! construct backends exclusively through this module.  Per-request-class
+//! backend selection is a first-class policy here too: [`QosClass`] names
+//! the service classes (best-effort / standard / billed) and
+//! [`RoutingPolicy`] maps each class to a [`BackendKind`]
+//! (`[engine.routing]` config section, `--route class=backend` CLI) —
+//! the serving layer batches per class and dispatches every batch to the
+//! routed backend in one `infer_batch` call.  New workloads (A/B energy
+//! comparisons, future execution paths) are an `InferenceBackend` impl,
+//! not another fork of the pipeline.
 
 pub mod architectural;
 pub mod functional;
@@ -119,6 +124,136 @@ impl std::str::FromStr for BackendKind {
                 "unknown backend {other:?} (functional|architectural|pjrt)"
             ))),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QoS classes and routing
+// ---------------------------------------------------------------------------
+
+/// Quality-of-service class of a serve request.  The near-sensor premise
+/// (PISA; Lee et al. 2017) is that not every pixel deserves the same
+/// treatment: always-on sensor streams want the cheapest approximate
+/// path and fresh frames, while billed output wants the exact, fully
+/// accounted path.  Classes are the routing key ([`RoutingPolicy`]) and
+/// the batching key (`[serve]` per-class knobs) — a batch never mixes
+/// classes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum QosClass {
+    /// Always-on sensor traffic: cheapest path, prefers fresh frames
+    /// (drop-oldest admission by default).
+    BestEffort,
+    /// The default class: reject-past-depth admission, default backend.
+    #[default]
+    Standard,
+    /// Billed/exact traffic: typically routed to the fully accounted
+    /// architectural path.
+    Billed,
+}
+
+impl QosClass {
+    /// Every class, in `index()` order.
+    pub const ALL: [QosClass; 3] =
+        [QosClass::BestEffort, QosClass::Standard, QosClass::Billed];
+
+    /// Number of classes (array-table dimension).
+    pub const COUNT: usize = 3;
+
+    /// Dense index into per-class tables.
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::BestEffort => 0,
+            QosClass::Standard => 1,
+            QosClass::Billed => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QosClass::BestEffort => "best_effort",
+            QosClass::Standard => "standard",
+            QosClass::Billed => "billed",
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for QosClass {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "best_effort" | "best-effort" | "be" => Ok(QosClass::BestEffort),
+            "standard" | "std" => Ok(QosClass::Standard),
+            "billed" | "bill" => Ok(QosClass::Billed),
+            other => Err(Error::Config(format!(
+                "unknown QoS class {other:?} (best_effort|standard|billed)"
+            ))),
+        }
+    }
+}
+
+/// Per-class backend selection: which [`BackendKind`] serves each
+/// [`QosClass`].  Unrouted classes fall back to the engine's default
+/// backend.  Settable from the `[engine.routing]` config section
+/// (`best_effort = "functional"` …) or repeated `--route class=backend`
+/// CLI options.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RoutingPolicy {
+    routes: [Option<BackendKind>; QosClass::COUNT],
+}
+
+impl RoutingPolicy {
+    /// Route `class` to `kind`.
+    pub fn set(&mut self, class: QosClass, kind: BackendKind) {
+        self.routes[class.index()] = Some(kind);
+    }
+
+    /// The explicit route for `class`, if one is configured.
+    pub fn route(&self, class: QosClass) -> Option<BackendKind> {
+        self.routes[class.index()]
+    }
+
+    /// The backend `class` resolves to under `default`.
+    pub fn resolve(&self, class: QosClass, default: BackendKind) -> BackendKind {
+        self.routes[class.index()].unwrap_or(default)
+    }
+
+    /// True when no class has an explicit route.
+    pub fn is_empty(&self) -> bool {
+        self.routes.iter().all(|r| r.is_none())
+    }
+
+    /// Distinct backends the classes actually resolve to (in class
+    /// order) — the set of engines every serve shard must instantiate.
+    /// A default backend no class resolves to is *not* included: if all
+    /// three classes are routed elsewhere, no shard needs to build (or
+    /// be able to build) the default.
+    pub fn backend_set(&self, default: BackendKind) -> Vec<BackendKind> {
+        let mut kinds = Vec::new();
+        for class in QosClass::ALL {
+            let k = self.resolve(class, default);
+            if !kinds.contains(&k) {
+                kinds.push(k);
+            }
+        }
+        kinds
+    }
+
+    /// Apply a CLI `--route class=backend` spec.
+    pub fn apply_spec(&mut self, spec: &str) -> Result<()> {
+        let (class, backend) = spec.split_once('=').ok_or_else(|| {
+            Error::Config(format!(
+                "--route expects class=backend, got {spec:?}"
+            ))
+        })?;
+        self.set(class.parse()?, backend.parse()?);
+        Ok(())
     }
 }
 
@@ -309,14 +444,19 @@ pub trait InferenceBackend {
 }
 
 /// Shape-check a digitized frame against the network geometry (shared by
-/// every backend so the error reads the same everywhere).
+/// every backend and the serve admission path so the error reads the
+/// same everywhere).  The pixel-count check matters: a frame whose
+/// declared dims are right but whose `pixels` vec is short would
+/// otherwise index out of bounds deep inside the LBP layers.
 pub(crate) fn validate_frame(frame: &Frame, cfg: &NetConfig) -> Result<()> {
+    let pixels = cfg.height * cfg.width * cfg.in_channels;
     if frame.rows != cfg.height || frame.cols != cfg.width
         || frame.channels != cfg.in_channels
+        || frame.pixels.len() != pixels
     {
         return Err(Error::Engine(format!(
-            "frame {}x{}x{} vs network {}x{}x{}",
-            frame.rows, frame.cols, frame.channels,
+            "frame {}x{}x{} ({} px) vs network {}x{}x{}",
+            frame.rows, frame.cols, frame.channels, frame.pixels.len(),
             cfg.height, cfg.width, cfg.in_channels
         )));
     }
@@ -631,6 +771,51 @@ mod tests {
         };
         assert!(too_many.validate().is_err());
         assert!(EngineConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn qos_class_parses_indexes_and_displays() {
+        assert_eq!("best_effort".parse::<QosClass>().unwrap(),
+                   QosClass::BestEffort);
+        assert_eq!("BILLED".parse::<QosClass>().unwrap(), QosClass::Billed);
+        assert_eq!("std".parse::<QosClass>().unwrap(), QosClass::Standard);
+        assert!("platinum".parse::<QosClass>().is_err());
+        assert_eq!(QosClass::BestEffort.to_string(), "best_effort");
+        for (i, class) in QosClass::ALL.iter().enumerate() {
+            assert_eq!(class.index(), i);
+            assert_eq!(class.as_str().parse::<QosClass>().unwrap(), *class);
+        }
+        assert_eq!(QosClass::default(), QosClass::Standard);
+    }
+
+    #[test]
+    fn routing_policy_resolves_and_collects_backends() {
+        let mut routing = RoutingPolicy::default();
+        assert!(routing.is_empty());
+        assert_eq!(routing.resolve(QosClass::Billed, BackendKind::Functional),
+                   BackendKind::Functional);
+        assert_eq!(routing.backend_set(BackendKind::Functional),
+                   vec![BackendKind::Functional]);
+
+        routing.apply_spec("best_effort=functional").unwrap();
+        routing.apply_spec("billed=architectural").unwrap();
+        assert!(!routing.is_empty());
+        assert_eq!(routing.route(QosClass::BestEffort),
+                   Some(BackendKind::Functional));
+        assert_eq!(routing.route(QosClass::Standard), None);
+        assert_eq!(routing.resolve(QosClass::Billed, BackendKind::Functional),
+                   BackendKind::Architectural);
+        // the distinct resolved backends, in class order
+        assert_eq!(routing.backend_set(BackendKind::Functional),
+                   vec![BackendKind::Functional, BackendKind::Architectural]);
+        // a default no class resolves to is not instantiated
+        routing.apply_spec("standard=functional").unwrap();
+        assert_eq!(routing.backend_set(BackendKind::Pjrt),
+                   vec![BackendKind::Functional, BackendKind::Architectural]);
+
+        assert!(routing.apply_spec("billed").is_err());
+        assert!(routing.apply_spec("gold=functional").is_err());
+        assert!(routing.apply_spec("billed=warp").is_err());
     }
 
     #[test]

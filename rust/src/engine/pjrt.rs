@@ -22,6 +22,12 @@ pub const ARTIFACT_BATCH: usize = 4;
 /// fed as f32 images in [0,1]; since the artifact re-applies the sensor
 /// quantization, feeding back `pixels/255` reproduces the digitized
 /// values bit-exactly.  No hardware statistics are modeled.
+///
+/// `infer_batch` slices the input into [`ARTIFACT_BATCH`]-sized chunks
+/// and pads only the final one — so now that the serve shards dispatch
+/// whole batches (instead of looping `infer_frame`), a PJRT shard fills
+/// the artifact's static batch with real frames rather than padding
+/// every single frame to it.
 pub struct PjrtBackend {
     params: NetParams,
     runtime: Runtime,

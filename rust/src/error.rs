@@ -37,6 +37,12 @@ pub enum Error {
     /// Serving-layer failure (admission rejection, drain fault, dead shard).
     Serve(String),
 
+    /// A serve request was shed without being inferred: displaced by
+    /// drop-oldest admission or expired past its per-request deadline.
+    /// A distinct variant so callers can tell expected load-shedding
+    /// apart from real failures without parsing message text.
+    Dropped(String),
+
     Io(std::io::Error),
 }
 
@@ -53,6 +59,7 @@ impl fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Engine(m) => write!(f, "engine error: {m}"),
             Error::Serve(m) => write!(f, "serve error: {m}"),
+            Error::Dropped(m) => write!(f, "request dropped: {m}"),
             Error::Io(e) => write!(f, "{e}"),
         }
     }
@@ -90,6 +97,7 @@ mod tests {
     fn display_prefixes_match_variants() {
         assert!(Error::Config("x".into()).to_string().starts_with("config error"));
         assert!(Error::Serve("x".into()).to_string().starts_with("serve error"));
+        assert!(Error::Dropped("x".into()).to_string().starts_with("request dropped"));
         assert!(Error::Runtime("x".into()).to_string().starts_with("runtime error"));
     }
 

@@ -48,11 +48,14 @@
 //! * [`coordinator`] — the near-sensor run loop: digitizes frames from a
 //!   sensor, fans them out over worker threads (one engine each), and
 //!   aggregates per-frame reports into a `RunSummary`.
-//! * [`serve`] — the traffic-facing layer on top of the engine: a
-//!   bounded admission queue with backpressure, dynamic (size/deadline)
-//!   batching, a shard pool where each shard's engine is pinned to a
-//!   disjoint bank slice, p50/p95/p99 latency + throughput/energy metrics,
-//!   and graceful drain (`ns-lbp serve-bench` drives it end to end).
+//! * [`serve`] — the traffic-facing layer on top of the engine: typed
+//!   requests (`Request`/`RequestBuilder`, per-sensor `Session` sequence
+//!   spaces) with a `QosClass` each, per-class bounded admission queues
+//!   (reject-newest or drop-oldest) and per-class batchers, class→backend
+//!   routing (`engine::RoutingPolicy`), whole-batch shard dispatch onto
+//!   engines pinned to disjoint bank slices, per-class p50/p95/p99 +
+//!   drop/reject metrics, and graceful drain (`ns-lbp serve-bench`
+//!   drives it end to end).
 //!
 //! Python appears only at build time (`make artifacts`); this crate is
 //! self-contained at runtime.

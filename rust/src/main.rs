@@ -9,11 +9,15 @@
 //!                 frame on a reference backend and counts divergences;
 //!                 `--arch-mlp` also simulates the MLP in-memory;
 //!                 `--golden` cross-checks against the PJRT artifact.
-//! * `serve-bench` — replay synthetic frames through the sharded, batching
-//!                 serving layer at a configurable offered load and print
-//!                 the latency/throughput/energy report; `--backend` and
-//!                 `--cross-check` select the per-shard engine; `--compare`
-//!                 also runs the 1-shard baseline and prints the speedup.
+//! * `serve-bench` — replay synthetic frames through the sharded, batching,
+//!                 QoS-aware serving layer at a configurable offered load
+//!                 and print the per-class latency/throughput/energy
+//!                 report; `--backend` / `--cross-check` select the
+//!                 per-shard engine, `--route class=backend` routes QoS
+//!                 classes to backends, `--mix A:B:C` shapes the traffic
+//!                 across best_effort:standard:billed, `--compare` also
+//!                 runs the 1-shard baseline and prints the speedup, and
+//!                 `--json` emits one machine-readable report.
 //! * `transient` — print the Fig. 9 RBL discharge waveforms.
 //! * `montecarlo`— run the Fig. 10 variation analysis.
 //! * `info`      — show configuration, geometry, energy/area headline.
@@ -27,10 +31,10 @@ use ns_lbp::cli::Command;
 use ns_lbp::config::SystemConfig;
 use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
 use ns_lbp::energy::{AreaModel, EnergyModel};
-use ns_lbp::engine::{BackendKind, Engine};
+use ns_lbp::engine::{BackendKind, Engine, QosClass};
 use ns_lbp::params::NetParams;
 use ns_lbp::sensor::Frame;
-use ns_lbp::serve::{Server, Ticket};
+use ns_lbp::serve::{Server, Session, Ticket};
 use ns_lbp::testing::synth_frames;
 use ns_lbp::{params, Result};
 
@@ -70,6 +74,11 @@ fn command() -> Command {
         .opt("deadline-us", "US", "serve-bench: batch deadline [µs]")
         .opt("queue-depth", "N", "serve-bench: admission-control depth")
         .opt("load", "FPS", "serve-bench: offered load (0 = unthrottled)")
+        .opt_repeated("route", "CLASS=BACKEND",
+                      "route a QoS class to a backend, e.g. billed=architectural")
+        .opt("mix", "A:B:C",
+             "serve-bench: best_effort:standard:billed traffic weights (default 0:1:0)")
+        .flag("json", "serve-bench: emit one machine-readable JSON report")
         .flag("compare", "serve-bench: also run 1 shard, print speedup")
         .flag("arch-mlp", "simulate the MLP in-memory too")
         .flag("early-exit", "enable Algorithm-1 early exit")
@@ -96,8 +105,8 @@ fn real_main(args: &[String]) -> Result<()> {
     }
 }
 
-/// Fold `--backend` / `--cross-check` into the engine selection (they
-/// override both the config file and `--set engine.*`).
+/// Fold `--backend` / `--cross-check` / `--route` into the engine
+/// selection (they override both the config file and `--set engine.*`).
 fn apply_engine_opts(parsed: &ns_lbp::cli::Parsed, system: &mut SystemConfig)
                      -> Result<()> {
     if let Some(b) = parsed.opt("backend") {
@@ -106,7 +115,45 @@ fn apply_engine_opts(parsed: &ns_lbp::cli::Parsed, system: &mut SystemConfig)
     if let Some(c) = parsed.opt("cross-check") {
         system.engine.cross_check = BackendKind::parse_optional(c)?;
     }
+    for spec in parsed.opt_all("route") {
+        system.engine.routing.apply_spec(&spec)?;
+    }
     Ok(())
+}
+
+/// Parse a `--mix A:B:C` weight spec (best_effort:standard:billed) into
+/// the repeating class pattern submitted frames cycle through.
+fn parse_mix(spec: &str) -> Result<Vec<QosClass>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.len() != QosClass::COUNT {
+        return Err(ns_lbp::Error::Usage(format!(
+            "--mix expects {} ':'-separated weights \
+             (best_effort:standard:billed), got {spec:?}",
+            QosClass::COUNT
+        )));
+    }
+    let mut weights = [0usize; QosClass::COUNT];
+    for (w, part) in weights.iter_mut().zip(&parts) {
+        *w = part.trim().parse().map_err(|_| {
+            ns_lbp::Error::Usage(format!("--mix: bad weight {part:?}"))
+        })?;
+    }
+    let max = weights.iter().copied().max().unwrap_or(0);
+    if max == 0 {
+        return Err(ns_lbp::Error::Usage(
+            "--mix needs at least one non-zero weight".into(),
+        ));
+    }
+    // round-robin interleave so classes blend rather than run in blocks
+    let mut pattern = Vec::new();
+    for i in 0..max {
+        for (ci, &w) in weights.iter().enumerate() {
+            if i < w {
+                pattern.push(QosClass::ALL[ci]);
+            }
+        }
+    }
+    Ok(pattern)
 }
 
 /// Resolve `--dataset` / `--artifacts` and keep the engine's artifact
@@ -127,10 +174,24 @@ fn resolve_artifacts(parsed: &ns_lbp::cli::Parsed, system: &mut SystemConfig)
 }
 
 fn engine_banner(system: &SystemConfig) -> String {
-    match system.engine.cross_check {
+    let mut banner = match system.engine.cross_check {
         Some(c) => format!("{} (cross-check: {})", system.engine.backend, c),
         None => system.engine.backend.to_string(),
+    };
+    let routes: Vec<String> = QosClass::ALL
+        .iter()
+        .filter_map(|&class| {
+            system
+                .engine
+                .routing
+                .route(class)
+                .map(|kind| format!("{class}→{kind}"))
+        })
+        .collect();
+    if !routes.is_empty() {
+        banner.push_str(&format!(" [routes: {}]", routes.join(", ")));
     }
+    banner
 }
 
 fn run_pipeline(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig)
@@ -224,10 +285,13 @@ fn run_pipeline(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig)
 }
 
 /// Replay `frames` through one server instance at `load` offered fps
-/// (0 = unthrottled); rejected submissions are retried so every frame
-/// completes and shard counts stay comparable.
+/// (0 = unthrottled), cycling frames through the `mix` class pattern —
+/// one session (= one sensor stream) per class.  Rejected submissions
+/// are retried so every frame is offered; tickets shed by drop-oldest
+/// admission or deadline expiry count as drops, not errors.
 fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
-                shards: usize, frames: &[Frame], load: f64)
+                shards: usize, frames: &[Frame], load: f64,
+                mix: &[QosClass])
                 -> Result<ns_lbp::serve::metrics::MetricsReport> {
     let mut system = system.clone();
     system.serve.shards = shards;
@@ -235,6 +299,10 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
         params.clone(),
         CoordinatorConfig { system, arch, shard: None },
     )?;
+    let sessions: Vec<Session<'_>> = QosClass::ALL
+        .iter()
+        .map(|&class| server.session(class.index() as u32).with_class(class))
+        .collect();
     let t0 = std::time::Instant::now();
     let mut tickets: Vec<Ticket> = Vec::with_capacity(frames.len());
     for (i, frame) in frames.iter().enumerate() {
@@ -245,8 +313,9 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
                 std::thread::sleep(due - now);
             }
         }
+        let session = &sessions[mix[i % mix.len()].index()];
         loop {
-            match server.submit(frame.clone()) {
+            match session.submit(frame.clone()) {
                 Ok(t) => {
                     tickets.push(t);
                     break;
@@ -259,12 +328,20 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
             }
         }
     }
+    drop(sessions);
     let mut mismatches = 0u64;
     let mut cross_mismatches = 0u64;
     for t in tickets {
-        let r = t.wait()?;
-        mismatches += r.report.telemetry.arch_mismatches;
-        cross_mismatches += r.report.telemetry.cross_check_mismatches;
+        match t.wait() {
+            Ok(r) => {
+                mismatches += r.report.telemetry.arch_mismatches;
+                cross_mismatches += r.report.telemetry.cross_check_mismatches;
+            }
+            // shed by drop-oldest admission or a lapsed deadline: the
+            // per-class drop counters in the report account for these
+            Err(ns_lbp::Error::Dropped(_)) => {}
+            Err(e) => return Err(e),
+        }
     }
     let report = server.drain()?;
     if mismatches != 0 {
@@ -284,6 +361,8 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
     let frames_n: usize = parsed.opt_parse("frames", 256)?;
     let seed: u64 = parsed.opt_parse("seed", 7)?;
     let load: f64 = parsed.opt_parse("load", 0.0)?;
+    let json = parsed.flag("json");
+    let mix = parse_mix(parsed.opt("mix").unwrap_or("0:1:0"))?;
 
     let mut system = system;
     system.serve.shards = parsed.opt_parse("shards", system.serve.shards)?;
@@ -298,14 +377,19 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
     let (dataset, artifacts) = resolve_artifacts(parsed, &mut system);
     let params = match params::load(format!("{artifacts}/{dataset}.params.bin")) {
         Ok(p) => {
-            println!("network: {dataset} artifact");
+            if !json {
+                println!("network: {dataset} artifact");
+            }
             p
         }
         Err(_) => {
-            println!(
-                "network: synthetic (artifact {artifacts}/{dataset}.params.bin \
-                 absent — run `make artifacts` for the real one)"
-            );
+            if !json {
+                println!(
+                    "network: synthetic (artifact \
+                     {artifacts}/{dataset}.params.bin absent — run \
+                     `make artifacts` for the real one)"
+                );
+            }
             params::synth::synth_params(seed).1
         }
     };
@@ -316,17 +400,23 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
         early_exit: parsed.flag("early-exit"),
     };
     let frames = synth_frames(&params, frames_n, seed)?;
-    println!(
-        "offered: {} frames at {} | backend {} | shards {} | batch ≤{} | \
-         deadline {} µs | queue depth {}",
-        frames.len(),
-        if load > 0.0 { format!("{load:.0} fps") } else { "full rate".into() },
-        engine_banner(&system),
-        system.serve.shards,
-        system.serve.max_batch,
-        system.serve.batch_deadline_us,
-        system.serve.queue_depth,
-    );
+    let mix_banner: Vec<String> =
+        mix.iter().map(|c| c.as_str().to_string()).collect();
+    if !json {
+        println!(
+            "offered: {} frames at {} | backend {} | mix [{}] | shards {} | \
+             batch ≤{} | deadline {} µs | queue depth {}",
+            frames.len(),
+            if load > 0.0 { format!("{load:.0} fps") }
+            else { "full rate".into() },
+            engine_banner(&system),
+            mix_banner.join(","),
+            system.serve.shards,
+            system.serve.max_batch,
+            system.serve.batch_deadline_us,
+            system.serve.queue_depth,
+        );
+    }
 
     let shard_counts: Vec<usize> = if parsed.flag("compare") {
         vec![1, system.serve.shards]
@@ -335,15 +425,56 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
     };
     let mut results = Vec::new();
     for &n in &shard_counts {
-        let report = serve_replay(&params, &system, arch, n, &frames, load)?;
-        report.print(&format!("{n} shard(s)"));
-        println!(
-            "  modeled   : {:.0} fps on the accelerator's {}-way bank split",
-            report.modeled_fps(n), n
-        );
+        let report =
+            serve_replay(&params, &system, arch, n, &frames, load, &mix)?;
+        if !json {
+            report.print(&format!("{n} shard(s)"));
+            println!(
+                "  modeled   : {:.0} fps on the accelerator's {}-way bank \
+                 split",
+                report.modeled_fps(n), n
+            );
+        }
         results.push((n, report));
     }
-    if let [(n1, r1), (n2, r2)] = results.as_slice() {
+    if json {
+        // exactly one JSON document on stdout, so
+        // `ns-lbp serve-bench --json > BENCH_serve.json` is parseable;
+        // the resolved per-class routes are recorded so the trajectory
+        // file shows which backend produced each class's numbers
+        let routes: Vec<String> = QosClass::ALL
+            .iter()
+            .map(|&class| {
+                format!(
+                    "\"{}\":\"{}\"",
+                    class,
+                    system.engine.routing.resolve(class,
+                                                  system.engine.backend)
+                )
+            })
+            .collect();
+        let mut s = format!(
+            "{{\"frames\":{},\"backend\":\"{}\",\"routes\":{{{}}},\
+             \"load_fps\":{},\"results\":[",
+            frames.len(),
+            system.engine.backend,
+            routes.join(","),
+            load
+        );
+        for (i, (n, r)) in results.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"shards\":{},\"modeled_fps\":{},\"report\":{}}}",
+                n,
+                r.modeled_fps(*n),
+                r.to_json()
+            ));
+        }
+        s.push_str("]}");
+        println!("{s}");
+    } else if let [(n1, r1), (n2, r2)] = results.as_slice() {
         println!(
             "speedup: {n2} shards vs {n1} → {:.2}x wall throughput \
              ({:.1} vs {:.1} fps)",

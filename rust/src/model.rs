@@ -204,6 +204,79 @@ pub fn int_matmul(feats: &[u8], mlp: &crate::params::MlpLayer) -> Vec<i64> {
     acc.into_iter().map(|v| v as i64).collect()
 }
 
+/// Weight-stationary batched matmul: one pass over the weight matrix
+/// serves every frame in the batch, so `w` streams through the cache
+/// once per batch instead of once per frame.  Bit-identical to
+/// [`int_matmul`] per frame (each accumulator sees the same additions in
+/// the same `di` order).
+pub fn int_matmul_batch(batch: &[&[u8]], mlp: &crate::params::MlpLayer)
+                        -> Vec<Vec<i64>> {
+    let mut accs = vec![vec![0i32; mlp.o]; batch.len()];
+    for di in 0..mlp.d {
+        let row = &mlp.w[di * mlp.o..(di + 1) * mlp.o];
+        for (feats, acc) in batch.iter().zip(accs.iter_mut()) {
+            debug_assert_eq!(feats.len(), mlp.d);
+            let f = feats[di];
+            if f == 0 {
+                continue;
+            }
+            let f = f as i32;
+            for (a, &w) in acc.iter_mut().zip(row) {
+                *a += f * w as i32;
+            }
+        }
+    }
+    accs.into_iter()
+        .map(|acc| acc.into_iter().map(|v| v as i64).collect())
+        .collect()
+}
+
+/// Batched 2-layer MLP: the matmuls run weight-stationary over the whole
+/// batch ([`int_matmul_batch`]); activation/affine run per frame against
+/// that frame's own DPU so per-frame activity counters stay identical to
+/// the [`mlp_forward`] path.  `dpus.len()` must equal `feats_batch.len()`.
+pub fn mlp_forward_batch(params: &NetParams, feats_batch: &[Vec<u8>],
+                         dpus: &mut [Dpu]) -> Result<Vec<Vec<f32>>> {
+    assert_eq!(feats_batch.len(), dpus.len(), "one DPU per frame");
+    let cfg = &params.config;
+    for feats in feats_batch {
+        if feats.len() != params.mlp1.d {
+            return Err(Error::Mapping(format!(
+                "feature dim {} != {}",
+                feats.len(),
+                params.mlp1.d
+            )));
+        }
+    }
+    let m1 = &params.mlp1;
+    let views: Vec<&[u8]> = feats_batch.iter().map(|f| f.as_slice()).collect();
+    let acc1 = int_matmul_batch(&views, m1);
+    let hidden_q: Vec<Vec<u8>> = acc1
+        .iter()
+        .zip(dpus.iter_mut())
+        .map(|(acc, dpu)| {
+            acc.iter()
+                .enumerate()
+                .map(|(o, &h)| dpu.activation(h, m1.scale[o], m1.bias[o],
+                                              cfg.act_bits as u32))
+                .collect()
+        })
+        .collect();
+    let m2 = &params.mlp2;
+    let views: Vec<&[u8]> = hidden_q.iter().map(|f| f.as_slice()).collect();
+    let acc2 = int_matmul_batch(&views, m2);
+    Ok(acc2
+        .iter()
+        .zip(dpus.iter_mut())
+        .map(|(acc, dpu)| {
+            acc.iter()
+                .enumerate()
+                .map(|(o, &h)| dpu.affine(h, m2.scale[o], m2.bias[o]))
+                .collect()
+        })
+        .collect())
+}
+
 /// Quantized 2-layer MLP → logits (mirrors `model.mlp_forward`).
 pub fn mlp_forward(params: &NetParams, feats: &[u8], dpu: &mut Dpu) -> Result<Vec<f32>> {
     let cfg = &params.config;
@@ -297,6 +370,44 @@ mod tests {
     fn rejects_wrong_image_size() {
         let (_, params) = synth_params(1);
         assert!(apply(&params, &[0.0; 3], &mut Dpu::default()).is_err());
+    }
+
+    #[test]
+    fn batched_mlp_matches_per_frame_exactly() {
+        let (_, params) = synth_params(1);
+        let cfg = params.config;
+        let mut rng = Xoshiro256::new(11);
+        let feats_batch: Vec<Vec<u8>> = (0..5)
+            .map(|_| {
+                (0..params.mlp1.d)
+                    .map(|_| rng.below(1u64 << cfg.act_bits) as u8)
+                    .collect()
+            })
+            .collect();
+        // per-frame reference
+        let mut ref_dpus: Vec<Dpu> = (0..5).map(|_| Dpu::default()).collect();
+        let reference: Vec<Vec<f32>> = feats_batch
+            .iter()
+            .zip(ref_dpus.iter_mut())
+            .map(|(f, dpu)| mlp_forward(&params, f, dpu).unwrap())
+            .collect();
+        // weight-stationary batch path
+        let mut dpus: Vec<Dpu> = (0..5).map(|_| Dpu::default()).collect();
+        let batched =
+            mlp_forward_batch(&params, &feats_batch, &mut dpus).unwrap();
+        assert_eq!(batched, reference);
+        // ... with identical per-frame DPU activity counters
+        for (a, b) in dpus.iter().zip(&ref_dpus) {
+            assert_eq!(a.stats, b.stats);
+        }
+        // raw integer accumulators agree too
+        let views: Vec<&[u8]> =
+            feats_batch.iter().map(|f| f.as_slice()).collect();
+        for (batch_acc, feats) in
+            int_matmul_batch(&views, &params.mlp1).iter().zip(&feats_batch)
+        {
+            assert_eq!(*batch_acc, int_matmul(feats, &params.mlp1));
+        }
     }
 
     #[test]

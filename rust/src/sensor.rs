@@ -89,6 +89,13 @@ impl Frame {
     pub fn get(&self, r: usize, c: usize, ch: usize) -> u8 {
         self.pixels[(r * self.cols + c) * self.channels + ch]
     }
+
+    /// Re-stamp the sequence number — serve sessions re-sequence frames
+    /// from independent sources into one per-sensor sequence space.
+    pub fn with_seq(mut self, seq: u64) -> Self {
+        self.seq = seq;
+        self
+    }
 }
 
 /// Dual-mode column ADC with the LSB-skip approximation.
@@ -313,6 +320,8 @@ mod tests {
         let f = s.next_frame().unwrap();
         assert_eq!(f.get(1, 2, 1), f.pixels[11]);
         assert_eq!(f.seq, 0);
+        let f = f.with_seq(42);
+        assert_eq!(f.seq, 42);
     }
 
     #[test]

@@ -12,21 +12,16 @@
 
 use std::time::Instant;
 
-use crate::config::ServeConfig;
-
 use super::queue::{BoundedQueue, PopResult};
 
-/// When a forming batch must ship.
+/// When a forming batch must ship.  The server builds one per QoS class
+/// from the class's resolved knobs ([`crate::config::ServeConfig::class_knobs`]),
+/// so there is deliberately no constructor from the class-independent
+/// `[serve]` defaults.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_delay: std::time::Duration,
-}
-
-impl BatchPolicy {
-    pub fn from_serve(cfg: &ServeConfig) -> Self {
-        Self { max_batch: cfg.max_batch, max_delay: cfg.batch_deadline() }
-    }
 }
 
 /// Default deadline anchor: the moment the batcher popped the item.
@@ -34,26 +29,39 @@ fn pop_time_anchor<T>(_: &T) -> Instant {
     Instant::now()
 }
 
-/// Pulls items off a request queue and groups them into batches.
-pub struct Batcher<'q, T> {
+/// Pulls items off a request queue and groups them into batches.  The
+/// deadline anchor is any `Fn(&T) -> Instant` (not just a fn pointer), so
+/// request-carrying types can anchor on an embedded enqueue timestamp and
+/// callers can capture state in the closure.
+pub struct Batcher<'q, T, A = fn(&T) -> Instant>
+where
+    A: Fn(&T) -> Instant,
+{
     queue: &'q BoundedQueue<T>,
     policy: BatchPolicy,
-    anchor: fn(&T) -> Instant,
+    anchor: A,
 }
 
 impl<'q, T> Batcher<'q, T> {
     pub fn new(queue: &'q BoundedQueue<T>, policy: BatchPolicy) -> Self {
         Self { queue, policy, anchor: pop_time_anchor::<T> }
     }
+}
 
+impl<'q, T, A> Batcher<'q, T, A>
+where
+    A: Fn(&T) -> Instant,
+{
     /// Anchor the deadline to a timestamp carried by the item (its
     /// enqueue time) instead of the pop time, so `max_delay` bounds the
     /// item's *total* staleness: a request that already sat in the queue
     /// past its deadline ships immediately with whatever backlog is on
     /// hand, rather than waiting another full `max_delay`.
-    pub fn with_anchor(mut self, anchor: fn(&T) -> Instant) -> Self {
-        self.anchor = anchor;
-        self
+    pub fn with_anchor<B>(self, anchor: B) -> Batcher<'q, T, B>
+    where
+        B: Fn(&T) -> Instant,
+    {
+        Batcher { queue: self.queue, policy: self.policy, anchor }
     }
 
     /// Block for the next batch; `None` once the queue is closed and
@@ -135,6 +143,28 @@ mod tests {
         assert_eq!(batch.len(), 3);
         assert!(t0.elapsed() < Duration::from_millis(10),
                 "waited a fresh deadline for already-stale items");
+    }
+
+    #[test]
+    fn capturing_closure_anchor_is_accepted() {
+        // items carry an *offset* from a base instant captured by the
+        // closure — impossible with a plain fn pointer anchor
+        let q: BoundedQueue<u64> = BoundedQueue::new(16);
+        let base = Instant::now() - Duration::from_millis(100);
+        q.try_push(50).unwrap(); // enqueued 50 ms after base: stale
+        q.try_push(60).unwrap();
+        let b = Batcher::new(&q, BatchPolicy {
+            max_batch: 8,
+            max_delay: Duration::from_millis(10),
+        })
+        .with_anchor(move |offset_ms: &u64| {
+            base + Duration::from_millis(*offset_ms)
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![50, 60]);
+        assert!(t0.elapsed() < Duration::from_millis(10),
+                "stale items must ship without a fresh deadline");
     }
 
     #[test]

@@ -1,63 +1,157 @@
-//! `serve` — the sharded, batching frame-serving layer on top of the
-//! NS-LBP inference engine.
+//! `serve` — the sharded, batching, QoS-aware request-serving layer on
+//! top of the NS-LBP inference engine.
 //!
 //! The seed coordinator is a one-shot, run-to-completion loop; the paper
 //! (and the PISA/LBPNet line of work it extends) frames the accelerator
 //! as an *always-on* edge inference engine fed by continuous sensor
-//! streams.  This module supplies that missing layer:
+//! streams — streams whose pixels do not all deserve the same treatment.
+//! The unit of work here is therefore a typed [`Request`] (frame +
+//! sensor id + [`QosClass`] + optional deadline), not a bare frame.
+//!
+//! # Request lifecycle
 //!
 //! ```text
-//!  submit() ──► BoundedQueue ──► Batcher ──► BoundedQueue ──► ShardPool
-//!  (admission    (backpressure:   (size/      (of batches)    shard 0: banks 0..19
-//!   control)      reject past      deadline                   shard 1: banks 20..39
-//!                 queue_depth)     triggers)                  ...      ──► Ticket
+//!  Session::submit / Server::submit            (build: RequestBuilder)
+//!        │  1. SUBMIT — stamp the per-sensor seq, pick the class
+//!        ▼
+//!  per-class BoundedQueue                      (admission control)
+//!        │  2. ADMIT — reject past queue_depth, or displace the oldest
+//!        │     queued frame for drop-oldest classes (fresh sensor data
+//!        │     beats stale); rejected/dropped tickets resolve to Err
+//!        ▼
+//!  per-class Batcher thread                    (batch formation)
+//!        │  3. BATCH — ship at the class's max_batch, or at the class's
+//!        │     deadline_us measured from the oldest request's enqueue
+//!        │     time; a batch never mixes classes
+//!        ▼
+//!  BoundedQueue<Batch> ──► ShardPool           (routing + dispatch)
+//!        │  4. ROUTE — the batch carries the backend its class resolves
+//!        │     to (engine::RoutingPolicy, `[engine.routing]`/--route);
+//!        │     every shard hosts one engine per routed backend, pinned
+//!        │     to the shard's disjoint bank slice
+//!        │  5. INFER — one Engine::infer_batch call per batch (the
+//!        │     batch-aware backends amortize compute across it);
+//!        │     requests whose per-request deadline lapsed in the queue
+//!        │     are shed, not inferred
+//!        ▼
+//!  Ticket                                      (completion)
+//!           6. TICKET — wait() / wait_timeout() / try_take() resolve to
+//!              an InferResponse carrying the frame's output, sensor id,
+//!              class, backend, shard, and queue→response latency;
+//!              Metrics records it all per class (p50/p95/p99,
+//!              drop/reject counts) for the final MetricsReport
 //! ```
 //!
-//! * [`queue`] — bounded MPMC queue; full ⇒ reject-with-error, closed ⇒
-//!   drain semantics.
-//! * [`batcher`] — dynamic batching, shipped at `max_batch` or at the
-//!   `batch_deadline_us` of the oldest queued frame.
-//! * [`shard`] — worker pool; each shard owns an [`crate::engine::Engine`]
-//!   whose backend is pinned to a disjoint bank slice
-//!   ([`crate::engine::ShardSlice`]), so shards model disjoint compute
-//!   sub-arrays.  Which execution path runs (functional, architectural,
-//!   PJRT) is the engine's backend selection (`system.engine.backend`,
-//!   or `ns-lbp serve-bench --backend ...`).  Sharding never changes
-//!   logits — only which banks (and therefore whose modeled time budget)
-//!   do the work; `rust/tests/serve.rs` proves 1-shard vs 4-shard
-//!   equivalence.
-//! * [`metrics`] — accepted/rejected/completed counters, p50/p95/p99
-//!   latency, throughput, and the energy-per-frame account.
+//! * [`queue`] — bounded MPMC queue; full ⇒ reject-with-error (or
+//!   displace-oldest), closed ⇒ drain semantics.
+//! * [`batcher`] — dynamic batching, size- or deadline-triggered, with a
+//!   pluggable `Fn(&T) -> Instant` deadline anchor.
+//! * [`shard`] — worker pool; whole-batch dispatch to per-shard,
+//!   per-backend [`crate::engine::Engine`]s over disjoint bank slices
+//!   ([`crate::engine::ShardSlice`]).  Sharding never changes logits —
+//!   only which banks (and therefore whose modeled time budget) do the
+//!   work; `rust/tests/serve.rs` proves 1-shard vs 4-shard equivalence.
+//! * [`metrics`] — per-class accepted/rejected/dropped counters,
+//!   p50/p95/p99 latency, throughput, and the energy-per-frame account.
 //!
 //! Shutdown is a graceful drain: [`Server::drain`] stops admission,
-//! flushes the request queue through the batcher, lets every shard
+//! flushes every class queue through its batcher, lets every shard
 //! finish its in-flight batches, then returns the final
-//! [`MetricsReport`].  Knobs live in `[serve]` of the system config
-//! ([`crate::config::ServeConfig`]); `ns-lbp serve-bench` exercises the
-//! whole stack from the CLI.
+//! [`MetricsReport`].  Knobs live in `[serve]` (global) and
+//! `[serve.best_effort]` / `[serve.standard]` / `[serve.billed]`
+//! (per class) of the system config ([`crate::config::ServeConfig`]);
+//! `ns-lbp serve-bench` exercises the whole stack from the CLI.
 
 pub mod batcher;
 pub mod metrics;
 pub mod queue;
 pub mod shard;
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::ServeConfig;
-use crate::engine::{EngineConfig, FrameOutput};
+use crate::engine::{BackendKind, EngineConfig, FrameOutput};
 use crate::error::{Error, Result};
-use crate::params::NetParams;
+use crate::params::{NetConfig, NetParams};
 use crate::sensor::Frame;
 
+pub use crate::engine::QosClass;
 pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::{Metrics, MetricsReport};
+pub use metrics::{ClassReport, Metrics, MetricsReport};
 pub use queue::{BoundedQueue, PopResult, PushError};
 pub use shard::{Batch, ShardPool};
 
-/// One admitted inference request flowing through the pipeline.
+/// A typed, routable inference request — the serving layer's unit of
+/// work.  Build one with [`Request::builder`] (or [`Request::from_frame`]
+/// for the all-defaults shim), or let a [`Session`] stamp the sensor id
+/// and per-sensor sequence number for you.
+#[derive(Clone, Debug)]
 pub struct Request {
+    /// The digitized frame payload.
     pub frame: Frame,
+    /// Which sensor stream this frame belongs to.
+    pub sensor_id: u32,
+    /// Service class: routing key, batching key, admission policy.
+    pub class: QosClass,
+    /// Optional freshness bound: if the request is still queued this
+    /// long after submission, it is shed instead of inferred.
+    pub deadline: Option<Duration>,
+}
+
+impl Request {
+    /// Start building a request around `frame`.
+    pub fn builder(frame: Frame) -> RequestBuilder {
+        RequestBuilder { request: Request::from_frame(frame) }
+    }
+
+    /// All-defaults request: sensor 0, [`QosClass::Standard`], no
+    /// deadline — the thin shim over the old frame-only submit path.
+    pub fn from_frame(frame: Frame) -> Request {
+        Request {
+            frame,
+            sensor_id: 0,
+            class: QosClass::default(),
+            deadline: None,
+        }
+    }
+}
+
+/// Builder for [`Request`].
+#[derive(Clone, Debug)]
+pub struct RequestBuilder {
+    request: Request,
+}
+
+impl RequestBuilder {
+    pub fn sensor_id(mut self, sensor_id: u32) -> Self {
+        self.request.sensor_id = sensor_id;
+        self
+    }
+
+    pub fn class(mut self, class: QosClass) -> Self {
+        self.request.class = class;
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.request.deadline = Some(deadline);
+        self
+    }
+
+    pub fn build(self) -> Request {
+        self.request
+    }
+}
+
+/// One admitted request flowing through the pipeline (internal form:
+/// payload + admission timestamp + completion slot).
+pub(crate) struct QueuedRequest {
+    pub(crate) frame: Frame,
+    pub(crate) sensor_id: u32,
+    pub(crate) deadline: Option<Duration>,
     pub(crate) enqueued_at: Instant,
     pub(crate) slot: ResponseSlot,
 }
@@ -67,6 +161,12 @@ pub struct Request {
 pub struct InferResponse {
     /// The engine's full per-frame output (logits, telemetry).
     pub report: FrameOutput,
+    /// Which sensor stream the frame came from.
+    pub sensor_id: u32,
+    /// The request's QoS class.
+    pub class: QosClass,
+    /// The backend its class routed to.
+    pub backend: BackendKind,
     /// Which shard processed the frame.
     pub shard: usize,
     /// Size of the dispatch batch this frame rode in.
@@ -76,6 +176,7 @@ pub struct InferResponse {
 }
 
 impl InferResponse {
+    /// Sequence number within the frame's sensor stream.
     pub fn seq(&self) -> u64 {
         self.report.seq
     }
@@ -122,80 +223,196 @@ impl Ticket {
         }
     }
 
+    /// Block for at most `timeout`; `None` if no response arrived in
+    /// time.  The ticket stays usable, so a caller facing a drained or
+    /// wedged shard (or a server that was dropped without
+    /// [`Server::drain`]) can bound its wait and retry or give up
+    /// instead of blocking forever.
+    pub fn wait_timeout(&self, timeout: Duration)
+                        -> Option<Result<InferResponse>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.slot.result.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .slot
+                .ready
+                .wait_timeout(g, deadline - now)
+                .unwrap();
+            g = guard;
+        }
+    }
+
     /// Non-blocking poll; `None` while the frame is still in flight.
     pub fn try_take(&self) -> Option<Result<InferResponse>> {
         self.slot.result.lock().unwrap().take()
     }
 }
 
-/// The serving front-end: admission queue + batcher thread + shard pool.
+/// A per-sensor submission handle: owns (a reference into) the sensor's
+/// sequence space, so multiple [`crate::sensor::FrameSource`] streams can
+/// fan into one [`Server`] without seq collisions — every submitted frame
+/// is re-stamped with the next sequence number of *its* sensor.  Two
+/// sessions for the same `sensor_id` share one sequence space.
+pub struct Session<'s> {
+    server: &'s Server,
+    sensor_id: u32,
+    seq: Arc<AtomicU64>,
+    class: QosClass,
+    deadline: Option<Duration>,
+}
+
+impl<'s> Session<'s> {
+    /// Default QoS class for frames submitted through this session.
+    pub fn with_class(mut self, class: QosClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Default per-request deadline for frames submitted through this
+    /// session.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn sensor_id(&self) -> u32 {
+        self.sensor_id
+    }
+
+    /// Submit one frame: stamps the sensor id and the next per-sensor
+    /// sequence number, then admits it under the session's class.
+    /// (A rejected submission still consumes a sequence number.)
+    pub fn submit(&self, frame: Frame) -> Result<Ticket> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let mut builder = Request::builder(frame.with_seq(seq))
+            .sensor_id(self.sensor_id)
+            .class(self.class);
+        if let Some(d) = self.deadline {
+            builder = builder.deadline(d);
+        }
+        self.server.submit(builder.build())
+    }
+}
+
+/// The serving front-end: per-class admission queues + per-class batcher
+/// threads + a routed shard pool.
 pub struct Server {
-    requests: Arc<BoundedQueue<Request>>,
+    class_queues: [Arc<BoundedQueue<QueuedRequest>>; QosClass::COUNT],
     batches: Arc<BoundedQueue<Batch>>,
     metrics: Arc<Metrics>,
-    batcher: Option<std::thread::JoinHandle<()>>,
+    batchers: Vec<std::thread::JoinHandle<()>>,
     pool: Option<ShardPool>,
     started: Instant,
     shards: usize,
+    serve: ServeConfig,
+    net: NetConfig,
+    sensors: Mutex<BTreeMap<u32, Arc<AtomicU64>>>,
 }
 
 impl Server {
     /// Spin up the pipeline: `config.system.serve` supplies the knobs,
-    /// the rest of `config` (cache geometry, arch-sim switches, backend
-    /// selection in `config.system.engine`) is inherited by every
-    /// shard's engine.
+    /// `config.system.engine` the backend selection and per-class
+    /// routing, and the rest of `config` (cache geometry, arch-sim
+    /// switches) is inherited by every shard's engines.
     pub fn start(params: NetParams, config: EngineConfig) -> Result<Self> {
         let serve: ServeConfig = config.system.serve;
         serve.validate()?;
-        let requests = Arc::new(BoundedQueue::new(serve.queue_depth));
+        let net = params.config;
+        let routing = config.system.engine.routing.clone();
+        let default_backend = config.system.engine.backend;
+        // the distinct backends any class can land on — each shard
+        // hosts one engine per entry
+        let backends = routing.backend_set(default_backend);
+
+        let class_queues: [Arc<BoundedQueue<QueuedRequest>>;
+                           QosClass::COUNT] = std::array::from_fn(|i| {
+            Arc::new(BoundedQueue::new(
+                serve.class_knobs(QosClass::ALL[i]).queue_depth,
+            ))
+        });
         // a couple of in-flight batches per shard keeps workers fed
         // without hiding queueing latency inside the dispatch stage
         let batches = Arc::new(BoundedQueue::new(serve.shards * 2));
         let metrics = Arc::new(Metrics::default());
 
         // spawn() validates the shard slicing against the cache geometry
-        // and errors before any worker thread starts
-        let pool = ShardPool::spawn(&params, &config, serve.shards, &batches,
-                                    &metrics)?;
+        // (and every routed backend's availability) before any batcher
+        // thread starts
+        let pool = ShardPool::spawn(&params, &config, serve.shards,
+                                    &backends, &batches, &metrics)?;
 
-        let policy = BatchPolicy::from_serve(&serve);
-        let spawned = {
-            let requests = Arc::clone(&requests);
-            let batches = Arc::clone(&batches);
-            std::thread::Builder::new()
-                .name("nslbp-batcher".into())
+        // one batcher per class; the last one out closes the batch queue
+        let remaining = Arc::new(AtomicUsize::new(QosClass::COUNT));
+        let mut batchers = Vec::with_capacity(QosClass::COUNT);
+        let mut spawn_err = None;
+        for class in QosClass::ALL {
+            let knobs = serve.class_knobs(class);
+            let policy = BatchPolicy {
+                max_batch: knobs.max_batch,
+                max_delay: knobs.deadline(),
+            };
+            let requests = Arc::clone(&class_queues[class.index()]);
+            let batches_q = Arc::clone(&batches);
+            let remaining = Arc::clone(&remaining);
+            let backend = routing.resolve(class, default_backend);
+            let spawned = std::thread::Builder::new()
+                .name(format!("nslbp-batcher-{class}"))
                 .spawn(move || {
-                    // deadline anchored to enqueue time: max_delay bounds a
-                    // frame's total queue staleness, not time-since-pop
+                    // deadline anchored to enqueue time: the class
+                    // deadline bounds a frame's total queue staleness,
+                    // not time-since-pop
                     let b = Batcher::new(&requests, policy)
-                        .with_anchor(|r: &Request| r.enqueued_at);
-                    while let Some(batch) = b.next_batch() {
-                        if batches.push(batch).is_err() {
+                        .with_anchor(|r: &QueuedRequest| r.enqueued_at);
+                    while let Some(reqs) = b.next_batch() {
+                        let batch =
+                            Batch { class, backend, requests: reqs };
+                        if batches_q.push(batch).is_err() {
                             break; // batch queue force-closed
                         }
                     }
-                    batches.close();
-                })
-        };
-        let batcher = match spawned {
-            Ok(handle) => handle,
-            Err(e) => {
-                // unwind cleanly: release the already-running shard pool
-                requests.close();
-                batches.close();
-                let _ = pool.join();
-                return Err(Error::Io(e));
+                    if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                        batches_q.close();
+                    }
+                });
+            match spawned {
+                Ok(handle) => batchers.push(handle),
+                Err(e) => {
+                    spawn_err = Some(e);
+                    break;
+                }
             }
-        };
+        }
+        if let Some(e) = spawn_err {
+            // unwind cleanly: release the already-running threads
+            for q in &class_queues {
+                q.close();
+            }
+            batches.close();
+            for h in batchers {
+                let _ = h.join();
+            }
+            let _ = pool.join();
+            return Err(Error::Io(e));
+        }
 
         Ok(Self {
-            requests,
+            class_queues,
             batches,
             metrics,
-            batcher: Some(batcher),
+            batchers,
             pool: Some(pool),
             started: Instant::now(),
             shards: serve.shards,
+            serve,
+            net,
+            sensors: Mutex::new(BTreeMap::new()),
         })
     }
 
@@ -203,29 +420,83 @@ impl Server {
         self.shards
     }
 
-    /// Admit one frame.  Backpressure is an error, not a wait: past
-    /// `serve.queue_depth` the frame is rejected immediately.
-    pub fn submit(&self, frame: Frame) -> Result<Ticket> {
+    /// A submission handle bound to `sensor_id`'s sequence space (shared
+    /// with any other session for the same sensor).
+    pub fn session(&self, sensor_id: u32) -> Session<'_> {
+        let seq = Arc::clone(
+            self.sensors
+                .lock()
+                .unwrap()
+                .entry(sensor_id)
+                .or_insert_with(|| Arc::new(AtomicU64::new(0))),
+        );
+        Session {
+            server: self,
+            sensor_id,
+            seq,
+            class: QosClass::default(),
+            deadline: None,
+        }
+    }
+
+    /// Admit one typed request into its class's queue.  Backpressure is
+    /// never a wait: past the class's `queue_depth` the request is
+    /// rejected immediately (reject-newest), or — for drop-oldest
+    /// classes — the *oldest* queued request is displaced (its ticket
+    /// resolves to an error) and the fresh one admitted.  Frames whose
+    /// shape does not match the network are rejected here, so one
+    /// malformed frame can never fail a whole dispatched batch.
+    pub fn submit(&self, request: Request) -> Result<Ticket> {
+        let class = request.class;
+        if let Err(e) = crate::engine::validate_frame(&request.frame,
+                                                      &self.net) {
+            self.metrics.record_rejected(class);
+            return Err(Error::Serve(format!("admission rejected: {e}")));
+        }
+
+        let knobs = self.serve.class_knobs(class);
         let slot = Arc::new(SlotState::new());
-        let req = Request {
-            frame,
+        let queued = QueuedRequest {
+            frame: request.frame,
+            sensor_id: request.sensor_id,
+            deadline: request.deadline,
             enqueued_at: Instant::now(),
             slot: Arc::clone(&slot),
         };
-        match self.requests.try_push(req) {
-            Ok(()) => {
-                self.metrics.record_accepted();
-                Ok(Ticket { slot })
+        let queue = &self.class_queues[class.index()];
+        if knobs.drop_oldest {
+            match queue.push_dropping_oldest(queued) {
+                Ok(displaced) => {
+                    self.metrics.record_accepted(class);
+                    if let Some(old) = displaced {
+                        self.metrics.record_dropped(class);
+                        old.slot.fulfill(Err(Error::Dropped(
+                            "displaced by a fresher frame (drop-oldest \
+                             admission)"
+                                .into(),
+                        )));
+                    }
+                    Ok(Ticket { slot })
+                }
+                Err(_) => Err(Error::Serve("server is draining".into())),
             }
-            Err((PushError::Full, _)) => {
-                self.metrics.record_rejected();
-                Err(Error::Serve(format!(
-                    "admission rejected: queue at configured depth {}",
-                    self.requests.capacity()
-                )))
-            }
-            Err((PushError::Closed, _)) => {
-                Err(Error::Serve("server is draining".into()))
+        } else {
+            match queue.try_push(queued) {
+                Ok(()) => {
+                    self.metrics.record_accepted(class);
+                    Ok(Ticket { slot })
+                }
+                Err((PushError::Full, _)) => {
+                    self.metrics.record_rejected(class);
+                    Err(Error::Serve(format!(
+                        "admission rejected: {class} queue at configured \
+                         depth {}",
+                        queue.capacity()
+                    )))
+                }
+                Err((PushError::Closed, _)) => {
+                    Err(Error::Serve("server is draining".into()))
+                }
             }
         }
     }
@@ -236,14 +507,18 @@ impl Server {
     }
 
     /// Graceful drain: stop admission, flush every queued request through
-    /// batcher and shards, join all threads, and return the final report.
+    /// the per-class batchers and shards, join all threads, and return
+    /// the final report.
     pub fn drain(mut self) -> Result<MetricsReport> {
-        self.requests.close();
-        if let Some(b) = self.batcher.take() {
+        for q in &self.class_queues {
+            q.close();
+        }
+        for b in std::mem::take(&mut self.batchers) {
             b.join()
                 .map_err(|_| Error::Serve("batcher thread panicked".into()))?;
         }
-        // the batcher closed `batches` on exit; shards drain it and stop
+        // the last batcher closed `batches` on exit; shards drain it and
+        // stop
         if let Some(pool) = self.pool.take() {
             pool.join()?;
         }
@@ -253,9 +528,12 @@ impl Server {
 
 impl Drop for Server {
     /// Dropping without [`Server::drain`] still releases the worker
-    /// threads (close both queues); in-flight tickets may stay pending.
+    /// threads (close every queue); in-flight tickets may stay pending —
+    /// use [`Ticket::wait_timeout`] to avoid blocking on them forever.
     fn drop(&mut self) {
-        self.requests.close();
+        for q in &self.class_queues {
+            q.close();
+        }
         self.batches.close();
     }
 }
@@ -289,7 +567,7 @@ mod tests {
         let server = Server::start(params, test_config(2)).unwrap();
         let tickets: Vec<Ticket> = frames
             .into_iter()
-            .map(|f| server.submit(f).unwrap())
+            .map(|f| server.submit(Request::from_frame(f)).unwrap())
             .collect();
         let mut responses: Vec<InferResponse> =
             tickets.into_iter().map(|t| t.wait().unwrap()).collect();
@@ -299,32 +577,40 @@ mod tests {
             assert!(r.predicted() < 10);
             assert!(r.shard < 2);
             assert!(r.batch_size >= 1);
+            assert_eq!(r.sensor_id, 0);
+            assert_eq!(r.class, QosClass::Standard);
         }
         let report = server.drain().unwrap();
         assert_eq!(report.accepted, 10);
         assert_eq!(report.completed, 10);
         assert_eq!(report.failed, 0);
+        assert_eq!(report.dropped, 0);
         assert_eq!(report.arch_mismatches, 0);
         assert!(report.batches >= 3, "10 frames / max_batch 4");
         assert!(report.p50_ms <= report.p95_ms);
         assert!(report.p95_ms <= report.p99_ms);
         assert!(report.throughput_fps > 0.0);
+        let std_class = report.class(QosClass::Standard).unwrap();
+        assert_eq!(std_class.completed, 10);
     }
 
     #[test]
-    fn bad_frame_shape_fails_just_that_ticket() {
-        let (params, frames) = synth_frames(2, 4);
+    fn bad_frame_shape_is_rejected_at_admission() {
+        let (params, frames) = synth_frames(1, 4);
         let server = Server::start(params, test_config(1)).unwrap();
-        let good = server.submit(frames[0].clone()).unwrap();
-        let bad = server
-            .submit(Frame { rows: 1, cols: 1, channels: 1, pixels: vec![0],
-                            seq: 99 })
-            .unwrap();
+        let good =
+            server.submit(Request::from_frame(frames[0].clone())).unwrap();
+        let err = server
+            .submit(Request::from_frame(Frame {
+                rows: 1, cols: 1, channels: 1, pixels: vec![0], seq: 99,
+            }))
+            .unwrap_err();
+        assert!(err.to_string().contains("admission rejected"), "{err}");
         assert!(good.wait().is_ok());
-        assert!(bad.wait().is_err());
         let report = server.drain().unwrap();
-        assert_eq!(report.failed, 1);
+        assert_eq!(report.rejected, 1);
         assert_eq!(report.completed, 1);
+        assert_eq!(report.failed, 0);
     }
 
     #[test]
@@ -334,5 +620,47 @@ mod tests {
         let mut config = test_config(81);
         config.system.serve.shards = 81;
         assert!(Server::start(params, config).is_err());
+    }
+
+    #[test]
+    fn sessions_own_disjoint_sequence_spaces() {
+        let (params, frames) = synth_frames(6, 6);
+        let server = Server::start(params, test_config(1)).unwrap();
+        let cam0 = server.session(0);
+        let cam1 = server.session(1);
+        let mut tickets = Vec::new();
+        // interleave two sensors; every source frame carries seq 0..6,
+        // which would collide without per-sensor re-stamping
+        for f in &frames[..3] {
+            tickets.push((0u32, cam0.submit(f.clone()).unwrap()));
+            tickets.push((1u32, cam1.submit(f.clone()).unwrap()));
+        }
+        let mut seqs: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+        for (sensor, t) in tickets {
+            let r = t.wait().unwrap();
+            assert_eq!(r.sensor_id, sensor);
+            seqs.entry(sensor).or_default().push(r.seq());
+        }
+        assert_eq!(seqs[&0], vec![0, 1, 2]);
+        assert_eq!(seqs[&1], vec![0, 1, 2]);
+        // a second session for sensor 0 continues its sequence space
+        let cam0_again = server.session(0);
+        let t = cam0_again.submit(frames[3].clone()).unwrap();
+        assert_eq!(t.wait().unwrap().seq(), 3);
+        drop(cam0);
+        drop(cam1);
+        drop(cam0_again);
+        server.drain().unwrap();
+    }
+
+    #[test]
+    fn wait_timeout_on_unfulfilled_slot_returns_none() {
+        let ticket = Ticket { slot: Arc::new(SlotState::new()) };
+        let t0 = Instant::now();
+        assert!(ticket.wait_timeout(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // fulfilled afterwards, the same ticket resolves
+        ticket.slot.fulfill(Err(Error::Serve("late".into())));
+        assert!(ticket.wait_timeout(Duration::from_millis(1)).is_some());
     }
 }

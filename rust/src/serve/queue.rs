@@ -93,6 +93,28 @@ impl<T> BoundedQueue<T> {
         Ok(())
     }
 
+    /// Non-blocking push that never rejects for fullness: at capacity the
+    /// *oldest* queued item is displaced and handed back (`Ok(Some(old))`)
+    /// to make room — the admission policy of sensor classes that prefer
+    /// fresh frames over queue completeness.  Only a closed queue refuses
+    /// the item.
+    pub fn push_dropping_oldest(&self, item: T)
+                                -> Result<Option<T>, (PushError, T)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((PushError::Closed, item));
+        }
+        let displaced = if g.items.len() >= self.capacity {
+            g.items.pop_front()
+        } else {
+            None
+        };
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(displaced)
+    }
+
     /// Blocking push: waits for space.  Returns the item back only if the
     /// queue is closed while waiting.
     pub fn push(&self, item: T) -> Result<(), T> {
@@ -194,6 +216,22 @@ mod tests {
         assert_eq!(q.pop(), None);
         assert!(matches!(q.pop_timeout(Duration::from_millis(1)),
                          PopResult::Closed));
+    }
+
+    #[test]
+    fn push_dropping_oldest_displaces_head_only_when_full() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.push_dropping_oldest(1).unwrap(), None);
+        assert_eq!(q.push_dropping_oldest(2).unwrap(), None);
+        // full: the oldest item comes back, the fresh one is queued
+        assert_eq!(q.push_dropping_oldest(3).unwrap(), Some(1));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        q.close();
+        let (err, item) = q.push_dropping_oldest(4).unwrap_err();
+        assert_eq!(err, PushError::Closed);
+        assert_eq!(item, 4);
     }
 
     #[test]

@@ -1,24 +1,36 @@
-//! Shard worker pool: each shard owns an [`Engine`] whose backend is
-//! pinned to a disjoint slice of the cache's banks
-//! ([`crate::engine::ShardSlice`]), mirroring the paper's parallelism
-//! model — different frames proceed on different bank groups, so one hot
-//! request cannot monopolize the whole 2.5 MB slice.  Workers pull
-//! *batches* (not single frames) so a shard keeps its sub-arrays busy
-//! across a whole dispatch.
+//! Shard worker pool: each shard owns one [`Engine`] per *routed
+//! backend*, every engine pinned to the shard's disjoint slice of the
+//! cache banks ([`crate::engine::ShardSlice`]), mirroring the paper's
+//! parallelism model — different frames proceed on different bank
+//! groups, so one hot request cannot monopolize the whole 2.5 MB slice.
+//!
+//! Workers pull *batches* and dispatch each one to the batch's routed
+//! backend in a single [`Engine::infer_batch`] call — no per-frame
+//! loop — so the batch-aware backends (weight-stationary functional
+//! MLP, architectural multi-frame sub-array packing) actually amortize
+//! compute across the dispatch, instead of batching buying queueing
+//! only.
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-use crate::engine::{Engine, EngineConfig, ShardSlice};
+use crate::engine::{BackendKind, Engine, EngineConfig, QosClass, ShardSlice};
 use crate::error::{Error, Result};
 use crate::params::NetParams;
+use crate::sensor::Frame;
 
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
-use super::{InferResponse, Request};
+use super::{InferResponse, QueuedRequest};
 
-/// A dispatched batch of admitted requests.
-pub type Batch = Vec<Request>;
+/// A dispatched batch: admitted requests of one QoS class, bound for one
+/// backend.  Classes routed to different backends never share a batch.
+pub struct Batch {
+    pub class: QosClass,
+    pub backend: BackendKind,
+    pub(crate) requests: Vec<QueuedRequest>,
+}
 
 /// Fixed pool of shard worker threads consuming from a shared batch queue.
 pub struct ShardPool {
@@ -26,33 +38,43 @@ pub struct ShardPool {
 }
 
 impl ShardPool {
-    /// Build `count` sharded engines (erroring early on an invalid slice
-    /// or an unavailable backend) and spawn one worker thread per shard.
+    /// Build `count` sharded engine sets — one engine per backend in
+    /// `backends` per shard, erroring early on an invalid slice or an
+    /// unavailable backend — and spawn one worker thread per shard.
     pub fn spawn(params: &NetParams, base: &EngineConfig, count: usize,
+                 backends: &[BackendKind],
                  batches: &Arc<BoundedQueue<Batch>>, metrics: &Arc<Metrics>)
                  -> Result<Self> {
-        let mut engines = Vec::with_capacity(count);
+        let mut engine_sets = Vec::with_capacity(count);
         for index in 0..count {
             let config = EngineConfig {
                 shard: Some(ShardSlice { index, count }),
                 ..base.clone()
             };
-            engines.push(
-                Engine::builder()
-                    .config(config)
-                    .params(params.clone())
-                    .build()?,
-            );
+            let mut engines = Vec::with_capacity(backends.len());
+            for &kind in backends {
+                engines.push((
+                    kind,
+                    Engine::builder()
+                        .config(config.clone())
+                        .params(params.clone())
+                        .backend(kind)
+                        .build()?,
+                ));
+            }
+            engine_sets.push(engines);
         }
-        let workers = engines
+        let workers = engine_sets
             .into_iter()
             .enumerate()
-            .map(|(index, engine)| {
+            .map(|(index, engines)| {
                 let batches = Arc::clone(batches);
                 let metrics = Arc::clone(metrics);
                 std::thread::Builder::new()
                     .name(format!("nslbp-shard-{index}"))
-                    .spawn(move || shard_main(index, engine, &batches, &metrics))
+                    .spawn(move || {
+                        shard_main(index, engines, &batches, &metrics)
+                    })
                     .map_err(Error::Io)
             })
             .collect::<Result<Vec<_>>>()
@@ -76,26 +98,81 @@ impl ShardPool {
     }
 }
 
-fn shard_main(index: usize, mut engine: Engine,
+fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
               batches: &BoundedQueue<Batch>, metrics: &Metrics) {
     while let Some(batch) = batches.pop() {
+        let class = batch.class;
+
+        // shed requests whose per-request deadline expired while queued:
+        // the caller asked for freshness, not a stale answer
+        let now = Instant::now();
+        let mut frames: Vec<Frame> = Vec::with_capacity(batch.requests.len());
+        let mut shells = Vec::with_capacity(batch.requests.len());
+        for req in batch.requests {
+            let expired = req
+                .deadline
+                .map_or(false, |d| now.duration_since(req.enqueued_at) > d);
+            if expired {
+                metrics.record_dropped(class);
+                req.slot.fulfill(Err(Error::Dropped(format!(
+                    "deadline expired after {:.1} ms in queue",
+                    req.enqueued_at.elapsed().as_secs_f64() * 1e3
+                ))));
+            } else {
+                frames.push(req.frame);
+                shells.push((req.sensor_id, req.enqueued_at, req.slot));
+            }
+        }
+        if frames.is_empty() {
+            continue; // fully-expired batch: nothing was dispatched
+        }
         metrics.record_batch();
-        let batch_size = batch.len();
-        for req in batch {
-            match engine.infer_frame(&req.frame) {
-                Ok(report) => {
-                    let latency = req.enqueued_at.elapsed();
-                    metrics.record_completion(latency, &report);
-                    req.slot.fulfill(Ok(InferResponse {
+        let batch_size = frames.len();
+
+        let engine = engines
+            .iter_mut()
+            .find(|(kind, _)| *kind == batch.backend)
+            .map(|(_, engine)| engine)
+            .expect("batch routed to a backend this shard does not host");
+
+        // one whole-batch dispatch — the engine (and its cross-check)
+        // sees the entire batch at once
+        match engine.infer_batch(&frames) {
+            Ok(out) if out.frames.len() == shells.len() => {
+                for (report, (sensor_id, enqueued_at, slot)) in
+                    out.frames.into_iter().zip(shells)
+                {
+                    let latency = enqueued_at.elapsed();
+                    metrics.record_completion(class, latency, &report);
+                    slot.fulfill(Ok(InferResponse {
                         report,
+                        sensor_id,
+                        class,
+                        backend: batch.backend,
                         shard: index,
                         batch_size,
                         latency,
                     }));
                 }
-                Err(e) => {
-                    metrics.record_failure();
-                    req.slot.fulfill(Err(e));
+            }
+            Ok(out) => {
+                let msg = format!(
+                    "backend returned {} outputs for a {}-frame batch",
+                    out.frames.len(),
+                    shells.len()
+                );
+                for (_, _, slot) in shells {
+                    metrics.record_failure(class);
+                    slot.fulfill(Err(Error::Serve(msg.clone())));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for (_, _, slot) in shells {
+                    metrics.record_failure(class);
+                    slot.fulfill(Err(Error::Serve(format!(
+                        "batch inference failed: {msg}"
+                    ))));
                 }
             }
         }

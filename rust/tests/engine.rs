@@ -9,7 +9,7 @@ use ns_lbp::engine::{ArchitecturalBackend, BackendKind, Engine, EngineConfig,
 use ns_lbp::params::synth::synth_params;
 use ns_lbp::params::NetParams;
 use ns_lbp::sensor::Frame;
-use ns_lbp::serve::Server;
+use ns_lbp::serve::{Request, Server};
 use ns_lbp::testing::synth_frames;
 
 fn setup(n: usize, seed: u64) -> (NetParams, Vec<Frame>) {
@@ -116,7 +116,7 @@ fn serve_layer_backend_parity() {
         let server = Server::start(params.clone(), config).unwrap();
         let tickets: Vec<_> = frames
             .iter()
-            .map(|f| server.submit(f.clone()).unwrap())
+            .map(|f| server.submit(Request::from_frame(f.clone())).unwrap())
             .collect();
         let mut responses: Vec<_> =
             tickets.into_iter().map(|t| t.wait().unwrap()).collect();
@@ -145,7 +145,7 @@ fn serve_layer_reports_cross_check_counts() {
     let server = Server::start(params, config).unwrap();
     let tickets: Vec<_> = frames
         .iter()
-        .map(|f| server.submit(f.clone()).unwrap())
+        .map(|f| server.submit(Request::from_frame(f.clone())).unwrap())
         .collect();
     for t in tickets {
         let r = t.wait().unwrap();
@@ -155,6 +155,60 @@ fn serve_layer_reports_cross_check_counts() {
     let report = server.drain().unwrap();
     assert_eq!(report.cross_checked, 3);
     assert_eq!(report.cross_check_mismatches, 0);
+}
+
+/// Whole-batch dispatch parity (the acceptance-criteria test): for both
+/// in-tree backends, one `infer_batch` over N frames produces exactly
+/// the logits of N per-frame `infer_frame` calls — so the batch-aware
+/// paths (weight-stationary functional MLP, architectural multi-frame
+/// sub-array packing) change cost, never results.
+#[test]
+fn batched_and_per_frame_logits_match_on_both_backends() {
+    let (params, frames) = setup(5, 67);
+    // early_exit matters for the architectural path: a packed chunk may
+    // carry lanes from two frames, and the exit must still wait for
+    // every lane — parity has to hold in both modes
+    for (kind, early_exit) in [
+        (BackendKind::Functional, false),
+        (BackendKind::Architectural, false),
+        (BackendKind::Architectural, true),
+    ] {
+        let config = EngineConfig {
+            arch: ArchSim { lbp: true, mlp: true, early_exit },
+            ..Default::default()
+        };
+        let mut batched_engine = Engine::builder()
+            .config(config.clone())
+            .params(params.clone())
+            .backend(kind)
+            .build()
+            .unwrap();
+        let mut per_frame_engine = Engine::builder()
+            .config(config)
+            .params(params.clone())
+            .backend(kind)
+            .build()
+            .unwrap();
+        let batched = batched_engine.infer_batch(&frames).unwrap();
+        assert_eq!(batched.frames.len(), frames.len(), "{kind}");
+        for (frame, out) in frames.iter().zip(&batched.frames) {
+            let single = per_frame_engine.infer_frame(frame).unwrap();
+            assert_eq!(single.seq, out.seq, "{kind}");
+            assert_eq!(single.logits, out.logits,
+                       "backend {kind} batch/per-frame divergence on \
+                        frame {}", out.seq);
+            assert_eq!(single.predicted, out.predicted);
+        }
+        assert_eq!(batched.telemetry().arch_mismatches, 0, "{kind}");
+        if kind == BackendKind::Architectural {
+            // batched fleet passes amortize: the batch's modeled time is
+            // below the per-frame sum (5x the chunks, same pass count
+            // under the default 320-sub-array budget)
+            assert!(batched.telemetry().arch_time_ns
+                        < per_frame_engine.telemetry().arch_time_ns,
+                    "no sub-array pass packing across the batch");
+        }
+    }
 }
 
 /// Without the `pjrt` cargo feature the PJRT backend must fail at

@@ -9,6 +9,7 @@ use ns_lbp::lbp::opcount::LbpCost;
 use ns_lbp::lbp::{compare_ref, parallel_compare};
 use ns_lbp::mapping::{partition, partition_stats, LbpSubarrayMap};
 use ns_lbp::mlp::{dot_unsigned_ref, MlpSubarrayMap};
+use ns_lbp::serve::queue::{BoundedQueue, PushError};
 use ns_lbp::sram::{CacheGeometry, Region, RegionLayout, SubArray};
 use ns_lbp::testing::{check, Config, Gen};
 
@@ -261,6 +262,96 @@ fn ns_lbp_params_synth(seed: u64) -> (Vec<u8>, ns_lbp::params::NetParams) {
         }
     }
     (out, params)
+}
+
+/// `BoundedQueue` under concurrent submit and a mid-stream close: no
+/// admitted item is lost or duplicated, every rejection is explicit, and
+/// fullness rejects exactly past the configured depth.
+#[test]
+fn prop_bounded_queue_concurrent_submit_close() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    check(Config::default().cases(25), "queue submit/close", |g: &mut Gen| {
+        let capacity = g.usize_in(1, 8);
+        let producers = g.usize_in(1, 4);
+        let per_producer = g.usize_in(1, 60) as u32;
+        let close_after = g.usize_in(0, 40) as u32;
+
+        // phase 1 (single-threaded): fullness is exact at `capacity`
+        {
+            let q: BoundedQueue<u32> = BoundedQueue::new(capacity);
+            for i in 0..capacity as u32 {
+                q.try_push(i).unwrap();
+            }
+            let (err, item) = q.try_push(999).unwrap_err();
+            assert_eq!(err, PushError::Full);
+            assert_eq!(item, 999);
+            assert_eq!(q.len(), capacity);
+        }
+
+        // phase 2 (concurrent): producers try_push unique values while a
+        // consumer drains and a closer closes mid-stream
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(capacity));
+        let closed_flag = Arc::new(AtomicBool::new(false));
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        };
+        let closer = {
+            let q = Arc::clone(&q);
+            let closed_flag = Arc::clone(&closed_flag);
+            std::thread::spawn(move || {
+                while q.len() < capacity.min(close_after as usize)
+                    && !closed_flag.load(Ordering::Acquire)
+                {
+                    std::thread::yield_now();
+                }
+                q.close();
+            })
+        };
+        let handles: Vec<_> = (0..producers as u32)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut accepted = Vec::new();
+                    for i in 0..per_producer {
+                        let v = p * 10_000 + i;
+                        match q.try_push(v) {
+                            Ok(()) => accepted.push(v),
+                            Err((PushError::Full, back)) => {
+                                // handed back intact; not admitted
+                                assert_eq!(back, v);
+                            }
+                            Err((PushError::Closed, back)) => {
+                                assert_eq!(back, v);
+                                break; // closed stays closed
+                            }
+                        }
+                    }
+                    accepted
+                })
+            })
+            .collect();
+        let mut accepted: Vec<u32> = Vec::new();
+        for h in handles {
+            accepted.extend(h.join().unwrap());
+        }
+        closed_flag.store(true, Ordering::Release);
+        closer.join().unwrap();
+        let mut delivered = consumer.join().unwrap();
+
+        // exactly-once delivery of exactly the accepted set
+        accepted.sort_unstable();
+        delivered.sort_unstable();
+        assert_eq!(delivered, accepted, "lost or duplicated items");
+    });
 }
 
 /// DPU pooled quantization: bounded, monotone, exact at the extremes.

@@ -1,16 +1,18 @@
-//! Serving-layer integration tests: admission control, deadline
-//! batching, graceful drain, and — the load-bearing property — shard
-//! count not changing model outputs.
+//! Serving-layer integration tests: typed-request admission control,
+//! QoS-class routing with per-class metrics, drop-oldest shedding,
+//! deadline batching, bounded ticket waits, graceful drain, and — the
+//! load-bearing property — shard count not changing model outputs.
 
 use std::time::{Duration, Instant};
 
 use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
+use ns_lbp::engine::{BackendKind, QosClass};
 use ns_lbp::params::synth::synth_params;
 use ns_lbp::params::NetParams;
 use ns_lbp::sensor::Frame;
 use ns_lbp::serve::batcher::{BatchPolicy, Batcher};
 use ns_lbp::serve::queue::{BoundedQueue, PushError};
-use ns_lbp::serve::{InferResponse, Server};
+use ns_lbp::serve::{InferResponse, Request, Server};
 
 fn synth_frames(n: usize, seed: u64) -> (NetParams, Vec<Frame>) {
     let (_, params) = synth_params(5);
@@ -28,7 +30,7 @@ fn serve_all(params: &NetParams, frames: &[Frame], shards: usize,
     let server = Server::start(params.clone(), config).unwrap();
     let tickets: Vec<_> = frames
         .iter()
-        .map(|f| server.submit(f.clone()).unwrap())
+        .map(|f| server.submit(Request::from_frame(f.clone())).unwrap())
         .collect();
     let mut responses: Vec<InferResponse> =
         tickets.into_iter().map(|t| t.wait().unwrap()).collect();
@@ -86,11 +88,12 @@ fn server_admission_control_rejects_past_depth() {
 
     // at most 1 (processing) + 2 (batch queue) + 1 (batcher in hand)
     // + 2 (request queue) = 6 frames can be in flight; the rest of the
-    // burst must bounce off admission control
+    // burst must bounce off admission control (standard class rejects
+    // the newest rather than dropping the oldest)
     let mut tickets = Vec::new();
     let mut rejected = 0;
     for _ in 0..16 {
-        match server.submit(frames[0].clone()) {
+        match server.submit(Request::from_frame(frames[0].clone())) {
             Ok(t) => tickets.push(t),
             Err(e) => {
                 rejected += 1;
@@ -105,6 +108,9 @@ fn server_admission_control_rejects_past_depth() {
     let report = server.drain().unwrap();
     assert_eq!(report.rejected, rejected);
     assert_eq!(report.completed + report.rejected, 16);
+    assert_eq!(report.dropped, 0);
+    let std_class = report.class(QosClass::Standard).unwrap();
+    assert_eq!(std_class.rejected, rejected);
 }
 
 #[test]
@@ -152,7 +158,7 @@ fn drain_completes_every_admitted_frame() {
     let server = Server::start(params, config).unwrap();
     let tickets: Vec<_> = frames
         .iter()
-        .map(|f| server.submit(f.clone()).unwrap())
+        .map(|f| server.submit(Request::from_frame(f.clone())).unwrap())
         .collect();
     // drain without waiting on tickets first: the graceful path must
     // still deliver every admitted frame before returning
@@ -163,4 +169,191 @@ fn drain_completes_every_admitted_frame() {
         let r = t.try_take().expect("drained server left a pending ticket");
         r.unwrap();
     }
+}
+
+/// The acceptance-criteria scenario: two classes routed to two different
+/// backends through one server, with per-class latency and drop/reject
+/// metrics in the final report — and identical logits for identical
+/// frames regardless of which class (and therefore backend) served them.
+#[test]
+fn routed_two_class_serve_reports_per_class_metrics() {
+    let (params, frames) = synth_frames(6, 77);
+    let mut config = CoordinatorConfig {
+        arch: ArchSim { lbp: true, mlp: false, early_exit: false },
+        ..Default::default()
+    };
+    config.system.engine.backend = BackendKind::Functional;
+    config.system.engine.routing
+        .set(QosClass::BestEffort, BackendKind::Functional);
+    config.system.engine.routing
+        .set(QosClass::Billed, BackendKind::Architectural);
+    config.system.serve.shards = 2;
+    config.system.serve.max_batch = 4;
+    config.system.serve.queue_depth = 64;
+    config.system.serve.batch_deadline_us = 300;
+    let server = Server::start(params, config).unwrap();
+
+    // two sensor streams, one per class, submitting the *same* frames
+    let cheap = server.session(1).with_class(QosClass::BestEffort);
+    let billed = server.session(2).with_class(QosClass::Billed);
+    let mut tickets = Vec::new();
+    for f in &frames {
+        tickets.push(cheap.submit(f.clone()).unwrap());
+        tickets.push(billed.submit(f.clone()).unwrap());
+    }
+    let mut responses: Vec<InferResponse> =
+        tickets.into_iter().map(|t| t.wait().unwrap()).collect();
+    for r in &responses {
+        match r.class {
+            QosClass::BestEffort => {
+                assert_eq!(r.sensor_id, 1);
+                assert_eq!(r.backend, BackendKind::Functional);
+                // the cheap path models no hardware time
+                assert_eq!(r.report.telemetry.arch_time_ns, 0.0);
+            }
+            QosClass::Billed => {
+                assert_eq!(r.sensor_id, 2);
+                assert_eq!(r.backend, BackendKind::Architectural);
+                assert!(r.report.telemetry.arch_time_ns > 0.0);
+                assert_eq!(r.report.telemetry.arch_mismatches, 0);
+            }
+            QosClass::Standard => panic!("no standard traffic submitted"),
+        }
+    }
+    // same frame, either backend, same logits
+    responses.sort_by_key(|r| (r.sensor_id, r.seq()));
+    let (cheap_rs, billed_rs) = responses.split_at(frames.len());
+    for (a, b) in cheap_rs.iter().zip(billed_rs) {
+        assert_eq!(a.seq(), b.seq());
+        assert_eq!(a.report.logits, b.report.logits, "frame {}", a.seq());
+    }
+
+    drop(cheap);
+    drop(billed);
+    let report = server.drain().unwrap();
+    assert_eq!(report.completed, 2 * frames.len() as u64);
+    assert_eq!(report.arch_mismatches, 0);
+    let be = report.class(QosClass::BestEffort).unwrap();
+    assert_eq!(be.accepted, frames.len() as u64);
+    assert_eq!(be.completed, frames.len() as u64);
+    assert_eq!(be.rejected + be.dropped + be.failed, 0);
+    assert!(be.p50_ms > 0.0);
+    assert!(be.p50_ms <= be.p95_ms && be.p95_ms <= be.p99_ms);
+    let bl = report.class(QosClass::Billed).unwrap();
+    assert_eq!(bl.completed, frames.len() as u64);
+    assert!(bl.p50_ms > 0.0);
+    assert!(bl.p50_ms <= bl.p99_ms);
+    let std_class = report.class(QosClass::Standard).unwrap();
+    assert!(!std_class.active(), "no standard traffic was offered");
+}
+
+/// Best-effort admission under overload sheds the *oldest* queued frame
+/// (fresh sensor pixels win), resolves the shed ticket with an error,
+/// and accounts every shed in the per-class drop counter.
+#[test]
+fn drop_oldest_sheds_stale_best_effort_frames() {
+    let (params, frames) = synth_frames(1, 88);
+    let mut config = CoordinatorConfig {
+        arch: ArchSim { lbp: true, mlp: false, early_exit: false },
+        ..Default::default()
+    };
+    config.system.serve.shards = 1;
+    config.system.serve.max_batch = 1;
+    config.system.serve.batch_deadline_us = 1;
+    config.system.serve.classes[QosClass::BestEffort.index()].queue_depth =
+        Some(2);
+    let server = Server::start(params, config).unwrap();
+    let cam = server.session(7).with_class(QosClass::BestEffort);
+    // 16 fast submits into a depth-2 queue over a ms-per-frame backend:
+    // every submit is accepted (never rejected), the backlog is shed
+    let tickets: Vec<_> = (0..16)
+        .map(|_| cam.submit(frames[0].clone()).unwrap())
+        .collect();
+    let mut completed = 0u64;
+    let mut dropped = 0u64;
+    for t in tickets {
+        match t.wait() {
+            Ok(r) => {
+                assert_eq!(r.class, QosClass::BestEffort);
+                completed += 1;
+            }
+            Err(e) => {
+                assert!(e.to_string().contains("dropped"), "{e}");
+                dropped += 1;
+            }
+        }
+    }
+    assert!(dropped > 0, "a depth-2 drop-oldest queue must shed backlog");
+    drop(cam);
+    let report = server.drain().unwrap();
+    let be = report.class(QosClass::BestEffort).unwrap();
+    assert_eq!(be.accepted, 16);
+    assert_eq!(be.rejected, 0);
+    assert_eq!(be.dropped, dropped);
+    assert_eq!(be.completed, completed);
+    assert_eq!(report.completed + report.dropped, 16);
+}
+
+/// A per-request deadline bounds queue staleness: a request still queued
+/// past its deadline is shed at dispatch, not inferred.
+#[test]
+fn per_request_deadline_expires_stale_requests() {
+    let (params, frames) = synth_frames(1, 91);
+    let mut config = CoordinatorConfig {
+        arch: ArchSim { lbp: false, mlp: false, early_exit: false },
+        ..Default::default()
+    };
+    config.system.serve.shards = 1;
+    config.system.serve.max_batch = 8;
+    // the lone frame waits out the full 2 ms batch deadline, far past
+    // its 1 µs freshness bound
+    config.system.serve.batch_deadline_us = 2000;
+    let server = Server::start(params, config).unwrap();
+    let cam = server
+        .session(3)
+        .with_class(QosClass::Billed)
+        .with_deadline(Duration::from_micros(1));
+    let ticket = cam.submit(frames[0].clone()).unwrap();
+    let err = ticket.wait().unwrap_err();
+    assert!(err.to_string().contains("deadline expired"), "{err}");
+    drop(cam);
+    let report = server.drain().unwrap();
+    let bl = report.class(QosClass::Billed).unwrap();
+    assert_eq!(bl.accepted, 1);
+    assert_eq!(bl.dropped, 1);
+    assert_eq!(bl.completed, 0);
+}
+
+/// A server dropped without `drain()` orphans whatever was still queued;
+/// `Ticket::wait_timeout` bounds the wait instead of blocking forever.
+#[test]
+fn wait_timeout_never_blocks_forever_on_a_dropped_server() {
+    let (params, frames) = synth_frames(8, 99);
+    let mut config = CoordinatorConfig {
+        arch: ArchSim { lbp: true, mlp: false, early_exit: false },
+        ..Default::default()
+    };
+    config.system.serve.shards = 1;
+    config.system.serve.max_batch = 1;
+    config.system.serve.batch_deadline_us = 1;
+    config.system.serve.queue_depth = 64;
+    let server = Server::start(params, config).unwrap();
+    let tickets: Vec<_> = frames
+        .iter()
+        .map(|f| server.submit(Request::from_frame(f.clone())).unwrap())
+        .collect();
+    drop(server); // no drain: queues force-closed, backlog may be orphaned
+    let t0 = Instant::now();
+    let mut resolved = 0;
+    let mut orphaned = 0;
+    for t in &tickets {
+        match t.wait_timeout(Duration::from_millis(100)) {
+            Some(_) => resolved += 1,
+            None => orphaned += 1,
+        }
+    }
+    assert_eq!(resolved + orphaned, tickets.len());
+    // the point of wait_timeout: bounded, no matter what died underneath
+    assert!(t0.elapsed() < Duration::from_secs(5),
+            "wait_timeout failed to bound the wait");
 }
