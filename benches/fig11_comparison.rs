@@ -10,11 +10,9 @@
 
 use ns_lbp::baselines::{cost, Design};
 use ns_lbp::bench_harness::Table;
-use ns_lbp::energy::EnergyModel;
 use ns_lbp::sram::CacheGeometry;
 
 fn main() {
-    let em = EnergyModel::default();
     let g = CacheGeometry::default();
 
     for dataset in ["svhn", "mnist"] {
@@ -27,7 +25,7 @@ fn main() {
         ];
         let reports: Vec<_> = designs
             .iter()
-            .map(|&d| cost(d, dataset, &em, &g).unwrap())
+            .map(|&d| cost(d, dataset, &g).unwrap())
             .collect();
         let ap = &reports[0];
 

@@ -12,7 +12,6 @@
 use ns_lbp::baselines::{cost, Design};
 use ns_lbp::bench_harness::Table;
 use ns_lbp::coordinator::{Coordinator, CoordinatorConfig};
-use ns_lbp::energy::EnergyModel;
 use ns_lbp::params;
 use ns_lbp::rng::Xoshiro256;
 use ns_lbp::sensor::{ReplaySensor, SensorConfig};
@@ -60,11 +59,10 @@ fn measured_energy_uj(apx: usize) -> f64 {
 
 fn main() {
     println!("== Fig. 4: energy vs accuracy vs approximated bits (MNIST) ==\n");
-    let em = EnergyModel::default();
     let g = CacheGeometry::default();
     let acc = accuracy_column();
 
-    let base_model = cost(Design::NsLbpApLbp { apx: 0 }, "mnist", &em, &g)
+    let base_model = cost(Design::NsLbpApLbp { apx: 0 }, "mnist", &g)
         .unwrap()
         .energy_uj();
     let base_meas = measured_energy_uj(0);
@@ -73,7 +71,7 @@ fn main() {
                                  "measured energy [µJ]", "measured saving",
                                  "accuracy [%]"]);
     for apx in 0..=4usize {
-        let model = cost(Design::NsLbpApLbp { apx: apx as u64 }, "mnist", &em, &g)
+        let model = cost(Design::NsLbpApLbp { apx: apx as u64 }, "mnist", &g)
             .unwrap()
             .energy_uj();
         let meas = measured_energy_uj(apx);

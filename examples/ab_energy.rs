@@ -1,0 +1,40 @@
+//! A/B energy harness walkthrough: price the same frames under two
+//! hardware profiles and diff the result (the library form of
+//! `ns-lbp ab --profile A --profile B`).
+//!
+//! Run with: `cargo run --example ab_energy`
+
+use ns_lbp::coordinator::{ArchSim, CoordinatorConfig};
+use ns_lbp::hw::{ab::AbHarness, CostModel, HwProfile};
+use ns_lbp::params::synth::synth_params;
+use ns_lbp::testing::synth_frames;
+
+fn main() -> ns_lbp::Result<()> {
+    // a synthetic network + workload (swap in `params::load(...)` for a
+    // real artifact)
+    let (_, params) = synth_params(7);
+    let frames = synth_frames(&params, 8, 7)?;
+
+    // arm A: the paper's 65 nm NS-LBP point; arm B: the prior-generation
+    // 28 nm compute-SRAM.  Any profile works here — a builtin name via
+    // HwProfile::resolve("..."), a configs/profiles/*.toml path, or a
+    // hand-built HwProfile value.
+    let a = HwProfile::ns_lbp_65nm();
+    let b = HwProfile::sram38_28nm();
+    println!(
+        "A = {} ({:.2} GHz, {:.1} TOPS/W) vs B = {} ({:.2} GHz, {:.1} TOPS/W)\n",
+        a.name, a.energy.freq_ghz, a.tops_per_watt(256),
+        b.name, b.energy.freq_ghz, b.tops_per_watt(256),
+    );
+
+    let config = CoordinatorConfig {
+        arch: ArchSim { lbp: true, mlp: true, early_exit: false },
+        ..Default::default()
+    };
+    let harness = AbHarness::new(params, config, a, b)?;
+    let report = harness.run(&frames)?;
+    report.print();
+
+    println!("\nmachine-readable: {}", report.to_json());
+    Ok(())
+}

@@ -55,8 +55,8 @@ fn main() -> ns_lbp::Result<()> {
         println!(
             "frame {}: class {} | {} ISA instrs | {:.2} µJ | {:.2} µs modeled",
             r.seq, r.predicted, r.telemetry.exec.instructions,
-            r.telemetry.energy.total_pj() / 1e6,
-            r.telemetry.arch_time_ns / 1e3
+            r.telemetry.cost.energy.total_pj() / 1e6,
+            r.telemetry.cost.time_ns / 1e3
         );
     }
     println!(

@@ -12,14 +12,17 @@
 //!   and batch-norm (the float path is its energy Achilles heel).
 //!
 //! Every model is an *analytic* cost over the same op-count substrate
-//! ([`crate::lbp::opcount`]) and the calibrated per-event energies
-//! ([`crate::energy::EnergyParams`]); platform differences are explicit
-//! [`Platform`] constants.  The reproduction target is the *shape* of the
-//! paper's result (who wins and by roughly what factor — Ap-LBP ~2.2×/4×
-//! over LBPNet, ~5.2×/6.2× over CNN, ~4×/2.3× over LBCNN in energy/time),
-//! not the absolute joules of the authors' testbed.
+//! ([`crate::lbp::opcount`]); each design is a thin [`HwProfile`]
+//! selection ([`Design::profile`] — `ns_lbp_65nm`, `sram38_28nm`,
+//! `cnn8_digital`, `lbcnn`) over that substrate, so platform differences
+//! live in the shared `hw` subsystem rather than in local constants.
+//! The reproduction target is the *shape* of the paper's result (who
+//! wins and by roughly what factor — Ap-LBP ~2.2×/4× over LBPNet,
+//! ~5.2×/6.2× over CNN, ~4×/2.3× over LBCNN in energy/time), not the
+//! absolute joules of the authors' testbed.
 
-use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::energy::EnergyBreakdown;
+use crate::hw::{CostModel, HwProfile};
 use crate::lbp::opcount::ApLbpOps;
 use crate::sram::CacheGeometry;
 
@@ -45,44 +48,18 @@ impl Design {
             Design::Lbcnn => "LBCNN [15] on [38]".into(),
         }
     }
+
+    /// The hardware profile this design runs on — the Fig.-11 platform
+    /// constants now live as named [`HwProfile`] built-ins.
+    pub fn profile(&self) -> HwProfile {
+        match self {
+            Design::NsLbpApLbp { .. } => HwProfile::ns_lbp_65nm(),
+            Design::LbpNet => HwProfile::sram38_28nm(),
+            Design::Cnn8bit => HwProfile::cnn8_digital(),
+            Design::Lbcnn => HwProfile::lbcnn(),
+        }
+    }
 }
-
-/// Platform constants.
-#[derive(Clone, Copy, Debug)]
-pub struct Platform {
-    pub freq_ghz: f64,
-    /// Multiplier on the NS-LBP per-event energies (older node/design).
-    pub energy_scale: f64,
-    /// Cycles per 8-bit bit-serial MAC (platform [38] is bit-serial).
-    pub mac_cycles: u64,
-    /// Parallel MAC lanes.
-    pub mac_lanes: u64,
-    /// Parallel float lanes (LBCNN's 1×1/batch-norm path).
-    pub flop_lanes: u64,
-}
-
-/// NS-LBP itself (65 nm GP @ 1.1 V).
-pub const NSLBP_PLATFORM: Platform = Platform {
-    freq_ghz: 1.25,
-    energy_scale: 1.0,
-    mac_cycles: 0,
-    mac_lanes: 0,
-    flop_lanes: 0,
-};
-
-/// The [38]-style compute-SRAM (28 nm, 475 MHz, bit-serial arithmetic,
-/// transposable-8T array with a costlier SA).  The energy scale folds the
-/// higher SA overhead (5.52× vs our 3.4×) and bit-serial data movement.
-pub const PRIOR_PLATFORM: Platform = Platform {
-    freq_ghz: 0.475,
-    energy_scale: 1.55,
-    mac_cycles: 16, // 8-bit × 8-bit bit-serial multiply-accumulate
-    // effective 8-bit MAC lanes: all 4×128×256 bit-cells of [38] active in
-    // bit-serial column-parallel mode ÷ 8-bit operand width (calibrated —
-    // see DESIGN.md §Substitutions)
-    mac_lanes: 4 * 128 * 256 / 8,
-    flop_lanes: 512,
-};
 
 /// Cost of one inference.
 #[derive(Clone, Debug)]
@@ -104,33 +81,45 @@ impl CostReport {
     }
 }
 
-/// Per-image cost of `design` on `dataset` ("mnist" | "svhn").
-pub fn cost(design: Design, dataset: &str, em: &EnergyModel,
-            geometry: &CacheGeometry) -> Option<CostReport> {
+/// Per-image cost of `design` on `dataset` ("mnist" | "svhn"), priced
+/// under the design's own built-in profile ([`Design::profile`]).
+pub fn cost(design: Design, dataset: &str, geometry: &CacheGeometry)
+            -> Option<CostReport> {
+    cost_with_profile(design, dataset, &design.profile(), geometry)
+}
+
+/// Per-image cost of `design` under an explicit [`HwProfile`] — the
+/// swap-in point for alternative hardware comparisons.  Returns `None`
+/// for an unknown dataset, and for a MAC-based design (CNN / LBCNN)
+/// priced under a profile without the required datapath
+/// (`mac_cycles`/`mac_lanes`/`flop_lanes` of 0) — a zero-lane datapath
+/// would otherwise report nonsense (zero or lane-starved time).
+pub fn cost_with_profile(design: Design, dataset: &str, profile: &HwProfile,
+                         geometry: &CacheGeometry) -> Option<CostReport> {
     match design {
         Design::NsLbpApLbp { apx } => {
             let net = ApLbpOps::for_dataset(dataset, apx)?;
-            Some(lbp_cost(design, &net, em, geometry, NSLBP_PLATFORM,
+            Some(lbp_cost(design, &net, profile, geometry,
                           /*planes=*/ 8 - apx, /*adc_bits=*/ 8 - apx))
         }
         Design::LbpNet => {
             let net = ApLbpOps::for_dataset(dataset, 0)?;
-            Some(lbp_cost(design, &net, em, geometry, PRIOR_PLATFORM, 8, 8))
+            Some(lbp_cost(design, &net, profile, geometry, 8, 8))
         }
-        Design::Cnn8bit => Some(cnn_cost(dataset, em)?),
-        Design::Lbcnn => Some(lbcnn_cost(dataset, em)?),
+        Design::Cnn8bit => cnn_cost(dataset, profile),
+        Design::Lbcnn => lbcnn_cost(dataset, profile),
     }
 }
 
 /// Shared LBP-network cost (Ap-LBP on NS-LBP, or exact LBPNet on [38]).
-fn lbp_cost(design: Design, net: &ApLbpOps, em: &EnergyModel,
-            geometry: &CacheGeometry, platform: Platform, planes: u64,
+fn lbp_cost(design: Design, net: &ApLbpOps, profile: &HwProfile,
+            geometry: &CacheGeometry, planes: u64,
             adc_bits: u64) -> CostReport {
     let ops = match design {
         Design::NsLbpApLbp { .. } => net.total_aplbp(),
         _ => net.total_lbpnet(),
     };
-    let p = &em.params;
+    let p = &profile.energy;
     let lanes = geometry.cols as f64;
 
     // --- LBP layers: row-parallel in-memory compares --------------------
@@ -159,13 +148,13 @@ fn lbp_cost(design: Design, net: &ApLbpOps, em: &EnergyModel,
 
     // --- sensor ----------------------------------------------------------
     let pixels = net.height * net.width * net.in_channels;
-    e.add(&em.sensor_energy(pixels, adc_bits));
+    e.add(&profile.sensor_cost(pixels, adc_bits).energy);
 
     // --- platform scaling -------------------------------------------------
-    scale_energy(&mut e, platform.energy_scale);
+    scale_energy(&mut e, profile.energy_scale);
     let subarrays = geometry.total_subarrays() as f64;
     let total_cycles = (lbp_cycles + mlp_cycles) / subarrays.max(1.0);
-    let time_ns = total_cycles / platform.freq_ghz;
+    let time_ns = total_cycles / profile.energy.freq_ghz;
 
     CostReport {
         design: design.name(),
@@ -176,9 +165,12 @@ fn lbp_cost(design: Design, net: &ApLbpOps, em: &EnergyModel,
 }
 
 /// 8-bit CNN with the Table-1-equivalent layer budget, bit-serial on [38].
-fn cnn_cost(dataset: &str, em: &EnergyModel) -> Option<CostReport> {
+fn cnn_cost(dataset: &str, profile: &HwProfile) -> Option<CostReport> {
+    if profile.mac_cycles == 0 || profile.mac_lanes == 0 {
+        return None; // no MAC datapath on this profile
+    }
     let net = ApLbpOps::for_dataset(dataset, 0)?;
-    let p = &em.params;
+    let p = &profile.energy;
     // Table 1: the CNN equivalent of each LBP layer costs p·q·ch·r·s MACs
     let pixels = net.height * net.width;
     let mut macs = 0u64;
@@ -194,12 +186,12 @@ fn cnn_cost(dataset: &str, em: &EnergyModel) -> Option<CostReport> {
         read_pj: macs as f64 * 2.0 * 8.0 / 256.0 * p.row_read_pj,
         ..Default::default()
     };
-    e.add(&em.sensor_energy(pixels * net.in_channels, 8));
-    scale_energy(&mut e, PRIOR_PLATFORM.energy_scale);
+    e.add(&profile.sensor_cost(pixels * net.in_channels, 8).energy);
+    scale_energy(&mut e, profile.energy_scale);
 
-    let cycles = macs as f64 * PRIOR_PLATFORM.mac_cycles as f64
-        / PRIOR_PLATFORM.mac_lanes as f64;
-    let time_ns = cycles / PRIOR_PLATFORM.freq_ghz;
+    let cycles = macs as f64 * profile.mac_cycles as f64
+        / profile.mac_lanes as f64;
+    let time_ns = cycles / profile.energy.freq_ghz;
 
     // conv weights (8-bit) + FC weights (8-bit)
     let conv_w: u64 = (0..net.n_lbp_layers)
@@ -216,9 +208,12 @@ fn cnn_cost(dataset: &str, em: &EnergyModel) -> Option<CostReport> {
 
 /// LBCNN: sparse binary ancestor convs (cheap, XNOR-ish) + float 1×1
 /// fusion and 2-D batch-norm (the expensive part, per §2.2).
-fn lbcnn_cost(dataset: &str, em: &EnergyModel) -> Option<CostReport> {
+fn lbcnn_cost(dataset: &str, profile: &HwProfile) -> Option<CostReport> {
+    if profile.mac_lanes == 0 || profile.flop_lanes == 0 {
+        return None; // needs both the binary-conv array and a float path
+    }
     let net = ApLbpOps::for_dataset(dataset, 0)?;
-    let p = &em.params;
+    let p = &profile.energy;
     let pixels = net.height * net.width;
     let n_anchor = 4 * net.kernels_per_layer; // LBCNN needs more ancestors
     let mut bin_ops = 0u64; // binary conv adds/subs
@@ -240,14 +235,14 @@ fn lbcnn_cost(dataset: &str, em: &EnergyModel) -> Option<CostReport> {
             + flops as f64 * 2.0 * 32.0 / 256.0 / 8.0 * p.row_read_pj,
         ..Default::default()
     };
-    e.add(&em.sensor_energy(pixels * net.in_channels, 8));
-    scale_energy(&mut e, PRIOR_PLATFORM.energy_scale);
+    e.add(&profile.sensor_cost(pixels * net.in_channels, 8).energy);
+    scale_energy(&mut e, profile.energy_scale);
 
     // binary convs run fully bit-parallel over the array; floats on the
     // platform's SIMD float datapath
-    let cycles = bin_ops as f64 / (PRIOR_PLATFORM.mac_lanes * 8) as f64
-        + flops as f64 / PRIOR_PLATFORM.flop_lanes as f64;
-    let time_ns = cycles / PRIOR_PLATFORM.freq_ghz;
+    let cycles = bin_ops as f64 / (profile.mac_lanes * 8) as f64
+        + flops as f64 / profile.flop_lanes as f64;
+    let time_ns = cycles / profile.energy.freq_ghz;
 
     // ancestors (1 bit, sparse) + float 1×1 weights + bn params (f32)
     let anchor_bits: u64 = (0..net.n_lbp_layers)
@@ -298,7 +293,6 @@ mod tests {
     use super::*;
 
     fn reports() -> Vec<CostReport> {
-        let em = EnergyModel::default();
         let g = CacheGeometry::default();
         [
             Design::NsLbpApLbp { apx: 2 },
@@ -307,7 +301,7 @@ mod tests {
             Design::Lbcnn,
         ]
         .iter()
-        .map(|&d| cost(d, "svhn", &em, &g).unwrap())
+        .map(|&d| cost(d, "svhn", &g).unwrap())
         .collect()
     }
 
@@ -363,12 +357,11 @@ mod tests {
 
     #[test]
     fn apx_monotone_in_energy_and_time() {
-        let em = EnergyModel::default();
         let g = CacheGeometry::default();
         let mut prev_e = f64::INFINITY;
         let mut prev_t = f64::INFINITY;
         for apx in 0..=4 {
-            let r = cost(Design::NsLbpApLbp { apx }, "mnist", &em, &g).unwrap();
+            let r = cost(Design::NsLbpApLbp { apx }, "mnist", &g).unwrap();
             assert!(r.energy_uj() < prev_e, "apx={apx}");
             assert!(r.time_us() <= prev_t, "apx={apx}");
             prev_e = r.energy_uj();
@@ -378,18 +371,42 @@ mod tests {
 
     #[test]
     fn unknown_dataset_is_none() {
-        let em = EnergyModel::default();
         let g = CacheGeometry::default();
-        assert!(cost(Design::LbpNet, "imagenet", &em, &g).is_none());
+        assert!(cost(Design::LbpNet, "imagenet", &g).is_none());
     }
 
     #[test]
     fn mnist_cheaper_than_svhn() {
-        let em = EnergyModel::default();
         let g = CacheGeometry::default();
-        let m = cost(Design::NsLbpApLbp { apx: 2 }, "mnist", &em, &g).unwrap();
-        let s = cost(Design::NsLbpApLbp { apx: 2 }, "svhn", &em, &g).unwrap();
+        let m = cost(Design::NsLbpApLbp { apx: 2 }, "mnist", &g).unwrap();
+        let s = cost(Design::NsLbpApLbp { apx: 2 }, "svhn", &g).unwrap();
         assert!(m.energy_uj() < s.energy_uj());
         assert!(m.time_us() < s.time_us());
+    }
+
+    #[test]
+    fn designs_select_their_builtin_profiles_and_swap_cleanly() {
+        assert_eq!(Design::NsLbpApLbp { apx: 2 }.profile().name,
+                   "ns_lbp_65nm");
+        assert_eq!(Design::LbpNet.profile().name, "sram38_28nm");
+        assert_eq!(Design::Cnn8bit.profile().name, "cnn8_digital");
+        assert_eq!(Design::Lbcnn.profile().name, "lbcnn");
+        // swapping Ap-LBP onto the prior platform must cost more than on
+        // its native 65 nm point — the A/B premise at the analytic level
+        let g = CacheGeometry::default();
+        let native = cost(Design::NsLbpApLbp { apx: 2 }, "svhn", &g).unwrap();
+        let ported = cost_with_profile(Design::NsLbpApLbp { apx: 2 }, "svhn",
+                                       &HwProfile::sram38_28nm(), &g)
+            .unwrap();
+        assert!(ported.energy_uj() > native.energy_uj());
+        assert!(ported.time_us() > native.time_us());
+        // MAC-based designs refuse profiles with no MAC/float datapath
+        // instead of reporting zero time
+        assert!(cost_with_profile(Design::Cnn8bit, "svhn",
+                                  &HwProfile::ns_lbp_65nm(), &g)
+            .is_none());
+        assert!(cost_with_profile(Design::Lbcnn, "svhn",
+                                  &HwProfile::ns_lbp_65nm(), &g)
+            .is_none());
     }
 }

@@ -16,6 +16,7 @@ use std::path::Path;
 
 use crate::engine::{BackendKind, QosClass, RoutingPolicy};
 use crate::error::{Error, Result};
+use crate::hw::HwProfile;
 
 /// A parsed scalar or array value.
 #[derive(Clone, Debug, PartialEq)]
@@ -279,6 +280,23 @@ impl ClassKnobs {
     }
 }
 
+/// Hardware cost-model selection (see [`crate::hw`]): which
+/// [`HwProfile`] prices telemetry, picked by name (a built-in) or by
+/// path (a `configs/profiles/*.toml` file) via `[hw] profile = "..."`,
+/// with optional flat field overrides (`hw.freq_ghz = 0.5`,
+/// `hw.energy_scale = 2.0`, any [`crate::hw::ENERGY_FIELDS`] /
+/// [`crate::hw::AREA_FIELDS`] name).  The CLI `--hw-profile` overrides
+/// the file.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HwSelection {
+    /// The selected profile (default: `ns_lbp_65nm`, the paper's point).
+    pub profile: HwProfile,
+    /// True when the config explicitly set `hw.freq_ghz` — an explicit
+    /// hw-side clock always wins over `[circuit] freq_ghz`, even when it
+    /// equals the stock value (see [`SystemConfig::hw_profile`]).
+    pub clock_explicit: bool,
+}
+
 /// Frame-serving subsystem knobs (see [`crate::serve`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServeConfig {
@@ -360,6 +378,8 @@ pub struct SystemConfig {
     pub serve: ServeConfig,
     /// Engine-layer backend selection.
     pub engine: EngineSelection,
+    /// Hardware cost-model selection.
+    pub hw: HwSelection,
     /// Worker threads for the coordinator (0 = one per bank group).
     pub workers: usize,
     /// Artifacts directory for HLO/params files.
@@ -374,6 +394,7 @@ impl Default for SystemConfig {
             sensor: crate::sensor::SensorConfig::default(),
             serve: ServeConfig::default(),
             engine: EngineSelection::default(),
+            hw: HwSelection::default(),
             workers: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -407,8 +428,15 @@ impl SystemConfig {
             "engine.routing.billed",
             "runtime.workers", "runtime.artifacts_dir",
         ];
+        // `[hw]` keys: the profile selector plus flat field overrides
+        // (the legal field set lives in hw, next to the sectioned
+        // profile-file parser, so the two surfaces cannot drift)
         for key in file.keys() {
-            if !KNOWN.contains(&key) {
+            let ok = KNOWN.contains(&key)
+                || key.strip_prefix("hw.").is_some_and(|field| {
+                    field == "profile" || HwProfile::is_override_field(field)
+                });
+            if !ok {
                 return Err(Error::Config(format!("unknown config key {key:?}")));
             }
         }
@@ -517,15 +545,42 @@ impl SystemConfig {
             routing,
         };
 
+        let mut hw = HwSelection::default();
+        if file.contains("hw.profile") {
+            hw.profile = HwProfile::resolve(&file.get_str("hw.profile", "")?)?;
+        }
+        hw.profile.apply_overrides(file, "hw.")?;
+        hw.clock_explicit = file.contains("hw.freq_ghz");
+        hw.profile.validate()?;
+
         Ok(Self {
             cache,
             circuit,
             sensor,
             serve,
             engine,
+            hw,
             workers: file.get_usize("runtime.workers", d.workers)?,
             artifacts_dir: file.get_str("runtime.artifacts_dir", &d.artifacts_dir)?,
         })
+    }
+
+    /// The hardware profile backends price telemetry with.  For the
+    /// default `ns_lbp_65nm` profile *at its stock clock* the
+    /// `[circuit]` frequency wins (so VDD/frequency sweeps keep working
+    /// as before the `hw` subsystem); an explicit hw-side clock — an
+    /// `hw.freq_ghz` override, or a profile carrying its own frequency —
+    /// always wins over `[circuit]`.
+    pub fn hw_profile(&self) -> HwProfile {
+        let mut p = self.hw.profile.clone();
+        let stock = crate::energy::EnergyParams::default().freq_ghz;
+        if !self.hw.clock_explicit
+            && p.name == "ns_lbp_65nm"
+            && p.energy.freq_ghz == stock
+        {
+            p.energy.freq_ghz = self.circuit.freq_ghz;
+        }
+        p
     }
 
     /// Load defaults, then an optional file, then CLI overrides.
@@ -690,6 +745,62 @@ mod tests {
 
         let bad =
             ConfigFile::parse("[serve.standard]\nmax_batch = 0").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn hw_section_selects_profiles_and_applies_overrides() {
+        // default: the paper's point
+        let sc = SystemConfig::default();
+        assert_eq!(sc.hw.profile.name, "ns_lbp_65nm");
+        assert_eq!(sc.hw_profile().name, "ns_lbp_65nm");
+
+        // select a builtin by name
+        let f = ConfigFile::parse("[hw]\nprofile = \"sram38_28nm\"").unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(sc.hw.profile.name, "sram38_28nm");
+        assert!((sc.hw.profile.energy_scale - 1.55).abs() < 1e-12);
+        // a non-default profile carries its own clock (circuit freq does
+        // not clobber it)
+        assert!((sc.hw_profile().energy.freq_ghz - 0.475).abs() < 1e-12);
+
+        // flat field overrides
+        let f = ConfigFile::parse(
+            "[hw]\nfreq_ghz = 2.0\ncompute_op_pj = 3.5\nsa_overhead = 4.0\n\
+             energy_scale = 1.2\nmac_lanes = 128\ncycles.copy = 3",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert!((sc.hw.profile.energy.freq_ghz - 2.0).abs() < 1e-12);
+        assert!((sc.hw.profile.energy.compute_op_pj - 3.5).abs() < 1e-12);
+        assert!((sc.hw.profile.area.sa_overhead - 4.0).abs() < 1e-12);
+        assert!((sc.hw.profile.energy_scale - 1.2).abs() < 1e-12);
+        assert_eq!(sc.hw.profile.mac_lanes, 128);
+        assert_eq!(sc.hw.profile.cycles.of(crate::isa::Opcode::Copy), 3);
+        // an explicit hw-side clock survives hw_profile(): [circuit]'s
+        // default 1.25 GHz must NOT clobber the user's 2.0 GHz
+        assert!((sc.hw_profile().energy.freq_ghz - 2.0).abs() < 1e-12);
+
+        // the default profile still tracks [circuit] freq_ghz (VDD sweeps)
+        let f = ConfigFile::parse("[circuit]\nfreq_ghz = 0.9").unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert!((sc.hw_profile().energy.freq_ghz - 0.9).abs() < 1e-12);
+
+        // ... but an explicit hw.freq_ghz wins even at the stock value
+        let f = ConfigFile::parse(
+            "[circuit]\nfreq_ghz = 0.9\n[hw]\nfreq_ghz = 1.25",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert!(sc.hw.clock_explicit);
+        assert!((sc.hw_profile().energy.freq_ghz - 1.25).abs() < 1e-12);
+
+        // unknown profiles and unknown fields fail loudly
+        let bad = ConfigFile::parse("[hw]\nprofile = \"tpu_v9\"").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad = ConfigFile::parse("[hw]\nwarp_pj = 1.0").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad = ConfigFile::parse("[hw]\nfreq_ghz = 0.0").unwrap();
         assert!(SystemConfig::from_file(&bad).is_err());
     }
 

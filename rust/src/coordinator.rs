@@ -47,6 +47,9 @@ pub struct RunSummary {
     pub cross_check_mismatches: u64,
     /// Host wall-clock of the whole run [s].
     pub wall_seconds: f64,
+    /// Hardware profile that priced `energy`/`total_arch_time_ns`
+    /// (empty when nothing was modeled).
+    pub hw_profile: String,
 }
 
 impl RunSummary {
@@ -204,10 +207,14 @@ impl Coordinator {
         for r in &reports {
             summary.exec.merge(&r.telemetry.exec);
             summary.dpu.merge(&r.telemetry.dpu);
-            summary.energy.add(&r.telemetry.energy);
-            summary.total_arch_time_ns += r.telemetry.arch_time_ns;
+            summary.energy.add(&r.telemetry.cost.energy);
+            summary.total_arch_time_ns += r.telemetry.cost.time_ns;
             summary.cross_check_mismatches +=
                 r.telemetry.cross_check_mismatches;
+            crate::engine::Telemetry::merge_profile_label(
+                &mut summary.hw_profile,
+                &r.telemetry.profile,
+            );
         }
         debug_assert_eq!(
             summary.arch_mismatches,
@@ -397,7 +404,7 @@ mod tests {
         assert_eq!(rf.telemetry.arch_mismatches, 0);
         assert_eq!(rq.telemetry.arch_mismatches, 0);
         // ... only the modeled accelerator time sees the smaller slice
-        assert!(rq.telemetry.arch_time_ns >= rf.telemetry.arch_time_ns);
+        assert!(rq.telemetry.cost.time_ns >= rf.telemetry.cost.time_ns);
     }
 
     #[test]
@@ -430,9 +437,10 @@ mod tests {
                                                   early_exit: false });
         let (reports, summary) = coord.run(&mut sensor, 4).unwrap();
         let sum_pj: f64 =
-            reports.iter().map(|r| r.telemetry.energy.total_pj()).sum();
+            reports.iter().map(|r| r.telemetry.cost.energy.total_pj()).sum();
         assert!((summary.energy.total_pj() - sum_pj).abs() < 1e-6);
         assert!(summary.energy_per_frame_uj() > 0.0);
         assert!(summary.frames_per_second_modeled() > 0.0);
+        assert_eq!(summary.hw_profile, "ns_lbp_65nm");
     }
 }

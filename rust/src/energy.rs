@@ -1,9 +1,18 @@
-//! Timing / energy / area model — the in-house "optimizer tool" of the
-//! paper's evaluation framework (§6.1, Fig. 8).
+//! Timing / energy / area arithmetic — the in-house "optimizer tool" of
+//! the paper's evaluation framework (§6.1, Fig. 8).
 //!
 //! Role of Cacti + the post-layout numbers: convert event counts from the
 //! architectural simulation ([`crate::isa::ExecStats`],
 //! [`crate::dpu::DpuStats`], sensor conversions) into ns / pJ / mm².
+//!
+//! Since the `hw` redesign this module holds the raw per-event tables
+//! ([`EnergyParams`], [`AreaModel`]) and the 65 nm reference arithmetic
+//! ([`EnergyModel`]); consumers price telemetry through
+//! [`crate::hw::CostModel`] / [`crate::hw::HwProfile`], which wrap these
+//! tables, add the per-opcode cycle dimension and platform scaling, and
+//! make the whole bundle a named, serializable profile.  The constants
+//! below are exactly the `ns_lbp_65nm` built-in (asserted cost-identical
+//! by `hw`'s parity tests).
 //!
 //! Calibration (TSMC 65 nm GP, 1.1 V, 1.25 GHz — DESIGN.md §Substitutions):
 //! the compute-op energy is anchored to the paper's 37.4 TOPS/W headline:

@@ -24,10 +24,18 @@
 //! batch instead of per frame — batching a near-empty fleet amortizes to
 //! a fraction of the per-frame cost, while logits stay bit-identical to
 //! the per-frame path (chunk boundaries never change lane results).
+//! The in-memory MLP packs the same way: every frame's AND/bitcount
+//! batches pool into one per-layer fleet-pass count before dividing by
+//! the sub-array budget.
+//!
+//! All telemetry is priced through the configured hardware profile
+//! (`SystemConfig::hw_profile()` → [`crate::hw::CostModel`]); swapping
+//! `[hw] profile` re-prices energy and modeled time without touching the
+//! simulated math.
 
 use crate::dpu::Dpu;
-use crate::energy::EnergyModel;
 use crate::error::Result;
+use crate::hw::{Cost, CostModel, HwProfile};
 use crate::isa::{ExecStats, Executor};
 use crate::lbp::parallel_compare;
 use crate::mapping::LbpSubarrayMap;
@@ -45,18 +53,17 @@ use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
 pub struct ArchitecturalBackend {
     params: NetParams,
     config: EngineConfig,
-    energy_model: EnergyModel,
+    cost_model: HwProfile,
     scratch: SubArray,
 }
 
 impl ArchitecturalBackend {
     pub fn new(params: NetParams, config: EngineConfig) -> Result<Self> {
         config.validate()?;
-        let mut energy_model = EnergyModel::default();
-        energy_model.params.freq_ghz = config.system.circuit.freq_ghz;
+        let cost_model = config.system.hw_profile();
         let g = &config.system.cache;
         let scratch = SubArray::new(g.rows, g.cols);
-        Ok(Self { params, config, energy_model, scratch })
+        Ok(Self { params, config, cost_model, scratch })
     }
 
     /// Compute sub-arrays available to this backend instance — the whole
@@ -98,7 +105,7 @@ impl InferenceBackend for ArchitecturalBackend {
         let core = ArchCore {
             params: &self.params,
             config: &self.config,
-            energy_model: &self.energy_model,
+            cost_model: &self.cost_model,
         };
         Ok(BackendOutput { frames: core.process_batch(frames,
                                                       &mut self.scratch)? })
@@ -120,7 +127,7 @@ struct FrameAcc {
 struct ArchCore<'a> {
     params: &'a NetParams,
     config: &'a EngineConfig,
-    energy_model: &'a EnergyModel,
+    cost_model: &'a HwProfile,
 }
 
 impl ArchCore<'_> {
@@ -218,7 +225,7 @@ impl ArchCore<'_> {
         let cycles_per_batch = (2.0 * map.bits as f64)
             + 4.0 + 7.0 * (map.bits - cfg.apx_pixel) as f64 + 3.0;
         let layer_time_ns = (chunks as f64 / subarrays).ceil()
-            * cycles_per_batch * self.energy_model.cycle_ns();
+            * cycles_per_batch * self.cost_model.cycle_ns();
         let share_ns = layer_time_ns / xs.len() as f64;
         for acc in accs.iter_mut() {
             acc.arch_time_ns += share_ns;
@@ -258,12 +265,14 @@ impl ArchCore<'_> {
         Ok(outs)
     }
 
-    /// In-memory MLP layer (architectural); returns raw integer accums and
-    /// mismatch count vs the functional matmul.
+    /// In-memory MLP layer (architectural) for one frame; returns raw
+    /// integer accums, the mismatch count vs the functional matmul, and
+    /// the AND-batch count (the fleet-pass unit the batch-level time
+    /// model amortizes across frames).
     fn mlp_layer_arch(&self, feats: &[u8], mlp: &crate::params::MlpLayer,
                       scratch: &mut SubArray, mmap: &MlpSubarrayMap,
                       exec: &mut ExecStats, dpu: &mut Dpu)
-                      -> Result<(Vec<i64>, u64, f64)> {
+                      -> Result<(Vec<i64>, u64, u64)> {
         let cols = scratch.cols();
         let half = 1u8 << (self.params.config.w_bits - 1);
         let chunks: Vec<&[u8]> = feats.chunks(cols).collect();
@@ -294,16 +303,28 @@ impl ArchCore<'_> {
         let want = model::int_matmul(feats, mlp);
         let mismatches =
             accs.iter().zip(&want).filter(|(a, w)| a != w).count() as u64;
+        Ok((accs, mismatches, and_batches))
+    }
+
+    /// Modeled time of one MLP layer's AND/bitcount batches spread over
+    /// the sub-array fleet.  `and_batches` is summed across every frame
+    /// of the dispatch before the ceiling, so — exactly like the LBP
+    /// lanes — a batch shares fleet passes instead of paying
+    /// `ceil(per-frame / budget)` once per frame.  For a single frame
+    /// this reduces to the historical per-frame formula.
+    fn mlp_layer_time_ns(&self, and_batches: u64) -> f64 {
         let subarrays = self.subarray_budget() as f64;
-        let time_ns = (and_batches as f64 * 2.0 / subarrays).ceil()
-            * self.energy_model.cycle_ns();
-        Ok((accs, mismatches, time_ns))
+        (and_batches as f64 * 2.0 / subarrays).ceil()
+            * self.cost_model.cycle_ns()
     }
 
     /// Process a whole batch of digitized frames, sharing sub-array
-    /// passes across frames in the LBP stage.
+    /// passes across frames in the LBP *and* in-memory-MLP stages.
     fn process_batch(&self, frames: &[Frame], scratch: &mut SubArray)
                      -> Result<Vec<FrameOutput>> {
+        if frames.is_empty() {
+            return Ok(Vec::new());
+        }
         let cfg = &self.params.config;
         let mut xs = Vec::with_capacity(frames.len());
         for frame in frames {
@@ -333,11 +354,9 @@ impl ArchCore<'_> {
             None
         };
 
-        let mut outputs = Vec::with_capacity(frames.len());
-        for ((frame, x), acc) in
-            frames.iter().zip(&xs).zip(accs.iter_mut())
-        {
-            // --- pooling + quantization (DPU) --------------------------------
+        // --- pooling + quantization (DPU, per frame) ------------------------
+        let mut feats_batch: Vec<Vec<u8>> = Vec::with_capacity(frames.len());
+        for (x, acc) in xs.iter().zip(accs.iter_mut()) {
             let s = cfg.pool;
             let vmax = (255 * s * s) as u32;
             let (ph, pw) = (x.h / s, x.w / s);
@@ -357,41 +376,76 @@ impl ArchCore<'_> {
                     }
                 }
             }
+            feats_batch.push(feats);
+        }
 
-            // --- MLP ---------------------------------------------------------
-            let logits = if let Some(mmap) = mmap.as_ref() {
-                let (acc1, mm1, t1) =
-                    self.mlp_layer_arch(&feats, &self.params.mlp1, scratch,
-                                        mmap, &mut acc.exec, &mut acc.dpu)?;
+        // --- MLP (AND/bitcount batches packed across frames) ----------------
+        // Each frame's dots still run on the scratch sub-array, but the
+        // fleet-pass accounting pools every frame's AND batches per layer
+        // before dividing by the sub-array budget — the same amortization
+        // the LBP lanes get, with bit-identical logits (packing only
+        // changes which sub-array a batch is modeled on, never the math).
+        let n = frames.len() as f64;
+        let logits_batch: Vec<Vec<f32>> = if let Some(mmap) = mmap.as_ref() {
+            let m1 = &self.params.mlp1;
+            let mut and1 = 0u64;
+            let mut hidden_batch = Vec::with_capacity(frames.len());
+            for (feats, acc) in feats_batch.iter().zip(accs.iter_mut()) {
+                let (acc1, mm1, ab) =
+                    self.mlp_layer_arch(feats, m1, scratch, mmap,
+                                        &mut acc.exec, &mut acc.dpu)?;
                 acc.mismatches += mm1;
-                acc.arch_time_ns += t1;
+                and1 += ab;
                 let hidden: Vec<u8> = acc1.iter().enumerate()
                     .map(|(o, &h)| acc.dpu.activation(
-                        h, self.params.mlp1.scale[o],
-                        self.params.mlp1.bias[o], cfg.act_bits as u32))
+                        h, m1.scale[o], m1.bias[o], cfg.act_bits as u32))
                     .collect();
-                let (acc2, mm2, t2) =
-                    self.mlp_layer_arch(&hidden, &self.params.mlp2, scratch,
-                                        mmap, &mut acc.exec, &mut acc.dpu)?;
+                hidden_batch.push(hidden);
+            }
+            let m2 = &self.params.mlp2;
+            let mut and2 = 0u64;
+            let mut logits_batch = Vec::with_capacity(frames.len());
+            for (hidden, acc) in hidden_batch.iter().zip(accs.iter_mut()) {
+                let (acc2, mm2, ab) =
+                    self.mlp_layer_arch(hidden, m2, scratch, mmap,
+                                        &mut acc.exec, &mut acc.dpu)?;
                 acc.mismatches += mm2;
-                acc.arch_time_ns += t2;
-                acc2.iter().enumerate()
-                    .map(|(o, &h)| acc.dpu.affine(
-                        h, self.params.mlp2.scale[o],
-                        self.params.mlp2.bias[o]))
-                    .collect()
-            } else {
-                model::mlp_forward(self.params, &feats, &mut acc.dpu)?
-            };
+                and2 += ab;
+                logits_batch.push(acc2.iter().enumerate()
+                    .map(|(o, &h)| acc.dpu.affine(h, m2.scale[o],
+                                                  m2.bias[o]))
+                    .collect());
+            }
+            // whole-batch fleet passes, split evenly (frames are
+            // shape-identical, so their AND-batch counts are equal)
+            let share_ns = (self.mlp_layer_time_ns(and1)
+                + self.mlp_layer_time_ns(and2)) / n;
+            for acc in accs.iter_mut() {
+                acc.arch_time_ns += share_ns;
+            }
+            logits_batch
+        } else {
+            feats_batch.iter().zip(accs.iter_mut())
+                .map(|(feats, acc)| {
+                    model::mlp_forward(self.params, feats, &mut acc.dpu)
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
 
-            // --- energy ------------------------------------------------------
-            let mut energy = self.energy_model.exec_energy(&acc.exec);
-            energy.add(&self.energy_model.dpu_energy(&acc.dpu.stats));
-            let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
-            energy.add(&self.energy_model.sensor_energy(
+        // --- cost under the active profile ----------------------------------
+        let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
+        let mut outputs = Vec::with_capacity(frames.len());
+        for ((frame, feats), (logits, acc)) in frames
+            .iter()
+            .zip(feats_batch)
+            .zip(logits_batch.into_iter().zip(accs.iter_mut()))
+        {
+            let mut energy = self.cost_model.exec_cost(&acc.exec).energy;
+            energy.add(&self.cost_model.dpu_cost(&acc.dpu.stats).energy);
+            energy.add(&self.cost_model.sensor_cost(
                 pixels,
                 (8 - cfg.apx_pixel) as u64,
-            ));
+            ).energy);
 
             outputs.push(FrameOutput {
                 seq: frame.seq,
@@ -399,10 +453,10 @@ impl ArchCore<'_> {
                 logits,
                 features: Some(feats),
                 telemetry: Telemetry {
+                    profile: self.cost_model.name.clone(),
                     exec: std::mem::take(&mut acc.exec),
                     dpu: acc.dpu.stats,
-                    energy,
-                    arch_time_ns: acc.arch_time_ns,
+                    cost: Cost { energy, time_ns: acc.arch_time_ns },
                     arch_mismatches: acc.mismatches,
                     ..Default::default()
                 },
@@ -436,8 +490,9 @@ mod tests {
         let t = out.telemetry();
         assert_eq!(t.arch_mismatches, 0, "arch != functional");
         assert!(t.exec.compute_ops > 0);
-        assert!(t.energy.total_pj() > 0.0);
-        assert!(t.arch_time_ns > 0.0);
+        assert!(t.cost.energy.total_pj() > 0.0);
+        assert!(t.cost.time_ns > 0.0);
+        assert_eq!(t.profile, "ns_lbp_65nm");
     }
 
     #[test]
@@ -454,7 +509,7 @@ mod tests {
         assert_eq!(rf.logits, rq.logits);
         assert_eq!(rf.telemetry.arch_mismatches, 0);
         assert_eq!(rq.telemetry.arch_mismatches, 0);
-        assert!(rq.telemetry.arch_time_ns >= rf.telemetry.arch_time_ns);
+        assert!(rq.telemetry.cost.time_ns >= rf.telemetry.cost.time_ns);
     }
 
     #[test]
@@ -486,12 +541,46 @@ mod tests {
         // well under the sum of the per-frame runs (4x18 chunks/layer all
         // fit a single 320-sub-array pass under the default geometry)
         let sum_single: f64 =
-            singles.iter().map(|r| r.telemetry.arch_time_ns).sum();
-        let batched_total = batched.telemetry().arch_time_ns;
+            singles.iter().map(|r| r.telemetry.cost.time_ns).sum();
+        let batched_total = batched.telemetry().cost.time_ns;
         assert!(batched_total > 0.0);
         assert!(
             batched_total < 0.5 * sum_single,
             "no amortization: batched {batched_total} vs {sum_single}"
+        );
+    }
+
+    #[test]
+    fn batched_inmemory_mlp_parity_and_amortization() {
+        // the in-memory MLP packs its AND/bitcount batches across frames
+        // the same way the LBP lanes pack: bit-identical logits, fewer
+        // modeled fleet passes than the per-frame sum
+        let (_, params) = synth_params(5);
+        let frames = synth_frames(&params, 4, 41).unwrap();
+        let arch = ArchSim { lbp: true, mlp: true, early_exit: false };
+        let mut b = backend(arch, None);
+        let singles: Vec<FrameOutput> = frames
+            .iter()
+            .map(|f| b.infer_frame(f).unwrap())
+            .collect();
+        let batched = b.infer_batch(&frames).unwrap();
+        for (s, f) in singles.iter().zip(&batched.frames) {
+            assert_eq!(s.logits, f.logits, "frame {}", f.seq);
+            assert_eq!(s.features, f.features, "frame {}", f.seq);
+            assert_eq!(f.telemetry.arch_mismatches, 0);
+            // the simulated work per frame is unchanged — only the
+            // fleet-pass time model amortizes
+            assert_eq!(s.telemetry.exec, f.telemetry.exec, "frame {}",
+                       f.seq);
+            assert_eq!(s.telemetry.dpu, f.telemetry.dpu, "frame {}", f.seq);
+        }
+        let sum_single: f64 =
+            singles.iter().map(|r| r.telemetry.cost.time_ns).sum();
+        let batched_total = batched.telemetry().cost.time_ns;
+        assert!(batched_total > 0.0);
+        assert!(
+            batched_total < 0.5 * sum_single,
+            "no MLP amortization: batched {batched_total} vs {sum_single}"
         );
     }
 }

@@ -2,8 +2,8 @@
 //! (`crate::model`), the fast path with no modeled hardware statistics.
 
 use crate::dpu::Dpu;
-use crate::energy::EnergyModel;
 use crate::error::Result;
+use crate::hw::{CostModel, HwProfile};
 use crate::model;
 use crate::params::NetParams;
 use crate::sensor::Frame;
@@ -13,8 +13,9 @@ use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
 
 /// Wraps the functional model: LBP layers, pooling/quantization, and the
 /// integer MLP, exactly as `python/compile/model.py` specifies them.
-/// DPU activity and sensor readout energy are accounted; there is no
-/// cycle model (`Telemetry::arch_time_ns` stays 0).
+/// DPU activity and sensor readout are priced through the configured
+/// [`HwProfile`]; there is no cycle model (`Telemetry::cost.time_ns`
+/// stays 0).
 ///
 /// The batch path is vectorized: LBP feature extraction runs per frame,
 /// then both MLP layers run weight-stationary over the whole batch
@@ -23,15 +24,13 @@ use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
 /// logits and per-frame DPU counters.
 pub struct FunctionalBackend {
     params: NetParams,
-    energy_model: EnergyModel,
+    cost_model: HwProfile,
 }
 
 impl FunctionalBackend {
     pub fn new(params: NetParams, config: &EngineConfig) -> Result<Self> {
         config.validate()?;
-        let mut energy_model = EnergyModel::default();
-        energy_model.params.freq_ghz = config.system.circuit.freq_ghz;
-        Ok(Self { params, energy_model })
+        Ok(Self { params, cost_model: config.system.hw_profile() })
     }
 }
 
@@ -76,8 +75,8 @@ impl InferenceBackend for FunctionalBackend {
             .zip(logits_batch)
             .zip(dpus)
             .map(|(((frame, feats), logits), dpu)| {
-                let mut energy = self.energy_model.dpu_energy(&dpu.stats);
-                energy.add(&self.energy_model.sensor_energy(
+                let mut cost = self.cost_model.dpu_cost(&dpu.stats);
+                cost.add(&self.cost_model.sensor_cost(
                     pixels,
                     (8 - cfg.apx_pixel) as u64,
                 ));
@@ -86,8 +85,12 @@ impl InferenceBackend for FunctionalBackend {
                     predicted: model::argmax(&logits),
                     logits,
                     features: Some(feats),
-                    telemetry: Telemetry { dpu: dpu.stats, energy,
-                                           ..Default::default() },
+                    telemetry: Telemetry {
+                        profile: self.cost_model.name.clone(),
+                        dpu: dpu.stats,
+                        cost,
+                        ..Default::default()
+                    },
                 }
             })
             .collect();
@@ -125,8 +128,9 @@ mod tests {
             assert_eq!(got.logits, logits);
             assert_eq!(got.features.as_deref(), Some(feats.as_slice()));
             assert_eq!(got.predicted, model::argmax(&logits));
-            assert!(got.telemetry.energy.total_pj() > 0.0);
-            assert_eq!(got.telemetry.arch_time_ns, 0.0);
+            assert!(got.telemetry.cost.energy.total_pj() > 0.0);
+            assert_eq!(got.telemetry.cost.time_ns, 0.0);
+            assert_eq!(got.telemetry.profile, "ns_lbp_65nm");
         }
     }
 

@@ -59,8 +59,8 @@ pub mod pjrt;
 
 use crate::config::SystemConfig;
 use crate::dpu::DpuStats;
-use crate::energy::EnergyBreakdown;
 use crate::error::{Error, Result};
+use crate::hw::{Cost, HwProfile};
 use crate::isa::ExecStats;
 use crate::model::TensorU8;
 use crate::params::{NetConfig, NetParams};
@@ -350,14 +350,21 @@ impl EngineConfig {
 /// (see `Capabilities::modeled_telemetry`).
 #[derive(Clone, Debug, Default)]
 pub struct Telemetry {
+    /// Name of the [`crate::hw::HwProfile`] that priced `cost` (empty
+    /// when nothing is modeled, [`Telemetry::MIXED_PROFILES`] after
+    /// merging telemetry priced under different profiles).
+    pub profile: String,
     /// ISA-level execution statistics (cycles, row accesses, opcodes).
     pub exec: ExecStats,
     /// Digital-processing-unit activity counters.
     pub dpu: DpuStats,
-    /// Itemized energy account.
-    pub energy: EnergyBreakdown,
-    /// Modeled accelerator latency [ns].
-    pub arch_time_ns: f64,
+    /// What this frame cost under `profile`: itemized energy (compute,
+    /// DPU, sensor, ...) plus modeled accelerator time.
+    pub cost: Cost,
+    /// Cost of the cross-check reference backend's redundant run, kept
+    /// strictly apart from `cost` so enabling cross-checking never
+    /// inflates the primary profile's numbers.
+    pub cross_check_cost: Cost,
     /// In-backend bit-level divergences of the architectural path against
     /// the functional math (must be 0).
     pub arch_mismatches: u64,
@@ -368,11 +375,29 @@ pub struct Telemetry {
 }
 
 impl Telemetry {
+    /// `profile` value after merging telemetry from different profiles.
+    /// Reserved: [`crate::hw::HwProfile::validate`] rejects a profile
+    /// actually named this, so the sentinel is unambiguous in reports.
+    pub const MIXED_PROFILES: &'static str = "mixed";
+
+    /// Fold another profile label into `current`: empty adopts, a
+    /// disagreement becomes [`Telemetry::MIXED_PROFILES`].  The single
+    /// rule every aggregation path (telemetry merge, serve metrics, run
+    /// summaries) shares.
+    pub fn merge_profile_label(current: &mut String, other: &str) {
+        if current.is_empty() {
+            current.push_str(other);
+        } else if !other.is_empty() && current.as_str() != other {
+            *current = Self::MIXED_PROFILES.into();
+        }
+    }
+
     pub fn merge(&mut self, o: &Telemetry) {
+        Self::merge_profile_label(&mut self.profile, &o.profile);
         self.exec.merge(&o.exec);
         self.dpu.merge(&o.dpu);
-        self.energy.add(&o.energy);
-        self.arch_time_ns += o.arch_time_ns;
+        self.cost.add(&o.cost);
+        self.cross_check_cost.add(&o.cross_check_cost);
         self.arch_mismatches += o.arch_mismatches;
         self.cross_check_frames += o.cross_check_frames;
         self.cross_check_mismatches += o.cross_check_mismatches;
@@ -517,7 +542,10 @@ impl Engine {
 
     /// Run a batch through the primary backend and, when configured,
     /// through the reference backend; logit divergences are counted per
-    /// frame in `Telemetry::cross_check_mismatches`.
+    /// frame in `Telemetry::cross_check_mismatches`.  The reference run's
+    /// cost lands in `Telemetry::cross_check_cost`, never in the
+    /// primary's `cost` — cross-checking is an observability feature and
+    /// must not inflate the primary profile's energy/time numbers.
     pub fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
         let mut out = self.primary.infer_batch(frames)?;
         if let Some(reference) = self.reference.as_mut() {
@@ -531,6 +559,7 @@ impl Engine {
             }
             for (f, r) in out.frames.iter_mut().zip(&ref_out.frames) {
                 f.telemetry.cross_check_frames += 1;
+                f.telemetry.cross_check_cost.add(&r.telemetry.cost);
                 if !logits_match(&f.logits, &r.logits) {
                     f.telemetry.cross_check_mismatches += 1;
                 }
@@ -598,6 +627,7 @@ pub struct EngineBuilder {
     backend: Option<BackendKind>,
     cross_check: Option<Option<BackendKind>>,
     artifact: Option<String>,
+    hw_profile: Option<HwProfile>,
 }
 
 impl EngineBuilder {
@@ -635,10 +665,21 @@ impl EngineBuilder {
         self
     }
 
-    pub fn build(self) -> Result<Engine> {
+    /// Hardware profile the backends price telemetry with, overriding
+    /// the config's `[hw]` selection (`--hw-profile` on the CLI).
+    pub fn hw_profile(mut self, profile: HwProfile) -> Self {
+        self.hw_profile = Some(profile);
+        self
+    }
+
+    pub fn build(mut self) -> Result<Engine> {
         let params = self.params.ok_or_else(|| {
             Error::Engine("EngineBuilder: params not set".into())
         })?;
+        if let Some(profile) = self.hw_profile.take() {
+            profile.validate()?;
+            self.config.system.hw.profile = profile;
+        }
         self.config.validate()?;
         let kind = self.backend.unwrap_or(self.config.system.engine.backend);
         let cross = self
@@ -820,14 +861,35 @@ mod tests {
 
     #[test]
     fn telemetry_merges_additively() {
-        let mut a = Telemetry { arch_time_ns: 1.5, arch_mismatches: 1,
-                                ..Default::default() };
-        let b = Telemetry { arch_time_ns: 2.5, cross_check_frames: 3,
-                            cross_check_mismatches: 1, ..Default::default() };
+        let mut a = Telemetry {
+            profile: "ns_lbp_65nm".into(),
+            cost: Cost { time_ns: 1.5, ..Default::default() },
+            arch_mismatches: 1,
+            ..Default::default()
+        };
+        let b = Telemetry {
+            profile: "ns_lbp_65nm".into(),
+            cost: Cost { time_ns: 2.5, ..Default::default() },
+            cross_check_frames: 3,
+            cross_check_mismatches: 1,
+            ..Default::default()
+        };
         a.merge(&b);
-        assert!((a.arch_time_ns - 4.0).abs() < 1e-12);
+        assert!((a.cost.time_ns - 4.0).abs() < 1e-12);
+        assert_eq!(a.profile, "ns_lbp_65nm");
         assert_eq!(a.arch_mismatches, 1);
         assert_eq!(a.cross_check_frames, 3);
         assert_eq!(a.cross_check_mismatches, 1);
+        // merging telemetry priced under another profile marks it mixed
+        let c = Telemetry { profile: "sram38_28nm".into(),
+                            ..Default::default() };
+        a.merge(&c);
+        assert_eq!(a.profile, Telemetry::MIXED_PROFILES);
+        // an unmodeled (empty-profile) merge does not
+        let mut d = Telemetry::default();
+        d.merge(&b);
+        assert_eq!(d.profile, "ns_lbp_65nm");
+        d.merge(&Telemetry::default());
+        assert_eq!(d.profile, "ns_lbp_65nm");
     }
 }

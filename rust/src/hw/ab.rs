@@ -1,0 +1,277 @@
+//! A/B energy harness: the same frames through two engines under two
+//! hardware profiles, diffed side by side (the ROADMAP "A/B energy
+//! harness" follow-on, surfaced as `ns-lbp ab`).
+//!
+//! Both arms run the *same* workload — identical frames, network
+//! parameters, architectural-simulation switches and cache geometry — so
+//! every difference in the report is attributable to the
+//! [`HwProfile`] swap: clock, per-event energies, cycle table, energy
+//! scale, area factors.  Logits are asserted identical across arms
+//! (the profile prices the hardware; it must never change the math).
+//!
+//! ```no_run
+//! use ns_lbp::engine::EngineConfig;
+//! use ns_lbp::hw::{ab::AbHarness, HwProfile};
+//! use ns_lbp::params::synth::synth_params;
+//! use ns_lbp::testing::synth_frames;
+//!
+//! let (_, params) = synth_params(7);
+//! let frames = synth_frames(&params, 4, 7).unwrap();
+//! let harness = AbHarness::new(
+//!     params,
+//!     EngineConfig::default(),
+//!     HwProfile::ns_lbp_65nm(),
+//!     HwProfile::sram38_28nm(),
+//! ).unwrap();
+//! let report = harness.run(&frames).unwrap();
+//! report.print();
+//! assert!(report.energy_ratio() > 1.0); // NS-LBP wins on energy
+//! ```
+
+use crate::energy::EnergyBreakdown;
+use crate::engine::{BackendKind, Engine, EngineConfig};
+use crate::error::{Error, Result};
+use crate::params::NetParams;
+use crate::sensor::Frame;
+
+use super::{CostModel, HwProfile};
+
+/// The A/B runner: one engine per profile over a shared workload.
+pub struct AbHarness {
+    params: NetParams,
+    config: EngineConfig,
+    a: HwProfile,
+    b: HwProfile,
+}
+
+impl AbHarness {
+    /// Build a harness comparing profiles `a` and `b` under `config`'s
+    /// geometry and architectural-simulation switches.
+    pub fn new(params: NetParams, config: EngineConfig, a: HwProfile,
+               b: HwProfile) -> Result<Self> {
+        config.validate()?;
+        a.validate()?;
+        b.validate()?;
+        if a.name == b.name {
+            return Err(Error::Config(format!(
+                "A/B harness: both arms are profile {:?} — nothing to diff",
+                a.name
+            )));
+        }
+        Ok(Self { params, config, a, b })
+    }
+
+    fn run_arm(&self, profile: &HwProfile, frames: &[Frame])
+               -> Result<(ArmReport, Vec<Vec<f32>>)> {
+        let mut config = self.config.clone();
+        config.system.hw.profile = profile.clone();
+        // each arm's clock is the profile's own — without this, an
+        // ns_lbp_65nm arm at stock clock would be re-clocked by
+        // [circuit] freq_ghz and the diff would no longer be
+        // attributable to the profile swap alone
+        config.system.hw.clock_explicit = true;
+        let mut engine = Engine::builder()
+            .config(config.clone())
+            .params(self.params.clone())
+            .backend(BackendKind::Architectural)
+            .no_cross_check()
+            .build()?;
+        let out = engine.infer_batch(frames)?;
+        let t = out.telemetry();
+        if t.arch_mismatches != 0 {
+            return Err(Error::Engine(format!(
+                "A/B arm {:?}: {} architectural/functional divergences",
+                profile.name, t.arch_mismatches
+            )));
+        }
+        let n = out.frames.len().max(1) as f64;
+        let resolved = config.system.hw_profile();
+        let report = ArmReport {
+            profile: profile.name.clone(),
+            frames: out.frames.len() as u64,
+            energy: t.cost.energy,
+            total_time_ns: t.cost.time_ns,
+            energy_uj_per_frame: t.cost.energy.total_pj() / 1e6 / n,
+            time_us_per_frame: t.cost.time_ns / 1e3 / n,
+            tops_per_watt: resolved
+                .tops_per_watt(config.system.cache.cols as u64),
+            area_mm2: resolved.area_mm2(&config.system.cache),
+        };
+        let logits = out.frames.into_iter().map(|f| f.logits).collect();
+        Ok((report, logits))
+    }
+
+    /// Run both arms over `frames` and diff them.  Errors if the arms'
+    /// logits diverge — a cost model must never change the math.
+    pub fn run(&self, frames: &[Frame]) -> Result<AbReport> {
+        if frames.is_empty() {
+            return Err(Error::Engine("A/B harness: no frames".into()));
+        }
+        let (a, logits_a) = self.run_arm(&self.a, frames)?;
+        let (b, logits_b) = self.run_arm(&self.b, frames)?;
+        if logits_a != logits_b {
+            return Err(Error::Engine(
+                "A/B harness: logits diverged between arms — a hardware \
+                 profile must only re-price, never change results"
+                    .into(),
+            ));
+        }
+        Ok(AbReport { a, b })
+    }
+}
+
+/// One arm's aggregate: totals plus the per-frame and headline figures.
+#[derive(Clone, Debug)]
+pub struct ArmReport {
+    pub profile: String,
+    pub frames: u64,
+    /// Itemized energy totals over the whole run.
+    pub energy: EnergyBreakdown,
+    /// Summed modeled accelerator time [ns].
+    pub total_time_ns: f64,
+    pub energy_uj_per_frame: f64,
+    pub time_us_per_frame: f64,
+    /// Peak efficiency at this geometry's lane width.
+    pub tops_per_watt: f64,
+    /// Whole cache slice area under this profile's factors [mm²].
+    pub area_mm2: f64,
+}
+
+impl ArmReport {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"profile\":\"{}\",\"frames\":{},\
+             \"energy_uj_per_frame\":{},\"time_us_per_frame\":{},\
+             \"tops_per_watt\":{},\"area_mm2\":{}}}",
+            self.profile, self.frames, self.energy_uj_per_frame,
+            self.time_us_per_frame, self.tops_per_watt, self.area_mm2
+        )
+    }
+}
+
+/// The side-by-side diff of one A/B run.
+#[derive(Clone, Debug)]
+pub struct AbReport {
+    pub a: ArmReport,
+    pub b: ArmReport,
+}
+
+impl AbReport {
+    /// B's per-frame energy over A's (> 1 means A is cheaper).
+    pub fn energy_ratio(&self) -> f64 {
+        self.b.energy_uj_per_frame / self.a.energy_uj_per_frame.max(1e-12)
+    }
+
+    /// B's per-frame modeled time over A's (> 1 means A is faster).
+    pub fn time_ratio(&self) -> f64 {
+        self.b.time_us_per_frame / self.a.time_us_per_frame.max(1e-12)
+    }
+
+    /// Name of the arm that wins on energy.
+    pub fn energy_winner(&self) -> &str {
+        if self.energy_ratio() >= 1.0 { &self.a.profile } else { &self.b.profile }
+    }
+
+    pub fn print(&self) {
+        println!("== A/B energy report: {} vs {} ({} frames) ==",
+                 self.a.profile, self.b.profile, self.a.frames);
+        println!("  {:<22} {:>14} {:>14} {:>9}", "metric",
+                 self.a.profile, self.b.profile, "B/A");
+        let rows: [(&str, f64, f64); 4] = [
+            ("energy [µJ/frame]", self.a.energy_uj_per_frame,
+             self.b.energy_uj_per_frame),
+            ("time [µs/frame]", self.a.time_us_per_frame,
+             self.b.time_us_per_frame),
+            ("peak TOPS/W", self.a.tops_per_watt, self.b.tops_per_watt),
+            ("slice area [mm²]", self.a.area_mm2, self.b.area_mm2),
+        ];
+        for (label, va, vb) in rows {
+            println!("  {:<22} {:>14.4} {:>14.4} {:>8.2}x", label, va, vb,
+                     vb / va.max(1e-12));
+        }
+        println!("  energy winner: {} ({:.2}x); time winner: {} ({:.2}x)",
+                 self.energy_winner(), self.energy_ratio().max(1.0 / self.energy_ratio()),
+                 if self.time_ratio() >= 1.0 { &self.a.profile } else { &self.b.profile },
+                 self.time_ratio().max(1.0 / self.time_ratio()));
+    }
+
+    /// One machine-readable JSON document (`ns-lbp ab --json`).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"a\":{},\"b\":{},\"energy_ratio\":{},\"time_ratio\":{},\
+             \"energy_winner\":\"{}\"}}",
+            self.a.to_json(), self.b.to_json(), self.energy_ratio(),
+            self.time_ratio(), self.energy_winner()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::synth::synth_params;
+    use crate::testing::synth_frames;
+
+    fn harness() -> (AbHarness, Vec<Frame>) {
+        let (_, params) = synth_params(5);
+        let frames = synth_frames(&params, 3, 23).unwrap();
+        let h = AbHarness::new(
+            params,
+            EngineConfig::default(),
+            HwProfile::ns_lbp_65nm(),
+            HwProfile::sram38_28nm(),
+        )
+        .unwrap();
+        (h, frames)
+    }
+
+    #[test]
+    fn ns_lbp_wins_energy_and_time_vs_prior_sram() {
+        let (h, frames) = harness();
+        let r = h.run(&frames).unwrap();
+        assert_eq!(r.a.frames, 3);
+        assert_eq!(r.b.frames, 3);
+        // Fig.-11-consistent ordering: the 65 nm NS-LBP point beats the
+        // 28 nm prior compute-SRAM on both axes
+        assert!(r.energy_ratio() > 1.0, "energy ratio {}", r.energy_ratio());
+        assert!(r.time_ratio() > 1.0, "time ratio {}", r.time_ratio());
+        assert_eq!(r.energy_winner(), "ns_lbp_65nm");
+        // rough factor bands: energy tracks the 1.55x node scale (diluted
+        // by the unscaled sensor term), time the 1.25/0.475 clock ratio
+        assert!((1.2..3.5).contains(&r.energy_ratio()),
+                "energy ratio {}", r.energy_ratio());
+        assert!((1.8..5.0).contains(&r.time_ratio()),
+                "time ratio {}", r.time_ratio());
+        assert!(r.a.tops_per_watt > r.b.tops_per_watt);
+        // the prior platform's SA overhead (5.52x vs 3.4x) costs area
+        assert!(r.b.area_mm2 > r.a.area_mm2);
+    }
+
+    #[test]
+    fn json_report_is_well_formed_and_arms_differ() {
+        let (h, frames) = harness();
+        let r = h.run(&frames[..1]).unwrap();
+        let json = r.to_json();
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        for key in ["\"a\":", "\"b\":", "\"energy_ratio\":",
+                    "\"time_ratio\":", "\"profile\":\"ns_lbp_65nm\"",
+                    "\"profile\":\"sram38_28nm\"", "\"energy_winner\":"] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert_ne!(r.a.energy_uj_per_frame, r.b.energy_uj_per_frame);
+    }
+
+    #[test]
+    fn rejects_identical_arms_and_empty_runs() {
+        let (_, params) = synth_params(5);
+        assert!(AbHarness::new(
+            params.clone(),
+            EngineConfig::default(),
+            HwProfile::ns_lbp_65nm(),
+            HwProfile::ns_lbp_65nm()
+        )
+        .is_err());
+        let (h, _) = harness();
+        assert!(h.run(&[]).is_err());
+    }
+}

@@ -1,0 +1,911 @@
+//! `hw` — the unified hardware cost-model subsystem.
+//!
+//! The paper's headline numbers (1.25 GHz, 37.4 TOPS/W, the 2.2×/4×
+//! energy/time wins of Fig. 11, the 3.4× reconfigurable-SA area factor of
+//! Table 3) all come from one calibrated cost model.  Before this module
+//! that model was smeared across four surfaces — `energy.rs` constants,
+//! `Opcode::cycles()` baked into the ISA enum, `baselines.rs` platform
+//! constants, and the circuit calibration — so swapping in an alternative
+//! hardware point (a 28 nm compute-SRAM, a digital MAC datapath, a
+//! PISA-style near-sensor design) meant editing four files.  Now:
+//!
+//! * [`HwProfile`] is a *named, serializable* description of one hardware
+//!   point: clock frequency, the per-event pJ table
+//!   ([`crate::energy::EnergyParams`]), the per-opcode cycle table
+//!   ([`CycleTable`]), the area factors ([`crate::energy::AreaModel`]),
+//!   and the platform datapath shape (energy scale, bit-serial MAC
+//!   cycles/lanes, float lanes).
+//! * [`CostModel`] is the trait every consumer prices through:
+//!   `exec_cost(&ExecStats) -> Cost`, `dpu_cost`, `sensor_cost`,
+//!   `transmission_cost`, `cycle_ns`, `area_mm2`, `tops_per_watt`.
+//!   [`Cost`] pairs an itemized [`EnergyBreakdown`] with modeled time.
+//! * Built-in profiles: [`HwProfile::ns_lbp_65nm`] (bit-identical to the
+//!   historical `EnergyParams::default()` + `Opcode::cycles()` model),
+//!   plus [`HwProfile::sram38_28nm`], [`HwProfile::cnn8_digital`] and
+//!   [`HwProfile::lbcnn`] — the Fig.-11 comparison platforms migrated out
+//!   of `baselines.rs`.
+//! * [`ab::AbHarness`] (the `ns-lbp ab` subcommand) runs the same frames
+//!   through two engines under two profiles and diffs energy, time,
+//!   TOPS/W and area.
+//!
+//! # Swapping hardware profiles
+//!
+//! Every layer above this one selects hardware by *name*:
+//!
+//! ```text
+//! # config file
+//! [hw]
+//! profile = "sram38_28nm"          # builtin name, or a path to a
+//!                                  # configs/profiles/*.toml file
+//! compute_op_pj = 9.5              # optional field-level overrides
+//!
+//! # CLI (run / serve-bench / info)
+//! ns-lbp run --hw-profile sram38_28nm
+//! ns-lbp ab  --profile ns_lbp_65nm --profile sram38_28nm --json
+//!
+//! # print any profile as a standalone TOML file
+//! ns-lbp profile --hw-profile ns_lbp_65nm > configs/profiles/mine.toml
+//! ```
+//!
+//! Programmatically:
+//!
+//! ```
+//! use ns_lbp::hw::{CostModel, HwProfile};
+//! use ns_lbp::isa::ExecStats;
+//!
+//! let profile = HwProfile::resolve("sram38_28nm").unwrap();
+//! let mut stats = ExecStats::default();
+//! stats.compute_ops = 100;
+//! stats.cycles = 100;
+//! let cost = profile.exec_cost(&stats);
+//! assert!(cost.energy.total_pj() > 0.0 && cost.time_ns > 0.0);
+//! // round-trips losslessly through TOML
+//! let back = HwProfile::from_toml(&profile.to_toml()).unwrap();
+//! assert_eq!(back, profile);
+//! ```
+//!
+//! The engine stamps every frame's [`crate::engine::Telemetry`] with the
+//! profile name and a [`Cost`] priced by that profile, and
+//! `serve::MetricsReport` reports per-class energy under the active
+//! profile — so an A/B comparison is two engine builds away, not a
+//! four-file patch.
+
+pub mod ab;
+
+use crate::config::ConfigFile;
+use crate::dpu::DpuStats;
+use crate::energy::{AreaModel, EnergyBreakdown, EnergyParams};
+use crate::error::{Error, Result};
+use crate::isa::{ExecStats, Opcode};
+use crate::sram::CacheGeometry;
+
+// ---------------------------------------------------------------------------
+// Cost
+// ---------------------------------------------------------------------------
+
+/// What one activity costs under a profile: an itemized energy account
+/// plus the modeled accelerator time it occupies.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    pub energy: EnergyBreakdown,
+    /// Modeled time [ns] (0 for activities that don't occupy the array,
+    /// e.g. DPU/sensor events priced per occurrence).
+    pub time_ns: f64,
+}
+
+impl Cost {
+    pub fn add(&mut self, o: &Cost) {
+        self.energy.add(&o.energy);
+        self.time_ns += o.time_ns;
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.energy.total_pj()
+    }
+
+    /// True when every component is a finite, non-negative number.
+    pub fn is_sane(&self) -> bool {
+        let e = &self.energy;
+        [e.compute_pj, e.read_pj, e.write_pj, e.ctrl_pj, e.dpu_pj,
+         e.sensor_pj, e.transmission_pj, self.time_ns]
+            .iter()
+            .all(|v| v.is_finite() && *v >= 0.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-opcode cycle table
+// ---------------------------------------------------------------------------
+
+/// Memory cycles per ISA opcode, indexed by [`Opcode::index`].  The
+/// NS-LBP table ([`CycleTable::NS_LBP`]) is the paper's single-cycle
+/// multi-row activation model: compute ops resolve in one read cycle
+/// (result latched through the decoupled write port), `copy` needs
+/// read + write, `ini` is one write.  `Opcode::cycles()` delegates here,
+/// so the executor's live cycle accounting and the cost model share one
+/// table; a profile with a different table (e.g. a bit-serial platform)
+/// re-prices a recorded trace through [`CostModel::exec_cost`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CycleTable {
+    /// One entry per [`Opcode::ALL`] member, in `Opcode::index` order.
+    table: [u64; 8],
+}
+
+impl CycleTable {
+    /// The paper's NS-LBP timing (Table 2 / §4.1).
+    pub const NS_LBP: CycleTable =
+        CycleTable { table: [2, 1, 1, 1, 1, 1, 1, 1] };
+
+    pub fn of(&self, op: Opcode) -> u64 {
+        self.table[op.index()]
+    }
+
+    pub fn set(&mut self, op: Opcode, cycles: u64) {
+        self.table[op.index()] = cycles;
+    }
+}
+
+impl Default for CycleTable {
+    fn default() -> Self {
+        Self::NS_LBP
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HwProfile
+// ---------------------------------------------------------------------------
+
+/// Built-in profile names, resolvable through [`HwProfile::resolve`].
+pub const BUILTIN_PROFILES: &[&str] =
+    &["ns_lbp_65nm", "sram38_28nm", "cnn8_digital", "lbcnn"];
+
+/// Per-event energy field names, in [`EnergyParams`] declaration order —
+/// the serialization schema of the `[energy]` profile section and the
+/// legal `hw.<field>` config overrides.
+pub const ENERGY_FIELDS: &[&str] = &[
+    "freq_ghz", "compute_op_pj", "row_read_pj", "row_write_pj",
+    "ctrl_cycle_pj", "bitcount_pj", "shift_pj", "add_pj", "activation_pj",
+    "quantize_pj", "shifted_relu_pj", "adc_bit_pj", "pixel_read_pj",
+    "offchip_bit_pj", "mac8_pj", "flop_pj",
+];
+
+/// Area field names (`[area]` profile section, `hw.<field>` overrides).
+pub const AREA_FIELDS: &[&str] =
+    &["bitcell_um2", "sa_um2", "sa_overhead", "periphery_um2"];
+
+/// One named hardware design point: everything the evaluation framework
+/// needs to convert event counts into pJ / ns / mm².
+#[derive(Clone, Debug, PartialEq)]
+pub struct HwProfile {
+    /// Profile name, stamped into telemetry and reports verbatim —
+    /// restricted by [`HwProfile::validate`] to ASCII
+    /// alphanumeric/`_`/`-`/`.` so it embeds safely in TOML and JSON.
+    pub name: String,
+    /// Per-event energy table; `energy.freq_ghz` is the clock.
+    pub energy: EnergyParams,
+    /// Per-opcode cycle table.
+    pub cycles: CycleTable,
+    /// Area factors (bit-cell, SA, SA overhead, periphery).
+    pub area: AreaModel,
+    /// Multiplier on the node-local energies (compute/read/write/ctrl/
+    /// DPU) for older nodes or costlier arrays; sensor and off-chip
+    /// transmission are node-independent and never scaled.
+    pub energy_scale: f64,
+    /// Cycles per 8-bit MAC on this platform's (bit-serial) datapath.
+    pub mac_cycles: u64,
+    /// Parallel 8-bit MAC lanes.
+    pub mac_lanes: u64,
+    /// Parallel float lanes (LBCNN's 1×1/batch-norm path).
+    pub flop_lanes: u64,
+}
+
+impl Default for HwProfile {
+    fn default() -> Self {
+        Self::ns_lbp_65nm()
+    }
+}
+
+impl HwProfile {
+    /// NS-LBP itself: TSMC 65 nm GP @ 1.1 V, 1.25 GHz — bit-identical to
+    /// the historical `EnergyParams::default()` + `Opcode::cycles()`
+    /// model (asserted by the cost-parity tests).
+    pub fn ns_lbp_65nm() -> Self {
+        Self {
+            name: "ns_lbp_65nm".into(),
+            energy: EnergyParams::default(),
+            cycles: CycleTable::NS_LBP,
+            area: AreaModel::default(),
+            energy_scale: 1.0,
+            mac_cycles: 0,
+            mac_lanes: 0,
+            flop_lanes: 0,
+        }
+    }
+
+    /// The [38]-style prior-generation compute-SRAM (28 nm transposable
+    /// 8T, 475 MHz, bit-serial arithmetic, 5.52× SA overhead).  The
+    /// energy scale folds the costlier SA and bit-serial data movement.
+    pub fn sram38_28nm() -> Self {
+        Self {
+            name: "sram38_28nm".into(),
+            energy: EnergyParams { freq_ghz: 0.475, ..EnergyParams::default() },
+            cycles: CycleTable::NS_LBP,
+            area: AreaModel { sa_overhead: 5.52, ..AreaModel::default() },
+            energy_scale: 1.55,
+            // 8-bit × 8-bit bit-serial multiply-accumulate; effective MAC
+            // lanes: all 4×128×256 bit-cells of [38] in bit-serial
+            // column-parallel mode ÷ 8-bit operand width
+            mac_cycles: 16,
+            mac_lanes: 4 * 128 * 256 / 8,
+            flop_lanes: 512,
+        }
+    }
+
+    /// The 8-bit digital-CNN view of the [38] platform (Fig. 11's CNN
+    /// baseline): same array, priced through the bit-serial MAC datapath.
+    pub fn cnn8_digital() -> Self {
+        Self { name: "cnn8_digital".into(), ..Self::sram38_28nm() }
+    }
+
+    /// The LBCNN platform point (Fig. 11): binary ancestor convolutions
+    /// on the [38] array plus the SIMD float path for 1×1 fusion and
+    /// batch-norm.
+    pub fn lbcnn() -> Self {
+        Self { name: "lbcnn".into(), ..Self::sram38_28nm() }
+    }
+
+    /// Look up a built-in profile by name.
+    pub fn builtin(name: &str) -> Option<HwProfile> {
+        match name {
+            "ns_lbp_65nm" => Some(Self::ns_lbp_65nm()),
+            "sram38_28nm" => Some(Self::sram38_28nm()),
+            "cnn8_digital" => Some(Self::cnn8_digital()),
+            "lbcnn" => Some(Self::lbcnn()),
+            _ => None,
+        }
+    }
+
+    /// Resolve a profile spec: a built-in name, or a path to a standalone
+    /// profile TOML file (`configs/profiles/*.toml`).
+    pub fn resolve(spec: &str) -> Result<HwProfile> {
+        if let Some(p) = Self::builtin(spec) {
+            return Ok(p);
+        }
+        if std::path::Path::new(spec).exists() {
+            return Self::load(spec);
+        }
+        Err(Error::Config(format!(
+            "unknown hw profile {spec:?} (builtins: {}; or a path to a \
+             profile TOML file)",
+            BUILTIN_PROFILES.join("|")
+        )))
+    }
+
+    /// Load a standalone profile TOML file.
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<HwProfile> {
+        let file = ConfigFile::load(path.as_ref())?;
+        Self::from_config(&file).map_err(|e| {
+            Error::Config(format!("{}: {e}", path.as_ref().display()))
+        })
+    }
+
+    /// Parse from profile-TOML text (the [`HwProfile::to_toml`] format).
+    pub fn from_toml(text: &str) -> Result<HwProfile> {
+        Self::from_config(&ConfigFile::parse(text)?)
+    }
+
+    /// Build from a parsed `[profile]`/`[energy]`/`[area]`/`[cycles]`
+    /// file.  Unset fields default to [`HwProfile::ns_lbp_65nm`]; unknown
+    /// keys are rejected so typos fail loudly.
+    pub fn from_config(file: &ConfigFile) -> Result<HwProfile> {
+        for key in file.keys() {
+            let known = matches!(key,
+                "profile.name" | "profile.energy_scale" | "profile.mac_cycles"
+                | "profile.mac_lanes" | "profile.flop_lanes")
+                || key.strip_prefix("energy.")
+                    .is_some_and(|f| ENERGY_FIELDS.contains(&f))
+                || key.strip_prefix("area.")
+                    .is_some_and(|f| AREA_FIELDS.contains(&f))
+                || key.strip_prefix("cycles.")
+                    .is_some_and(|m| Opcode::from_mnemonic(m).is_some());
+            if !known {
+                return Err(Error::Config(format!(
+                    "unknown profile key {key:?}"
+                )));
+            }
+        }
+        let mut p = Self::ns_lbp_65nm();
+        p.name = file.get_str("profile.name", "")?;
+        if p.name.is_empty() {
+            return Err(Error::Config("profile.name is required".into()));
+        }
+        p.apply_fields(file, "energy.", "area.", "profile.", "cycles.")?;
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// True when `field` names a legal flat profile override — the
+    /// `hw.<field>` config surface: any [`ENERGY_FIELDS`] /
+    /// [`AREA_FIELDS`] member, a platform field, or `cycles.<mnemonic>`.
+    pub fn is_override_field(field: &str) -> bool {
+        field == "energy_scale"
+            || field == "mac_cycles"
+            || field == "mac_lanes"
+            || field == "flop_lanes"
+            || ENERGY_FIELDS.contains(&field)
+            || AREA_FIELDS.contains(&field)
+            || field.strip_prefix("cycles.")
+                .is_some_and(|m| Opcode::from_mnemonic(m).is_some())
+    }
+
+    /// Apply flat `<prefix><field>` overrides from a parsed config (the
+    /// `[hw]` section uses prefix `"hw."`) — the same field machinery
+    /// [`HwProfile::from_config`] uses for sectioned profile files, so
+    /// the two surfaces cannot drift.  Does not re-validate; callers
+    /// validate once after all overrides are in.
+    pub fn apply_overrides(&mut self, file: &ConfigFile, prefix: &str)
+                           -> Result<()> {
+        let cycles = format!("{prefix}cycles.");
+        self.apply_fields(file, prefix, prefix, prefix, &cycles)
+    }
+
+    /// Shared field-application core: each category reads its fields at
+    /// `<category_prefix><field>`.
+    fn apply_fields(&mut self, file: &ConfigFile, energy: &str, area: &str,
+                    platform: &str, cycles: &str) -> Result<()> {
+        for &field in ENERGY_FIELDS {
+            let key = format!("{energy}{field}");
+            if file.contains(&key) {
+                self.set_energy_field(field, file.get_f64(&key, 0.0)?)?;
+            }
+        }
+        for &field in AREA_FIELDS {
+            let key = format!("{area}{field}");
+            if file.contains(&key) {
+                self.set_area_field(field, file.get_f64(&key, 0.0)?)?;
+            }
+        }
+        let key = format!("{platform}energy_scale");
+        if file.contains(&key) {
+            self.energy_scale = file.get_f64(&key, self.energy_scale)?;
+        }
+        let key = format!("{platform}mac_cycles");
+        if file.contains(&key) {
+            self.mac_cycles = file.get_usize(&key, 0)? as u64;
+        }
+        let key = format!("{platform}mac_lanes");
+        if file.contains(&key) {
+            self.mac_lanes = file.get_usize(&key, 0)? as u64;
+        }
+        let key = format!("{platform}flop_lanes");
+        if file.contains(&key) {
+            self.flop_lanes = file.get_usize(&key, 0)? as u64;
+        }
+        for op in Opcode::ALL {
+            let key = format!("{cycles}{}", op.mnemonic());
+            if file.contains(&key) {
+                self.cycles.set(op, file.get_usize(&key, 0)? as u64);
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize as a standalone profile TOML file.  Floats use Rust's
+    /// shortest round-trip formatting, so `to_toml` → [`from_toml`] is
+    /// lossless (`assert_eq!` level — see the round-trip tests).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "# hardware profile {:?} — load with `--hw-profile <path>` or\n\
+             # `[hw] profile = \"<path>\"`; regenerate with \
+             `ns-lbp profile`\n\n[profile]\nname = {:?}\n",
+            self.name, self.name
+        ));
+        s.push_str(&format!("energy_scale = {:?}\n", self.energy_scale));
+        s.push_str(&format!("mac_cycles = {}\n", self.mac_cycles));
+        s.push_str(&format!("mac_lanes = {}\n", self.mac_lanes));
+        s.push_str(&format!("flop_lanes = {}\n", self.flop_lanes));
+        s.push_str("\n[energy]\n");
+        for &field in ENERGY_FIELDS {
+            s.push_str(&format!("{field} = {:?}\n",
+                                energy_get(&self.energy, field)));
+        }
+        s.push_str("\n[area]\n");
+        for &field in AREA_FIELDS {
+            s.push_str(&format!("{field} = {:?}\n",
+                                area_get(&self.area, field)));
+        }
+        s.push_str("\n[cycles]\n");
+        for op in Opcode::ALL {
+            s.push_str(&format!("{} = {}\n", op.mnemonic(),
+                                self.cycles.of(op)));
+        }
+        s
+    }
+
+    /// Reject profiles that would produce nonsensical costs, and names
+    /// that could not be embedded safely in TOML / JSON output.
+    pub fn validate(&self) -> Result<()> {
+        let name_ok = !self.name.is_empty()
+            && self.name.chars().all(|c| {
+                c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')
+            });
+        if !name_ok {
+            return Err(Error::Config(format!(
+                "hw profile name {:?} must be non-empty ASCII \
+                 alphanumeric/'_'/'-'/'.' (it is embedded in TOML and \
+                 JSON reports verbatim)",
+                self.name
+            )));
+        }
+        if self.name == crate::engine::Telemetry::MIXED_PROFILES {
+            return Err(Error::Config(format!(
+                "hw profile name {:?} is reserved (it marks telemetry \
+                 merged across different profiles)",
+                self.name
+            )));
+        }
+        for &field in ENERGY_FIELDS {
+            let v = energy_get(&self.energy, field);
+            if !v.is_finite() || v < 0.0 {
+                return Err(Error::Config(format!(
+                    "hw profile {:?}: energy.{field} = {v} must be a \
+                     non-negative finite number",
+                    self.name
+                )));
+            }
+        }
+        if self.energy.freq_ghz <= 0.0 {
+            return Err(Error::Config(format!(
+                "hw profile {:?}: freq_ghz must be > 0",
+                self.name
+            )));
+        }
+        if self.energy.compute_op_pj <= 0.0 {
+            return Err(Error::Config(format!(
+                "hw profile {:?}: compute_op_pj must be > 0 \
+                 (tops_per_watt divides by it)",
+                self.name
+            )));
+        }
+        for &field in AREA_FIELDS {
+            let v = area_get(&self.area, field);
+            if !v.is_finite() || v < 0.0 {
+                return Err(Error::Config(format!(
+                    "hw profile {:?}: area.{field} = {v} must be a \
+                     non-negative finite number",
+                    self.name
+                )));
+            }
+        }
+        if !self.energy_scale.is_finite() || self.energy_scale <= 0.0 {
+            return Err(Error::Config(format!(
+                "hw profile {:?}: energy_scale must be a positive finite \
+                 number",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Override one per-event energy field by name (any
+    /// [`ENERGY_FIELDS`] member — the `hw.<field>` config surface).
+    pub fn set_energy_field(&mut self, field: &str, v: f64) -> Result<()> {
+        energy_set(&mut self.energy, field, v)
+    }
+
+    /// Override one area field by name (any [`AREA_FIELDS`] member).
+    pub fn set_area_field(&mut self, field: &str, v: f64) -> Result<()> {
+        area_set(&mut self.area, field, v)
+    }
+
+    /// Re-price a recorded trace's cycle count under this profile's
+    /// opcode table: the executor records [`CycleTable::NS_LBP`] cycles
+    /// live (plus manual Ctrl/load cycles), so a profile with a different
+    /// table adjusts by the per-opcode delta.
+    fn exec_cycles(&self, stats: &ExecStats) -> f64 {
+        let mut cycles = stats.cycles as i64;
+        for (&op, &n) in &stats.by_opcode {
+            let delta =
+                self.cycles.of(op) as i64 - CycleTable::NS_LBP.of(op) as i64;
+            cycles += n as i64 * delta;
+        }
+        cycles.max(0) as f64
+    }
+
+    fn scaled(&self, mut energy: EnergyBreakdown, time_ns: f64) -> Cost {
+        energy.compute_pj *= self.energy_scale;
+        energy.read_pj *= self.energy_scale;
+        energy.write_pj *= self.energy_scale;
+        energy.ctrl_pj *= self.energy_scale;
+        energy.dpu_pj *= self.energy_scale;
+        // sensor + transmission are node-independent: never scaled
+        Cost { energy, time_ns }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The CostModel trait
+// ---------------------------------------------------------------------------
+
+/// The pricing API every consumer goes through: event counts in,
+/// [`Cost`] out.  Implemented by [`HwProfile`]; the trait exists so
+/// exotic models (e.g. measurement-driven ones) can slot in behind the
+/// same call sites.
+pub trait CostModel {
+    /// Profile name for telemetry stamping.
+    fn profile_name(&self) -> &str;
+
+    /// Cycle time [ns].
+    fn cycle_ns(&self) -> f64;
+
+    /// Cost of an ISA execution trace on one sub-array.
+    fn exec_cost(&self, stats: &ExecStats) -> Cost;
+
+    /// Cost of the DPU activity (no array time).
+    fn dpu_cost(&self, stats: &DpuStats) -> Cost;
+
+    /// Sensor-side cost: CDS readout + per-bit ADC (the Ap-LBP LSB skip
+    /// reduces `effective_bits`).
+    fn sensor_cost(&self, pixels: u64, effective_bits: u64) -> Cost;
+
+    /// Off-chip transmission cost of shipping `bits` out of the node.
+    fn transmission_cost(&self, bits: u64) -> Cost;
+
+    /// Whole cache slice area [mm²].
+    fn area_mm2(&self, geometry: &CacheGeometry) -> f64;
+
+    /// Peak compute efficiency [TOPS/W]: bit-ops per compute activation
+    /// over its (scaled) energy.  Reproduces the paper's 37.4 for
+    /// `ns_lbp_65nm` at 256 lanes.
+    fn tops_per_watt(&self, lanes_per_op: u64) -> f64;
+
+    /// Peak throughput of a whole cache slice [Tera-ops/s]: every
+    /// compute sub-array issues one row-op per cycle.
+    fn peak_tops(&self, geometry: &CacheGeometry) -> f64;
+}
+
+impl CostModel for HwProfile {
+    fn profile_name(&self) -> &str {
+        &self.name
+    }
+
+    fn cycle_ns(&self) -> f64 {
+        1.0 / self.energy.freq_ghz
+    }
+
+    fn exec_cost(&self, stats: &ExecStats) -> Cost {
+        let cycles = self.exec_cycles(stats);
+        let p = &self.energy;
+        let energy = EnergyBreakdown {
+            compute_pj: stats.compute_ops as f64 * p.compute_op_pj,
+            read_pj: stats.row_reads as f64 * p.row_read_pj,
+            write_pj: stats.row_writes as f64 * p.row_write_pj,
+            ctrl_pj: cycles * p.ctrl_cycle_pj,
+            ..Default::default()
+        };
+        self.scaled(energy, cycles * self.cycle_ns())
+    }
+
+    fn dpu_cost(&self, stats: &DpuStats) -> Cost {
+        let p = &self.energy;
+        let energy = EnergyBreakdown {
+            dpu_pj: stats.bitcounts as f64 * p.bitcount_pj
+                + stats.shifts as f64 * p.shift_pj
+                + stats.adds as f64 * p.add_pj
+                + stats.activations as f64 * p.activation_pj
+                + stats.quantize_ops as f64 * p.quantize_pj
+                + stats.shifted_relus as f64 * p.shifted_relu_pj,
+            ..Default::default()
+        };
+        self.scaled(energy, 0.0)
+    }
+
+    fn sensor_cost(&self, pixels: u64, effective_bits: u64) -> Cost {
+        Cost {
+            energy: EnergyBreakdown {
+                sensor_pj: pixels as f64
+                    * (self.energy.pixel_read_pj
+                        + effective_bits as f64 * self.energy.adc_bit_pj),
+                ..Default::default()
+            },
+            time_ns: 0.0,
+        }
+    }
+
+    fn transmission_cost(&self, bits: u64) -> Cost {
+        Cost {
+            energy: EnergyBreakdown {
+                transmission_pj: bits as f64 * self.energy.offchip_bit_pj,
+                ..Default::default()
+            },
+            time_ns: 0.0,
+        }
+    }
+
+    fn area_mm2(&self, geometry: &CacheGeometry) -> f64 {
+        self.area.slice_mm2(geometry)
+    }
+
+    fn tops_per_watt(&self, lanes_per_op: u64) -> f64 {
+        // ops / pJ == TOPS/W (1 op/pJ = 1 TOPS/W)
+        lanes_per_op as f64 / (self.energy.compute_op_pj * self.energy_scale)
+    }
+
+    fn peak_tops(&self, geometry: &CacheGeometry) -> f64 {
+        geometry.total_subarrays() as f64
+            * geometry.cols as f64
+            * self.energy.freq_ghz
+            * 1e9
+            / 1e12
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Field tables (serialization + config overrides)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn energy_get(p: &EnergyParams, field: &str) -> f64 {
+    match field {
+        "freq_ghz" => p.freq_ghz,
+        "compute_op_pj" => p.compute_op_pj,
+        "row_read_pj" => p.row_read_pj,
+        "row_write_pj" => p.row_write_pj,
+        "ctrl_cycle_pj" => p.ctrl_cycle_pj,
+        "bitcount_pj" => p.bitcount_pj,
+        "shift_pj" => p.shift_pj,
+        "add_pj" => p.add_pj,
+        "activation_pj" => p.activation_pj,
+        "quantize_pj" => p.quantize_pj,
+        "shifted_relu_pj" => p.shifted_relu_pj,
+        "adc_bit_pj" => p.adc_bit_pj,
+        "pixel_read_pj" => p.pixel_read_pj,
+        "offchip_bit_pj" => p.offchip_bit_pj,
+        "mac8_pj" => p.mac8_pj,
+        "flop_pj" => p.flop_pj,
+        other => unreachable!("unknown energy field {other}"),
+    }
+}
+
+pub(crate) fn energy_set(p: &mut EnergyParams, field: &str, v: f64)
+                         -> Result<()> {
+    match field {
+        "freq_ghz" => p.freq_ghz = v,
+        "compute_op_pj" => p.compute_op_pj = v,
+        "row_read_pj" => p.row_read_pj = v,
+        "row_write_pj" => p.row_write_pj = v,
+        "ctrl_cycle_pj" => p.ctrl_cycle_pj = v,
+        "bitcount_pj" => p.bitcount_pj = v,
+        "shift_pj" => p.shift_pj = v,
+        "add_pj" => p.add_pj = v,
+        "activation_pj" => p.activation_pj = v,
+        "quantize_pj" => p.quantize_pj = v,
+        "shifted_relu_pj" => p.shifted_relu_pj = v,
+        "adc_bit_pj" => p.adc_bit_pj = v,
+        "pixel_read_pj" => p.pixel_read_pj = v,
+        "offchip_bit_pj" => p.offchip_bit_pj = v,
+        "mac8_pj" => p.mac8_pj = v,
+        "flop_pj" => p.flop_pj = v,
+        other => {
+            return Err(Error::Config(format!("unknown energy field {other}")))
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn area_get(a: &AreaModel, field: &str) -> f64 {
+    match field {
+        "bitcell_um2" => a.bitcell_um2,
+        "sa_um2" => a.sa_um2,
+        "sa_overhead" => a.sa_overhead,
+        "periphery_um2" => a.periphery_um2,
+        other => unreachable!("unknown area field {other}"),
+    }
+}
+
+pub(crate) fn area_set(a: &mut AreaModel, field: &str, v: f64) -> Result<()> {
+    match field {
+        "bitcell_um2" => a.bitcell_um2 = v,
+        "sa_um2" => a.sa_um2 = v,
+        "sa_overhead" => a.sa_overhead = v,
+        "periphery_um2" => a.periphery_um2 = v,
+        other => {
+            return Err(Error::Config(format!("unknown area field {other}")))
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::EnergyModel;
+
+    /// A fixed trace fixture exercising every accounting channel.
+    fn exec_fixture() -> ExecStats {
+        let mut stats = ExecStats::default();
+        stats.instructions = 40;
+        stats.cycles = 55;
+        stats.row_reads = 9;
+        stats.row_writes = 31;
+        stats.compute_ops = 25;
+        stats.by_opcode.insert(Opcode::Copy, 5);
+        stats.by_opcode.insert(Opcode::Ini, 2);
+        stats.by_opcode.insert(Opcode::Cmp, 12);
+        stats.by_opcode.insert(Opcode::Carry, 13);
+        stats
+    }
+
+    fn dpu_fixture() -> DpuStats {
+        DpuStats {
+            quantize_ops: 11,
+            bitcounts: 7,
+            shifts: 7,
+            adds: 9,
+            activations: 3,
+            shifted_relus: 100,
+        }
+    }
+
+    #[test]
+    fn ns_lbp_profile_is_cost_identical_to_legacy_model() {
+        // the acceptance-criterion parity: the built-in ns_lbp_65nm
+        // profile prices a fixed trace exactly like the pre-refactor
+        // EnergyModel + Opcode::cycles() defaults
+        let profile = HwProfile::ns_lbp_65nm();
+        let legacy = EnergyModel::default();
+        let stats = exec_fixture();
+        let cost = profile.exec_cost(&stats);
+        assert_eq!(cost.energy, legacy.exec_energy(&stats));
+        assert!((cost.time_ns - legacy.exec_time_ns(&stats)).abs() < 1e-12);
+        let dpu = dpu_fixture();
+        assert_eq!(profile.dpu_cost(&dpu).energy, legacy.dpu_energy(&dpu));
+        assert_eq!(profile.sensor_cost(784, 6).energy,
+                   legacy.sensor_energy(784, 6));
+        assert_eq!(profile.transmission_cost(6272).energy,
+                   legacy.transmission_energy(6272));
+        assert!((profile.cycle_ns() - legacy.cycle_ns()).abs() < 1e-15);
+        assert!((profile.tops_per_watt(256) - legacy.tops_per_watt(256))
+            .abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_headline_anchors() {
+        // the paper's anchors, straight off the built-in profile
+        let p = HwProfile::ns_lbp_65nm();
+        assert!((p.tops_per_watt(256) - 37.4).abs() < 1e-9);
+        assert!((p.energy.freq_ghz - 1.25).abs() < 1e-12);
+        assert!((p.cycle_ns() - 0.8).abs() < 1e-12);
+        assert!((p.area.sa_overhead - 3.4).abs() < 1e-12);
+        assert!(p.area_mm2(&CacheGeometry::default()) > 0.0);
+        // 320 sub-arrays × 256 lanes × 1.25 GHz = 102.4 TOPS
+        assert!((p.peak_tops(&CacheGeometry::default()) - 102.4).abs()
+            < 1e-9);
+    }
+
+    #[test]
+    fn builtins_resolve_validate_and_roundtrip() {
+        for &name in BUILTIN_PROFILES {
+            let p = HwProfile::resolve(name).unwrap();
+            assert_eq!(p.name, name);
+            p.validate().unwrap();
+            // serialize → parse → equal (lossless float round-trip)
+            let back = HwProfile::from_toml(&p.to_toml()).unwrap();
+            assert_eq!(back, p, "{name} TOML round-trip");
+        }
+        assert!(HwProfile::resolve("tpu_v9").is_err());
+        assert!(HwProfile::builtin("tpu_v9").is_none());
+    }
+
+    #[test]
+    fn shipped_profile_files_match_builtins() {
+        // configs/profiles/*.toml are the on-disk form of the builtins;
+        // loading them (by path, through the resolve() surface users
+        // take) must reproduce the in-code profiles exactly
+        let dir =
+            concat!(env!("CARGO_MANIFEST_DIR"), "/configs/profiles");
+        for &name in BUILTIN_PROFILES {
+            let path = format!("{dir}/{name}.toml");
+            let loaded = HwProfile::resolve(&path)
+                .unwrap_or_else(|e| panic!("{path}: {e}"));
+            assert_eq!(loaded, HwProfile::builtin(name).unwrap(),
+                       "{name} file drifted from the builtin");
+        }
+    }
+
+    #[test]
+    fn cycle_table_reprices_traces() {
+        let mut p = HwProfile::ns_lbp_65nm();
+        p.name = "slow_compare".into();
+        p.cycles.set(Opcode::Cmp, 3); // +2 cycles per cmp
+        let stats = exec_fixture(); // 12 cmp instructions, 55 cycles
+        let base = HwProfile::ns_lbp_65nm().exec_cost(&stats);
+        let slow = p.exec_cost(&stats);
+        let extra_cycles = 12.0 * 2.0;
+        assert!((slow.time_ns
+            - (base.time_ns + extra_cycles * p.cycle_ns()))
+            .abs() < 1e-9);
+        assert!((slow.energy.ctrl_pj
+            - (base.energy.ctrl_pj
+                + extra_cycles * p.energy.ctrl_cycle_pj))
+            .abs() < 1e-9);
+        // and the table survives serialization
+        let back = HwProfile::from_toml(&p.to_toml()).unwrap();
+        assert_eq!(back.cycles.of(Opcode::Cmp), 3);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn energy_scale_applies_to_node_local_channels_only() {
+        let prior = HwProfile::sram38_28nm();
+        let base = HwProfile::ns_lbp_65nm();
+        let stats = exec_fixture();
+        let (a, b) = (base.exec_cost(&stats), prior.exec_cost(&stats));
+        assert!((b.energy.compute_pj
+            - a.energy.compute_pj * prior.energy_scale)
+            .abs() < 1e-9);
+        // time scales with the slower clock, not the energy scale
+        assert!((b.time_ns - a.time_ns * (1.25 / 0.475)).abs() < 1e-6);
+        // sensor/transmission are node-independent
+        assert_eq!(prior.sensor_cost(100, 8), base.sensor_cost(100, 8));
+        assert_eq!(prior.transmission_cost(800),
+                   base.transmission_cost(800));
+        // efficiency drops with the scale
+        assert!(prior.tops_per_watt(256) < base.tops_per_watt(256));
+    }
+
+    #[test]
+    fn from_config_rejects_bad_profiles() {
+        // unknown keys
+        assert!(HwProfile::from_toml(
+            "[profile]\nname = \"x\"\n[energy]\nwarp_pj = 1.0"
+        )
+        .is_err());
+        // missing name
+        assert!(HwProfile::from_toml("[energy]\nfreq_ghz = 1.0").is_err());
+        // names unsafe for TOML/JSON embedding (spaces, control chars)
+        assert!(HwProfile::from_toml("[profile]\nname = \"white space\"")
+            .is_err());
+        let mut odd = HwProfile::ns_lbp_65nm();
+        odd.name = "tab\tname".into();
+        assert!(odd.validate().is_err());
+        // "mixed" is the merged-telemetry sentinel, not a profile name
+        odd.name = "mixed".into();
+        assert!(odd.validate().is_err());
+        // invalid values
+        assert!(HwProfile::from_toml(
+            "[profile]\nname = \"x\"\n[energy]\nfreq_ghz = 0.0"
+        )
+        .is_err());
+        assert!(HwProfile::from_toml(
+            "[profile]\nname = \"x\"\nenergy_scale = -1.0"
+        )
+        .is_err());
+        assert!(HwProfile::from_toml(
+            "[profile]\nname = \"x\"\n[energy]\nrow_read_pj = -4.0"
+        )
+        .is_err());
+        assert!(HwProfile::from_toml(
+            "[profile]\nname = \"x\"\n[energy]\ncompute_op_pj = 0.0"
+        )
+        .is_err());
+        // unset fields default to ns_lbp_65nm
+        let p = HwProfile::from_toml("[profile]\nname = \"just_named\"")
+            .unwrap();
+        assert_eq!(p.energy, EnergyParams::default());
+        assert_eq!(p.cycles, CycleTable::NS_LBP);
+    }
+
+    #[test]
+    fn cost_add_and_sanity() {
+        let p = HwProfile::ns_lbp_65nm();
+        let mut c = p.exec_cost(&exec_fixture());
+        let d = p.dpu_cost(&dpu_fixture());
+        let before = c.total_pj();
+        c.add(&d);
+        assert!((c.total_pj() - (before + d.total_pj())).abs() < 1e-9);
+        assert!(c.is_sane());
+        let bad = Cost { time_ns: f64::NAN, ..Default::default() };
+        assert!(!bad.is_sane());
+    }
+}

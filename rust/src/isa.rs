@@ -78,16 +78,28 @@ impl Opcode {
         })
     }
 
-    /// Memory cycles per instruction: compute ops resolve in a single
-    /// read cycle (the paper's headline); `copy` needs read + write;
-    /// `ini` is one write.  Every compute result is latched into `dest`
-    /// in the same cycle via the decoupled write port.
-    pub fn cycles(self) -> u64 {
+    /// Dense index into per-opcode tables ([`Opcode::ALL`] order).
+    pub const fn index(self) -> usize {
         match self {
-            Opcode::Copy => 2,
+            Opcode::Copy => 0,
             Opcode::Ini => 1,
-            _ => 1,
+            Opcode::Cmp => 2,
+            Opcode::Search => 3,
+            Opcode::Nand3 => 4,
+            Opcode::Nor3 => 5,
+            Opcode::Carry => 6,
+            Opcode::Sum => 7,
         }
+    }
+
+    /// Memory cycles per instruction under the NS-LBP timing: compute ops
+    /// resolve in a single read cycle (the paper's headline); `copy`
+    /// needs read + write; `ini` is one write.  Every compute result is
+    /// latched into `dest` in the same cycle via the decoupled write
+    /// port.  The table itself lives in [`crate::hw::CycleTable`] so
+    /// alternative hardware profiles can re-price recorded traces.
+    pub fn cycles(self) -> u64 {
+        crate::hw::CycleTable::NS_LBP.of(self)
     }
 
     /// Number of simultaneously activated read rows.

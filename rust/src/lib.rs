@@ -29,8 +29,16 @@
 //!   bit-counter, shifter, adder tree.
 //! * [`sensor`] — rolling-shutter CMOS sensor front-end with CDS and the
 //!   LSB-skipping dual-mode ADC (paper §4.1).
-//! * [`energy`] — the Cacti-like timing/energy/area model calibrated to the
-//!   paper's 65 nm post-layout numbers (§6.1, Table 3).
+//! * [`energy`] — the Cacti-like timing/energy/area arithmetic calibrated
+//!   to the paper's 65 nm post-layout numbers (§6.1, Table 3); the raw
+//!   per-event tables behind the `hw` profiles.
+//! * [`hw`] — the unified hardware cost-model subsystem: the `CostModel`
+//!   trait (`exec_cost`/`dpu_cost`/`sensor_cost`/`transmission_cost`/
+//!   `cycle_ns`/`area_mm2`), named serializable `HwProfile`s (built-ins
+//!   `ns_lbp_65nm`, `sram38_28nm`, `cnn8_digital`, `lbcnn`; `[hw]`
+//!   config section, `configs/profiles/*.toml`, `--hw-profile`), and the
+//!   `ab` A/B energy harness (`ns-lbp ab`).  Every consumer — backends,
+//!   baselines, serve metrics — prices event counts through this API.
 //! * [`params`], [`model`] — the Ap-LBP network parameters (read from
 //!   `artifacts/*.params.bin`) and a bit-exact integer functional model that
 //!   mirrors `python/compile/model.py`.
@@ -70,6 +78,7 @@ pub mod dpu;
 pub mod energy;
 pub mod engine;
 pub mod error;
+pub mod hw;
 pub mod isa;
 pub mod lbp;
 pub mod mapping;

@@ -18,20 +18,27 @@
 //!                 across best_effort:standard:billed, `--compare` also
 //!                 runs the 1-shard baseline and prints the speedup, and
 //!                 `--json` emits one machine-readable report.
+//! * `ab`        — the A/B energy harness: run the same frames through
+//!                 two engines under two hardware profiles
+//!                 (`--profile A --profile B`) and print/`--json`-emit a
+//!                 side-by-side diff of energy, time, TOPS/W and area.
+//! * `profile`   — print the selected hardware profile as a standalone
+//!                 TOML file (the `configs/profiles/*.toml` format).
 //! * `transient` — print the Fig. 9 RBL discharge waveforms.
 //! * `montecarlo`— run the Fig. 10 variation analysis.
 //! * `info`      — show configuration, geometry, energy/area headline.
 //!
 //! Configuration: `--config configs/nslbp_default.toml` plus repeated
 //! `--set section.key=value` overrides (backend selection is also
-//! reachable as `--set engine.backend=...`).
+//! reachable as `--set engine.backend=...`); `--hw-profile NAME|PATH`
+//! swaps the hardware cost model everywhere.
 
 use ns_lbp::circuit::{MonteCarlo, SENSE_DELAY_PS};
 use ns_lbp::cli::Command;
 use ns_lbp::config::SystemConfig;
 use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
-use ns_lbp::energy::{AreaModel, EnergyModel};
 use ns_lbp::engine::{BackendKind, Engine, QosClass};
+use ns_lbp::hw::{ab::AbHarness, CostModel, HwProfile};
 use ns_lbp::params::NetParams;
 use ns_lbp::sensor::Frame;
 use ns_lbp::serve::{Server, Session, Ticket};
@@ -57,6 +64,8 @@ fn command() -> Command {
     Command::new("ns-lbp", "near-sensor LBP accelerator simulator")
         .subcommand("run", "stream frames through the pipeline")
         .subcommand("serve-bench", "drive the sharded, batching serve layer")
+        .subcommand("ab", "A/B energy harness: two hw profiles, same frames")
+        .subcommand("profile", "print a hardware profile as TOML")
         .subcommand("transient", "Fig. 9 RBL discharge waveforms")
         .subcommand("montecarlo", "Fig. 10 sense-margin analysis")
         .subcommand("info", "configuration and headline numbers")
@@ -64,6 +73,11 @@ fn command() -> Command {
         .opt_repeated("set", "K=V", "config override, e.g. cache.banks=40")
         .opt("backend", "KIND", "inference backend: functional|architectural|pjrt")
         .opt("cross-check", "KIND", "reference backend to cross-check (or none)")
+        .opt("hw-profile", "NAME|PATH",
+             "hardware cost-model profile (ns_lbp_65nm|sram38_28nm|... or a \
+              profile TOML path)")
+        .opt_repeated("profile", "NAME|PATH",
+                      "ab: one arm's hw profile (give exactly twice)")
         .opt("dataset", "NAME", "mnist|svhn (default mnist)")
         .opt("frames", "N", "frames to stream (default 8; serve-bench 256)")
         .opt("seed", "N", "frame-generator seed (default 7)")
@@ -96,6 +110,8 @@ fn real_main(args: &[String]) -> Result<()> {
     match parsed.subcommand.as_deref() {
         Some("run") => run_pipeline(&parsed, system),
         Some("serve-bench") => serve_bench(&parsed, system),
+        Some("ab") => ab_compare(&parsed, system),
+        Some("profile") => dump_profile(&system),
         Some("transient") => transient(system),
         Some("montecarlo") => montecarlo(&parsed, system),
         Some("info") | None => info(system),
@@ -114,6 +130,9 @@ fn apply_engine_opts(parsed: &ns_lbp::cli::Parsed, system: &mut SystemConfig)
     }
     if let Some(c) = parsed.opt("cross-check") {
         system.engine.cross_check = BackendKind::parse_optional(c)?;
+    }
+    if let Some(p) = parsed.opt("hw-profile") {
+        system.hw.profile = HwProfile::resolve(p)?;
     }
     for spec in parsed.opt_all("route") {
         system.engine.routing.apply_spec(&spec)?;
@@ -227,8 +246,8 @@ fn run_pipeline(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig)
             r.seq,
             r.predicted,
             r.telemetry.exec.instructions,
-            r.telemetry.energy.total_pj() / 1e6,
-            r.telemetry.arch_time_ns / 1e3
+            r.telemetry.cost.energy.total_pj() / 1e6,
+            r.telemetry.cost.time_ns / 1e3
         );
     }
     println!(
@@ -486,6 +505,59 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
     Ok(())
 }
 
+/// `ns-lbp ab --profile A --profile B`: the ROADMAP A/B energy harness —
+/// run the same synthetic frames through two architectural engines under
+/// two hardware profiles and print (or `--json`-emit) the diff report.
+fn ab_compare(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig)
+              -> Result<()> {
+    let specs = parsed.opt_all("profile");
+    if specs.len() != 2 {
+        return Err(ns_lbp::Error::Usage(format!(
+            "ab expects exactly two --profile options (got {}), e.g. \
+             --profile ns_lbp_65nm --profile sram38_28nm",
+            specs.len()
+        )));
+    }
+    let a = HwProfile::resolve(&specs[0])?;
+    let b = HwProfile::resolve(&specs[1])?;
+    let frames_n: usize = parsed.opt_parse("frames", 8)?;
+    let seed: u64 = parsed.opt_parse("seed", 7)?;
+    let json = parsed.flag("json");
+
+    let (dataset, artifacts) = resolve_artifacts(parsed, &mut system);
+    let params = match params::load(format!("{artifacts}/{dataset}.params.bin")) {
+        Ok(p) => p,
+        Err(_) => params::synth::synth_params(seed).1,
+    };
+    let arch = ArchSim {
+        lbp: !parsed.flag("functional"),
+        mlp: parsed.flag("arch-mlp"),
+        early_exit: parsed.flag("early-exit"),
+    };
+    let frames = synth_frames(&params, frames_n, seed)?;
+    let harness = AbHarness::new(
+        params,
+        CoordinatorConfig { system, arch, shard: None },
+        a,
+        b,
+    )?;
+    let report = harness.run(&frames)?;
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        report.print();
+    }
+    Ok(())
+}
+
+/// `ns-lbp profile --hw-profile NAME`: print the selected hardware
+/// profile as a standalone TOML file (the `configs/profiles/*.toml`
+/// format; redirect to a file to snapshot or fork a profile).
+fn dump_profile(system: &SystemConfig) -> Result<()> {
+    print!("{}", system.hw.profile.to_toml());
+    Ok(())
+}
+
 fn transient(system: SystemConfig) -> Result<()> {
     let p = system.circuit;
     p.validate()?;
@@ -532,8 +604,7 @@ fn montecarlo(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()> 
 
 fn info(system: SystemConfig) -> Result<()> {
     let g = system.cache;
-    let em = EnergyModel::default();
-    let area = AreaModel::default();
+    let profile = system.hw_profile();
     println!("NS-LBP v{}", ns_lbp::VERSION);
     println!(
         "cache: {} banks x {} mats x {} sub-arrays ({}x{}) = {:.1} MB",
@@ -549,12 +620,16 @@ fn info(system: SystemConfig) -> Result<()> {
         engine_banner(&system)
     );
     println!(
+        "hw profile: {} ({} GHz; swap with --hw-profile or [hw] profile)",
+        profile.name, profile.energy.freq_ghz
+    );
+    println!(
         "headline: {:.1} TOPS/W peak, {:.1} TOPS, {:.2} mm² slice, \
          SA overhead {:.1}x",
-        em.tops_per_watt(g.cols as u64),
-        em.peak_tops(&g),
-        area.slice_mm2(&g),
-        area.sa_overhead
+        profile.tops_per_watt(g.cols as u64),
+        profile.peak_tops(&g),
+        profile.area_mm2(&g),
+        profile.area.sa_overhead
     );
     Ok(())
 }

@@ -2,7 +2,8 @@
 //! throughput, and the accelerator's energy/time account aggregated
 //! across shards — all broken down per [`QosClass`] as well as in
 //! aggregate, so a routed two-class run shows each class's own
-//! p50/p95/p99 and drop/reject counts.
+//! p50/p95/p99, drop/reject counts, and energy under the active
+//! hardware profile (`MetricsReport::hw_profile`).
 //!
 //! Counters are atomics (touched on every request); the latency
 //! reservoirs and energy accumulators sit behind one mutex that is taken
@@ -84,7 +85,9 @@ impl Default for Metrics {
                 per_class: Default::default(),
                 rng: Xoshiro256::new(0x6c62_7031),
                 energy: EnergyBreakdown::default(),
+                per_class_energy: Default::default(),
                 arch_time_ns: 0.0,
+                hw_profile: String::new(),
             }),
         }
     }
@@ -97,7 +100,12 @@ struct Aggregates {
     per_class: [Reservoir; QosClass::COUNT],
     rng: Xoshiro256,
     energy: EnergyBreakdown,
+    /// Per-class energy accounts, indexed by [`QosClass::index`].
+    per_class_energy: [EnergyBreakdown; QosClass::COUNT],
     arch_time_ns: f64,
+    /// Hardware profile stamped on completed frames' telemetry ("" until
+    /// the first modeled completion, "mixed" if profiles disagree).
+    hw_profile: String,
 }
 
 impl Metrics {
@@ -150,8 +158,14 @@ impl Metrics {
         let agg = &mut *agg;
         agg.all.offer(ns, &mut agg.rng);
         agg.per_class[class.index()].offer(ns, &mut agg.rng);
-        agg.energy.add(&report.telemetry.energy);
-        agg.arch_time_ns += report.telemetry.arch_time_ns;
+        agg.energy.add(&report.telemetry.cost.energy);
+        agg.per_class_energy[class.index()]
+            .add(&report.telemetry.cost.energy);
+        agg.arch_time_ns += report.telemetry.cost.time_ns;
+        crate::engine::Telemetry::merge_profile_label(
+            &mut agg.hw_profile,
+            &report.telemetry.profile,
+        );
     }
 
     pub fn completed(&self) -> u64 {
@@ -201,21 +215,30 @@ impl Metrics {
             .map(|&class| {
                 let c = &self.classes[class.index()];
                 let lat = agg.per_class[class.index()].sorted();
+                let completed = c.completed.load(Ordering::Relaxed);
+                let energy_pj = agg.per_class_energy[class.index()].total_pj();
                 ClassReport {
                     class,
                     accepted: c.accepted.load(Ordering::Relaxed),
                     rejected: c.rejected.load(Ordering::Relaxed),
                     dropped: c.dropped.load(Ordering::Relaxed),
-                    completed: c.completed.load(Ordering::Relaxed),
+                    completed,
                     failed: c.failed.load(Ordering::Relaxed),
                     p50_ms: percentile_ns(&lat, 0.50) as f64 / 1e6,
                     p95_ms: percentile_ns(&lat, 0.95) as f64 / 1e6,
                     p99_ms: percentile_ns(&lat, 0.99) as f64 / 1e6,
                     max_ms: lat.last().copied().unwrap_or(0) as f64 / 1e6,
+                    energy_uj: energy_pj / 1e6,
+                    energy_per_frame_uj: if completed == 0 {
+                        0.0
+                    } else {
+                        energy_pj / 1e6 / completed as f64
+                    },
                 }
             })
             .collect();
         MetricsReport {
+            hw_profile: agg.hw_profile.clone(),
             accepted: self.accepted_total(),
             rejected: self.rejected(),
             dropped: self.dropped(),
@@ -278,6 +301,11 @@ pub struct ClassReport {
     pub p95_ms: f64,
     pub p99_ms: f64,
     pub max_ms: f64,
+    /// Total energy this class's completed frames cost under the active
+    /// hardware profile [µJ].
+    pub energy_uj: f64,
+    /// `energy_uj / completed` (0 with no completions).
+    pub energy_per_frame_uj: f64,
 }
 
 impl ClassReport {
@@ -290,6 +318,9 @@ impl ClassReport {
 /// Frozen metrics for one serving run.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsReport {
+    /// Hardware profile that priced the energy numbers ("" when nothing
+    /// was modeled, "mixed" when completions disagree).
+    pub hw_profile: String,
     pub accepted: u64,
     pub rejected: u64,
     /// Requests shed after admission (drop-oldest / deadline expiry).
@@ -354,9 +385,9 @@ impl MetricsReport {
         for c in self.per_class.iter().filter(|c| c.active()) {
             println!(
                 "  {:<10}: {} ok / {} rej / {} drop | p50 {:.2} ms | \
-                 p95 {:.2} ms | p99 {:.2} ms",
+                 p95 {:.2} ms | p99 {:.2} ms | {:.3} µJ/frame",
                 c.class.as_str(), c.completed, c.rejected, c.dropped,
-                c.p50_ms, c.p95_ms, c.p99_ms
+                c.p50_ms, c.p95_ms, c.p99_ms, c.energy_per_frame_uj
             );
         }
         println!(
@@ -364,8 +395,12 @@ impl MetricsReport {
             self.throughput_fps, self.wall_seconds
         );
         println!(
-            "  energy    : {:.3} µJ/frame | arch mismatches {}",
-            self.energy_per_frame_uj, self.arch_mismatches
+            "  energy    : {:.3} µJ/frame under profile {:?} | \
+             arch mismatches {}",
+            self.energy_per_frame_uj,
+            if self.hw_profile.is_empty() { "unmodeled" }
+            else { &self.hw_profile },
+            self.arch_mismatches
         );
         if self.cross_checked > 0 {
             println!(
@@ -381,6 +416,7 @@ impl MetricsReport {
     /// the output is always valid JSON.
     pub fn to_json(&self) -> String {
         let mut s = String::from("{");
+        s.push_str(&format!("\"hw_profile\":\"{}\",", self.hw_profile));
         s.push_str(&format!(
             "\"accepted\":{},\"rejected\":{},\"dropped\":{},\
              \"completed\":{},\"failed\":{},",
@@ -415,10 +451,11 @@ impl MetricsReport {
             s.push_str(&format!(
                 "{{\"class\":\"{}\",\"accepted\":{},\"rejected\":{},\
                  \"dropped\":{},\"completed\":{},\"failed\":{},\
-                 \"p50_ms\":{},\"p95_ms\":{},\"p99_ms\":{},\"max_ms\":{}}}",
+                 \"p50_ms\":{},\"p95_ms\":{},\"p99_ms\":{},\"max_ms\":{},\
+                 \"energy_uj\":{},\"energy_per_frame_uj\":{}}}",
                 c.class.as_str(), c.accepted, c.rejected, c.dropped,
                 c.completed, c.failed, c.p50_ms, c.p95_ms, c.p99_ms,
-                c.max_ms
+                c.max_ms, c.energy_uj, c.energy_per_frame_uj
             ));
         }
         s.push_str("]}");
@@ -448,7 +485,14 @@ mod tests {
             logits: vec![],
             features: None,
             telemetry: crate::engine::Telemetry {
-                arch_time_ns,
+                profile: "ns_lbp_65nm".into(),
+                cost: crate::hw::Cost {
+                    energy: EnergyBreakdown {
+                        compute_pj: 2e6, // 2 µJ
+                        ..Default::default()
+                    },
+                    time_ns: arch_time_ns,
+                },
                 ..Default::default()
             },
         }
@@ -499,6 +543,7 @@ mod tests {
         assert!((s.throughput_fps - 2.0).abs() < 1e-9);
         assert!((s.total_arch_time_ns - 2000.0).abs() < 1e-9);
         assert!(s.modeled_fps(2) > s.modeled_fps(1) * 1.99);
+        assert_eq!(s.hw_profile, "ns_lbp_65nm");
         // per-class slices
         assert_eq!(s.per_class.len(), QosClass::COUNT);
         let std_c = s.class(QosClass::Standard).unwrap();
@@ -506,9 +551,14 @@ mod tests {
         assert_eq!(std_c.rejected, 1);
         assert_eq!(std_c.completed, 1);
         assert!((std_c.p50_ms - 2.0).abs() < 0.5);
+        // per-class energy under the active profile
+        assert!((std_c.energy_uj - 2.0).abs() < 1e-9);
+        assert!((std_c.energy_per_frame_uj - 2.0).abs() < 1e-9);
         let billed = s.class(QosClass::Billed).unwrap();
         assert_eq!(billed.completed, 1);
         assert!((billed.p50_ms - 4.0).abs() < 0.5);
+        assert!((billed.energy_uj - 2.0).abs() < 1e-9);
+        assert!((s.energy_per_frame_uj - 2.0).abs() < 1e-9);
         let be = s.class(QosClass::BestEffort).unwrap();
         assert_eq!(be.dropped, 1);
         assert_eq!(be.completed, 0);
@@ -530,7 +580,8 @@ mod tests {
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         for key in ["\"accepted\":", "\"latency_ms\":", "\"per_class\":",
                     "\"throughput_fps\":", "\"energy_per_frame_uj\":",
-                    "\"class\":\"billed\""] {
+                    "\"class\":\"billed\"", "\"energy_uj\":",
+                    "\"hw_profile\":\"ns_lbp_65nm\""] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
         assert!(json.starts_with('{') && json.ends_with('}'));

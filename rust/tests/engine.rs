@@ -52,8 +52,8 @@ fn functional_and_architectural_backends_agree_on_logits() {
         assert_eq!(out.telemetry().arch_mismatches, 0, "{}", b.kind());
     }
     // only the architectural backend models hardware time
-    assert_eq!(outputs[0].telemetry().arch_time_ns, 0.0);
-    assert!(outputs[1].telemetry().arch_time_ns > 0.0);
+    assert_eq!(outputs[0].telemetry().cost.time_ns, 0.0);
+    assert!(outputs[1].telemetry().cost.time_ns > 0.0);
 }
 
 /// The engine's pluggable cross-check: architectural primary vs
@@ -204,8 +204,8 @@ fn batched_and_per_frame_logits_match_on_both_backends() {
             // batched fleet passes amortize: the batch's modeled time is
             // below the per-frame sum (5x the chunks, same pass count
             // under the default 320-sub-array budget)
-            assert!(batched.telemetry().arch_time_ns
-                        < per_frame_engine.telemetry().arch_time_ns,
+            assert!(batched.telemetry().cost.time_ns
+                        < per_frame_engine.telemetry().cost.time_ns,
                     "no sub-array pass packing across the batch");
         }
     }
@@ -226,4 +226,76 @@ fn pjrt_selection_fails_early_when_unavailable() {
         .unwrap_err()
         .to_string();
     assert!(err.contains("unavailable"), "{err}");
+}
+
+/// Regression: enabling cross-checking must not inflate the primary
+/// profile's energy/time accounting.  The reference backend's redundant
+/// run lands in `Telemetry::cross_check_cost` — strictly apart from the
+/// primary `cost` — so a cross-checked run reports exactly the same
+/// primary energy as an unchecked one.
+#[test]
+fn cross_check_does_not_inflate_primary_cost() {
+    let (params, frames) = setup(3, 47);
+    let mut plain = Engine::builder()
+        .params(params.clone())
+        .backend(BackendKind::Architectural)
+        .no_cross_check()
+        .build()
+        .unwrap();
+    let mut checked = Engine::builder()
+        .params(params)
+        .backend(BackendKind::Architectural)
+        .cross_check(BackendKind::Functional)
+        .build()
+        .unwrap();
+    let out_plain = plain.infer_batch(&frames).unwrap();
+    let out_checked = checked.infer_batch(&frames).unwrap();
+
+    let (tp, tc) = (out_plain.telemetry(), out_checked.telemetry());
+    // primary accounting identical, frame by frame and in aggregate
+    for (a, b) in out_plain.frames.iter().zip(&out_checked.frames) {
+        assert_eq!(a.telemetry.cost, b.telemetry.cost, "frame {}", a.seq);
+        assert_eq!(a.telemetry.profile, b.telemetry.profile);
+    }
+    assert_eq!(tp.cost, tc.cost);
+    assert_eq!(tp.profile, "ns_lbp_65nm");
+    // ... while the reference run's cost is visible, but separate
+    assert_eq!(tp.cross_check_cost, ns_lbp::hw::Cost::default());
+    assert!(tc.cross_check_cost.energy.total_pj() > 0.0);
+    assert_eq!(tc.cross_check_frames, 3);
+    assert_eq!(tc.cross_check_mismatches, 0);
+    // engine-accumulated telemetry obeys the same split
+    assert_eq!(checked.telemetry().cost, plain.telemetry().cost);
+    assert!(checked.telemetry().cross_check_cost.energy.total_pj() > 0.0);
+}
+
+/// The builder's `--hw-profile` override re-prices telemetry without
+/// changing logits, and stamps the profile name on every frame.
+#[test]
+fn hw_profile_override_reprices_without_changing_results() {
+    use ns_lbp::hw::HwProfile;
+    let (params, frames) = setup(2, 53);
+    let mut base = Engine::builder()
+        .params(params.clone())
+        .backend(BackendKind::Architectural)
+        .build()
+        .unwrap();
+    let mut prior = Engine::builder()
+        .params(params)
+        .backend(BackendKind::Architectural)
+        .hw_profile(HwProfile::sram38_28nm())
+        .build()
+        .unwrap();
+    let out_base = base.infer_batch(&frames).unwrap();
+    let out_prior = prior.infer_batch(&frames).unwrap();
+    for (a, b) in out_base.frames.iter().zip(&out_prior.frames) {
+        assert_eq!(a.logits, b.logits, "frame {}", a.seq);
+        assert_eq!(a.telemetry.profile, "ns_lbp_65nm");
+        assert_eq!(b.telemetry.profile, "sram38_28nm");
+        // same trace, costlier platform
+        assert_eq!(a.telemetry.exec, b.telemetry.exec);
+        assert!(b.telemetry.cost.energy.total_pj()
+                    > a.telemetry.cost.energy.total_pj());
+        assert!(b.telemetry.cost.time_ns > a.telemetry.cost.time_ns);
+    }
 }

@@ -393,3 +393,73 @@ fn prop_config_override_roundtrip() {
         assert!((sc.circuit.freq_ghz - freq).abs() < 1e-12);
     });
 }
+
+/// Arbitrary *valid* hardware profiles never produce negative or NaN
+/// costs on arbitrary traces, and they survive TOML serialization
+/// losslessly (serialize → parse → equal).
+#[test]
+fn prop_hw_profiles_cost_sane_and_roundtrip() {
+    use ns_lbp::dpu::DpuStats;
+    use ns_lbp::hw::{CostModel, HwProfile, AREA_FIELDS, ENERGY_FIELDS};
+    use ns_lbp::isa::{ExecStats, Opcode};
+
+    check(Config::default().cases(60), "hw profile sanity", |g: &mut Gen| {
+        // random valid profile
+        let mut p = HwProfile::ns_lbp_65nm();
+        p.name = format!("synth_{}", g.usize_in(0, 1 << 20));
+        for &field in ENERGY_FIELDS {
+            p.set_energy_field(field, g.f64_in(0.001, 100.0)).unwrap();
+        }
+        // freq must stay positive
+        p.energy.freq_ghz = g.f64_in(0.05, 5.0);
+        for &field in AREA_FIELDS {
+            p.set_area_field(field, g.f64_in(0.0, 10_000.0)).unwrap();
+        }
+        p.energy_scale = g.f64_in(0.1, 10.0);
+        p.mac_cycles = g.usize_in(0, 64) as u64;
+        p.mac_lanes = g.usize_in(0, 1 << 16) as u64;
+        p.flop_lanes = g.usize_in(0, 4096) as u64;
+        for op in Opcode::ALL {
+            p.cycles.set(op, g.usize_in(1, 8) as u64);
+        }
+        p.validate().unwrap();
+
+        // random trace
+        let mut stats = ExecStats::default();
+        stats.instructions = g.usize_in(0, 100_000) as u64;
+        stats.cycles = g.usize_in(0, 100_000) as u64;
+        stats.row_reads = g.usize_in(0, 100_000) as u64;
+        stats.row_writes = g.usize_in(0, 100_000) as u64;
+        stats.compute_ops = g.usize_in(0, 100_000) as u64;
+        for op in Opcode::ALL {
+            if g.bool() {
+                stats.by_opcode.insert(op, g.usize_in(0, 10_000) as u64);
+            }
+        }
+        let dpu = DpuStats {
+            quantize_ops: g.usize_in(0, 100_000) as u64,
+            bitcounts: g.usize_in(0, 100_000) as u64,
+            shifts: g.usize_in(0, 100_000) as u64,
+            adds: g.usize_in(0, 100_000) as u64,
+            activations: g.usize_in(0, 100_000) as u64,
+            shifted_relus: g.usize_in(0, 100_000) as u64,
+        };
+
+        // never negative, never NaN
+        for cost in [
+            p.exec_cost(&stats),
+            p.dpu_cost(&dpu),
+            p.sensor_cost(g.usize_in(0, 1 << 20) as u64,
+                          g.usize_in(0, 16) as u64),
+            p.transmission_cost(g.usize_in(0, 1 << 24) as u64),
+        ] {
+            assert!(cost.is_sane(), "insane cost {cost:?} under {p:?}");
+        }
+        assert!(p.cycle_ns().is_finite() && p.cycle_ns() > 0.0);
+        assert!(p.tops_per_watt(256).is_finite());
+
+        // lossless TOML round-trip
+        let back = HwProfile::from_toml(&p.to_toml()).unwrap();
+        assert_eq!(back, p);
+    });
+}

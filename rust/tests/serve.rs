@@ -209,12 +209,12 @@ fn routed_two_class_serve_reports_per_class_metrics() {
                 assert_eq!(r.sensor_id, 1);
                 assert_eq!(r.backend, BackendKind::Functional);
                 // the cheap path models no hardware time
-                assert_eq!(r.report.telemetry.arch_time_ns, 0.0);
+                assert_eq!(r.report.telemetry.cost.time_ns, 0.0);
             }
             QosClass::Billed => {
                 assert_eq!(r.sensor_id, 2);
                 assert_eq!(r.backend, BackendKind::Architectural);
-                assert!(r.report.telemetry.arch_time_ns > 0.0);
+                assert!(r.report.telemetry.cost.time_ns > 0.0);
                 assert_eq!(r.report.telemetry.arch_mismatches, 0);
             }
             QosClass::Standard => panic!("no standard traffic submitted"),
