@@ -1,25 +1,51 @@
-//! Hot-path micro-benchmarks — the perf-pass instrument (EXPERIMENTS.md
-//! §Perf).  Covers every stage of the L3 pipeline:
+//! Hot-path micro-benchmarks — the perf-pass instrument (see
+//! EXPERIMENTS.md §Perf for how to run and read it).  Covers every stage
+//! of the L3 pipeline:
 //!
 //! * sub-array bulk-bitwise row ops (the single-cycle compute primitive),
 //! * a full Algorithm-1 256-lane batch,
 //! * lane loading (transposed bit-plane writes),
-//! * the in-memory bit-serial dot product,
-//! * partitioning, Monte-Carlo trials, and a whole functional-model frame.
+//! * the in-memory bit-serial dot product — in both the seed shape
+//!   (per-call weight collect + transpose + load) and the shipped shape
+//!   (prepacked `WeightPlanes`), so the prepack speedup is measured
+//!   in-run,
+//! * whole architectural frames, cold (fresh backend per frame — the
+//!   seed-shaped allocating path) vs warm (persistent scratch arena),
+//!   plus an 8-frame batch — the unit a serve shard dispatches,
+//! * partitioning, Monte-Carlo trials, and a whole functional-model
+//!   frame.
+//!
+//! `--json[=PATH]` additionally writes the results as
+//! `BENCH_hotpath.json` (default) — the trajectory artifact CI uploads
+//! every run and diffs against the previous run's upload.
 
 use ns_lbp::bench_harness::{black_box, Bench};
 use ns_lbp::circuit::MonteCarlo;
 use ns_lbp::dpu::Dpu;
+use ns_lbp::engine::{ArchSim, ArchitecturalBackend, EngineConfig,
+                     InferenceBackend};
 use ns_lbp::isa::{Executor, Instruction};
 use ns_lbp::lbp::parallel_compare;
 use ns_lbp::mapping::{partition, LbpSubarrayMap};
-use ns_lbp::mlp::MlpSubarrayMap;
+use ns_lbp::mlp::{MlpSubarrayMap, WeightPlanes};
 use ns_lbp::model;
 use ns_lbp::params;
+use ns_lbp::params::MlpLayer;
 use ns_lbp::rng::Xoshiro256;
 use ns_lbp::sram::{CacheGeometry, Region, RegionLayout, SubArray};
+use ns_lbp::testing::synth_frames;
 
 fn main() {
+    let mut json_path: Option<String> = None;
+    for arg in std::env::args().skip(1) {
+        if arg == "--json" {
+            json_path = Some("BENCH_hotpath.json".into());
+        } else if let Some(p) = arg.strip_prefix("--json=") {
+            json_path = Some(p.to_string());
+        }
+        // anything else (e.g. cargo's own bench flags) is ignored
+    }
+
     let mut b = Bench::new("hotpath");
     let map = LbpSubarrayMap::new(RegionLayout::default(), 8).unwrap();
     let mut rng = Xoshiro256::new(1);
@@ -54,6 +80,13 @@ fn main() {
         b.run("lane_load_256x8bit", || {
             map.load_lanes(&mut sa2, 0, black_box(&pairs)).unwrap()
         });
+        // persistent staging buffer — the arena-threaded shape the
+        // architectural batch path actually runs
+        let mut planes = Vec::new();
+        b.run("lane_load_256x8bit_warm", || {
+            map.load_lanes_with(&mut sa2, 0, black_box(&pairs), &mut planes)
+                .unwrap()
+        });
     }
 
     // --- in-memory bit-serial dot --------------------------------------------
@@ -68,6 +101,35 @@ fn main() {
         b.run("bitserial_dot_256lanes", || {
             let mut dpu = Dpu::default();
             mmap.dot_unsigned(&mut ex, &mut dpu, 0, 0, 256).unwrap()
+        });
+
+        // before/after pair: the seed loaded the W region by collecting
+        // and transposing a fresh weight column per output neuron
+        // (`bitserial_dot_pack_percall`); the shipped path bulk-writes
+        // bit-planes prepacked once at engine build
+        // (`bitserial_dot_prepacked`).  Identical dots, different load.
+        let layer = MlpLayer {
+            d: 256,
+            o: 1,
+            w: (0..256).map(|_| (rng.next_u64() % 16) as i8 - 8).collect(),
+            scale: vec![0.0],
+            bias: vec![0.0],
+        };
+        let rowsum: i64 = x.iter().map(|&v| v as i64).sum();
+        b.run("bitserial_dot_pack_percall", || {
+            let w_col: Vec<u8> = (0..256)
+                .map(|di| (layer.weight(di, 0) as i16 + 8) as u8)
+                .collect();
+            mmap.load_vector(&mut ex, Region::Weight, 0, &w_col).unwrap();
+            let mut dpu = Dpu::default();
+            mmap.dot_signed(&mut ex, &mut dpu, 0, 0, 256, rowsum).unwrap()
+        });
+        let planes = WeightPlanes::pack(&layer, 4, 256).unwrap();
+        b.run("bitserial_dot_prepacked", || {
+            mmap.load_weight_planes(&mut ex, 0, black_box(&planes), 0, 0)
+                .unwrap();
+            let mut dpu = Dpu::default();
+            mmap.dot_signed(&mut ex, &mut dpu, 0, 0, 256, rowsum).unwrap()
         });
     }
 
@@ -88,7 +150,41 @@ fn main() {
         mc.run(3).min_margin
     });
 
-    // --- whole frames ------------------------------------------------------------
+    // --- whole architectural frames (synthetic net, always available) --------
+    // cold = a fresh backend per frame: re-packs the weight planes,
+    // re-builds the maps, and grows a new arena — the shape of the seed's
+    // per-frame allocating path.  warm = the shipped steady state: one
+    // backend, persistent arena.  batch8 = the unit one serve shard
+    // dispatches per `Engine::infer_batch`.
+    {
+        let (_, p) = params::synth::synth_params(5);
+        let frames = synth_frames(&p, 8, 7).unwrap();
+        let config = EngineConfig {
+            arch: ArchSim { lbp: true, mlp: true, early_exit: false },
+            ..Default::default()
+        };
+        b.run("arch_frame_synth_cold", || {
+            let mut be =
+                ArchitecturalBackend::new(p.clone(), config.clone()).unwrap();
+            be.infer_batch(std::slice::from_ref(&frames[0]))
+                .unwrap()
+                .frames
+                .len()
+        });
+        let mut warm =
+            ArchitecturalBackend::new(p.clone(), config.clone()).unwrap();
+        b.run("arch_frame_synth_warm", || {
+            warm.infer_batch(std::slice::from_ref(black_box(&frames[0])))
+                .unwrap()
+                .frames
+                .len()
+        });
+        b.run("arch_batch8_dispatch", || {
+            warm.infer_batch(black_box(&frames)).unwrap().frames.len()
+        });
+    }
+
+    // --- whole frames (artifact-gated MNIST net) ------------------------------
     if let Ok(p) = params::load("artifacts/mnist.params.bin") {
         let cfg = p.config;
         let img: Vec<f32> = (0..cfg.height * cfg.width * cfg.in_channels)
@@ -97,7 +193,7 @@ fn main() {
         b.run("functional_frame_mnist", || {
             model::apply(&p, black_box(&img), &mut Dpu::default()).unwrap()
         });
-        use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
+        use ns_lbp::coordinator::{Coordinator, CoordinatorConfig};
         use ns_lbp::sensor::Frame;
         let coord = Coordinator::new(
             p.clone(),
@@ -112,6 +208,35 @@ fn main() {
             handle.process(black_box(&frame)).unwrap().seq
         });
     } else {
-        eprintln!("(skipping whole-frame benches: run `make artifacts`)");
+        eprintln!("(skipping MNIST whole-frame benches: run `make artifacts`)");
+    }
+
+    // --- before/after summary -------------------------------------------------
+    if let (Some(before), Some(after)) = (
+        b.result("bitserial_dot_pack_percall"),
+        b.result("bitserial_dot_prepacked"),
+    ) {
+        println!(
+            "prepacked weight planes: {:?} -> {:?} per dot ({:.2}x)",
+            before.median,
+            after.median,
+            before.median.as_secs_f64() / after.median.as_secs_f64().max(1e-12)
+        );
+    }
+    if let (Some(cold), Some(warm)) = (
+        b.result("arch_frame_synth_cold"),
+        b.result("arch_frame_synth_warm"),
+    ) {
+        println!(
+            "warm arena arch frame: {:?} -> {:?} ({:.2}x)",
+            cold.median,
+            warm.median,
+            cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12)
+        );
+    }
+
+    if let Some(path) = json_path {
+        b.write_json(&path).unwrap();
+        println!("wrote {path}");
     }
 }

@@ -35,10 +35,46 @@ pub struct CaseResult {
     pub mad: Duration,
 }
 
+/// Minimal JSON string escaping (names/groups are code-controlled, but
+/// stay valid even if one ever contains a quote or backslash).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 impl CaseResult {
     /// items/second given `items` work items per iteration.
     pub fn throughput(&self, items: f64) -> f64 {
         items / self.median.as_secs_f64()
+    }
+
+    /// One JSON object per case — the `BENCH_*.json` trajectory record
+    /// CI diffs across runs (all durations in nanoseconds; see
+    /// EXPERIMENTS.md for the field glossary).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"group\":\"{}\",\"name\":\"{}\",\"iters\":{},\
+             \"median_ns\":{},\"mean_ns\":{},\"p05_ns\":{},\"p95_ns\":{},\
+             \"mad_ns\":{}}}",
+            json_escape(&self.group),
+            json_escape(&self.name),
+            self.iters,
+            self.median.as_secs_f64() * 1e9,
+            self.mean.as_secs_f64() * 1e9,
+            self.p05.as_secs_f64() * 1e9,
+            self.p95.as_secs_f64() * 1e9,
+            self.mad.as_secs_f64() * 1e9,
+        )
     }
 
     pub fn print(&self) {
@@ -149,6 +185,30 @@ impl Bench {
     pub fn results(&self) -> &[CaseResult] {
         &self.results
     }
+
+    /// Look up a finished case by name (bench mains use this to print
+    /// before/after speedups without re-running anything).
+    pub fn result(&self, name: &str) -> Option<&CaseResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// The whole group as one JSON document:
+    /// `{"group": ..., "cases": [...]}`.
+    pub fn to_json(&self) -> String {
+        let cases: Vec<String> =
+            self.results.iter().map(|r| r.to_json()).collect();
+        format!(
+            "{{\"group\":\"{}\",\"cases\":[{}]}}",
+            json_escape(&self.group),
+            cases.join(",")
+        )
+    }
+
+    /// Write the group's JSON to `path` (the `BENCH_<group>.json`
+    /// artifact CI uploads and diffs against the previous run).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json() + "\n")
+    }
 }
 
 /// Simple fixed-width table printer for paper-figure outputs.
@@ -236,6 +296,23 @@ mod tests {
             mad: Duration::from_millis(1),
         };
         assert!((r.throughput(100.0) - 10_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_output_is_well_formed() {
+        std::env::set_var("NSLBP_BENCH_FAST", "1");
+        let mut b = Bench::new("jsongroup");
+        b.run("case_a", || black_box(3u64 * 7));
+        b.run("case \"b\"", || black_box(1u64));
+        let json = b.to_json();
+        assert!(json.starts_with("{\"group\":\"jsongroup\",\"cases\":["));
+        assert!(json.contains("\"name\":\"case_a\""));
+        assert!(json.contains("\"median_ns\":"));
+        // quotes in names are escaped, so the document stays parseable
+        assert!(json.contains("case \\\"b\\\""));
+        assert_eq!(json.matches("\"iters\":").count(), 2);
+        assert!(b.result("case_a").is_some());
+        assert!(b.result("nope").is_none());
     }
 
     #[test]

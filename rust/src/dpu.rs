@@ -82,6 +82,21 @@ impl Dpu {
         words.iter().map(|w| w.count_ones()).sum()
     }
 
+    /// Population count of the first `lanes` bits of a packed row — one
+    /// bit-counter use, identical to masking the row to `lanes` lanes and
+    /// calling [`Self::bitcount`], but without materializing the masked
+    /// copy (hot path of the in-memory bit-serial dot, §Perf).
+    pub fn bitcount_masked(&mut self, words: &[u64], lanes: usize) -> u32 {
+        self.stats.bitcounts += 1;
+        let full = lanes / 64;
+        let mut count: u32 = words[..full].iter().map(|w| w.count_ones()).sum();
+        let rem = lanes % 64;
+        if rem != 0 {
+            count += (words[full] & ((1u64 << rem) - 1)).count_ones();
+        }
+        count
+    }
+
     /// Barrel shift: `value << amount` (the `×2^{m+n}` step of Fig. 7).
     pub fn shift(&mut self, value: i64, amount: u32) -> i64 {
         self.stats.shifts += 1;
@@ -164,6 +179,24 @@ mod tests {
         assert_eq!(d.stats.bitcounts, 1);
         assert_eq!(d.stats.shifts, 1);
         assert_eq!(d.stats.adds, 1);
+    }
+
+    #[test]
+    fn bitcount_masked_equals_masked_bitcount() {
+        let words = [u64::MAX, 0xDEAD_BEEF_0123_4567, u64::MAX, 0];
+        let mut d = Dpu::default();
+        for lanes in [1usize, 63, 64, 65, 100, 128, 200, 256] {
+            // reference: materialize the masked row, then bitcount
+            let w = lanes.div_ceil(64);
+            let mut masked: Vec<u64> = words[..w].to_vec();
+            if lanes % 64 != 0 {
+                masked[w - 1] &= (1u64 << (lanes % 64)) - 1;
+            }
+            let mut dref = Dpu::default();
+            let want = dref.bitcount(&masked);
+            assert_eq!(d.bitcount_masked(&words, lanes), want, "lanes={lanes}");
+        }
+        assert_eq!(d.stats.bitcounts, 8);
     }
 
     #[test]

@@ -287,7 +287,8 @@ mod tests {
             .abs()
             < 1e-9);
         assert!((m.exec_time_ns(&stats) - 16.0).abs() < 1e-12);
-        let _ = stats.by_opcode.entry(Opcode::Cmp).or_default();
+        stats.by_opcode.add(Opcode::Cmp, 1);
+        assert_eq!(stats.by_opcode.get(Opcode::Cmp), 1);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //!   inference used for the logits, and
 //! * the **architectural path** — the same LBP comparisons executed as
 //!   Algorithm 1 over simulated compute sub-arrays
-//!   (`crate::lbp::parallel_compare`) and, optionally, the MLP as
+//!   (`crate::lbp::parallel_compare_into`) and, optionally, the MLP as
 //!   in-memory AND/bitcount (`crate::mlp`), producing cycle/energy
 //!   statistics *and* a per-frame equivalence check (any divergence is
 //!   counted in `Telemetry::arch_mismatches` — it must be 0).
@@ -28,6 +28,20 @@
 //! batches pool into one per-layer fleet-pass count before dividing by
 //! the sub-array budget.
 //!
+//! **Hot path (§Perf, see EXPERIMENTS.md):** everything static is
+//! precomputed at build, everything transient lives in a persistent
+//! arena.  The MLP weight bit-planes are transposed *once* into
+//! [`WeightPlanes`] (the paper's weights-stationary premise — the seed
+//! re-packed every weight column per output neuron per chunk per frame);
+//! the sub-array maps and the functional fallback's gather tables
+//! ([`crate::model::LbpLayerPlan`]) are built once; and the per-batch
+//! lane lists, bit streams, plane staging rows, layer tensors and
+//! accumulators live in an `ArchScratch` arena reused across batches, so the
+//! steady-state compute loops perform no heap allocation (only the
+//! returned logits/features, which escape into the output, are
+//! allocated).  A serve shard keeps one backend per routed class, so the
+//! arena persists across the whole traffic stream.
+//!
 //! All telemetry is priced through the configured hardware profile
 //! (`SystemConfig::hw_profile()` → [`crate::hw::CostModel`]); swapping
 //! `[hw] profile` re-prices energy and modeled time without touching the
@@ -37,24 +51,61 @@ use crate::dpu::Dpu;
 use crate::error::Result;
 use crate::hw::{Cost, CostModel, HwProfile};
 use crate::isa::{ExecStats, Executor};
-use crate::lbp::parallel_compare;
+use crate::lbp::parallel_compare_into;
 use crate::mapping::LbpSubarrayMap;
-use crate::mlp::MlpSubarrayMap;
-use crate::model::{self, TensorU8};
-use crate::params::{LbpLayer, NetParams};
+use crate::mlp::{MlpSubarrayMap, WeightPlanes};
+use crate::model::{self, LbpLayerPlan, TensorU8};
+use crate::params::{LbpLayer, MlpLayer, NetParams};
 use crate::sensor::Frame;
 use crate::sram::{Region, SubArray};
 
 use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
             FrameOutput, InferenceBackend, Telemetry};
 
-/// The in-SRAM simulation backend.  Owns its scratch compute sub-array,
-/// so one backend instance serves one worker/shard thread.
+/// Persistent scratch arena: every transient the batch path needs, owned
+/// by the backend and reused across `infer_batch` calls.  Buffers grow
+/// to the steady-state size once and then stay warm — a shard serving a
+/// fixed network shape stops allocating after its first batch.
+#[derive(Default)]
+struct ArchScratch {
+    /// Shared (neighbor, pivot) lane list of the whole batch.
+    pairs: Vec<(u8, u8)>,
+    /// Cumulative per-frame end offsets into `pairs`.
+    frame_ends: Vec<usize>,
+    /// Comparator bits of every chunk, batch-wide.
+    bits: Vec<bool>,
+    /// Bit-plane staging rows for the transposed lane load.
+    planes: Vec<u64>,
+    /// Current layer inputs, one tensor per frame (ping half).
+    xs: Vec<TensorU8>,
+    /// Next layer outputs (pong half, swapped each layer).
+    ys: Vec<TensorU8>,
+    /// Per-frame statistic accumulators.
+    accs: Vec<FrameAcc>,
+    /// In-memory MLP layer accumulator (per frame, reused).
+    mlp_acc: Vec<i64>,
+    /// Functional cross-check accumulator for the same layer.
+    mlp_want: Vec<i64>,
+    /// Quantized hidden activations, one vector per frame.
+    hidden: Vec<Vec<u8>>,
+}
+
+/// The in-SRAM simulation backend.  Owns its scratch compute sub-array
+/// and arena, so one backend instance serves one worker/shard thread.
 pub struct ArchitecturalBackend {
     params: NetParams,
     config: EngineConfig,
     cost_model: HwProfile,
     scratch: SubArray,
+    /// Sub-array row map for the LBP lanes (built once).
+    map: LbpSubarrayMap,
+    /// W/I-region map, present when the in-memory MLP is simulated.
+    mmap: Option<MlpSubarrayMap>,
+    /// Prepacked weight bit-planes for (mlp1, mlp2); `Some` iff `mmap`.
+    weight_planes: Option<(WeightPlanes, WeightPlanes)>,
+    /// Per-layer gather tables for the functional LBP fallback.
+    plans: Vec<LbpLayerPlan>,
+    arena: ArchScratch,
 }
 
 impl ArchitecturalBackend {
@@ -63,7 +114,31 @@ impl ArchitecturalBackend {
         let cost_model = config.system.hw_profile();
         let g = &config.system.cache;
         let scratch = SubArray::new(g.rows, g.cols);
-        Ok(Self { params, config, cost_model, scratch })
+        let map = LbpSubarrayMap::new(g.region, 8)?;
+        let cfg = &params.config;
+        // everything static packs once at build: the MLP map consumes
+        // the LBP map, and the weight columns transpose into
+        // chunk-aligned, offset-stored bit-plane buffers
+        let (mmap, weight_planes) = if config.arch.mlp {
+            let mmap = MlpSubarrayMap::new(map, cfg.act_bits, cfg.w_bits)?;
+            let p1 = WeightPlanes::pack(&params.mlp1, cfg.w_bits, g.cols)?;
+            let p2 = WeightPlanes::pack(&params.mlp2, cfg.w_bits, g.cols)?;
+            (Some(mmap), Some((p1, p2)))
+        } else {
+            (None, None)
+        };
+        let plans = model::plan_layers(&params);
+        Ok(Self {
+            params,
+            config,
+            cost_model,
+            scratch,
+            map,
+            mmap,
+            weight_planes,
+            plans,
+            arena: ArchScratch::default(),
+        })
     }
 
     /// Compute sub-arrays available to this backend instance — the whole
@@ -106,9 +181,15 @@ impl InferenceBackend for ArchitecturalBackend {
             params: &self.params,
             config: &self.config,
             cost_model: &self.cost_model,
+            map: &self.map,
+            mmap: self.mmap.as_ref(),
+            weight_planes: self.weight_planes.as_ref(),
+            plans: &self.plans,
         };
-        Ok(BackendOutput { frames: core.process_batch(frames,
-                                                      &mut self.scratch)? })
+        Ok(BackendOutput {
+            frames: core.process_batch(frames, &mut self.scratch,
+                                       &mut self.arena)?,
+        })
     }
 }
 
@@ -123,11 +204,16 @@ struct FrameAcc {
     arch_time_ns: f64,
 }
 
-/// Shared-state view used while the scratch sub-array is mutably borrowed.
+/// Shared-state view used while the scratch sub-array and arena are
+/// mutably borrowed.
 struct ArchCore<'a> {
     params: &'a NetParams,
     config: &'a EngineConfig,
     cost_model: &'a HwProfile,
+    map: &'a LbpSubarrayMap,
+    mmap: Option<&'a MlpSubarrayMap>,
+    weight_planes: Option<&'a (WeightPlanes, WeightPlanes)>,
+    plans: &'a [LbpLayerPlan],
 }
 
 impl ArchCore<'_> {
@@ -135,10 +221,12 @@ impl ArchCore<'_> {
         self.config.subarray_budget()
     }
 
-    /// Lane order for one LBP layer: (y, x, kernel, sample≥apx).
-    fn gather_pairs(&self, x: &TensorU8, layer: &LbpLayer) -> Vec<(u8, u8)> {
+    /// Lane order for one LBP layer: (y, x, kernel, sample≥apx),
+    /// appended to the arena's shared lane list.
+    fn gather_pairs_into(&self, x: &TensorU8, layer: &LbpLayer,
+                         pairs: &mut Vec<(u8, u8)>) {
         let apx = self.params.config.apx_code;
-        let mut pairs = Vec::with_capacity(
+        pairs.reserve(
             x.h * x.w * layer.offsets.len() * (self.params.config.e - apx),
         );
         for y in 0..x.h {
@@ -156,7 +244,6 @@ impl ArchCore<'_> {
                 }
             }
         }
-        pairs
     }
 
     /// One LBP layer on the architectural path, over *every* frame of the
@@ -164,7 +251,8 @@ impl ArchCore<'_> {
     /// shared lane list before chunking, so a single ≤`cols`-lane
     /// sub-array pass can pack lanes from more than one frame, and the
     /// fleet-pass count (the modeled-time unit) is amortized batch-wide.
-    /// Returns every frame's joint output tensor; ISA activity is
+    /// Writes every frame's joint output tensor into `ys` (reused arena
+    /// tensors — the caller swaps the ping/pong halves); ISA activity is
     /// attributed to the frame owning each chunk's first lane, modeled
     /// time is split evenly (frames are shape-identical, so their lane
     /// counts are equal).
@@ -176,28 +264,34 @@ impl ArchCore<'_> {
     /// needing exact per-frame accounting should submit frames
     /// individually (`infer_frame` is bit- and stat-identical to the
     /// historical per-frame path).
-    fn lbp_layer_arch_batch(&self, xs: &[TensorU8], layer: &LbpLayer,
-                            scratch: &mut SubArray, map: &LbpSubarrayMap,
-                            accs: &mut [FrameAcc]) -> Result<Vec<TensorU8>> {
+    #[allow(clippy::too_many_arguments)]
+    fn lbp_layer_arch_batch(&self, layer: &LbpLayer, scratch: &mut SubArray,
+                            xs: &[TensorU8], ys: &mut Vec<TensorU8>,
+                            pairs: &mut Vec<(u8, u8)>,
+                            frame_ends: &mut Vec<usize>,
+                            bits: &mut Vec<bool>, planes: &mut Vec<u64>,
+                            accs: &mut [FrameAcc]) -> Result<()> {
         let cfg = &self.params.config;
         let apx = cfg.apx_code;
         let samples = cfg.e - apx;
         let cols = scratch.cols();
+        let map = self.map;
         if xs.is_empty() {
-            return Ok(Vec::new());
+            ys.clear();
+            return Ok(());
         }
 
-        // one shared lane list for the whole batch
-        let mut pairs: Vec<(u8, u8)> = Vec::new();
-        let mut frame_ends = Vec::with_capacity(xs.len());
+        // one shared lane list for the whole batch (arena-resident)
+        pairs.clear();
+        frame_ends.clear();
         for x in xs {
-            pairs.extend(self.gather_pairs(x, layer));
+            self.gather_pairs_into(x, layer, pairs);
             frame_ends.push(pairs.len());
         }
 
         // run Algorithm 1 per ≤cols-lane chunk on the scratch sub-array;
         // chunks are cut from the shared list, not per frame
-        let mut bits = Vec::with_capacity(pairs.len());
+        bits.clear();
         let mut chunks = 0u64;
         let mut lane_base = 0usize;
         let mut owner = 0usize;
@@ -206,15 +300,14 @@ impl ArchCore<'_> {
                 owner += 1;
             }
             let acc = &mut accs[owner];
-            map.load_lanes(scratch, 0, chunk)?;
+            map.load_lanes_with(scratch, 0, chunk, planes)?;
             acc.exec.row_writes += 2 * map.bits as u64; // transposed load
             acc.exec.cycles += 2 * map.bits as u64;
             let mut ex = Executor::new(scratch);
-            let out = parallel_compare(&mut ex, map, 0, chunk.len(),
-                                       cfg.apx_pixel,
-                                       self.config.arch.early_exit)?;
+            parallel_compare_into(&mut ex, map, 0, chunk.len(),
+                                  cfg.apx_pixel, self.config.arch.early_exit,
+                                  bits)?;
             acc.exec.merge(&ex.stats);
-            bits.extend(out.bits);
             chunks += 1;
             lane_base += chunk.len();
         }
@@ -234,10 +327,12 @@ impl ArchCore<'_> {
         // split the bit stream back per frame; assemble codes in the
         // same lane order and cross-check against the functional math
         let k_n = layer.offsets.len();
-        let mut outs = Vec::with_capacity(xs.len());
+        ys.resize_with(xs.len(), TensorU8::default);
         let mut lane = 0usize;
-        for (x, acc) in xs.iter().zip(accs.iter_mut()) {
-            let mut out = TensorU8::zeros(x.h, x.w, x.c + k_n);
+        for ((x, out), acc) in xs.iter().zip(ys.iter_mut())
+            .zip(accs.iter_mut())
+        {
+            out.reset(x.h, x.w, x.c + k_n);
             for y in 0..x.h {
                 for xx in 0..x.w {
                     for ch in 0..x.c {
@@ -260,38 +355,33 @@ impl ArchCore<'_> {
                     }
                 }
             }
-            outs.push(out);
         }
-        Ok(outs)
+        Ok(())
     }
 
-    /// In-memory MLP layer (architectural) for one frame; returns raw
-    /// integer accums, the mismatch count vs the functional matmul, and
-    /// the AND-batch count (the fleet-pass unit the batch-level time
-    /// model amortizes across frames).
-    fn mlp_layer_arch(&self, feats: &[u8], mlp: &crate::params::MlpLayer,
-                      scratch: &mut SubArray, mmap: &MlpSubarrayMap,
-                      exec: &mut ExecStats, dpu: &mut Dpu)
-                      -> Result<(Vec<i64>, u64, u64)> {
+    /// In-memory MLP layer (architectural) for one frame; fills `accs`
+    /// with the raw integer accums (arena buffer) and returns the
+    /// mismatch count vs the functional matmul plus the AND-batch count
+    /// (the fleet-pass unit the batch-level time model amortizes across
+    /// frames).  The W region loads from the prepacked bit-planes — no
+    /// per-neuron column collection or transposition (§Perf).
+    #[allow(clippy::too_many_arguments)]
+    fn mlp_layer_arch(&self, feats: &[u8], mlp: &MlpLayer,
+                      planes: &WeightPlanes, scratch: &mut SubArray,
+                      mmap: &MlpSubarrayMap, exec: &mut ExecStats,
+                      dpu: &mut Dpu, accs: &mut Vec<i64>,
+                      want: &mut Vec<i64>) -> Result<(u64, u64)> {
         let cols = scratch.cols();
-        let half = 1u8 << (self.params.config.w_bits - 1);
-        let chunks: Vec<&[u8]> = feats.chunks(cols).collect();
-        let mut accs = vec![0i64; mlp.o];
+        accs.clear();
+        accs.resize(mlp.o, 0);
         let mut and_batches = 0u64;
 
-        for (ci, chunk) in chunks.iter().enumerate() {
+        for (ci, chunk) in feats.chunks(cols).enumerate() {
             let mut ex = Executor::new(scratch);
             mmap.load_vector(&mut ex, Region::Input, 0, chunk)?;
             let rowsum: i64 = chunk.iter().map(|&v| v as i64).sum();
             for o in 0..mlp.o {
-                // weight column chunk, offset-stored unsigned
-                let w_col: Vec<u8> = (0..chunk.len())
-                    .map(|di| {
-                        (mlp.weight(ci * cols + di, o) as i16 + half as i16)
-                            as u8
-                    })
-                    .collect();
-                mmap.load_vector(&mut ex, Region::Weight, 0, &w_col)?;
+                mmap.load_weight_planes(&mut ex, 0, planes, ci, o)?;
                 accs[o] += mmap.dot_signed(&mut ex, dpu, 0, 0, chunk.len(),
                                            rowsum)?;
                 and_batches += (mmap.act_bits * mmap.w_bits) as u64;
@@ -300,10 +390,11 @@ impl ArchCore<'_> {
         }
 
         // cross-check against the functional integer matmul
-        let want = model::int_matmul(feats, mlp);
+        model::int_matmul_into(feats, mlp, want);
         let mismatches =
-            accs.iter().zip(&want).filter(|(a, w)| a != w).count() as u64;
-        Ok((accs, mismatches, and_batches))
+            accs.iter().zip(want.iter()).filter(|(a, w)| a != w).count()
+                as u64;
+        Ok((mismatches, and_batches))
     }
 
     /// Modeled time of one MLP layer's AND/bitcount batches spread over
@@ -319,64 +410,46 @@ impl ArchCore<'_> {
     }
 
     /// Process a whole batch of digitized frames, sharing sub-array
-    /// passes across frames in the LBP *and* in-memory-MLP stages.
-    fn process_batch(&self, frames: &[Frame], scratch: &mut SubArray)
-                     -> Result<Vec<FrameOutput>> {
+    /// passes across frames in the LBP *and* in-memory-MLP stages.  All
+    /// transients live in `arena`; only the per-frame outputs allocate.
+    fn process_batch(&self, frames: &[Frame], scratch: &mut SubArray,
+                     arena: &mut ArchScratch) -> Result<Vec<FrameOutput>> {
         if frames.is_empty() {
             return Ok(Vec::new());
         }
         let cfg = &self.params.config;
-        let mut xs = Vec::with_capacity(frames.len());
-        for frame in frames {
-            xs.push(super::digitize(frame, cfg)?);
+        let ArchScratch { pairs, frame_ends, bits, planes, xs, ys, accs,
+                          mlp_acc, mlp_want, hidden } = arena;
+        xs.resize_with(frames.len(), TensorU8::default);
+        for (frame, x) in frames.iter().zip(xs.iter_mut()) {
+            super::digitize_into(frame, cfg, x)?;
         }
-        let map = LbpSubarrayMap::new(self.config.system.cache.region, 8)?;
-        let mut accs: Vec<FrameAcc> =
-            (0..frames.len()).map(|_| FrameAcc::default()).collect();
+        accs.clear();
+        accs.resize_with(frames.len(), FrameAcc::default);
 
         // --- LBP layers (batched across frames) ------------------------------
-        for layer in &self.params.lbp_layers {
+        for (layer, plan) in self.params.lbp_layers.iter().zip(self.plans) {
             if self.config.arch.lbp {
-                xs = self.lbp_layer_arch_batch(&xs, layer, scratch, &map,
-                                               &mut accs)?;
+                self.lbp_layer_arch_batch(layer, scratch, xs, ys, pairs,
+                                          frame_ends, bits, planes, accs)?;
             } else {
-                for (x, acc) in xs.iter_mut().zip(accs.iter_mut()) {
-                    *x = model::lbp_layer_forward(x, layer, cfg.e,
-                                                  cfg.apx_code, &mut acc.dpu);
+                ys.resize_with(xs.len(), TensorU8::default);
+                for ((x, y), acc) in
+                    xs.iter().zip(ys.iter_mut()).zip(accs.iter_mut())
+                {
+                    model::lbp_layer_forward_into(x, layer, plan, cfg.e,
+                                                  cfg.apx_code, &mut acc.dpu,
+                                                  y);
                 }
             }
+            std::mem::swap(xs, ys);
         }
-
-        // the MLP map consumes the LBP map; build it once per batch
-        let mmap = if self.config.arch.mlp {
-            Some(MlpSubarrayMap::new(map, cfg.act_bits, cfg.w_bits)?)
-        } else {
-            None
-        };
 
         // --- pooling + quantization (DPU, per frame) ------------------------
         let mut feats_batch: Vec<Vec<u8>> = Vec::with_capacity(frames.len());
         for (x, acc) in xs.iter().zip(accs.iter_mut()) {
-            let s = cfg.pool;
-            let vmax = (255 * s * s) as u32;
-            let (ph, pw) = (x.h / s, x.w / s);
-            let mut feats = Vec::with_capacity(ph * pw * x.c);
-            for py in 0..ph {
-                for px in 0..pw {
-                    for ch in 0..x.c {
-                        let mut sum = 0u32;
-                        for dy in 0..s {
-                            for dx in 0..s {
-                                sum += x.get(py * s + dy, px * s + dx, ch)
-                                    as u32;
-                            }
-                        }
-                        feats.push(acc.dpu.quantize_pooled(
-                            sum, vmax, cfg.act_bits as u32)?);
-                    }
-                }
-            }
-            feats_batch.push(feats);
+            feats_batch.push(model::pool_quantize(x, cfg.pool, cfg.act_bits,
+                                                  &mut acc.dpu)?);
         }
 
         // --- MLP (AND/bitcount batches packed across frames) ----------------
@@ -386,33 +459,39 @@ impl ArchCore<'_> {
         // the LBP lanes get, with bit-identical logits (packing only
         // changes which sub-array a batch is modeled on, never the math).
         let n = frames.len() as f64;
-        let logits_batch: Vec<Vec<f32>> = if let Some(mmap) = mmap.as_ref() {
+        let logits_batch: Vec<Vec<f32>> = if let (Some(mmap), Some((p1, p2))) =
+            (self.mmap, self.weight_planes)
+        {
             let m1 = &self.params.mlp1;
             let mut and1 = 0u64;
-            let mut hidden_batch = Vec::with_capacity(frames.len());
-            for (feats, acc) in feats_batch.iter().zip(accs.iter_mut()) {
-                let (acc1, mm1, ab) =
-                    self.mlp_layer_arch(feats, m1, scratch, mmap,
-                                        &mut acc.exec, &mut acc.dpu)?;
+            hidden.resize_with(frames.len(), Vec::new);
+            for ((feats, h), acc) in feats_batch.iter().zip(hidden.iter_mut())
+                .zip(accs.iter_mut())
+            {
+                let (mm1, ab) =
+                    self.mlp_layer_arch(feats, m1, p1, scratch, mmap,
+                                        &mut acc.exec, &mut acc.dpu,
+                                        mlp_acc, mlp_want)?;
                 acc.mismatches += mm1;
                 and1 += ab;
-                let hidden: Vec<u8> = acc1.iter().enumerate()
-                    .map(|(o, &h)| acc.dpu.activation(
-                        h, m1.scale[o], m1.bias[o], cfg.act_bits as u32))
-                    .collect();
-                hidden_batch.push(hidden);
+                h.clear();
+                h.extend(mlp_acc.iter().enumerate().map(|(o, &v)| {
+                    acc.dpu.activation(v, m1.scale[o], m1.bias[o],
+                                       cfg.act_bits as u32)
+                }));
             }
             let m2 = &self.params.mlp2;
             let mut and2 = 0u64;
             let mut logits_batch = Vec::with_capacity(frames.len());
-            for (hidden, acc) in hidden_batch.iter().zip(accs.iter_mut()) {
-                let (acc2, mm2, ab) =
-                    self.mlp_layer_arch(hidden, m2, scratch, mmap,
-                                        &mut acc.exec, &mut acc.dpu)?;
+            for (h, acc) in hidden.iter().zip(accs.iter_mut()) {
+                let (mm2, ab) =
+                    self.mlp_layer_arch(h, m2, p2, scratch, mmap,
+                                        &mut acc.exec, &mut acc.dpu,
+                                        mlp_acc, mlp_want)?;
                 acc.mismatches += mm2;
                 and2 += ab;
-                logits_batch.push(acc2.iter().enumerate()
-                    .map(|(o, &h)| acc.dpu.affine(h, m2.scale[o],
+                logits_batch.push(mlp_acc.iter().enumerate()
+                    .map(|(o, &v)| acc.dpu.affine(v, m2.scale[o],
                                                   m2.bias[o]))
                     .collect());
             }
@@ -582,5 +661,34 @@ mod tests {
             batched_total < 0.5 * sum_single,
             "no MLP amortization: batched {batched_total} vs {sum_single}"
         );
+    }
+
+    #[test]
+    fn warm_arena_reuse_is_bit_identical_to_cold() {
+        // a backend that has already served batches (warm arena, sized
+        // buffers, stale sub-array contents) must answer exactly like a
+        // freshly built one — logits, features, stats, modeled cost
+        let (_, params) = synth_params(5);
+        let arch = ArchSim { lbp: true, mlp: true, early_exit: false };
+        let mut warm = backend(arch, None);
+        // warm it up on different batch shapes
+        for n in [3usize, 1, 4] {
+            let f = synth_frames(&params, n, 91).unwrap();
+            warm.infer_batch(&f).unwrap();
+        }
+        let frames = synth_frames(&params, 2, 97).unwrap();
+        let got = warm.infer_batch(&frames).unwrap();
+        let mut cold = backend(arch, None);
+        let want = cold.infer_batch(&frames).unwrap();
+        assert_eq!(got.frames.len(), want.frames.len());
+        for (g, w) in got.frames.iter().zip(&want.frames) {
+            assert_eq!(g.logits, w.logits, "frame {}", g.seq);
+            assert_eq!(g.features, w.features, "frame {}", g.seq);
+            assert_eq!(g.telemetry.exec, w.telemetry.exec);
+            assert_eq!(g.telemetry.dpu, w.telemetry.dpu);
+            assert_eq!(g.telemetry.arch_mismatches, 0);
+            assert!((g.telemetry.cost.time_ns - w.telemetry.cost.time_ns)
+                        .abs() < 1e-9);
+        }
     }
 }

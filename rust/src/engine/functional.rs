@@ -4,12 +4,27 @@
 use crate::dpu::Dpu;
 use crate::error::Result;
 use crate::hw::{CostModel, HwProfile};
-use crate::model;
+use crate::model::{self, LbpLayerPlan, TensorU8};
 use crate::params::NetParams;
 use crate::sensor::Frame;
 
 use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
             FrameOutput, InferenceBackend, Telemetry};
+
+/// Reusable per-backend working set: the digitized/LBP ping-pong
+/// tensors and the per-frame DPUs.  Warm buffers never reallocate
+/// (§Perf, EXPERIMENTS.md) — a serve shard keeps one backend per routed
+/// class, so the scratch persists across the whole traffic stream.
+#[derive(Default)]
+struct FuncScratch {
+    /// Current layer input (holds the digitized frame, then each
+    /// layer's output after the swap).
+    cur: TensorU8,
+    /// Next layer output (pong half).
+    nxt: TensorU8,
+    /// One DPU per frame of the current batch.
+    dpus: Vec<Dpu>,
+}
 
 /// Wraps the functional model: LBP layers, pooling/quantization, and the
 /// integer MLP, exactly as `python/compile/model.py` specifies them.
@@ -21,16 +36,27 @@ use super::{BackendKind, BackendOutput, Capabilities, EngineConfig,
 /// then both MLP layers run weight-stationary over the whole batch
 /// ([`model::mlp_forward_batch`]) — the weight matrices stream through
 /// the cache once per batch instead of once per frame, with bit-identical
-/// logits and per-frame DPU counters.
+/// logits and per-frame DPU counters.  The per-layer gather tables
+/// ([`LbpLayerPlan`]) are precomputed at build and the LBP stage runs
+/// through reusable ping-pong tensors, so the steady-state hot path
+/// allocates only the outputs (features/logits) that escape the call.
 pub struct FunctionalBackend {
     params: NetParams,
     cost_model: HwProfile,
+    plans: Vec<LbpLayerPlan>,
+    scratch: FuncScratch,
 }
 
 impl FunctionalBackend {
     pub fn new(params: NetParams, config: &EngineConfig) -> Result<Self> {
         config.validate()?;
-        Ok(Self { params, cost_model: config.system.hw_profile() })
+        let plans = model::plan_layers(&params);
+        Ok(Self {
+            params,
+            cost_model: config.system.hw_profile(),
+            plans,
+            scratch: FuncScratch::default(),
+        })
     }
 }
 
@@ -52,20 +78,28 @@ impl InferenceBackend for FunctionalBackend {
     fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
         let cfg = self.params.config;
 
-        // stage 1 (per frame): digitize + LBP layers + pooled features
-        let mut dpus: Vec<Dpu> = Vec::with_capacity(frames.len());
+        // stage 1 (per frame): digitize + LBP layers + pooled features,
+        // through the reusable ping-pong tensors and prebuilt plans
+        let FuncScratch { cur, nxt, dpus } = &mut self.scratch;
+        dpus.clear();
+        dpus.resize_with(frames.len(), Dpu::default);
         let mut feats_batch: Vec<Vec<u8>> = Vec::with_capacity(frames.len());
-        for frame in frames {
-            let image = super::digitize(frame, &cfg)?;
-            let mut dpu = Dpu::default();
-            feats_batch.push(model::forward_lbp(&self.params, &image,
-                                                &mut dpu)?);
-            dpus.push(dpu);
+        for (frame, dpu) in frames.iter().zip(dpus.iter_mut()) {
+            super::digitize_into(frame, &cfg, cur)?;
+            for (layer, plan) in
+                self.params.lbp_layers.iter().zip(&self.plans)
+            {
+                model::lbp_layer_forward_into(cur, layer, plan, cfg.e,
+                                              cfg.apx_code, dpu, nxt);
+                std::mem::swap(cur, nxt);
+            }
+            feats_batch.push(model::pool_quantize(cur, cfg.pool,
+                                                  cfg.act_bits, dpu)?);
         }
 
         // stage 2 (whole batch): weight-stationary MLP over all frames
         let logits_batch =
-            model::mlp_forward_batch(&self.params, &feats_batch, &mut dpus)?;
+            model::mlp_forward_batch(&self.params, &feats_batch, dpus)?;
 
         // stage 3 (per frame): assemble outputs and the energy account
         let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
@@ -73,7 +107,7 @@ impl InferenceBackend for FunctionalBackend {
             .iter()
             .zip(feats_batch)
             .zip(logits_batch)
-            .zip(dpus)
+            .zip(dpus.iter())
             .map(|(((frame, feats), logits), dpu)| {
                 let mut cost = self.cost_model.dpu_cost(&dpu.stats);
                 cost.add(&self.cost_model.sensor_cost(

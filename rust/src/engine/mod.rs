@@ -488,13 +488,20 @@ pub(crate) fn validate_frame(frame: &Frame, cfg: &NetConfig) -> Result<()> {
     Ok(())
 }
 
-/// Validate a frame and lift it into an HWC tensor.  The ADC already
-/// applied the pixel-LSB skip; the mask is re-applied defensively.
-pub(crate) fn digitize(frame: &Frame, cfg: &NetConfig) -> Result<TensorU8> {
+/// Validate a frame and lift it into an HWC tensor, writing into a
+/// reusable tensor (the backends' scratch arenas) re-shaped in place —
+/// a warm buffer never reallocates.  The ADC already applied the
+/// pixel-LSB skip; the mask is re-applied defensively.
+pub(crate) fn digitize_into(frame: &Frame, cfg: &NetConfig,
+                            out: &mut TensorU8) -> Result<()> {
     validate_frame(frame, cfg)?;
     let mask = 0xFFu8 ^ ((1u8 << cfg.apx_pixel).wrapping_sub(1));
-    let data = frame.pixels.iter().map(|&p| p & mask).collect();
-    Ok(TensorU8 { h: cfg.height, w: cfg.width, c: cfg.in_channels, data })
+    out.h = cfg.height;
+    out.w = cfg.width;
+    out.c = cfg.in_channels;
+    out.data.clear();
+    out.data.extend(frame.pixels.iter().map(|&p| p & mask));
+    Ok(())
 }
 
 fn make_backend(kind: BackendKind, params: &NetParams, config: &EngineConfig,

@@ -505,7 +505,7 @@ impl HwProfile {
     /// table adjusts by the per-opcode delta.
     fn exec_cycles(&self, stats: &ExecStats) -> f64 {
         let mut cycles = stats.cycles as i64;
-        for (&op, &n) in &stats.by_opcode {
+        for (op, n) in stats.by_opcode.iter() {
             let delta =
                 self.cycles.of(op) as i64 - CycleTable::NS_LBP.of(op) as i64;
             cycles += n as i64 * delta;

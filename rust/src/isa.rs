@@ -23,7 +23,6 @@
 //! sense-amplifier decision path is asserted in tests against
 //! [`crate::circuit::sense`].
 
-use std::collections::BTreeMap;
 use std::fmt;
 
 use crate::error::{Error, Result};
@@ -276,6 +275,60 @@ fn parse_line(line: &str) -> std::result::Result<Instruction, String> {
     }
 }
 
+/// Dense per-opcode instruction counters.
+///
+/// Replaces the historical `BTreeMap<Opcode, u64>`: the counter is
+/// bumped on *every executed instruction*, and a map allocated tree
+/// nodes inside the innermost compute loops (and again on every
+/// `ExecStats` merge).  A fixed 8-slot array is allocation-free and
+/// O(1) — part of the allocation-free hot path (EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpcodeCounts([u64; Opcode::ALL.len()]);
+
+impl OpcodeCounts {
+    /// Add `n` to `op`'s counter.
+    #[inline]
+    pub fn add(&mut self, op: Opcode, n: u64) {
+        self.0[op.index()] += n;
+    }
+
+    /// Set `op`'s counter (map-style API kept for fixtures/tests).
+    pub fn insert(&mut self, op: Opcode, n: u64) {
+        self.0[op.index()] = n;
+    }
+
+    /// `op`'s counter.
+    #[inline]
+    pub fn get(&self, op: Opcode) -> u64 {
+        self.0[op.index()]
+    }
+
+    /// Iterate the non-zero counters in [`Opcode::ALL`] order.
+    pub fn iter(&self) -> impl Iterator<Item = (Opcode, u64)> + '_ {
+        Opcode::ALL
+            .iter()
+            .filter_map(move |&op| {
+                let n = self.0[op.index()];
+                if n != 0 { Some((op, n)) } else { None }
+            })
+    }
+
+    /// Sum the other counters into these.
+    pub fn merge(&mut self, other: &OpcodeCounts) {
+        for (a, b) in self.0.iter_mut().zip(&other.0) {
+            *a += b;
+        }
+    }
+}
+
+impl std::ops::Index<Opcode> for OpcodeCounts {
+    type Output = u64;
+
+    fn index(&self, op: Opcode) -> &u64 {
+        &self.0[op.index()]
+    }
+}
+
 /// Execution statistics — the raw material of the energy/latency model.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ExecStats {
@@ -288,7 +341,7 @@ pub struct ExecStats {
     /// Multi-row compute activations (2- or 3-row).
     pub compute_ops: u64,
     /// Per-opcode instruction counts.
-    pub by_opcode: BTreeMap<Opcode, u64>,
+    pub by_opcode: OpcodeCounts,
 }
 
 impl ExecStats {
@@ -298,15 +351,13 @@ impl ExecStats {
         self.row_reads += other.row_reads;
         self.row_writes += other.row_writes;
         self.compute_ops += other.compute_ops;
-        for (op, n) in &other.by_opcode {
-            *self.by_opcode.entry(*op).or_default() += n;
-        }
+        self.by_opcode.merge(&other.by_opcode);
     }
 
     fn record(&mut self, op: Opcode) {
         self.instructions += 1;
         self.cycles += op.cycles();
-        *self.by_opcode.entry(op).or_default() += 1;
+        self.by_opcode.add(op, 1);
         match op {
             Opcode::Copy => {
                 self.row_reads += 1;
@@ -384,6 +435,18 @@ impl<'a> Executor<'a> {
         for &inst in program {
             self.exec(inst)?;
         }
+        Ok(())
+    }
+
+    /// Write one whole row from packed words, accounting it as a single
+    /// row-granular write cycle — the bulk load primitive behind the
+    /// transposed bit-plane loaders (`MlpSubarrayMap::load_vector`, the
+    /// prepacked `load_weight_planes`).  Stat-identical to the loaders'
+    /// historical per-row bookkeeping.
+    pub fn write_row(&mut self, row: Row, words: &[u64]) -> Result<()> {
+        self.array.write_row(row, words)?;
+        self.stats.row_writes += 1;
+        self.stats.cycles += 1;
         Ok(())
     }
 }
@@ -541,7 +604,9 @@ mod tests {
         assert_eq!(ex.stats.row_writes, 2 + 1 + 1); // 2 ini + cmp latch + copy
         assert_eq!(ex.stats.row_reads, 1); // copy
         assert_eq!(ex.stats.compute_ops, 1);
-        assert_eq!(ex.stats.by_opcode[&Opcode::Ini], 2);
+        assert_eq!(ex.stats.by_opcode[Opcode::Ini], 2);
+        assert_eq!(ex.stats.by_opcode.get(Opcode::Cmp), 1);
+        assert_eq!(ex.stats.by_opcode.iter().count(), 3); // ini, cmp, copy
         let mut merged = ExecStats::default();
         merged.merge(&ex.stats);
         merged.merge(&ex.stats);

@@ -48,6 +48,22 @@ pub fn compare_ref(pairs: &[(u8, u8)]) -> Vec<bool> {
 pub fn parallel_compare(ex: &mut Executor<'_>, map: &LbpSubarrayMap,
                         slot: usize, lanes: usize, skip_lsb_planes: usize,
                         early_exit: bool) -> Result<CompareOutcome> {
+    let mut bits = Vec::with_capacity(lanes);
+    let planes_processed = parallel_compare_into(ex, map, slot, lanes,
+                                                 skip_lsb_planes, early_exit,
+                                                 &mut bits)?;
+    Ok(CompareOutcome { bits, planes_processed })
+}
+
+/// Allocation-free [`parallel_compare`]: the comparator bits are
+/// *appended* to a caller-owned buffer (the architectural batch path
+/// accumulates every chunk of a whole batch into one arena vector) and
+/// the processed-plane count is returned.  Identical instruction stream
+/// and statistics.
+pub fn parallel_compare_into(ex: &mut Executor<'_>, map: &LbpSubarrayMap,
+                             slot: usize, lanes: usize,
+                             skip_lsb_planes: usize, early_exit: bool,
+                             out: &mut Vec<bool>) -> Result<usize> {
     let result = map.resv(ResvRow::Result);
     let lbp = map.resv(ResvRow::Lbp);
     let zero = map.resv(ResvRow::Zero);
@@ -104,9 +120,9 @@ pub fn parallel_compare(ex: &mut Executor<'_>, map: &LbpSubarrayMap,
     ex.exec(Instruction::Carry { src1: lbp, src2: scratch, src3: one,
                                  dest: lbp })?;
 
-    let bits = map.read_resv_bits(ex.array, ResvRow::Lbp, lanes)?;
+    map.read_resv_bits_into(ex.array, ResvRow::Lbp, lanes, out)?;
     ex.stats.record_ctrl_read();
-    Ok(CompareOutcome { bits, planes_processed: planes })
+    Ok(planes)
 }
 
 #[cfg(test)]

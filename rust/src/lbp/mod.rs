@@ -5,5 +5,6 @@
 pub mod algorithm;
 pub mod opcount;
 
-pub use algorithm::{compare_ref, parallel_compare, CompareOutcome};
+pub use algorithm::{compare_ref, parallel_compare, parallel_compare_into,
+                    CompareOutcome};
 pub use opcount::{ApLbpOps, CnnCost, LayerShape, LbpCost, OpCounts};

@@ -7,7 +7,8 @@
 //! Module map (bottom-up):
 //!
 //! * [`rng`], [`testing`], [`config`], [`cli`], [`bench_harness`] — offline
-//!   substrate (PRNG, property tests, config/CLI parsing, bench statistics);
+//!   substrate (PRNG, property tests, config/CLI parsing, bench statistics
+//!   with `BENCH_*.json` trajectory output — see EXPERIMENTS.md);
 //!   crates.io is unreachable in this environment, so these replace
 //!   rand/proptest/serde/clap/criterion.
 //! * [`circuit`] — behavioral analog model of the 8T sub-array: RBL
@@ -24,7 +25,9 @@
 //! * [`mapping`] — correlated data partitioning of pixels/pivots into
 //!   sub-array regions (paper §5.1, Fig. 6).
 //! * [`mlp`] — bit-serial in-memory MLP: AND / bitcount / shift (paper §5.2,
-//!   Fig. 7).
+//!   Fig. 7), plus `WeightPlanes` — the static weight bit-planes
+//!   transposed once at engine build and bulk-written into the W region
+//!   (the allocation-free hot path, EXPERIMENTS.md §Perf).
 //! * [`dpu`] — the digital processing unit: quantizer, activation,
 //!   bit-counter, shifter, adder tree.
 //! * [`sensor`] — rolling-shutter CMOS sensor front-end with CDS and the
@@ -50,7 +53,11 @@
 //!   with one implementation per execution path (functional model,
 //!   in-SRAM architectural simulation, PJRT golden graph), backend
 //!   selection via `BackendKind`, pluggable cross-checking with mismatch
-//!   accounting, and the merged cycle/energy/DPU `Telemetry`.  Everything
+//!   accounting, and the merged cycle/energy/DPU `Telemetry`.  Both
+//!   in-tree backends precompute everything static at build (prepacked
+//!   weight planes, sub-array maps, LBP gather plans) and run their
+//!   steady-state batch loops out of persistent scratch arenas —
+//!   bit-identical to a cold engine, parity-tested.  Everything
 //!   above this layer constructs backends exclusively through
 //!   `engine::Engine`.
 //! * [`coordinator`] — the near-sensor run loop: digitizes frames from a

@@ -112,8 +112,22 @@ impl LbpSubarrayMap {
     ///
     /// Writes `2 × bits` rows (one per bit-plane of P and C); lanes beyond
     /// `pairs.len()` are zero-filled.  Returns the number of loaded lanes.
+    /// Convenience wrapper around [`Self::load_lanes_with`] that owns a
+    /// transient plane buffer; steady-state callers thread a persistent
+    /// buffer through `load_lanes_with` instead (§Perf).
     pub fn load_lanes(&self, sa: &mut SubArray, slot: usize,
                       pairs: &[(u8, u8)]) -> Result<usize> {
+        let mut planes = Vec::new();
+        self.load_lanes_with(sa, slot, pairs, &mut planes)
+    }
+
+    /// Allocation-free [`Self::load_lanes`]: the pixel/pivot bit-plane
+    /// staging buffer is caller-owned (cleared, re-zeroed, and reused —
+    /// a warm buffer never reallocates), so the per-chunk lane load of
+    /// the architectural batch path performs no heap allocation.
+    pub fn load_lanes_with(&self, sa: &mut SubArray, slot: usize,
+                           pairs: &[(u8, u8)], planes: &mut Vec<u64>)
+                           -> Result<usize> {
         if pairs.len() > sa.cols() {
             return Err(Error::Mapping(format!(
                 "{} lanes exceed {} columns",
@@ -121,10 +135,11 @@ impl LbpSubarrayMap {
                 sa.cols()
             )));
         }
-        // single pass over lanes, one flat buffer for all 2×bits bit-plane
-        // rows (hot path: one allocation instead of 2×bits, §Perf)
+        // single pass over lanes, one flat zeroed buffer for all 2×bits
+        // bit-plane rows
         let words = sa.cols() / 64;
-        let mut planes = vec![0u64; 2 * self.bits * words];
+        planes.clear();
+        planes.resize(2 * self.bits * words, 0);
         if self.bits == 8 {
             // SWAR fast path: transpose 8 lanes × 8 bits at a time
             // (Hacker's-Delight 8×8 bit-matrix transpose), ~3× fewer ops
@@ -172,8 +187,23 @@ impl LbpSubarrayMap {
     /// Read back `lanes` bits from a reserved row (e.g. the LBP_array).
     pub fn read_resv_bits(&self, sa: &SubArray, row: ResvRow,
                           lanes: usize) -> Result<Vec<bool>> {
-        let words = sa.read_row(self.resv(row))?;
-        Ok((0..lanes).map(|l| words[l / 64] >> (l % 64) & 1 == 1).collect())
+        let mut out = Vec::with_capacity(lanes);
+        self.read_resv_bits_into(sa, row, lanes, &mut out)?;
+        Ok(out)
+    }
+
+    /// Append `lanes` bits of a reserved row to a caller-owned buffer —
+    /// the allocation-free variant the batched architectural path uses
+    /// to accumulate every chunk's comparator bits into one arena vector.
+    pub fn read_resv_bits_into(&self, sa: &SubArray, row: ResvRow,
+                               lanes: usize, out: &mut Vec<bool>)
+                               -> Result<()> {
+        let words = sa.row_words(self.resv(row))?;
+        out.reserve(lanes);
+        for l in 0..lanes {
+            out.push(words[l / 64] >> (l % 64) & 1 == 1);
+        }
+        Ok(())
     }
 }
 

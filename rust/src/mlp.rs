@@ -17,7 +17,98 @@ use crate::dpu::Dpu;
 use crate::error::{Error, Result};
 use crate::isa::{Executor, IniValue, Instruction};
 use crate::mapping::{LbpSubarrayMap, ResvRow};
+use crate::params::MlpLayer;
 use crate::sram::Region;
+
+/// Prepacked, offset-stored weight bit-planes for one MLP layer.
+///
+/// The MLP weights are static across the life of an engine, yet the seed
+/// hot path re-collected and re-transposed every weight column into the
+/// W region for *every output neuron of every chunk of every frame*.
+/// This packs them exactly once at engine build (mirroring PISA's
+/// weights-resident-in-sensor design): for every `cols`-lane chunk of
+/// the input dimension and every output neuron, the `w_bits` bit-plane
+/// rows of the `+2^{N−1}` offset-stored unsigned weights are stored as
+/// ready-to-write packed row words, so loading the W region is `w_bits`
+/// bulk row writes ([`MlpSubarrayMap::load_weight_planes`]) with zero
+/// per-call packing work.  Row contents — including the zero fill past a
+/// short tail chunk — are bit-identical to what
+/// [`MlpSubarrayMap::load_vector`] would have written.
+#[derive(Clone, Debug)]
+pub struct WeightPlanes {
+    /// Bit width the planes were split at.
+    pub w_bits: usize,
+    /// Lanes per chunk (sub-array columns).
+    pub cols: usize,
+    /// Packed words per row (`cols / 64`).
+    pub words: usize,
+    /// Input-dimension chunks (`ceil(d / cols)`).
+    pub chunks: usize,
+    /// Output neurons.
+    pub o: usize,
+    /// Input dimension.
+    pub d: usize,
+    /// `[(chunk · o + out) · w_bits + n][words]` packed rows, flat.
+    data: Vec<u64>,
+}
+
+impl WeightPlanes {
+    /// Transpose `mlp`'s columns into offset-stored bit-plane rows for
+    /// `cols`-lane chunks.
+    pub fn pack(mlp: &MlpLayer, w_bits: usize, cols: usize) -> Result<Self> {
+        if w_bits == 0 || w_bits > 8 {
+            return Err(Error::Mapping(format!(
+                "w_bits {w_bits} outside 1..=8"
+            )));
+        }
+        if cols == 0 || cols % 64 != 0 {
+            return Err(Error::Mapping(format!(
+                "cols {cols} must be a non-zero multiple of 64"
+            )));
+        }
+        if mlp.d == 0 || mlp.o == 0 {
+            return Err(Error::Mapping("empty MLP layer".into()));
+        }
+        let words = cols / 64;
+        let chunks = mlp.d.div_ceil(cols);
+        let half = 1u8 << (w_bits - 1);
+        let mut data = vec![0u64; chunks * mlp.o * w_bits * words];
+        for ci in 0..chunks {
+            let len = cols.min(mlp.d - ci * cols);
+            for out in 0..mlp.o {
+                let base = (ci * mlp.o + out) * w_bits * words;
+                for di in 0..len {
+                    let wu = (mlp.weight(ci * cols + di, out) as i16
+                        + half as i16) as u8;
+                    let word = di / 64;
+                    let shift = (di % 64) as u32;
+                    for n in 0..w_bits {
+                        if (wu >> n) & 1 == 1 {
+                            data[base + n * words + word] |= 1 << shift;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Self { w_bits, cols, words, chunks, o: mlp.o, d: mlp.d, data })
+    }
+
+    /// Lanes occupied by `chunk` (the tail chunk may be short).
+    pub fn chunk_len(&self, chunk: usize) -> usize {
+        self.cols.min(self.d - chunk * self.cols)
+    }
+
+    /// Packed row words of bit-plane `n` of output `out` in `chunk`.
+    pub fn plane(&self, chunk: usize, out: usize, n: usize) -> Result<&[u64]> {
+        if chunk >= self.chunks || out >= self.o || n >= self.w_bits {
+            return Err(Error::Mapping(format!(
+                "weight plane (chunk {chunk}, out {out}, n {n}) out of range"
+            )));
+        }
+        let base = ((chunk * self.o + out) * self.w_bits + n) * self.words;
+        Ok(&self.data[base..base + self.words])
+    }
+}
 
 /// Row-address helper for the W/I regions.
 #[derive(Clone, Copy, Debug)]
@@ -90,16 +181,45 @@ impl MlpSubarrayMap {
             }
         };
         let words = ex.array.cols() / 64;
+        // one staging row reused across bit-planes (hot path: a single
+        // small allocation per load instead of one per plane, §Perf)
+        let mut row = vec![0u64; words];
         for bit in 0..bits {
-            let mut row = vec![0u64; words];
+            row.fill(0);
             for (lane, &v) in values.iter().enumerate() {
                 if (v >> bit) & 1 == 1 {
                     row[lane / 64] |= 1 << (lane % 64);
                 }
             }
-            ex.array.write_row(row_of(bit)?, &row)?;
-            ex.stats.row_writes += 1;
-            ex.stats.cycles += 1;
+            ex.write_row(row_of(bit)?, &row)?;
+        }
+        Ok(())
+    }
+
+    /// Load the prepacked weight bit-planes of (`chunk`, `out`) into
+    /// W-region `slot` — the bulk-write fast path replacing the seed's
+    /// per-neuron collect + [`Self::load_vector`].  `w_bits` row writes,
+    /// bit- and stat-identical to loading the same offset-stored column
+    /// through `load_vector`.
+    pub fn load_weight_planes(&self, ex: &mut Executor<'_>, slot: usize,
+                              planes: &WeightPlanes, chunk: usize,
+                              out: usize) -> Result<()> {
+        if planes.w_bits != self.w_bits {
+            return Err(Error::Mapping(format!(
+                "planes packed at {} bits, map expects {}",
+                planes.w_bits, self.w_bits
+            )));
+        }
+        if planes.words != ex.array.cols() / 64 {
+            return Err(Error::Mapping(format!(
+                "planes packed for {} columns, sub-array has {}",
+                planes.cols,
+                ex.array.cols()
+            )));
+        }
+        for n in 0..self.w_bits {
+            ex.write_row(self.weight_plane_row(slot, n)?,
+                         planes.plane(chunk, out, n)?)?;
         }
         Ok(())
     }
@@ -108,18 +228,16 @@ impl MlpSubarrayMap {
     /// `Σ_{m,n} 2^{m+n}·bitcount(AND(C_n(W), C_m(I)))`.
     ///
     /// One `NS-LBP_AND` (MAJ3 with all-zero) per (m, n) pair + one DPU
-    /// bitcount/shift/add.
+    /// bitcount/shift/add.  Allocation-free: the AND row is borrowed
+    /// in place and the lane mask is applied inside the bit-counter
+    /// ([`Dpu::bitcount_masked`]) instead of materializing a masked copy
+    /// per plane pair (§Perf).
     pub fn dot_unsigned(&self, ex: &mut Executor<'_>, dpu: &mut Dpu,
                         w_slot: usize, i_slot: usize, lanes: usize) -> Result<i64> {
         let zero = self.base.resv(ResvRow::Zero);
         let scratch = self.base.resv(ResvRow::Scratch);
         ex.exec(Instruction::Ini { dest: zero, value: IniValue::Zeros })?;
-        let words = lanes.div_ceil(64);
         let mut acc = 0i64;
-        let mut lane_mask = vec![u64::MAX; words];
-        if lanes % 64 != 0 {
-            lane_mask[words - 1] = (1u64 << (lanes % 64)) - 1;
-        }
         for m in 0..self.act_bits {
             let i_row = self.input_plane_row(i_slot, m)?;
             for n in 0..self.w_bits {
@@ -131,14 +249,9 @@ impl MlpSubarrayMap {
                     src3: zero,
                     dest: scratch,
                 })?;
-                let row = ex.array.read_row(scratch)?;
                 ex.stats.record_ctrl_read();
-                let masked: Vec<u64> = row[..words]
-                    .iter()
-                    .zip(&lane_mask)
-                    .map(|(&w, &m_)| w & m_)
-                    .collect();
-                let count = dpu.bitcount(&masked) as i64;
+                let row = ex.array.row_words(scratch)?;
+                let count = dpu.bitcount_masked(row, lanes) as i64;
                 let term = dpu.shift(count, (m + n) as u32);
                 acc = dpu.add(acc, term);
             }
@@ -251,6 +364,65 @@ mod tests {
         let mut dpu = Dpu::default();
         let got = m.dot_unsigned(&mut ex, &mut dpu, 0, 0, 10).unwrap();
         assert_eq!(got, 10 * 15 * 15);
+    }
+
+    #[test]
+    fn prepacked_weight_planes_match_load_vector_rows() {
+        // loading via the prepacked planes must leave the W region (and
+        // the executor stats) bit-identical to collecting the
+        // offset-stored column and loading it through load_vector
+        let (_, m) = maps();
+        let mut rng = crate::rng::Xoshiro256::new(9);
+        for d in [10usize, 256, 300, 511] {
+            let o = 3;
+            let layer = MlpLayer {
+                d,
+                o,
+                w: (0..d * o).map(|_| (rng.next_u64() % 16) as i8 - 8)
+                    .collect(),
+                scale: vec![0.0; o],
+                bias: vec![0.0; o],
+            };
+            let planes = WeightPlanes::pack(&layer, 4, 256).unwrap();
+            assert_eq!(planes.chunks, d.div_ceil(256));
+            for ci in 0..planes.chunks {
+                let len = planes.chunk_len(ci);
+                for out in 0..o {
+                    let mut sa_a = SubArray::new(256, 256);
+                    let mut ex_a = Executor::new(&mut sa_a);
+                    m.load_weight_planes(&mut ex_a, 1, &planes, ci, out)
+                        .unwrap();
+                    let stats_a = ex_a.stats.clone();
+                    let w_col: Vec<u8> = (0..len)
+                        .map(|di| {
+                            (layer.weight(ci * 256 + di, out) as i16 + 8)
+                                as u8
+                        })
+                        .collect();
+                    let mut sa_b = SubArray::new(256, 256);
+                    let mut ex_b = Executor::new(&mut sa_b);
+                    m.load_vector(&mut ex_b, Region::Weight, 1, &w_col)
+                        .unwrap();
+                    assert_eq!(ex_b.stats, stats_a, "stat parity");
+                    for n in 0..4 {
+                        let row = m.weight_plane_row(1, n).unwrap();
+                        assert_eq!(sa_b.read_row(row).unwrap(),
+                                   sa_a.read_row(row).unwrap(),
+                                   "d={d} chunk={ci} out={out} plane={n}");
+                    }
+                }
+            }
+        }
+        // dimension/bounds checks
+        assert!(WeightPlanes::pack(
+            &MlpLayer { d: 4, o: 1, w: vec![0; 4], scale: vec![0.0],
+                        bias: vec![0.0] }, 0, 256).is_err());
+        let layer = MlpLayer { d: 4, o: 1, w: vec![0; 4], scale: vec![0.0],
+                               bias: vec![0.0] };
+        let planes = WeightPlanes::pack(&layer, 4, 256).unwrap();
+        assert!(planes.plane(1, 0, 0).is_err());
+        assert!(planes.plane(0, 1, 0).is_err());
+        assert!(planes.plane(0, 0, 4).is_err());
     }
 
     #[test]

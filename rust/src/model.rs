@@ -20,7 +20,7 @@ use crate::error::{Error, Result};
 use crate::params::{LbpLayer, NetParams};
 
 /// A u8 image tensor in HWC layout.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct TensorU8 {
     pub h: usize,
     pub w: usize,
@@ -31,6 +31,17 @@ pub struct TensorU8 {
 impl TensorU8 {
     pub fn zeros(h: usize, w: usize, c: usize) -> Self {
         Self { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    /// Re-shape this tensor to `h × w × c`, zero-filled.  Reuses the
+    /// existing allocation when the capacity suffices (hot path: scratch
+    /// arenas re-shape instead of reallocating every frame/layer).
+    pub fn reset(&mut self, h: usize, w: usize, c: usize) {
+        self.h = h;
+        self.w = w;
+        self.c = c;
+        self.data.clear();
+        self.data.resize(h * w * c, 0);
     }
 
     #[inline]
@@ -84,16 +95,91 @@ pub fn lbp_code(x: &TensorU8, layer: &LbpLayer, k: usize, y: usize, x_: usize,
     code
 }
 
+/// Precomputed gather table for one LBP layer at a fixed input shape:
+/// the `pad` border width plus per-kernel *linear* sample offsets into
+/// the input tensor's data.  The layer patterns are static (LBP-Net's
+/// pre-defined, non-learned kernels), so the table is built **once** at
+/// engine construction ([`plan_layers`]) instead of on every
+/// `lbp_layer_forward` call (hot path, §Perf — see EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct LbpLayerPlan {
+    /// Input width the offsets were linearized for.
+    pub width: usize,
+    /// Input channel count the offsets were linearized for.
+    pub channels: usize,
+    /// Border width that must take the zero-padded slow path.
+    pub pad: usize,
+    /// `[kernel][sample]` linear offsets into `x.data`.
+    pub lin_offsets: Vec<Vec<isize>>,
+}
+
+impl LbpLayerPlan {
+    /// Linearize `layer`'s sample pattern for a `width × channels` input.
+    pub fn new(layer: &LbpLayer, width: usize, channels: usize) -> Self {
+        let pad = layer
+            .offsets
+            .iter()
+            .flatten()
+            .map(|pt| pt.dy.unsigned_abs().max(pt.dx.unsigned_abs()) as usize)
+            .max()
+            .unwrap_or(0);
+        let stride_y = (width * channels) as isize;
+        let stride_c = channels as isize;
+        let lin_offsets: Vec<Vec<isize>> = layer
+            .offsets
+            .iter()
+            .map(|pts| {
+                pts.iter()
+                    .map(|pt| {
+                        pt.dy as isize * stride_y + pt.dx as isize * stride_c
+                            + pt.ch as isize
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { width, channels, pad, lin_offsets }
+    }
+}
+
+/// One gather plan per LBP layer of `params` (the joint concat grows the
+/// channel count layer by layer, so each layer gets its own table).
+pub fn plan_layers(params: &NetParams) -> Vec<LbpLayerPlan> {
+    let chs = params.config.channels_after();
+    params
+        .lbp_layers
+        .iter()
+        .zip(&chs)
+        .map(|(layer, &c)| LbpLayerPlan::new(layer, params.config.width, c))
+        .collect()
+}
+
 /// One LBP layer: K encoded channels through shifted-ReLU, joint-concat
 /// with the input (mirrors `model.lbp_layer_forward`).
 ///
 /// Hot path (§Perf): interior pixels take a branch-free path with
 /// precomputed linear offsets; only the `pad`-wide border pays the
-/// zero-padding bounds checks.
+/// zero-padding bounds checks.  This convenience wrapper builds the
+/// gather plan per call; steady-state callers hold a [`LbpLayerPlan`]
+/// and a reusable output tensor and use [`lbp_layer_forward_into`].
 pub fn lbp_layer_forward(x: &TensorU8, layer: &LbpLayer, e: usize,
                          apx_code: usize, dpu: &mut Dpu) -> TensorU8 {
+    let plan = LbpLayerPlan::new(layer, x.w, x.c);
+    let mut out = TensorU8::zeros(0, 0, 0);
+    lbp_layer_forward_into(x, layer, &plan, e, apx_code, dpu, &mut out);
+    out
+}
+
+/// Allocation-free [`lbp_layer_forward`]: the gather table comes from a
+/// prebuilt [`LbpLayerPlan`] and the output is written into a reusable
+/// tensor (re-shaped in place, so a warm buffer never reallocates).
+/// Bit-identical to the wrapper.
+pub fn lbp_layer_forward_into(x: &TensorU8, layer: &LbpLayer,
+                              plan: &LbpLayerPlan, e: usize, apx_code: usize,
+                              dpu: &mut Dpu, out: &mut TensorU8) {
+    debug_assert_eq!(plan.width, x.w, "plan linearized for another width");
+    debug_assert_eq!(plan.channels, x.c, "plan linearized for another depth");
     let k_n = layer.offsets.len();
-    let mut out = TensorU8::zeros(x.h, x.w, x.c + k_n);
+    out.reset(x.h, x.w, x.c + k_n);
     // pass-through of the joint input channels (row-contiguous copy)
     for y in 0..x.h {
         for x_ in 0..x.w {
@@ -102,29 +188,7 @@ pub fn lbp_layer_forward(x: &TensorU8, layer: &LbpLayer, e: usize,
             }
         }
     }
-    // precompute per-kernel linear sample offsets into x.data
-    let pad = layer
-        .offsets
-        .iter()
-        .flatten()
-        .map(|pt| pt.dy.unsigned_abs().max(pt.dx.unsigned_abs()) as usize)
-        .max()
-        .unwrap_or(0);
-    let stride_y = (x.w * x.c) as isize;
-    let stride_c = x.c as isize;
-    let lin_offsets: Vec<Vec<isize>> = layer
-        .offsets
-        .iter()
-        .map(|pts| {
-            pts.iter()
-                .map(|pt| {
-                    pt.dy as isize * stride_y + pt.dx as isize * stride_c
-                        + pt.ch as isize
-                })
-                .collect()
-        })
-        .collect();
-
+    let pad = plan.pad;
     for y in 0..x.h {
         let interior_y = y >= pad && y + pad < x.h;
         for x_ in 0..x.w {
@@ -134,7 +198,7 @@ pub fn lbp_layer_forward(x: &TensorU8, layer: &LbpLayer, e: usize,
                 let code = if interior {
                     let pivot = x.data[(base + layer.pivot_ch[k] as isize) as usize];
                     let mut code = 0u32;
-                    for (n, &off) in lin_offsets[k].iter().enumerate().skip(apx_code) {
+                    for (n, &off) in plan.lin_offsets[k].iter().enumerate().skip(apx_code) {
                         let v = x.data[(base + off) as usize];
                         code |= ((v >= pivot) as u32) << n;
                     }
@@ -146,7 +210,6 @@ pub fn lbp_layer_forward(x: &TensorU8, layer: &LbpLayer, e: usize,
             }
         }
     }
-    out
 }
 
 /// Full LBP front-end: u8 image → pooled act_bits features
@@ -164,8 +227,16 @@ pub fn forward_lbp(params: &NetParams, image: &TensorU8,
     for layer in &params.lbp_layers {
         x = lbp_layer_forward(&x, layer, cfg.e, cfg.apx_code, dpu);
     }
-    // integer average pooling + exact requantize
-    let s = cfg.pool;
+    pool_quantize(&x, cfg.pool, cfg.act_bits, dpu)
+}
+
+/// Integer average pooling + exact requantize to `act_bits` — the tail
+/// of [`forward_lbp`], shared with the architectural backend so both
+/// paths run the identical DPU math.  The returned feature vector is the
+/// only allocation (it escapes into the caller's output).
+pub fn pool_quantize(x: &TensorU8, pool: usize, act_bits: usize,
+                     dpu: &mut Dpu) -> Result<Vec<u8>> {
+    let s = pool;
     let vmax = (255 * s * s) as u32;
     let (ph, pw) = (x.h / s, x.w / s);
     let mut feats = Vec::with_capacity(ph * pw * x.c);
@@ -178,7 +249,7 @@ pub fn forward_lbp(params: &NetParams, image: &TensorU8,
                         sum += x.get(py * s + dy, px * s + dx, ch) as u32;
                     }
                 }
-                feats.push(dpu.quantize_pooled(sum, vmax, cfg.act_bits as u32)?);
+                feats.push(dpu.quantize_pooled(sum, vmax, act_bits as u32)?);
             }
         }
     }
@@ -189,32 +260,52 @@ pub fn forward_lbp(params: &NetParams, image: &TensorU8,
 /// iteration so every weight access is contiguous (hot path, §Perf);
 /// zero activations (common after ReLU/quantize) skip their row entirely.
 pub fn int_matmul(feats: &[u8], mlp: &crate::params::MlpLayer) -> Vec<i64> {
+    let mut acc = Vec::new();
+    int_matmul_into(feats, mlp, &mut acc);
+    acc
+}
+
+/// Allocation-free [`int_matmul`]: the accumulator is a caller-owned
+/// buffer (cleared and refilled), so the architectural backend's
+/// per-layer cross-check reuses one arena vector instead of allocating
+/// per call.  Bit-identical to [`int_matmul`]: the i64 sum is truncated
+/// through i32 at the end, matching the historical i32 accumulator's
+/// mod-2^32 arithmetic exactly.
+pub fn int_matmul_into(feats: &[u8], mlp: &crate::params::MlpLayer,
+                       acc: &mut Vec<i64>) {
     debug_assert_eq!(feats.len(), mlp.d);
-    let mut acc = vec![0i32; mlp.o];
+    acc.clear();
+    acc.resize(mlp.o, 0);
     for (di, &f) in feats.iter().enumerate() {
         if f == 0 {
             continue;
         }
-        let f = f as i32;
+        let f = f as i64;
         let row = &mlp.w[di * mlp.o..(di + 1) * mlp.o];
         for (a, &w) in acc.iter_mut().zip(row) {
-            *a += f * w as i32;
+            *a += f * w as i64;
         }
     }
-    acc.into_iter().map(|v| v as i64).collect()
+    for a in acc.iter_mut() {
+        *a = *a as i32 as i64;
+    }
 }
 
 /// Weight-stationary batched matmul: one pass over the weight matrix
 /// serves every frame in the batch, so `w` streams through the cache
 /// once per batch instead of once per frame.  Bit-identical to
 /// [`int_matmul`] per frame (each accumulator sees the same additions in
-/// the same `di` order).
-pub fn int_matmul_batch(batch: &[&[u8]], mlp: &crate::params::MlpLayer)
-                        -> Vec<Vec<i64>> {
+/// the same `di` order).  Generic over the per-frame container so
+/// callers pass `&[Vec<u8>]` or `&[&[u8]]` directly — no borrow vector
+/// needs to be collected first (§Perf).
+pub fn int_matmul_batch<S: AsRef<[u8]>>(batch: &[S],
+                                        mlp: &crate::params::MlpLayer)
+                                        -> Vec<Vec<i64>> {
     let mut accs = vec![vec![0i32; mlp.o]; batch.len()];
     for di in 0..mlp.d {
         let row = &mlp.w[di * mlp.o..(di + 1) * mlp.o];
         for (feats, acc) in batch.iter().zip(accs.iter_mut()) {
+            let feats = feats.as_ref();
             debug_assert_eq!(feats.len(), mlp.d);
             let f = feats[di];
             if f == 0 {
@@ -249,8 +340,7 @@ pub fn mlp_forward_batch(params: &NetParams, feats_batch: &[Vec<u8>],
         }
     }
     let m1 = &params.mlp1;
-    let views: Vec<&[u8]> = feats_batch.iter().map(|f| f.as_slice()).collect();
-    let acc1 = int_matmul_batch(&views, m1);
+    let acc1 = int_matmul_batch(feats_batch, m1);
     let hidden_q: Vec<Vec<u8>> = acc1
         .iter()
         .zip(dpus.iter_mut())
@@ -263,8 +353,7 @@ pub fn mlp_forward_batch(params: &NetParams, feats_batch: &[Vec<u8>],
         })
         .collect();
     let m2 = &params.mlp2;
-    let views: Vec<&[u8]> = hidden_q.iter().map(|f| f.as_slice()).collect();
-    let acc2 = int_matmul_batch(&views, m2);
+    let acc2 = int_matmul_batch(&hidden_q, m2);
     Ok(acc2
         .iter()
         .zip(dpus.iter_mut())
@@ -474,6 +563,44 @@ mod tests {
         assert_eq!(feats.len(), cfg.feature_dim());
         let qmax = (1u8 << cfg.act_bits) - 1;
         assert!(feats.iter().all(|&f| f <= qmax));
+    }
+
+    /// The precomputed-plan `_into` variants are bit-identical to the
+    /// per-call wrappers, including on reused (warm) output buffers.
+    #[test]
+    fn plan_and_into_variants_match_wrappers() {
+        let (_, params) = synth_params(21);
+        let cfg = &params.config;
+        let plans = plan_layers(&params);
+        assert_eq!(plans.len(), params.lbp_layers.len());
+        let mut rng = Xoshiro256::new(23);
+        let mut warm = TensorU8::zeros(0, 0, 0);
+        for round in 0..3 {
+            let img = TensorU8 {
+                h: cfg.height,
+                w: cfg.width,
+                c: cfg.in_channels,
+                data: (0..cfg.height * cfg.width * cfg.in_channels)
+                    .map(|_| rng.next_u64() as u8)
+                    .collect(),
+            };
+            let layer = &params.lbp_layers[0];
+            let mut dpu_a = Dpu::default();
+            let want = lbp_layer_forward(&img, layer, cfg.e, cfg.apx_code,
+                                         &mut dpu_a);
+            let mut dpu_b = Dpu::default();
+            lbp_layer_forward_into(&img, layer, &plans[0], cfg.e,
+                                   cfg.apx_code, &mut dpu_b, &mut warm);
+            assert_eq!(warm, want, "round {round}");
+            assert_eq!(dpu_a.stats, dpu_b.stats);
+        }
+        // int_matmul_into on a reused accumulator == int_matmul
+        let feats: Vec<u8> = (0..params.mlp1.d)
+            .map(|_| rng.below(1u64 << cfg.act_bits) as u8)
+            .collect();
+        let mut acc = vec![99i64; 3]; // stale contents must be cleared
+        int_matmul_into(&feats, &params.mlp1, &mut acc);
+        assert_eq!(acc, int_matmul(&feats, &params.mlp1));
     }
 
     /// Functional path == architectural path (ISA-simulated Algorithm 1 +

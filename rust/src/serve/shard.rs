@@ -100,14 +100,19 @@ impl ShardPool {
 
 fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
               batches: &BoundedQueue<Batch>, metrics: &Metrics) {
+    // dispatch buffers persist across batches (like the backends' scratch
+    // arenas): the steady-state loop reuses them instead of reallocating
+    // per batch
+    let mut frames: Vec<Frame> = Vec::new();
+    let mut shells = Vec::new();
     while let Some(batch) = batches.pop() {
         let class = batch.class;
 
         // shed requests whose per-request deadline expired while queued:
         // the caller asked for freshness, not a stale answer
         let now = Instant::now();
-        let mut frames: Vec<Frame> = Vec::with_capacity(batch.requests.len());
-        let mut shells = Vec::with_capacity(batch.requests.len());
+        frames.clear();
+        shells.clear();
         for req in batch.requests {
             let expired = req
                 .deadline
@@ -140,7 +145,7 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
         match engine.infer_batch(&frames) {
             Ok(out) if out.frames.len() == shells.len() => {
                 for (report, (sensor_id, enqueued_at, slot)) in
-                    out.frames.into_iter().zip(shells)
+                    out.frames.into_iter().zip(shells.drain(..))
                 {
                     let latency = enqueued_at.elapsed();
                     metrics.record_completion(class, latency, &report);
@@ -161,14 +166,14 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                     out.frames.len(),
                     shells.len()
                 );
-                for (_, _, slot) in shells {
+                for (_, _, slot) in shells.drain(..) {
                     metrics.record_failure(class);
                     slot.fulfill(Err(Error::Serve(msg.clone())));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
-                for (_, _, slot) in shells {
+                for (_, _, slot) in shells.drain(..) {
                     metrics.record_failure(class);
                     slot.fulfill(Err(Error::Serve(format!(
                         "batch inference failed: {msg}"

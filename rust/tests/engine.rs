@@ -211,6 +211,56 @@ fn batched_and_per_frame_logits_match_on_both_backends() {
     }
 }
 
+/// Persistent-scratch-arena regression (the PR-5 acceptance test): a
+/// *warm* engine — one that has already served several batches and so
+/// reuses sized arena buffers, prepacked weight planes, and a dirty
+/// scratch sub-array — must be bit-identical to a *cold* (freshly
+/// built) engine on the same frames, for both in-tree backends, with
+/// identical per-frame telemetry counters.
+#[test]
+fn warm_reused_scratch_engines_match_cold_engines_bitwise() {
+    let (params, warmup) = setup(7, 71);
+    let frames = synth_frames(&params, 3, 73).unwrap();
+    for kind in [BackendKind::Functional, BackendKind::Architectural] {
+        let config = EngineConfig {
+            arch: ArchSim { lbp: true, mlp: true, early_exit: false },
+            ..Default::default()
+        };
+        let mut warm = Engine::builder()
+            .config(config.clone())
+            .params(params.clone())
+            .backend(kind)
+            .build()
+            .unwrap();
+        // heat the arena across varied batch shapes (grow, shrink, grow)
+        warm.infer_batch(&warmup[..5]).unwrap();
+        warm.infer_batch(&warmup[5..6]).unwrap();
+        warm.infer_batch(&warmup).unwrap();
+        let got = warm.infer_batch(&frames).unwrap();
+
+        let mut cold = Engine::builder()
+            .config(config)
+            .params(params.clone())
+            .backend(kind)
+            .build()
+            .unwrap();
+        let want = cold.infer_batch(&frames).unwrap();
+
+        assert_eq!(got.frames.len(), want.frames.len(), "{kind}");
+        for (g, w) in got.frames.iter().zip(&want.frames) {
+            assert_eq!(g.seq, w.seq, "{kind}");
+            assert_eq!(g.logits, w.logits,
+                       "warm/cold divergence on backend {kind} frame {}",
+                       g.seq);
+            assert_eq!(g.features, w.features, "{kind} frame {}", g.seq);
+            assert_eq!(g.predicted, w.predicted, "{kind}");
+            assert_eq!(g.telemetry.exec, w.telemetry.exec, "{kind}");
+            assert_eq!(g.telemetry.dpu, w.telemetry.dpu, "{kind}");
+            assert_eq!(g.telemetry.arch_mismatches, 0, "{kind}");
+        }
+    }
+}
+
 /// Without the `pjrt` cargo feature the PJRT backend must fail at
 /// build time with the capabilities detail, not on the first frame.
 #[test]

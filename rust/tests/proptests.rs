@@ -463,3 +463,56 @@ fn prop_hw_profiles_cost_sane_and_roundtrip() {
         assert_eq!(back, p);
     });
 }
+
+/// Warm engines with reused scratch arenas stay bit-identical to cold
+/// ones over *random batch-size sequences* (both in-tree backends): the
+/// PR-5 allocation-free hot path must never leak state between batches,
+/// whatever shape history the arena has seen.
+#[test]
+fn prop_warm_arena_matches_cold_over_random_batch_sizes() {
+    use ns_lbp::engine::{ArchSim, BackendKind, Engine, EngineConfig};
+    use ns_lbp::params::synth::synth_params;
+    use ns_lbp::testing::synth_frames;
+
+    let (_, params) = synth_params(5);
+    check(Config::default().cases(6), "warm == cold over random batches",
+          |g: &mut Gen| {
+        let kind = if g.bool() {
+            BackendKind::Functional
+        } else {
+            BackendKind::Architectural
+        };
+        let config = EngineConfig {
+            arch: ArchSim { lbp: true, mlp: true, early_exit: g.bool() },
+            ..Default::default()
+        };
+        let mut warm = Engine::builder()
+            .config(config.clone())
+            .params(params.clone())
+            .backend(kind)
+            .build()
+            .unwrap();
+        let rounds = g.usize_in(1, 3);
+        for round in 0..rounds {
+            let n = g.usize_in(1, 5);
+            let seed = 1000 + 17 * round as u64 + n as u64;
+            let frames = synth_frames(&params, n, seed).unwrap();
+            let got = warm.infer_batch(&frames).unwrap();
+            let mut cold = Engine::builder()
+                .config(config.clone())
+                .params(params.clone())
+                .backend(kind)
+                .build()
+                .unwrap();
+            let want = cold.infer_batch(&frames).unwrap();
+            assert_eq!(got.frames.len(), want.frames.len());
+            for (a, b) in got.frames.iter().zip(&want.frames) {
+                assert_eq!(a.logits, b.logits, "{kind} round {round}");
+                assert_eq!(a.features, b.features, "{kind} round {round}");
+                assert_eq!(a.telemetry.exec, b.telemetry.exec);
+                assert_eq!(a.telemetry.dpu, b.telemetry.dpu);
+                assert_eq!(a.telemetry.arch_mismatches, 0);
+            }
+        }
+    });
+}

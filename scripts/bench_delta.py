@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Advisory bench-trajectory diff for CI (see EXPERIMENTS.md).
+
+Finds the most recent successful run on main that actually carries a
+`bench-json` artifact (one artifact-less or expired run must not
+disable the trajectory forever), downloads it, and prints per-metric
+delta tables against the JSON files produced by the current run —
+covering all three trajectory artifacts:
+
+* BENCH_hotpath.json — bench_harness schema: per-case median ns,
+* BENCH_serve.json   — serve-bench schema: per-shard-count throughput,
+  p95 latency, energy per frame,
+* AB_energy.json     — A/B harness schema: per-arm energy/time/TOPS-W.
+
+Purely advisory: any failure (first run, API hiccup) prints a note and
+exits 0 — perf noise must never break the build.
+
+Env: GITHUB_TOKEN, GITHUB_REPOSITORY, GITHUB_RUN_ID (standard in
+Actions); GITHUB_API_URL optional.
+"""
+
+import io
+import json
+import os
+import sys
+import urllib.request
+import zipfile
+
+FLAG_THRESHOLD_PCT = 15.0  # deltas worse than this get a "regression?" mark
+ARTIFACT = "bench-json"
+
+
+def api(url):
+    req = urllib.request.Request(url, headers={
+        "Authorization": f"Bearer {os.environ['GITHUB_TOKEN']}",
+        "Accept": "application/vnd.github+json",
+        "X-GitHub-Api-Version": "2022-11-28",
+    })
+    return urllib.request.urlopen(req, timeout=60)
+
+
+def flatten(name, blob):
+    """One file -> {metric: (value, higher_is_better)}."""
+    doc = json.loads(blob)
+    out = {}
+    if "cases" in doc:  # bench_harness schema (BENCH_hotpath.json)
+        for c in doc["cases"]:
+            out[f"{c['name']} median_ns"] = (c["median_ns"], False)
+    elif "results" in doc:  # serve-bench schema (BENCH_serve.json)
+        for r in doc["results"]:
+            rep = r["report"]
+            tag = f"shards={r['shards']}"
+            out[f"{tag} throughput_fps"] = (rep["throughput_fps"], True)
+            out[f"{tag} p95_ms"] = (rep["latency_ms"]["p95"], False)
+            out[f"{tag} energy_per_frame_uj"] = (
+                rep["energy_per_frame_uj"], False)
+    elif "a" in doc and "b" in doc:  # A/B harness schema (AB_energy.json)
+        for arm_key in ("a", "b"):
+            arm = doc[arm_key]
+            tag = f"{arm_key}:{arm.get('profile', '?')}"
+            out[f"{tag} energy_uj_per_frame"] = (
+                arm["energy_uj_per_frame"], False)
+            out[f"{tag} time_us_per_frame"] = (arm["time_us_per_frame"],
+                                               False)
+            if "tops_per_watt" in arm:
+                out[f"{tag} tops_per_watt"] = (arm["tops_per_watt"], True)
+    else:
+        print(f"{name}: unrecognized schema; skipping")
+    return out
+
+
+def previous_artifact_run(repo, base, current):
+    """Newest successful run on main (excluding `current`) that still has
+    an unexpired bench-json artifact, plus that artifact."""
+    runs = json.load(api(
+        f"{base}/repos/{repo}/actions/runs"
+        "?branch=main&status=success&per_page=30"))["workflow_runs"]
+    for run in runs:
+        if str(run["id"]) == current:
+            continue
+        arts = json.load(api(
+            f"{base}/repos/{repo}/actions/runs/{run['id']}/artifacts"
+        ))["artifacts"]
+        art = next((a for a in arts if a["name"] == ARTIFACT
+                    and not a.get("expired")), None)
+        if art is not None:
+            return run, art
+    return None, None
+
+
+def main():
+    repo = os.environ["GITHUB_REPOSITORY"]
+    base = os.environ.get("GITHUB_API_URL", "https://api.github.com")
+    current = os.environ.get("GITHUB_RUN_ID", "")
+    prev, art = previous_artifact_run(repo, base, current)
+    if prev is None:
+        print(f"bench delta: no previous successful run with a {ARTIFACT} "
+              "artifact; skipping")
+        return
+    zf = zipfile.ZipFile(io.BytesIO(api(art["archive_download_url"]).read()))
+
+    for name in ("BENCH_hotpath.json", "BENCH_serve.json", "AB_energy.json"):
+        if name not in zf.namelist():
+            print(f"bench delta: {name} absent from run {prev['id']}'s "
+                  "artifact; skipping")
+            continue
+        if not os.path.exists(name):
+            print(f"bench delta: {name} not produced by this run; skipping")
+            continue
+        old = flatten(name, zf.read(name))
+        new = flatten(name, open(name, "rb").read())
+        if not new:
+            continue
+        width = max(len(k) for k in new)
+        print(f"\n{name}: run {prev['id']} -> this run (advisory, "
+              "never gating)")
+        print(f"  {'metric':<{width}}  {'previous':>12}  {'current':>12}  "
+              f"{'delta':>8}")
+        for metric, (now, higher_better) in new.items():
+            if metric in old and old[metric][0] != 0:
+                was = old[metric][0]
+                pct = (now - was) / abs(was) * 100.0
+                worse = -pct if higher_better else pct
+                mark = ("  <-- regression?" if worse > FLAG_THRESHOLD_PCT
+                        else "")
+                print(f"  {metric:<{width}}  {was:>12.1f}  {now:>12.1f}  "
+                      f"{pct:>+7.1f}%{mark}")
+            else:
+                print(f"  {metric:<{width}}  {'-':>12}  {now:>12.1f}"
+                      "       new")
+
+
+if __name__ == "__main__":
+    try:
+        main()
+    except Exception as exc:  # noqa: BLE001 — advisory by contract
+        print(f"bench delta: skipped ({exc})")
+    sys.exit(0)
