@@ -11,7 +11,9 @@
 //!   in-run,
 //! * whole architectural frames, cold (fresh backend per frame — the
 //!   seed-shaped allocating path) vs warm (persistent scratch arena),
-//!   plus an 8-frame batch — the unit a serve shard dispatches,
+//!   plus an 8-frame batch — the unit a serve shard dispatches — with
+//!   the tracing instrumentation measured disabled (CI gates it within
+//!   2% or noise of the default path) and enabled (informational),
 //! * partitioning, Monte-Carlo trials, and a whole functional-model
 //!   frame.
 //!
@@ -182,6 +184,21 @@ fn main() {
         b.run("arch_batch8_dispatch", || {
             warm.infer_batch(black_box(&frames)).unwrap().frames.len()
         });
+        // tracing cost on the dispatch unit: `trace_off` pins an
+        // explicitly disabled tracer and must be indistinguishable from
+        // the default path above — CI gates the pair within 2% or noise
+        // (3x MAD), so the disabled-tracer branches stay free on the hot
+        // path.  `trace_on` is informational: spans land in an undrained
+        // ring, the worst case for emit contention.
+        warm.set_tracer(ns_lbp::obs::Tracer::disabled());
+        b.run("arch_batch8_dispatch_trace_off", || {
+            warm.infer_batch(black_box(&frames)).unwrap().frames.len()
+        });
+        warm.set_tracer(ns_lbp::obs::Tracer::new(1 << 16));
+        b.run("arch_batch8_dispatch_trace_on", || {
+            warm.infer_batch(black_box(&frames)).unwrap().frames.len()
+        });
+        warm.set_tracer(ns_lbp::obs::Tracer::disabled());
     }
 
     // --- whole frames (artifact-gated MNIST net) ------------------------------
@@ -232,6 +249,19 @@ fn main() {
             cold.median,
             warm.median,
             cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-12)
+        );
+    }
+    if let (Some(base), Some(off), Some(on)) = (
+        b.result("arch_batch8_dispatch"),
+        b.result("arch_batch8_dispatch_trace_off"),
+        b.result("arch_batch8_dispatch_trace_on"),
+    ) {
+        let pct = |a: f64, b: f64| (a / b.max(1e-12) - 1.0) * 100.0;
+        println!(
+            "tracing on batch8 dispatch: off {:+.2}% vs default, \
+             on {:+.2}% vs off",
+            pct(off.median.as_secs_f64(), base.median.as_secs_f64()),
+            pct(on.median.as_secs_f64(), off.median.as_secs_f64()),
         );
     }
 

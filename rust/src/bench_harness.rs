@@ -35,22 +35,10 @@ pub struct CaseResult {
     pub mad: Duration,
 }
 
-/// Minimal JSON string escaping (names/groups are code-controlled, but
-/// stay valid even if one ever contains a quote or backslash).
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for ch in s.chars() {
-        match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
-}
+// String escaping and float formatting come from the crate-wide JSON
+// writer (`obs::json`), shared with the metrics report and the trace
+// exporter so every JSON surface escapes identically.
+use crate::obs::json::escape as json_escape;
 
 impl CaseResult {
     /// items/second given `items` work items per iteration.

@@ -380,6 +380,8 @@ pub struct SystemConfig {
     pub engine: EngineSelection,
     /// Hardware cost-model selection.
     pub hw: HwSelection,
+    /// Trace/observability pipeline knobs (see [`crate::obs`]).
+    pub obs: crate::obs::ObsConfig,
     /// Worker threads for the coordinator (0 = one per bank group).
     pub workers: usize,
     /// Artifacts directory for HLO/params files.
@@ -395,6 +397,7 @@ impl Default for SystemConfig {
             serve: ServeConfig::default(),
             engine: EngineSelection::default(),
             hw: HwSelection::default(),
+            obs: crate::obs::ObsConfig::default(),
             workers: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -426,6 +429,8 @@ impl SystemConfig {
             "engine.backend", "engine.cross_check", "engine.pjrt_artifact",
             "engine.routing.best_effort", "engine.routing.standard",
             "engine.routing.billed",
+            "obs.enabled", "obs.ring_capacity", "obs.sample_period_us",
+            "obs.jsonl_path",
             "runtime.workers", "runtime.artifacts_dir",
         ];
         // `[hw]` keys: the profile selector plus flat field overrides
@@ -545,6 +550,17 @@ impl SystemConfig {
             routing,
         };
 
+        let obs = crate::obs::ObsConfig {
+            enabled: file.get_bool("obs.enabled", d.obs.enabled)?,
+            ring_capacity: file
+                .get_usize("obs.ring_capacity", d.obs.ring_capacity)?,
+            sample_period_us: file
+                .get_usize("obs.sample_period_us",
+                           d.obs.sample_period_us as usize)?
+                as u64,
+            jsonl_path: file.get_str("obs.jsonl_path", &d.obs.jsonl_path)?,
+        };
+
         let mut hw = HwSelection::default();
         if file.contains("hw.profile") {
             hw.profile = HwProfile::resolve(&file.get_str("hw.profile", "")?)?;
@@ -560,6 +576,7 @@ impl SystemConfig {
             serve,
             engine,
             hw,
+            obs,
             workers: file.get_usize("runtime.workers", d.workers)?,
             artifacts_dir: file.get_str("runtime.artifacts_dir", &d.artifacts_dir)?,
         })
@@ -801,6 +818,28 @@ mod tests {
         let bad = ConfigFile::parse("[hw]\nwarp_pj = 1.0").unwrap();
         assert!(SystemConfig::from_file(&bad).is_err());
         let bad = ConfigFile::parse("[hw]\nfreq_ghz = 0.0").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_with_defaults() {
+        let sc = SystemConfig::default();
+        assert!(!sc.obs.enabled);
+        assert_eq!(sc.obs.ring_capacity, 65536);
+
+        let f = ConfigFile::parse(
+            "[obs]\nenabled = true\nring_capacity = 1024\n\
+             sample_period_us = 5000\njsonl_path = \"out/t.jsonl\"",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert!(sc.obs.enabled);
+        assert_eq!(sc.obs.ring_capacity, 1024);
+        assert_eq!(sc.obs.sample_period_us, 5000);
+        assert_eq!(sc.obs.jsonl_path, "out/t.jsonl");
+        assert_eq!(sc.obs.chrome_path(), "out/t.trace.json");
+
+        let bad = ConfigFile::parse("[obs]\nring_cap = 9").unwrap();
         assert!(SystemConfig::from_file(&bad).is_err());
     }
 

@@ -55,6 +55,7 @@ use crate::lbp::parallel_compare_into;
 use crate::mapping::LbpSubarrayMap;
 use crate::mlp::{MlpSubarrayMap, WeightPlanes};
 use crate::model::{self, LbpLayerPlan, TensorU8};
+use crate::obs::{EventKind, TraceEvent, Tracer};
 use crate::params::{LbpLayer, MlpLayer, NetParams};
 use crate::sensor::Frame;
 use crate::sram::{Region, SubArray};
@@ -106,6 +107,8 @@ pub struct ArchitecturalBackend {
     /// Per-layer gather tables for the functional LBP fallback.
     plans: Vec<LbpLayerPlan>,
     arena: ArchScratch,
+    /// Stage-phase span source (disabled by default — zero cost).
+    tracer: Tracer,
 }
 
 impl ArchitecturalBackend {
@@ -138,6 +141,7 @@ impl ArchitecturalBackend {
             weight_planes,
             plans,
             arena: ArchScratch::default(),
+            tracer: Tracer::disabled(),
         })
     }
 
@@ -185,11 +189,16 @@ impl InferenceBackend for ArchitecturalBackend {
             mmap: self.mmap.as_ref(),
             weight_planes: self.weight_planes.as_ref(),
             plans: &self.plans,
+            tracer: &self.tracer,
         };
         Ok(BackendOutput {
             frames: core.process_batch(frames, &mut self.scratch,
                                        &mut self.arena)?,
         })
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 }
 
@@ -214,11 +223,29 @@ struct ArchCore<'a> {
     mmap: Option<&'a MlpSubarrayMap>,
     weight_planes: Option<&'a (WeightPlanes, WeightPlanes)>,
     plans: &'a [LbpLayerPlan],
+    tracer: &'a Tracer,
 }
 
 impl ArchCore<'_> {
     fn subarray_budget(&self) -> usize {
         self.config.subarray_budget()
+    }
+
+    /// Close a stage phase span opened with
+    /// `tracer.enabled().then(Instant::now)`.
+    fn phase_span(&self, label: &'static str,
+                  start: Option<std::time::Instant>) {
+        if let Some(t0) = start {
+            self.tracer.emit(TraceEvent {
+                kind: EventKind::Phase,
+                ts_ns: self.tracer.ts(t0),
+                dur_ns: t0.elapsed().as_nanos() as u64,
+                shard: self.config.shard.map_or(-1, |s| s.index as i32),
+                backend: Some(BackendKind::Architectural),
+                label,
+                ..TraceEvent::default()
+            });
+        }
     }
 
     /// Lane order for one LBP layer: (y, x, kernel, sample≥apx),
@@ -428,6 +455,8 @@ impl ArchCore<'_> {
         accs.resize_with(frames.len(), FrameAcc::default);
 
         // --- LBP layers (batched across frames) ------------------------------
+        let lbp_start = self.tracer.enabled()
+            .then(std::time::Instant::now);
         for (layer, plan) in self.params.lbp_layers.iter().zip(self.plans) {
             if self.config.arch.lbp {
                 self.lbp_layer_arch_batch(layer, scratch, xs, ys, pairs,
@@ -444,6 +473,7 @@ impl ArchCore<'_> {
             }
             std::mem::swap(xs, ys);
         }
+        self.phase_span("lbp", lbp_start);
 
         // --- pooling + quantization (DPU, per frame) ------------------------
         let mut feats_batch: Vec<Vec<u8>> = Vec::with_capacity(frames.len());
@@ -459,6 +489,8 @@ impl ArchCore<'_> {
         // the LBP lanes get, with bit-identical logits (packing only
         // changes which sub-array a batch is modeled on, never the math).
         let n = frames.len() as f64;
+        let mlp_start = self.tracer.enabled()
+            .then(std::time::Instant::now);
         let logits_batch: Vec<Vec<f32>> = if let (Some(mmap), Some((p1, p2))) =
             (self.mmap, self.weight_planes)
         {
@@ -510,6 +542,7 @@ impl ArchCore<'_> {
                 })
                 .collect::<Result<Vec<_>>>()?
         };
+        self.phase_span("mlp", mlp_start);
 
         // --- cost under the active profile ----------------------------------
         let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;

@@ -5,6 +5,7 @@ use crate::dpu::Dpu;
 use crate::error::Result;
 use crate::hw::{CostModel, HwProfile};
 use crate::model::{self, LbpLayerPlan, TensorU8};
+use crate::obs::{EventKind, TraceEvent, Tracer};
 use crate::params::NetParams;
 use crate::sensor::Frame;
 
@@ -45,6 +46,10 @@ pub struct FunctionalBackend {
     cost_model: HwProfile,
     plans: Vec<LbpLayerPlan>,
     scratch: FuncScratch,
+    /// Stage-phase span source (disabled by default — zero cost).
+    tracer: Tracer,
+    /// Shard index for span attribution (-1 when unsharded).
+    shard: i32,
 }
 
 impl FunctionalBackend {
@@ -56,7 +61,28 @@ impl FunctionalBackend {
             cost_model: config.system.hw_profile(),
             plans,
             scratch: FuncScratch::default(),
+            tracer: Tracer::disabled(),
+            shard: config.shard.map_or(-1, |s| s.index as i32),
         })
+    }
+}
+
+/// Close a stage phase span opened with
+/// `tracer.enabled().then(Instant::now)`.  Free function over the
+/// tracer/shard fields only, so it composes with the mutably borrowed
+/// scratch arena inside `infer_batch`.
+fn phase_span(tracer: &Tracer, shard: i32, label: &'static str,
+              start: Option<std::time::Instant>) {
+    if let Some(t0) = start {
+        tracer.emit(TraceEvent {
+            kind: EventKind::Phase,
+            ts_ns: tracer.ts(t0),
+            dur_ns: t0.elapsed().as_nanos() as u64,
+            shard,
+            backend: Some(BackendKind::Functional),
+            label,
+            ..TraceEvent::default()
+        });
     }
 }
 
@@ -80,6 +106,8 @@ impl InferenceBackend for FunctionalBackend {
 
         // stage 1 (per frame): digitize + LBP layers + pooled features,
         // through the reusable ping-pong tensors and prebuilt plans
+        let lbp_start = self.tracer.enabled()
+            .then(std::time::Instant::now);
         let FuncScratch { cur, nxt, dpus } = &mut self.scratch;
         dpus.clear();
         dpus.resize_with(frames.len(), Dpu::default);
@@ -97,9 +125,14 @@ impl InferenceBackend for FunctionalBackend {
                                                   cfg.act_bits, dpu)?);
         }
 
+        phase_span(&self.tracer, self.shard, "lbp", lbp_start);
+
         // stage 2 (whole batch): weight-stationary MLP over all frames
+        let mlp_start = self.tracer.enabled()
+            .then(std::time::Instant::now);
         let logits_batch =
             model::mlp_forward_batch(&self.params, &feats_batch, dpus)?;
+        phase_span(&self.tracer, self.shard, "mlp", mlp_start);
 
         // stage 3 (per frame): assemble outputs and the energy account
         let pixels = (cfg.height * cfg.width * cfg.in_channels) as u64;
@@ -129,6 +162,10 @@ impl InferenceBackend for FunctionalBackend {
             })
             .collect();
         Ok(BackendOutput { frames: out })
+    }
+
+    fn set_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 }
 

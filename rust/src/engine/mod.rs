@@ -466,6 +466,12 @@ pub trait InferenceBackend {
 
     /// Run inference over a batch of frames.
     fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput>;
+
+    /// Install a trace handle: backends that implement this emit
+    /// per-phase spans (`lbp` / `mlp`) from inside `infer_batch`.  The
+    /// default keeps phase-blind backends valid — they simply
+    /// contribute no phase spans to the feed.
+    fn set_tracer(&mut self, _tracer: crate::obs::Tracer) {}
 }
 
 /// Shape-check a digitized frame against the network geometry (shared by
@@ -540,6 +546,7 @@ pub struct Engine {
     primary: Box<dyn InferenceBackend + Send>,
     reference: Option<Box<dyn InferenceBackend + Send>>,
     telemetry: Telemetry,
+    tracer: crate::obs::Tracer,
 }
 
 impl Engine {
@@ -556,7 +563,19 @@ impl Engine {
     pub fn infer_batch(&mut self, frames: &[Frame]) -> Result<BackendOutput> {
         let mut out = self.primary.infer_batch(frames)?;
         if let Some(reference) = self.reference.as_mut() {
+            let check_start = self.tracer.enabled().then(std::time::Instant::now);
             let ref_out = reference.infer_batch(frames)?;
+            if let Some(t0) = check_start {
+                self.tracer.emit(crate::obs::TraceEvent {
+                    kind: crate::obs::EventKind::Phase,
+                    ts_ns: self.tracer.ts(t0),
+                    dur_ns: t0.elapsed().as_nanos() as u64,
+                    shard: self.config.shard.map_or(-1, |s| s.index as i32),
+                    backend: Some(reference.kind()),
+                    label: "cross_check",
+                    ..crate::obs::TraceEvent::default()
+                });
+            }
             if ref_out.frames.len() != out.frames.len() {
                 return Err(Error::Engine(format!(
                     "cross-check returned {} outputs for {} frames",
@@ -599,6 +618,18 @@ impl Engine {
     /// Reference backend kind, when cross-checking is enabled.
     pub fn cross_check_kind(&self) -> Option<BackendKind> {
         self.reference.as_ref().map(|r| r.kind())
+    }
+
+    /// Install a trace handle on the engine and both its backends: the
+    /// engine emits a `cross_check` phase span per reference run, the
+    /// backends their own `lbp`/`mlp` phase spans.  With the default
+    /// (disabled) tracer all of it is a branch per batch.
+    pub fn set_tracer(&mut self, tracer: crate::obs::Tracer) {
+        self.primary.set_tracer(tracer.clone());
+        if let Some(reference) = self.reference.as_mut() {
+            reference.set_tracer(tracer.clone());
+        }
+        self.tracer = tracer;
     }
 
     /// Telemetry accumulated over every batch this engine has run.
@@ -706,6 +737,7 @@ impl EngineBuilder {
             primary,
             reference,
             telemetry: Telemetry::default(),
+            tracer: crate::obs::Tracer::disabled(),
         })
     }
 }

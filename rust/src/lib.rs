@@ -71,6 +71,12 @@
 //!   engines pinned to disjoint bank slices, per-class p50/p95/p99 +
 //!   drop/reject metrics, and graceful drain (`ns-lbp serve-bench`
 //!   drives it end to end).
+//! * [`obs`] — end-to-end tracing: per-request spans (submit → queue →
+//!   batch → infer → complete) with `hw` energy attribution, written
+//!   lock-cheaply into a bounded ring and exported off-thread as a
+//!   JSONL feed plus a Chrome/Perfetto trace, with periodic queue-depth
+//!   and in-flight gauges; `ns-lbp trace` summarizes a feed and
+//!   `obs::json` is the crate-wide escaping JSON writer.
 //!
 //! Python appears only at build time (`make artifacts`); this crate is
 //! self-contained at runtime.
@@ -91,6 +97,7 @@ pub mod lbp;
 pub mod mapping;
 pub mod mlp;
 pub mod model;
+pub mod obs;
 pub mod params;
 pub mod rng;
 pub mod runtime;

@@ -17,7 +17,13 @@
 //!                 classes to backends, `--mix A:B:C` shapes the traffic
 //!                 across best_effort:standard:billed, `--compare` also
 //!                 runs the 1-shard baseline and prints the speedup, and
-//!                 `--json` emits one machine-readable report.
+//!                 `--json` emits one machine-readable report;
+//!                 `--trace out.jsonl` records the full request lifecycle
+//!                 as a JSONL span feed plus a Chrome/Perfetto
+//!                 `out.trace.json`.
+//! * `trace`     — summarize a JSONL trace feed (`ns-lbp trace out.jsonl`):
+//!                 per-stage p50/p95/p99 latency, energy by stage, drop
+//!                 causes; `--json` emits the summary machine-readably.
 //! * `ab`        — the A/B energy harness: run the same frames through
 //!                 two engines under two hardware profiles
 //!                 (`--profile A --profile B`) and print/`--json`-emit a
@@ -65,6 +71,7 @@ fn command() -> Command {
         .subcommand("run", "stream frames through the pipeline")
         .subcommand("serve-bench", "drive the sharded, batching serve layer")
         .subcommand("ab", "A/B energy harness: two hw profiles, same frames")
+        .subcommand("trace", "summarize a JSONL trace feed")
         .subcommand("profile", "print a hardware profile as TOML")
         .subcommand("transient", "Fig. 9 RBL discharge waveforms")
         .subcommand("montecarlo", "Fig. 10 sense-margin analysis")
@@ -92,6 +99,9 @@ fn command() -> Command {
                       "route a QoS class to a backend, e.g. billed=architectural")
         .opt("mix", "A:B:C",
              "serve-bench: best_effort:standard:billed traffic weights (default 0:1:0)")
+        .opt("trace", "FILE",
+             "serve-bench: write a JSONL trace feed (and FILE's .trace.json \
+              Chrome/Perfetto twin)")
         .flag("json", "serve-bench: emit one machine-readable JSON report")
         .flag("compare", "serve-bench: also run 1 shard, print speedup")
         .flag("arch-mlp", "simulate the MLP in-memory too")
@@ -111,6 +121,7 @@ fn real_main(args: &[String]) -> Result<()> {
         Some("run") => run_pipeline(&parsed, system),
         Some("serve-bench") => serve_bench(&parsed, system),
         Some("ab") => ab_compare(&parsed, system),
+        Some("trace") => trace_summary(&parsed),
         Some("profile") => dump_profile(&system),
         Some("transient") => transient(system),
         Some("montecarlo") => montecarlo(&parsed, system),
@@ -384,6 +395,13 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
     let mix = parse_mix(parsed.opt("mix").unwrap_or("0:1:0"))?;
 
     let mut system = system;
+    if let Some(path) = parsed.opt("trace") {
+        // --trace switches the obs pipeline on and points the feed at
+        // FILE (its Chrome twin lands next to it); with --compare the
+        // baseline run's feed is overwritten by the final run's
+        system.obs.enabled = true;
+        system.obs.jsonl_path = path.to_string();
+    }
     system.serve.shards = parsed.opt_parse("shards", system.serve.shards)?;
     system.serve.max_batch =
         parsed.opt_parse("batch-size", system.serve.max_batch)?;
@@ -501,6 +519,28 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
             r2.throughput_fps,
             r1.throughput_fps
         );
+    }
+    Ok(())
+}
+
+/// `ns-lbp trace FEED.jsonl [--json]`: summarize a trace feed captured
+/// with `serve-bench --trace` — per-stage latency percentiles, energy by
+/// stage, per-class outcomes, and drop causes, from the spans alone.
+fn trace_summary(parsed: &ns_lbp::cli::Parsed) -> Result<()> {
+    let path = parsed.positionals.first().ok_or_else(|| {
+        ns_lbp::Error::Usage(
+            "trace expects the feed path: ns-lbp trace TRACE.jsonl [--json]"
+                .into(),
+        )
+    })?;
+    let feed = std::fs::read_to_string(path).map_err(|e| {
+        ns_lbp::Error::Config(format!("cannot read {path}: {e}"))
+    })?;
+    let summary = ns_lbp::obs::summarize(&feed)?;
+    if parsed.flag("json") {
+        println!("{}", summary.to_json());
+    } else {
+        print!("{}", summary.render());
     }
     Ok(())
 }

@@ -1,0 +1,262 @@
+//! Minimal hand-rolled JSON emission and flat-object parsing shared by
+//! every JSON producer in the crate (metrics reports, bench harness,
+//! trace feed) — serde is unavailable offline.
+//!
+//! Two guarantees the ad-hoc `format!`-based emitters did not make:
+//!
+//! * **Strings are always escaped.**  [`escape_into`] handles `"`,
+//!   `\\`, the common control escapes, and everything else below
+//!   `0x20` as `\uXXXX`, so user-supplied text (an `[hw] profile`
+//!   path, a bench case name) can never break the document.
+//! * **Numbers are always valid JSON.**  [`push_f64`] never emits
+//!   `NaN` or `inf` (both illegal in JSON): non-finite values are
+//!   written as `0` — a sentinel the consumers treat as "absent" —
+//!   and finite values round-trip via Rust's shortest-representation
+//!   float formatting.
+
+/// Append `s` to `out` with JSON string escaping (no surrounding
+/// quotes).
+pub fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// JSON-escaped copy of `s` (no surrounding quotes).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    escape_into(&mut out, s);
+    out
+}
+
+/// Append `v` as a JSON number: finite values verbatim, non-finite
+/// values as `0` (JSON has no `NaN`/`inf`).
+pub fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        // Rust's float Display is shortest-roundtrip and never
+        // produces forms JSON would reject.
+        out.push_str(&format!("{v}"));
+    } else {
+        out.push('0');
+    }
+}
+
+/// A `"key":"escaped value",` pair (trailing comma included).
+pub fn push_str_field(out: &mut String, key: &str, v: &str) {
+    out.push('"');
+    escape_into(out, key);
+    out.push_str("\":\"");
+    escape_into(out, v);
+    out.push_str("\",");
+}
+
+/// A `"key":number,` pair (trailing comma included, non-finite → 0).
+pub fn push_f64_field(out: &mut String, key: &str, v: f64) {
+    out.push('"');
+    escape_into(out, key);
+    out.push_str("\":");
+    push_f64(out, v);
+    out.push(',');
+}
+
+/// A `"key":integer,` pair (trailing comma included).
+pub fn push_u64_field(out: &mut String, key: &str, v: u64) {
+    out.push('"');
+    escape_into(out, key);
+    out.push_str("\":");
+    out.push_str(&v.to_string());
+    out.push(',');
+}
+
+/// One field of a flat JSON object: every value is either a string or
+/// a number (the only two types the trace feed emits).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            Value::Num(_) => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(v) => Some(*v),
+            Value::Str(_) => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|v| *v >= 0.0).map(|v| v as u64)
+    }
+}
+
+/// Parse one *flat* JSON object — string or number values only, no
+/// nesting, no arrays, no booleans — the exact shape every trace-feed
+/// line has.  Returns key → value pairs; errors carry a short reason.
+pub fn parse_flat_object(line: &str)
+                         -> std::result::Result<Vec<(String, Value)>, String> {
+    let mut chars = line.trim().chars().peekable();
+    let mut out = Vec::new();
+    if chars.next() != Some('{') {
+        return Err("expected '{'".into());
+    }
+    loop {
+        skip_ws(&mut chars);
+        match chars.peek() {
+            Some('}') => {
+                chars.next();
+                break;
+            }
+            Some('"') => {}
+            _ => return Err("expected '\"' or '}'".into()),
+        }
+        let key = parse_string(&mut chars)?;
+        skip_ws(&mut chars);
+        if chars.next() != Some(':') {
+            return Err(format!("expected ':' after key {key:?}"));
+        }
+        skip_ws(&mut chars);
+        let value = match chars.peek() {
+            Some('"') => Value::Str(parse_string(&mut chars)?),
+            Some(c) if c.is_ascii_digit() || *c == '-' => {
+                let mut num = String::new();
+                while let Some(&c) = chars.peek() {
+                    if c.is_ascii_digit()
+                        || matches!(c, '-' | '+' | '.' | 'e' | 'E')
+                    {
+                        num.push(c);
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                Value::Num(
+                    num.parse::<f64>()
+                        .map_err(|_| format!("bad number {num:?}"))?,
+                )
+            }
+            _ => return Err(format!("unsupported value for key {key:?}")),
+        };
+        out.push((key, value));
+        skip_ws(&mut chars);
+        match chars.next() {
+            Some(',') => continue,
+            Some('}') => break,
+            _ => return Err("expected ',' or '}'".into()),
+        }
+    }
+    skip_ws(&mut chars);
+    if chars.next().is_some() {
+        return Err("trailing garbage after object".into());
+    }
+    Ok(out)
+}
+
+fn skip_ws(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) {
+    while chars.peek().is_some_and(|c| c.is_whitespace()) {
+        chars.next();
+    }
+}
+
+fn parse_string(chars: &mut std::iter::Peekable<std::str::Chars<'_>>)
+                -> std::result::Result<String, String> {
+    if chars.next() != Some('"') {
+        return Err("expected '\"'".into());
+    }
+    let mut s = String::new();
+    loop {
+        match chars.next() {
+            None => return Err("unterminated string".into()),
+            Some('"') => return Ok(s),
+            Some('\\') => match chars.next() {
+                Some('"') => s.push('"'),
+                Some('\\') => s.push('\\'),
+                Some('/') => s.push('/'),
+                Some('n') => s.push('\n'),
+                Some('r') => s.push('\r'),
+                Some('t') => s.push('\t'),
+                Some('b') => s.push('\u{8}'),
+                Some('f') => s.push('\u{c}'),
+                Some('u') => {
+                    let hex: String = (0..4)
+                        .filter_map(|_| chars.next())
+                        .collect();
+                    let code = u32::from_str_radix(&hex, 16)
+                        .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                    s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                }
+                other => return Err(format!("bad escape {other:?}")),
+            },
+            Some(c) => s.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_quotes_backslashes_and_controls() {
+        assert_eq!(escape(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(escape("line\nfeed\ttab"), "line\\nfeed\\ttab");
+        assert_eq!(escape("\u{1}"), "\\u0001");
+        assert_eq!(escape("plain/path.toml"), "plain/path.toml");
+    }
+
+    #[test]
+    fn non_finite_floats_become_zero() {
+        let mut s = String::new();
+        push_f64(&mut s, f64::NAN);
+        push_f64(&mut s, f64::INFINITY);
+        push_f64(&mut s, f64::NEG_INFINITY);
+        assert_eq!(s, "000");
+        s.clear();
+        push_f64(&mut s, 1.5);
+        assert_eq!(s, "1.5");
+    }
+
+    #[test]
+    fn flat_object_roundtrip() {
+        let mut line = String::from("{");
+        push_str_field(&mut line, "kind", "infer");
+        push_str_field(&mut line, "path", "a\"b\\c");
+        push_u64_field(&mut line, "ts_ns", 12345);
+        push_f64_field(&mut line, "value", -2.5);
+        line.pop();
+        line.push('}');
+        let fields = parse_flat_object(&line).unwrap();
+        let get = |k: &str| {
+            fields.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone())
+        };
+        assert_eq!(get("kind"), Some(Value::Str("infer".into())));
+        assert_eq!(get("path"), Some(Value::Str("a\"b\\c".into())));
+        assert_eq!(get("ts_ns").unwrap().as_u64(), Some(12345));
+        assert_eq!(get("value").unwrap().as_f64(), Some(-2.5));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_lines() {
+        assert!(parse_flat_object("not json").is_err());
+        assert!(parse_flat_object("{\"a\":").is_err());
+        assert!(parse_flat_object("{\"a\":1} extra").is_err());
+        assert!(parse_flat_object("{\"a\":[1]}").is_err());
+        assert!(parse_flat_object("{}").is_ok());
+    }
+}

@@ -1,0 +1,1110 @@
+//! Observability: end-to-end request tracing and live gauges for the
+//! serve plane.
+//!
+//! Near-sensor designs justify themselves on *per-stage* time/energy
+//! budgets — sensing, in-SRAM compute, transmission — so the
+//! reproduction exposes the same decomposition live instead of only as
+//! an end-of-run [`crate::serve::MetricsReport`].  Every stage of a
+//! request's life (admission, queue wait, batch formation, shard
+//! dispatch, backend phases, completion/drop) emits a [`TraceEvent`]
+//! stamped with monotonic timestamps, the request identity
+//! (class/sensor/seq), the batch and shard that carried it, and —
+//! on dispatch spans — the [`crate::hw::Cost`] energy attribution
+//! pulled from [`crate::engine::Telemetry`].
+//!
+//! The design constraint is the hot path PR 5 made allocation-free:
+//! [`Tracer::emit`] never blocks and never allocates.  Events go into a
+//! preallocated bounded ring ([`Tracer`] holds it behind a mutex whose
+//! critical section is a few stores); when the ring is full the event
+//! is counted in `events_dropped` and discarded — the feed degrades,
+//! the serve plane does not.  A disabled tracer (the default) reduces
+//! every instrumentation site to one branch.
+//!
+//! A background exporter thread ([`TraceSession`]) drains the ring into
+//! (a) a streaming JSONL feed — one flat object per line, parseable by
+//! [`json::parse_flat_object`] and `scripts/trace_check.py` — and
+//! (b) a Chrome trace-event file loadable in Perfetto, and periodically
+//! samples queue-depth / in-flight gauges per class.  See
+//! `EXPERIMENTS.md` §Tracing for the field glossary and capture
+//! workflow.
+
+pub mod json;
+
+use std::collections::HashSet;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::engine::{BackendKind, QosClass};
+use crate::error::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// `[obs]` config section: tracing knobs (see `configs/nslbp_default.toml`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Master switch; `serve-bench --trace PATH` flips it on.
+    pub enabled: bool,
+    /// Ring-buffer capacity in events; overflow increments
+    /// `events_dropped` instead of blocking producers.
+    pub ring_capacity: usize,
+    /// Gauge sample period in microseconds (queue depth / in-flight).
+    pub sample_period_us: u64,
+    /// JSONL sink path; the Chrome trace lands next to it
+    /// (`foo.jsonl` → `foo.trace.json`).
+    pub jsonl_path: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            ring_capacity: 65_536,
+            sample_period_us: 10_000,
+            jsonl_path: "trace.jsonl".into(),
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Path of the Chrome trace-event file derived from the JSONL sink.
+    pub fn chrome_path(&self) -> String {
+        let base = self
+            .jsonl_path
+            .strip_suffix(".jsonl")
+            .unwrap_or(&self.jsonl_path);
+        format!("{base}.trace.json")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// What a [`TraceEvent`] records.  Span kinds carry a non-zero
+/// `dur_ns`; instant kinds have `dur_ns == 0`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request admitted by `Server::submit` (instant).
+    Submit,
+    /// Request refused at admission (instant; `label` = cause).
+    Reject,
+    /// Queue wait: admission → batch seal (span).
+    Queue,
+    /// Batch formation window in the batcher (span; `label` = flush
+    /// reason, `value` = batch size).
+    Batch,
+    /// One `Engine::infer_batch` dispatch on a shard (span; carries the
+    /// telemetry energy decomposition and modeled time).
+    Infer,
+    /// A backend-internal phase within a dispatch (span; `label` =
+    /// `lbp` / `mlp` / `cross_check`).
+    Phase,
+    /// Request fulfilled; `dur_ns` is the exact end-to-end latency the
+    /// metrics reservoir records (span from admission).
+    Complete,
+    /// Queued request displaced by drop-oldest admission (instant).
+    Drop,
+    /// Per-request deadline expired before dispatch (instant).
+    Expire,
+    /// Backend failure fanned out to the request (instant).
+    Fail,
+    /// Periodic sampler output (`label` = gauge name, `value` = level).
+    Gauge,
+}
+
+impl EventKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Reject => "reject",
+            EventKind::Queue => "queue",
+            EventKind::Batch => "batch",
+            EventKind::Infer => "infer",
+            EventKind::Phase => "phase",
+            EventKind::Complete => "complete",
+            EventKind::Drop => "drop",
+            EventKind::Expire => "expire",
+            EventKind::Fail => "fail",
+            EventKind::Gauge => "gauge",
+        }
+    }
+
+    /// True for kinds scoped to one request (they carry sensor/seq).
+    fn per_request(self) -> bool {
+        matches!(
+            self,
+            EventKind::Submit
+                | EventKind::Reject
+                | EventKind::Queue
+                | EventKind::Complete
+                | EventKind::Drop
+                | EventKind::Expire
+                | EventKind::Fail
+        )
+    }
+}
+
+/// One trace record.  Flat and `Copy` so the ring is a preallocated
+/// `Vec<TraceEvent>` written in place — no allocation on emit.
+/// Timestamps are nanoseconds since the tracer's epoch (monotonic).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub kind: EventKind,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub class: Option<QosClass>,
+    pub sensor_id: u32,
+    pub seq: u64,
+    /// Batch correlation id (ids start at 1; 0 = not batched).
+    pub batch_id: u64,
+    /// Shard index (−1 = not on a shard).
+    pub shard: i32,
+    pub backend: Option<BackendKind>,
+    /// Flush reason / drop cause / phase name / gauge name.
+    pub label: &'static str,
+    /// Gauge level or batch size.
+    pub value: f64,
+    /// Energy attribution (dispatch spans): sensing stage.
+    pub sensor_pj: f64,
+    /// In-SRAM compute stage (compute + row read/write + control).
+    pub compute_pj: f64,
+    /// Near-memory DPU stage.
+    pub dpu_pj: f64,
+    /// Off-chip transmission stage.
+    pub tx_pj: f64,
+    /// Modeled (cost-model) time for the dispatch, ns.
+    pub modeled_ns: u64,
+}
+
+impl Default for TraceEvent {
+    fn default() -> Self {
+        Self {
+            kind: EventKind::Gauge,
+            ts_ns: 0,
+            dur_ns: 0,
+            class: None,
+            sensor_id: 0,
+            seq: 0,
+            batch_id: 0,
+            shard: -1,
+            backend: None,
+            label: "",
+            value: 0.0,
+            sensor_pj: 0.0,
+            compute_pj: 0.0,
+            dpu_pj: 0.0,
+            tx_pj: 0.0,
+            modeled_ns: 0,
+        }
+    }
+}
+
+impl TraceEvent {
+    /// The event as one flat JSON object (no trailing newline).
+    /// Fields that are "not applicable" for the kind are omitted so
+    /// the feed stays compact; `scripts/trace_check.py` and
+    /// [`summarize`] treat missing keys as absent.
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::with_capacity(128);
+        s.push('{');
+        json::push_str_field(&mut s, "kind", self.kind.as_str());
+        json::push_u64_field(&mut s, "ts_ns", self.ts_ns);
+        if self.dur_ns > 0 {
+            json::push_u64_field(&mut s, "dur_ns", self.dur_ns);
+        }
+        if let Some(c) = self.class {
+            json::push_str_field(&mut s, "class", c.as_str());
+        }
+        if self.kind.per_request() {
+            json::push_u64_field(&mut s, "sensor_id", self.sensor_id as u64);
+            json::push_u64_field(&mut s, "seq", self.seq);
+        }
+        if self.batch_id > 0 {
+            json::push_u64_field(&mut s, "batch_id", self.batch_id);
+        }
+        if self.shard >= 0 {
+            json::push_u64_field(&mut s, "shard", self.shard as u64);
+        }
+        if let Some(b) = self.backend {
+            json::push_str_field(&mut s, "backend", b.as_str());
+        }
+        if !self.label.is_empty() {
+            json::push_str_field(&mut s, "label", self.label);
+        }
+        if matches!(self.kind, EventKind::Gauge | EventKind::Batch) {
+            json::push_f64_field(&mut s, "value", self.value);
+        }
+        if self.kind == EventKind::Infer {
+            json::push_f64_field(&mut s, "sensor_pj", self.sensor_pj);
+            json::push_f64_field(&mut s, "compute_pj", self.compute_pj);
+            json::push_f64_field(&mut s, "dpu_pj", self.dpu_pj);
+            json::push_f64_field(&mut s, "tx_pj", self.tx_pj);
+            json::push_u64_field(&mut s, "modeled_ns", self.modeled_ns);
+        }
+        s.pop(); // trailing comma
+        s.push('}');
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tracer: the lock-cheap bounded ring
+// ---------------------------------------------------------------------------
+
+struct Ring {
+    buf: Vec<TraceEvent>,
+    head: usize,
+    len: usize,
+}
+
+struct TracerCore {
+    epoch: Instant,
+    ring: Mutex<Ring>,
+    dropped: AtomicU64,
+    next_batch: AtomicU64,
+}
+
+/// Shared handle to the trace ring.  `Clone` is an `Arc` bump;
+/// `Default` is the *disabled* tracer, whose [`Tracer::emit`] is a
+/// single branch — the hot path pays nothing when tracing is off.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<TracerCore>>);
+
+impl Tracer {
+    /// An enabled tracer with a preallocated `capacity`-event ring.
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(16);
+        Tracer(Some(Arc::new(TracerCore {
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring {
+                buf: vec![TraceEvent::default(); capacity],
+                head: 0,
+                len: 0,
+            }),
+            dropped: AtomicU64::new(0),
+            next_batch: AtomicU64::new(1),
+        })))
+    }
+
+    /// The disabled tracer (same as `Default`).
+    pub fn disabled() -> Self {
+        Tracer(None)
+    }
+
+    /// False for the disabled tracer — instrumentation sites guard
+    /// their timestamp reads and event construction behind this.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Nanoseconds from the tracer epoch to `at` (saturating: an
+    /// `Instant` captured before the epoch maps to 0).  Disabled → 0.
+    #[inline]
+    pub fn ts(&self, at: Instant) -> u64 {
+        match &self.0 {
+            Some(core) => {
+                at.saturating_duration_since(core.epoch).as_nanos() as u64
+            }
+            None => 0,
+        }
+    }
+
+    /// Nanoseconds from the tracer epoch to now.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.ts(Instant::now())
+    }
+
+    /// Record `ev` into the ring.  Never blocks, never allocates: a
+    /// full ring drops the event and bumps `events_dropped`.
+    #[inline]
+    pub fn emit(&self, ev: TraceEvent) {
+        let Some(core) = &self.0 else { return };
+        let mut g = core.ring.lock().unwrap();
+        if g.len == g.buf.len() {
+            drop(g);
+            core.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let cap = g.buf.len();
+        let idx = (g.head + g.len) % cap;
+        g.buf[idx] = ev;
+        g.len += 1;
+    }
+
+    /// Allocate a batch correlation id (monotonic, starting at 1).
+    /// Disabled → 0 ("not batched" sentinel).
+    pub fn next_batch_id(&self) -> u64 {
+        match &self.0 {
+            Some(core) => core.next_batch.fetch_add(1, Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Events discarded because the ring was full.
+    pub fn events_dropped(&self) -> u64 {
+        match &self.0 {
+            Some(core) => core.dropped.load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Move every buffered event into `out` (exporter side).
+    pub fn drain_into(&self, out: &mut Vec<TraceEvent>) {
+        let Some(core) = &self.0 else { return };
+        let mut g = core.ring.lock().unwrap();
+        let cap = g.buf.len();
+        for i in 0..g.len {
+            out.push(g.buf[(g.head + i) % cap]);
+        }
+        g.head = 0;
+        g.len = 0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exporter session
+// ---------------------------------------------------------------------------
+
+/// Background exporter: owns the tracer, drains the ring into the
+/// JSONL feed and the Chrome trace file, and runs the periodic gauge
+/// sampler.  Created by `Server::start` when `[obs] enabled`;
+/// [`TraceSession::finish`] (after the worker pool drains) flushes the
+/// tail, emits the final `events_dropped` gauge, and closes both files.
+pub struct TraceSession {
+    tracer: Tracer,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl TraceSession {
+    /// Start the exporter.  `gauges` is invoked every
+    /// `sample_period_us` on the exporter thread and should emit
+    /// [`EventKind::Gauge`] events for whatever levels it can observe
+    /// (queue depths, in-flight counts).
+    pub fn start<G>(cfg: &ObsConfig, gauges: G) -> Result<TraceSession>
+    where
+        G: Fn(&Tracer) + Send + 'static,
+    {
+        if !cfg.enabled {
+            return Ok(TraceSession {
+                tracer: Tracer::disabled(),
+                stop: Arc::new(AtomicBool::new(false)),
+                handle: None,
+            });
+        }
+        let tracer = Tracer::new(cfg.ring_capacity);
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut jsonl = std::io::BufWriter::new(
+            std::fs::File::create(&cfg.jsonl_path).map_err(Error::Io)?,
+        );
+        let mut chrome = ChromeWriter::create(&cfg.chrome_path())?;
+        let sample_period = Duration::from_micros(cfg.sample_period_us.max(1));
+        let exporter = {
+            let tracer = tracer.clone();
+            let stop = Arc::clone(&stop);
+            move || -> Result<()> {
+                let mut buf: Vec<TraceEvent> = Vec::with_capacity(1024);
+                let mut last_sample = Instant::now();
+                gauges(&tracer); // one sample at t=0
+                loop {
+                    let stopping = stop.load(Ordering::Acquire);
+                    if stopping || last_sample.elapsed() >= sample_period {
+                        gauges(&tracer);
+                        last_sample = Instant::now();
+                    }
+                    if stopping {
+                        // producers are done (the pool joined before
+                        // finish()): account the overflow, then drain
+                        let ev = TraceEvent {
+                            kind: EventKind::Gauge,
+                            ts_ns: tracer.now(),
+                            label: "events_dropped",
+                            value: tracer.events_dropped() as f64,
+                            ..TraceEvent::default()
+                        };
+                        tracer.emit(ev);
+                    }
+                    buf.clear();
+                    tracer.drain_into(&mut buf);
+                    for ev in &buf {
+                        jsonl
+                            .write_all(ev.to_jsonl().as_bytes())
+                            .and_then(|()| jsonl.write_all(b"\n"))
+                            .map_err(Error::Io)?;
+                        chrome.record(ev)?;
+                    }
+                    if stopping {
+                        jsonl.flush().map_err(Error::Io)?;
+                        chrome.finish()?;
+                        return Ok(());
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        };
+        let handle = std::thread::Builder::new()
+            .name("nslbp-trace-export".into())
+            .spawn(exporter)
+            .map_err(Error::Io)?;
+        Ok(TraceSession { tracer, stop, handle: Some(handle) })
+    }
+
+    /// Handle for instrumentation sites (cheap clone; disabled when
+    /// the session is disabled).
+    pub fn tracer(&self) -> Tracer {
+        self.tracer.clone()
+    }
+
+    /// Stop the exporter after a final drain and close the sinks.
+    /// Call once every producer thread has finished.
+    pub fn finish(mut self) -> Result<()> {
+        self.stop.store(true, Ordering::Release);
+        match self.handle.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| Error::Serve("trace exporter panicked".into()))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for TraceSession {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event output
+// ---------------------------------------------------------------------------
+
+/// Streaming Chrome trace-event (JSON array) writer.  Perfetto and
+/// `chrome://tracing` both load the result.  Track layout:
+///
+/// * `sensor-<id>`  — per-request spans/instants (submit, queue,
+///   request/<class>, drops); requests from one sensor are sequential,
+///   so the track nests cleanly,
+/// * `batcher-<class>` — batch-formation spans,
+/// * `shard-<n>`    — dispatch spans with backend phases nested inside,
+/// * counters       — queue depth / in-flight / events_dropped gauges.
+struct ChromeWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    first: bool,
+    named_tids: HashSet<u64>,
+    line: String,
+}
+
+impl ChromeWriter {
+    fn create(path: &str) -> Result<Self> {
+        let mut out = std::io::BufWriter::new(
+            std::fs::File::create(path).map_err(Error::Io)?,
+        );
+        out.write_all(b"[\n").map_err(Error::Io)?;
+        Ok(Self { out, first: true, named_tids: HashSet::new(), line:
+            String::with_capacity(256) })
+    }
+
+    fn tid(ev: &TraceEvent) -> u64 {
+        match ev.kind {
+            EventKind::Batch => {
+                2000 + ev.class.map_or(0, |c| c.index() as u64)
+            }
+            EventKind::Infer | EventKind::Phase => {
+                3000 + ev.shard.max(0) as u64
+            }
+            EventKind::Gauge => 0,
+            _ => 1000 + ev.sensor_id as u64,
+        }
+    }
+
+    fn track_name(ev: &TraceEvent) -> String {
+        match ev.kind {
+            EventKind::Batch => format!(
+                "batcher-{}",
+                ev.class.map_or("?", |c| c.as_str())
+            ),
+            EventKind::Infer | EventKind::Phase => {
+                format!("shard-{}", ev.shard.max(0))
+            }
+            _ => format!("sensor-{}", ev.sensor_id),
+        }
+    }
+
+    fn record(&mut self, ev: &TraceEvent) -> Result<()> {
+        let tid = Self::tid(ev);
+        if ev.kind != EventKind::Gauge && self.named_tids.insert(tid) {
+            let name = Self::track_name(ev);
+            self.emit_raw(&format!(
+                "{{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+                 \"name\":\"thread_name\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                json::escape(&name)
+            ))?;
+        }
+        let ts_us = ev.ts_ns as f64 / 1e3;
+        let dur_us = ev.dur_ns as f64 / 1e3;
+        let mut line = std::mem::take(&mut self.line);
+        line.clear();
+        line.push('{');
+        match ev.kind {
+            EventKind::Gauge => {
+                let name = match ev.class {
+                    Some(c) => format!("{}/{}", ev.label, c.as_str()),
+                    None => ev.label.to_string(),
+                };
+                json::push_str_field(&mut line, "ph", "C");
+                json::push_u64_field(&mut line, "pid", 1);
+                json::push_str_field(&mut line, "name", &name);
+                json::push_f64_field(&mut line, "ts", ts_us);
+                line.push_str("\"args\":{\"value\":");
+                json::push_f64(&mut line, ev.value);
+                line.push_str("},");
+            }
+            EventKind::Queue | EventKind::Batch | EventKind::Infer
+            | EventKind::Phase | EventKind::Complete => {
+                let name = match ev.kind {
+                    EventKind::Queue => "queue".to_string(),
+                    EventKind::Batch => format!(
+                        "batch/{}",
+                        ev.label
+                    ),
+                    EventKind::Infer => format!(
+                        "infer/{}",
+                        ev.backend.map_or("?", |b| b.as_str())
+                    ),
+                    EventKind::Phase => ev.label.to_string(),
+                    _ => format!(
+                        "request/{}",
+                        ev.class.map_or("?", |c| c.as_str())
+                    ),
+                };
+                json::push_str_field(&mut line, "ph", "X");
+                json::push_u64_field(&mut line, "pid", 1);
+                json::push_u64_field(&mut line, "tid", tid);
+                json::push_str_field(&mut line, "name", &name);
+                json::push_f64_field(&mut line, "ts", ts_us);
+                json::push_f64_field(&mut line, "dur", dur_us);
+                line.push_str("\"args\":{");
+                if ev.batch_id > 0 {
+                    json::push_u64_field(&mut line, "batch_id", ev.batch_id);
+                }
+                if ev.kind == EventKind::Batch {
+                    json::push_f64_field(&mut line, "size", ev.value);
+                }
+                if ev.kind == EventKind::Infer {
+                    json::push_f64_field(&mut line, "sensor_pj",
+                                         ev.sensor_pj);
+                    json::push_f64_field(&mut line, "compute_pj",
+                                         ev.compute_pj);
+                    json::push_f64_field(&mut line, "dpu_pj", ev.dpu_pj);
+                    json::push_f64_field(&mut line, "tx_pj", ev.tx_pj);
+                    json::push_u64_field(&mut line, "modeled_ns",
+                                         ev.modeled_ns);
+                }
+                if line.ends_with(',') {
+                    line.pop();
+                }
+                line.push_str("},");
+            }
+            _ => {
+                // instants: submit / reject / drop / expire / fail
+                let name = if ev.label.is_empty() {
+                    ev.kind.as_str().to_string()
+                } else {
+                    format!("{}:{}", ev.kind.as_str(), ev.label)
+                };
+                json::push_str_field(&mut line, "ph", "i");
+                json::push_u64_field(&mut line, "pid", 1);
+                json::push_u64_field(&mut line, "tid", tid);
+                json::push_str_field(&mut line, "name", &name);
+                json::push_f64_field(&mut line, "ts", ts_us);
+                json::push_str_field(&mut line, "s", "t");
+            }
+        }
+        line.pop(); // trailing comma
+        line.push('}');
+        let res = self.emit_raw(&line);
+        self.line = line;
+        res
+    }
+
+    fn emit_raw(&mut self, record: &str) -> Result<()> {
+        if !self.first {
+            self.out.write_all(b",\n").map_err(Error::Io)?;
+        }
+        self.first = false;
+        self.out.write_all(record.as_bytes()).map_err(Error::Io)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.out.write_all(b"\n]\n").map_err(Error::Io)?;
+        self.out.flush().map_err(Error::Io)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Feed summary (`ns-lbp trace`)
+// ---------------------------------------------------------------------------
+
+/// Per-stage latency and energy summary of one JSONL trace feed.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    /// Completed / rejected / dropped / expired / failed per class
+    /// (indexed by `QosClass::index()`).
+    pub completed: [u64; QosClass::COUNT],
+    pub rejected: [u64; QosClass::COUNT],
+    pub dropped: [u64; QosClass::COUNT],
+    pub expired: [u64; QosClass::COUNT],
+    pub failed: [u64; QosClass::COUNT],
+    /// Queue-wait percentiles over all Queue spans, ns: (p50, p95, p99).
+    pub queue_ns: (u64, u64, u64),
+    /// Dispatch percentiles over all Infer spans, ns.
+    pub infer_ns: (u64, u64, u64),
+    /// End-to-end percentiles over all Complete spans, ns.
+    pub e2e_ns: (u64, u64, u64),
+    /// Per-class end-to-end percentiles, ns.
+    pub e2e_ns_by_class: [(u64, u64, u64); QosClass::COUNT],
+    /// Energy by pipeline stage summed over Infer spans, pJ:
+    /// (sensing, in-SRAM compute, DPU, transmission).
+    pub energy_pj: (f64, f64, f64, f64),
+    /// Modeled (cost-model) time summed over Infer spans, ns.
+    pub modeled_ns: u64,
+    /// Drop/reject causes: (label, count), sorted by count desc.
+    pub causes: Vec<(String, u64)>,
+    /// Events the ring discarded (final `events_dropped` gauge).
+    pub events_dropped: u64,
+    /// Total feed lines parsed.
+    pub lines: u64,
+}
+
+impl TraceSummary {
+    fn tri_json(t: (u64, u64, u64)) -> String {
+        format!("{{\"p50_ns\":{},\"p95_ns\":{},\"p99_ns\":{}}}",
+                t.0, t.1, t.2)
+    }
+
+    /// Machine-readable form (used by CI's p99 cross-check).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{");
+        json::push_u64_field(&mut s, "lines", self.lines);
+        json::push_u64_field(&mut s, "events_dropped", self.events_dropped);
+        s.push_str(&format!("\"queue\":{},", Self::tri_json(self.queue_ns)));
+        s.push_str(&format!("\"infer\":{},", Self::tri_json(self.infer_ns)));
+        s.push_str(&format!("\"e2e\":{},", Self::tri_json(self.e2e_ns)));
+        s.push_str("\"classes\":{");
+        for class in QosClass::ALL {
+            let i = class.index();
+            s.push('"');
+            s.push_str(class.as_str());
+            s.push_str("\":{");
+            json::push_u64_field(&mut s, "completed", self.completed[i]);
+            json::push_u64_field(&mut s, "rejected", self.rejected[i]);
+            json::push_u64_field(&mut s, "dropped", self.dropped[i]);
+            json::push_u64_field(&mut s, "expired", self.expired[i]);
+            json::push_u64_field(&mut s, "failed", self.failed[i]);
+            s.push_str(&format!("\"e2e\":{}",
+                                Self::tri_json(self.e2e_ns_by_class[i])));
+            s.push_str("},");
+        }
+        s.pop();
+        s.push_str("},");
+        s.push_str("\"energy_pj\":{");
+        json::push_f64_field(&mut s, "sensor", self.energy_pj.0);
+        json::push_f64_field(&mut s, "compute", self.energy_pj.1);
+        json::push_f64_field(&mut s, "dpu", self.energy_pj.2);
+        json::push_f64_field(&mut s, "transmission", self.energy_pj.3);
+        s.pop();
+        s.push_str("},");
+        json::push_u64_field(&mut s, "modeled_ns", self.modeled_ns);
+        s.push_str("\"causes\":{");
+        for (label, n) in &self.causes {
+            json::push_u64_field(&mut s, label, *n);
+        }
+        if s.ends_with(',') {
+            s.pop();
+        }
+        s.push_str("}}");
+        s
+    }
+
+    /// Human-readable rendering (the `ns-lbp trace` default output).
+    pub fn render(&self) -> String {
+        fn ms(t: (u64, u64, u64)) -> String {
+            format!("p50 {:8.3} ms   p95 {:8.3} ms   p99 {:8.3} ms",
+                    t.0 as f64 / 1e6, t.1 as f64 / 1e6, t.2 as f64 / 1e6)
+        }
+        let mut s = String::new();
+        s.push_str(&format!("trace: {} events parsed, {} dropped by the \
+                             ring\n\n", self.lines, self.events_dropped));
+        s.push_str("per-stage latency\n");
+        s.push_str(&format!("  queue    {}\n", ms(self.queue_ns)));
+        s.push_str(&format!("  infer    {}\n", ms(self.infer_ns)));
+        s.push_str(&format!("  e2e      {}\n\n", ms(self.e2e_ns)));
+        s.push_str("per-class\n");
+        for class in QosClass::ALL {
+            let i = class.index();
+            let total = self.completed[i] + self.rejected[i]
+                + self.dropped[i] + self.expired[i] + self.failed[i];
+            if total == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "  {:<11} {:>6} ok  {:>4} rej  {:>4} drop  {:>4} exp  \
+                 {:>4} fail   e2e {}\n",
+                class.as_str(), self.completed[i], self.rejected[i],
+                self.dropped[i], self.expired[i], self.failed[i],
+                ms(self.e2e_ns_by_class[i])
+            ));
+        }
+        let (sn, cp, dp, tx) = self.energy_pj;
+        let total = sn + cp + dp + tx;
+        s.push_str("\nenergy by stage (modeled)\n");
+        if total > 0.0 {
+            s.push_str(&format!(
+                "  sensing      {:>14.1} pJ  ({:4.1}%)\n  in-SRAM      \
+                 {:>14.1} pJ  ({:4.1}%)\n  DPU          {:>14.1} pJ  \
+                 ({:4.1}%)\n  transmission {:>14.1} pJ  ({:4.1}%)\n",
+                sn, 100.0 * sn / total, cp, 100.0 * cp / total,
+                dp, 100.0 * dp / total, tx, 100.0 * tx / total
+            ));
+            s.push_str(&format!("  modeled dispatch time {:>11.3} ms\n",
+                                self.modeled_ns as f64 / 1e6));
+        } else {
+            s.push_str("  (no dispatch spans in feed)\n");
+        }
+        if !self.causes.is_empty() {
+            s.push_str("\ndrop/reject causes\n");
+            for (label, n) in &self.causes {
+                s.push_str(&format!("  {label:<28} {n:>6}\n"));
+            }
+        }
+        s
+    }
+}
+
+/// Parse a JSONL trace feed and summarize it (per-stage percentiles,
+/// energy by stage, drop causes).  Unparseable lines are an error —
+/// the feed is machine-written, so corruption should be loud.
+pub fn summarize(feed: &str) -> Result<TraceSummary> {
+    use crate::serve::percentile_ns;
+
+    let mut sm = TraceSummary::default();
+    let mut queue: Vec<u64> = Vec::new();
+    let mut infer: Vec<u64> = Vec::new();
+    let mut e2e: Vec<u64> = Vec::new();
+    let mut e2e_class: [Vec<u64>; QosClass::COUNT] = Default::default();
+    let mut causes: std::collections::HashMap<String, u64> =
+        std::collections::HashMap::new();
+    for (lineno, line) in feed.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields = json::parse_flat_object(line).map_err(|e| {
+            Error::Config(format!("trace feed line {}: {e}", lineno + 1))
+        })?;
+        let get = |k: &str| {
+            fields.iter().find(|(key, _)| key == k).map(|(_, v)| v)
+        };
+        let kind = get("kind").and_then(|v| v.as_str()).ok_or_else(|| {
+            Error::Config(format!("trace feed line {}: no kind", lineno + 1))
+        })?;
+        let class = get("class")
+            .and_then(|v| v.as_str())
+            .and_then(|s| s.parse::<QosClass>().ok());
+        let dur = get("dur_ns").and_then(|v| v.as_u64()).unwrap_or(0);
+        let label = get("label").and_then(|v| v.as_str()).unwrap_or("");
+        sm.lines += 1;
+        match kind {
+            "queue" => queue.push(dur),
+            "infer" => {
+                infer.push(dur);
+                let f = |k: &str| {
+                    get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+                };
+                sm.energy_pj.0 += f("sensor_pj");
+                sm.energy_pj.1 += f("compute_pj");
+                sm.energy_pj.2 += f("dpu_pj");
+                sm.energy_pj.3 += f("tx_pj");
+                sm.modeled_ns +=
+                    get("modeled_ns").and_then(|v| v.as_u64()).unwrap_or(0);
+            }
+            "complete" => {
+                e2e.push(dur);
+                if let Some(c) = class {
+                    sm.completed[c.index()] += 1;
+                    e2e_class[c.index()].push(dur);
+                }
+            }
+            "reject" => {
+                if let Some(c) = class {
+                    sm.rejected[c.index()] += 1;
+                }
+                *causes.entry(format!("reject:{label}")).or_insert(0) += 1;
+            }
+            "drop" => {
+                if let Some(c) = class {
+                    sm.dropped[c.index()] += 1;
+                }
+                *causes.entry(format!("drop:{label}")).or_insert(0) += 1;
+            }
+            "expire" => {
+                if let Some(c) = class {
+                    sm.expired[c.index()] += 1;
+                }
+                *causes.entry(format!("expire:{label}")).or_insert(0) += 1;
+            }
+            "fail" => {
+                if let Some(c) = class {
+                    sm.failed[c.index()] += 1;
+                }
+                *causes.entry(format!("fail:{label}")).or_insert(0) += 1;
+            }
+            "gauge" if label == "events_dropped" => {
+                sm.events_dropped =
+                    get("value").and_then(|v| v.as_u64()).unwrap_or(0);
+            }
+            _ => {}
+        }
+    }
+    let tri = |v: &mut Vec<u64>| {
+        v.sort_unstable();
+        (percentile_ns(v, 0.50), percentile_ns(v, 0.95),
+         percentile_ns(v, 0.99))
+    };
+    sm.queue_ns = tri(&mut queue);
+    sm.infer_ns = tri(&mut infer);
+    sm.e2e_ns = tri(&mut e2e);
+    for (i, v) in e2e_class.iter_mut().enumerate() {
+        sm.e2e_ns_by_class[i] = tri(v);
+    }
+    sm.causes = {
+        let mut v: Vec<(String, u64)> = causes.into_iter().collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        v
+    };
+    Ok(sm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_inert() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        assert_eq!(t.now(), 0);
+        assert_eq!(t.next_batch_id(), 0);
+        t.emit(TraceEvent::default());
+        assert_eq!(t.events_dropped(), 0);
+        let mut out = Vec::new();
+        t.drain_into(&mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn ring_overflow_drops_and_counts_without_corruption() {
+        let t = Tracer::new(16);
+        for i in 0..40u64 {
+            t.emit(TraceEvent {
+                kind: EventKind::Submit,
+                ts_ns: i,
+                seq: i,
+                ..TraceEvent::default()
+            });
+        }
+        assert_eq!(t.events_dropped(), 40 - 16);
+        let mut out = Vec::new();
+        t.drain_into(&mut out);
+        // the *oldest* 16 survive (drop-newest overflow): the feed stays
+        // a clean prefix, and every surviving line still parses
+        assert_eq!(out.len(), 16);
+        for (i, ev) in out.iter().enumerate() {
+            assert_eq!(ev.seq, i as u64);
+            assert!(json::parse_flat_object(&ev.to_jsonl()).is_ok());
+        }
+        // the ring is reusable after a drain
+        t.emit(TraceEvent::default());
+        out.clear();
+        t.drain_into(&mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn batch_ids_are_unique_and_start_at_one() {
+        let t = Tracer::new(16);
+        assert_eq!(t.next_batch_id(), 1);
+        assert_eq!(t.next_batch_id(), 2);
+        let t2 = t.clone();
+        assert_eq!(t2.next_batch_id(), 3);
+    }
+
+    #[test]
+    fn timestamps_are_monotonic_and_saturating() {
+        let before = Instant::now();
+        let t = Tracer::new(16);
+        assert_eq!(t.ts(before), 0); // pre-epoch saturates
+        let a = t.now();
+        let b = t.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn jsonl_roundtrips_through_flat_parser() {
+        let ev = TraceEvent {
+            kind: EventKind::Infer,
+            ts_ns: 1_000,
+            dur_ns: 500,
+            class: Some(QosClass::Billed),
+            batch_id: 7,
+            shard: 2,
+            backend: Some(BackendKind::Architectural),
+            sensor_pj: 12.5,
+            compute_pj: 100.0,
+            dpu_pj: 3.25,
+            tx_pj: 8.0,
+            modeled_ns: 42,
+            ..TraceEvent::default()
+        };
+        let fields = json::parse_flat_object(&ev.to_jsonl()).unwrap();
+        let get = |k: &str| {
+            fields.iter().find(|(key, _)| key == k).map(|(_, v)| v.clone())
+        };
+        assert_eq!(get("kind").unwrap().as_str(), Some("infer"));
+        assert_eq!(get("class").unwrap().as_str(), Some("billed"));
+        assert_eq!(get("batch_id").unwrap().as_u64(), Some(7));
+        assert_eq!(get("shard").unwrap().as_u64(), Some(2));
+        assert_eq!(get("compute_pj").unwrap().as_f64(), Some(100.0));
+        assert_eq!(get("modeled_ns").unwrap().as_u64(), Some(42));
+        // per-request identity is omitted for non-request kinds
+        assert!(get("sensor_id").is_none());
+    }
+
+    #[test]
+    fn summarize_computes_counts_and_percentiles() {
+        let mut feed = String::new();
+        for i in 1..=100u64 {
+            let ev = TraceEvent {
+                kind: EventKind::Complete,
+                ts_ns: i,
+                dur_ns: i * 1_000,
+                class: Some(QosClass::Standard),
+                sensor_id: 1,
+                seq: i,
+                ..TraceEvent::default()
+            };
+            feed.push_str(&ev.to_jsonl());
+            feed.push('\n');
+        }
+        let ev = TraceEvent {
+            kind: EventKind::Reject,
+            ts_ns: 1,
+            class: Some(QosClass::BestEffort),
+            label: "full",
+            ..TraceEvent::default()
+        };
+        feed.push_str(&ev.to_jsonl());
+        feed.push('\n');
+        let sm = summarize(&feed).unwrap();
+        assert_eq!(sm.completed[QosClass::Standard.index()], 100);
+        assert_eq!(sm.rejected[QosClass::BestEffort.index()], 1);
+        assert_eq!(sm.e2e_ns.0, 50_000); // nearest-rank p50 of 1..=100 k
+        assert_eq!(sm.e2e_ns.2, 99_000);
+        assert_eq!(sm.causes, vec![("reject:full".to_string(), 1)]);
+        assert!(sm.to_json().contains("\"completed\":100"));
+        let rendered = sm.render();
+        assert!(rendered.contains("standard"));
+        assert!(rendered.contains("per-stage latency"));
+    }
+
+    #[test]
+    fn summarize_rejects_corrupt_lines() {
+        assert!(summarize("not json\n").is_err());
+        assert!(summarize("{\"ts_ns\":1}\n").is_err()); // no kind
+    }
+
+    #[test]
+    fn session_writes_feed_and_chrome_trace() {
+        let dir = std::env::temp_dir().join(format!(
+            "nslbp-obs-test-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let jsonl = dir.join("t.jsonl");
+        let cfg = ObsConfig {
+            enabled: true,
+            ring_capacity: 1024,
+            sample_period_us: 1_000,
+            jsonl_path: jsonl.to_str().unwrap().to_string(),
+        };
+        let session = TraceSession::start(&cfg, |t| {
+            t.emit(TraceEvent {
+                kind: EventKind::Gauge,
+                ts_ns: t.now(),
+                label: "queue_depth",
+                class: Some(QosClass::Standard),
+                value: 3.0,
+                ..TraceEvent::default()
+            });
+        })
+        .unwrap();
+        let tracer = session.tracer();
+        assert!(tracer.enabled());
+        let t0 = tracer.now();
+        tracer.emit(TraceEvent {
+            kind: EventKind::Submit,
+            ts_ns: t0,
+            class: Some(QosClass::Standard),
+            sensor_id: 4,
+            seq: 1,
+            ..TraceEvent::default()
+        });
+        tracer.emit(TraceEvent {
+            kind: EventKind::Complete,
+            ts_ns: t0,
+            dur_ns: 2_000,
+            class: Some(QosClass::Standard),
+            sensor_id: 4,
+            seq: 1,
+            batch_id: 1,
+            ..TraceEvent::default()
+        });
+        session.finish().unwrap();
+
+        let feed = std::fs::read_to_string(&cfg.jsonl_path).unwrap();
+        let sm = summarize(&feed).unwrap();
+        assert_eq!(sm.completed[QosClass::Standard.index()], 1);
+        assert_eq!(sm.events_dropped, 0);
+        // chrome file is a well-formed JSON array with the core keys
+        let chrome = std::fs::read_to_string(cfg.chrome_path()).unwrap();
+        let trimmed = chrome.trim();
+        assert!(trimmed.starts_with('[') && trimmed.ends_with(']'));
+        assert!(chrome.contains("\"ph\":\"X\""));
+        assert!(chrome.contains("\"ph\":\"C\""));
+        assert!(chrome.contains("sensor-4"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_session_writes_nothing() {
+        let cfg = ObsConfig {
+            enabled: false,
+            jsonl_path: "/nonexistent-dir/never-created.jsonl".into(),
+            ..ObsConfig::default()
+        };
+        let session = TraceSession::start(&cfg, |_| {}).unwrap();
+        assert!(!session.tracer().enabled());
+        session.finish().unwrap();
+        assert!(!std::path::Path::new("/nonexistent-dir").exists());
+    }
+}

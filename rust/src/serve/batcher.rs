@@ -14,6 +14,29 @@ use std::time::Instant;
 
 use super::queue::{BoundedQueue, PopResult};
 
+/// Why [`Batcher::next_batch_tagged`] sealed a batch — the "size vs
+/// deadline" distinction the trace feed records per batch, so a queue
+/// that only ever deadline-flushes undersized batches is visible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// `max_batch` requests accumulated.
+    Size,
+    /// `max_delay` elapsed since the first request's anchor.
+    Deadline,
+    /// The request queue closed (drain): the partial batch ships.
+    Closed,
+}
+
+impl FlushReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FlushReason::Size => "size",
+            FlushReason::Deadline => "deadline",
+            FlushReason::Closed => "closed",
+        }
+    }
+}
+
 /// When a forming batch must ship.  The server builds one per QoS class
 /// from the class's resolved knobs ([`crate::config::ServeConfig::class_knobs`]),
 /// so there is deliberately no constructor from the class-independent
@@ -67,10 +90,17 @@ where
     /// Block for the next batch; `None` once the queue is closed and
     /// drained.  Never returns an empty batch.
     pub fn next_batch(&self) -> Option<Vec<T>> {
+        self.next_batch_tagged().map(|(batch, _)| batch)
+    }
+
+    /// [`Batcher::next_batch`] plus the [`FlushReason`] that sealed the
+    /// batch (the trace feed's size-vs-deadline attribution).
+    pub fn next_batch_tagged(&self) -> Option<(Vec<T>, FlushReason)> {
         let first = self.queue.pop()?;
         let deadline = (self.anchor)(&first) + self.policy.max_delay;
         let mut batch = Vec::with_capacity(self.policy.max_batch);
         batch.push(first);
+        let mut reason = FlushReason::Size;
         while batch.len() < self.policy.max_batch {
             // past the deadline this is a zero-wait poll: it drains the
             // already-queued backlog into the batch but never waits
@@ -78,12 +108,18 @@ where
             match self.queue.pop_timeout(wait) {
                 PopResult::Item(item) => batch.push(item),
                 // deadline flush: ship what we have
-                PopResult::TimedOut => break,
+                PopResult::TimedOut => {
+                    reason = FlushReason::Deadline;
+                    break;
+                }
                 // drain: ship the partial batch; the next call returns None
-                PopResult::Closed => break,
+                PopResult::Closed => {
+                    reason = FlushReason::Closed;
+                    break;
+                }
             }
         }
-        Some(batch)
+        Some((batch, reason))
     }
 }
 
@@ -179,6 +215,33 @@ mod tests {
         });
         assert_eq!(b.next_batch().unwrap(), vec![1, 2]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn flush_reasons_distinguish_size_deadline_and_close() {
+        let q = BoundedQueue::new(16);
+        for i in 0..4u32 {
+            q.try_push(i).unwrap();
+        }
+        let b = Batcher::new(&q, BatchPolicy {
+            max_batch: 4,
+            max_delay: Duration::from_millis(20),
+        });
+        let (batch, reason) = b.next_batch_tagged().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(reason, FlushReason::Size);
+        // one straggler: deadline flush
+        q.try_push(9).unwrap();
+        let (batch, reason) = b.next_batch_tagged().unwrap();
+        assert_eq!(batch, vec![9]);
+        assert_eq!(reason, FlushReason::Deadline);
+        // close mid-formation: partial batch tagged Closed
+        q.try_push(10).unwrap();
+        q.close();
+        let (batch, reason) = b.next_batch_tagged().unwrap();
+        assert_eq!(batch, vec![10]);
+        assert_eq!(reason, FlushReason::Closed);
+        assert!(b.next_batch_tagged().is_none());
     }
 
     #[test]

@@ -189,6 +189,18 @@ impl Metrics {
             .sum()
     }
 
+    /// Admitted requests not yet resolved (completed/dropped/failed) —
+    /// the tracing sampler's per-class in-flight gauge.  Counters are
+    /// updated independently, so a momentarily-torn read can undercount;
+    /// the subtraction saturates instead of wrapping.
+    pub fn in_flight(&self, class: QosClass) -> u64 {
+        let c = &self.classes[class.index()];
+        let resolved = c.completed.load(Ordering::Relaxed)
+            + c.dropped.load(Ordering::Relaxed)
+            + c.failed.load(Ordering::Relaxed);
+        c.accepted.load(Ordering::Relaxed).saturating_sub(resolved)
+    }
+
     fn accepted_total(&self) -> u64 {
         self.classes
             .iter()
@@ -412,51 +424,60 @@ impl MetricsReport {
 
     /// Machine-readable report (`serve-bench --json`): counters, global
     /// and per-class latency percentiles, throughput, and energy, so CI
-    /// can track a serve trajectory across PRs.  Values are finite, so
-    /// the output is always valid JSON.
+    /// can track a serve trajectory across PRs.  Emission goes through
+    /// [`crate::obs::json`], so strings are escaped (`hw_profile` is
+    /// user-suppliable via `[hw] profile = path`) and numbers are never
+    /// `NaN`/`inf` — the output is always valid JSON.
     pub fn to_json(&self) -> String {
+        use crate::obs::json as j;
+
         let mut s = String::from("{");
-        s.push_str(&format!("\"hw_profile\":\"{}\",", self.hw_profile));
-        s.push_str(&format!(
-            "\"accepted\":{},\"rejected\":{},\"dropped\":{},\
-             \"completed\":{},\"failed\":{},",
-            self.accepted, self.rejected, self.dropped, self.completed,
-            self.failed
-        ));
-        s.push_str(&format!(
-            "\"batches\":{},\"mean_batch\":{},",
-            self.batches, self.mean_batch
-        ));
-        s.push_str(&format!(
-            "\"latency_ms\":{{\"p50\":{},\"p95\":{},\"p99\":{},\"max\":{}}},",
-            self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms
-        ));
-        s.push_str(&format!(
-            "\"wall_seconds\":{},\"throughput_fps\":{},\
-             \"energy_per_frame_uj\":{},\"total_arch_time_ns\":{},",
-            self.wall_seconds, self.throughput_fps,
-            self.energy_per_frame_uj, self.total_arch_time_ns
-        ));
-        s.push_str(&format!(
-            "\"arch_mismatches\":{},\"cross_checked\":{},\
-             \"cross_check_mismatches\":{},",
-            self.arch_mismatches, self.cross_checked,
-            self.cross_check_mismatches
-        ));
+        j::push_str_field(&mut s, "hw_profile", &self.hw_profile);
+        j::push_u64_field(&mut s, "accepted", self.accepted);
+        j::push_u64_field(&mut s, "rejected", self.rejected);
+        j::push_u64_field(&mut s, "dropped", self.dropped);
+        j::push_u64_field(&mut s, "completed", self.completed);
+        j::push_u64_field(&mut s, "failed", self.failed);
+        j::push_u64_field(&mut s, "batches", self.batches);
+        j::push_f64_field(&mut s, "mean_batch", self.mean_batch);
+        s.push_str("\"latency_ms\":{");
+        j::push_f64_field(&mut s, "p50", self.p50_ms);
+        j::push_f64_field(&mut s, "p95", self.p95_ms);
+        j::push_f64_field(&mut s, "p99", self.p99_ms);
+        j::push_f64_field(&mut s, "max", self.max_ms);
+        s.pop();
+        s.push_str("},");
+        j::push_f64_field(&mut s, "wall_seconds", self.wall_seconds);
+        j::push_f64_field(&mut s, "throughput_fps", self.throughput_fps);
+        j::push_f64_field(&mut s, "energy_per_frame_uj",
+                          self.energy_per_frame_uj);
+        j::push_f64_field(&mut s, "total_arch_time_ns",
+                          self.total_arch_time_ns);
+        j::push_u64_field(&mut s, "arch_mismatches", self.arch_mismatches);
+        j::push_u64_field(&mut s, "cross_checked", self.cross_checked);
+        j::push_u64_field(&mut s, "cross_check_mismatches",
+                          self.cross_check_mismatches);
         s.push_str("\"per_class\":[");
         for (i, c) in self.per_class.iter().enumerate() {
             if i > 0 {
                 s.push(',');
             }
-            s.push_str(&format!(
-                "{{\"class\":\"{}\",\"accepted\":{},\"rejected\":{},\
-                 \"dropped\":{},\"completed\":{},\"failed\":{},\
-                 \"p50_ms\":{},\"p95_ms\":{},\"p99_ms\":{},\"max_ms\":{},\
-                 \"energy_uj\":{},\"energy_per_frame_uj\":{}}}",
-                c.class.as_str(), c.accepted, c.rejected, c.dropped,
-                c.completed, c.failed, c.p50_ms, c.p95_ms, c.p99_ms,
-                c.max_ms, c.energy_uj, c.energy_per_frame_uj
-            ));
+            s.push('{');
+            j::push_str_field(&mut s, "class", c.class.as_str());
+            j::push_u64_field(&mut s, "accepted", c.accepted);
+            j::push_u64_field(&mut s, "rejected", c.rejected);
+            j::push_u64_field(&mut s, "dropped", c.dropped);
+            j::push_u64_field(&mut s, "completed", c.completed);
+            j::push_u64_field(&mut s, "failed", c.failed);
+            j::push_f64_field(&mut s, "p50_ms", c.p50_ms);
+            j::push_f64_field(&mut s, "p95_ms", c.p95_ms);
+            j::push_f64_field(&mut s, "p99_ms", c.p99_ms);
+            j::push_f64_field(&mut s, "max_ms", c.max_ms);
+            j::push_f64_field(&mut s, "energy_uj", c.energy_uj);
+            j::push_f64_field(&mut s, "energy_per_frame_uj",
+                              c.energy_per_frame_uj);
+            s.pop();
+            s.push('}');
         }
         s.push_str("]}");
         s
@@ -563,6 +584,74 @@ mod tests {
         assert_eq!(be.dropped, 1);
         assert_eq!(be.completed, 0);
         assert!(be.active());
+    }
+
+    #[test]
+    fn reservoir_percentiles_match_exact_below_cap() {
+        // parity: on runs with <= LATENCY_RESERVOIR completions the
+        // reservoir retains *every* sample, so the report's p50/p95/p99
+        // must equal the exact nearest-rank percentiles of the full
+        // latency sequence — no sampling error at all below the cap
+        let m = Metrics::default();
+        let rep = report(0.0);
+        // a deliberately lumpy (non-uniform, unsorted) latency sequence
+        let mut exact: Vec<u64> = Vec::new();
+        let mut x: u64 = 0x2545_f491_4f6c_dd1d;
+        for _ in 0..10_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let ns = 1_000 + (x % 5_000_000);
+            exact.push(ns);
+            m.record_completion(QosClass::Standard,
+                                Duration::from_nanos(ns), &rep);
+        }
+        exact.sort_unstable();
+        let s = m.snapshot(Duration::from_secs(1));
+        for (q, got_ms) in [(0.50, s.p50_ms), (0.95, s.p95_ms),
+                            (0.99, s.p99_ms)] {
+            let want_ms = percentile_ns(&exact, q) as f64 / 1e6;
+            assert!((got_ms - want_ms).abs() < 1e-12,
+                    "p{q}: report {got_ms} vs exact {want_ms}");
+        }
+        assert!((s.max_ms - *exact.last().unwrap() as f64 / 1e6).abs()
+                    < 1e-12);
+    }
+
+    #[test]
+    fn json_escapes_hostile_hw_profile() {
+        // hw_profile is user-suppliable ([hw] profile = path): quotes
+        // and backslashes in it must not break the JSON document
+        let mut s = MetricsReport {
+            hw_profile: "evil\"profile\\with\ncontrols".into(),
+            ..MetricsReport::default()
+        };
+        s.mean_batch = f64::NAN; // non-finite must not leak either
+        let json = s.to_json();
+        assert!(json.contains(
+            "\"hw_profile\":\"evil\\\"profile\\\\with\\ncontrols\""
+        ));
+        assert!(json.contains("\"mean_batch\":0"));
+        assert!(!json.contains("NaN"));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+    }
+
+    #[test]
+    fn in_flight_tracks_unresolved_admissions() {
+        let m = Metrics::default();
+        assert_eq!(m.in_flight(QosClass::Standard), 0);
+        m.record_accepted(QosClass::Standard);
+        m.record_accepted(QosClass::Standard);
+        m.record_accepted(QosClass::Standard);
+        assert_eq!(m.in_flight(QosClass::Standard), 3);
+        m.record_completion(QosClass::Standard, Duration::from_millis(1),
+                            &report(0.0));
+        m.record_dropped(QosClass::Standard);
+        assert_eq!(m.in_flight(QosClass::Standard), 1);
+        m.record_failure(QosClass::Standard);
+        assert_eq!(m.in_flight(QosClass::Standard), 0);
+        // other classes unaffected
+        assert_eq!(m.in_flight(QosClass::Billed), 0);
     }
 
     #[test]

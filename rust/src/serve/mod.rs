@@ -75,12 +75,13 @@ use std::time::{Duration, Instant};
 use crate::config::ServeConfig;
 use crate::engine::{BackendKind, EngineConfig, FrameOutput};
 use crate::error::{Error, Result};
+use crate::obs::{EventKind, TraceEvent, TraceSession, Tracer};
 use crate::params::{NetConfig, NetParams};
 use crate::sensor::Frame;
 
 pub use crate::engine::QosClass;
-pub use batcher::{BatchPolicy, Batcher};
-pub use metrics::{ClassReport, Metrics, MetricsReport};
+pub use batcher::{BatchPolicy, Batcher, FlushReason};
+pub use metrics::{percentile_ns, ClassReport, Metrics, MetricsReport};
 pub use queue::{BoundedQueue, PopResult, PushError};
 pub use shard::{Batch, ShardPool};
 
@@ -314,6 +315,8 @@ pub struct Server {
     serve: ServeConfig,
     net: NetConfig,
     sensors: Mutex<BTreeMap<u32, Arc<AtomicU64>>>,
+    tracer: Tracer,
+    trace: Option<TraceSession>,
 }
 
 impl Server {
@@ -342,11 +345,49 @@ impl Server {
         let batches = Arc::new(BoundedQueue::new(serve.shards * 2));
         let metrics = Arc::new(Metrics::default());
 
+        // tracing (off by default): the exporter session owns the ring
+        // and the sink files; its sampler observes the live queues
+        let trace = {
+            let queues: Vec<Arc<BoundedQueue<QueuedRequest>>> =
+                class_queues.iter().map(Arc::clone).collect();
+            let batches_q = Arc::clone(&batches);
+            let gauge_metrics = Arc::clone(&metrics);
+            TraceSession::start(&config.system.obs, move |t| {
+                let ts = t.now();
+                for class in QosClass::ALL {
+                    t.emit(TraceEvent {
+                        kind: EventKind::Gauge,
+                        ts_ns: ts,
+                        class: Some(class),
+                        label: "queue_depth",
+                        value: queues[class.index()].len() as f64,
+                        ..TraceEvent::default()
+                    });
+                    t.emit(TraceEvent {
+                        kind: EventKind::Gauge,
+                        ts_ns: ts,
+                        class: Some(class),
+                        label: "in_flight",
+                        value: gauge_metrics.in_flight(class) as f64,
+                        ..TraceEvent::default()
+                    });
+                }
+                t.emit(TraceEvent {
+                    kind: EventKind::Gauge,
+                    ts_ns: ts,
+                    label: "batch_queue_depth",
+                    value: batches_q.len() as f64,
+                    ..TraceEvent::default()
+                });
+            })?
+        };
+        let tracer = trace.tracer();
+
         // spawn() validates the shard slicing against the cache geometry
         // (and every routed backend's availability) before any batcher
         // thread starts
         let pool = ShardPool::spawn(&params, &config, serve.shards,
-                                    &backends, &batches, &metrics)?;
+                                    &backends, &batches, &metrics, &tracer)?;
 
         // one batcher per class; the last one out closes the batch queue
         let remaining = Arc::new(AtomicUsize::new(QosClass::COUNT));
@@ -362,6 +403,7 @@ impl Server {
             let batches_q = Arc::clone(&batches);
             let remaining = Arc::clone(&remaining);
             let backend = routing.resolve(class, default_backend);
+            let tracer = tracer.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("nslbp-batcher-{class}"))
                 .spawn(move || {
@@ -370,9 +412,52 @@ impl Server {
                     // not time-since-pop
                     let b = Batcher::new(&requests, policy)
                         .with_anchor(|r: &QueuedRequest| r.enqueued_at);
-                    while let Some(reqs) = b.next_batch() {
+                    while let Some((reqs, reason)) = b.next_batch_tagged() {
+                        let batch_id = tracer.next_batch_id();
+                        if tracer.enabled() {
+                            // batch seal: close every member's queue-wait
+                            // span and record the formation window with
+                            // its flush reason
+                            let sealed = Instant::now();
+                            let oldest = reqs
+                                .iter()
+                                .map(|r| r.enqueued_at)
+                                .min()
+                                .unwrap_or(sealed);
+                            tracer.emit(TraceEvent {
+                                kind: EventKind::Batch,
+                                ts_ns: tracer.ts(oldest),
+                                dur_ns: sealed
+                                    .saturating_duration_since(oldest)
+                                    .as_nanos()
+                                    as u64,
+                                class: Some(class),
+                                batch_id,
+                                label: reason.as_str(),
+                                value: reqs.len() as f64,
+                                ..TraceEvent::default()
+                            });
+                            for r in &reqs {
+                                tracer.emit(TraceEvent {
+                                    kind: EventKind::Queue,
+                                    ts_ns: tracer.ts(r.enqueued_at),
+                                    dur_ns: sealed
+                                        .saturating_duration_since(
+                                            r.enqueued_at,
+                                        )
+                                        .as_nanos()
+                                        as u64,
+                                    class: Some(class),
+                                    sensor_id: r.sensor_id,
+                                    seq: r.frame.seq,
+                                    batch_id,
+                                    ..TraceEvent::default()
+                                });
+                            }
+                        }
                         let batch =
-                            Batch { class, backend, requests: reqs };
+                            Batch { class, backend, batch_id,
+                                    requests: reqs };
                         if batches_q.push(batch).is_err() {
                             break; // batch queue force-closed
                         }
@@ -413,6 +498,8 @@ impl Server {
             serve,
             net,
             sensors: Mutex::new(BTreeMap::new()),
+            tracer,
+            trace: Some(trace),
         })
     }
 
@@ -448,19 +535,24 @@ impl Server {
     /// malformed frame can never fail a whole dispatched batch.
     pub fn submit(&self, request: Request) -> Result<Ticket> {
         let class = request.class;
+        let sensor_id = request.sensor_id;
+        let seq = request.frame.seq;
         if let Err(e) = crate::engine::validate_frame(&request.frame,
                                                       &self.net) {
             self.metrics.record_rejected(class);
+            self.trace_admission(EventKind::Reject, class, sensor_id, seq,
+                                 "bad_frame");
             return Err(Error::Serve(format!("admission rejected: {e}")));
         }
 
         let knobs = self.serve.class_knobs(class);
         let slot = Arc::new(SlotState::new());
+        let enqueued_at = Instant::now();
         let queued = QueuedRequest {
             frame: request.frame,
             sensor_id: request.sensor_id,
             deadline: request.deadline,
-            enqueued_at: Instant::now(),
+            enqueued_at,
             slot: Arc::clone(&slot),
         };
         let queue = &self.class_queues[class.index()];
@@ -468,8 +560,13 @@ impl Server {
             match queue.push_dropping_oldest(queued) {
                 Ok(displaced) => {
                     self.metrics.record_accepted(class);
+                    self.trace_admission(EventKind::Submit, class,
+                                         sensor_id, seq, "");
                     if let Some(old) = displaced {
                         self.metrics.record_dropped(class);
+                        self.trace_admission(EventKind::Drop, class,
+                                             old.sensor_id, old.frame.seq,
+                                             "displaced");
                         old.slot.fulfill(Err(Error::Dropped(
                             "displaced by a fresher frame (drop-oldest \
                              admission)"
@@ -484,10 +581,14 @@ impl Server {
             match queue.try_push(queued) {
                 Ok(()) => {
                     self.metrics.record_accepted(class);
+                    self.trace_admission(EventKind::Submit, class,
+                                         sensor_id, seq, "");
                     Ok(Ticket { slot })
                 }
                 Err((PushError::Full, _)) => {
                     self.metrics.record_rejected(class);
+                    self.trace_admission(EventKind::Reject, class,
+                                         sensor_id, seq, "queue_full");
                     Err(Error::Serve(format!(
                         "admission rejected: {class} queue at configured \
                          depth {}",
@@ -498,6 +599,23 @@ impl Server {
                     Err(Error::Serve("server is draining".into()))
                 }
             }
+        }
+    }
+
+    /// Emit one admission-stage instant (submit / reject / displaced
+    /// drop).  A single branch when tracing is disabled.
+    fn trace_admission(&self, kind: EventKind, class: QosClass,
+                       sensor_id: u32, seq: u64, label: &'static str) {
+        if self.tracer.enabled() {
+            self.tracer.emit(TraceEvent {
+                kind,
+                ts_ns: self.tracer.now(),
+                class: Some(class),
+                sensor_id,
+                seq,
+                label,
+                ..TraceEvent::default()
+            });
         }
     }
 
@@ -521,6 +639,10 @@ impl Server {
         // stop
         if let Some(pool) = self.pool.take() {
             pool.join()?;
+        }
+        // every producer is gone: flush the trace tail and close the sinks
+        if let Some(trace) = self.trace.take() {
+            trace.finish()?;
         }
         Ok(self.metrics.snapshot(self.started.elapsed()))
     }

@@ -17,6 +17,7 @@ use std::time::Instant;
 
 use crate::engine::{BackendKind, Engine, EngineConfig, QosClass, ShardSlice};
 use crate::error::{Error, Result};
+use crate::obs::{EventKind, TraceEvent, Tracer};
 use crate::params::NetParams;
 use crate::sensor::Frame;
 
@@ -29,6 +30,10 @@ use super::{InferResponse, QueuedRequest};
 pub struct Batch {
     pub class: QosClass,
     pub backend: BackendKind,
+    /// Trace correlation id allocated at batch seal (0 when tracing is
+    /// off): joins the batcher's formation span to the shard's dispatch
+    /// span and every member request's completion.
+    pub(crate) batch_id: u64,
     pub(crate) requests: Vec<QueuedRequest>,
 }
 
@@ -43,7 +48,8 @@ impl ShardPool {
     /// unavailable backend — and spawn one worker thread per shard.
     pub fn spawn(params: &NetParams, base: &EngineConfig, count: usize,
                  backends: &[BackendKind],
-                 batches: &Arc<BoundedQueue<Batch>>, metrics: &Arc<Metrics>)
+                 batches: &Arc<BoundedQueue<Batch>>, metrics: &Arc<Metrics>,
+                 tracer: &Tracer)
                  -> Result<Self> {
         let mut engine_sets = Vec::with_capacity(count);
         for index in 0..count {
@@ -53,14 +59,13 @@ impl ShardPool {
             };
             let mut engines = Vec::with_capacity(backends.len());
             for &kind in backends {
-                engines.push((
-                    kind,
-                    Engine::builder()
-                        .config(config.clone())
-                        .params(params.clone())
-                        .backend(kind)
-                        .build()?,
-                ));
+                let mut engine = Engine::builder()
+                    .config(config.clone())
+                    .params(params.clone())
+                    .backend(kind)
+                    .build()?;
+                engine.set_tracer(tracer.clone());
+                engines.push((kind, engine));
             }
             engine_sets.push(engines);
         }
@@ -70,10 +75,12 @@ impl ShardPool {
             .map(|(index, engines)| {
                 let batches = Arc::clone(batches);
                 let metrics = Arc::clone(metrics);
+                let tracer = tracer.clone();
                 std::thread::Builder::new()
                     .name(format!("nslbp-shard-{index}"))
                     .spawn(move || {
-                        shard_main(index, engines, &batches, &metrics)
+                        shard_main(index, engines, &batches, &metrics,
+                                   &tracer)
                     })
                     .map_err(Error::Io)
             })
@@ -99,7 +106,8 @@ impl ShardPool {
 }
 
 fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
-              batches: &BoundedQueue<Batch>, metrics: &Metrics) {
+              batches: &BoundedQueue<Batch>, metrics: &Metrics,
+              tracer: &Tracer) {
     // dispatch buffers persist across batches (like the backends' scratch
     // arenas): the steady-state loop reuses them instead of reallocating
     // per batch
@@ -119,13 +127,27 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                 .map_or(false, |d| now.duration_since(req.enqueued_at) > d);
             if expired {
                 metrics.record_dropped(class);
+                if tracer.enabled() {
+                    tracer.emit(TraceEvent {
+                        kind: EventKind::Expire,
+                        ts_ns: tracer.now(),
+                        class: Some(class),
+                        sensor_id: req.sensor_id,
+                        seq: req.frame.seq,
+                        batch_id: batch.batch_id,
+                        shard: index as i32,
+                        label: "deadline",
+                        ..TraceEvent::default()
+                    });
+                }
                 req.slot.fulfill(Err(Error::Dropped(format!(
                     "deadline expired after {:.1} ms in queue",
                     req.enqueued_at.elapsed().as_secs_f64() * 1e3
                 ))));
             } else {
+                let seq = req.frame.seq;
                 frames.push(req.frame);
-                shells.push((req.sensor_id, req.enqueued_at, req.slot));
+                shells.push((req.sensor_id, seq, req.enqueued_at, req.slot));
             }
         }
         if frames.is_empty() {
@@ -142,13 +164,53 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
 
         // one whole-batch dispatch — the engine (and its cross-check)
         // sees the entire batch at once
+        let dispatch_start = Instant::now();
         match engine.infer_batch(&frames) {
             Ok(out) if out.frames.len() == shells.len() => {
-                for (report, (sensor_id, enqueued_at, slot)) in
+                if tracer.enabled() {
+                    // dispatch span with the batch's telemetry energy
+                    // rolled up into the paper's stage decomposition
+                    let tel = out.telemetry();
+                    let e = &tel.cost.energy;
+                    tracer.emit(TraceEvent {
+                        kind: EventKind::Infer,
+                        ts_ns: tracer.ts(dispatch_start),
+                        dur_ns: dispatch_start.elapsed().as_nanos() as u64,
+                        class: Some(class),
+                        batch_id: batch.batch_id,
+                        shard: index as i32,
+                        backend: Some(batch.backend),
+                        sensor_pj: e.sensor_pj,
+                        compute_pj: e.compute_pj + e.read_pj + e.write_pj
+                            + e.ctrl_pj,
+                        dpu_pj: e.dpu_pj,
+                        tx_pj: e.transmission_pj,
+                        modeled_ns: tel.cost.time_ns.max(0.0) as u64,
+                        ..TraceEvent::default()
+                    });
+                }
+                for (report, (sensor_id, seq, enqueued_at, slot)) in
                     out.frames.into_iter().zip(shells.drain(..))
                 {
                     let latency = enqueued_at.elapsed();
                     metrics.record_completion(class, latency, &report);
+                    if tracer.enabled() {
+                        // dur is the *same* latency the metrics
+                        // reservoir records, so span-derived
+                        // percentiles reproduce the report's
+                        tracer.emit(TraceEvent {
+                            kind: EventKind::Complete,
+                            ts_ns: tracer.ts(enqueued_at),
+                            dur_ns: latency.as_nanos() as u64,
+                            class: Some(class),
+                            sensor_id,
+                            seq,
+                            batch_id: batch.batch_id,
+                            shard: index as i32,
+                            backend: Some(batch.backend),
+                            ..TraceEvent::default()
+                        });
+                    }
                     slot.fulfill(Ok(InferResponse {
                         report,
                         sensor_id,
@@ -166,15 +228,41 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                     out.frames.len(),
                     shells.len()
                 );
-                for (_, _, slot) in shells.drain(..) {
+                for (sensor_id, seq, _, slot) in shells.drain(..) {
                     metrics.record_failure(class);
+                    if tracer.enabled() {
+                        tracer.emit(TraceEvent {
+                            kind: EventKind::Fail,
+                            ts_ns: tracer.now(),
+                            class: Some(class),
+                            sensor_id,
+                            seq,
+                            batch_id: batch.batch_id,
+                            shard: index as i32,
+                            label: "output_count_mismatch",
+                            ..TraceEvent::default()
+                        });
+                    }
                     slot.fulfill(Err(Error::Serve(msg.clone())));
                 }
             }
             Err(e) => {
                 let msg = e.to_string();
-                for (_, _, slot) in shells.drain(..) {
+                for (sensor_id, seq, _, slot) in shells.drain(..) {
                     metrics.record_failure(class);
+                    if tracer.enabled() {
+                        tracer.emit(TraceEvent {
+                            kind: EventKind::Fail,
+                            ts_ns: tracer.now(),
+                            class: Some(class),
+                            sensor_id,
+                            seq,
+                            batch_id: batch.batch_id,
+                            shard: index as i32,
+                            label: "backend_error",
+                            ..TraceEvent::default()
+                        });
+                    }
                     slot.fulfill(Err(Error::Serve(format!(
                         "batch inference failed: {msg}"
                     ))));

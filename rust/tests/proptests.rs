@@ -464,6 +464,37 @@ fn prop_hw_profiles_cost_sane_and_roundtrip() {
     });
 }
 
+/// `percentile_ns` (nearest-rank, the serve-metrics and trace-summary
+/// quantile): monotone in q, always bounded by the sample extremes,
+/// exact on a singleton, and 0 on an empty slice.
+#[test]
+fn prop_percentile_monotone_bounded_exact() {
+    use ns_lbp::serve::percentile_ns;
+    check(Config::default().cases(120), "percentile", |g: &mut Gen| {
+        let mut samples: Vec<u64> = g.vec(1, 400, |g| {
+            g.usize_in(0, 1 << 40) as u64
+        });
+        samples.sort_unstable();
+        // bounded by the extremes at arbitrary q
+        let q1 = g.f64_in(0.0, 1.0);
+        let q2 = g.f64_in(0.0, 1.0);
+        let (lo, hi) = (q1.min(q2), q1.max(q2));
+        let p_lo = percentile_ns(&samples, lo);
+        let p_hi = percentile_ns(&samples, hi);
+        assert!(*samples.first().unwrap() <= p_lo);
+        assert!(p_hi <= *samples.last().unwrap());
+        // monotone in q
+        assert!(p_lo <= p_hi, "q={lo} -> {p_lo} > q={hi} -> {p_hi}");
+        // q=1 is the max; q→0 stays within range
+        assert_eq!(percentile_ns(&samples, 1.0), *samples.last().unwrap());
+        // exact on a singleton, whatever q
+        let only = samples[g.usize_in(0, samples.len() - 1)];
+        assert_eq!(percentile_ns(&[only], q1), only);
+        // empty slice is defined as 0 (no samples, no panic)
+        assert_eq!(percentile_ns(&[], q1), 0);
+    });
+}
+
 /// Warm engines with reused scratch arenas stay bit-identical to cold
 /// ones over *random batch-size sequences* (both in-tree backends): the
 /// PR-5 allocation-free hot path must never leak state between batches,

@@ -324,6 +324,117 @@ fn per_request_deadline_expires_stale_requests() {
     assert_eq!(bl.completed, 0);
 }
 
+/// Trace-feed well-formedness under concurrent shards: a traced routed
+/// run writes a JSONL feed where every line parses through the shared
+/// flat-JSON reader, every admitted request's lifecycle balances (one
+/// submit, exactly one terminal event, exactly one queue-wait span), the
+/// ring dropped nothing at this load, and the span-derived summary
+/// reproduces the metrics report's end-to-end p99 exactly — both sides
+/// percentile the identical latency samples.
+#[test]
+fn traced_serve_feed_is_balanced_and_matches_report() {
+    use std::collections::BTreeMap;
+
+    let (params, frames) = synth_frames(12, 123);
+    let mut config = CoordinatorConfig {
+        // the billed class's architectural engines simulate the in-SRAM
+        // LBP stage, so their Infer spans carry a nonzero cycle model
+        arch: ArchSim { lbp: true, mlp: false, early_exit: false },
+        ..Default::default()
+    };
+    config.system.engine.routing
+        .set(QosClass::Billed, BackendKind::Architectural);
+    config.system.serve.shards = 2;
+    config.system.serve.max_batch = 4;
+    config.system.serve.batch_deadline_us = 300;
+    config.system.serve.queue_depth = 64;
+    let dir = std::env::temp_dir().join(format!(
+        "nslbp-serve-trace-{}", std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let feed_path = dir.join("serve.jsonl");
+    config.system.obs.enabled = true;
+    config.system.obs.jsonl_path = feed_path.to_str().unwrap().to_string();
+    let server = Server::start(params, config).unwrap();
+
+    // two classes → two backends → disjoint shard engines, all tracing
+    // into one ring concurrently
+    let cam0 = server.session(0);
+    let cam1 = server.session(1).with_class(QosClass::Billed);
+    let mut tickets = Vec::new();
+    for f in &frames {
+        tickets.push(cam0.submit(f.clone()).unwrap());
+        tickets.push(cam1.submit(f.clone()).unwrap());
+    }
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    drop(cam0);
+    drop(cam1);
+    let report = server.drain().unwrap();
+    assert_eq!(report.completed, 2 * frames.len() as u64);
+
+    let feed = std::fs::read_to_string(&feed_path).unwrap();
+    #[derive(Default)]
+    struct Life {
+        submits: u64,
+        queues: u64,
+        terminals: u64,
+    }
+    let mut lives: BTreeMap<(String, u64, u64), Life> = BTreeMap::new();
+    for (i, line) in feed.lines().enumerate() {
+        let fields = ns_lbp::obs::json::parse_flat_object(line)
+            .unwrap_or_else(|e| panic!("feed line {}: {e}", i + 1));
+        let get = |k: &str| {
+            fields.iter().find(|(n, _)| n == k).map(|(_, v)| v)
+        };
+        let kind = get("kind")
+            .and_then(|v| v.as_str())
+            .expect("every record carries a kind")
+            .to_string();
+        if !matches!(kind.as_str(),
+                     "submit" | "reject" | "queue" | "complete" | "drop"
+                     | "expire" | "fail") {
+            continue; // batch/infer/phase/gauge are not per-request
+        }
+        let class = get("class").and_then(|v| v.as_str()).unwrap().into();
+        let sensor = get("sensor_id").and_then(|v| v.as_u64()).unwrap();
+        let seq = get("seq").and_then(|v| v.as_u64()).unwrap();
+        let life = lives.entry((class, sensor, seq)).or_default();
+        match kind.as_str() {
+            "submit" => life.submits += 1,
+            "queue" => life.queues += 1,
+            _ => life.terminals += 1, // complete/drop/expire/fail
+        }
+    }
+    assert_eq!(lives.len(), 2 * frames.len(),
+               "one lifecycle per admitted request");
+    for ((class, sensor, seq), life) in &lives {
+        let at = format!("{class} sensor {sensor} seq {seq}");
+        assert_eq!(life.submits, 1, "{at}: submit count");
+        assert_eq!(life.terminals, 1, "{at}: terminal count");
+        assert_eq!(life.queues, 1, "{at}: queue-wait span count");
+    }
+
+    let summary = ns_lbp::obs::summarize(&feed).unwrap();
+    assert_eq!(summary.events_dropped, 0, "ring overflowed at test load");
+    assert_eq!(summary.completed.iter().sum::<u64>(), report.completed);
+    assert_eq!(summary.completed[QosClass::Billed.index()],
+               frames.len() as u64);
+    // Complete spans carry the very latency samples the metrics
+    // reservoir percentiles, so the two p99s agree to the nanosecond
+    // (compared with float slack: the report keeps milliseconds)
+    let trace_p99_ms = summary.e2e_ns.2 as f64 / 1e6;
+    assert!((trace_p99_ms - report.p99_ms).abs()
+                <= report.p99_ms * 1e-6 + 1e-9,
+            "trace p99 {trace_p99_ms} ms != report p99 {} ms",
+            report.p99_ms);
+    assert!(summary.modeled_ns > 0, "billed infer spans carry cost model");
+    assert!(summary.energy_pj.0 > 0.0 && summary.energy_pj.1 > 0.0);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// A server dropped without `drain()` orphans whatever was still queued;
 /// `Ticket::wait_timeout` bounds the wait instead of blocking forever.
 #[test]

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Advisory bench-trajectory diff for CI (see EXPERIMENTS.md).
+"""Bench-trajectory diff for CI — soft perf gate (see EXPERIMENTS.md).
 
 Finds the most recent successful run on main that actually carries a
 `bench-json` artifact (one artifact-less or expired run must not
@@ -12,8 +12,11 @@ covering all three trajectory artifacts:
   p95 latency, energy per frame,
 * AB_energy.json     — A/B harness schema: per-arm energy/time/TOPS-W.
 
-Purely advisory: any failure (first run, API hiccup) prints a note and
-exits 0 — perf noise must never break the build.
+Gating policy: ordinary drift only annotates the table (runners are
+noisy), but a *sustained* collapse — the current median more than 2x
+worse than the previous run's — exits 1 and fails the step.  Everything
+procedural (first run, expired artifact, API hiccup) still prints a
+note and exits 0: only measured regressions gate, never plumbing.
 
 Env: GITHUB_TOKEN, GITHUB_REPOSITORY, GITHUB_RUN_ID (standard in
 Actions); GITHUB_API_URL optional.
@@ -27,6 +30,7 @@ import urllib.request
 import zipfile
 
 FLAG_THRESHOLD_PCT = 15.0  # deltas worse than this get a "regression?" mark
+HARD_FACTOR = 2.0  # >2x worse than the previous median fails the step
 ARTIFACT = "bench-json"
 
 
@@ -88,6 +92,13 @@ def previous_artifact_run(repo, base, current):
     return None, None
 
 
+def hard_regressed(now, was, higher_better):
+    """True when the current value is > HARD_FACTOR worse than `was`."""
+    if higher_better:
+        return now < was / HARD_FACTOR
+    return now > was * HARD_FACTOR
+
+
 def main():
     repo = os.environ["GITHUB_REPOSITORY"]
     base = os.environ.get("GITHUB_API_URL", "https://api.github.com")
@@ -96,9 +107,10 @@ def main():
     if prev is None:
         print(f"bench delta: no previous successful run with a {ARTIFACT} "
               "artifact; skipping")
-        return
+        return []
     zf = zipfile.ZipFile(io.BytesIO(api(art["archive_download_url"]).read()))
 
+    hard = []
     for name in ("BENCH_hotpath.json", "BENCH_serve.json", "AB_energy.json"):
         if name not in zf.namelist():
             print(f"bench delta: {name} absent from run {prev['id']}'s "
@@ -112,8 +124,8 @@ def main():
         if not new:
             continue
         width = max(len(k) for k in new)
-        print(f"\n{name}: run {prev['id']} -> this run (advisory, "
-              "never gating)")
+        print(f"\n{name}: run {prev['id']} -> this run "
+              f"(gates only past {HARD_FACTOR:.0f}x)")
         print(f"  {'metric':<{width}}  {'previous':>12}  {'current':>12}  "
               f"{'delta':>8}")
         for metric, (now, higher_better) in new.items():
@@ -121,18 +133,31 @@ def main():
                 was = old[metric][0]
                 pct = (now - was) / abs(was) * 100.0
                 worse = -pct if higher_better else pct
-                mark = ("  <-- regression?" if worse > FLAG_THRESHOLD_PCT
-                        else "")
+                if hard_regressed(now, was, higher_better):
+                    mark = "  <-- REGRESSION (gates)"
+                    hard.append(f"{name}: {metric}: {was:.1f} -> {now:.1f}")
+                elif worse > FLAG_THRESHOLD_PCT:
+                    mark = "  <-- regression?"
+                else:
+                    mark = ""
                 print(f"  {metric:<{width}}  {was:>12.1f}  {now:>12.1f}  "
                       f"{pct:>+7.1f}%{mark}")
             else:
                 print(f"  {metric:<{width}}  {'-':>12}  {now:>12.1f}"
                       "       new")
+    return hard
 
 
 if __name__ == "__main__":
     try:
-        main()
-    except Exception as exc:  # noqa: BLE001 — advisory by contract
+        regressions = main()
+    except Exception as exc:  # noqa: BLE001 — plumbing failures never gate
         print(f"bench delta: skipped ({exc})")
+        regressions = []
+    if regressions:
+        print(f"\nbench delta: FAIL — {len(regressions)} metric(s) more "
+              f"than {HARD_FACTOR:.0f}x worse than the previous run:")
+        for r in regressions:
+            print(f"  {r}")
+        sys.exit(1)
     sys.exit(0)

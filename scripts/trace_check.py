@@ -1,0 +1,254 @@
+#!/usr/bin/env python3
+"""Validate an `ns-lbp serve-bench --trace` JSONL feed (see EXPERIMENTS.md).
+
+Checks, in order:
+
+1. every line parses as a flat JSON object with a known `kind`;
+2. the ring dropped nothing (final `events_dropped` gauge is 0) — pass
+   `--allow-drops` to relax the balance checks under deliberate overflow;
+3. per-request lifecycle balance, keyed by (class, sensor_id, seq):
+   exactly one `submit` XOR one `reject`; every submitted request ends in
+   exactly one terminal event (`complete` | `drop` | `expire` | `fail`);
+   every completed request has exactly one `queue` span;
+4. per-request timestamp sanity: the `queue` and `complete` spans anchor
+   at the same enqueue instant, the `submit` instant is not before it,
+   and the stage sum (queue wait + its batch's infer span) never exceeds
+   the measured end-to-end latency beyond `--slack-ns`;
+5. batch accounting: each `batch` span's member count equals the number
+   of `queue` spans carrying its batch_id, and every completed request's
+   batch has an `infer` span;
+6. with `--report BENCH_serve.json`: per-class completed counts in the
+   feed match the serve report (the feed belongs to the report's final
+   run — with `--compare` the baseline's feed is overwritten);
+7. with `--chrome FILE.trace.json`: the Chrome/Perfetto twin is one JSON
+   array of well-formed trace events covering the same span counts.
+
+Exit 0 on a valid feed, 1 with a diagnostic on the first violated check.
+(Global file-order timestamp monotonicity is deliberately NOT checked:
+spans are emitted at stage *end*, so records interleave across threads.)
+"""
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+PER_REQUEST = {"submit", "reject", "queue", "complete", "drop", "expire",
+               "fail"}
+KINDS = PER_REQUEST | {"batch", "infer", "phase", "gauge"}
+TERMINAL = {"complete", "drop", "expire", "fail"}
+
+
+def fail(msg):
+    print(f"trace check: FAIL: {msg}")
+    sys.exit(1)
+
+
+def load_feed(path):
+    events = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as exc:
+                fail(f"{path}:{lineno}: not JSON ({exc})")
+            if not isinstance(ev, dict):
+                fail(f"{path}:{lineno}: not an object")
+            kind = ev.get("kind")
+            if kind not in KINDS:
+                fail(f"{path}:{lineno}: unknown kind {kind!r}")
+            ev["_line"] = lineno
+            events.append(ev)
+    if not events:
+        fail(f"{path}: empty feed")
+    return events
+
+
+def check_lifecycles(events, slack_ns):
+    """Checks 3 + 4: balance and per-request timestamp sanity."""
+    by_req = defaultdict(lambda: defaultdict(list))
+    for ev in events:
+        if ev["kind"] in PER_REQUEST:
+            for field in ("class", "sensor_id", "seq", "ts_ns"):
+                if field not in ev:
+                    fail(f"line {ev['_line']}: {ev['kind']} record "
+                         f"missing {field}")
+            key = (ev["class"], ev["sensor_id"], ev["seq"])
+            by_req[key][ev["kind"]].append(ev)
+
+    completed = defaultdict(int)
+    for (cls, sensor, seq), evs in sorted(by_req.items()):
+        at = f"{cls} sensor {sensor} seq {seq}"
+        n_submit = len(evs["submit"])
+        n_reject = len(evs["reject"])
+        if n_submit + n_reject != 1:
+            fail(f"{at}: {n_submit} submits + {n_reject} rejects "
+                 "(want exactly one admission event)")
+        if n_reject:
+            extra = [k for k, v in evs.items() if k != "reject" and v]
+            if extra:
+                fail(f"{at}: rejected but also has {extra}")
+            continue
+        terms = [e for k in TERMINAL for e in evs[k]]
+        if len(terms) != 1:
+            fail(f"{at}: {len(terms)} terminal events "
+                 f"({[t['kind'] for t in terms]}), want exactly one")
+        term = terms[0]
+        n_queue = len(evs["queue"])
+        if term["kind"] == "complete":
+            if n_queue != 1:
+                fail(f"{at}: completed with {n_queue} queue spans")
+            completed[cls] += 1
+        elif n_queue > 1:
+            fail(f"{at}: {n_queue} queue spans")
+
+        # timestamp sanity: queue/complete anchor at the enqueue instant,
+        # the submit instant is stamped just after it
+        submit_ts = evs["submit"][0]["ts_ns"]
+        for span in evs["queue"] + ([term] if term["kind"] == "complete"
+                                    else []):
+            # the enqueue instant is captured just *before* the submit
+            # instant is stamped, so span anchors never follow it
+            if span["ts_ns"] > submit_ts + slack_ns:
+                fail(f"{at}: {span['kind']} anchor {span['ts_ns']} "
+                     f"follows the submit instant {submit_ts}")
+        if term["kind"] == "complete" and n_queue == 1:
+            q, c = evs["queue"][0], term
+            if abs(q["ts_ns"] - c["ts_ns"]) > slack_ns:
+                fail(f"{at}: queue and complete spans anchor at "
+                     f"different instants ({q['ts_ns']} vs {c['ts_ns']})")
+            if q.get("dur_ns", 0) > c.get("dur_ns", 0) + slack_ns:
+                fail(f"{at}: queue wait {q.get('dur_ns', 0)} ns exceeds "
+                     f"e2e latency {c.get('dur_ns', 0)} ns")
+    return by_req, completed
+
+
+def check_batches(events, by_req, slack_ns):
+    """Check 5: batch member counts and queue+infer <= e2e stage sums."""
+    batch_spans = {}
+    infer_spans = defaultdict(list)
+    queue_members = defaultdict(int)
+    for ev in events:
+        if ev["kind"] == "batch":
+            bid = ev.get("batch_id")
+            if bid is None:
+                fail(f"line {ev['_line']}: batch span without batch_id")
+            if bid in batch_spans:
+                fail(f"batch {bid}: duplicate batch span")
+            batch_spans[bid] = ev
+        elif ev["kind"] == "infer":
+            bid = ev.get("batch_id")
+            if bid is None:
+                fail(f"line {ev['_line']}: infer span without batch_id")
+            infer_spans[bid].append(ev)
+        elif ev["kind"] == "queue":
+            queue_members[ev.get("batch_id")] += 1
+
+    for bid, span in sorted(batch_spans.items()):
+        want = int(span.get("value", 0))
+        got = queue_members.get(bid, 0)
+        if want != got:
+            fail(f"batch {bid}: span says {want} members, feed carries "
+                 f"{got} queue spans")
+
+    # stage sum: queue wait + the batch's infer time <= e2e latency
+    for key, evs in by_req.items():
+        if len(evs["complete"]) != 1 or len(evs["queue"]) != 1:
+            continue
+        q, c = evs["queue"][0], evs["complete"][0]
+        bid = q.get("batch_id")
+        infers = infer_spans.get(bid, [])
+        if not infers:
+            fail(f"{key}: completed via batch {bid} but the feed has no "
+                 "infer span for it")
+        stage_sum = q.get("dur_ns", 0) + min(i.get("dur_ns", 0)
+                                             for i in infers)
+        if stage_sum > c.get("dur_ns", 0) + slack_ns:
+            fail(f"{key}: stage sum {stage_sum} ns exceeds e2e "
+                 f"{c.get('dur_ns', 0)} ns (+{slack_ns} slack)")
+    return len(batch_spans), sum(len(v) for v in infer_spans.values())
+
+
+def check_report(report_path, completed):
+    """Check 6: feed vs serve-bench --json per-class completed counts."""
+    doc = json.load(open(report_path, encoding="utf-8"))
+    # the feed belongs to the *final* run in the report
+    rep = doc["results"][-1]["report"]
+    for cls in rep.get("per_class", []):
+        want = cls["completed"]
+        got = completed.get(cls["class"], 0)
+        if want != got:
+            fail(f"report says {cls['class']} completed {want}, feed "
+                 f"carries {got} complete spans")
+    total = rep["completed"]
+    if sum(completed.values()) != total:
+        fail(f"report total completed {total} != feed "
+             f"{sum(completed.values())}")
+    print(f"trace check: report cross-check ok ({total} completions)")
+
+
+def check_chrome(chrome_path, n_complete):
+    """Check 7: the Chrome-trace twin is loadable and consistent."""
+    doc = json.load(open(chrome_path, encoding="utf-8"))
+    if not isinstance(doc, list) or not doc:
+        fail(f"{chrome_path}: not a non-empty JSON array")
+    complete_x = 0
+    for i, ev in enumerate(doc):
+        if not isinstance(ev, dict):
+            fail(f"{chrome_path}[{i}]: not an object")
+        for field in ("ph", "pid", "name"):
+            if field not in ev:
+                fail(f"{chrome_path}[{i}]: missing {field}")
+        if ev["ph"] == "X":
+            if "ts" not in ev or "dur" not in ev:
+                fail(f"{chrome_path}[{i}]: X event without ts/dur")
+            if ev["name"] == "complete":
+                complete_x += 1
+        elif ev["ph"] not in {"i", "C", "M"}:
+            fail(f"{chrome_path}[{i}]: unexpected phase {ev['ph']!r}")
+    if complete_x != n_complete:
+        fail(f"{chrome_path}: {complete_x} complete X-events vs "
+             f"{n_complete} in the feed")
+    print(f"trace check: chrome twin ok ({len(doc)} records)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("feed", help="JSONL trace feed")
+    ap.add_argument("--report", help="BENCH_serve.json to cross-check")
+    ap.add_argument("--chrome", help="Chrome-trace twin to validate")
+    ap.add_argument("--allow-drops", action="store_true",
+                    help="tolerate ring overflow (skips balance checks)")
+    ap.add_argument("--slack-ns", type=int, default=1_000_000,
+                    help="timer slack for stage-sum checks (default 1 ms)")
+    args = ap.parse_args()
+
+    events = load_feed(args.feed)
+    dropped = max((e.get("value", 0) for e in events
+                   if e["kind"] == "gauge"
+                   and e.get("label") == "events_dropped"), default=0)
+    if dropped:
+        msg = f"ring dropped {int(dropped)} events"
+        if not args.allow_drops:
+            fail(msg + " (pass --allow-drops for overflow runs)")
+        print(f"trace check: {msg}; skipping balance checks")
+        print(f"trace check: ok ({len(events)} events, overflow run)")
+        return
+
+    by_req, completed = check_lifecycles(events, args.slack_ns)
+    n_batches, n_infers = check_batches(events, by_req, args.slack_ns)
+    n_complete = sum(completed.values())
+    if args.report:
+        check_report(args.report, completed)
+    if args.chrome:
+        check_chrome(args.chrome, n_complete)
+    print(f"trace check: ok — {len(events)} events, {len(by_req)} "
+          f"requests, {n_complete} completed, {n_batches} batches, "
+          f"{n_infers} infer spans, 0 ring drops")
+
+
+if __name__ == "__main__":
+    main()
