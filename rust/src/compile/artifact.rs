@@ -1,0 +1,399 @@
+//! The versioned on-disk `CompiledModel` artifact.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic  b"NSLBPCM1"
+//! u32    artifact format version (1)
+//! u64    content hash (FNV-1a of everything after this field)
+//! ---- hashed payload ----
+//! str    model name            (u32 length + UTF-8 bytes)
+//! str    hw profile name
+//! u32    cache cols the planes were packed for
+//! blob   canonical params      (u64 length + params::synth::serialize)
+//! u32    LBP plan count; per plan a u32 length + LbpLayerPlan::to_bytes
+//! u8     1 if weight planes follow, else 0
+//! blob   mlp1 planes           (u64 length + WeightPlanes::to_bytes)
+//! blob   mlp2 planes
+//! cost   4 f64 + 2 u64 (see CostEstimate)
+//! ```
+//!
+//! The content hash doubles as the artifact *version*: it changes iff
+//! any compiled byte changes, names the file on disk
+//! (`<name>-<hash16>.nslbpc`), and is what the serve layer keys shard
+//! engine caches by.  `load` re-hashes and rejects any corruption.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::mlp::WeightPlanes;
+use crate::model::LbpLayerPlan;
+use crate::params::{self, NetParams};
+
+pub const MAGIC: &[u8; 8] = b"NSLBPCM1";
+pub const FORMAT_VERSION: u32 = 1;
+
+/// The price stage's per-frame estimate, carried by the artifact so
+/// routing can reason about cost without running a frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostEstimate {
+    /// Total modeled energy per frame [pJ] under `hw_profile`.
+    pub energy_pj: f64,
+    /// Modeled accelerator time per frame [ns].
+    pub time_ns: f64,
+    /// Energy per frame with sensing + transmission excluded [pJ].
+    pub compute_pj: f64,
+    /// DPU share of the energy [pJ].
+    pub dpu_pj: f64,
+    /// ISA instructions retired per frame.
+    pub instructions: u64,
+    /// Modeled cycles per frame.
+    pub cycles: u64,
+}
+
+impl CostEstimate {
+    pub(crate) fn to_bytes(self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(48);
+        for v in [self.energy_pj, self.time_ns, self.compute_pj, self.dpu_pj] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [self.instructions, self.cycles] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    pub(crate) fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() != 48 {
+            return Err(Error::Config("cost estimate: bad length".into()));
+        }
+        let f = |i: usize| {
+            f64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap())
+        };
+        let u = |i: usize| {
+            u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap())
+        };
+        Ok(Self {
+            energy_pj: f(0),
+            time_ns: f(1),
+            compute_pj: f(2),
+            dpu_pj: f(3),
+            instructions: u(4),
+            cycles: u(5),
+        })
+    }
+}
+
+/// A compiled, versioned model: everything an engine needs, packed.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    pub name: String,
+    /// Content hash of the serialized payload — the artifact version.
+    pub version: u64,
+    /// Name of the hw profile the price stage priced under.
+    pub hw_profile: String,
+    /// Cache columns (lanes per chunk) the weight planes were packed for.
+    pub cols: usize,
+    pub params: NetParams,
+    /// Canonical params bytes (what `params` parsed from).
+    pub params_blob: Vec<u8>,
+    pub plans: Vec<LbpLayerPlan>,
+    /// `(mlp1, mlp2)` weight bit-planes; `None` for plan-only artifacts.
+    pub planes: Option<(WeightPlanes, WeightPlanes)>,
+    pub cost: CostEstimate,
+}
+
+/// FNV-1a 64-bit — the content hash the whole compile cache keys on.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn push_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn push_blob(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u64).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.data.len() - self.off < n {
+            return Err(Error::Config("artifact truncated".into()));
+        }
+        let s = &self.data[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > 1 << 16 {
+            return Err(Error::Config("artifact: implausible string".into()));
+        }
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::Config("artifact: non-UTF-8 string".into()))
+    }
+
+    fn blob(&mut self) -> Result<&'a [u8]> {
+        let n = self.u64()? as usize;
+        self.take(n)
+    }
+}
+
+impl CompiledModel {
+    /// Serialize the hashed payload (everything after the hash field).
+    fn payload(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        push_str(&mut out, &self.name);
+        push_str(&mut out, &self.hw_profile);
+        out.extend_from_slice(&(self.cols as u32).to_le_bytes());
+        push_blob(&mut out, &self.params_blob);
+        out.extend_from_slice(&(self.plans.len() as u32).to_le_bytes());
+        for plan in &self.plans {
+            push_blob(&mut out, &plan.to_bytes());
+        }
+        match &self.planes {
+            Some((p1, p2)) => {
+                out.push(1);
+                push_blob(&mut out, &p1.to_bytes());
+                push_blob(&mut out, &p2.to_bytes());
+            }
+            None => out.push(0),
+        }
+        out.extend_from_slice(&self.cost.to_bytes());
+        out
+    }
+
+    /// Serialize, stamping `version` from the payload hash.
+    pub fn to_bytes(&mut self) -> Vec<u8> {
+        let payload = self.payload();
+        self.version = fnv1a(&payload);
+        let mut out = Vec::with_capacity(20 + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Deserialize and fully re-validate an artifact: magic, format
+    /// version, content hash, params blob, and the shape consistency of
+    /// every prepacked table.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut c = Cursor { data: bytes, off: 0 };
+        if c.take(8)? != MAGIC {
+            return Err(Error::Config("artifact: bad magic".into()));
+        }
+        let fmt = c.u32()?;
+        if fmt != FORMAT_VERSION {
+            return Err(Error::Config(format!(
+                "artifact: format version {fmt}, this build reads \
+                 {FORMAT_VERSION}"
+            )));
+        }
+        let version = c.u64()?;
+        let payload = &bytes[c.off..];
+        let actual = fnv1a(payload);
+        if actual != version {
+            return Err(Error::Config(format!(
+                "artifact: content hash mismatch (stamped {version:016x}, \
+                 payload hashes to {actual:016x}) — corrupted or truncated"
+            )));
+        }
+        let name = c.str()?;
+        let hw_profile = c.str()?;
+        let cols = c.u32()? as usize;
+        let params_blob = c.blob()?.to_vec();
+        let params = params::parse(&params_blob)?;
+        let n_plans = c.u32()? as usize;
+        if n_plans != params.lbp_layers.len() {
+            return Err(Error::Config(format!(
+                "artifact: {n_plans} plans for {} LBP layers",
+                params.lbp_layers.len()
+            )));
+        }
+        let mut plans = Vec::with_capacity(n_plans);
+        for _ in 0..n_plans {
+            let blob = c.blob()?;
+            let (plan, used) = LbpLayerPlan::from_bytes(blob)?;
+            if used != blob.len() {
+                return Err(Error::Config(
+                    "artifact: trailing bytes after plan".into(),
+                ));
+            }
+            plans.push(plan);
+        }
+        let planes = match c.u8()? {
+            0 => None,
+            1 => {
+                let p1 = WeightPlanes::from_bytes(c.blob()?)?;
+                let p2 = WeightPlanes::from_bytes(c.blob()?)?;
+                Some((p1, p2))
+            }
+            v => {
+                return Err(Error::Config(format!(
+                    "artifact: bad planes marker {v}"
+                )))
+            }
+        };
+        let cost = CostEstimate::from_bytes(c.take(48)?)?;
+        if c.off != bytes.len() {
+            return Err(Error::Config("artifact: trailing bytes".into()));
+        }
+        let model = Self {
+            name, version, hw_profile, cols, params, params_blob, plans,
+            planes, cost,
+        };
+        // cross-validate the tables against the params they claim to
+        // serve — a hand-edited artifact that still hashes right (hash
+        // recomputed over edited bytes) must not reach an engine
+        model.prepacked().plans_for(&model.params)?;
+        if model.planes.is_some() {
+            model.prepacked().planes_for(&model.params, model.cols)?;
+        }
+        Ok(model)
+    }
+
+    /// Load and validate an artifact file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).map_err(|e| {
+            Error::Config(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::from_bytes(&bytes)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))
+    }
+
+    /// The compiled tables in the form `EngineBuilder::prepacked` takes.
+    pub fn prepacked(&self) -> crate::engine::Prepacked {
+        crate::engine::Prepacked {
+            plans: self.plans.clone(),
+            planes: self.planes.clone(),
+        }
+    }
+
+    /// Canonical on-disk filename for this artifact version.
+    pub fn filename(&self) -> String {
+        format!("{}-{:016x}.nslbpc", self.name, self.version)
+    }
+
+    /// Write the artifact into `dir` under its canonical name.
+    pub fn write_to(&mut self, dir: impl AsRef<Path>) -> Result<PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir).map_err(|e| {
+            Error::Config(format!("cannot create {}: {e}", dir.display()))
+        })?;
+        let bytes = self.to_bytes();
+        let path = dir.join(self.filename());
+        std::fs::write(&path, bytes).map_err(|e| {
+            Error::Config(format!("cannot write {}: {e}", path.display()))
+        })?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model;
+    use crate::params::synth::{serialize, synth_params};
+
+    fn sample() -> CompiledModel {
+        let (blob, params) = synth_params(9);
+        let plans = model::plan_layers(&params);
+        let p1 = WeightPlanes::pack(&params.mlp1, params.config.w_bits, 256)
+            .unwrap();
+        let p2 = WeightPlanes::pack(&params.mlp2, params.config.w_bits, 256)
+            .unwrap();
+        CompiledModel {
+            name: "sample".into(),
+            version: 0,
+            hw_profile: "ns_lbp_65nm".into(),
+            cols: 256,
+            params,
+            params_blob: blob,
+            plans,
+            planes: Some((p1, p2)),
+            cost: CostEstimate {
+                energy_pj: 1.5,
+                time_ns: 2.5,
+                compute_pj: 1.0,
+                dpu_pj: 0.25,
+                instructions: 10,
+                cycles: 20,
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut m = sample();
+        let bytes = m.to_bytes();
+        let r = CompiledModel::from_bytes(&bytes).unwrap();
+        assert_eq!(r.name, m.name);
+        assert_eq!(r.version, m.version);
+        assert_eq!(r.hw_profile, m.hw_profile);
+        assert_eq!(r.cols, m.cols);
+        assert_eq!(r.params, m.params);
+        assert_eq!(r.params_blob, serialize(&m.params));
+        assert_eq!(r.plans.len(), m.plans.len());
+        assert_eq!(r.plans[0].lin_offsets, m.plans[0].lin_offsets);
+        let (a, b) = (r.planes.unwrap(), m.planes.clone().unwrap());
+        assert_eq!(a.0.plane(0, 0, 0).unwrap(), b.0.plane(0, 0, 0).unwrap());
+        assert_eq!(a.1.to_bytes(), b.1.to_bytes());
+        assert_eq!(r.cost, m.cost);
+    }
+
+    #[test]
+    fn version_tracks_content() {
+        let mut a = sample();
+        let va = {
+            a.to_bytes();
+            a.version
+        };
+        let mut b = sample();
+        b.cost.energy_pj += 1.0;
+        b.to_bytes();
+        assert_ne!(va, b.version);
+        let mut c = sample();
+        c.to_bytes();
+        assert_eq!(va, c.version);
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let mut m = sample();
+        let bytes = m.to_bytes();
+        for i in [0usize, 9, 12, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xFF;
+            assert!(CompiledModel::from_bytes(&bad).is_err(), "byte {i}");
+        }
+        assert!(CompiledModel::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+    }
+}

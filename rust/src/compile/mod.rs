@@ -1,0 +1,356 @@
+//! Staged model compilation (`ns-lbp compile`).
+//!
+//! Lowers a [`ModelSpec`] TOML description into a versioned
+//! [`CompiledModel`] artifact through four stages, each cached on disk
+//! by a content-hash key so recompiles are incremental:
+//!
+//! | stage     | input key                          | output             |
+//! |-----------|------------------------------------|--------------------|
+//! | `analyze` | spec fields + weight-file bytes    | canonical params   |
+//! | `map`     | params blob                        | LBP gather plans   |
+//! | `pack`    | params blob + cache cols           | MLP weight planes  |
+//! | `price`   | params blob + cols + hw profile    | per-frame cost     |
+//!
+//! A second compile of an unchanged spec hits every cache and does
+//! **zero** packing work — the stage outputs are read back and only
+//! deserialized.  Changing the seed (or the weight file's bytes)
+//! invalidates `analyze` and everything downstream; changing only the
+//! hw profile re-prices without re-packing.  The final artifact is
+//! written to `<out_dir>/<name>-<version16>.nslbpc` where `version` is
+//! the FNV-1a hash of the serialized payload; engines built from it via
+//! [`crate::engine::EngineBuilder::prepacked`] are bit-identical to
+//! from-params engines (gated by `rust/tests/compile.rs`).
+
+pub mod artifact;
+pub mod spec;
+
+pub use artifact::{fnv1a, CompiledModel, CostEstimate};
+pub use spec::{ModelSpec, WeightSource};
+
+use std::path::{Path, PathBuf};
+
+use crate::config::SystemConfig;
+use crate::engine::{ArchSim, BackendKind, Engine, EngineConfig};
+use crate::error::{Error, Result};
+use crate::mlp::WeightPlanes;
+use crate::model::LbpLayerPlan;
+use crate::params::{self, NetParams};
+
+/// Where stage caches and finished artifacts land; defaults come from
+/// the `[compile]` config section.
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    pub out_dir: PathBuf,
+    pub cache_dir: PathBuf,
+}
+
+impl CompileOptions {
+    pub fn from_system(system: &SystemConfig) -> Self {
+        Self {
+            out_dir: PathBuf::from(&system.compile.out_dir),
+            cache_dir: PathBuf::from(&system.compile.cache_dir),
+        }
+    }
+}
+
+/// One stage's outcome: whether its keyed output was already on disk.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub stage: &'static str,
+    pub cached: bool,
+    /// The stage's cache key (hex of the input hash).
+    pub key: u64,
+}
+
+/// What `compile` did, for the CLI and for cache-behavior tests.
+#[derive(Clone, Debug)]
+pub struct CompileReport {
+    pub name: String,
+    pub version: u64,
+    pub path: PathBuf,
+    pub stages: Vec<StageReport>,
+    pub cost: CostEstimate,
+}
+
+impl CompileReport {
+    /// True when every stage came from the cache (an unchanged spec).
+    pub fn all_cached(&self) -> bool {
+        self.stages.iter().all(|s| s.cached)
+    }
+
+    pub fn print(&self) {
+        println!("compiled {} -> {}", self.name, self.path.display());
+        println!("  version  {:016x}", self.version);
+        for s in &self.stages {
+            println!(
+                "  {:<8} {:016x}  {}",
+                s.stage, s.key,
+                if s.cached { "cached" } else { "built" }
+            );
+        }
+        let c = &self.cost;
+        println!(
+            "  cost     {:.3} uJ/frame ({:.3} uJ compute, {:.3} uJ dpu), \
+             {:.2} us, {} instrs / {} cycles",
+            c.energy_pj / 1e6, c.compute_pj / 1e6, c.dpu_pj / 1e6,
+            c.time_ns / 1e3, c.instructions, c.cycles
+        );
+    }
+
+    pub fn to_json(&self) -> String {
+        use crate::obs::json;
+        let mut s = String::from("{");
+        json::push_str_field(&mut s, "name", &self.name);
+        json::push_str_field(&mut s, "version",
+                             &format!("{:016x}", self.version));
+        json::push_str_field(&mut s, "path",
+                             &self.path.display().to_string());
+        s.push_str("\"stages\":[");
+        for (i, st) in self.stages.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"stage\":\"{}\",\"cached\":{},\"key\":\"{:016x}\"}}",
+                st.stage, st.cached, st.key
+            ));
+        }
+        s.push_str("],\"cost\":{");
+        let c = &self.cost;
+        json::push_f64_field(&mut s, "energy_pj", c.energy_pj);
+        json::push_f64_field(&mut s, "time_ns", c.time_ns);
+        json::push_f64_field(&mut s, "compute_pj", c.compute_pj);
+        json::push_f64_field(&mut s, "dpu_pj", c.dpu_pj);
+        json::push_u64_field(&mut s, "instructions", c.instructions);
+        json::push_u64_field(&mut s, "cycles", c.cycles);
+        s.pop();
+        s.push_str("}}");
+        s
+    }
+}
+
+/// Hash stage-name + input material into a cache key: the name keeps
+/// two stages with identical input bytes from sharing a file.
+fn stage_key(stage: &str, parts: &[&[u8]]) -> u64 {
+    let mut material = Vec::new();
+    material.extend_from_slice(stage.as_bytes());
+    for p in parts {
+        material.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        material.extend_from_slice(p);
+    }
+    fnv1a(&material)
+}
+
+/// Run one stage through the on-disk cache: a keyed hit is read back
+/// verbatim, a miss computes and persists.
+fn stage(cache_dir: &Path, name: &'static str, key: u64,
+         stages: &mut Vec<StageReport>,
+         compute: impl FnOnce() -> Result<Vec<u8>>) -> Result<Vec<u8>> {
+    let path = cache_dir.join(format!("{name}-{key:016x}.bin"));
+    if let Ok(bytes) = std::fs::read(&path) {
+        stages.push(StageReport { stage: name, cached: true, key });
+        return Ok(bytes);
+    }
+    let bytes = compute()?;
+    std::fs::create_dir_all(cache_dir).map_err(|e| {
+        Error::Config(format!("cannot create {}: {e}", cache_dir.display()))
+    })?;
+    std::fs::write(&path, &bytes).map_err(|e| {
+        Error::Config(format!("cannot write {}: {e}", path.display()))
+    })?;
+    stages.push(StageReport { stage: name, cached: false, key });
+    Ok(bytes)
+}
+
+fn encode_plans(plans: &[LbpLayerPlan]) -> Vec<u8> {
+    let mut out = (plans.len() as u32).to_le_bytes().to_vec();
+    for p in plans {
+        out.extend_from_slice(&p.to_bytes());
+    }
+    out
+}
+
+fn decode_plans(bytes: &[u8]) -> Result<Vec<LbpLayerPlan>> {
+    if bytes.len() < 4 {
+        return Err(Error::Config("plan cache entry truncated".into()));
+    }
+    let n = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    let mut off = 4;
+    let mut plans = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (plan, used) = LbpLayerPlan::from_bytes(&bytes[off..])?;
+        off += used;
+        plans.push(plan);
+    }
+    if off != bytes.len() {
+        return Err(Error::Config("plan cache entry has trailing bytes".into()));
+    }
+    Ok(plans)
+}
+
+fn encode_planes(p1: &WeightPlanes, p2: &WeightPlanes) -> Vec<u8> {
+    let mut out = Vec::new();
+    for b in [p1.to_bytes(), p2.to_bytes()] {
+        out.extend_from_slice(&(b.len() as u64).to_le_bytes());
+        out.extend_from_slice(&b);
+    }
+    out
+}
+
+fn take_blob<'a>(bytes: &'a [u8], off: &mut usize) -> Result<&'a [u8]> {
+    if bytes.len() - *off < 8 {
+        return Err(Error::Config("plane cache entry truncated".into()));
+    }
+    let n = u64::from_le_bytes(bytes[*off..*off + 8].try_into().unwrap())
+        as usize;
+    *off += 8;
+    if bytes.len() - *off < n {
+        return Err(Error::Config("plane cache entry truncated".into()));
+    }
+    let s = &bytes[*off..*off + n];
+    *off += n;
+    Ok(s)
+}
+
+fn decode_planes(bytes: &[u8]) -> Result<(WeightPlanes, WeightPlanes)> {
+    let mut off = 0;
+    let p1 = WeightPlanes::from_bytes(take_blob(bytes, &mut off)?)?;
+    let p2 = WeightPlanes::from_bytes(take_blob(bytes, &mut off)?)?;
+    if off != bytes.len() {
+        return Err(Error::Config("plane cache entry has trailing bytes".into()));
+    }
+    Ok((p1, p2))
+}
+
+/// The price stage's compute: run one synthetic frame through an
+/// architectural engine (full LBP + MLP simulation) built from the
+/// tables the earlier stages produced, and distill its `Telemetry`.
+fn price(params: &NetParams, system: &SystemConfig,
+         plans: &[LbpLayerPlan], planes: &(WeightPlanes, WeightPlanes))
+    -> Result<CostEstimate>
+{
+    let config = EngineConfig {
+        system: system.clone(),
+        arch: ArchSim { lbp: true, mlp: true, early_exit: false },
+        shard: None,
+    };
+    let prepacked = std::sync::Arc::new(crate::engine::Prepacked {
+        plans: plans.to_vec(),
+        planes: Some(planes.clone()),
+    });
+    let mut engine = Engine::builder()
+        .config(config)
+        .params(params.clone())
+        .backend(BackendKind::Architectural)
+        .no_cross_check()
+        .prepacked(prepacked)
+        .build()?;
+    let frames = crate::testing::synth_frames(params, 1, 11)?;
+    let t = engine.infer_batch(&frames)?.telemetry();
+    let e = &t.cost.energy;
+    Ok(CostEstimate {
+        energy_pj: t.cost.total_pj(),
+        time_ns: t.cost.time_ns,
+        compute_pj: e.compute_pj + e.read_pj + e.write_pj + e.ctrl_pj,
+        dpu_pj: e.dpu_pj,
+        instructions: t.exec.instructions,
+        cycles: t.exec.cycles,
+    })
+}
+
+/// Compile `spec` straight to a [`CompiledModel`] in memory — every
+/// stage computed, nothing cached or written.  The version is stamped.
+/// This is what tests and `Server::push_model` callers use when no
+/// artifact file is wanted.
+pub fn build_model(spec: &ModelSpec, system: &SystemConfig)
+    -> Result<CompiledModel>
+{
+    let (params_blob, params) = spec.build_params()?;
+    let plans = crate::model::plan_layers(&params);
+    let cols = system.cache.cols;
+    let w_bits = params.config.w_bits;
+    let p1 = WeightPlanes::pack(&params.mlp1, w_bits, cols)?;
+    let p2 = WeightPlanes::pack(&params.mlp2, w_bits, cols)?;
+    let cost = price(&params, system, &plans, &(p1.clone(), p2.clone()))?;
+    let mut model = CompiledModel {
+        name: spec.name.clone(),
+        version: 0,
+        hw_profile: system.hw_profile().name.clone(),
+        cols,
+        params,
+        params_blob,
+        plans,
+        planes: Some((p1, p2)),
+        cost,
+    };
+    model.to_bytes(); // stamp the content-hash version
+    Ok(model)
+}
+
+/// The staged, cached pipeline: analyze → map → pack → price, then
+/// write the versioned artifact into `opts.out_dir`.
+pub fn compile(spec: &ModelSpec, system: &SystemConfig,
+               opts: &CompileOptions) -> Result<(CompiledModel, CompileReport)>
+{
+    let cache = opts.cache_dir.as_path();
+    let mut stages = Vec::new();
+
+    // analyze: spec → canonical params bytes
+    let fingerprint = spec.fingerprint()?;
+    let analyze_key = stage_key("analyze", &[&fingerprint]);
+    let params_blob = stage(cache, "analyze", analyze_key, &mut stages, || {
+        Ok(spec.build_params()?.0)
+    })?;
+    let params = params::parse(&params_blob).map_err(|e| {
+        Error::Config(format!("corrupt analyze cache entry: {e}"))
+    })?;
+
+    // map: params → per-layer gather plans
+    let map_key = stage_key("map", &[&params_blob]);
+    let plan_bytes = stage(cache, "map", map_key, &mut stages, || {
+        Ok(encode_plans(&crate::model::plan_layers(&params)))
+    })?;
+    let plans = decode_plans(&plan_bytes)?;
+
+    // pack: params + cache geometry → MLP weight bit-planes
+    let cols = system.cache.cols;
+    let cols_bytes = (cols as u64).to_le_bytes();
+    let pack_key = stage_key("pack", &[&params_blob, &cols_bytes]);
+    let plane_bytes = stage(cache, "pack", pack_key, &mut stages, || {
+        let w_bits = params.config.w_bits;
+        let p1 = WeightPlanes::pack(&params.mlp1, w_bits, cols)?;
+        let p2 = WeightPlanes::pack(&params.mlp2, w_bits, cols)?;
+        Ok(encode_planes(&p1, &p2))
+    })?;
+    let planes = decode_planes(&plane_bytes)?;
+
+    // price: one frame through the arch sim under the effective profile
+    let profile_toml = system.hw_profile().to_toml();
+    let price_key = stage_key(
+        "price", &[&params_blob, &cols_bytes, profile_toml.as_bytes()]);
+    let cost_bytes = stage(cache, "price", price_key, &mut stages, || {
+        Ok(price(&params, system, &plans, &planes)?.to_bytes())
+    })?;
+    let cost = CostEstimate::from_bytes(&cost_bytes)?;
+
+    let mut model = CompiledModel {
+        name: spec.name.clone(),
+        version: 0,
+        hw_profile: system.hw_profile().name.clone(),
+        cols,
+        params,
+        params_blob,
+        plans,
+        planes: Some(planes),
+        cost,
+    };
+    let path = model.write_to(&opts.out_dir)?;
+    let report = CompileReport {
+        name: model.name.clone(),
+        version: model.version,
+        path,
+        stages,
+        cost,
+    };
+    Ok((model, report))
+}

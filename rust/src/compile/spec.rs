@@ -1,0 +1,283 @@
+//! `ModelSpec`: the TOML model description `ns-lbp compile` lowers.
+//!
+//! A spec names the network geometry (image dims, LBP layer stack,
+//! approximation degree, dataset head) plus where the weights come from:
+//! either a deterministic synthesis seed (`seed = 42`) or a params file
+//! (`weights = "mnist.params.bin"`).  Every geometry key defaults to the
+//! value `params::synth::default_config()` has always used, so a minimal
+//! spec is just a `[model]` table.  See `configs/models/*.toml` and
+//! EXPERIMENTS.md §Compile for the format.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::ConfigFile;
+use crate::error::{Error, Result};
+use crate::params::{self, synth, NetConfig, NetParams};
+
+/// Every key a spec file may set; anything else is a typo and errors.
+const KNOWN: &[&str] = &[
+    "model.name",
+    "model.seed",
+    "model.weights",
+    "geometry.height",
+    "geometry.width",
+    "geometry.channels",
+    "lbp.layers",
+    "lbp.kernels",
+    "lbp.e",
+    "lbp.window",
+    "approx.code",
+    "approx.pixel",
+    "head.pool",
+    "head.act_bits",
+    "head.w_bits",
+    "head.hidden",
+    "head.classes",
+];
+
+/// Keys that describe the network shape (mutually exclusive with
+/// `model.weights`, which carries its own geometry).
+const GEOMETRY_KEYS: &[&str] = &[
+    "geometry.height",
+    "geometry.width",
+    "geometry.channels",
+    "lbp.layers",
+    "lbp.kernels",
+    "lbp.e",
+    "lbp.window",
+    "approx.code",
+    "approx.pixel",
+    "head.pool",
+    "head.act_bits",
+    "head.w_bits",
+    "head.hidden",
+    "head.classes",
+];
+
+/// Where a spec's weights come from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WeightSource {
+    /// Deterministic synthesis via `params::synth::synth_params_for`.
+    Seed(u64),
+    /// A serialized params file (geometry comes from the file).
+    File(PathBuf),
+}
+
+/// A parsed, validated model spec.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Artifact name; embeds in the output filename, so it is
+    /// restricted to ASCII alphanumerics plus `_`/`-`/`.`.
+    pub name: String,
+    pub source: WeightSource,
+    /// The declared geometry (`Seed` sources only; a `File` source's
+    /// geometry is read from the params file during analysis).
+    pub config: NetConfig,
+}
+
+impl ModelSpec {
+    /// Parse a spec from TOML text.  Relative `weights` paths resolve
+    /// against `dir` (the spec file's directory).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let f = ConfigFile::parse(text)?;
+        for key in f.keys() {
+            if !KNOWN.contains(&key) {
+                return Err(Error::Config(format!(
+                    "model spec: unknown key {key:?}"
+                )));
+            }
+        }
+        let name = f.get_str("model.name", "")?;
+        if name.is_empty() {
+            return Err(Error::Config("model spec: model.name is required".into()));
+        }
+        if !name.chars().all(|c| {
+            c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')
+        }) {
+            return Err(Error::Config(format!(
+                "model spec: name {name:?} must be ASCII alphanumeric/_-."
+            )));
+        }
+        let source = if f.contains("model.weights") {
+            if let Some(k) = GEOMETRY_KEYS.iter().find(|k| f.contains(k)) {
+                return Err(Error::Config(format!(
+                    "model spec: {k} conflicts with model.weights (the \
+                     params file defines the geometry)"
+                )));
+            }
+            if f.contains("model.seed") {
+                return Err(Error::Config(
+                    "model spec: set model.seed or model.weights, not both"
+                        .into(),
+                ));
+            }
+            let p = PathBuf::from(f.get_str("model.weights", "")?);
+            WeightSource::File(if p.is_relative() { dir.join(p) } else { p })
+        } else {
+            let seed = f.get_i64("model.seed", 7)?;
+            WeightSource::Seed(seed as u64)
+        };
+        let d = synth::default_config();
+        let config = NetConfig {
+            height: f.get_usize("geometry.height", d.height)?,
+            width: f.get_usize("geometry.width", d.width)?,
+            in_channels: f.get_usize("geometry.channels", d.in_channels)?,
+            n_lbp_layers: f.get_usize("lbp.layers", d.n_lbp_layers)?,
+            kernels_per_layer: f.get_usize("lbp.kernels", d.kernels_per_layer)?,
+            e: f.get_usize("lbp.e", d.e)?,
+            window: f.get_usize("lbp.window", d.window)?,
+            apx_code: f.get_usize("approx.code", d.apx_code)?,
+            apx_pixel: f.get_usize("approx.pixel", d.apx_pixel)?,
+            pool: f.get_usize("head.pool", d.pool)?,
+            act_bits: f.get_usize("head.act_bits", d.act_bits)?,
+            w_bits: f.get_usize("head.w_bits", d.w_bits)?,
+            hidden: f.get_usize("head.hidden", d.hidden)?,
+            n_classes: f.get_usize("head.classes", d.n_classes)?,
+        };
+        let spec = Self { name, source, config };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a spec file; relative weight paths resolve against its
+    /// directory.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("cannot read {}: {e}", path.display()))
+        })?;
+        let dir = path.parent().unwrap_or_else(|| Path::new("."));
+        Self::parse(&text, dir)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if let WeightSource::Seed(_) = self.source {
+            let c = &self.config;
+            params::validate_config(c)?;
+            // synthesis-only constraints on top of the params format's:
+            // a 1x1 window has no non-pivot point to sample, and an
+            // empty layer/head would make the packed artifact degenerate
+            if c.window < 3 {
+                return Err(Error::Config(
+                    "model spec: lbp.window must be >= 3".into(),
+                ));
+            }
+            if c.kernels_per_layer == 0 || c.hidden == 0 || c.n_classes == 0 {
+                return Err(Error::Config(
+                    "model spec: lbp.kernels, head.hidden and head.classes \
+                     must be non-zero".into(),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The analyze stage's compute: canonical params bytes plus their
+    /// parsed form.  Synthesized weights serialize deterministically;
+    /// file weights are parsed (validating them) and re-serialized so
+    /// the blob is canonical either way.
+    pub fn build_params(&self) -> Result<(Vec<u8>, NetParams)> {
+        match &self.source {
+            WeightSource::Seed(seed) => {
+                Ok(synth::synth_params_for(self.config, *seed))
+            }
+            WeightSource::File(path) => {
+                let p = params::load(path)?;
+                Ok((synth::serialize(&p), p))
+            }
+        }
+    }
+
+    /// Stable fingerprint text for the analyze-stage cache key: every
+    /// spec field in a fixed order, plus the weight file's bytes when
+    /// the source is a file (so editing the file invalidates the stage
+    /// even though the path is unchanged).
+    pub fn fingerprint(&self) -> Result<Vec<u8>> {
+        let c = &self.config;
+        let mut out = format!(
+            "name={}\ngeometry={}x{}x{}\nlbp={}x{} e={} window={}\n\
+             approx={}/{}\nhead=pool{} a{} w{} h{} c{}\n",
+            self.name, c.height, c.width, c.in_channels, c.n_lbp_layers,
+            c.kernels_per_layer, c.e, c.window, c.apx_code, c.apx_pixel,
+            c.pool, c.act_bits, c.w_bits, c.hidden, c.n_classes
+        )
+        .into_bytes();
+        match &self.source {
+            WeightSource::Seed(seed) => {
+                out.extend_from_slice(format!("seed={seed}\n").as_bytes());
+            }
+            WeightSource::File(path) => {
+                out.extend_from_slice(b"weights=\n");
+                out.extend_from_slice(&std::fs::read(path).map_err(|e| {
+                    Error::Config(format!(
+                        "cannot read weights {}: {e}",
+                        path.display()
+                    ))
+                })?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_spec_uses_synth_defaults() {
+        let spec = ModelSpec::parse(
+            "[model]\nname = \"m\"\nseed = 3\n",
+            Path::new("."),
+        )
+        .unwrap();
+        assert_eq!(spec.source, WeightSource::Seed(3));
+        assert_eq!(spec.config, synth::default_config());
+        let (blob, params) = spec.build_params().unwrap();
+        let (blob2, params2) = synth::synth_params(3);
+        assert_eq!(blob, blob2);
+        assert_eq!(params, params2);
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_missing_name() {
+        assert!(ModelSpec::parse("[model]\nname=\"m\"\nfoo=1\n",
+                                 Path::new(".")).is_err());
+        assert!(ModelSpec::parse("[model]\nseed=1\n", Path::new(".")).is_err());
+        assert!(ModelSpec::parse("[model]\nname=\"a b\"\n", Path::new("."))
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_weights_with_geometry() {
+        let text = "[model]\nname=\"m\"\nweights=\"w.bin\"\n\
+                    [geometry]\nheight = 12\n";
+        assert!(ModelSpec::parse(text, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_geometry() {
+        // pool does not divide the image
+        let text = "[model]\nname=\"m\"\n[head]\npool = 5\n";
+        assert!(ModelSpec::parse(text, Path::new(".")).is_err());
+        let text = "[model]\nname=\"m\"\n[lbp]\nwindow = 1\n";
+        assert!(ModelSpec::parse(text, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_field() {
+        let a = ModelSpec::parse("[model]\nname=\"m\"\nseed=1\n",
+                                 Path::new(".")).unwrap();
+        let b = ModelSpec::parse("[model]\nname=\"m\"\nseed=2\n",
+                                 Path::new(".")).unwrap();
+        let c = ModelSpec::parse(
+            "[model]\nname=\"m\"\nseed=1\n[lbp]\ne = 6\n",
+            Path::new("."),
+        )
+        .unwrap();
+        let fa = a.fingerprint().unwrap();
+        assert_ne!(fa, b.fingerprint().unwrap());
+        assert_ne!(fa, c.fingerprint().unwrap());
+        assert_eq!(fa, a.fingerprint().unwrap());
+    }
+}

@@ -308,6 +308,10 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// ... or once the oldest queued frame is this old [µs].
     pub batch_deadline_us: u64,
+    /// Per-shard LRU capacity for engines built from pushed model
+    /// artifacts (the default model's engines are pinned and never
+    /// evicted; this bounds the rest).
+    pub model_cache: usize,
     /// Per-class overrides, indexed by [`QosClass::index`].
     pub classes: [ClassPolicy; QosClass::COUNT],
 }
@@ -315,7 +319,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         Self { shards: 4, queue_depth: 256, max_batch: 16,
-               batch_deadline_us: 2000,
+               batch_deadline_us: 2000, model_cache: 4,
                classes: [ClassPolicy::default(); QosClass::COUNT] }
     }
 }
@@ -330,6 +334,9 @@ impl ServeConfig {
         }
         if self.max_batch == 0 {
             return Err(Error::Config("serve.max_batch must be >= 1".into()));
+        }
+        if self.model_cache == 0 {
+            return Err(Error::Config("serve.model_cache must be >= 1".into()));
         }
         for class in QosClass::ALL {
             let k = self.class_knobs(class);
@@ -382,10 +389,31 @@ pub struct SystemConfig {
     pub hw: HwSelection,
     /// Trace/observability pipeline knobs (see [`crate::obs`]).
     pub obs: crate::obs::ObsConfig,
+    /// Model-compilation directories (see [`crate::compile`]).
+    pub compile: CompileDirs,
     /// Worker threads for the coordinator (0 = one per bank group).
     pub workers: usize,
     /// Artifacts directory for HLO/params files.
     pub artifacts_dir: String,
+}
+
+/// Where `ns-lbp compile` puts things (`[compile]` section); the CLI
+/// `--out-dir` / `--cache-dir` options override per invocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompileDirs {
+    /// Finished `<name>-<version>.nslbpc` artifacts.
+    pub out_dir: String,
+    /// Per-stage compile-cache entries (safe to delete any time).
+    pub cache_dir: String,
+}
+
+impl Default for CompileDirs {
+    fn default() -> Self {
+        Self {
+            out_dir: "artifacts/models".into(),
+            cache_dir: "artifacts/compile-cache".into(),
+        }
+    }
 }
 
 impl Default for SystemConfig {
@@ -398,6 +426,7 @@ impl Default for SystemConfig {
             engine: EngineSelection::default(),
             hw: HwSelection::default(),
             obs: crate::obs::ObsConfig::default(),
+            compile: CompileDirs::default(),
             workers: 0,
             artifacts_dir: "artifacts".into(),
         }
@@ -419,7 +448,7 @@ impl SystemConfig {
             "sensor.rows", "sensor.cols", "sensor.channels",
             "sensor.adc_bits", "sensor.skip_lsbs", "sensor.fps",
             "serve.shards", "serve.queue_depth", "serve.max_batch",
-            "serve.batch_deadline_us",
+            "serve.batch_deadline_us", "serve.model_cache",
             "serve.best_effort.queue_depth", "serve.best_effort.max_batch",
             "serve.best_effort.deadline_us", "serve.best_effort.drop_oldest",
             "serve.standard.queue_depth", "serve.standard.max_batch",
@@ -431,6 +460,7 @@ impl SystemConfig {
             "engine.routing.billed",
             "obs.enabled", "obs.ring_capacity", "obs.sample_period_us",
             "obs.jsonl_path",
+            "compile.out_dir", "compile.cache_dir",
             "runtime.workers", "runtime.artifacts_dir",
         ];
         // `[hw]` keys: the profile selector plus flat field overrides
@@ -524,6 +554,8 @@ impl SystemConfig {
             batch_deadline_us: file
                 .get_usize("serve.batch_deadline_us",
                            d.serve.batch_deadline_us as usize)? as u64,
+            model_cache: file
+                .get_usize("serve.model_cache", d.serve.model_cache)?,
             classes,
         };
         serve.validate()?;
@@ -569,6 +601,12 @@ impl SystemConfig {
         hw.clock_explicit = file.contains("hw.freq_ghz");
         hw.profile.validate()?;
 
+        let compile = CompileDirs {
+            out_dir: file.get_str("compile.out_dir", &d.compile.out_dir)?,
+            cache_dir: file
+                .get_str("compile.cache_dir", &d.compile.cache_dir)?,
+        };
+
         Ok(Self {
             cache,
             circuit,
@@ -577,6 +615,7 @@ impl SystemConfig {
             engine,
             hw,
             obs,
+            compile,
             workers: file.get_usize("runtime.workers", d.workers)?,
             artifacts_dir: file.get_str("runtime.artifacts_dir", &d.artifacts_dir)?,
         })

@@ -113,6 +113,17 @@ pub struct ArchitecturalBackend {
 
 impl ArchitecturalBackend {
     pub fn new(params: NetParams, config: EngineConfig) -> Result<Self> {
+        Self::with_prepacked(params, config, None)
+    }
+
+    /// Build, reusing compiled tables from an artifact when given: the
+    /// gather plans always, the weight bit-planes when the in-memory MLP
+    /// is simulated.  Tables are validated against the params and cache
+    /// geometry — a mismatch errors instead of silently repacking.
+    pub fn with_prepacked(params: NetParams, config: EngineConfig,
+                          prepacked: Option<&crate::engine::Prepacked>)
+        -> Result<Self>
+    {
         config.validate()?;
         let cost_model = config.system.hw_profile();
         let g = &config.system.cache;
@@ -121,16 +132,25 @@ impl ArchitecturalBackend {
         let cfg = &params.config;
         // everything static packs once at build: the MLP map consumes
         // the LBP map, and the weight columns transpose into
-        // chunk-aligned, offset-stored bit-plane buffers
+        // chunk-aligned, offset-stored bit-plane buffers (or come
+        // prepacked from a compiled artifact)
         let (mmap, weight_planes) = if config.arch.mlp {
             let mmap = MlpSubarrayMap::new(map, cfg.act_bits, cfg.w_bits)?;
-            let p1 = WeightPlanes::pack(&params.mlp1, cfg.w_bits, g.cols)?;
-            let p2 = WeightPlanes::pack(&params.mlp2, cfg.w_bits, g.cols)?;
-            (Some(mmap), Some((p1, p2)))
+            let planes = match prepacked {
+                Some(p) => p.planes_for(&params, g.cols)?,
+                None => (
+                    WeightPlanes::pack(&params.mlp1, cfg.w_bits, g.cols)?,
+                    WeightPlanes::pack(&params.mlp2, cfg.w_bits, g.cols)?,
+                ),
+            };
+            (Some(mmap), Some(planes))
         } else {
             (None, None)
         };
-        let plans = model::plan_layers(&params);
+        let plans = match prepacked {
+            Some(p) => p.plans_for(&params)?,
+            None => model::plan_layers(&params),
+        };
         Ok(Self {
             params,
             config,

@@ -54,8 +54,20 @@ pub struct FunctionalBackend {
 
 impl FunctionalBackend {
     pub fn new(params: NetParams, config: &EngineConfig) -> Result<Self> {
+        Self::with_prepacked(params, config, None)
+    }
+
+    /// Build, reusing compiled gather plans from an artifact when given
+    /// (validated against the params — a mismatch is an error).
+    pub fn with_prepacked(params: NetParams, config: &EngineConfig,
+                          prepacked: Option<&crate::engine::Prepacked>)
+        -> Result<Self>
+    {
         config.validate()?;
-        let plans = model::plan_layers(&params);
+        let plans = match prepacked {
+            Some(p) => p.plans_for(&params)?,
+            None => model::plan_layers(&params),
+        };
         Ok(Self {
             params,
             cost_model: config.system.hw_profile(),

@@ -198,14 +198,17 @@ impl std::str::FromStr for QosClass {
     }
 }
 
-/// Per-class backend selection: which [`BackendKind`] serves each
-/// [`QosClass`].  Unrouted classes fall back to the engine's default
-/// backend.  Settable from the `[engine.routing]` config section
-/// (`best_effort = "functional"` …) or repeated `--route class=backend`
-/// CLI options.
+/// Backend selection keyed by `(QosClass, model_id)`: which
+/// [`BackendKind`] serves each class, optionally refined per served
+/// model.  Resolution order is model route → class route → the engine's
+/// default backend.  Class routes come from the `[engine.routing]`
+/// config section (`best_effort = "functional"` …) or repeated
+/// `--route class=backend` CLI options; model routes from
+/// `--route class@model=backend`.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RoutingPolicy {
     routes: [Option<BackendKind>; QosClass::COUNT],
+    model_routes: std::collections::BTreeMap<(usize, u32), BackendKind>,
 }
 
 impl RoutingPolicy {
@@ -214,9 +217,22 @@ impl RoutingPolicy {
         self.routes[class.index()] = Some(kind);
     }
 
+    /// Route `(class, model_id)` to `kind`, shadowing the class route.
+    pub fn set_model(&mut self, class: QosClass, model_id: u32,
+                     kind: BackendKind) {
+        self.model_routes.insert((class.index(), model_id), kind);
+    }
+
     /// The explicit route for `class`, if one is configured.
     pub fn route(&self, class: QosClass) -> Option<BackendKind> {
         self.routes[class.index()]
+    }
+
+    /// The explicit route for `(class, model_id)`, if one is configured.
+    pub fn model_route(&self, class: QosClass, model_id: u32)
+        -> Option<BackendKind>
+    {
+        self.model_routes.get(&(class.index(), model_id)).copied()
     }
 
     /// The backend `class` resolves to under `default`.
@@ -224,16 +240,24 @@ impl RoutingPolicy {
         self.routes[class.index()].unwrap_or(default)
     }
 
-    /// True when no class has an explicit route.
-    pub fn is_empty(&self) -> bool {
-        self.routes.iter().all(|r| r.is_none())
+    /// The backend `(class, model_id)` resolves to under `default`:
+    /// model route first, then the class route, then `default`.
+    pub fn resolve_model(&self, class: QosClass, model_id: u32,
+                         default: BackendKind) -> BackendKind {
+        self.model_route(class, model_id)
+            .unwrap_or_else(|| self.resolve(class, default))
     }
 
-    /// Distinct backends the classes actually resolve to (in class
-    /// order) — the set of engines every serve shard must instantiate.
-    /// A default backend no class resolves to is *not* included: if all
-    /// three classes are routed elsewhere, no shard needs to build (or
-    /// be able to build) the default.
+    /// True when neither a class nor a model has an explicit route.
+    pub fn is_empty(&self) -> bool {
+        self.routes.iter().all(|r| r.is_none()) && self.model_routes.is_empty()
+    }
+
+    /// Distinct backends the classes (and any model routes) actually
+    /// resolve to — the set of engines every serve shard must be able to
+    /// instantiate.  A default backend no class resolves to is *not*
+    /// included: if all three classes are routed elsewhere, no shard
+    /// needs to build (or be able to build) the default.
     pub fn backend_set(&self, default: BackendKind) -> Vec<BackendKind> {
         let mut kinds = Vec::new();
         for class in QosClass::ALL {
@@ -242,17 +266,33 @@ impl RoutingPolicy {
                 kinds.push(k);
             }
         }
+        for &k in self.model_routes.values() {
+            if !kinds.contains(&k) {
+                kinds.push(k);
+            }
+        }
         kinds
     }
 
-    /// Apply a CLI `--route class=backend` spec.
+    /// Apply a CLI `--route class=backend` or `class@model=backend` spec.
     pub fn apply_spec(&mut self, spec: &str) -> Result<()> {
-        let (class, backend) = spec.split_once('=').ok_or_else(|| {
+        let (target, backend) = spec.split_once('=').ok_or_else(|| {
             Error::Config(format!(
-                "--route expects class=backend, got {spec:?}"
+                "--route expects class=backend or class@model=backend, \
+                 got {spec:?}"
             ))
         })?;
-        self.set(class.parse()?, backend.parse()?);
+        match target.split_once('@') {
+            Some((class, model)) => {
+                let model_id: u32 = model.parse().map_err(|_| {
+                    Error::Config(format!(
+                        "--route model id {model:?} is not a u32"
+                    ))
+                })?;
+                self.set_model(class.parse()?, model_id, backend.parse()?);
+            }
+            None => self.set(target.parse()?, backend.parse()?),
+        }
         Ok(())
     }
 }
@@ -486,9 +526,10 @@ pub(crate) fn validate_frame(frame: &Frame, cfg: &NetConfig) -> Result<()> {
         || frame.pixels.len() != pixels
     {
         return Err(Error::Engine(format!(
-            "frame {}x{}x{} ({} px) vs network {}x{}x{}",
-            frame.rows, frame.cols, frame.channels, frame.pixels.len(),
-            cfg.height, cfg.width, cfg.in_channels
+            "frame shape mismatch: expected {}x{}x{} ({} px), \
+             got {}x{}x{} ({} px)",
+            cfg.height, cfg.width, cfg.in_channels, pixels,
+            frame.rows, frame.cols, frame.channels, frame.pixels.len()
         )));
     }
     Ok(())
@@ -510,14 +551,96 @@ pub(crate) fn digitize_into(frame: &Frame, cfg: &NetConfig,
     Ok(())
 }
 
+/// Compiled, ready-to-use engine tables: the per-layer LBP gather plans
+/// and (optionally) both MLP weight bit-plane sets, as carried by a
+/// `compile::CompiledModel` artifact.  Backends handed one of these skip
+/// `model::plan_layers` / `WeightPlanes::pack` at construction — the
+/// whole point of compiling ahead of time — after validating that the
+/// tables actually belong to the params and cache geometry in use.
+#[derive(Clone, Debug)]
+pub struct Prepacked {
+    /// One gather plan per LBP layer (`model::plan_layers` output).
+    pub plans: Vec<crate::model::LbpLayerPlan>,
+    /// `(mlp1, mlp2)` weight bit-planes, packed at the compiling cache
+    /// geometry.  `None` when the artifact was compiled without them.
+    pub planes: Option<(crate::mlp::WeightPlanes, crate::mlp::WeightPlanes)>,
+}
+
+impl Prepacked {
+    /// The gather plans, validated against `params` (layer count and
+    /// per-layer channel growth must match).
+    pub fn plans_for(&self, params: &NetParams)
+        -> Result<Vec<crate::model::LbpLayerPlan>>
+    {
+        let chs = params.config.channels_after();
+        if self.plans.len() != params.lbp_layers.len() {
+            return Err(Error::Engine(format!(
+                "prepacked plans cover {} LBP layers, params have {}",
+                self.plans.len(), params.lbp_layers.len()
+            )));
+        }
+        for (i, (plan, &c)) in self.plans.iter().zip(&chs).enumerate() {
+            if plan.width != params.config.width || plan.channels != c {
+                return Err(Error::Engine(format!(
+                    "prepacked plan {i} linearized for {}x{} channels, \
+                     params need {}x{}",
+                    plan.width, plan.channels, params.config.width, c
+                )));
+            }
+        }
+        Ok(self.plans.clone())
+    }
+
+    /// The weight bit-planes, validated against `params` and the engine's
+    /// cache geometry (`cols` lanes, `w_bits` planes).  Errors rather
+    /// than silently repacking: an artifact compiled for a different
+    /// geometry must be recompiled, not patched up at load.
+    pub fn planes_for(&self, params: &NetParams, cols: usize)
+        -> Result<(crate::mlp::WeightPlanes, crate::mlp::WeightPlanes)>
+    {
+        let (p1, p2) = self.planes.as_ref().ok_or_else(|| {
+            Error::Engine(
+                "artifact carries no weight planes; recompile with the \
+                 architectural MLP path enabled".into(),
+            )
+        })?;
+        let cfg = &params.config;
+        for (name, p, d, o) in [
+            ("mlp1", p1, params.mlp1.d, params.mlp1.o),
+            ("mlp2", p2, params.mlp2.d, params.mlp2.o),
+        ] {
+            if p.cols != cols || p.w_bits != cfg.w_bits {
+                return Err(Error::Engine(format!(
+                    "prepacked {name} planes built for cols={} w_bits={}, \
+                     engine needs cols={cols} w_bits={}; recompile the \
+                     artifact for this cache geometry",
+                    p.cols, p.w_bits, cfg.w_bits
+                )));
+            }
+            if p.d != d || p.o != o {
+                return Err(Error::Engine(format!(
+                    "prepacked {name} planes shaped {}x{}, params need \
+                     {d}x{o}",
+                    p.d, p.o
+                )));
+            }
+        }
+        Ok((p1.clone(), p2.clone()))
+    }
+}
+
 fn make_backend(kind: BackendKind, params: &NetParams, config: &EngineConfig,
-                artifact: &str) -> Result<Box<dyn InferenceBackend + Send>> {
+                artifact: &str, prepacked: Option<&Prepacked>)
+    -> Result<Box<dyn InferenceBackend + Send>>
+{
     let backend: Box<dyn InferenceBackend + Send> = match kind {
         BackendKind::Functional => {
-            Box::new(FunctionalBackend::new(params.clone(), config)?)
+            Box::new(FunctionalBackend::with_prepacked(
+                params.clone(), config, prepacked)?)
         }
         BackendKind::Architectural => {
-            Box::new(ArchitecturalBackend::new(params.clone(), config.clone())?)
+            Box::new(ArchitecturalBackend::with_prepacked(
+                params.clone(), config.clone(), prepacked)?)
         }
         BackendKind::Pjrt => {
             Box::new(PjrtBackend::new(params.clone(), config,
@@ -666,6 +789,7 @@ pub struct EngineBuilder {
     cross_check: Option<Option<BackendKind>>,
     artifact: Option<String>,
     hw_profile: Option<HwProfile>,
+    prepacked: Option<std::sync::Arc<Prepacked>>,
 }
 
 impl EngineBuilder {
@@ -710,6 +834,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Compiled tables from a `CompiledModel` artifact: backends reuse
+    /// the gather plans and weight bit-planes instead of rebuilding
+    /// them.  The tables are validated against the params and cache
+    /// geometry at build — a mismatching artifact is an error, never a
+    /// silent repack.
+    pub fn prepacked(mut self, prepacked: std::sync::Arc<Prepacked>) -> Self {
+        self.prepacked = Some(prepacked);
+        self
+    }
+
     pub fn build(mut self) -> Result<Engine> {
         let params = self.params.ok_or_else(|| {
             Error::Engine("EngineBuilder: params not set".into())
@@ -726,9 +860,12 @@ impl EngineBuilder {
         let artifact = self
             .artifact
             .unwrap_or_else(|| self.config.system.engine.pjrt_artifact.clone());
-        let primary = make_backend(kind, &params, &self.config, &artifact)?;
+        let prepacked = self.prepacked.as_deref();
+        let primary =
+            make_backend(kind, &params, &self.config, &artifact, prepacked)?;
         let reference = match cross {
-            Some(k) => Some(make_backend(k, &params, &self.config, &artifact)?),
+            Some(k) => Some(make_backend(k, &params, &self.config, &artifact,
+                                         prepacked)?),
             None => None,
         };
         Ok(Engine {
@@ -772,6 +909,25 @@ mod tests {
     #[test]
     fn builder_requires_params() {
         assert!(Engine::builder().build().is_err());
+    }
+
+    #[test]
+    fn validate_frame_reports_expected_then_actual_dims() {
+        let (params, frames) = setup(1);
+        let cfg = &params.config;
+        assert!(validate_frame(&frames[0], cfg).is_ok());
+        let mut frame = frames[0].clone();
+        frame.rows += 1;
+        frame.pixels.truncate(3);
+        let msg = validate_frame(&frame, cfg).unwrap_err().to_string();
+        let want = format!(
+            "expected {}x{}x{} ({} px), got {}x{}x{} (3 px)",
+            cfg.height, cfg.width, cfg.in_channels,
+            cfg.height * cfg.width * cfg.in_channels,
+            cfg.height + 1, cfg.width, cfg.in_channels
+        );
+        assert!(msg.contains(&want),
+                "message should carry expected-then-actual dims: {msg}");
     }
 
     #[test]

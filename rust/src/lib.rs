@@ -63,6 +63,13 @@
 //! * [`coordinator`] — the near-sensor run loop: digitizes frames from a
 //!   sensor, fans them out over worker threads (one engine each), and
 //!   aggregates per-frame reports into a `RunSummary`.
+//! * [`compile`] — staged model compilation (`ns-lbp compile`): a
+//!   `ModelSpec` TOML description is lowered analyze → map → pack →
+//!   price into a versioned `CompiledModel` artifact (canonical params,
+//!   LBP gather plans, prepacked MLP weight planes, `hw`-priced cost),
+//!   with every stage cached on disk by content hash so recompiles are
+//!   incremental; engines built from an artifact skip all packing and
+//!   are bit-identical to from-params engines.
 //! * [`serve`] — the traffic-facing layer on top of the engine: typed
 //!   requests (`Request`/`RequestBuilder`, per-sensor `Session` sequence
 //!   spaces) with a `QosClass` each, per-class bounded admission queues
@@ -85,6 +92,7 @@ pub mod bench_harness;
 pub mod baselines;
 pub mod circuit;
 pub mod cli;
+pub mod compile;
 pub mod config;
 pub mod coordinator;
 pub mod dpu;

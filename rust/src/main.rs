@@ -21,6 +21,13 @@
 //!                 `--trace out.jsonl` records the full request lifecycle
 //!                 as a JSONL span feed plus a Chrome/Perfetto
 //!                 `out.trace.json`.
+//! * `compile`   — lower a model-spec TOML (`configs/models/*.toml`)
+//!                 through the staged analyze→map→pack→price pipeline to
+//!                 a versioned `.nslbpc` artifact (stage outputs cached
+//!                 on disk, so recompiles are incremental); `--check`
+//!                 reloads the artifact and proves engines built from it
+//!                 are bit-identical to from-params engines; serve it
+//!                 with `serve-bench --model-artifact FILE`.
 //! * `trace`     — summarize a JSONL trace feed (`ns-lbp trace out.jsonl`):
 //!                 per-stage p50/p95/p99 latency, energy by stage, drop
 //!                 causes; `--json` emits the summary machine-readably.
@@ -28,8 +35,9 @@
 //!                 two engines under two hardware profiles
 //!                 (`--profile A --profile B`) and print/`--json`-emit a
 //!                 side-by-side diff of energy, time, TOPS/W and area.
-//! * `profile`   — print the selected hardware profile as a standalone
-//!                 TOML file (the `configs/profiles/*.toml` format).
+//! * `profile`   — print a hardware profile as a standalone TOML file
+//!                 (the `configs/profiles/*.toml` format); with no name
+//!                 given, list the built-in profile names.
 //! * `transient` — print the Fig. 9 RBL discharge waveforms.
 //! * `montecarlo`— run the Fig. 10 variation analysis.
 //! * `info`      — show configuration, geometry, energy/area headline.
@@ -41,6 +49,7 @@
 
 use ns_lbp::circuit::{MonteCarlo, SENSE_DELAY_PS};
 use ns_lbp::cli::Command;
+use ns_lbp::compile::{CompileOptions, CompiledModel, ModelSpec};
 use ns_lbp::config::SystemConfig;
 use ns_lbp::coordinator::{ArchSim, Coordinator, CoordinatorConfig};
 use ns_lbp::engine::{BackendKind, Engine, QosClass};
@@ -70,9 +79,11 @@ fn command() -> Command {
     Command::new("ns-lbp", "near-sensor LBP accelerator simulator")
         .subcommand("run", "stream frames through the pipeline")
         .subcommand("serve-bench", "drive the sharded, batching serve layer")
+        .subcommand("compile", "compile a model spec to a versioned artifact")
         .subcommand("ab", "A/B energy harness: two hw profiles, same frames")
         .subcommand("trace", "summarize a JSONL trace feed")
-        .subcommand("profile", "print a hardware profile as TOML")
+        .subcommand("profile", "print a hardware profile as TOML (no name: \
+                                list built-ins)")
         .subcommand("transient", "Fig. 9 RBL discharge waveforms")
         .subcommand("montecarlo", "Fig. 10 sense-margin analysis")
         .subcommand("info", "configuration and headline numbers")
@@ -102,6 +113,16 @@ fn command() -> Command {
         .opt("trace", "FILE",
              "serve-bench: write a JSONL trace feed (and FILE's .trace.json \
               Chrome/Perfetto twin)")
+        .opt_repeated("model-artifact", "FILE",
+                      "serve-bench: also serve this compiled artifact \
+                       (model ids 1, 2, ... in option order)")
+        .opt("out-dir", "DIR",
+             "compile: artifact output directory (default [compile] out_dir)")
+        .opt("cache-dir", "DIR",
+             "compile: stage-cache directory (default [compile] cache_dir)")
+        .flag("check",
+              "compile: reload the artifact and verify engines built from \
+               it match from-params engines bit for bit")
         .flag("json", "serve-bench: emit one machine-readable JSON report")
         .flag("compare", "serve-bench: also run 1 shard, print speedup")
         .flag("arch-mlp", "simulate the MLP in-memory too")
@@ -120,9 +141,10 @@ fn real_main(args: &[String]) -> Result<()> {
     match parsed.subcommand.as_deref() {
         Some("run") => run_pipeline(&parsed, system),
         Some("serve-bench") => serve_bench(&parsed, system),
+        Some("compile") => compile_model(&parsed, system),
         Some("ab") => ab_compare(&parsed, system),
         Some("trace") => trace_summary(&parsed),
-        Some("profile") => dump_profile(&system),
+        Some("profile") => dump_profile(&parsed, &system),
         Some("transient") => transient(system),
         Some("montecarlo") => montecarlo(&parsed, system),
         Some("info") | None => info(system),
@@ -315,13 +337,15 @@ fn run_pipeline(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig)
 }
 
 /// Replay `frames` through one server instance at `load` offered fps
-/// (0 = unthrottled), cycling frames through the `mix` class pattern —
-/// one session (= one sensor stream) per class.  Rejected submissions
-/// are retried so every frame is offered; tickets shed by drop-oldest
-/// admission or deadline expiry count as drops, not errors.
+/// (0 = unthrottled), cycling frames through the `mix` class pattern and
+/// round-robin across the served models (the from-params default plus
+/// one pushed model per `--model-artifact`) — one session (= one sensor
+/// stream) per (class, model) pair.  Rejected submissions are retried so
+/// every frame is offered; tickets shed by drop-oldest admission or
+/// deadline expiry count as drops, not errors.
 fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
                 shards: usize, frames: &[Frame], load: f64,
-                mix: &[QosClass])
+                mix: &[QosClass], models: &[CompiledModel])
                 -> Result<ns_lbp::serve::metrics::MetricsReport> {
     let mut system = system.clone();
     system.serve.shards = shards;
@@ -329,9 +353,33 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
         params.clone(),
         CoordinatorConfig { system, arch, shard: None },
     )?;
-    let sessions: Vec<Session<'_>> = QosClass::ALL
-        .iter()
-        .map(|&class| server.session(class.index() as u32).with_class(class))
+    for (i, model) in models.iter().enumerate() {
+        // the replayed frames were synthesized against the default
+        // geometry, so every served model must share it — otherwise
+        // admission would reject the frames and the retry loop would
+        // spin forever
+        let (m, d) = (&model.params.config, &params.config);
+        if (m.height, m.width, m.in_channels)
+            != (d.height, d.width, d.in_channels)
+        {
+            return Err(ns_lbp::Error::Usage(format!(
+                "--model-artifact {}: geometry {}x{}x{} does not match the \
+                 replayed frames ({}x{}x{})",
+                model.name, m.height, m.width, m.in_channels,
+                d.height, d.width, d.in_channels
+            )));
+        }
+        server.push_model(i as u32 + 1, model)?;
+    }
+    let n_models = models.len() + 1;
+    let sessions: Vec<Session<'_>> = (0..n_models)
+        .flat_map(|mid| QosClass::ALL.iter().map(move |&class| (mid, class)))
+        .map(|(mid, class)| {
+            server
+                .session((mid * QosClass::COUNT + class.index()) as u32)
+                .with_class(class)
+                .with_model(mid as u32)
+        })
         .collect();
     let t0 = std::time::Instant::now();
     let mut tickets: Vec<Ticket> = Vec::with_capacity(frames.len());
@@ -343,7 +391,8 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
                 std::thread::sleep(due - now);
             }
         }
-        let session = &sessions[mix[i % mix.len()].index()];
+        let session = &sessions[(i % n_models) * QosClass::COUNT
+                                + mix[i % mix.len()].index()];
         loop {
             match session.submit(frame.clone()) {
                 Ok(t) => {
@@ -436,6 +485,11 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
         mlp: parsed.flag("arch-mlp"),
         early_exit: parsed.flag("early-exit"),
     };
+    let models: Vec<CompiledModel> = parsed
+        .opt_all("model-artifact")
+        .iter()
+        .map(CompiledModel::load)
+        .collect::<Result<_>>()?;
     let frames = synth_frames(&params, frames_n, seed)?;
     let mix_banner: Vec<String> =
         mix.iter().map(|c| c.as_str().to_string()).collect();
@@ -453,6 +507,12 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
             system.serve.batch_deadline_us,
             system.serve.queue_depth,
         );
+        for (i, m) in models.iter().enumerate() {
+            println!(
+                "model {:>4}: {} v{:016x} (from artifact)",
+                i + 1, m.name, m.version
+            );
+        }
     }
 
     let shard_counts: Vec<usize> = if parsed.flag("compare") {
@@ -462,8 +522,8 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
     };
     let mut results = Vec::new();
     for &n in &shard_counts {
-        let report =
-            serve_replay(&params, &system, arch, n, &frames, load, &mix)?;
+        let report = serve_replay(&params, &system, arch, n, &frames, load,
+                                  &mix, &models)?;
         if !json {
             report.print(&format!("{n} shard(s)"));
             println!(
@@ -590,11 +650,127 @@ fn ab_compare(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig)
     Ok(())
 }
 
-/// `ns-lbp profile --hw-profile NAME`: print the selected hardware
-/// profile as a standalone TOML file (the `configs/profiles/*.toml`
-/// format; redirect to a file to snapshot or fork a profile).
-fn dump_profile(system: &SystemConfig) -> Result<()> {
-    print!("{}", system.hw.profile.to_toml());
+/// `ns-lbp profile [NAME]`: print a hardware profile as a standalone
+/// TOML file (the `configs/profiles/*.toml` format; redirect to a file
+/// to snapshot or fork a profile).  NAME may also come from
+/// `--hw-profile`; with neither, list the built-in profile names so the
+/// subcommand is self-documenting.
+fn dump_profile(parsed: &ns_lbp::cli::Parsed, system: &SystemConfig)
+                -> Result<()> {
+    if let Some(name) = parsed.positionals.first() {
+        print!("{}", HwProfile::resolve(name)?.to_toml());
+    } else if parsed.opt("hw-profile").is_some() {
+        print!("{}", system.hw.profile.to_toml());
+    } else {
+        println!("built-in hardware profiles (ns-lbp profile NAME):");
+        for name in ns_lbp::hw::BUILTIN_PROFILES {
+            println!("  {name}");
+        }
+    }
+    Ok(())
+}
+
+/// `ns-lbp compile SPEC.toml [--out-dir D] [--cache-dir D] [--json]
+/// [--check]`: lower a model spec through the staged pipeline into a
+/// versioned on-disk artifact.  `--check` reloads the artifact from disk
+/// and proves engines built from its prepacked tables reproduce
+/// from-params engines exactly — bit-identical logits and identical
+/// modeled cost — on both backends.
+fn compile_model(parsed: &ns_lbp::cli::Parsed, system: SystemConfig)
+                 -> Result<()> {
+    let spec_path = parsed.positionals.first().ok_or_else(|| {
+        ns_lbp::Error::Usage(
+            "compile expects the spec path: ns-lbp compile SPEC.toml \
+             [--out-dir DIR] [--cache-dir DIR] [--json] [--check]"
+                .into(),
+        )
+    })?;
+    let spec = ModelSpec::load(spec_path)?;
+    let mut opts = CompileOptions::from_system(&system);
+    if let Some(dir) = parsed.opt("out-dir") {
+        opts.out_dir = dir.into();
+    }
+    if let Some(dir) = parsed.opt("cache-dir") {
+        opts.cache_dir = dir.into();
+    }
+    let (model, report) = ns_lbp::compile::compile(&spec, &system, &opts)?;
+    if parsed.flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        report.print();
+    }
+    if parsed.flag("check") {
+        check_artifact(&report.path, model.version, &system, parsed.flag("json"))?;
+    }
+    Ok(())
+}
+
+/// The `compile --check` gate: reload the artifact at `path` and assert
+/// that, for both backends, an engine fed its prepacked tables produces
+/// bit-identical logits and identical modeled cost to an engine that
+/// packs the same parameters from scratch.
+fn check_artifact(path: &std::path::Path, version: u64,
+                  system: &SystemConfig, json: bool) -> Result<()> {
+    let loaded = CompiledModel::load(path)?;
+    if loaded.version != version {
+        return Err(ns_lbp::Error::Engine(format!(
+            "reloaded artifact version {:016x} does not match the compile \
+             output {version:016x}",
+            loaded.version
+        )));
+    }
+    let frames = synth_frames(&loaded.params, 4, 23)?;
+    let arch = ArchSim { lbp: true, mlp: true, early_exit: false };
+    for kind in [BackendKind::Functional, BackendKind::Architectural] {
+        let config = CoordinatorConfig {
+            system: system.clone(),
+            arch,
+            shard: None,
+        };
+        let mut from_params = Engine::builder()
+            .config(config.clone())
+            .params(loaded.params.clone())
+            .backend(kind)
+            .no_cross_check()
+            .build()?;
+        let mut from_artifact = Engine::builder()
+            .config(config)
+            .params(loaded.params.clone())
+            .backend(kind)
+            .no_cross_check()
+            .prepacked(std::sync::Arc::new(loaded.prepacked()))
+            .build()?;
+        let want = from_params.infer_batch(&frames)?;
+        let got = from_artifact.infer_batch(&frames)?;
+        for (w, g) in want.frames.iter().zip(&got.frames) {
+            if w.logits != g.logits || w.predicted != g.predicted {
+                return Err(ns_lbp::Error::Engine(format!(
+                    "check failed: {kind} engine from the artifact diverged \
+                     from the from-params engine on frame {}",
+                    w.seq
+                )));
+            }
+        }
+        let (tw, tg) = (want.telemetry(), got.telemetry());
+        if tw.cost.energy.total_pj() != tg.cost.energy.total_pj()
+            || tw.cost.time_ns != tg.cost.time_ns
+            || tw.exec.instructions != tg.exec.instructions
+        {
+            return Err(ns_lbp::Error::Engine(format!(
+                "check failed: {kind} engine from the artifact priced \
+                 differently from the from-params engine"
+            )));
+        }
+        if !json {
+            println!(
+                "check {kind}: {} frames bit-identical \
+                 ({:.3} µJ/frame, {} instrs)",
+                frames.len(),
+                tw.cost.energy.total_pj() / 1e6 / frames.len() as f64,
+                tw.exec.instructions
+            );
+        }
+    }
     Ok(())
 }
 

@@ -108,6 +108,60 @@ impl WeightPlanes {
         let base = ((chunk * self.o + out) * self.w_bits + n) * self.words;
         Ok(&self.data[base..base + self.words])
     }
+
+    /// Serialize for a `CompiledModel` artifact: six u32 shape fields,
+    /// then the packed row words little-endian. Exact — `from_bytes`
+    /// reproduces the struct bit for bit.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + 8 + self.data.len() * 8);
+        for v in [self.w_bits, self.cols, self.words, self.chunks, self.o,
+                  self.d] {
+            out.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.data.len() as u64).to_le_bytes());
+        for &w in &self.data {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Deserialize a `to_bytes` blob, re-validating every shape invariant
+    /// `pack` guarantees so a corrupted artifact cannot smuggle in an
+    /// inconsistent plane table.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let bad = |why: &str| Error::Mapping(format!("weight planes: {why}"));
+        if bytes.len() < 32 {
+            return Err(bad("truncated header"));
+        }
+        let u32_at = |i: usize| {
+            u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap())
+                as usize
+        };
+        let (w_bits, cols, words, chunks, o, d) =
+            (u32_at(0), u32_at(1), u32_at(2), u32_at(3), u32_at(4), u32_at(5));
+        if w_bits == 0 || w_bits > 8 {
+            return Err(bad("w_bits outside 1..=8"));
+        }
+        if cols == 0 || cols % 64 != 0 || words != cols / 64 {
+            return Err(bad("cols/words inconsistent"));
+        }
+        if d == 0 || o == 0 || chunks != d.div_ceil(cols) {
+            return Err(bad("chunk count inconsistent with dimensions"));
+        }
+        let n_words =
+            u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+        if n_words != chunks * o * w_bits * words {
+            return Err(bad("data length inconsistent with shape"));
+        }
+        if bytes.len() != 32 + n_words * 8 {
+            return Err(bad("payload length mismatch"));
+        }
+        let data = bytes[32..]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Self { w_bits, cols, words, chunks, o, d, data })
+    }
 }
 
 /// Row-address helper for the W/I regions.

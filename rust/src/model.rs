@@ -139,6 +139,62 @@ impl LbpLayerPlan {
             .collect();
         Self { width, channels, pad, lin_offsets }
     }
+
+    /// Serialize for a `CompiledModel` artifact: three u32 shape fields,
+    /// kernel count, then per kernel a u32 count plus i64 offsets.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for v in [self.width, self.channels, self.pad, self.lin_offsets.len()]
+        {
+            out.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        for pts in &self.lin_offsets {
+            out.extend_from_slice(&(pts.len() as u32).to_le_bytes());
+            for &off in pts {
+                out.extend_from_slice(&(off as i64).to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Deserialize a `to_bytes` blob, consuming from the front of
+    /// `bytes`; returns the plan and the number of bytes read.
+    pub fn from_bytes(bytes: &[u8]) -> crate::error::Result<(Self, usize)> {
+        use crate::error::Error;
+        let bad = |why: &str| Error::Mapping(format!("lbp plan: {why}"));
+        if bytes.len() < 16 {
+            return Err(bad("truncated header"));
+        }
+        let u32_at = |i: usize| {
+            u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap())
+                as usize
+        };
+        let (width, channels, pad, kernels) =
+            (u32_at(0), u32_at(1), u32_at(2), u32_at(3));
+        if width == 0 || channels == 0 || kernels == 0 || kernels > 1 << 16 {
+            return Err(bad("implausible shape"));
+        }
+        let mut pos = 16;
+        let mut lin_offsets = Vec::with_capacity(kernels);
+        for _ in 0..kernels {
+            if bytes.len() < pos + 4 {
+                return Err(bad("truncated kernel header"));
+            }
+            let n = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap())
+                as usize;
+            pos += 4;
+            if n > 1 << 16 || bytes.len() < pos + n * 8 {
+                return Err(bad("truncated offsets"));
+            }
+            let pts = bytes[pos..pos + n * 8]
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as isize)
+                .collect();
+            pos += n * 8;
+            lin_offsets.push(pts);
+        }
+        Ok((Self { width, channels, pad, lin_offsets }, pos))
+    }
 }
 
 /// One gather plan per LBP layer of `params` (the joint concat grows the

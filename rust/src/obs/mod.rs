@@ -160,6 +160,10 @@ pub struct TraceEvent {
     pub class: Option<QosClass>,
     pub sensor_id: u32,
     pub seq: u64,
+    /// Which registered model the request targets (0 = the server's
+    /// default; emitted only when non-zero, so single-model feeds are
+    /// unchanged).
+    pub model_id: u32,
     /// Batch correlation id (ids start at 1; 0 = not batched).
     pub batch_id: u64,
     /// Shard index (−1 = not on a shard).
@@ -190,6 +194,7 @@ impl Default for TraceEvent {
             class: None,
             sensor_id: 0,
             seq: 0,
+            model_id: 0,
             batch_id: 0,
             shard: -1,
             backend: None,
@@ -223,6 +228,9 @@ impl TraceEvent {
         if self.kind.per_request() {
             json::push_u64_field(&mut s, "sensor_id", self.sensor_id as u64);
             json::push_u64_field(&mut s, "seq", self.seq);
+        }
+        if self.model_id > 0 {
+            json::push_u64_field(&mut s, "model_id", self.model_id as u64);
         }
         if self.batch_id > 0 {
             json::push_u64_field(&mut s, "batch_id", self.batch_id);
@@ -988,6 +996,17 @@ mod tests {
         assert_eq!(get("modeled_ns").unwrap().as_u64(), Some(42));
         // per-request identity is omitted for non-request kinds
         assert!(get("sensor_id").is_none());
+        // model 0 (the default) is omitted so single-model feeds are
+        // byte-for-byte what they were before multi-model serving
+        assert!(get("model_id").is_none());
+        let tagged =
+            TraceEvent { model_id: 3, ..ev }.to_jsonl();
+        let fields = json::parse_flat_object(&tagged).unwrap();
+        let model = fields
+            .iter()
+            .find(|(key, _)| key == "model_id")
+            .map(|(_, v)| v.clone());
+        assert_eq!(model.unwrap().as_u64(), Some(3));
     }
 
     #[test]

@@ -242,7 +242,7 @@ pub fn parse(data: &[u8]) -> Result<NetParams> {
     Ok(NetParams { config, lbp_layers, mlp1, mlp2 })
 }
 
-fn validate_config(c: &NetConfig) -> Result<()> {
+pub(crate) fn validate_config(c: &NetConfig) -> Result<()> {
     if c.height == 0 || c.width == 0 || c.in_channels == 0 {
         return Err(Error::Params("zero image dims".into()));
     }
@@ -282,14 +282,30 @@ pub mod synth {
     use super::*;
     use crate::rng::Xoshiro256;
 
-    /// Build a small, valid params blob (and its parsed form).
+    /// Build a small, valid params blob (and its parsed form) with the
+    /// default test geometry.
     pub fn synth_params(seed: u64) -> (Vec<u8>, NetParams) {
-        let config = NetConfig {
+        synth_params_for(default_config(), seed)
+    }
+
+    /// The geometry `synth_params` has always used; spec files that omit
+    /// keys inherit these values too.
+    pub fn default_config() -> NetConfig {
+        NetConfig {
             height: 12, width: 12, in_channels: 1, n_lbp_layers: 2,
             kernels_per_layer: 4, e: 8, window: 3, apx_code: 0, apx_pixel: 0,
             pool: 4, act_bits: 4, w_bits: 4, hidden: 16, n_classes: 10,
-        };
+        }
+    }
+
+    /// Build a valid params blob for an arbitrary geometry. Sample-point
+    /// offsets are drawn within the config's window and weights within
+    /// its signed `w_bits` range; for `default_config()` the draw
+    /// sequence is bit-identical to what `synth_params` always produced.
+    pub fn synth_params_for(config: NetConfig, seed: u64) -> (Vec<u8>, NetParams) {
         let mut rng = Xoshiro256::new(seed);
+        let p = (config.window as i64 - 1) / 2;
+        let half = 1i64 << (config.w_bits - 1);
         let chs = config.channels_after();
         let mut lbp_layers = Vec::new();
         for &in_ch in &chs[..config.n_lbp_layers] {
@@ -298,8 +314,8 @@ pub mod synth {
                 let mut pts = Vec::new();
                 for _ in 0..config.e {
                     loop {
-                        let dy = rng.range_i64(-1, 1) as i32;
-                        let dx = rng.range_i64(-1, 1) as i32;
+                        let dy = rng.range_i64(-p, p) as i32;
+                        let dx = rng.range_i64(-p, p) as i32;
                         if (dy, dx) != (0, 0) {
                             pts.push(SamplePoint {
                                 dy, dx,
@@ -318,7 +334,9 @@ pub mod synth {
         }
         let mk_mlp = |rng: &mut Xoshiro256, d: usize, o: usize| MlpLayer {
             d, o,
-            w: (0..d * o).map(|_| (rng.below(16) as i8) - 8).collect(),
+            w: (0..d * o)
+                .map(|_| (rng.below(2 * half as u64) as i64 - half) as i8)
+                .collect(),
             scale: (0..o).map(|_| 0.001 + rng.next_f64() as f32 * 0.001).collect(),
             bias: (0..o).map(|_| rng.next_f64() as f32 * 0.1).collect(),
         };

@@ -9,6 +9,7 @@
 //! reservoirs and energy accumulators sit behind one mutex that is taken
 //! once per *completed* frame — far off the admission hot path.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -83,6 +84,7 @@ impl Default for Metrics {
             inner: Mutex::new(Aggregates {
                 all: Reservoir::default(),
                 per_class: Default::default(),
+                per_model: BTreeMap::new(),
                 rng: Xoshiro256::new(0x6c62_7031),
                 energy: EnergyBreakdown::default(),
                 per_class_energy: Default::default(),
@@ -93,11 +95,26 @@ impl Default for Metrics {
     }
 }
 
+/// Per-(class, model) slice of the mutex-guarded aggregates: which
+/// model a frame was served by matters to capacity planning the moment
+/// a server hosts more than one (`Server::push_model`).
+#[derive(Default)]
+struct ModelAgg {
+    completed: u64,
+    failed: u64,
+    dropped: u64,
+    latency: Reservoir,
+    energy: EnergyBreakdown,
+}
+
 struct Aggregates {
     /// Uniform latency sample across every class.
     all: Reservoir,
     /// Per-class latency samples, indexed by [`QosClass::index`].
     per_class: [Reservoir; QosClass::COUNT],
+    /// Per-(class index, model id) accounts, populated lazily as
+    /// traffic for each pair arrives.
+    per_model: BTreeMap<(usize, u32), ModelAgg>,
     rng: Xoshiro256,
     energy: EnergyBreakdown,
     /// Per-class energy accounts, indexed by [`QosClass::index`].
@@ -123,25 +140,35 @@ impl Metrics {
 
     /// A request was shed: displaced by drop-oldest admission, or its
     /// per-request deadline expired before dispatch.
-    pub fn record_dropped(&self, class: QosClass) {
+    pub fn record_dropped(&self, class: QosClass, model_id: u32) {
         self.classes[class.index()]
             .dropped
             .fetch_add(1, Ordering::Relaxed);
+        let mut agg = self.inner.lock().unwrap();
+        agg.per_model
+            .entry((class.index(), model_id))
+            .or_default()
+            .dropped += 1;
     }
 
     pub fn record_batch(&self) {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn record_failure(&self, class: QosClass) {
+    pub fn record_failure(&self, class: QosClass, model_id: u32) {
         self.classes[class.index()]
             .failed
             .fetch_add(1, Ordering::Relaxed);
+        let mut agg = self.inner.lock().unwrap();
+        agg.per_model
+            .entry((class.index(), model_id))
+            .or_default()
+            .failed += 1;
     }
 
     /// One frame finished: queue→response latency plus its engine output.
-    pub fn record_completion(&self, class: QosClass, latency: Duration,
-                             report: &FrameOutput) {
+    pub fn record_completion(&self, class: QosClass, model_id: u32,
+                             latency: Duration, report: &FrameOutput) {
         self.classes[class.index()]
             .completed
             .fetch_add(1, Ordering::Relaxed);
@@ -158,6 +185,12 @@ impl Metrics {
         let agg = &mut *agg;
         agg.all.offer(ns, &mut agg.rng);
         agg.per_class[class.index()].offer(ns, &mut agg.rng);
+        let model = agg.per_model
+            .entry((class.index(), model_id))
+            .or_default();
+        model.completed += 1;
+        model.latency.offer(ns, &mut agg.rng);
+        model.energy.add(&report.telemetry.cost.energy);
         agg.energy.add(&report.telemetry.cost.energy);
         agg.per_class_energy[class.index()]
             .add(&report.telemetry.cost.energy);
@@ -249,6 +282,28 @@ impl Metrics {
                 }
             })
             .collect();
+        let per_model = agg.per_model
+            .iter()
+            .map(|(&(class_idx, model_id), m)| {
+                let lat = m.latency.sorted();
+                let energy_pj = m.energy.total_pj();
+                ModelReport {
+                    model_id,
+                    class: QosClass::ALL[class_idx],
+                    completed: m.completed,
+                    failed: m.failed,
+                    dropped: m.dropped,
+                    p50_ms: percentile_ns(&lat, 0.50) as f64 / 1e6,
+                    p99_ms: percentile_ns(&lat, 0.99) as f64 / 1e6,
+                    energy_uj: energy_pj / 1e6,
+                    energy_per_frame_uj: if m.completed == 0 {
+                        0.0
+                    } else {
+                        energy_pj / 1e6 / m.completed as f64
+                    },
+                }
+            })
+            .collect();
         MetricsReport {
             hw_profile: agg.hw_profile.clone(),
             accepted: self.accepted_total(),
@@ -284,6 +339,7 @@ impl Metrics {
             },
             total_arch_time_ns: agg.arch_time_ns,
             per_class,
+            per_model,
         }
     }
 }
@@ -327,6 +383,26 @@ impl ClassReport {
     }
 }
 
+/// One (class, model) pair's slice of a [`MetricsReport`] — present only
+/// for pairs that saw traffic (model 0 is the server's from-params
+/// default; higher ids are artifacts registered via
+/// `Server::push_model`).
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    pub model_id: u32,
+    pub class: QosClass,
+    pub completed: u64,
+    pub failed: u64,
+    /// Drop-oldest displacements plus deadline expiries.
+    pub dropped: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Total energy this pair's completed frames cost [µJ].
+    pub energy_uj: f64,
+    /// `energy_uj / completed` (0 with no completions).
+    pub energy_per_frame_uj: f64,
+}
+
 /// Frozen metrics for one serving run.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsReport {
@@ -359,12 +435,23 @@ pub struct MetricsReport {
     /// Per-class breakdown, one entry per [`QosClass`] in `ALL` order
     /// (empty only on a `Default`-constructed report).
     pub per_class: Vec<ClassReport>,
+    /// Per-(class, model) breakdown, one entry per pair that saw
+    /// traffic, ordered by (class index, model id).
+    pub per_model: Vec<ModelReport>,
 }
 
 impl MetricsReport {
     /// This class's slice of the report, if the report carries one.
     pub fn class(&self, class: QosClass) -> Option<&ClassReport> {
         self.per_class.iter().find(|r| r.class == class)
+    }
+
+    /// This (class, model) pair's slice, if it saw any traffic.
+    pub fn model(&self, class: QosClass, model_id: u32)
+                 -> Option<&ModelReport> {
+        self.per_model
+            .iter()
+            .find(|r| r.class == class && r.model_id == model_id)
     }
 
     /// Modeled accelerator throughput with `shards` slices running
@@ -401,6 +488,17 @@ impl MetricsReport {
                 c.class.as_str(), c.completed, c.rejected, c.dropped,
                 c.p50_ms, c.p95_ms, c.p99_ms, c.energy_per_frame_uj
             );
+        }
+        if self.per_model.iter().any(|m| m.model_id != 0) {
+            // only worth a breakdown once a non-default model served
+            for m in &self.per_model {
+                println!(
+                    "  model {:>4} @ {:<11}: {} ok / {} fail / {} drop | \
+                     p50 {:.2} ms | p99 {:.2} ms | {:.3} µJ/frame",
+                    m.model_id, m.class.as_str(), m.completed, m.failed,
+                    m.dropped, m.p50_ms, m.p99_ms, m.energy_per_frame_uj
+                );
+            }
         }
         println!(
             "  throughput: {:.1} frames/s over {:.2} s wall",
@@ -479,6 +577,25 @@ impl MetricsReport {
             s.pop();
             s.push('}');
         }
+        s.push_str("],\"per_model\":[");
+        for (i, m) in self.per_model.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('{');
+            j::push_u64_field(&mut s, "model_id", m.model_id as u64);
+            j::push_str_field(&mut s, "class", m.class.as_str());
+            j::push_u64_field(&mut s, "completed", m.completed);
+            j::push_u64_field(&mut s, "failed", m.failed);
+            j::push_u64_field(&mut s, "dropped", m.dropped);
+            j::push_f64_field(&mut s, "p50_ms", m.p50_ms);
+            j::push_f64_field(&mut s, "p99_ms", m.p99_ms);
+            j::push_f64_field(&mut s, "energy_uj", m.energy_uj);
+            j::push_f64_field(&mut s, "energy_per_frame_uj",
+                              m.energy_per_frame_uj);
+            s.pop();
+            s.push('}');
+        }
         s.push_str("]}");
         s
     }
@@ -525,7 +642,7 @@ mod tests {
         let report = report(0.0);
         let n = LATENCY_RESERVOIR as u64 + 5000;
         for i in 0..n {
-            m.record_completion(QosClass::Standard,
+            m.record_completion(QosClass::Standard, 0,
                                 Duration::from_nanos(i + 1), &report);
         }
         let agg = m.inner.lock().unwrap();
@@ -545,12 +662,12 @@ mod tests {
         m.record_accepted(QosClass::Standard);
         m.record_accepted(QosClass::Billed);
         m.record_rejected(QosClass::Standard);
-        m.record_dropped(QosClass::BestEffort);
+        m.record_dropped(QosClass::BestEffort, 0);
         m.record_batch();
         let report = report(1000.0);
-        m.record_completion(QosClass::Standard, Duration::from_millis(2),
+        m.record_completion(QosClass::Standard, 0, Duration::from_millis(2),
                             &report);
-        m.record_completion(QosClass::Billed, Duration::from_millis(4),
+        m.record_completion(QosClass::Billed, 0, Duration::from_millis(4),
                             &report);
         let s = m.snapshot(Duration::from_secs(1));
         assert_eq!(s.accepted, 3);
@@ -603,7 +720,7 @@ mod tests {
             x ^= x << 17;
             let ns = 1_000 + (x % 5_000_000);
             exact.push(ns);
-            m.record_completion(QosClass::Standard,
+            m.record_completion(QosClass::Standard, 0,
                                 Duration::from_nanos(ns), &rep);
         }
         exact.sort_unstable();
@@ -644,11 +761,11 @@ mod tests {
         m.record_accepted(QosClass::Standard);
         m.record_accepted(QosClass::Standard);
         assert_eq!(m.in_flight(QosClass::Standard), 3);
-        m.record_completion(QosClass::Standard, Duration::from_millis(1),
+        m.record_completion(QosClass::Standard, 0, Duration::from_millis(1),
                             &report(0.0));
-        m.record_dropped(QosClass::Standard);
+        m.record_dropped(QosClass::Standard, 0);
         assert_eq!(m.in_flight(QosClass::Standard), 1);
-        m.record_failure(QosClass::Standard);
+        m.record_failure(QosClass::Standard, 0);
         assert_eq!(m.in_flight(QosClass::Standard), 0);
         // other classes unaffected
         assert_eq!(m.in_flight(QosClass::Billed), 0);
@@ -659,7 +776,7 @@ mod tests {
         let m = Metrics::default();
         m.record_accepted(QosClass::Billed);
         m.record_batch();
-        m.record_completion(QosClass::Billed, Duration::from_millis(3),
+        m.record_completion(QosClass::Billed, 2, Duration::from_millis(3),
                             &report(500.0));
         let s = m.snapshot(Duration::from_secs(1));
         let json = s.to_json();
@@ -670,9 +787,52 @@ mod tests {
         for key in ["\"accepted\":", "\"latency_ms\":", "\"per_class\":",
                     "\"throughput_fps\":", "\"energy_per_frame_uj\":",
                     "\"class\":\"billed\"", "\"energy_uj\":",
-                    "\"hw_profile\":\"ns_lbp_65nm\""] {
+                    "\"hw_profile\":\"ns_lbp_65nm\"", "\"per_model\":",
+                    "\"model_id\":2"] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
         assert!(json.starts_with('{') && json.ends_with('}'));
+    }
+
+    #[test]
+    fn per_model_breakdown_splits_traffic() {
+        let m = Metrics::default();
+        let rep = report(100.0);
+        // two models under one class, plus one model under another class
+        m.record_completion(QosClass::Standard, 0,
+                            Duration::from_millis(2), &rep);
+        m.record_completion(QosClass::Standard, 0,
+                            Duration::from_millis(2), &rep);
+        m.record_completion(QosClass::Standard, 7,
+                            Duration::from_millis(8), &rep);
+        m.record_completion(QosClass::Billed, 7,
+                            Duration::from_millis(1), &rep);
+        m.record_failure(QosClass::Standard, 7);
+        m.record_dropped(QosClass::Standard, 7);
+        let s = m.snapshot(Duration::from_secs(1));
+        assert_eq!(s.per_model.len(), 3);
+        let d = s.model(QosClass::Standard, 0).unwrap();
+        assert_eq!((d.completed, d.failed, d.dropped), (2, 0, 0));
+        assert!((d.p50_ms - 2.0).abs() < 0.5);
+        // each completion carried 2 µJ of compute energy
+        assert!((d.energy_uj - 4.0).abs() < 1e-9);
+        assert!((d.energy_per_frame_uj - 2.0).abs() < 1e-9);
+        let m7 = s.model(QosClass::Standard, 7).unwrap();
+        assert_eq!((m7.completed, m7.failed, m7.dropped), (1, 1, 1));
+        assert!((m7.p50_ms - 8.0).abs() < 0.5);
+        let b7 = s.model(QosClass::Billed, 7).unwrap();
+        assert_eq!(b7.completed, 1);
+        assert!(s.model(QosClass::Billed, 0).is_none());
+        // pair ordering is (class index, model id)
+        let order: Vec<(QosClass, u32)> =
+            s.per_model.iter().map(|m| (m.class, m.model_id)).collect();
+        let mut sorted = order.clone();
+        sorted.sort_by_key(|&(c, id)| (c.index(), id));
+        assert_eq!(order, sorted);
+        // the aggregate view is untouched by the split
+        assert_eq!(s.completed, 4);
+        let json = s.to_json();
+        assert!(json.contains("\"model_id\":7"), "{json}");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
     }
 }

@@ -69,21 +69,43 @@ pub mod shard;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::config::ServeConfig;
-use crate::engine::{BackendKind, EngineConfig, FrameOutput};
+use crate::engine::{BackendKind, EngineConfig, FrameOutput, Prepacked};
 use crate::error::{Error, Result};
 use crate::obs::{EventKind, TraceEvent, TraceSession, Tracer};
-use crate::params::{NetConfig, NetParams};
+use crate::params::NetParams;
 use crate::sensor::Frame;
 
 pub use crate::engine::QosClass;
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
-pub use metrics::{percentile_ns, ClassReport, Metrics, MetricsReport};
+pub use metrics::{percentile_ns, ClassReport, Metrics, MetricsReport,
+                  ModelReport};
 pub use queue::{BoundedQueue, PopResult, PushError};
 pub use shard::{Batch, ShardPool};
+
+/// One servable model held by a [`Server`]: the parsed parameters every
+/// submission is validated against, plus — for models registered from a
+/// compiled artifact ([`Server::push_model`]) — the prepacked tables
+/// engines build from.  Entries are shared via `Arc`: every admitted
+/// request pins the entry it validated against, so replacing a model
+/// mid-stream never drops in-flight frames.
+pub struct ModelEntry {
+    /// The artifact's content-hash version (0 = the from-params default
+    /// model the server started with).
+    pub(crate) version: u64,
+    pub(crate) params: Arc<NetParams>,
+    pub(crate) prepacked: Option<Arc<Prepacked>>,
+}
+
+impl ModelEntry {
+    /// Artifact content-hash version (0 for the from-params default).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+}
 
 /// A typed, routable inference request — the serving layer's unit of
 /// work.  Build one with [`Request::builder`] (or [`Request::from_frame`]
@@ -97,6 +119,9 @@ pub struct Request {
     pub sensor_id: u32,
     /// Service class: routing key, batching key, admission policy.
     pub class: QosClass,
+    /// Which registered model should serve the frame (0 = the server's
+    /// from-params default; others come from [`Server::push_model`]).
+    pub model_id: u32,
     /// Optional freshness bound: if the request is still queued this
     /// long after submission, it is shed instead of inferred.
     pub deadline: Option<Duration>,
@@ -115,6 +140,7 @@ impl Request {
             frame,
             sensor_id: 0,
             class: QosClass::default(),
+            model_id: 0,
             deadline: None,
         }
     }
@@ -137,6 +163,11 @@ impl RequestBuilder {
         self
     }
 
+    pub fn model(mut self, model_id: u32) -> Self {
+        self.request.model_id = model_id;
+        self
+    }
+
     pub fn deadline(mut self, deadline: Duration) -> Self {
         self.request.deadline = Some(deadline);
         self
@@ -152,6 +183,10 @@ impl RequestBuilder {
 pub(crate) struct QueuedRequest {
     pub(crate) frame: Frame,
     pub(crate) sensor_id: u32,
+    pub(crate) model_id: u32,
+    /// The entry the frame was validated against at admission, pinned
+    /// for the request's whole lifetime (see [`ModelEntry`]).
+    pub(crate) model: Arc<ModelEntry>,
     pub(crate) deadline: Option<Duration>,
     pub(crate) enqueued_at: Instant,
     pub(crate) slot: ResponseSlot,
@@ -166,7 +201,9 @@ pub struct InferResponse {
     pub sensor_id: u32,
     /// The request's QoS class.
     pub class: QosClass,
-    /// The backend its class routed to.
+    /// Which registered model served the frame.
+    pub model_id: u32,
+    /// The backend its (class, model) routed to.
     pub backend: BackendKind,
     /// Which shard processed the frame.
     pub shard: usize,
@@ -266,6 +303,7 @@ pub struct Session<'s> {
     sensor_id: u32,
     seq: Arc<AtomicU64>,
     class: QosClass,
+    model_id: u32,
     deadline: Option<Duration>,
 }
 
@@ -273,6 +311,13 @@ impl<'s> Session<'s> {
     /// Default QoS class for frames submitted through this session.
     pub fn with_class(mut self, class: QosClass) -> Self {
         self.class = class;
+        self
+    }
+
+    /// Target model for frames submitted through this session
+    /// (0 = the server's from-params default).
+    pub fn with_model(mut self, model_id: u32) -> Self {
+        self.model_id = model_id;
         self
     }
 
@@ -294,7 +339,8 @@ impl<'s> Session<'s> {
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
         let mut builder = Request::builder(frame.with_seq(seq))
             .sensor_id(self.sensor_id)
-            .class(self.class);
+            .class(self.class)
+            .model(self.model_id);
         if let Some(d) = self.deadline {
             builder = builder.deadline(d);
         }
@@ -313,7 +359,10 @@ pub struct Server {
     started: Instant,
     shards: usize,
     serve: ServeConfig,
-    net: NetConfig,
+    /// The model registry: id → pinned entry.  Id 0 is the from-params
+    /// default installed at [`Server::start`]; [`Server::push_model`]
+    /// adds or replaces entries while traffic flows.
+    models: RwLock<BTreeMap<u32, Arc<ModelEntry>>>,
     sensors: Mutex<BTreeMap<u32, Arc<AtomicU64>>>,
     tracer: Tracer,
     trace: Option<TraceSession>,
@@ -327,7 +376,12 @@ impl Server {
     pub fn start(params: NetParams, config: EngineConfig) -> Result<Self> {
         let serve: ServeConfig = config.system.serve;
         serve.validate()?;
-        let net = params.config;
+        // model 0: the from-params default every server hosts
+        let default_model = Arc::new(ModelEntry {
+            version: 0,
+            params: Arc::new(params),
+            prepacked: None,
+        });
         let routing = config.system.engine.routing.clone();
         let default_backend = config.system.engine.backend;
         // the distinct backends any class can land on — each shard
@@ -386,7 +440,7 @@ impl Server {
         // spawn() validates the shard slicing against the cache geometry
         // (and every routed backend's availability) before any batcher
         // thread starts
-        let pool = ShardPool::spawn(&params, &config, serve.shards,
+        let pool = ShardPool::spawn(&default_model, &config, serve.shards,
                                     &backends, &batches, &metrics, &tracer)?;
 
         // one batcher per class; the last one out closes the batch queue
@@ -402,7 +456,7 @@ impl Server {
             let requests = Arc::clone(&class_queues[class.index()]);
             let batches_q = Arc::clone(&batches);
             let remaining = Arc::clone(&remaining);
-            let backend = routing.resolve(class, default_backend);
+            let routing = routing.clone();
             let tracer = tracer.clone();
             let spawned = std::thread::Builder::new()
                 .name(format!("nslbp-batcher-{class}"))
@@ -412,54 +466,80 @@ impl Server {
                     // not time-since-pop
                     let b = Batcher::new(&requests, policy)
                         .with_anchor(|r: &QueuedRequest| r.enqueued_at);
-                    while let Some((reqs, reason)) = b.next_batch_tagged() {
-                        let batch_id = tracer.next_batch_id();
-                        if tracer.enabled() {
-                            // batch seal: close every member's queue-wait
-                            // span and record the formation window with
-                            // its flush reason
-                            let sealed = Instant::now();
-                            let oldest = reqs
-                                .iter()
-                                .map(|r| r.enqueued_at)
-                                .min()
-                                .unwrap_or(sealed);
-                            tracer.emit(TraceEvent {
-                                kind: EventKind::Batch,
-                                ts_ns: tracer.ts(oldest),
-                                dur_ns: sealed
-                                    .saturating_duration_since(oldest)
-                                    .as_nanos()
-                                    as u64,
-                                class: Some(class),
-                                batch_id,
-                                label: reason.as_str(),
-                                value: reqs.len() as f64,
-                                ..TraceEvent::default()
-                            });
-                            for r in &reqs {
+                    'form: while let Some((reqs, reason)) =
+                        b.next_batch_tagged()
+                    {
+                        // a dispatch batch must be homogeneous in model
+                        // as well as class: engines are per-(model,
+                        // backend), so split the formed batch by
+                        // (model id, pinned version) preserving order —
+                        // single-model traffic stays one batch
+                        let mut groups: Vec<(u32, u64, Vec<QueuedRequest>)> =
+                            Vec::new();
+                        for r in reqs {
+                            let key = (r.model_id, r.model.version);
+                            match groups
+                                .iter_mut()
+                                .find(|(m, v, _)| (*m, *v) == key)
+                            {
+                                Some((_, _, g)) => g.push(r),
+                                None => groups.push((key.0, key.1, vec![r])),
+                            }
+                        }
+                        for (model_id, _version, reqs) in groups {
+                            let backend = routing.resolve_model(
+                                class, model_id, default_backend);
+                            let batch_id = tracer.next_batch_id();
+                            if tracer.enabled() {
+                                // batch seal: close every member's
+                                // queue-wait span and record the
+                                // formation window with its flush reason
+                                let sealed = Instant::now();
+                                let oldest = reqs
+                                    .iter()
+                                    .map(|r| r.enqueued_at)
+                                    .min()
+                                    .unwrap_or(sealed);
                                 tracer.emit(TraceEvent {
-                                    kind: EventKind::Queue,
-                                    ts_ns: tracer.ts(r.enqueued_at),
+                                    kind: EventKind::Batch,
+                                    ts_ns: tracer.ts(oldest),
                                     dur_ns: sealed
-                                        .saturating_duration_since(
-                                            r.enqueued_at,
-                                        )
+                                        .saturating_duration_since(oldest)
                                         .as_nanos()
                                         as u64,
                                     class: Some(class),
-                                    sensor_id: r.sensor_id,
-                                    seq: r.frame.seq,
+                                    model_id,
                                     batch_id,
+                                    label: reason.as_str(),
+                                    value: reqs.len() as f64,
                                     ..TraceEvent::default()
                                 });
+                                for r in &reqs {
+                                    tracer.emit(TraceEvent {
+                                        kind: EventKind::Queue,
+                                        ts_ns: tracer.ts(r.enqueued_at),
+                                        dur_ns: sealed
+                                            .saturating_duration_since(
+                                                r.enqueued_at,
+                                            )
+                                            .as_nanos()
+                                            as u64,
+                                        class: Some(class),
+                                        sensor_id: r.sensor_id,
+                                        seq: r.frame.seq,
+                                        model_id,
+                                        batch_id,
+                                        ..TraceEvent::default()
+                                    });
+                                }
                             }
-                        }
-                        let batch =
-                            Batch { class, backend, batch_id,
-                                    requests: reqs };
-                        if batches_q.push(batch).is_err() {
-                            break; // batch queue force-closed
+                            let model = Arc::clone(&reqs[0].model);
+                            let batch = Batch { class, backend, model_id,
+                                                model, batch_id,
+                                                requests: reqs };
+                            if batches_q.push(batch).is_err() {
+                                break 'form; // batch queue force-closed
+                            }
                         }
                     }
                     if remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
@@ -496,11 +576,44 @@ impl Server {
             started: Instant::now(),
             shards: serve.shards,
             serve,
-            net,
+            models: RwLock::new(BTreeMap::from([(0u32, default_model)])),
             sensors: Mutex::new(BTreeMap::new()),
             tracer,
             trace: Some(trace),
         })
+    }
+
+    /// Register (or replace) model `model_id` from a compiled artifact.
+    /// New submissions for the id validate against — and are served by —
+    /// the new version immediately; requests already in flight keep the
+    /// entry they pinned at admission, so a push never drops frames.
+    pub fn push_model(&self, model_id: u32,
+                      model: &crate::compile::CompiledModel) -> Result<()> {
+        if model.version == 0 {
+            // version 0 is reserved for the from-params default: shards
+            // key their engine caches on it
+            return Err(Error::Serve(
+                "artifact version 0 is reserved (unstamped artifact?)"
+                    .into(),
+            ));
+        }
+        let entry = Arc::new(ModelEntry {
+            version: model.version,
+            params: Arc::new(model.params.clone()),
+            prepacked: Some(Arc::new(model.prepacked())),
+        });
+        self.models.write().unwrap().insert(model_id, entry);
+        Ok(())
+    }
+
+    /// The registered (model id, version) pairs, in id order.
+    pub fn models(&self) -> Vec<(u32, u64)> {
+        self.models
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(&id, e)| (id, e.version))
+            .collect()
     }
 
     pub fn shards(&self) -> usize {
@@ -522,6 +635,7 @@ impl Server {
             sensor_id,
             seq,
             class: QosClass::default(),
+            model_id: 0,
             deadline: None,
         }
     }
@@ -536,12 +650,25 @@ impl Server {
     pub fn submit(&self, request: Request) -> Result<Ticket> {
         let class = request.class;
         let sensor_id = request.sensor_id;
+        let model_id = request.model_id;
         let seq = request.frame.seq;
-        if let Err(e) = crate::engine::validate_frame(&request.frame,
-                                                      &self.net) {
+        // resolve and pin the target model: the Arc rides the queued
+        // request, so a concurrent push_model replaces the registry
+        // entry without touching this frame's params or engines
+        let model = self.models.read().unwrap().get(&model_id).cloned();
+        let Some(model) = model else {
             self.metrics.record_rejected(class);
             self.trace_admission(EventKind::Reject, class, sensor_id, seq,
-                                 "bad_frame");
+                                 model_id, "unknown_model");
+            return Err(Error::Serve(format!(
+                "admission rejected: unknown model {model_id}"
+            )));
+        };
+        if let Err(e) = crate::engine::validate_frame(&request.frame,
+                                                      &model.params.config) {
+            self.metrics.record_rejected(class);
+            self.trace_admission(EventKind::Reject, class, sensor_id, seq,
+                                 model_id, "bad_frame");
             return Err(Error::Serve(format!("admission rejected: {e}")));
         }
 
@@ -551,6 +678,8 @@ impl Server {
         let queued = QueuedRequest {
             frame: request.frame,
             sensor_id: request.sensor_id,
+            model_id,
+            model,
             deadline: request.deadline,
             enqueued_at,
             slot: Arc::clone(&slot),
@@ -561,12 +690,12 @@ impl Server {
                 Ok(displaced) => {
                     self.metrics.record_accepted(class);
                     self.trace_admission(EventKind::Submit, class,
-                                         sensor_id, seq, "");
+                                         sensor_id, seq, model_id, "");
                     if let Some(old) = displaced {
-                        self.metrics.record_dropped(class);
+                        self.metrics.record_dropped(class, old.model_id);
                         self.trace_admission(EventKind::Drop, class,
                                              old.sensor_id, old.frame.seq,
-                                             "displaced");
+                                             old.model_id, "displaced");
                         old.slot.fulfill(Err(Error::Dropped(
                             "displaced by a fresher frame (drop-oldest \
                              admission)"
@@ -582,13 +711,14 @@ impl Server {
                 Ok(()) => {
                     self.metrics.record_accepted(class);
                     self.trace_admission(EventKind::Submit, class,
-                                         sensor_id, seq, "");
+                                         sensor_id, seq, model_id, "");
                     Ok(Ticket { slot })
                 }
                 Err((PushError::Full, _)) => {
                     self.metrics.record_rejected(class);
                     self.trace_admission(EventKind::Reject, class,
-                                         sensor_id, seq, "queue_full");
+                                         sensor_id, seq, model_id,
+                                         "queue_full");
                     Err(Error::Serve(format!(
                         "admission rejected: {class} queue at configured \
                          depth {}",
@@ -605,7 +735,8 @@ impl Server {
     /// Emit one admission-stage instant (submit / reject / displaced
     /// drop).  A single branch when tracing is disabled.
     fn trace_admission(&self, kind: EventKind, class: QosClass,
-                       sensor_id: u32, seq: u64, label: &'static str) {
+                       sensor_id: u32, seq: u64, model_id: u32,
+                       label: &'static str) {
         if self.tracer.enabled() {
             self.tracer.emit(TraceEvent {
                 kind,
@@ -613,6 +744,7 @@ impl Server {
                 class: Some(class),
                 sensor_id,
                 seq,
+                model_id,
                 label,
                 ..TraceEvent::default()
             });
@@ -773,6 +905,83 @@ mod tests {
         drop(cam1);
         drop(cam0_again);
         server.drain().unwrap();
+    }
+
+    /// Compile a default-geometry artifact model in memory (different
+    /// seed → different weights, same frame shape as the test frames).
+    fn artifact_model(seed: u64) -> crate::compile::CompiledModel {
+        let spec = crate::compile::ModelSpec::parse(
+            &format!("[model]\nname = \"alt\"\nseed = {seed}\n"),
+            std::path::Path::new("."),
+        )
+        .unwrap();
+        crate::compile::build_model(&spec, &test_config(1).system).unwrap()
+    }
+
+    #[test]
+    fn two_model_traffic_splits_metrics_and_responses() {
+        let (params, frames) = synth_frames(8, 7);
+        let server = Server::start(params, test_config(2)).unwrap();
+        let alt = artifact_model(9);
+        let alt_version = alt.version;
+        server.push_model(1, &alt).unwrap();
+        assert_eq!(server.models(), vec![(0, 0), (1, alt_version)]);
+
+        // unknown model ids are rejected at admission
+        let err = server
+            .submit(Request::builder(frames[0].clone()).model(42).build())
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown model 42"), "{err}");
+
+        let cam0 = server.session(0);
+        let cam1 = server.session(1).with_model(1);
+        let mut tickets = Vec::new();
+        for f in &frames[..4] {
+            tickets.push((0u32, cam0.submit(f.clone()).unwrap()));
+            tickets.push((1u32, cam1.submit(f.clone()).unwrap()));
+        }
+        for (model_id, t) in tickets {
+            let r = t.wait().unwrap();
+            assert_eq!(r.model_id, model_id);
+            assert!(r.predicted() < 10);
+        }
+        let report = server.drain().unwrap();
+        assert_eq!(report.completed, 8);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.rejected, 1);
+        let m0 = report.model(QosClass::Standard, 0).unwrap();
+        assert_eq!((m0.completed, m0.failed, m0.dropped), (4, 0, 0));
+        let m1 = report.model(QosClass::Standard, 1).unwrap();
+        assert_eq!((m1.completed, m1.failed, m1.dropped), (4, 0, 0));
+        assert!(report.to_json().contains("\"model_id\":1"));
+    }
+
+    #[test]
+    fn push_model_rolls_over_without_dropping_inflight_frames() {
+        let (params, frames) = synth_frames(12, 8);
+        let server = Server::start(params, test_config(1)).unwrap();
+        server.push_model(1, &artifact_model(9)).unwrap();
+        let cam = server.session(0).with_model(1);
+        let mut tickets: Vec<Ticket> =
+            frames[..6].iter().map(|f| cam.submit(f.clone()).unwrap())
+                .collect();
+        // replace model 1 while the first wave may still be in flight:
+        // admitted requests pinned the old entry, so nothing drops
+        let v1 = server.models()[1].1;
+        server.push_model(1, &artifact_model(10)).unwrap();
+        let v2 = server.models()[1].1;
+        assert_ne!(v1, v2, "different seeds must hash differently");
+        tickets.extend(
+            frames[6..].iter().map(|f| cam.submit(f.clone()).unwrap()));
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().model_id, 1);
+        }
+        let report = server.drain().unwrap();
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.failed, 0);
+        let m1 = report.model(QosClass::Standard, 1).unwrap();
+        assert_eq!(m1.completed, 12);
     }
 
     #[test]

@@ -10,6 +10,13 @@
 //! MLP, architectural multi-frame sub-array packing) actually amortize
 //! compute across the dispatch, instead of batching buying queueing
 //! only.
+//!
+//! With multi-model serving (`Server::push_model`) each shard also
+//! keeps a small LRU cache of engines for artifact models, keyed by
+//! (artifact version, backend); engines for the default from-params
+//! model stay prebuilt and pinned.  A cache miss builds the engine from
+//! the batch's pinned [`ModelEntry`] — all packing already done at
+//! compile time, so a build is table wiring, not bit-plane transposes.
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -18,18 +25,24 @@ use std::time::Instant;
 use crate::engine::{BackendKind, Engine, EngineConfig, QosClass, ShardSlice};
 use crate::error::{Error, Result};
 use crate::obs::{EventKind, TraceEvent, Tracer};
-use crate::params::NetParams;
 use crate::sensor::Frame;
 
 use super::metrics::Metrics;
 use super::queue::BoundedQueue;
-use super::{InferResponse, QueuedRequest};
+use super::{InferResponse, ModelEntry, QueuedRequest};
 
-/// A dispatched batch: admitted requests of one QoS class, bound for one
-/// backend.  Classes routed to different backends never share a batch.
+/// A dispatched batch: admitted requests of one QoS class and one model,
+/// bound for one backend.  Classes (or models) routed to different
+/// engines never share a batch.
 pub struct Batch {
     pub class: QosClass,
     pub backend: BackendKind,
+    /// Which registered model the batch's frames target (0 = default).
+    pub model_id: u32,
+    /// The model entry every member was validated against at admission —
+    /// pinned here so a concurrent `push_model` can never drop the
+    /// params/prepacked tables out from under an in-flight batch.
+    pub(crate) model: Arc<ModelEntry>,
     /// Trace correlation id allocated at batch seal (0 when tracing is
     /// off): joins the batcher's formation span to the shard's dispatch
     /// span and every member request's completion.
@@ -43,14 +56,17 @@ pub struct ShardPool {
 }
 
 impl ShardPool {
-    /// Build `count` sharded engine sets — one engine per backend in
-    /// `backends` per shard, erroring early on an invalid slice or an
-    /// unavailable backend — and spawn one worker thread per shard.
-    pub fn spawn(params: &NetParams, base: &EngineConfig, count: usize,
-                 backends: &[BackendKind],
+    /// Build `count` sharded engine sets for the default model — one
+    /// engine per backend in `backends` per shard, erroring early on an
+    /// invalid slice or an unavailable backend — and spawn one worker
+    /// thread per shard.  Engines for artifact models are built lazily
+    /// inside the worker, bounded by `serve.model_cache`.
+    pub fn spawn(default_model: &Arc<ModelEntry>, base: &EngineConfig,
+                 count: usize, backends: &[BackendKind],
                  batches: &Arc<BoundedQueue<Batch>>, metrics: &Arc<Metrics>,
                  tracer: &Tracer)
                  -> Result<Self> {
+        let model_cache = base.system.serve.model_cache.max(1);
         let mut engine_sets = Vec::with_capacity(count);
         for index in 0..count {
             let config = EngineConfig {
@@ -59,28 +75,25 @@ impl ShardPool {
             };
             let mut engines = Vec::with_capacity(backends.len());
             for &kind in backends {
-                let mut engine = Engine::builder()
-                    .config(config.clone())
-                    .params(params.clone())
-                    .backend(kind)
-                    .build()?;
+                let mut engine =
+                    build_model_engine(default_model, &config, kind)?;
                 engine.set_tracer(tracer.clone());
                 engines.push((kind, engine));
             }
-            engine_sets.push(engines);
+            engine_sets.push((config, engines));
         }
         let workers = engine_sets
             .into_iter()
             .enumerate()
-            .map(|(index, engines)| {
+            .map(|(index, (config, engines))| {
                 let batches = Arc::clone(batches);
                 let metrics = Arc::clone(metrics);
                 let tracer = tracer.clone();
                 std::thread::Builder::new()
                     .name(format!("nslbp-shard-{index}"))
                     .spawn(move || {
-                        shard_main(index, engines, &batches, &metrics,
-                                   &tracer)
+                        shard_main(index, engines, config, model_cache,
+                                   &batches, &metrics, &tracer)
                     })
                     .map_err(Error::Io)
             })
@@ -105,7 +118,63 @@ impl ShardPool {
     }
 }
 
+/// Build one engine for `model` on `kind`.  Artifact models carry
+/// prepacked plans/planes, so the build wires tables instead of redoing
+/// compile-time packing work.
+fn build_model_engine(model: &ModelEntry, config: &EngineConfig,
+                      kind: BackendKind) -> Result<Engine> {
+    let mut builder = Engine::builder()
+        .config(config.clone())
+        .params((*model.params).clone())
+        .backend(kind);
+    if let Some(p) = &model.prepacked {
+        builder = builder.prepacked(Arc::clone(p));
+    }
+    builder.build()
+}
+
+/// One artifact-model engine held by a shard.  (The default model's
+/// engines live in the prebuilt per-backend set and are never evicted.)
+struct CachedEngine {
+    version: u64,
+    kind: BackendKind,
+    last_used: u64,
+    engine: Engine,
+}
+
+/// Find-or-build the engine for an artifact batch; past `cap` entries
+/// the least-recently-used cached engine is evicted first.
+fn cached_engine<'c>(cache: &'c mut Vec<CachedEngine>,
+                     model: &Arc<ModelEntry>, backend: BackendKind,
+                     config: &EngineConfig, cap: usize, tick: u64,
+                     tracer: &Tracer) -> Result<&'c mut Engine> {
+    if let Some(pos) = cache
+        .iter()
+        .position(|c| c.version == model.version && c.kind == backend)
+    {
+        cache[pos].last_used = tick;
+        return Ok(&mut cache[pos].engine);
+    }
+    let mut engine = build_model_engine(model, config, backend)?;
+    engine.set_tracer(tracer.clone());
+    if cache.len() >= cap {
+        if let Some(pos) = (0..cache.len()).min_by_key(|&i| cache[i].last_used)
+        {
+            cache.swap_remove(pos);
+        }
+    }
+    cache.push(CachedEngine {
+        version: model.version,
+        kind: backend,
+        last_used: tick,
+        engine,
+    });
+    let last = cache.len() - 1;
+    Ok(&mut cache[last].engine)
+}
+
 fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
+              config: EngineConfig, model_cache: usize,
               batches: &BoundedQueue<Batch>, metrics: &Metrics,
               tracer: &Tracer) {
     // dispatch buffers persist across batches (like the backends' scratch
@@ -113,20 +182,23 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
     // per batch
     let mut frames: Vec<Frame> = Vec::new();
     let mut shells = Vec::new();
+    let mut cache: Vec<CachedEngine> = Vec::new();
+    let mut tick: u64 = 0;
     while let Some(batch) = batches.pop() {
-        let class = batch.class;
+        let Batch { class, backend, model_id, model, batch_id, requests } =
+            batch;
 
         // shed requests whose per-request deadline expired while queued:
         // the caller asked for freshness, not a stale answer
         let now = Instant::now();
         frames.clear();
         shells.clear();
-        for req in batch.requests {
+        for req in requests {
             let expired = req
                 .deadline
                 .map_or(false, |d| now.duration_since(req.enqueued_at) > d);
             if expired {
-                metrics.record_dropped(class);
+                metrics.record_dropped(class, model_id);
                 if tracer.enabled() {
                     tracer.emit(TraceEvent {
                         kind: EventKind::Expire,
@@ -134,7 +206,8 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                         class: Some(class),
                         sensor_id: req.sensor_id,
                         seq: req.frame.seq,
-                        batch_id: batch.batch_id,
+                        model_id,
+                        batch_id,
                         shard: index as i32,
                         label: "deadline",
                         ..TraceEvent::default()
@@ -156,11 +229,46 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
         metrics.record_batch();
         let batch_size = frames.len();
 
-        let engine = engines
-            .iter_mut()
-            .find(|(kind, _)| *kind == batch.backend)
-            .map(|(_, engine)| engine)
-            .expect("batch routed to a backend this shard does not host");
+        // resolve the engine: default-model batches hit the prebuilt,
+        // pinned per-backend set; artifact batches go through the
+        // bounded LRU, building from the pinned entry on a miss
+        tick += 1;
+        let engine = if model.version == 0 {
+            engines
+                .iter_mut()
+                .find(|(kind, _)| *kind == backend)
+                .map(|(_, engine)| engine)
+                .expect("batch routed to a backend this shard does not host")
+        } else {
+            match cached_engine(&mut cache, &model, backend, &config,
+                                model_cache, tick, tracer) {
+                Ok(engine) => engine,
+                Err(e) => {
+                    let msg = e.to_string();
+                    for (sensor_id, seq, _, slot) in shells.drain(..) {
+                        metrics.record_failure(class, model_id);
+                        if tracer.enabled() {
+                            tracer.emit(TraceEvent {
+                                kind: EventKind::Fail,
+                                ts_ns: tracer.now(),
+                                class: Some(class),
+                                sensor_id,
+                                seq,
+                                model_id,
+                                batch_id,
+                                shard: index as i32,
+                                label: "engine_build",
+                                ..TraceEvent::default()
+                            });
+                        }
+                        slot.fulfill(Err(Error::Serve(format!(
+                            "engine build for model {model_id} failed: {msg}"
+                        ))));
+                    }
+                    continue;
+                }
+            }
+        };
 
         // one whole-batch dispatch — the engine (and its cross-check)
         // sees the entire batch at once
@@ -177,9 +285,10 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                         ts_ns: tracer.ts(dispatch_start),
                         dur_ns: dispatch_start.elapsed().as_nanos() as u64,
                         class: Some(class),
-                        batch_id: batch.batch_id,
+                        model_id,
+                        batch_id,
                         shard: index as i32,
-                        backend: Some(batch.backend),
+                        backend: Some(backend),
                         sensor_pj: e.sensor_pj,
                         compute_pj: e.compute_pj + e.read_pj + e.write_pj
                             + e.ctrl_pj,
@@ -193,7 +302,8 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                     out.frames.into_iter().zip(shells.drain(..))
                 {
                     let latency = enqueued_at.elapsed();
-                    metrics.record_completion(class, latency, &report);
+                    metrics.record_completion(class, model_id, latency,
+                                              &report);
                     if tracer.enabled() {
                         // dur is the *same* latency the metrics
                         // reservoir records, so span-derived
@@ -205,9 +315,10 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                             class: Some(class),
                             sensor_id,
                             seq,
-                            batch_id: batch.batch_id,
+                            model_id,
+                            batch_id,
                             shard: index as i32,
-                            backend: Some(batch.backend),
+                            backend: Some(backend),
                             ..TraceEvent::default()
                         });
                     }
@@ -215,7 +326,8 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                         report,
                         sensor_id,
                         class,
-                        backend: batch.backend,
+                        model_id,
+                        backend,
                         shard: index,
                         batch_size,
                         latency,
@@ -229,7 +341,7 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                     shells.len()
                 );
                 for (sensor_id, seq, _, slot) in shells.drain(..) {
-                    metrics.record_failure(class);
+                    metrics.record_failure(class, model_id);
                     if tracer.enabled() {
                         tracer.emit(TraceEvent {
                             kind: EventKind::Fail,
@@ -237,7 +349,8 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                             class: Some(class),
                             sensor_id,
                             seq,
-                            batch_id: batch.batch_id,
+                            model_id,
+                            batch_id,
                             shard: index as i32,
                             label: "output_count_mismatch",
                             ..TraceEvent::default()
@@ -249,7 +362,7 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
             Err(e) => {
                 let msg = e.to_string();
                 for (sensor_id, seq, _, slot) in shells.drain(..) {
-                    metrics.record_failure(class);
+                    metrics.record_failure(class, model_id);
                     if tracer.enabled() {
                         tracer.emit(TraceEvent {
                             kind: EventKind::Fail,
@@ -257,7 +370,8 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                             class: Some(class),
                             sensor_id,
                             seq,
-                            batch_id: batch.batch_id,
+                            model_id,
+                            batch_id,
                             shard: index as i32,
                             label: "backend_error",
                             ..TraceEvent::default()

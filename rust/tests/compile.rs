@@ -1,0 +1,195 @@
+//! Compile-pipeline integration tests: the bit-identity gate (an engine
+//! built from a versioned artifact reproduces a from-params engine
+//! exactly, logits and modeled cost alike), incremental recompiles (a
+//! second compile of an unchanged spec hits every stage cache and does
+//! zero packing), cache invalidation granularity, and corruption
+//! rejection on load.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use ns_lbp::compile::{self, CompileOptions, CompiledModel, ModelSpec};
+use ns_lbp::config::SystemConfig;
+use ns_lbp::coordinator::{ArchSim, CoordinatorConfig};
+use ns_lbp::engine::{BackendKind, Engine};
+use ns_lbp::hw::HwProfile;
+
+/// A fresh per-test scratch directory; `tag` keeps parallel tests from
+/// colliding, the pid + clock keep reruns from seeing stale caches.
+fn tmpdir(tag: &str) -> PathBuf {
+    let n = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_nanos();
+    let d = std::env::temp_dir().join(format!(
+        "ns-lbp-compile-{tag}-{}-{n}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn spec(seed: u64) -> ModelSpec {
+    ModelSpec::parse(
+        &format!("[model]\nname = \"t\"\nseed = {seed}\n"),
+        Path::new("."),
+    )
+    .unwrap()
+}
+
+fn opts(root: &Path) -> CompileOptions {
+    CompileOptions {
+        out_dir: root.join("models"),
+        cache_dir: root.join("cache"),
+    }
+}
+
+/// The PR's acceptance gate: for both backends, an engine fed the
+/// artifact's prepacked tables is bit-identical — logits, predictions,
+/// and modeled cost — to an engine that packs the same params itself.
+#[test]
+fn artifact_engines_are_bit_identical_to_from_params_engines() {
+    let root = tmpdir("identity");
+    let system = SystemConfig::default();
+    let (_, report) = compile::compile(&spec(11), &system, &opts(&root)).unwrap();
+    let loaded = CompiledModel::load(&report.path).unwrap();
+    assert_eq!(loaded.version, report.version);
+    assert_ne!(loaded.version, 0, "version 0 is the unstamped sentinel");
+
+    let frames = ns_lbp::testing::synth_frames(&loaded.params, 5, 29).unwrap();
+    for kind in [BackendKind::Functional, BackendKind::Architectural] {
+        let config = CoordinatorConfig {
+            arch: ArchSim { lbp: true, mlp: true, early_exit: false },
+            ..Default::default()
+        };
+        let mut from_params = Engine::builder()
+            .config(config.clone())
+            .params(loaded.params.clone())
+            .backend(kind)
+            .no_cross_check()
+            .build()
+            .unwrap();
+        let mut from_artifact = Engine::builder()
+            .config(config)
+            .params(loaded.params.clone())
+            .backend(kind)
+            .no_cross_check()
+            .prepacked(Arc::new(loaded.prepacked()))
+            .build()
+            .unwrap();
+        let want = from_params.infer_batch(&frames).unwrap();
+        let got = from_artifact.infer_batch(&frames).unwrap();
+        assert_eq!(want.frames.len(), got.frames.len());
+        for (w, g) in want.frames.iter().zip(&got.frames) {
+            assert_eq!(w.logits, g.logits, "{kind}: logits diverged");
+            assert_eq!(w.predicted, g.predicted);
+            assert_eq!(w.features, g.features);
+        }
+        let (tw, tg) = (want.telemetry(), got.telemetry());
+        assert_eq!(tw.cost.energy.total_pj(), tg.cost.energy.total_pj(),
+                   "{kind}: artifact engine priced differently");
+        assert_eq!(tw.cost.time_ns, tg.cost.time_ns);
+        assert_eq!(tw.exec.instructions, tg.exec.instructions);
+        assert_eq!(tw.exec.cycles, tg.exec.cycles);
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// An unchanged spec recompiles entirely from the stage caches — zero
+/// packing work — and reproduces the artifact byte for byte, so the
+/// version (a content hash) is stable across compiles.
+#[test]
+fn second_compile_hits_every_cache_and_reproduces_the_artifact() {
+    let root = tmpdir("cache-hit");
+    let system = SystemConfig::default();
+    let opts = opts(&root);
+    let (_, first) = compile::compile(&spec(3), &system, &opts).unwrap();
+    assert!(
+        first.stages.iter().all(|s| !s.cached),
+        "a cold cache must build every stage: {:?}",
+        first.stages
+    );
+    let bytes1 = std::fs::read(&first.path).unwrap();
+
+    let (_, second) = compile::compile(&spec(3), &system, &opts).unwrap();
+    assert!(
+        second.all_cached(),
+        "an unchanged spec must hit every stage cache: {:?}",
+        second.stages
+    );
+    assert_eq!(second.version, first.version);
+    assert_eq!(second.path, first.path);
+    assert_eq!(std::fs::read(&second.path).unwrap(), bytes1);
+
+    // the in-memory builder agrees with the staged pipeline bit for bit
+    let direct = compile::build_model(&spec(3), &system).unwrap();
+    assert_eq!(direct.version, first.version);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Changing the weights (the seed) invalidates `analyze` and everything
+/// downstream of it; changing only the hw profile re-prices without
+/// re-packing (the pack stage still hits).
+#[test]
+fn cache_invalidation_follows_the_stage_inputs() {
+    let root = tmpdir("invalidate");
+    let system = SystemConfig::default();
+    let opts = opts(&root);
+    let (_, base) = compile::compile(&spec(3), &system, &opts).unwrap();
+
+    let (_, reseeded) = compile::compile(&spec(4), &system, &opts).unwrap();
+    assert!(
+        reseeded.stages.iter().all(|s| !s.cached),
+        "a new seed feeds every stage new input: {:?}",
+        reseeded.stages
+    );
+    assert_ne!(reseeded.version, base.version);
+
+    let mut repriced_system = system.clone();
+    repriced_system.hw.profile = HwProfile::resolve("sram38_28nm").unwrap();
+    let (_, repriced) =
+        compile::compile(&spec(3), &repriced_system, &opts).unwrap();
+    for s in &repriced.stages {
+        let expect_cached = s.stage != "price";
+        assert_eq!(
+            s.cached, expect_cached,
+            "profile swap should only rebuild the price stage: {:?}",
+            repriced.stages
+        );
+    }
+    assert_ne!(repriced.version, base.version,
+               "the priced cost is part of the artifact payload");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The loader re-hashes the payload, so any flipped byte on disk is
+/// refused rather than served.
+#[test]
+fn corrupted_artifact_is_rejected_on_load() {
+    let root = tmpdir("corrupt");
+    let system = SystemConfig::default();
+    let (_, report) = compile::compile(&spec(9), &system, &opts(&root)).unwrap();
+    let mut bytes = std::fs::read(&report.path).unwrap();
+    assert!(CompiledModel::load(&report.path).is_ok());
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&report.path, &bytes).unwrap();
+    let err = CompiledModel::load(&report.path).unwrap_err().to_string();
+    assert!(
+        err.contains("corrupt") || err.contains("hash")
+            || err.contains("version"),
+        "corruption should be named in the error: {err}"
+    );
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// `CompileOptions::from_system` picks up the `[compile]` config section.
+#[test]
+fn compile_options_come_from_the_config_section() {
+    let mut system = SystemConfig::default();
+    system.compile.out_dir = "x/models".into();
+    system.compile.cache_dir = "x/cache".into();
+    let o = CompileOptions::from_system(&system);
+    assert_eq!(o.out_dir, PathBuf::from("x/models"));
+    assert_eq!(o.cache_dir, PathBuf::from("x/cache"));
+}

@@ -6,7 +6,9 @@ Checks, in order:
 1. every line parses as a flat JSON object with a known `kind`;
 2. the ring dropped nothing (final `events_dropped` gauge is 0) — pass
    `--allow-drops` to relax the balance checks under deliberate overflow;
-3. per-request lifecycle balance, keyed by (class, sensor_id, seq):
+3. per-request lifecycle balance, keyed by (class, sensor_id, seq,
+   model_id) — the model_id field is omitted from spans when 0, so
+   single-model feeds key exactly as before:
    exactly one `submit` XOR one `reject`; every submitted request ends in
    exactly one terminal event (`complete` | `drop` | `expire` | `fail`);
    every completed request has exactly one `queue` span;
@@ -76,12 +78,14 @@ def check_lifecycles(events, slack_ns):
                 if field not in ev:
                     fail(f"line {ev['_line']}: {ev['kind']} record "
                          f"missing {field}")
-            key = (ev["class"], ev["sensor_id"], ev["seq"])
+            key = (ev["class"], ev["sensor_id"], ev["seq"],
+                   ev.get("model_id", 0))
             by_req[key][ev["kind"]].append(ev)
 
     completed = defaultdict(int)
-    for (cls, sensor, seq), evs in sorted(by_req.items()):
-        at = f"{cls} sensor {sensor} seq {seq}"
+    for (cls, sensor, seq, model), evs in sorted(by_req.items()):
+        at = f"{cls} sensor {sensor} seq {seq}" + (
+            f" model {model}" if model else "")
         n_submit = len(evs["submit"])
         n_reject = len(evs["reject"])
         if n_submit + n_reject != 1:
