@@ -383,6 +383,8 @@ pub struct SystemConfig {
     pub sensor: crate::sensor::SensorConfig,
     /// Frame-serving subsystem knobs.
     pub serve: ServeConfig,
+    /// Multi-node fleet knobs (see [`crate::fleet`]).
+    pub fleet: FleetConfig,
     /// Engine-layer backend selection.
     pub engine: EngineSelection,
     /// Hardware cost-model selection.
@@ -395,6 +397,79 @@ pub struct SystemConfig {
     pub workers: usize,
     /// Artifacts directory for HLO/params files.
     pub artifacts_dir: String,
+}
+
+/// Fleet-layer knobs (`[fleet]` section — see [`crate::fleet`]): node
+/// count, per-node per-class admission capacity, and the failure-drill
+/// parameters `ns-lbp fleet-bench --drill` runs with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Serve nodes the fleet starts.
+    pub nodes: usize,
+    /// Per-node in-flight admission capacity, per class
+    /// ([`QosClass::index`] order).  The router spills past a sensor's
+    /// rendezvous owner when the owner is full, and rejects (retryably)
+    /// when every live node is.
+    pub capacity: [usize; QosClass::COUNT],
+    pub drill: DrillKnobs,
+}
+
+/// Failure-drill parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DrillKnobs {
+    /// Which node the drill kills.
+    pub kill_node: usize,
+    /// Kill after this many completed frames (0 = halfway through the
+    /// offered load).
+    pub kill_after: usize,
+    /// Drill gate: the killed-node run's router-observed p99 must stay
+    /// within this factor of the undisturbed baseline's p99.  Generous
+    /// by default — it is a sanity bound on re-homing, not a perf SLO
+    /// (CI boxes are noisy and the loads are tiny).
+    pub p99_budget: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 3,
+            capacity: [64; QosClass::COUNT],
+            drill: DrillKnobs::default(),
+        }
+    }
+}
+
+impl Default for DrillKnobs {
+    fn default() -> Self {
+        Self { kill_node: 1, kill_after: 0, p99_budget: 50.0 }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            return Err(Error::Config("fleet.nodes must be >= 1".into()));
+        }
+        for class in QosClass::ALL {
+            if self.capacity[class.index()] == 0 {
+                return Err(Error::Config(format!(
+                    "fleet.capacity.{class} must be >= 1"
+                )));
+            }
+        }
+        if self.drill.kill_node >= self.nodes {
+            return Err(Error::Config(format!(
+                "fleet.drill.kill_node {} out of range (fleet has {} nodes)",
+                self.drill.kill_node, self.nodes
+            )));
+        }
+        if !(self.drill.p99_budget > 0.0) {
+            return Err(Error::Config(
+                "fleet.drill.p99_budget must be > 0".into(),
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// Where `ns-lbp compile` puts things (`[compile]` section); the CLI
@@ -423,6 +498,7 @@ impl Default for SystemConfig {
             circuit: crate::circuit::CircuitParams::default(),
             sensor: crate::sensor::SensorConfig::default(),
             serve: ServeConfig::default(),
+            fleet: FleetConfig::default(),
             engine: EngineSelection::default(),
             hw: HwSelection::default(),
             obs: crate::obs::ObsConfig::default(),
@@ -455,6 +531,11 @@ impl SystemConfig {
             "serve.standard.deadline_us", "serve.standard.drop_oldest",
             "serve.billed.queue_depth", "serve.billed.max_batch",
             "serve.billed.deadline_us", "serve.billed.drop_oldest",
+            "fleet.nodes",
+            "fleet.capacity.best_effort", "fleet.capacity.standard",
+            "fleet.capacity.billed",
+            "fleet.drill.kill_node", "fleet.drill.kill_after",
+            "fleet.drill.p99_budget",
             "engine.backend", "engine.cross_check", "engine.pjrt_artifact",
             "engine.routing.best_effort", "engine.routing.standard",
             "engine.routing.billed",
@@ -560,6 +641,29 @@ impl SystemConfig {
         };
         serve.validate()?;
 
+        let mut capacity = d.fleet.capacity;
+        for class in QosClass::ALL {
+            let key = format!("fleet.capacity.{class}");
+            if file.contains(&key) {
+                capacity[class.index()] = file.get_usize(&key, 0)?;
+            }
+        }
+        let fleet = FleetConfig {
+            nodes: file.get_usize("fleet.nodes", d.fleet.nodes)?,
+            capacity,
+            drill: DrillKnobs {
+                kill_node: file
+                    .get_usize("fleet.drill.kill_node", d.fleet.drill.kill_node)?,
+                kill_after: file
+                    .get_usize("fleet.drill.kill_after",
+                               d.fleet.drill.kill_after)?,
+                p99_budget: file
+                    .get_f64("fleet.drill.p99_budget",
+                             d.fleet.drill.p99_budget)?,
+            },
+        };
+        fleet.validate()?;
+
         let mut routing = RoutingPolicy::default();
         for class in QosClass::ALL {
             let key = format!("engine.routing.{class}");
@@ -612,6 +716,7 @@ impl SystemConfig {
             circuit,
             sensor,
             serve,
+            fleet,
             engine,
             hw,
             obs,
@@ -896,6 +1001,34 @@ mod tests {
         assert_eq!(sc.serve.batch_deadline().as_micros(), 500);
 
         let bad = ConfigFile::parse("[serve]\nshards = 0").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn fleet_knobs_parse_and_validate() {
+        let f = ConfigFile::parse(
+            "[fleet]\nnodes = 5\n\n[fleet.capacity]\nbilled = 8\n\n\
+             [fleet.drill]\nkill_node = 2\nkill_after = 16\n\
+             p99_budget = 10.0",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(sc.fleet.nodes, 5);
+        assert_eq!(sc.fleet.capacity[QosClass::Billed.index()], 8);
+        // Unset classes keep the default capacity.
+        assert_eq!(sc.fleet.capacity[QosClass::Standard.index()],
+                   FleetConfig::default().capacity[1]);
+        assert_eq!(sc.fleet.drill.kill_node, 2);
+        assert_eq!(sc.fleet.drill.kill_after, 16);
+        assert_eq!(sc.fleet.drill.p99_budget, 10.0);
+
+        let bad = ConfigFile::parse("[fleet]\nnodes = 0").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad = ConfigFile::parse("[fleet]\nnodes = 2\n\n[fleet.drill]\n\
+                                     kill_node = 2")
+            .unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad = ConfigFile::parse("[fleet]\nnods = 3").unwrap();
         assert!(SystemConfig::from_file(&bad).is_err());
     }
 }

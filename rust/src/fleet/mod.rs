@@ -1,0 +1,1091 @@
+//! `fleet` — multi-node serving: sensor-hash routing, versioned weight
+//! replication, and failure drills.
+//!
+//! One [`crate::serve::Server`] simulates one near-sensor cache.  A real
+//! deployment of the paper's accelerator is a *fleet* of such caches
+//! behind an aggregation point, so this module runs N serve nodes (in
+//! process, to stay offline) behind the socket-shaped
+//! [`transport::Transport`] and fronts them with a router:
+//!
+//! * **Placement** — sessions spread across nodes by rendezvous hash of
+//!   `sensor_id` ([`router::rendezvous_rank`]), with per-node,
+//!   per-[`QosClass`] admission capacity and spill to the next-ranked
+//!   node when the owner is full.
+//! * **Weight replication** — [`Fleet::push_model`] serializes a
+//!   content-hash-versioned compiled artifact *once* and rolls it
+//!   node-by-node over the wire, awaiting each node's version ack;
+//!   `serve::Server::push_model` pins in-flight frames to the entry they
+//!   were admitted against, so a rollover never drops frames.
+//! * **Failure drills** — [`Fleet::kill_node`] drops a node without
+//!   drain.  The router detects link-down, re-homes the dead node's
+//!   in-flight frames to their next-ranked live nodes (same `seq`, new
+//!   request id), and keeps billed-frame loss at zero: frames are only
+//!   *lost* when no live node remains.
+//! * **Fleet observability** — [`Fleet::drain`] folds every node's
+//!   [`MetricsReport`] plus router-side counters (re-homes, spills,
+//!   per-node completions, end-to-end percentiles) into one
+//!   [`FleetReport`]; with tracing on, each node writes its own JSONL
+//!   feed (`feed-node<i>.jsonl`) that `ns-lbp trace` can merge.
+//!
+//! Engines are deterministic, so a fleet's logits are bit-identical to a
+//! single node serving the same stamped frames — re-homing and spilling
+//! move *where* a frame runs, never *what* it computes.  `ns-lbp
+//! fleet-bench` drives the whole stack, drills included.
+
+pub mod node;
+pub mod router;
+pub mod transport;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::compile::CompiledModel;
+use crate::config::FleetConfig;
+use crate::engine::{EngineConfig, QosClass};
+use crate::error::{Error, Result};
+use crate::obs::json as j;
+use crate::params::NetParams;
+use crate::sensor::Frame;
+use crate::serve::{percentile_ns, InferResponse, MetricsReport};
+
+pub use router::{rendezvous_owner, rendezvous_rank, rendezvous_score, Placement,
+                 RoutingTable};
+pub use transport::{ChannelTransport, NodeId, Transport, WireRequest, WireResponse};
+
+// ---------------------------------------------------------------------------
+// Completion plumbing
+// ---------------------------------------------------------------------------
+
+/// A completed fleet inference: the serving node's response plus the
+/// router's view of the frame's journey.
+#[derive(Clone, Debug)]
+pub struct FleetResponse {
+    /// Node that completed the frame (after any re-homing).
+    pub node: NodeId,
+    /// Times the frame was re-homed after a node death.
+    pub rerouted: u32,
+    /// Router-observed submit→completion latency (spans re-homes).
+    pub latency: Duration,
+    /// The node's full serving response (logits, telemetry, shard…).
+    pub inner: InferResponse,
+}
+
+impl FleetResponse {
+    pub fn seq(&self) -> u64 {
+        self.inner.seq()
+    }
+
+    pub fn predicted(&self) -> usize {
+        self.inner.predicted()
+    }
+}
+
+struct FleetSlot {
+    result: Mutex<Option<Result<FleetResponse>>>,
+    ready: Condvar,
+}
+
+impl FleetSlot {
+    fn new() -> Self {
+        Self { result: Mutex::new(None), ready: Condvar::new() }
+    }
+
+    fn fulfill(&self, r: Result<FleetResponse>) {
+        let mut g = self.result.lock().unwrap();
+        if g.is_none() {
+            *g = Some(r);
+            self.ready.notify_all();
+        }
+    }
+}
+
+/// Claim on one in-flight fleet frame (mirrors [`crate::serve::Ticket`]).
+pub struct FleetTicket {
+    slot: Arc<FleetSlot>,
+}
+
+impl FleetTicket {
+    /// Block until the frame resolves.
+    pub fn wait(self) -> Result<FleetResponse> {
+        let mut g = self.slot.result.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.slot.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Bounded wait; `None` on timeout (claim stays valid).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<FleetResponse>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.slot.result.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) =
+                self.slot.ready.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<Result<FleetResponse>> {
+        self.slot.result.lock().unwrap().take()
+    }
+}
+
+/// Ack payload for control operations (model push, drain).
+enum ControlAck {
+    Pushed { version: u64 },
+    Drained,
+}
+
+struct ControlSlot {
+    node: NodeId,
+    result: Mutex<Option<Result<ControlAck>>>,
+    ready: Condvar,
+}
+
+impl ControlSlot {
+    fn new(node: NodeId) -> Self {
+        Self { node, result: Mutex::new(None), ready: Condvar::new() }
+    }
+
+    fn fulfill(&self, r: Result<ControlAck>) {
+        let mut g = self.result.lock().unwrap();
+        if g.is_none() {
+            *g = Some(r);
+            self.ready.notify_all();
+        }
+    }
+
+    fn wait(&self, timeout: Duration) -> Option<Result<ControlAck>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.result.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.ready.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router core (shared with collector threads)
+// ---------------------------------------------------------------------------
+
+struct PendingEntry {
+    sensor_id: u32,
+    class: QosClass,
+    model_id: u32,
+    frame: Frame,
+    node: NodeId,
+    attempts: u32,
+    submitted: Instant,
+    slot: Arc<FleetSlot>,
+}
+
+#[derive(Clone, Debug, Default)]
+struct FleetStats {
+    submitted: u64,
+    completed: u64,
+    completed_by_class: [u64; QosClass::COUNT],
+    completed_by_node: Vec<u64>,
+    rejected: u64,
+    dropped: u64,
+    failed: u64,
+    rerouted: u64,
+    spilled: u64,
+    lost: [u64; QosClass::COUNT],
+    /// Responses with no pending entry (e.g. a late duplicate) — should
+    /// stay zero, tracked so it can't hide.
+    orphaned: u64,
+}
+
+struct RouterState {
+    table: RoutingTable,
+    pending: HashMap<u64, PendingEntry>,
+    control: HashMap<u64, Arc<ControlSlot>>,
+    reports: Vec<Option<MetricsReport>>,
+    stats: FleetStats,
+    latencies_ns: Vec<u64>,
+}
+
+struct RouterCore {
+    state: Mutex<RouterState>,
+    txs: Vec<Arc<dyn transport::WireTx<WireRequest>>>,
+    next_req: AtomicU64,
+}
+
+impl RouterCore {
+    fn req_id(&self) -> u64 {
+        self.next_req.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// Place `entry` on the first live node with capacity and put it on the
+/// wire.  On a send failure (link just died) the target is marked dead
+/// and the walk continues.  `Err` hands the entry back: no live node had
+/// headroom for its class.
+fn route_and_send(core: &RouterCore, mut entry: PendingEntry)
+                  -> std::result::Result<NodeId, (Error, PendingEntry)> {
+    loop {
+        let req_id = core.req_id();
+        let node = {
+            let mut st = core.state.lock().unwrap();
+            let placement = match st.table.admit(entry.sensor_id, entry.class) {
+                Some(p) => p,
+                None => {
+                    let live = st.table.live_nodes().len();
+                    return Err((
+                        Error::Serve(format!(
+                            "fleet admission: no capacity for class {} on any \
+                             of {live} live node(s)",
+                            entry.class.as_str()
+                        )),
+                        entry,
+                    ));
+                }
+            };
+            if placement.spilled {
+                st.stats.spilled += 1;
+            }
+            entry.node = placement.node;
+            let msg_parts = (entry.sensor_id, entry.class, entry.model_id,
+                             entry.frame.clone());
+            st.pending.insert(req_id, entry);
+            drop(st);
+            (placement.node, msg_parts)
+        };
+        let (node, (sensor_id, class, model_id, frame)) = node;
+        let msg = WireRequest::Submit { req_id, sensor_id, class, model_id, frame };
+        match core.txs[node].send(msg) {
+            Ok(()) => return Ok(node),
+            Err(_) => {
+                // Link down between admit and send: undo, mark dead, walk on.
+                let mut st = core.state.lock().unwrap();
+                st.table.release(node, class);
+                st.table.mark_dead(node);
+                match st.pending.remove(&req_id) {
+                    Some(e) => entry = e,
+                    // The node's collector already re-homed it.
+                    None => return Ok(node),
+                }
+            }
+        }
+    }
+}
+
+/// One node's response collector: runs until the node's link closes,
+/// then re-homes whatever the dead node still owed.
+fn collect(core: &Arc<RouterCore>, node: NodeId,
+           rx: Box<dyn transport::WireRx<WireResponse>>) {
+    while let Some(msg) = rx.recv() {
+        match msg {
+            WireResponse::Completed { req_id, response } => {
+                let entry = {
+                    let mut st = core.state.lock().unwrap();
+                    match st.pending.remove(&req_id) {
+                        Some(e) => {
+                            st.table.release(node, e.class);
+                            let ns = e.submitted.elapsed().as_nanos() as u64;
+                            st.latencies_ns.push(ns);
+                            st.stats.completed += 1;
+                            st.stats.completed_by_class[e.class.index()] += 1;
+                            st.stats.completed_by_node[node] += 1;
+                            Some(e)
+                        }
+                        None => {
+                            st.stats.orphaned += 1;
+                            None
+                        }
+                    }
+                };
+                if let Some(e) = entry {
+                    e.slot.fulfill(Ok(FleetResponse {
+                        node,
+                        rerouted: e.attempts,
+                        latency: e.submitted.elapsed(),
+                        inner: response,
+                    }));
+                }
+            }
+            WireResponse::Rejected { req_id, error } => {
+                resolve_error(core, node, req_id, Error::Serve(error), Term::Rejected);
+            }
+            WireResponse::Dropped { req_id, error } => {
+                resolve_error(core, node, req_id, Error::Dropped(error), Term::Dropped);
+            }
+            WireResponse::Failed { req_id, error } => {
+                // Either a frame failure or a failed drain report.
+                let control = core.state.lock().unwrap().control.remove(&req_id);
+                match control {
+                    Some(slot) => slot.fulfill(Err(Error::Serve(error))),
+                    None => resolve_error(core, node, req_id,
+                                          Error::Runtime(error), Term::Failed),
+                }
+            }
+            WireResponse::ModelPushed { req_id, version, .. } => {
+                if let Some(slot) = core.state.lock().unwrap().control.remove(&req_id) {
+                    slot.fulfill(Ok(ControlAck::Pushed { version }));
+                }
+            }
+            WireResponse::PushFailed { req_id, error } => {
+                if let Some(slot) = core.state.lock().unwrap().control.remove(&req_id) {
+                    slot.fulfill(Err(Error::Serve(error)));
+                }
+            }
+            WireResponse::Drained { req_id, report } => {
+                let slot = {
+                    let mut st = core.state.lock().unwrap();
+                    st.reports[node] = Some(*report);
+                    st.control.remove(&req_id)
+                };
+                if let Some(slot) = slot {
+                    slot.fulfill(Ok(ControlAck::Drained));
+                }
+            }
+        }
+    }
+    node_down(core, node);
+}
+
+enum Term {
+    Rejected,
+    Dropped,
+    Failed,
+}
+
+fn resolve_error(core: &RouterCore, node: NodeId, req_id: u64, err: Error, term: Term) {
+    let entry = {
+        let mut st = core.state.lock().unwrap();
+        match st.pending.remove(&req_id) {
+            Some(e) => {
+                st.table.release(node, e.class);
+                match term {
+                    Term::Rejected => st.stats.rejected += 1,
+                    Term::Dropped => st.stats.dropped += 1,
+                    Term::Failed => st.stats.failed += 1,
+                }
+                Some(e)
+            }
+            None => {
+                st.stats.orphaned += 1;
+                None
+            }
+        }
+    };
+    if let Some(e) = entry {
+        e.slot.fulfill(Err(err));
+    }
+}
+
+/// Link-down handling: mark the node dead, fail its control waiters,
+/// and re-home every frame it still owed.  Re-homed frames keep their
+/// stamped `seq` and original submit time, so fleet output and latency
+/// accounting stay comparable to an undisturbed run.
+fn node_down(core: &Arc<RouterCore>, node: NodeId) {
+    let (rehome, controls) = {
+        let mut st = core.state.lock().unwrap();
+        st.table.mark_dead(node);
+        let ids: Vec<u64> = st
+            .pending
+            .iter()
+            .filter(|(_, e)| e.node == node)
+            .map(|(&id, _)| id)
+            .collect();
+        let rehome: Vec<PendingEntry> =
+            ids.iter().map(|id| st.pending.remove(id).unwrap()).collect();
+        let cids: Vec<u64> = st
+            .control
+            .iter()
+            .filter(|(_, c)| c.node == node)
+            .map(|(&id, _)| id)
+            .collect();
+        let controls: Vec<Arc<ControlSlot>> =
+            cids.iter().map(|id| st.control.remove(id).unwrap()).collect();
+        (rehome, controls)
+    };
+    for slot in controls {
+        slot.fulfill(Err(Error::Serve(format!("fleet node {node} went down"))));
+    }
+    for mut entry in rehome {
+        entry.attempts += 1;
+        core.state.lock().unwrap().stats.rerouted += 1;
+        if let Err((err, entry)) = route_and_send(core, entry) {
+            let mut st = core.state.lock().unwrap();
+            st.stats.lost[entry.class.index()] += 1;
+            drop(st);
+            entry.slot.fulfill(Err(err));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet
+// ---------------------------------------------------------------------------
+
+struct NodeHandle {
+    kill: Arc<AtomicBool>,
+    service: Option<JoinHandle<()>>,
+    collector: Option<JoinHandle<()>>,
+}
+
+/// N in-process serve nodes behind a rendezvous-hash router.  See the
+/// module docs for the design; knobs live in `[fleet]`
+/// ([`crate::config::FleetConfig`]).
+pub struct Fleet {
+    core: Arc<RouterCore>,
+    handles: Vec<NodeHandle>,
+    killed: Mutex<Vec<NodeId>>,
+    seqs: Mutex<HashMap<u32, u64>>,
+    config: FleetConfig,
+}
+
+impl Fleet {
+    /// Start `config.system.fleet.nodes` serve nodes over the in-memory
+    /// channel transport.
+    pub fn start(params: NetParams, config: EngineConfig) -> Result<Fleet> {
+        let depth: usize =
+            config.system.fleet.capacity.iter().sum::<usize>() + 16;
+        Fleet::start_with_transport(params, config,
+                                    Box::new(ChannelTransport::new(depth)))
+    }
+
+    /// Start over a caller-supplied [`Transport`] — the seam where a
+    /// real wire slots in.
+    pub fn start_with_transport(params: NetParams, config: EngineConfig,
+                                mut transport: Box<dyn Transport>)
+                                -> Result<Fleet> {
+        let fleet_cfg = config.system.fleet.clone();
+        fleet_cfg.validate()?;
+        let n = fleet_cfg.nodes;
+
+        let mut links = Vec::with_capacity(n);
+        let mut txs = Vec::with_capacity(n);
+        for node in 0..n {
+            let (router_link, node_link) = transport.connect(node);
+            txs.push(Arc::clone(&router_link.tx));
+            links.push((router_link.rx, node_link));
+        }
+
+        let core = Arc::new(RouterCore {
+            state: Mutex::new(RouterState {
+                table: RoutingTable::new(n, fleet_cfg.capacity),
+                pending: HashMap::new(),
+                control: HashMap::new(),
+                reports: vec![None; n],
+                stats: FleetStats {
+                    completed_by_node: vec![0; n],
+                    ..FleetStats::default()
+                },
+                latencies_ns: Vec::new(),
+            }),
+            txs,
+            next_req: AtomicU64::new(1),
+        });
+
+        let mut handles = Vec::with_capacity(n);
+        for (node, (router_rx, node_link)) in links.into_iter().enumerate() {
+            let mut node_config = config.clone();
+            // Each node gets its own trace feed: feed.jsonl ->
+            // feed-node<i>.jsonl (merged back by `ns-lbp trace A B C`).
+            if node_config.system.obs.enabled {
+                node_config.system.obs.jsonl_path =
+                    node_feed_path(&config.system.obs.jsonl_path, node);
+            }
+            let server = crate::serve::Server::start(params.clone(), node_config)?;
+            let kill = Arc::new(AtomicBool::new(false));
+            let service = {
+                let kill = Arc::clone(&kill);
+                std::thread::Builder::new()
+                    .name(format!("fleet-node-{node}"))
+                    .spawn(move || node::run(node, server, node_link, kill))
+                    .map_err(|e| Error::Serve(format!("spawn node {node}: {e}")))?
+            };
+            let collector = {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("fleet-collect-{node}"))
+                    .spawn(move || collect(&core, node, router_rx))
+                    .map_err(|e| Error::Serve(format!("spawn collector {node}: {e}")))?
+            };
+            handles.push(NodeHandle {
+                kill,
+                service: Some(service),
+                collector: Some(collector),
+            });
+        }
+
+        Ok(Fleet {
+            core,
+            handles,
+            killed: Mutex::new(Vec::new()),
+            seqs: Mutex::new(HashMap::new()),
+            config: fleet_cfg,
+        })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.config
+    }
+
+    /// Nodes currently accepting traffic.
+    pub fn live_nodes(&self) -> Vec<NodeId> {
+        self.core.state.lock().unwrap().table.live_nodes()
+    }
+
+    /// The live node that owns `sensor_id` under rendezvous hashing.
+    pub fn owner_of(&self, sensor_id: u32) -> Option<NodeId> {
+        let live = self.live_nodes();
+        rendezvous_owner(sensor_id, &live)
+    }
+
+    /// Open a session for one sensor stream: stamps the per-sensor
+    /// sequence number on each submitted frame (the fleet owns the seq
+    /// space so re-homed frames keep their place in the stream).
+    pub fn session(&self, sensor_id: u32) -> FleetSession<'_> {
+        FleetSession {
+            fleet: self,
+            sensor_id,
+            class: QosClass::default(),
+            model_id: 0,
+        }
+    }
+
+    /// Submit a frame whose `seq` the caller already stamped.  Admission
+    /// walks the sensor's rendezvous ranking; `Err(Error::Serve)` means
+    /// every live node is at capacity for `class` (retryable).
+    pub fn submit_stamped(&self, sensor_id: u32, class: QosClass, model_id: u32,
+                          frame: Frame) -> Result<FleetTicket> {
+        let slot = Arc::new(FleetSlot::new());
+        let entry = PendingEntry {
+            sensor_id,
+            class,
+            model_id,
+            frame,
+            node: 0,
+            attempts: 0,
+            submitted: Instant::now(),
+            slot: Arc::clone(&slot),
+        };
+        match route_and_send(&self.core, entry) {
+            Ok(_) => {
+                self.core.state.lock().unwrap().stats.submitted += 1;
+                Ok(FleetTicket { slot })
+            }
+            Err((err, _entry)) => {
+                self.core.state.lock().unwrap().stats.rejected += 1;
+                Err(err)
+            }
+        }
+    }
+
+    /// Kill `node` without drain (failure drill): the node drops its
+    /// server on the spot and severs its link; the router re-homes its
+    /// in-flight frames to the next-ranked live nodes.
+    pub fn kill_node(&self, node: NodeId) -> Result<()> {
+        if node >= self.handles.len() {
+            return Err(Error::Usage(format!(
+                "fleet kill: node {node} out of range (fleet has {})",
+                self.handles.len()
+            )));
+        }
+        self.handles[node].kill.store(true, Ordering::Release);
+        // Stop feeding it; in-flight responses still drain off the link.
+        self.core.txs[node].close();
+        self.core.state.lock().unwrap().table.mark_dead(node);
+        let mut killed = self.killed.lock().unwrap();
+        if !killed.contains(&node) {
+            killed.push(node);
+        }
+        Ok(())
+    }
+
+    /// Roll `model` (as `model_id`) through the fleet node-by-node:
+    /// serialize the artifact once, push it to each live node over the
+    /// wire, and wait for that node's version ack before moving on.
+    /// Returns the per-node acks `(node, version)`; every version is the
+    /// artifact's content hash, so convergence means all acks agree.
+    /// Nodes that die mid-roll are skipped (the drill path).
+    pub fn push_model(&self, model_id: u32, model: &CompiledModel)
+                      -> Result<Vec<(NodeId, u64)>> {
+        let mut stamped = model.clone();
+        let artifact = Arc::new(stamped.to_bytes());
+        let version = stamped.version;
+        let live = self.live_nodes();
+        let mut acks = Vec::with_capacity(live.len());
+        for node in live {
+            let req_id = self.core.req_id();
+            let slot = Arc::new(ControlSlot::new(node));
+            self.core
+                .state
+                .lock()
+                .unwrap()
+                .control
+                .insert(req_id, Arc::clone(&slot));
+            let msg = WireRequest::PushModel {
+                req_id,
+                model_id,
+                artifact: Arc::clone(&artifact),
+            };
+            if self.core.txs[node].send(msg).is_err() {
+                self.core.state.lock().unwrap().control.remove(&req_id);
+                continue;
+            }
+            match slot.wait(CONTROL_TIMEOUT) {
+                Some(Ok(ControlAck::Pushed { version: acked })) => {
+                    if acked != version {
+                        return Err(Error::Serve(format!(
+                            "fleet push_model: node {node} acked version \
+                             {acked:016x}, expected {version:016x}"
+                        )));
+                    }
+                    acks.push((node, acked));
+                }
+                Some(Ok(ControlAck::Drained)) => unreachable!("push acked as drain"),
+                Some(Err(Error::Serve(e))) if e.contains("went down") => continue,
+                Some(Err(e)) => return Err(e),
+                None => {
+                    return Err(Error::Serve(format!(
+                        "fleet push_model: node {node} ack timed out"
+                    )))
+                }
+            }
+        }
+        if acks.is_empty() {
+            return Err(Error::Serve(
+                "fleet push_model: no live node acked the artifact".into(),
+            ));
+        }
+        Ok(acks)
+    }
+
+    /// Graceful shutdown: drain every live node (each finishes its
+    /// in-flight frames, then reports), join the node threads, and fold
+    /// everything into a [`FleetReport`].
+    pub fn drain(mut self) -> Result<FleetReport> {
+        let live = self.live_nodes();
+        let mut waits = Vec::with_capacity(live.len());
+        for &node in &live {
+            let req_id = self.core.req_id();
+            let slot = Arc::new(ControlSlot::new(node));
+            self.core
+                .state
+                .lock()
+                .unwrap()
+                .control
+                .insert(req_id, Arc::clone(&slot));
+            if self.core.txs[node].send(WireRequest::Drain { req_id }).is_err() {
+                self.core.state.lock().unwrap().control.remove(&req_id);
+                continue;
+            }
+            waits.push(slot);
+        }
+        for slot in waits {
+            // A node dying mid-drain surfaces as Err here; the report
+            // simply lacks its MetricsReport.
+            let _ = slot.wait(CONTROL_TIMEOUT);
+        }
+        for (node, handle) in self.handles.iter_mut().enumerate() {
+            self.core.txs[node].close();
+            if let Some(h) = handle.service.take() {
+                let _ = h.join();
+            }
+            if let Some(h) = handle.collector.take() {
+                let _ = h.join();
+            }
+        }
+
+        let killed = std::mem::take(&mut *self.killed.lock().unwrap());
+        let mut st = self.core.state.lock().unwrap();
+        let stats = st.stats.clone();
+        let reports = std::mem::take(&mut st.reports);
+        let mut lat = std::mem::take(&mut st.latencies_ns);
+        drop(st);
+        lat.sort_unstable();
+        let ms = |q: f64| percentile_ns(&lat, q) as f64 / 1e6;
+        Ok(FleetReport {
+            nodes: self.handles.len(),
+            killed,
+            live,
+            submitted: stats.submitted,
+            completed: stats.completed,
+            completed_by_class: stats.completed_by_class,
+            completed_by_node: stats.completed_by_node,
+            rejected: stats.rejected,
+            dropped: stats.dropped,
+            failed: stats.failed,
+            rerouted: stats.rerouted,
+            spilled: stats.spilled,
+            lost: stats.lost,
+            orphaned: stats.orphaned,
+            p50_ms: ms(0.50),
+            p95_ms: ms(0.95),
+            p99_ms: ms(0.99),
+            max_ms: lat.last().copied().unwrap_or(0) as f64 / 1e6,
+            node_reports: reports,
+        })
+    }
+
+    fn next_seq(&self, sensor_id: u32) -> u64 {
+        let mut seqs = self.seqs.lock().unwrap();
+        let seq = seqs.entry(sensor_id).or_insert(0);
+        let s = *seq;
+        *seq += 1;
+        s
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        // Ungraceful teardown (e.g. a test bailed): sever every link so
+        // node loops and collectors exit instead of leaking.
+        for (node, handle) in self.handles.iter_mut().enumerate() {
+            handle.kill.store(true, Ordering::Release);
+            self.core.txs[node].close();
+            if let Some(h) = handle.service.take() {
+                let _ = h.join();
+            }
+            if let Some(h) = handle.collector.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+const CONTROL_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Per-node trace feed path: `feed.jsonl` → `feed-node<i>.jsonl`.
+pub fn node_feed_path(base: &str, node: NodeId) -> String {
+    match base.strip_suffix(".jsonl") {
+        Some(stem) => format!("{stem}-node{node}.jsonl"),
+        None => format!("{base}-node{node}"),
+    }
+}
+
+/// Per-sensor submission handle (mirrors [`crate::serve::Session`]).
+pub struct FleetSession<'f> {
+    fleet: &'f Fleet,
+    sensor_id: u32,
+    class: QosClass,
+    model_id: u32,
+}
+
+impl FleetSession<'_> {
+    pub fn with_class(mut self, class: QosClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    pub fn with_model(mut self, model_id: u32) -> Self {
+        self.model_id = model_id;
+        self
+    }
+
+    pub fn sensor_id(&self) -> u32 {
+        self.sensor_id
+    }
+
+    /// Stamp the next per-sensor `seq` and submit.
+    pub fn submit(&self, frame: Frame) -> Result<FleetTicket> {
+        let seq = self.fleet.next_seq(self.sensor_id);
+        self.fleet
+            .submit_stamped(self.sensor_id, self.class, self.model_id,
+                            frame.with_seq(seq))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet report
+// ---------------------------------------------------------------------------
+
+/// The fleet-level rollup: router-side counters + per-node
+/// [`MetricsReport`]s (`None` for killed nodes — they died without
+/// drain).
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub nodes: usize,
+    /// Nodes killed by drills, in kill order.
+    pub killed: Vec<NodeId>,
+    /// Nodes that were alive at drain.
+    pub live: Vec<NodeId>,
+    pub submitted: u64,
+    pub completed: u64,
+    pub completed_by_class: [u64; QosClass::COUNT],
+    /// Completions credited to the node that served them (a re-homed
+    /// frame credits its final node).
+    pub completed_by_node: Vec<u64>,
+    pub rejected: u64,
+    pub dropped: u64,
+    pub failed: u64,
+    /// Frames re-homed after a node death.
+    pub rerouted: u64,
+    /// Admissions that spilled past the sensor's rendezvous owner.
+    pub spilled: u64,
+    /// Frames lost per class (no live node left to serve them).
+    pub lost: [u64; QosClass::COUNT],
+    pub orphaned: u64,
+    /// Router-observed end-to-end latency percentiles (spanning
+    /// re-homes).
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub node_reports: Vec<Option<MetricsReport>>,
+}
+
+impl FleetReport {
+    /// Billed frames lost — the drill invariant that must stay zero.
+    pub fn billed_lost(&self) -> u64 {
+        self.lost[QosClass::Billed.index()]
+    }
+
+    pub fn completed_for(&self, class: QosClass) -> u64 {
+        self.completed_by_class[class.index()]
+    }
+
+    /// Single-document JSON (same spirit as
+    /// [`MetricsReport::to_json`], with a per-node breakdown).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(2048);
+        out.push('{');
+        j::push_u64_field(&mut out, "nodes", self.nodes as u64);
+        out.push_str("\"killed\":[");
+        for (i, n) in self.killed.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&n.to_string());
+        }
+        out.push_str("],");
+        j::push_u64_field(&mut out, "submitted", self.submitted);
+        j::push_u64_field(&mut out, "completed", self.completed);
+        j::push_u64_field(&mut out, "rejected", self.rejected);
+        j::push_u64_field(&mut out, "dropped", self.dropped);
+        j::push_u64_field(&mut out, "failed", self.failed);
+        j::push_u64_field(&mut out, "rerouted", self.rerouted);
+        j::push_u64_field(&mut out, "spilled", self.spilled);
+        j::push_u64_field(&mut out, "orphaned", self.orphaned);
+        j::push_u64_field(&mut out, "billed_lost", self.billed_lost());
+        out.push_str("\"completed_by_class\":{");
+        for class in QosClass::ALL {
+            j::push_u64_field(&mut out, class.as_str(),
+                              self.completed_by_class[class.index()]);
+        }
+        out.pop();
+        out.push_str("},");
+        out.push_str("\"lost_by_class\":{");
+        for class in QosClass::ALL {
+            j::push_u64_field(&mut out, class.as_str(), self.lost[class.index()]);
+        }
+        out.pop();
+        out.push_str("},");
+        out.push_str("\"latency_ms\":{");
+        j::push_f64_field(&mut out, "p50", self.p50_ms);
+        j::push_f64_field(&mut out, "p95", self.p95_ms);
+        j::push_f64_field(&mut out, "p99", self.p99_ms);
+        j::push_f64_field(&mut out, "max", self.max_ms);
+        out.pop();
+        out.push_str("},");
+        out.push_str("\"per_node\":[");
+        for node in 0..self.nodes {
+            if node > 0 {
+                out.push(',');
+            }
+            out.push('{');
+            j::push_u64_field(&mut out, "node", node as u64);
+            out.push_str("\"killed\":");
+            out.push_str(if self.killed.contains(&node) { "true," } else { "false," });
+            j::push_u64_field(&mut out, "completed_routed",
+                              self.completed_by_node[node]);
+            out.push_str("\"report\":");
+            match &self.node_reports[node] {
+                Some(r) => out.push_str(&r.to_json()),
+                None => out.push_str("null"),
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Human-readable rollup.
+    pub fn print(&self, label: &str) {
+        println!("== fleet report: {label} ==");
+        println!(
+            "  nodes {} (killed {:?})  submitted {}  completed {}  \
+             rejected {}  dropped {}  failed {}",
+            self.nodes, self.killed, self.submitted, self.completed,
+            self.rejected, self.dropped, self.failed
+        );
+        println!(
+            "  rerouted {}  spilled {}  billed lost {}  \
+             e2e p50/p95/p99/max {:.3}/{:.3}/{:.3}/{:.3} ms",
+            self.rerouted, self.spilled, self.billed_lost(),
+            self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms
+        );
+        for node in 0..self.nodes {
+            match &self.node_reports[node] {
+                Some(r) => println!(
+                    "  node {node}: routed {}  accepted {}  completed {}  \
+                     p99 {:.3} ms",
+                    self.completed_by_node[node], r.accepted, r.completed,
+                    r.p99_ms
+                ),
+                None => println!(
+                    "  node {node}: routed {}  (killed — no drain report)",
+                    self.completed_by_node[node]
+                ),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ArchSim;
+    use crate::params::synth::synth_params;
+    use crate::serve::{Request, Server};
+
+    fn test_config(nodes: usize) -> EngineConfig {
+        let mut config = EngineConfig {
+            arch: ArchSim { lbp: false, mlp: false, early_exit: false },
+            ..Default::default()
+        };
+        config.system.serve.shards = 1;
+        config.system.serve.max_batch = 4;
+        config.system.serve.batch_deadline_us = 500;
+        config.system.fleet.nodes = nodes;
+        config
+    }
+
+    fn synth(n: usize, seed: u64) -> (NetParams, Vec<Frame>) {
+        let (_, params) = synth_params(5);
+        let frames = crate::testing::synth_frames(&params, n, seed).unwrap();
+        (params, frames)
+    }
+
+    #[test]
+    fn fleet_round_trip_matches_single_server() {
+        let (params, frames) = synth(12, 9);
+        let fleet = Fleet::start(params.clone(), test_config(3)).unwrap();
+        let sensors: Vec<u32> = (0..4).collect();
+        let mut tickets = Vec::new();
+        for (i, frame) in frames.iter().enumerate() {
+            let sensor = sensors[i % sensors.len()];
+            let session = fleet.session(sensor).with_class(QosClass::Billed);
+            tickets.push((sensor, session.submit(frame.clone()).unwrap()));
+        }
+        let mut fleet_logits: HashMap<(u32, u64), Vec<f32>> = HashMap::new();
+        for (sensor, ticket) in tickets {
+            let resp = ticket.wait().unwrap();
+            fleet_logits.insert((sensor, resp.seq()), resp.inner.report.logits);
+        }
+        let report = fleet.drain().unwrap();
+        assert_eq!(report.completed, 12);
+        assert_eq!(report.billed_lost(), 0);
+        assert_eq!(report.orphaned, 0);
+        assert_eq!(
+            report.completed_by_node.iter().sum::<u64>(),
+            report.completed
+        );
+
+        // Same frames through one serve::Server: logits must be
+        // bit-identical (placement never changes the math).
+        let server = Server::start(params, test_config(1)).unwrap();
+        let mut seqs: HashMap<u32, u64> = HashMap::new();
+        let mut single = Vec::new();
+        for (i, frame) in frames.iter().enumerate() {
+            let sensor = sensors[i % sensors.len()];
+            let seq = seqs.entry(sensor).or_insert(0);
+            let request = Request::builder(frame.clone().with_seq(*seq))
+                .sensor_id(sensor)
+                .class(QosClass::Billed)
+                .build();
+            *seq += 1;
+            single.push((sensor, server.submit(request).unwrap()));
+        }
+        for (sensor, ticket) in single {
+            let resp = ticket.wait().unwrap();
+            let fleet_l = &fleet_logits[&(sensor, resp.seq())];
+            assert_eq!(fleet_l, &resp.report.logits,
+                       "sensor {sensor} seq {} diverged", resp.seq());
+        }
+        server.drain().unwrap();
+    }
+
+    #[test]
+    fn push_model_rolls_all_nodes_to_same_version() {
+        let (params, frames) = synth(4, 11);
+        let config = test_config(2);
+        let fleet = Fleet::start(params, config.clone()).unwrap();
+        let spec = crate::compile::ModelSpec::parse(
+            "[model]\nname = \"alt\"\nseed = 7\n",
+            std::path::Path::new("."),
+        )
+        .unwrap();
+        let model = crate::compile::build_model(&spec, &config.system).unwrap();
+        let acks = fleet.push_model(1, &model).unwrap();
+        assert_eq!(acks.len(), 2);
+        assert!(acks.iter().all(|&(_, v)| v == acks[0].1 && v != 0), "{acks:?}");
+        // The rolled model serves traffic on every node.
+        let mut tickets = Vec::new();
+        for (i, frame) in frames.iter().enumerate() {
+            let session = fleet.session(i as u32).with_model(1);
+            tickets.push(session.submit(frame.clone()).unwrap());
+        }
+        for ticket in tickets {
+            let resp = ticket.wait().unwrap();
+            assert_eq!(resp.inner.model_id, 1);
+        }
+        let report = fleet.drain().unwrap();
+        assert_eq!(report.completed, 4);
+    }
+
+    #[test]
+    fn capacity_rejection_is_retryable_serve_error() {
+        let (params, frames) = synth(1, 13);
+        let mut config = test_config(1);
+        config.system.fleet.capacity = [1, 1, 1];
+        // A slow batcher keeps the first frame in flight while we probe.
+        config.system.serve.max_batch = 8;
+        config.system.serve.batch_deadline_us = 50_000;
+        let fleet = Fleet::start(params, config).unwrap();
+        let session = fleet.session(3);
+        let first = session.submit(frames[0].clone()).unwrap();
+        let second = session.submit(frames[0].clone());
+        assert!(matches!(second, Err(Error::Serve(_))), "{second:?}");
+        first.wait().unwrap();
+        let report = fleet.drain().unwrap();
+        assert_eq!(report.completed, 1);
+        assert_eq!(report.rejected, 1);
+    }
+
+    #[test]
+    fn node_feed_paths_are_distinct() {
+        assert_eq!(node_feed_path("feed.jsonl", 0), "feed-node0.jsonl");
+        assert_eq!(node_feed_path("feed.jsonl", 2), "feed-node2.jsonl");
+        assert_eq!(node_feed_path("feed", 1), "feed-node1");
+    }
+}

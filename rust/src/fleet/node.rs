@@ -1,0 +1,159 @@
+//! `fleet::node` — the per-node service loop.
+//!
+//! Each fleet node owns a full [`serve::Server`] (admission queues,
+//! batchers, bank-sliced shard pool, metrics, trace feed) and speaks to
+//! the router exclusively through its [`NodeLink`].  The loop is
+//! single-threaded and never blocks indefinitely: it alternates between
+//! polling completion tickets (forwarding each as a
+//! [`WireResponse::Completed`]) and polling the request link, sleeping
+//! briefly when both are idle.
+//!
+//! Shutdown paths:
+//! * **Drain** (graceful): stop consuming requests, resolve every
+//!   pending ticket, then `Server::drain` and report
+//!   [`WireResponse::Drained`].
+//! * **Kill** (drill / crash): the kill flag drops the server on the
+//!   spot — no drain, pending tickets abandoned — and closes the
+//!   response link.  The router sees link-down and re-homes whatever
+//!   this node still owed (see [`crate::fleet`]).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::Error;
+use crate::serve::{Request, Server, Ticket};
+
+use super::transport::{NodeId, NodeLink, TryRecv, WireRequest, WireResponse};
+
+/// How long the loop sleeps when no ticket resolved and no request
+/// arrived.  Low enough to keep node-local latency well under a batch
+/// deadline, high enough not to spin.
+const IDLE_POLL: Duration = Duration::from_micros(100);
+
+/// Run one node until drain, kill, or router disconnect.  `kill` is the
+/// drill switch: once set, the server is dropped without drain.
+pub(crate) fn run(id: NodeId, server: Server, link: NodeLink, kill: Arc<AtomicBool>) {
+    let mut server = Some(server);
+    let mut pending: Vec<(u64, Ticket)> = Vec::new();
+    let mut draining: Option<u64> = None;
+
+    loop {
+        if kill.load(Ordering::Acquire) {
+            // Simulated crash: abandon in-flight work, sever the link.
+            drop(server.take());
+            link.tx.close();
+            return;
+        }
+
+        let mut progressed = poll_tickets(&mut pending, &link);
+
+        if let Some(drain_req) = draining {
+            if pending.is_empty() {
+                finish_drain(id, drain_req, server.take(), &link);
+                return;
+            }
+            if !progressed {
+                std::thread::sleep(IDLE_POLL);
+            }
+            continue;
+        }
+
+        match link.rx.try_recv() {
+            TryRecv::Msg(msg) => {
+                progressed = true;
+                match msg {
+                    WireRequest::Submit { req_id, sensor_id, class, model_id, frame } => {
+                        let request = Request::builder(frame)
+                            .sensor_id(sensor_id)
+                            .class(class)
+                            .model(model_id)
+                            .build();
+                        match server.as_ref().expect("server live").submit(request) {
+                            Ok(ticket) => pending.push((req_id, ticket)),
+                            Err(e) => {
+                                let _ = link.tx.send(WireResponse::Rejected {
+                                    req_id,
+                                    error: e.to_string(),
+                                });
+                            }
+                        }
+                    }
+                    WireRequest::PushModel { req_id, model_id, artifact } => {
+                        let resp = push_model(server.as_ref().expect("server live"),
+                                              model_id, &artifact, req_id);
+                        let _ = link.tx.send(resp);
+                    }
+                    WireRequest::Drain { req_id } => draining = Some(req_id),
+                }
+            }
+            TryRecv::Empty => {}
+            TryRecv::Closed => {
+                // Router went away without a drain: resolve what we owe,
+                // then fall down without a report.
+                if pending.is_empty() {
+                    drop(server.take());
+                    link.tx.close();
+                    return;
+                }
+            }
+        }
+
+        if !progressed {
+            std::thread::sleep(IDLE_POLL);
+        }
+    }
+}
+
+/// Forward every resolved ticket; returns whether anything resolved.
+fn poll_tickets(pending: &mut Vec<(u64, Ticket)>, link: &NodeLink) -> bool {
+    let before = pending.len();
+    pending.retain(|(req_id, ticket)| match ticket.try_take() {
+        None => true,
+        Some(result) => {
+            let resp = match result {
+                Ok(response) => WireResponse::Completed { req_id: *req_id, response },
+                Err(Error::Dropped(e)) => {
+                    WireResponse::Dropped { req_id: *req_id, error: e }
+                }
+                Err(e) => WireResponse::Failed { req_id: *req_id, error: e.to_string() },
+            };
+            let _ = link.tx.send(resp);
+            false
+        }
+    });
+    pending.len() != before
+}
+
+fn push_model(server: &Server, model_id: u32, artifact: &[u8], req_id: u64)
+              -> WireResponse {
+    match crate::compile::CompiledModel::from_bytes(artifact) {
+        Ok(model) => match server.push_model(model_id, &model) {
+            Ok(()) => WireResponse::ModelPushed {
+                req_id,
+                model_id,
+                version: model.version,
+            },
+            Err(e) => WireResponse::PushFailed { req_id, error: e.to_string() },
+        },
+        Err(e) => WireResponse::PushFailed { req_id, error: e.to_string() },
+    }
+}
+
+fn finish_drain(_id: NodeId, drain_req: u64, server: Option<Server>, link: &NodeLink) {
+    match server.expect("server live").drain() {
+        Ok(report) => {
+            let _ = link.tx.send(WireResponse::Drained {
+                req_id: drain_req,
+                report: Box::new(report),
+            });
+        }
+        Err(e) => {
+            let _ = link.tx.send(WireResponse::Failed {
+                req_id: drain_req,
+                error: e.to_string(),
+            });
+        }
+    }
+    link.tx.close();
+}

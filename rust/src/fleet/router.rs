@@ -1,0 +1,208 @@
+//! `fleet::router` — rendezvous-hash placement and the per-node,
+//! per-class admission ledger.
+//!
+//! Placement is rendezvous (highest-random-weight) hashing: for sensor
+//! `s`, every node `n` gets a score `fnv1a(s ‖ n)` and the sensor is
+//! owned by the highest-scoring *live* node.  The property that makes
+//! this the right tool for a fleet of near-sensor caches is minimal
+//! disruption: when a node leaves, only the sensors it owned move (each
+//! to its second-ranked node); every other sensor's owner is untouched —
+//! no ring to rebalance, no table to replicate.  When a node joins, the
+//! only sensors that move are the ones the new node now wins.
+//!
+//! Admission is capacity-bounded per `(node, QosClass)`: the
+//! [`RoutingTable`] tracks in-flight counts and [`RoutingTable::admit`]
+//! walks the sensor's rendezvous ranking, placing the frame on the first
+//! live node with headroom (a *spill* when that isn't the top choice).
+//! The ledger is deliberately pure — no channels, no clocks — so the
+//! proptests can drive millions of random admit/release mixes against
+//! the exact code the fleet runs.
+
+use crate::compile::fnv1a;
+use crate::engine::QosClass;
+
+use super::transport::NodeId;
+
+// ---------------------------------------------------------------------------
+// Rendezvous hashing (pure)
+// ---------------------------------------------------------------------------
+
+/// Rendezvous score of `node` for `sensor_id`.
+pub fn rendezvous_score(sensor_id: u32, node: NodeId) -> u64 {
+    let mut key = [0u8; 12];
+    key[..4].copy_from_slice(&sensor_id.to_le_bytes());
+    key[4..].copy_from_slice(&(node as u64).to_le_bytes());
+    fnv1a(&key)
+}
+
+/// All of `nodes` ranked for `sensor_id`, best first.  Ties (which FNV
+/// makes vanishingly rare) break toward the lower node id so the
+/// ranking is a total order.
+pub fn rendezvous_rank(sensor_id: u32, nodes: &[NodeId]) -> Vec<NodeId> {
+    let mut ranked: Vec<NodeId> = nodes.to_vec();
+    ranked.sort_by_key(|&n| (std::cmp::Reverse(rendezvous_score(sensor_id, n)), n));
+    ranked
+}
+
+/// The owner (top-ranked member of `nodes`) for `sensor_id`.
+pub fn rendezvous_owner(sensor_id: u32, nodes: &[NodeId]) -> Option<NodeId> {
+    nodes
+        .iter()
+        .copied()
+        .max_by_key(|&n| (rendezvous_score(sensor_id, n), std::cmp::Reverse(n)))
+}
+
+// ---------------------------------------------------------------------------
+// Admission ledger
+// ---------------------------------------------------------------------------
+
+/// Where one admission landed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub node: NodeId,
+    /// True when capacity pushed the frame past its rendezvous owner.
+    pub spilled: bool,
+}
+
+/// Live-set plus per-node, per-class in-flight accounting.  All methods
+/// are synchronous and allocation-light; the fleet wraps one of these in
+/// a mutex.
+#[derive(Clone, Debug)]
+pub struct RoutingTable {
+    live: Vec<bool>,
+    in_flight: Vec<[usize; QosClass::COUNT]>,
+    capacity: [usize; QosClass::COUNT],
+}
+
+impl RoutingTable {
+    /// `capacity` is the per-node in-flight bound for each class (index
+    /// by [`QosClass::index`]).
+    pub fn new(nodes: usize, capacity: [usize; QosClass::COUNT]) -> Self {
+        Self {
+            live: vec![true; nodes],
+            in_flight: vec![[0; QosClass::COUNT]; nodes],
+            capacity,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn capacity(&self, class: QosClass) -> usize {
+        self.capacity[class.index()]
+    }
+
+    pub fn is_live(&self, node: NodeId) -> bool {
+        self.live.get(node).copied().unwrap_or(false)
+    }
+
+    /// Nodes currently accepting traffic, ascending id.
+    pub fn live_nodes(&self) -> Vec<NodeId> {
+        (0..self.live.len()).filter(|&n| self.live[n]).collect()
+    }
+
+    /// Take `node` out of rotation (crash or administrative kill).  Its
+    /// in-flight counts are zeroed — the fleet re-homes those frames as
+    /// fresh admissions.
+    pub fn mark_dead(&mut self, node: NodeId) {
+        if node < self.live.len() {
+            self.live[node] = false;
+            self.in_flight[node] = [0; QosClass::COUNT];
+        }
+    }
+
+    pub fn in_flight(&self, node: NodeId, class: QosClass) -> usize {
+        self.in_flight[node][class.index()]
+    }
+
+    /// Admit one `class` frame from `sensor_id`: walk the sensor's
+    /// rendezvous ranking and place it on the first live node with
+    /// class headroom, charging that node's ledger.  `None` when every
+    /// live node is at capacity (or none is live) — the caller surfaces
+    /// that as a retryable rejection.
+    pub fn admit(&mut self, sensor_id: u32, class: QosClass) -> Option<Placement> {
+        let live = self.live_nodes();
+        let ranked = rendezvous_rank(sensor_id, &live);
+        for (rank, &node) in ranked.iter().enumerate() {
+            if self.in_flight[node][class.index()] < self.capacity[class.index()] {
+                self.in_flight[node][class.index()] += 1;
+                return Some(Placement { node, spilled: rank > 0 });
+            }
+        }
+        None
+    }
+
+    /// Release one in-flight slot after the frame resolved (completed,
+    /// rejected downstream, dropped, or failed).  No-op for a node
+    /// already marked dead — its ledger was zeroed at death.
+    pub fn release(&mut self, node: NodeId, class: QosClass) {
+        if self.is_live(node) {
+            let slot = &mut self.in_flight[node][class.index()];
+            *slot = slot.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_is_total_and_stable() {
+        let nodes: Vec<NodeId> = (0..5).collect();
+        for sensor in 0..64u32 {
+            let r1 = rendezvous_rank(sensor, &nodes);
+            let r2 = rendezvous_rank(sensor, &nodes);
+            assert_eq!(r1, r2);
+            let mut sorted = r1.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, nodes);
+            assert_eq!(rendezvous_owner(sensor, &nodes), Some(r1[0]));
+        }
+    }
+
+    #[test]
+    fn owner_spread_is_not_degenerate() {
+        // 3 nodes, 300 sensors: every node should own a healthy share.
+        let nodes: Vec<NodeId> = (0..3).collect();
+        let mut owned = [0usize; 3];
+        for sensor in 0..300u32 {
+            owned[rendezvous_owner(sensor, &nodes).unwrap()] += 1;
+        }
+        for (node, &n) in owned.iter().enumerate() {
+            assert!(n > 50, "node {node} owns only {n}/300 sensors: {owned:?}");
+        }
+    }
+
+    #[test]
+    fn admit_respects_capacity_and_spills() {
+        let mut table = RoutingTable::new(2, [1, 1, 1]);
+        let sensor = 7;
+        let owner = rendezvous_owner(sensor, &[0, 1]).unwrap();
+        let first = table.admit(sensor, QosClass::Billed).unwrap();
+        assert_eq!(first, Placement { node: owner, spilled: false });
+        let second = table.admit(sensor, QosClass::Billed).unwrap();
+        assert_eq!(second.node, 1 - owner);
+        assert!(second.spilled);
+        // Both nodes full for billed; a third admission is refused but
+        // other classes still fit.
+        assert!(table.admit(sensor, QosClass::Billed).is_none());
+        assert!(table.admit(sensor, QosClass::Standard).is_some());
+        table.release(first.node, QosClass::Billed);
+        assert!(table.admit(sensor, QosClass::Billed).is_some());
+    }
+
+    #[test]
+    fn dead_node_leaves_rotation() {
+        let mut table = RoutingTable::new(3, [4, 4, 4]);
+        table.mark_dead(1);
+        for sensor in 0..32u32 {
+            let p = table.admit(sensor, QosClass::Standard).unwrap();
+            assert_ne!(p.node, 1);
+        }
+        // Releasing against a dead node is a no-op, not an underflow.
+        table.release(1, QosClass::Standard);
+        assert_eq!(table.in_flight(1, QosClass::Standard), 0);
+    }
+}

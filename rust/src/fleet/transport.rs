@@ -1,0 +1,208 @@
+//! `fleet::transport` — the socket-shaped message link between the
+//! fleet router and its serve nodes.
+//!
+//! Every router↔node interaction goes through [`WireRequest`] /
+//! [`WireResponse`] messages correlated by `req_id`: plain-data payloads
+//! with no shared state, so a real wire (TCP, RDMA, whatever the
+//! deployment uses) can slot in behind [`Transport`] by serializing the
+//! same messages.  The in-tree implementation, [`ChannelTransport`],
+//! rides the serving layer's [`BoundedQueue`] — same close/drain
+//! semantics a socket gives you: a closed link still yields messages
+//! already in flight, then reports down.
+//!
+//! Link-down is a first-class signal, not an error path: the router's
+//! per-node collector treats `recv() == None` as the node being gone and
+//! re-homes that node's in-flight frames (see [`crate::fleet`]).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::QosClass;
+use crate::sensor::Frame;
+use crate::serve::queue::{BoundedQueue, PopResult};
+use crate::serve::{InferResponse, MetricsReport};
+
+/// Fleet-wide node identifier (dense, assigned at [`crate::fleet::Fleet`]
+/// start).
+pub type NodeId = usize;
+
+// ---------------------------------------------------------------------------
+// Wire messages
+// ---------------------------------------------------------------------------
+
+/// Router → node messages.  `req_id` correlates the eventual
+/// [`WireResponse`]; ids are unique across the fleet's lifetime, so a
+/// re-homed frame is a *new* request, never a replay of an old id.
+#[derive(Clone, Debug)]
+pub enum WireRequest {
+    /// Serve one frame.  `frame.seq` is stamped by the router (the fleet
+    /// owns the per-sensor sequence space — a re-homed frame keeps its
+    /// seq, so fleet output is comparable to a single-node run).
+    Submit {
+        req_id: u64,
+        sensor_id: u32,
+        class: QosClass,
+        model_id: u32,
+        frame: Frame,
+    },
+    /// Install (or roll) a compiled model from its serialized `.nslbpc`
+    /// artifact bytes.  The bytes are broadcast once: the router
+    /// serializes a model a single time and every node's message shares
+    /// the same buffer (a real wire would put the same bytes on N
+    /// sockets).
+    PushModel {
+        req_id: u64,
+        model_id: u32,
+        artifact: Arc<Vec<u8>>,
+    },
+    /// Graceful shutdown: finish in-flight frames, then report.
+    Drain { req_id: u64 },
+}
+
+/// Node → router messages.
+#[derive(Clone, Debug)]
+pub enum WireResponse {
+    /// A submitted frame completed inference.
+    Completed { req_id: u64, response: InferResponse },
+    /// Admission rejected the frame (node queue at depth); retryable.
+    Rejected { req_id: u64, error: String },
+    /// The frame was shed (drop-oldest admission or deadline); terminal.
+    Dropped { req_id: u64, error: String },
+    /// The frame failed inside the node's pipeline; terminal.
+    Failed { req_id: u64, error: String },
+    /// `PushModel` landed; `version` is the artifact content-hash the
+    /// node now serves for `model_id`.
+    ModelPushed { req_id: u64, model_id: u32, version: u64 },
+    /// `PushModel` could not be applied.
+    PushFailed { req_id: u64, error: String },
+    /// `Drain` finished; the node's frozen serving metrics.
+    Drained { req_id: u64, report: Box<MetricsReport> },
+}
+
+impl WireResponse {
+    /// The correlation id this response answers.
+    pub fn req_id(&self) -> u64 {
+        match self {
+            WireResponse::Completed { req_id, .. }
+            | WireResponse::Rejected { req_id, .. }
+            | WireResponse::Dropped { req_id, .. }
+            | WireResponse::Failed { req_id, .. }
+            | WireResponse::ModelPushed { req_id, .. }
+            | WireResponse::PushFailed { req_id, .. }
+            | WireResponse::Drained { req_id, .. } => *req_id,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Link halves
+// ---------------------------------------------------------------------------
+
+/// Sender half of one direction of a link.
+pub trait WireTx<T>: Send + Sync {
+    /// Queue `msg` for delivery; `Err(msg)` means the link is down.
+    fn send(&self, msg: T) -> std::result::Result<(), T>;
+    /// Close the link.  Messages already queued still deliver (drain
+    /// semantics); subsequent sends fail.
+    fn close(&self);
+}
+
+/// Receiver half of one direction of a link.
+pub trait WireRx<T>: Send {
+    /// Block until the next message; `None` means the link closed and
+    /// every queued message was already delivered.
+    fn recv(&self) -> Option<T>;
+    /// Non-blocking poll.
+    fn try_recv(&self) -> TryRecv<T>;
+}
+
+/// Outcome of a [`WireRx::try_recv`].
+#[derive(Debug)]
+pub enum TryRecv<T> {
+    Msg(T),
+    /// Nothing queued; link still up.
+    Empty,
+    /// Link closed and drained.
+    Closed,
+}
+
+/// The router's end of one node link.
+pub struct RouterLink {
+    pub tx: Arc<dyn WireTx<WireRequest>>,
+    pub rx: Box<dyn WireRx<WireResponse>>,
+}
+
+/// The node's end of its link (consumed by the node service loop).
+pub struct NodeLink {
+    pub rx: Box<dyn WireRx<WireRequest>>,
+    pub tx: Box<dyn WireTx<WireResponse>>,
+}
+
+/// Connection factory: one bidirectional link per node.  Implementations
+/// decide what a "link" is — in-memory queues today, sockets later; the
+/// router and node loops only ever see the [`RouterLink`] / [`NodeLink`]
+/// halves.
+pub trait Transport: Send {
+    fn connect(&mut self, node: NodeId) -> (RouterLink, NodeLink);
+}
+
+// ---------------------------------------------------------------------------
+// In-memory channel transport
+// ---------------------------------------------------------------------------
+
+/// In-process [`Transport`]: a pair of [`BoundedQueue`]s per node.
+/// `depth` bounds each direction; the fleet sizes it past the router's
+/// total admission capacity so a healthy link never blocks the router.
+pub struct ChannelTransport {
+    depth: usize,
+}
+
+impl ChannelTransport {
+    pub fn new(depth: usize) -> Self {
+        Self { depth: depth.max(1) }
+    }
+}
+
+struct QueueTx<T>(Arc<BoundedQueue<T>>);
+struct QueueRx<T>(Arc<BoundedQueue<T>>);
+
+impl<T: Send> WireTx<T> for QueueTx<T> {
+    fn send(&self, msg: T) -> std::result::Result<(), T> {
+        self.0.push(msg)
+    }
+
+    fn close(&self) {
+        self.0.close();
+    }
+}
+
+impl<T: Send> WireRx<T> for QueueRx<T> {
+    fn recv(&self) -> Option<T> {
+        self.0.pop()
+    }
+
+    fn try_recv(&self) -> TryRecv<T> {
+        match self.0.pop_timeout(Duration::ZERO) {
+            PopResult::Item(msg) => TryRecv::Msg(msg),
+            PopResult::TimedOut => TryRecv::Empty,
+            PopResult::Closed => TryRecv::Closed,
+        }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn connect(&mut self, _node: NodeId) -> (RouterLink, NodeLink) {
+        let to_node = Arc::new(BoundedQueue::<WireRequest>::new(self.depth));
+        let to_router = Arc::new(BoundedQueue::<WireResponse>::new(self.depth));
+        (
+            RouterLink {
+                tx: Arc::new(QueueTx(Arc::clone(&to_node))),
+                rx: Box::new(QueueRx(Arc::clone(&to_router))),
+            },
+            NodeLink {
+                rx: Box::new(QueueRx(to_node)),
+                tx: Box::new(QueueTx(to_router)),
+            },
+        )
+    }
+}

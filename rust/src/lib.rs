@@ -78,6 +78,13 @@
 //!   engines pinned to disjoint bank slices, per-class p50/p95/p99 +
 //!   drop/reject metrics, and graceful drain (`ns-lbp serve-bench`
 //!   drives it end to end).
+//! * [`fleet`] — multi-node serving: N in-process serve nodes behind a
+//!   socket-shaped `Transport`, a router that places sensor sessions by
+//!   rendezvous hash with per-node per-class admission capacity,
+//!   versioned weight replication (`Fleet::push_model` rolls a compiled
+//!   artifact node-by-node without dropping in-flight frames), and
+//!   failure drills — kill a node mid-stream and the router re-homes
+//!   its frames with zero billed loss (`ns-lbp fleet-bench`).
 //! * [`obs`] — end-to-end tracing: per-request spans (submit → queue →
 //!   batch → infer → complete) with `hw` energy attribution, written
 //!   lock-cheaply into a bounded ring and exported off-thread as a
@@ -99,6 +106,7 @@ pub mod dpu;
 pub mod energy;
 pub mod engine;
 pub mod error;
+pub mod fleet;
 pub mod hw;
 pub mod isa;
 pub mod lbp;

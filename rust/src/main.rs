@@ -21,6 +21,20 @@
 //!                 `--trace out.jsonl` records the full request lifecycle
 //!                 as a JSONL span feed plus a Chrome/Perfetto
 //!                 `out.trace.json`.
+//! * `fleet-bench` — replay the same traffic through an N-node fleet
+//!                 (rendezvous-hash routing, per-node serve planes) and
+//!                 print the fleet rollup with a per-node breakdown;
+//!                 `--drill` kills `[fleet.drill] kill_node` mid-stream
+//!                 and reports re-homing + p99 inflation against the
+//!                 undisturbed baseline pass, `--push-rollover` rolls a
+//!                 synthetic compiled artifact through the live nodes as
+//!                 model 1 (acks must converge on one content-hash
+//!                 version), `--nodes/--kill-node/--kill-after` override
+//!                 the `[fleet]` config, and `--json` emits one
+//!                 machine-readable document (`BENCH_fleet.json` in CI);
+//!                 with `--trace out.jsonl` each node writes its own
+//!                 `out-node<i>.jsonl` feed (the drill pass overwrites
+//!                 the baseline's, as with `serve-bench --compare`).
 //! * `compile`   — lower a model-spec TOML (`configs/models/*.toml`)
 //!                 through the staged analyze→map→pack→price pipeline to
 //!                 a versioned `.nslbpc` artifact (stage outputs cached
@@ -28,9 +42,14 @@
 //!                 reloads the artifact and proves engines built from it
 //!                 are bit-identical to from-params engines; serve it
 //!                 with `serve-bench --model-artifact FILE`.
-//! * `trace`     — summarize a JSONL trace feed (`ns-lbp trace out.jsonl`):
-//!                 per-stage p50/p95/p99 latency, energy by stage, drop
-//!                 causes; `--json` emits the summary machine-readably.
+//! * `trace`     — summarize one or more JSONL trace feeds
+//!                 (`ns-lbp trace out.jsonl`, or several: `ns-lbp trace
+//!                 out-node0.jsonl out-node1.jsonl …` merges them into
+//!                 one timeline): per-stage p50/p95/p99 latency, energy
+//!                 by stage, drop causes; `--json` emits the summary
+//!                 machine-readably and `--chrome OUT.trace.json` also
+//!                 writes a merged Chrome/Perfetto trace with one
+//!                 process per feed.
 //! * `ab`        — the A/B energy harness: run the same frames through
 //!                 two engines under two hardware profiles
 //!                 (`--profile A --profile B`) and print/`--json`-emit a
@@ -79,9 +98,13 @@ fn command() -> Command {
     Command::new("ns-lbp", "near-sensor LBP accelerator simulator")
         .subcommand("run", "stream frames through the pipeline")
         .subcommand("serve-bench", "drive the sharded, batching serve layer")
+        .subcommand("fleet-bench", "drive an N-node fleet; --drill kills a \
+                                    node mid-stream, --push-rollover rolls \
+                                    a model through the survivors")
         .subcommand("compile", "compile a model spec to a versioned artifact")
         .subcommand("ab", "A/B energy harness: two hw profiles, same frames")
-        .subcommand("trace", "summarize a JSONL trace feed")
+        .subcommand("trace", "summarize JSONL trace feeds (several merge \
+                              into one timeline)")
         .subcommand("profile", "print a hardware profile as TOML (no name: \
                                 list built-ins)")
         .subcommand("transient", "Fig. 9 RBL discharge waveforms")
@@ -112,7 +135,17 @@ fn command() -> Command {
              "serve-bench: best_effort:standard:billed traffic weights (default 0:1:0)")
         .opt("trace", "FILE",
              "serve-bench: write a JSONL trace feed (and FILE's .trace.json \
-              Chrome/Perfetto twin)")
+              Chrome/Perfetto twin); fleet-bench: per-node FILE-node<i>.jsonl \
+              feeds")
+        .opt("nodes", "N", "fleet-bench: fleet size (default fleet.nodes)")
+        .opt("kill-node", "N",
+             "fleet-bench --drill: node to kill (default fleet.drill.kill_node)")
+        .opt("kill-after", "N",
+             "fleet-bench --drill: kill after N submitted frames \
+              (0 = halfway; default fleet.drill.kill_after)")
+        .opt("chrome", "FILE",
+             "trace: also write a merged Chrome trace of all feeds \
+              (one process per feed)")
         .opt_repeated("model-artifact", "FILE",
                       "serve-bench: also serve this compiled artifact \
                        (model ids 1, 2, ... in option order)")
@@ -125,6 +158,10 @@ fn command() -> Command {
                it match from-params engines bit for bit")
         .flag("json", "serve-bench: emit one machine-readable JSON report")
         .flag("compare", "serve-bench: also run 1 shard, print speedup")
+        .flag("drill", "fleet-bench: kill fleet.drill.kill_node mid-stream \
+                        and gate re-homing against the baseline pass")
+        .flag("push-rollover", "fleet-bench: roll a synthetic compiled \
+                                artifact through the live nodes as model 1")
         .flag("arch-mlp", "simulate the MLP in-memory too")
         .flag("early-exit", "enable Algorithm-1 early exit")
         .flag("golden", "cross-check logits against the PJRT artifact")
@@ -141,6 +178,7 @@ fn real_main(args: &[String]) -> Result<()> {
     match parsed.subcommand.as_deref() {
         Some("run") => run_pipeline(&parsed, system),
         Some("serve-bench") => serve_bench(&parsed, system),
+        Some("fleet-bench") => fleet_bench(&parsed, system),
         Some("compile") => compile_model(&parsed, system),
         Some("ab") => ab_compare(&parsed, system),
         Some("trace") => trace_summary(&parsed),
@@ -583,24 +621,344 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
     Ok(())
 }
 
-/// `ns-lbp trace FEED.jsonl [--json]`: summarize a trace feed captured
-/// with `serve-bench --trace` — per-stage latency percentiles, energy by
+/// One pass of fleet traffic: start an N-node fleet, replay `frames`
+/// across `sensors` at `load`, optionally killing a node and/or rolling
+/// a model mid-stream, and return the fleet rollup plus the per-class
+/// offered counts the gates compare completions against.
+struct FleetRun {
+    report: ns_lbp::fleet::FleetReport,
+    offered: [u64; QosClass::COUNT],
+    push_acks: Option<Vec<(ns_lbp::fleet::NodeId, u64)>>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fleet_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
+                frames: &[Frame], load: f64, mix: &[QosClass],
+                sensors: &[u32], kill: Option<(ns_lbp::fleet::NodeId, usize)>,
+                rollover: Option<&CompiledModel>) -> Result<FleetRun> {
+    let fleet = ns_lbp::fleet::Fleet::start(
+        params.clone(),
+        CoordinatorConfig { system: system.clone(), arch, shard: None },
+    )?;
+    // The rollover (if any) happens at the same point as the kill so
+    // the drill exercises push-during-re-homing; without a kill it
+    // lands halfway.
+    let event_at = kill.map_or(frames.len() / 2, |(_, at)| at);
+    let mut push_acks = None;
+    let t0 = std::time::Instant::now();
+    // The caller-side seq ledger only advances on accepted admissions,
+    // so retried rejections never punch holes in a sensor's seq space
+    // (the single-node comparison keys logits by (sensor, seq)).
+    let mut seqs: std::collections::HashMap<u32, u64> =
+        std::collections::HashMap::new();
+    let mut tickets = Vec::with_capacity(frames.len());
+    let mut offered = [0u64; QosClass::COUNT];
+    for (i, frame) in frames.iter().enumerate() {
+        if i == event_at {
+            if let Some((node, _)) = kill {
+                fleet.kill_node(node)?;
+            }
+            if let Some(model) = rollover {
+                push_acks = Some(fleet.push_model(1, model)?);
+            }
+        }
+        if load > 0.0 {
+            let due = t0 + std::time::Duration::from_secs_f64(i as f64 / load);
+            let now = std::time::Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let sensor = sensors[i % sensors.len()];
+        let class = mix[i % mix.len()];
+        offered[class.index()] += 1;
+        let seq = *seqs.get(&sensor).unwrap_or(&0);
+        loop {
+            match fleet.submit_stamped(sensor, class, 0,
+                                       frame.clone().with_seq(seq)) {
+                Ok(t) => {
+                    seqs.insert(sensor, seq + 1);
+                    tickets.push(t);
+                    break;
+                }
+                // every live node at class capacity: back off and retry
+                Err(ns_lbp::Error::Serve(_)) => {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    let mut mismatches = 0u64;
+    let mut cross_mismatches = 0u64;
+    for t in tickets {
+        match t.wait() {
+            Ok(r) => {
+                mismatches += r.inner.report.telemetry.arch_mismatches;
+                cross_mismatches +=
+                    r.inner.report.telemetry.cross_check_mismatches;
+            }
+            // shed downstream (drop-oldest / lapsed deadline) or lost to
+            // a dying fleet: the rollup's drop/lost counters account for
+            // these, and the billed-loss gate lives on the report
+            Err(ns_lbp::Error::Dropped(_)) | Err(ns_lbp::Error::Serve(_)) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let report = fleet.drain()?;
+    if mismatches != 0 {
+        return Err(ns_lbp::Error::Coordinator(format!(
+            "{mismatches} architectural/functional divergences under fleet"
+        )));
+    }
+    if cross_mismatches != 0 {
+        return Err(ns_lbp::Error::Engine(format!(
+            "{cross_mismatches} cross-check divergences under fleet"
+        )));
+    }
+    Ok(FleetRun { report, offered, push_acks })
+}
+
+fn offered_json(offered: &[u64; QosClass::COUNT]) -> String {
+    let mut s = String::from("{");
+    for class in QosClass::ALL {
+        s.push_str(&format!("\"{}\":{},", class, offered[class.index()]));
+    }
+    s.pop();
+    s.push('}');
+    s
+}
+
+fn fleet_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()> {
+    let frames_n: usize = parsed.opt_parse("frames", 256)?;
+    let seed: u64 = parsed.opt_parse("seed", 7)?;
+    let load: f64 = parsed.opt_parse("load", 0.0)?;
+    let json = parsed.flag("json");
+    let mix_spec = parsed.opt("mix").unwrap_or("0:1:0");
+    let mix = parse_mix(mix_spec)?;
+
+    let mut system = system;
+    if let Some(path) = parsed.opt("trace") {
+        // the fleet rewrites the path per node: FILE-node<i>.jsonl
+        system.obs.enabled = true;
+        system.obs.jsonl_path = path.to_string();
+    }
+    system.serve.shards = parsed.opt_parse("shards", system.serve.shards)?;
+    system.serve.max_batch =
+        parsed.opt_parse("batch-size", system.serve.max_batch)?;
+    system.serve.batch_deadline_us =
+        parsed.opt_parse("deadline-us", system.serve.batch_deadline_us)?;
+    system.serve.queue_depth =
+        parsed.opt_parse("queue-depth", system.serve.queue_depth)?;
+    system.serve.validate()?;
+    system.fleet.nodes = parsed.opt_parse("nodes", system.fleet.nodes)?;
+    system.fleet.drill.kill_node =
+        parsed.opt_parse("kill-node", system.fleet.drill.kill_node)?;
+    system.fleet.drill.kill_after =
+        parsed.opt_parse("kill-after", system.fleet.drill.kill_after)?;
+    system.fleet.validate()?;
+
+    let (dataset, artifacts) = resolve_artifacts(parsed, &mut system);
+    let params = match params::load(format!("{artifacts}/{dataset}.params.bin")) {
+        Ok(p) => {
+            if !json {
+                println!("network: {dataset} artifact");
+            }
+            p
+        }
+        Err(_) => {
+            if !json {
+                println!(
+                    "network: synthetic (artifact \
+                     {artifacts}/{dataset}.params.bin absent — run \
+                     `make artifacts` for the real one)"
+                );
+            }
+            params::synth::synth_params(seed).1
+        }
+    };
+    let arch = ArchSim {
+        lbp: !parsed.flag("functional"),
+        mlp: parsed.flag("arch-mlp"),
+        early_exit: parsed.flag("early-exit"),
+    };
+    let frames = synth_frames(&params, frames_n, seed)?;
+    // Two sensor streams per node: enough spread that a killed node
+    // owns sensors to re-home, few enough that streams stay deep.
+    let sensors: Vec<u32> = (0..(system.fleet.nodes as u32 * 2)).collect();
+
+    let drill = parsed.flag("drill");
+    let rollover = if parsed.flag("push-rollover") {
+        let spec = ModelSpec::parse(
+            "[model]\nname = \"rollover\"\nseed = 23\n",
+            std::path::Path::new("."),
+        )?;
+        Some(ns_lbp::compile::build_model(&spec, &system)?)
+    } else {
+        None
+    };
+    let kill_node = system.fleet.drill.kill_node;
+    let kill_after = if system.fleet.drill.kill_after == 0 {
+        frames.len() / 2
+    } else {
+        // clamp inside the stream so the kill actually fires
+        system.fleet.drill.kill_after.min(frames.len().saturating_sub(1))
+    };
+
+    if !json {
+        let mix_banner: Vec<String> =
+            mix.iter().map(|c| c.as_str().to_string()).collect();
+        println!(
+            "fleet: {} nodes | {} frames at {} | backend {} | mix [{}] | \
+             {} sensors | capacity {:?}/node",
+            system.fleet.nodes,
+            frames.len(),
+            if load > 0.0 { format!("{load:.0} fps") }
+            else { "full rate".into() },
+            engine_banner(&system),
+            mix_banner.join(","),
+            sensors.len(),
+            system.fleet.capacity,
+        );
+    }
+
+    let baseline = fleet_replay(&params, &system, arch, &frames, load, &mix,
+                                &sensors, None, None)?;
+    if !json {
+        baseline.report.print("baseline");
+    }
+    let drill_run = if drill || rollover.is_some() {
+        let run = fleet_replay(&params, &system, arch, &frames, load, &mix,
+                               &sensors,
+                               drill.then_some((kill_node, kill_after)),
+                               rollover.as_ref())?;
+        if !json {
+            run.report.print(if drill { "drill" } else { "rollover" });
+            if drill {
+                let inflation =
+                    run.report.p99_ms / baseline.report.p99_ms.max(1e-9);
+                println!(
+                    "  drill gate: billed lost {} | rerouted {} | p99 \
+                     {:.3} ms vs baseline {:.3} ms ({:.2}x, budget {:.1}x)",
+                    run.report.billed_lost(), run.report.rerouted,
+                    run.report.p99_ms, baseline.report.p99_ms, inflation,
+                    system.fleet.drill.p99_budget
+                );
+            }
+            if let Some(acks) = &run.push_acks {
+                println!(
+                    "  rollover: model 1 acked by {} node(s), all at \
+                     v{:016x}",
+                    acks.len(),
+                    acks.first().map(|&(_, v)| v).unwrap_or(0)
+                );
+            }
+        }
+        Some(run)
+    } else {
+        None
+    };
+
+    if json {
+        // exactly one JSON document on stdout, so
+        // `ns-lbp fleet-bench --json > BENCH_fleet.json` is parseable
+        // (validated by scripts/fleet_check.py)
+        let mut s = format!(
+            "{{\"nodes\":{},\"frames\":{},\"mix\":\"{}\",\"load_fps\":{},\
+             \"backend\":\"{}\",",
+            system.fleet.nodes, frames.len(), mix_spec, load,
+            system.engine.backend
+        );
+        s.push_str(&format!(
+            "\"baseline\":{{\"offered_by_class\":{},\"report\":{}}},",
+            offered_json(&baseline.offered),
+            baseline.report.to_json()
+        ));
+        match &drill_run {
+            Some(run) => {
+                s.push_str("\"drill\":{");
+                if drill {
+                    s.push_str(&format!(
+                        "\"killed_node\":{kill_node},\
+                         \"kill_after\":{kill_after},"
+                    ));
+                }
+                s.push_str(&format!(
+                    "\"p99_budget\":{},\"baseline_p99_ms\":{},\
+                     \"drill_p99_ms\":{},\"p99_inflation\":{},",
+                    system.fleet.drill.p99_budget,
+                    baseline.report.p99_ms,
+                    run.report.p99_ms,
+                    run.report.p99_ms / baseline.report.p99_ms.max(1e-9)
+                ));
+                match &run.push_acks {
+                    Some(acks) => {
+                        s.push_str("\"push\":{\"model_id\":1,\"acks\":[");
+                        for (i, &(node, version)) in acks.iter().enumerate() {
+                            if i > 0 {
+                                s.push(',');
+                            }
+                            s.push_str(&format!(
+                                "{{\"node\":{node},\
+                                 \"version\":\"{version:016x}\"}}"
+                            ));
+                        }
+                        s.push_str("]},");
+                    }
+                    None => s.push_str("\"push\":null,"),
+                }
+                s.push_str(&format!(
+                    "\"offered_by_class\":{},\"report\":{}}}",
+                    offered_json(&run.offered),
+                    run.report.to_json()
+                ));
+            }
+            None => s.push_str("\"drill\":null"),
+        }
+        s.push('}');
+        println!("{s}");
+    }
+    Ok(())
+}
+
+/// `ns-lbp trace FEED.jsonl [FEED2.jsonl …] [--json] [--chrome OUT]`:
+/// summarize one or more trace feeds captured with `serve-bench --trace`
+/// or `fleet-bench --trace` — per-stage latency percentiles, energy by
 /// stage, per-class outcomes, and drop causes, from the spans alone.
+/// Several feeds (e.g. a fleet's per-node files) merge into one summary;
+/// `--chrome` additionally writes a merged Chrome trace with one process
+/// per feed.
 fn trace_summary(parsed: &ns_lbp::cli::Parsed) -> Result<()> {
-    let path = parsed.positionals.first().ok_or_else(|| {
-        ns_lbp::Error::Usage(
-            "trace expects the feed path: ns-lbp trace TRACE.jsonl [--json]"
+    if parsed.positionals.is_empty() {
+        return Err(ns_lbp::Error::Usage(
+            "trace expects one or more feed paths: ns-lbp trace \
+             TRACE.jsonl [MORE.jsonl ...] [--json] [--chrome OUT]"
                 .into(),
-        )
-    })?;
-    let feed = std::fs::read_to_string(path).map_err(|e| {
-        ns_lbp::Error::Config(format!("cannot read {path}: {e}"))
-    })?;
-    let summary = ns_lbp::obs::summarize(&feed)?;
+        ));
+    }
+    let mut contents: Vec<(&str, String)> = Vec::new();
+    for path in &parsed.positionals {
+        let feed = std::fs::read_to_string(path).map_err(|e| {
+            ns_lbp::Error::Config(format!("cannot read {path}: {e}"))
+        })?;
+        contents.push((path.as_str(), feed));
+    }
+    let named: Vec<(&str, &str)> =
+        contents.iter().map(|(p, f)| (*p, f.as_str())).collect();
+    let summary = ns_lbp::obs::summarize_feeds(&named)?;
     if parsed.flag("json") {
         println!("{}", summary.to_json());
     } else {
         print!("{}", summary.render());
+    }
+    if let Some(out) = parsed.opt("chrome") {
+        let n = ns_lbp::obs::merge_chrome_trace(&named, out)?;
+        if !parsed.flag("json") {
+            println!(
+                "\nchrome: {n} events from {} feed(s) → {out}",
+                named.len()
+            );
+        }
     }
     Ok(())
 }

@@ -804,6 +804,15 @@ impl TraceSummary {
 /// energy by stage, drop causes).  Unparseable lines are an error —
 /// the feed is machine-written, so corruption should be loud.
 pub fn summarize(feed: &str) -> Result<TraceSummary> {
+    summarize_feeds(&[("feed", feed)])
+}
+
+/// Merge several JSONL trace feeds (e.g. one per fleet node) into a
+/// single summary.  Percentiles and per-class counters pool every
+/// feed's events; `events_dropped` is *summed* across feeds — each
+/// feed's final gauge describes its own ring, so the merged figure is
+/// the total the fleet discarded, not whichever feed was parsed last.
+pub fn summarize_feeds(feeds: &[(&str, &str)]) -> Result<TraceSummary> {
     use crate::serve::percentile_ns;
 
     let mut sm = TraceSummary::default();
@@ -813,76 +822,91 @@ pub fn summarize(feed: &str) -> Result<TraceSummary> {
     let mut e2e_class: [Vec<u64>; QosClass::COUNT] = Default::default();
     let mut causes: std::collections::HashMap<String, u64> =
         std::collections::HashMap::new();
-    for (lineno, line) in feed.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
+    for &(feed_name, feed) in feeds {
+        // Per-feed: the ring's `events_dropped` gauge is cumulative
+        // within one feed, so only its final value counts.
+        let mut feed_dropped = 0u64;
+        for (lineno, line) in feed.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let at = |what: &str| {
+                if feeds.len() == 1 {
+                    Error::Config(format!(
+                        "trace feed line {}: {what}", lineno + 1))
+                } else {
+                    Error::Config(format!(
+                        "trace feed {feed_name} line {}: {what}", lineno + 1))
+                }
+            };
+            let fields = json::parse_flat_object(line)
+                .map_err(|e| at(&e.to_string()))?;
+            let get = |k: &str| {
+                fields.iter().find(|(key, _)| key == k).map(|(_, v)| v)
+            };
+            let kind = get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| at("no kind"))?;
+            let class = get("class")
+                .and_then(|v| v.as_str())
+                .and_then(|s| s.parse::<QosClass>().ok());
+            let dur = get("dur_ns").and_then(|v| v.as_u64()).unwrap_or(0);
+            let label = get("label").and_then(|v| v.as_str()).unwrap_or("");
+            sm.lines += 1;
+            match kind {
+                "queue" => queue.push(dur),
+                "infer" => {
+                    infer.push(dur);
+                    let f = |k: &str| {
+                        get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+                    };
+                    sm.energy_pj.0 += f("sensor_pj");
+                    sm.energy_pj.1 += f("compute_pj");
+                    sm.energy_pj.2 += f("dpu_pj");
+                    sm.energy_pj.3 += f("tx_pj");
+                    sm.modeled_ns += get("modeled_ns")
+                        .and_then(|v| v.as_u64())
+                        .unwrap_or(0);
+                }
+                "complete" => {
+                    e2e.push(dur);
+                    if let Some(c) = class {
+                        sm.completed[c.index()] += 1;
+                        e2e_class[c.index()].push(dur);
+                    }
+                }
+                "reject" => {
+                    if let Some(c) = class {
+                        sm.rejected[c.index()] += 1;
+                    }
+                    *causes.entry(format!("reject:{label}")).or_insert(0) += 1;
+                }
+                "drop" => {
+                    if let Some(c) = class {
+                        sm.dropped[c.index()] += 1;
+                    }
+                    *causes.entry(format!("drop:{label}")).or_insert(0) += 1;
+                }
+                "expire" => {
+                    if let Some(c) = class {
+                        sm.expired[c.index()] += 1;
+                    }
+                    *causes.entry(format!("expire:{label}")).or_insert(0) += 1;
+                }
+                "fail" => {
+                    if let Some(c) = class {
+                        sm.failed[c.index()] += 1;
+                    }
+                    *causes.entry(format!("fail:{label}")).or_insert(0) += 1;
+                }
+                "gauge" if label == "events_dropped" => {
+                    feed_dropped =
+                        get("value").and_then(|v| v.as_u64()).unwrap_or(0);
+                }
+                _ => {}
+            }
         }
-        let fields = json::parse_flat_object(line).map_err(|e| {
-            Error::Config(format!("trace feed line {}: {e}", lineno + 1))
-        })?;
-        let get = |k: &str| {
-            fields.iter().find(|(key, _)| key == k).map(|(_, v)| v)
-        };
-        let kind = get("kind").and_then(|v| v.as_str()).ok_or_else(|| {
-            Error::Config(format!("trace feed line {}: no kind", lineno + 1))
-        })?;
-        let class = get("class")
-            .and_then(|v| v.as_str())
-            .and_then(|s| s.parse::<QosClass>().ok());
-        let dur = get("dur_ns").and_then(|v| v.as_u64()).unwrap_or(0);
-        let label = get("label").and_then(|v| v.as_str()).unwrap_or("");
-        sm.lines += 1;
-        match kind {
-            "queue" => queue.push(dur),
-            "infer" => {
-                infer.push(dur);
-                let f = |k: &str| {
-                    get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
-                };
-                sm.energy_pj.0 += f("sensor_pj");
-                sm.energy_pj.1 += f("compute_pj");
-                sm.energy_pj.2 += f("dpu_pj");
-                sm.energy_pj.3 += f("tx_pj");
-                sm.modeled_ns +=
-                    get("modeled_ns").and_then(|v| v.as_u64()).unwrap_or(0);
-            }
-            "complete" => {
-                e2e.push(dur);
-                if let Some(c) = class {
-                    sm.completed[c.index()] += 1;
-                    e2e_class[c.index()].push(dur);
-                }
-            }
-            "reject" => {
-                if let Some(c) = class {
-                    sm.rejected[c.index()] += 1;
-                }
-                *causes.entry(format!("reject:{label}")).or_insert(0) += 1;
-            }
-            "drop" => {
-                if let Some(c) = class {
-                    sm.dropped[c.index()] += 1;
-                }
-                *causes.entry(format!("drop:{label}")).or_insert(0) += 1;
-            }
-            "expire" => {
-                if let Some(c) = class {
-                    sm.expired[c.index()] += 1;
-                }
-                *causes.entry(format!("expire:{label}")).or_insert(0) += 1;
-            }
-            "fail" => {
-                if let Some(c) = class {
-                    sm.failed[c.index()] += 1;
-                }
-                *causes.entry(format!("fail:{label}")).or_insert(0) += 1;
-            }
-            "gauge" if label == "events_dropped" => {
-                sm.events_dropped =
-                    get("value").and_then(|v| v.as_u64()).unwrap_or(0);
-            }
-            _ => {}
-        }
+        sm.events_dropped += feed_dropped;
     }
     let tri = |v: &mut Vec<u64>| {
         v.sort_unstable();
@@ -901,6 +925,179 @@ pub fn summarize(feed: &str) -> Result<TraceSummary> {
         v
     };
     Ok(sm)
+}
+
+// ---------------------------------------------------------------------------
+// Multi-feed Chrome merge (`ns-lbp trace F1 F2 … --chrome OUT`)
+// ---------------------------------------------------------------------------
+
+/// Merge several JSONL feeds into one Chrome-trace JSON file, one
+/// *process* per feed (pid = position + 1, named after the feed) so a
+/// fleet's nodes land side by side on the same timeline.  Unlike the
+/// live [`ChromeWriter`] this re-derives every record from the parsed
+/// feed, so it works on any feeds `ns-lbp trace` can summarize.
+/// Returns the number of event records written (metadata excluded).
+pub fn merge_chrome_trace(feeds: &[(&str, &str)], path: &str) -> Result<u64> {
+    fn emit(out: &mut std::io::BufWriter<std::fs::File>, first: &mut bool,
+            record: &str) -> Result<()> {
+        if !*first {
+            out.write_all(b",\n").map_err(Error::Io)?;
+        }
+        *first = false;
+        out.write_all(record.as_bytes()).map_err(Error::Io)
+    }
+
+    let mut out = std::io::BufWriter::new(
+        std::fs::File::create(path).map_err(Error::Io)?,
+    );
+    out.write_all(b"[\n").map_err(Error::Io)?;
+    let mut first = true;
+    let mut events = 0u64;
+    for (fi, &(feed_name, feed)) in feeds.iter().enumerate() {
+        let pid = fi as u64 + 1;
+        emit(&mut out, &mut first, &format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"process_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            json::escape(feed_name)
+        ))?;
+        let mut named_tids: HashSet<u64> = HashSet::new();
+        for (lineno, line) in feed.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let fields = json::parse_flat_object(line).map_err(|e| {
+                Error::Config(format!(
+                    "trace feed {feed_name} line {}: {e}", lineno + 1))
+            })?;
+            let get = |k: &str| {
+                fields.iter().find(|(key, _)| key == k).map(|(_, v)| v)
+            };
+            let kind = get("kind").and_then(|v| v.as_str()).ok_or_else(|| {
+                Error::Config(format!(
+                    "trace feed {feed_name} line {}: no kind", lineno + 1))
+            })?;
+            let class = get("class")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
+            let label = get("label")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
+            let u = |k: &str| get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+            let f = |k: &str| get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let ts_us = u("ts_ns") as f64 / 1e3;
+            let dur_us = u("dur_ns") as f64 / 1e3;
+            let (tid, track) = match kind {
+                "batch" => (
+                    2000 + class.parse::<QosClass>()
+                        .map_or(0, |c| c.index() as u64),
+                    format!("batcher-{}",
+                            if class.is_empty() { "?" } else { &class }),
+                ),
+                "infer" | "phase" => {
+                    let shard = u("shard");
+                    (3000 + shard, format!("shard-{shard}"))
+                }
+                "gauge" => (0, String::new()),
+                _ => {
+                    let sensor = u("sensor_id");
+                    (1000 + sensor, format!("sensor-{sensor}"))
+                }
+            };
+            if kind != "gauge" && named_tids.insert(tid) {
+                emit(&mut out, &mut first, &format!(
+                    "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+                     \"name\":\"thread_name\",\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    json::escape(&track)
+                ))?;
+            }
+            let mut rec = String::with_capacity(192);
+            rec.push('{');
+            match kind {
+                "gauge" => {
+                    let name = if class.is_empty() {
+                        label.clone()
+                    } else {
+                        format!("{label}/{class}")
+                    };
+                    json::push_str_field(&mut rec, "ph", "C");
+                    json::push_u64_field(&mut rec, "pid", pid);
+                    json::push_str_field(&mut rec, "name", &name);
+                    json::push_f64_field(&mut rec, "ts", ts_us);
+                    rec.push_str("\"args\":{\"value\":");
+                    json::push_f64(&mut rec, f("value"));
+                    rec.push_str("},");
+                }
+                "queue" | "batch" | "infer" | "phase" | "complete" => {
+                    let name = match kind {
+                        "queue" => "queue".to_string(),
+                        "batch" => format!("batch/{label}"),
+                        "infer" => format!(
+                            "infer/{}",
+                            get("backend")
+                                .and_then(|v| v.as_str())
+                                .unwrap_or("?")
+                        ),
+                        "phase" => label.clone(),
+                        _ => format!(
+                            "request/{}",
+                            if class.is_empty() { "?" } else { &class }
+                        ),
+                    };
+                    json::push_str_field(&mut rec, "ph", "X");
+                    json::push_u64_field(&mut rec, "pid", pid);
+                    json::push_u64_field(&mut rec, "tid", tid);
+                    json::push_str_field(&mut rec, "name", &name);
+                    json::push_f64_field(&mut rec, "ts", ts_us);
+                    json::push_f64_field(&mut rec, "dur", dur_us);
+                    rec.push_str("\"args\":{");
+                    if u("batch_id") > 0 {
+                        json::push_u64_field(&mut rec, "batch_id",
+                                             u("batch_id"));
+                    }
+                    if kind == "batch" {
+                        json::push_f64_field(&mut rec, "size", f("value"));
+                    }
+                    if kind == "infer" {
+                        json::push_f64_field(&mut rec, "sensor_pj",
+                                             f("sensor_pj"));
+                        json::push_f64_field(&mut rec, "compute_pj",
+                                             f("compute_pj"));
+                        json::push_f64_field(&mut rec, "dpu_pj", f("dpu_pj"));
+                        json::push_f64_field(&mut rec, "tx_pj", f("tx_pj"));
+                        json::push_u64_field(&mut rec, "modeled_ns",
+                                             u("modeled_ns"));
+                    }
+                    if rec.ends_with(',') {
+                        rec.pop();
+                    }
+                    rec.push_str("},");
+                }
+                _ => {
+                    let name = if label.is_empty() {
+                        kind.to_string()
+                    } else {
+                        format!("{kind}:{label}")
+                    };
+                    json::push_str_field(&mut rec, "ph", "i");
+                    json::push_u64_field(&mut rec, "pid", pid);
+                    json::push_u64_field(&mut rec, "tid", tid);
+                    json::push_str_field(&mut rec, "name", &name);
+                    json::push_f64_field(&mut rec, "ts", ts_us);
+                    json::push_str_field(&mut rec, "s", "t");
+                }
+            }
+            rec.pop(); // trailing comma
+            rec.push('}');
+            emit(&mut out, &mut first, &rec)?;
+            events += 1;
+        }
+    }
+    out.write_all(b"\n]\n").map_err(Error::Io)?;
+    out.flush().map_err(Error::Io)?;
+    Ok(events)
 }
 
 #[cfg(test)]
@@ -1050,6 +1247,69 @@ mod tests {
     fn summarize_rejects_corrupt_lines() {
         assert!(summarize("not json\n").is_err());
         assert!(summarize("{\"ts_ns\":1}\n").is_err()); // no kind
+    }
+
+    #[test]
+    fn multi_feed_merge_pools_events_and_sums_ring_drops() {
+        let mut feeds: Vec<String> = Vec::new();
+        for node in 0..2u64 {
+            let mut feed = String::new();
+            for i in 1..=10u64 {
+                let ev = TraceEvent {
+                    kind: EventKind::Complete,
+                    ts_ns: i,
+                    dur_ns: i * 1_000,
+                    class: Some(QosClass::Billed),
+                    sensor_id: node as u32,
+                    seq: i,
+                    ..TraceEvent::default()
+                };
+                feed.push_str(&ev.to_jsonl());
+                feed.push('\n');
+            }
+            // Two gauges per feed: only the final one counts, and the
+            // merged figure sums the two feeds (3 + 5, not "last wins").
+            for value in [1.0, (node as f64 + 1.0) * 2.0 + 1.0] {
+                let ev = TraceEvent {
+                    kind: EventKind::Gauge,
+                    label: "events_dropped",
+                    value,
+                    ..TraceEvent::default()
+                };
+                feed.push_str(&ev.to_jsonl());
+                feed.push('\n');
+            }
+            feeds.push(feed);
+        }
+        let named: Vec<(&str, &str)> = vec![
+            ("feed-node0.jsonl", &feeds[0]),
+            ("feed-node1.jsonl", &feeds[1]),
+        ];
+        let sm = summarize_feeds(&named).unwrap();
+        assert_eq!(sm.completed[QosClass::Billed.index()], 20);
+        assert_eq!(sm.events_dropped, 3 + 5);
+        // A corrupt line in a named feed reports which feed.
+        let bad = vec![("a.jsonl", feeds[0].as_str()), ("b.jsonl", "junk")];
+        let err = summarize_feeds(&bad).unwrap_err().to_string();
+        assert!(err.contains("b.jsonl"), "{err}");
+
+        // Chrome merge: one process per feed, both named.
+        let dir = std::env::temp_dir().join(format!(
+            "nslbp-obs-merge-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("merged.trace.json");
+        let n = merge_chrome_trace(&named, out.to_str().unwrap()).unwrap();
+        assert_eq!(n, 24); // 2 × (10 completes + 2 gauges)
+        let chrome = std::fs::read_to_string(&out).unwrap();
+        let trimmed = chrome.trim();
+        assert!(trimmed.starts_with('[') && trimmed.ends_with(']'));
+        assert!(chrome.contains("feed-node0.jsonl"));
+        assert!(chrome.contains("feed-node1.jsonl"));
+        assert!(chrome.contains("\"pid\":2"));
+        assert!(chrome.contains("request/billed"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

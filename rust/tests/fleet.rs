@@ -1,0 +1,194 @@
+//! Fleet integration tests: the failure drill (kill a node mid-stream,
+//! zero billed loss, re-routed completions, logits bit-identical to a
+//! single-node run, p99 bounded by the drill budget) and a mid-stream
+//! model rollover that converges on one content-hash version without
+//! dropping in-flight frames.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use ns_lbp::compile::{build_model, ModelSpec};
+use ns_lbp::coordinator::{ArchSim, CoordinatorConfig};
+use ns_lbp::engine::QosClass;
+use ns_lbp::fleet::Fleet;
+use ns_lbp::params::synth::synth_params;
+use ns_lbp::params::NetParams;
+use ns_lbp::sensor::Frame;
+use ns_lbp::serve::{Request, Server};
+
+fn synth_frames(n: usize, seed: u64) -> (NetParams, Vec<Frame>) {
+    let (_, params) = synth_params(5);
+    let frames = ns_lbp::testing::synth_frames(&params, n, seed).unwrap();
+    (params, frames)
+}
+
+/// Fleet config with a slow batch deadline, so submitted frames are
+/// still in flight when the drill kills a node.
+fn drill_config(nodes: usize, deadline_us: u64) -> CoordinatorConfig {
+    let mut config = CoordinatorConfig {
+        arch: ArchSim { lbp: false, mlp: false, early_exit: false },
+        ..Default::default()
+    };
+    config.system.serve.shards = 1;
+    config.system.serve.max_batch = 64;
+    config.system.serve.batch_deadline_us = deadline_us;
+    config.system.fleet.nodes = nodes;
+    config
+}
+
+/// Replay `frames` round-robin across `sensors` (all billed), killing
+/// `kill` after submission if given, and return (per-(sensor,seq)
+/// logits, drill report, frames that arrived re-routed).
+fn replay(
+    fleet: Fleet,
+    frames: &[Frame],
+    sensors: &[u32],
+    kill: Option<usize>,
+) -> (HashMap<(u32, u64), Vec<f32>>, ns_lbp::fleet::FleetReport, u64) {
+    let mut tickets = Vec::new();
+    for (i, frame) in frames.iter().enumerate() {
+        let sensor = sensors[i % sensors.len()];
+        let session = fleet.session(sensor).with_class(QosClass::Billed);
+        tickets.push((sensor, session.submit(frame.clone()).unwrap()));
+    }
+    if let Some(victim) = kill {
+        // let the victim pull its frames off the wire first, so the
+        // drill exercises re-homing of work the node truly owned
+        std::thread::sleep(Duration::from_millis(20));
+        fleet.kill_node(victim).unwrap();
+        assert!(!fleet.live_nodes().contains(&victim));
+    }
+    let mut logits = HashMap::new();
+    let mut rerouted = 0u64;
+    for (sensor, t) in tickets {
+        // the drill invariant: every billed frame still completes
+        let r = t.wait().unwrap();
+        if r.rerouted > 0 {
+            rerouted += 1;
+        }
+        logits.insert((sensor, r.seq()), r.inner.report.logits);
+    }
+    let report = fleet.drain().unwrap();
+    (logits, report, rerouted)
+}
+
+#[test]
+fn drill_kill_node_rehomes_with_zero_billed_loss() {
+    let (params, frames) = synth_frames(24, 17);
+    let sensors: Vec<u32> = (0..6).collect();
+
+    // Baseline pass: same fleet shape, nobody dies.
+    let baseline_fleet =
+        Fleet::start(params.clone(), drill_config(3, 150_000)).unwrap();
+    let (_, baseline, _) = replay(baseline_fleet, &frames, &sensors, None);
+    assert_eq!(baseline.completed, frames.len() as u64);
+    assert_eq!(baseline.rerouted, 0);
+
+    // Drill pass: kill the node that owns sensor 0, mid-stream.
+    let fleet = Fleet::start(params.clone(), drill_config(3, 150_000)).unwrap();
+    let victim = fleet.owner_of(sensors[0]).unwrap();
+    let p99_budget = fleet.config().drill.p99_budget;
+    let (fleet_logits, report, rerouted) =
+        replay(fleet, &frames, &sensors, Some(victim));
+
+    assert!(rerouted > 0, "the drill re-homed nothing: the victim owned \
+                           no in-flight frames");
+    assert_eq!(report.killed, vec![victim]);
+    assert_eq!(report.completed, frames.len() as u64,
+               "zero billed-frame loss: every submitted frame completes");
+    assert_eq!(report.billed_lost(), 0);
+    assert_eq!(report.lost.iter().sum::<u64>(), 0);
+    assert_eq!(report.orphaned, 0);
+    assert_eq!(report.rerouted, rerouted,
+               "router re-home count matches re-routed completions");
+    assert_eq!(report.completed_by_node.iter().sum::<u64>(),
+               report.completed);
+    assert!(report.node_reports[victim].is_none(),
+            "a killed node dies without a drain report");
+    for &node in &report.live {
+        let r = report.node_reports[node]
+            .as_ref()
+            .expect("live nodes drain a report");
+        assert_eq!(r.accepted, r.completed + r.dropped + r.failed,
+                   "node {node} lifecycle balance");
+    }
+    // p99 inflation bounded by the drill budget (generous by default —
+    // the CI gate in fleet_check.py uses the configured value too).
+    assert!(
+        report.p99_ms <= baseline.p99_ms.max(0.001) * p99_budget,
+        "drill p99 {:.3} ms blew the budget ({}x baseline {:.3} ms)",
+        report.p99_ms, p99_budget, baseline.p99_ms
+    );
+
+    // Bit-identical to a single-node run: placement and re-homing must
+    // never change the math.
+    let server = Server::start(params, drill_config(1, 500)).unwrap();
+    let mut seqs: HashMap<u32, u64> = HashMap::new();
+    let mut single = Vec::new();
+    for (i, frame) in frames.iter().enumerate() {
+        let sensor = sensors[i % sensors.len()];
+        let seq = seqs.entry(sensor).or_insert(0);
+        let request = Request::builder(frame.clone().with_seq(*seq))
+            .sensor_id(sensor)
+            .class(QosClass::Billed)
+            .build();
+        *seq += 1;
+        single.push((sensor, server.submit(request).unwrap()));
+    }
+    for (sensor, ticket) in single {
+        let resp = ticket.wait().unwrap();
+        let fleet_l = &fleet_logits[&(sensor, resp.seq())];
+        assert_eq!(fleet_l, &resp.report.logits,
+                   "sensor {sensor} seq {} diverged from the single-node \
+                    run", resp.seq());
+    }
+    server.drain().unwrap();
+}
+
+#[test]
+fn push_model_mid_stream_converges_without_dropping_in_flight() {
+    let (params, frames) = synth_frames(12, 29);
+    let config = drill_config(3, 20_000);
+    let fleet = Fleet::start(params, config.clone()).unwrap();
+
+    // First half queued on model 0 (the 20 ms batch deadline keeps them
+    // in flight while the roll happens).
+    let mut first = Vec::new();
+    for (i, frame) in frames[..6].iter().enumerate() {
+        first.push(fleet.session(i as u32).submit(frame.clone()).unwrap());
+    }
+
+    let spec = ModelSpec::parse(
+        "[model]\nname = \"alt\"\nseed = 7\n",
+        Path::new("."),
+    )
+    .unwrap();
+    let model = build_model(&spec, &config.system).unwrap();
+    let acks = fleet.push_model(1, &model).unwrap();
+    assert_eq!(acks.len(), 3, "every live node acked the roll");
+    assert!(acks.iter().all(|&(_, v)| v == acks[0].1 && v != 0),
+            "acks did not converge on one content-hash version: {acks:?}");
+
+    // Second half rides the freshly rolled model on every node.
+    let mut second = Vec::new();
+    for (i, frame) in frames[6..].iter().enumerate() {
+        let session = fleet.session(100 + i as u32).with_model(1);
+        second.push(session.submit(frame.clone()).unwrap());
+    }
+    for t in first {
+        let r = t.wait().unwrap();
+        assert_eq!(r.inner.model_id, 0, "an in-flight frame switched models");
+    }
+    for t in second {
+        let r = t.wait().unwrap();
+        assert_eq!(r.inner.model_id, 1);
+    }
+    let report = fleet.drain().unwrap();
+    assert_eq!(report.completed, frames.len() as u64);
+    assert_eq!(
+        report.dropped + report.failed + report.lost.iter().sum::<u64>(),
+        0,
+        "the roll dropped traffic"
+    );
+}

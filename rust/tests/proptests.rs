@@ -547,3 +547,130 @@ fn prop_warm_arena_matches_cold_over_random_batch_sizes() {
         }
     });
 }
+
+/// Rendezvous hashing is minimally disruptive: removing one node moves
+/// only the sensors it owned (each to its former second choice) and
+/// leaves every other sensor's owner untouched; adding a node back only
+/// moves sensors the new node now wins.
+#[test]
+fn prop_rendezvous_rehoming_is_minimal() {
+    use ns_lbp::fleet::{rendezvous_owner, rendezvous_rank};
+
+    check(Config::default().cases(60), "rendezvous minimal disruption",
+          |g: &mut Gen| {
+        let n = g.usize_in(2, 8);
+        let nodes: Vec<usize> = (0..n).collect();
+        let departed = g.usize_in(0, n - 1);
+        let survivors: Vec<usize> =
+            nodes.iter().copied().filter(|&x| x != departed).collect();
+        let sensors: Vec<u32> =
+            (0..64).map(|_| g.u32_below(1 << 20)).collect();
+        for &sensor in &sensors {
+            let before = rendezvous_owner(sensor, &nodes).unwrap();
+            let after = rendezvous_owner(sensor, &survivors).unwrap();
+            if before == departed {
+                // an orphaned sensor lands on its next-ranked survivor
+                let rank = rendezvous_rank(sensor, &nodes);
+                assert_eq!(after, rank[1],
+                           "sensor {sensor} skipped its second choice");
+            } else {
+                assert_eq!(before, after,
+                           "sensor {sensor} moved although its owner \
+                            {before} survived");
+            }
+            // re-join: the only sensors that move to the full set's
+            // owner are the ones the returning node wins outright
+            if after != before {
+                assert_eq!(before, departed);
+            }
+        }
+    });
+}
+
+/// The fleet admission ledger never exceeds any (node, class) capacity
+/// under arbitrary admit/release/kill interleavings, places every admit
+/// on a live node, and refuses only when every live node is full.
+#[test]
+fn prop_routing_table_caps_are_never_exceeded() {
+    use ns_lbp::engine::QosClass;
+    use ns_lbp::fleet::RoutingTable;
+
+    check(Config::default().cases(40), "routing-table capacity",
+          |g: &mut Gen| {
+        let n = g.usize_in(1, 6);
+        let capacity = [
+            g.usize_in(1, 5),
+            g.usize_in(1, 5),
+            g.usize_in(1, 5),
+        ];
+        let mut table = RoutingTable::new(n, capacity);
+        // shadow ledger of outstanding (node, class) admits
+        let mut flat: Vec<(usize, QosClass)> = Vec::new();
+        let steps = g.usize_in(20, 200);
+        for _ in 0..steps {
+            match g.usize_in(0, 9) {
+                // mostly admits
+                0..=5 => {
+                    let sensor = g.u32_below(256);
+                    let class = QosClass::ALL[g.usize_in(0, 2)];
+                    match table.admit(sensor, class) {
+                        Some(p) => {
+                            assert!(table.is_live(p.node),
+                                    "admitted onto a dead node");
+                            flat.push((p.node, class));
+                        }
+                        None => {
+                            // refusal is only legal when every live
+                            // node is at capacity for this class
+                            for node in table.live_nodes() {
+                                assert_eq!(
+                                    table.in_flight(node, class),
+                                    table.capacity(class),
+                                    "refused with headroom on node {node}"
+                                );
+                            }
+                        }
+                    }
+                }
+                // releases (random completion order)
+                6..=8 => {
+                    if !flat.is_empty() {
+                        let i = g.usize_in(0, flat.len() - 1);
+                        let (node, class) = flat.swap_remove(i);
+                        table.release(node, class);
+                    }
+                }
+                // rare kill
+                _ => {
+                    let node = g.usize_in(0, n - 1);
+                    table.mark_dead(node);
+                    // the dead node's outstanding admits vanish from
+                    // the ledger; drop our shadow entries too so later
+                    // releases don't double-release survivors
+                    flat.retain(|&(owner, _)| owner != node);
+                }
+            }
+            // the invariant: no (live node, class) ledger above capacity
+            for node in 0..n {
+                for class in QosClass::ALL {
+                    let used = table.in_flight(node, class);
+                    assert!(used <= table.capacity(class),
+                            "node {node} {class:?} at {used} > cap");
+                    if !table.is_live(node) {
+                        assert_eq!(used, 0, "dead node {node} holds slots");
+                    }
+                }
+            }
+            // shadow ledger and table agree for live nodes
+            for node in table.live_nodes() {
+                for class in QosClass::ALL {
+                    let shadow = flat.iter()
+                        .filter(|&&(o, c)| o == node && c == class)
+                        .count();
+                    assert_eq!(table.in_flight(node, class), shadow,
+                               "ledger drift on node {node}");
+                }
+            }
+        }
+    });
+}

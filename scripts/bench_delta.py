@@ -5,12 +5,18 @@ Finds the most recent successful run on main that actually carries a
 `bench-json` artifact (one artifact-less or expired run must not
 disable the trajectory forever), downloads it, and prints per-metric
 delta tables against the JSON files produced by the current run —
-covering all three trajectory artifacts:
+covering every trajectory artifact:
 
 * BENCH_hotpath.json — bench_harness schema: per-case median ns,
 * BENCH_serve.json   — serve-bench schema: per-shard-count throughput,
   p95 latency, energy per frame,
+* BENCH_fleet.json   — fleet-bench schema: baseline/drill pass latency
+  and completion counts,
 * AB_energy.json     — A/B harness schema: per-arm energy/time/TOPS-W.
+
+A series absent from the previous run's artifact is a *first sighting*
+(a newly introduced bench), not drift: it prints an informational line
+and every metric shows as "new" — no warnings, no gate.
 
 Gating policy: ordinary drift only annotates the table (runners are
 noisy), but a *sustained* collapse — the current median more than 2x
@@ -58,6 +64,14 @@ def flatten(name, blob):
             out[f"{tag} p95_ms"] = (rep["latency_ms"]["p95"], False)
             out[f"{tag} energy_per_frame_uj"] = (
                 rep["energy_per_frame_uj"], False)
+    elif "baseline" in doc and "nodes" in doc:  # fleet-bench (BENCH_fleet.json)
+        for phase in ("baseline", "drill"):
+            sub = doc.get(phase)
+            if not sub:
+                continue
+            rep = sub["report"]
+            out[f"{phase} p95_ms"] = (rep["latency_ms"]["p95"], False)
+            out[f"{phase} completed"] = (rep["completed"], True)
     elif "a" in doc and "b" in doc:  # A/B harness schema (AB_energy.json)
         for arm_key in ("a", "b"):
             arm = doc[arm_key]
@@ -111,10 +125,14 @@ def main():
     zf = zipfile.ZipFile(io.BytesIO(api(art["archive_download_url"]).read()))
 
     hard = []
-    for name in ("BENCH_hotpath.json", "BENCH_serve.json", "AB_energy.json"):
+    for name in ("BENCH_hotpath.json", "BENCH_serve.json",
+                 "BENCH_fleet.json", "AB_energy.json"):
         if name not in zf.namelist():
-            print(f"bench delta: {name} absent from run {prev['id']}'s "
-                  "artifact; skipping")
+            if os.path.exists(name):
+                # a newly introduced series: this run produced it but the
+                # previous artifact predates it — first sighting, not drift
+                print(f"bench delta: {name}: new series (first sighting; "
+                      f"run {prev['id']} predates it) — recorded, no diff")
             continue
         if not os.path.exists(name):
             print(f"bench delta: {name} not produced by this run; skipping")

@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""Validate an `ns-lbp fleet-bench --json` document (see EXPERIMENTS.md §Fleet).
+
+Usage: fleet_check.py BENCH_fleet.json [--require-drill] [--require-push]
+
+Checks, in order:
+
+1. the document parses and carries the fleet-bench schema
+   (`nodes`/`frames`/`baseline`, optional `drill`);
+2. baseline sanity: no kill happened, nothing was re-routed or lost,
+   every offered frame is accounted for
+   (completed + rejected + dropped + failed == submitted);
+3. per-node lifecycle balance, both passes: every live node's drain
+   report balances (accepted == completed + dropped + failed), killed
+   nodes carry no report (they die without drain), and the sum of
+   router-side per-node completion credits equals the fleet's completed
+   count;
+4. zero billed loss in the drill: `billed_lost == 0` and the billed
+   completions equal the billed offered count (the drill invariant);
+5. re-homing actually happened when a node was killed (`rerouted > 0` —
+   a drill that moved nothing proves nothing);
+6. p99 bounded: `drill_p99_ms <= p99_budget * baseline_p99_ms` (the
+   budget comes from `[fleet.drill] p99_budget` and is recorded in the
+   document);
+7. version convergence when a model was rolled: at least one ack, every
+   ack's content-hash version identical and nonzero, and — when a node
+   was killed first — no ack from the dead node.
+
+Exit 0 on a valid document, 1 with a diagnostic on the first violated
+check.  `--require-drill` / `--require-push` also fail when the document
+lacks a drill / push section (CI runs with both).
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"fleet check: FAIL: {msg}")
+    sys.exit(1)
+
+
+def offered_total(offered):
+    return sum(offered.values())
+
+
+def check_node_balance(tag, report, killed):
+    """Per-node lifecycle balance for one pass's fleet report."""
+    nodes = report["nodes"]
+    per_node = report["per_node"]
+    if len(per_node) != nodes:
+        fail(f"{tag}: per_node has {len(per_node)} entries for "
+             f"{nodes} nodes")
+    routed_sum = 0
+    for entry in per_node:
+        node = entry["node"]
+        routed_sum += entry["completed_routed"]
+        if entry["killed"] != (node in killed):
+            fail(f"{tag}: node {node} killed flag disagrees with the "
+                 f"kill list {killed}")
+        rep = entry["report"]
+        if node in killed:
+            if rep is not None:
+                fail(f"{tag}: killed node {node} produced a drain report")
+            continue
+        if rep is None:
+            fail(f"{tag}: live node {node} has no drain report")
+        if rep["accepted"] != rep["completed"] + rep["dropped"] + rep["failed"]:
+            fail(f"{tag}: node {node} lifecycle imbalance: accepted "
+                 f"{rep['accepted']} != completed {rep['completed']} + "
+                 f"dropped {rep['dropped']} + failed {rep['failed']}")
+    if routed_sum != report["completed"]:
+        fail(f"{tag}: per-node completion credits sum to {routed_sum}, "
+             f"fleet completed {report['completed']}")
+
+
+def check_pass(tag, section, killed):
+    report = section["report"]
+    offered = section["offered_by_class"]
+    check_node_balance(tag, report, killed)
+    accounted = (report["completed"] + report["rejected"]
+                 + report["dropped"] + report["failed"]
+                 + sum(report["lost_by_class"].values()))
+    if accounted < report["submitted"]:
+        fail(f"{tag}: {report['submitted']} submitted but only "
+             f"{accounted} accounted for")
+    if report["orphaned"] != 0:
+        fail(f"{tag}: {report['orphaned']} orphaned responses (a "
+             "completion arrived for a request the router forgot)")
+    # billed frames: the paying class must never be shed
+    billed_offered = offered.get("billed", 0)
+    if report["billed_lost"] != 0:
+        fail(f"{tag}: {report['billed_lost']} billed frame(s) lost")
+    if report["completed_by_class"]["billed"] != billed_offered:
+        fail(f"{tag}: billed completions "
+             f"{report['completed_by_class']['billed']} != billed "
+             f"offered {billed_offered}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("doc", help="BENCH_fleet.json from fleet-bench --json")
+    ap.add_argument("--require-drill", action="store_true",
+                    help="fail when the document has no drill section")
+    ap.add_argument("--require-push", action="store_true",
+                    help="fail when the drill carries no model push")
+    args = ap.parse_args()
+
+    with open(args.doc, encoding="utf-8") as f:
+        try:
+            doc = json.load(f)
+        except json.JSONDecodeError as exc:
+            fail(f"{args.doc}: not JSON ({exc})")
+
+    for key in ("nodes", "frames", "baseline"):
+        if key not in doc:
+            fail(f"{args.doc}: no {key!r} — not a fleet-bench document")
+
+    # -- baseline pass: an undisturbed fleet ---------------------------
+    baseline = check_pass("baseline", doc["baseline"], killed=[])
+    if baseline["killed"]:
+        fail(f"baseline: kill list {baseline['killed']} is not empty")
+    if baseline["rerouted"] != 0:
+        fail(f"baseline: {baseline['rerouted']} re-homed frames with "
+             "nobody killed")
+
+    drill = doc.get("drill")
+    if drill is None:
+        if args.require_drill:
+            fail("no drill section (run fleet-bench --drill)")
+        if args.require_push:
+            fail("no drill/push section (run fleet-bench --push-rollover)")
+        print(f"fleet check: OK: {args.doc}: baseline only, "
+              f"{doc['nodes']} nodes, {baseline['completed']} completed, "
+              "0 billed lost")
+        return
+
+    # -- drill pass: kill + (optionally) rollover ----------------------
+    killed = ([drill["killed_node"]] if "killed_node" in drill else [])
+    if args.require_drill and not killed:
+        fail("drill section has no killed_node (run with --drill)")
+    report = check_pass("drill", drill, killed)
+    if killed:
+        if report["killed"] != killed:
+            fail(f"drill: report kill list {report['killed']} != "
+                 f"{killed}")
+        if report["rerouted"] == 0:
+            fail("drill: a node was killed but nothing was re-homed — "
+                 "the drill proved nothing")
+        budget = drill["p99_budget"]
+        baseline_p99 = max(drill["baseline_p99_ms"], 1e-3)
+        if drill["drill_p99_ms"] > budget * baseline_p99:
+            fail(f"drill: p99 {drill['drill_p99_ms']:.3f} ms blew the "
+                 f"budget ({budget}x baseline {baseline_p99:.3f} ms)")
+
+    push = drill.get("push")
+    if push is None:
+        if args.require_push:
+            fail("no model push in the drill (run with --push-rollover)")
+    else:
+        acks = push["acks"]
+        if not acks:
+            fail("push: no node acked the rolled artifact")
+        versions = {a["version"] for a in acks}
+        if len(versions) != 1:
+            fail(f"push: acked versions diverge: {sorted(versions)}")
+        version = versions.pop()
+        if int(version, 16) == 0:
+            fail("push: converged on the zero version (unstamped artifact)")
+        dead_acks = [a["node"] for a in acks if a["node"] in killed]
+        if dead_acks:
+            fail(f"push: dead node(s) {dead_acks} acked the roll")
+
+    bits = [f"{doc['nodes']} nodes", f"{report['completed']} completed",
+            f"{report['rerouted']} re-homed", "0 billed lost"]
+    if push is not None:
+        bits.append(f"push converged on v{version} ({len(acks)} acks)")
+    print(f"fleet check: OK: {args.doc}: " + ", ".join(bits))
+
+
+if __name__ == "__main__":
+    main()
