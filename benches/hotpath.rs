@@ -22,6 +22,14 @@
 //! every run and diffs against the previous run's upload.
 
 use ns_lbp::bench_harness::{black_box, Bench};
+
+// With `--features alloc-count` the whole binary runs on the counting
+// allocator so the steady-state gate below can prove the warm dispatch
+// path allocates nothing beyond the output value it returns.
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static COUNTING_ALLOC: ns_lbp::bench_harness::alloc_count::CountingAlloc =
+    ns_lbp::bench_harness::alloc_count::CountingAlloc;
 use ns_lbp::circuit::MonteCarlo;
 use ns_lbp::dpu::Dpu;
 use ns_lbp::engine::{ArchSim, ArchitecturalBackend, EngineConfig,
@@ -184,6 +192,47 @@ fn main() {
         b.run("arch_batch8_dispatch", || {
             warm.infer_batch(black_box(&frames)).unwrap().frames.len()
         });
+        // --- steady-state allocation gate (alloc-count builds only) ----
+        // The warm dispatch may allocate only what the returned
+        // `BackendOutput` inherently owns (per-frame logits / features /
+        // profile string — measured as the cost of cloning one output)
+        // plus a handful of batch-local collector vectors.  A regression
+        // back to the seed's per-dispatch shape (fresh backend, per-call
+        // weight packs, unpooled arenas) costs hundreds of allocations
+        // and trips the bound; per-iteration drift trips the steadiness
+        // check.
+        #[cfg(feature = "alloc-count")]
+        {
+            use ns_lbp::bench_harness::alloc_count;
+            let out = warm.infer_batch(&frames).unwrap();
+            let (_, baseline) = alloc_count::count(|| black_box(out.clone()));
+            let rounds: Vec<u64> = (0..3)
+                .map(|_| {
+                    let (o, n) = alloc_count::count(|| {
+                        warm.infer_batch(black_box(&frames)).unwrap()
+                    });
+                    black_box(o);
+                    n
+                })
+                .collect();
+            assert_eq!(
+                rounds[1], rounds[2],
+                "warm dispatch allocation count drifts between iterations \
+                 ({rounds:?}) — the steady state is leaking"
+            );
+            let budget = baseline + 2 * frames.len() as u64 + 8;
+            assert!(
+                rounds[2] <= budget,
+                "warm dispatch allocates {} per batch (output baseline {}, \
+                 budget {}) — the zero-alloc hot path regressed",
+                rounds[2], baseline, budget
+            );
+            println!(
+                "alloc gate: {} allocs/dispatch (output baseline {}, \
+                 budget {}) — steady",
+                rounds[2], baseline, budget
+            );
+        }
         // tracing cost on the dispatch unit: `trace_off` pins an
         // explicitly disabled tracer and must be indistinguishable from
         // the default path above — CI gates the pair within 2% or noise

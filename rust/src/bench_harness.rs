@@ -199,6 +199,63 @@ impl Bench {
     }
 }
 
+/// Steady-state allocation accounting for hot-path regression gates.
+///
+/// Behind the `alloc-count` feature a bench binary installs
+/// [`alloc_count::CountingAlloc`] as its `#[global_allocator]` and
+/// brackets the measured closure with [`alloc_count::count`]; the gate
+/// then asserts the warm path performs exactly its known baseline of
+/// allocations (e.g. the unavoidable output clone) and nothing more.
+/// The counter is a relaxed atomic: the hot paths under the gate are
+/// single-threaded, and a data race would only ever overcount — which
+/// fails the gate loudly rather than hiding a regression.
+#[cfg(feature = "alloc-count")]
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    /// `System` allocator wrapper that counts every `alloc`/`realloc`.
+    /// Install with `#[global_allocator]` in the bench binary.
+    pub struct CountingAlloc;
+
+    // SAFETY: defers entirely to `System`; the counter has no effect
+    // on the returned pointers or layouts.
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn realloc(
+            &self,
+            ptr: *mut u8,
+            layout: Layout,
+            new_size: usize,
+        ) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    /// Total allocations since process start (monotone).
+    pub fn total() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Allocations performed while running `f`.
+    pub fn count<T>(f: impl FnOnce() -> T) -> (T, u64) {
+        let before = total();
+        let out = f();
+        (out, total() - before)
+    }
+}
+
 /// Simple fixed-width table printer for paper-figure outputs.
 pub struct Table {
     headers: Vec<String>,

@@ -297,6 +297,60 @@ pub struct HwSelection {
     pub clock_explicit: bool,
 }
 
+/// Async serve-plane knobs, written as `[serve.async]` (see
+/// [`crate::serve::async_plane`] and [`crate::exec`]).  When `enabled`,
+/// the server multiplexes per-sensor sessions onto a small executor
+/// worker pool instead of spawning a thread per batcher/shard, applies
+/// deficit-round-robin fairness across sensors within each QoS class,
+/// and autoscales the active engine-shard count between `min_shards`
+/// and `max_shards` under offered load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AsyncServeConfig {
+    /// Run the serve plane on the executor instead of dedicated threads.
+    pub enabled: bool,
+    /// Executor worker threads (0 = one per available core, capped at 8).
+    pub workers: usize,
+    /// Floor of the autoscaled engine-shard range.
+    pub min_shards: usize,
+    /// Ceiling of the autoscaled range (0 = follow `serve.shards`).
+    pub max_shards: usize,
+    /// DRR quantum: frames one sensor may dequeue per ring visit.
+    pub quantum: u32,
+    /// Scale up when queued batches per active shard reach this depth.
+    pub scale_up_depth: usize,
+    /// Scale down after this many consecutive idle load samples.
+    pub scale_down_idle: u32,
+    /// Autoscaler sampling period [µs].
+    pub scale_interval_us: u64,
+}
+
+impl Default for AsyncServeConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            workers: 0,
+            min_shards: 1,
+            max_shards: 0,
+            quantum: 4,
+            scale_up_depth: 2,
+            scale_down_idle: 8,
+            scale_interval_us: 1000,
+        }
+    }
+}
+
+impl AsyncServeConfig {
+    /// The effective autoscale ceiling: an explicit `max_shards`, else
+    /// the thread-plane `serve.shards` count.
+    pub fn max_shards_or(&self, shards: usize) -> usize {
+        if self.max_shards == 0 { shards } else { self.max_shards }
+    }
+
+    pub fn scale_interval(&self) -> std::time::Duration {
+        std::time::Duration::from_micros(self.scale_interval_us.max(1))
+    }
+}
+
 /// Frame-serving subsystem knobs (see [`crate::serve`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ServeConfig {
@@ -314,13 +368,16 @@ pub struct ServeConfig {
     pub model_cache: usize,
     /// Per-class overrides, indexed by [`QosClass::index`].
     pub classes: [ClassPolicy; QosClass::COUNT],
+    /// Async serve-plane knobs (`[serve.async]`).
+    pub async_plane: AsyncServeConfig,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self { shards: 4, queue_depth: 256, max_batch: 16,
                batch_deadline_us: 2000, model_cache: 4,
-               classes: [ClassPolicy::default(); QosClass::COUNT] }
+               classes: [ClassPolicy::default(); QosClass::COUNT],
+               async_plane: AsyncServeConfig::default() }
     }
 }
 
@@ -350,6 +407,34 @@ impl ServeConfig {
                     "serve.{}.max_batch must be >= 1", class
                 )));
             }
+        }
+        let a = &self.async_plane;
+        if a.min_shards == 0 {
+            return Err(Error::Config(
+                "serve.async.min_shards must be >= 1".into(),
+            ));
+        }
+        let max = a.max_shards_or(self.shards);
+        if max < a.min_shards {
+            return Err(Error::Config(format!(
+                "serve.async.max_shards ({max}) must be >= \
+                 serve.async.min_shards ({})", a.min_shards
+            )));
+        }
+        if a.quantum == 0 {
+            return Err(Error::Config(
+                "serve.async.quantum must be >= 1".into(),
+            ));
+        }
+        if a.scale_up_depth == 0 {
+            return Err(Error::Config(
+                "serve.async.scale_up_depth must be >= 1".into(),
+            ));
+        }
+        if a.scale_down_idle == 0 {
+            return Err(Error::Config(
+                "serve.async.scale_down_idle must be >= 1".into(),
+            ));
         }
         Ok(())
     }
@@ -531,6 +616,10 @@ impl SystemConfig {
             "serve.standard.deadline_us", "serve.standard.drop_oldest",
             "serve.billed.queue_depth", "serve.billed.max_batch",
             "serve.billed.deadline_us", "serve.billed.drop_oldest",
+            "serve.async.enabled", "serve.async.workers",
+            "serve.async.min_shards", "serve.async.max_shards",
+            "serve.async.quantum", "serve.async.scale_up_depth",
+            "serve.async.scale_down_idle", "serve.async.scale_interval_us",
             "fleet.nodes",
             "fleet.capacity.best_effort", "fleet.capacity.standard",
             "fleet.capacity.billed",
@@ -627,6 +716,26 @@ impl SystemConfig {
                 p.drop_oldest = Some(file.get_bool(&drop_key, false)?);
             }
         }
+        let da = d.serve.async_plane;
+        let async_plane = AsyncServeConfig {
+            enabled: file.get_bool("serve.async.enabled", da.enabled)?,
+            workers: file.get_usize("serve.async.workers", da.workers)?,
+            min_shards: file
+                .get_usize("serve.async.min_shards", da.min_shards)?,
+            max_shards: file
+                .get_usize("serve.async.max_shards", da.max_shards)?,
+            quantum: file
+                .get_usize("serve.async.quantum", da.quantum as usize)?
+                as u32,
+            scale_up_depth: file
+                .get_usize("serve.async.scale_up_depth", da.scale_up_depth)?,
+            scale_down_idle: file
+                .get_usize("serve.async.scale_down_idle",
+                           da.scale_down_idle as usize)? as u32,
+            scale_interval_us: file
+                .get_usize("serve.async.scale_interval_us",
+                           da.scale_interval_us as usize)? as u64,
+        };
         let serve = ServeConfig {
             shards: file.get_usize("serve.shards", d.serve.shards)?,
             queue_depth: file
@@ -638,6 +747,7 @@ impl SystemConfig {
             model_cache: file
                 .get_usize("serve.model_cache", d.serve.model_cache)?,
             classes,
+            async_plane,
         };
         serve.validate()?;
 
@@ -1001,6 +1111,47 @@ mod tests {
         assert_eq!(sc.serve.batch_deadline().as_micros(), 500);
 
         let bad = ConfigFile::parse("[serve]\nshards = 0").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn async_serve_knobs_parse_and_validate() {
+        let f = ConfigFile::parse(
+            "[serve]\nshards = 4\n\n[serve.async]\nenabled = true\n\
+             workers = 3\nmin_shards = 2\nmax_shards = 6\nquantum = 2\n\
+             scale_up_depth = 4\nscale_down_idle = 16\n\
+             scale_interval_us = 250",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        let a = sc.serve.async_plane;
+        assert!(a.enabled);
+        assert_eq!(a.workers, 3);
+        assert_eq!(a.min_shards, 2);
+        assert_eq!(a.max_shards, 6);
+        assert_eq!(a.max_shards_or(sc.serve.shards), 6);
+        assert_eq!(a.quantum, 2);
+        assert_eq!(a.scale_up_depth, 4);
+        assert_eq!(a.scale_down_idle, 16);
+        assert_eq!(a.scale_interval().as_micros(), 250);
+
+        // defaults: disabled, ceiling follows serve.shards
+        let plain = ConfigFile::parse("[serve]\nshards = 3").unwrap();
+        let sc = SystemConfig::from_file(&plain).unwrap();
+        assert!(!sc.serve.async_plane.enabled);
+        assert_eq!(sc.serve.async_plane.max_shards_or(sc.serve.shards), 3);
+
+        // inverted range and zero knobs fail loudly
+        let bad = ConfigFile::parse(
+            "[serve]\nshards = 2\n\n[serve.async]\nmin_shards = 4",
+        )
+        .unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad =
+            ConfigFile::parse("[serve.async]\nquantum = 0").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad =
+            ConfigFile::parse("[serve.async]\nquantun = 1").unwrap();
         assert!(SystemConfig::from_file(&bad).is_err());
     }
 

@@ -1,0 +1,172 @@
+//! Event sources: what a pending task waits *on*.
+//!
+//! The executor itself only knows "poll tasks that were woken"; these
+//! primitives are the other half of the contract — a place to park a
+//! [`Waker`] and a producer-side call that trips it.  [`Notify`] is the
+//! bare readiness cell; [`ExecQueue`] is the channel-shaped source the
+//! serve plane multiplexes on.  Both implement [`EventSource`], the
+//! seam an epoll-backed reactor can later slot into: an fd source would
+//! `register` the same way and wake from the reactor thread instead of
+//! from a producer.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::Waker;
+
+/// Anything a task can register wait-interest on.  Implementors must
+/// wake every registered waker when they become ready, and must tolerate
+/// duplicate registrations from re-polled tasks (wake-ups are permitted
+/// to be spurious; tasks re-check state after every poll).
+pub trait EventSource {
+    /// Park `waker` until the source's next readiness edge.
+    fn register(&self, waker: &Waker);
+}
+
+/// A readiness cell: tasks park wakers, producers trip them all.
+///
+/// Registration is level-meaningless — [`Notify::notify`] wakes and
+/// *forgets* the current waiter set, so a task that still isn't
+/// satisfied simply re-registers on its next poll.  Wakers are deduped
+/// by task id, so a task polled several times between notifies parks
+/// only one entry.
+#[derive(Default)]
+pub struct Notify {
+    waiters: Mutex<Vec<Waker>>,
+}
+
+impl Notify {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wake every parked task and clear the waiter set.
+    pub fn notify(&self) {
+        let drained: Vec<Waker> =
+            std::mem::take(&mut *self.waiters.lock().unwrap());
+        for w in drained {
+            w.wake();
+        }
+    }
+
+    /// Parked-waiter count (test/diagnostic view).
+    pub fn waiters(&self) -> usize {
+        self.waiters.lock().unwrap().len()
+    }
+}
+
+impl EventSource for Notify {
+    fn register(&self, waker: &Waker) {
+        let mut ws = self.waiters.lock().unwrap();
+        if !ws.iter().any(|w| w.task_id() == waker.task_id()) {
+            ws.push(waker.clone());
+        }
+    }
+}
+
+/// Result of a non-blocking [`ExecQueue::poll_pop`].
+pub enum PollPop<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// Queue open but empty; the caller's waker is parked and will fire
+    /// on the next push (or close) — return `Pending`.
+    Empty,
+    /// Closed and fully drained; no more items will ever arrive.
+    Closed,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Unbounded MPMC channel with *poll* semantics — the executor-native
+/// sibling of [`crate::serve::queue::BoundedQueue`].  Consumers never
+/// block: an empty poll parks the task's waker (registered while the
+/// queue lock is held, so a racing push cannot slip between the
+/// emptiness check and the registration).  Producers are plain method
+/// calls from any thread — submit paths, scheduler tasks, or a future
+/// reactor.
+///
+/// Unbounded is deliberate: every producer feeding one of these is
+/// already bounded upstream (per-class admission depth), so pushing can
+/// never be asked to wait, and a task-context producer must never block.
+pub struct ExecQueue<T> {
+    state: Mutex<QueueState<T>>,
+    notify: Notify,
+}
+
+impl<T> Default for ExecQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ExecQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            notify: Notify::new(),
+        }
+    }
+
+    /// Enqueue an item; `Err(item)` hands it back if the queue closed.
+    pub fn push(&self, item: T) -> std::result::Result<(), T> {
+        {
+            let mut s = self.state.lock().unwrap();
+            if s.closed {
+                return Err(item);
+            }
+            s.items.push_back(item);
+        }
+        self.notify.notify();
+        Ok(())
+    }
+
+    /// Non-blocking dequeue with waker parking (see [`PollPop`]).
+    pub fn poll_pop(&self, waker: &Waker) -> PollPop<T> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(item) = s.items.pop_front() {
+            return PollPop::Item(item);
+        }
+        if s.closed {
+            return PollPop::Closed;
+        }
+        // park under the state lock: a push serializes after this
+        // registration and is guaranteed to see the waker
+        self.notify.register(waker);
+        PollPop::Empty
+    }
+
+    /// Close the queue: pushes fail from now on, consumers drain what is
+    /// left and then observe [`PollPop::Closed`].
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.notify.notify();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Queued item count.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> EventSource for ExecQueue<T> {
+    fn register(&self, waker: &Waker) {
+        // registration outside poll_pop still holds the state lock so
+        // the push path cannot race past it
+        let _s = self.state.lock().unwrap();
+        self.notify.register(waker);
+    }
+}

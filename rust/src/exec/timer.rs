@@ -1,0 +1,188 @@
+//! Hashed timer wheel — the executor's deadline primitive.
+//!
+//! Timers drive two things in the serve plane: per-class batch
+//! *deadline flushes* ("ship the forming batch once the oldest member
+//! is `deadline_us` stale") and the autoscaler's periodic load
+//! sampling.  Both want many cheap, coarse timers, which is exactly the
+//! hashed-wheel trade-off: O(1) insert into `slot = tick mod wheel_len`
+//! and amortized O(1) expiry by walking only the slots the clock
+//! actually crossed, at the cost of `tick` granularity (timers never
+//! fire *early*, but may fire up to one tick late — fine against
+//! millisecond-scale batching deadlines).
+//!
+//! The wheel is a passive data structure (no thread of its own); the
+//! executor's timer thread drives it via [`TimerWheel::collect_due`] /
+//! [`TimerWheel::next_deadline`] under the executor's timer lock.
+
+use std::time::{Duration, Instant};
+
+/// One armed timer: fire the task `id` at (or just after) `at`.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    at: Instant,
+    id: usize,
+}
+
+/// Fixed-size hashed timer wheel over absolute [`Instant`] deadlines.
+///
+/// Entries hash into `wheel_len` slots by their deadline's tick index;
+/// entries more than one wheel revolution out simply stay in their slot
+/// across scans (they are retained by timestamp, not position), so the
+/// wheel never needs cascading levels for the serve plane's deadline
+/// range.
+#[derive(Debug)]
+pub struct TimerWheel {
+    slots: Vec<Vec<Entry>>,
+    tick: Duration,
+    origin: Instant,
+    /// Last tick fully scanned by [`TimerWheel::collect_due`].
+    cursor: u64,
+    len: usize,
+}
+
+impl TimerWheel {
+    /// A wheel of `slots` buckets at `tick` granularity (both clamped to
+    /// sane minimums: a zero tick would divide by zero, a single slot
+    /// still works but degrades to a scan).
+    pub fn new(tick: Duration, slots: usize) -> Self {
+        let tick = tick.max(Duration::from_micros(1));
+        Self {
+            slots: (0..slots.max(1)).map(|_| Vec::new()).collect(),
+            tick,
+            origin: Instant::now(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    /// Armed timer count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn tick_of(&self, at: Instant) -> u64 {
+        let ns = at.saturating_duration_since(self.origin).as_nanos();
+        (ns / self.tick.as_nanos().max(1)) as u64
+    }
+
+    /// Arm a timer for task `id` at `at`.  Returns `true` when this
+    /// deadline is now the wheel's earliest — the caller's cue to kick
+    /// the timer thread out of its current (longer) sleep.
+    pub fn insert(&mut self, at: Instant, id: usize) -> bool {
+        let earliest = self.next_deadline().map_or(true, |d| at < d);
+        // overdue (or current-tick) deadlines land in the cursor slot,
+        // which every collect_due scan covers — nothing can be missed
+        let tick = self.tick_of(at).max(self.cursor);
+        let slot = (tick % self.slots.len() as u64) as usize;
+        self.slots[slot].push(Entry { at, id });
+        self.len += 1;
+        earliest
+    }
+
+    /// Drain every timer with `at <= now` into `out`, advancing the
+    /// cursor.  Only the slots between the previous cursor and `now`'s
+    /// tick are touched (all of them at most once per call).
+    pub fn collect_due(&mut self, now: Instant, out: &mut Vec<usize>) {
+        let now_tick = self.tick_of(now).max(self.cursor);
+        if self.len == 0 {
+            self.cursor = now_tick;
+            return;
+        }
+        let n = self.slots.len() as u64;
+        // inclusive scan of [cursor, now_tick]: the cursor slot is
+        // rescanned because overdue inserts are clamped into it
+        let span = (now_tick - self.cursor).min(n - 1);
+        for t in self.cursor..=self.cursor + span {
+            let slot = (t % n) as usize;
+            let bucket = &mut self.slots[slot];
+            let mut i = 0;
+            while i < bucket.len() {
+                if bucket[i].at <= now {
+                    out.push(bucket.swap_remove(i).id);
+                    self.len -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        self.cursor = now_tick;
+    }
+
+    /// The earliest armed deadline (a full scan — the serve plane keeps
+    /// at most a handful of timers armed, so this stays cheap).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.slots
+            .iter()
+            .flat_map(|s| s.iter().map(|e| e.at))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn due_timers_fire_in_any_order_but_completely() {
+        let mut w = TimerWheel::new(Duration::from_micros(100), 8);
+        let t0 = Instant::now();
+        for id in 0..20 {
+            w.insert(t0 + Duration::from_micros(50 * id as u64), id);
+        }
+        assert_eq!(w.len(), 20);
+        let mut due = Vec::new();
+        w.collect_due(t0 + Duration::from_millis(2), &mut due);
+        due.sort_unstable();
+        assert_eq!(due, (0..20).collect::<Vec<_>>());
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn future_timers_survive_scans_and_never_fire_early() {
+        let mut w = TimerWheel::new(Duration::from_micros(100), 8);
+        let t0 = Instant::now();
+        let late = t0 + Duration::from_secs(3600);
+        w.insert(late, 7);
+        // a deadline many revolutions out shares a slot with near ones
+        w.insert(t0 + Duration::from_micros(150), 1);
+        let mut due = Vec::new();
+        w.collect_due(t0 + Duration::from_millis(1), &mut due);
+        assert_eq!(due, vec![1]);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.next_deadline(), Some(late));
+        // repeated scans walk past it without firing
+        for ms in 2..50 {
+            due.clear();
+            w.collect_due(t0 + Duration::from_millis(ms), &mut due);
+            assert!(due.is_empty(), "fired {due:?} early at +{ms} ms");
+        }
+        assert_eq!(w.len(), 1);
+    }
+
+    #[test]
+    fn overdue_insert_fires_on_next_scan() {
+        let mut w = TimerWheel::new(Duration::from_micros(100), 16);
+        let t0 = Instant::now();
+        let mut due = Vec::new();
+        // advance the cursor well past the origin first
+        w.collect_due(t0 + Duration::from_millis(10), &mut due);
+        // an already-expired deadline must still be collected
+        assert!(w.insert(t0, 3));
+        due.clear();
+        w.collect_due(t0 + Duration::from_millis(10), &mut due);
+        assert_eq!(due, vec![3]);
+    }
+
+    #[test]
+    fn insert_reports_new_earliest_deadline() {
+        let mut w = TimerWheel::new(Duration::from_micros(100), 8);
+        let t0 = Instant::now();
+        assert!(w.insert(t0 + Duration::from_millis(10), 0));
+        assert!(!w.insert(t0 + Duration::from_millis(20), 1));
+        assert!(w.insert(t0 + Duration::from_millis(5), 2));
+    }
+}

@@ -2,7 +2,12 @@
 //!
 //! Each fleet node owns a full [`serve::Server`] (admission queues,
 //! batchers, bank-sliced shard pool, metrics, trace feed) and speaks to
-//! the router exclusively through its [`NodeLink`].  The loop is
+//! the router exclusively through its [`NodeLink`].  The node is
+//! serve-plane-agnostic: with `[serve.async] enabled = true` in the
+//! fleet's system config, every node hosts the event-driven plane
+//! ([`crate::serve::async_plane`]) — DRR sensor fairness and shard
+//! autoscaling per node — behind the same `Server` submit/ticket/drain
+//! surface, so nothing in this loop or the router changes.  The loop is
 //! single-threaded and never blocks indefinitely: it alternates between
 //! polling completion tickets (forwarding each as a
 //! [`WireResponse::Completed`]) and polling the request link, sleeping

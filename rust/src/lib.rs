@@ -70,6 +70,12 @@
 //!   with every stage cached on disk by content hash so recompiles are
 //!   incremental; engines built from an artifact skip all packing and
 //!   are bit-identical to from-params engines.
+//! * [`exec`] — zero-dependency event-driven executor: cooperative
+//!   `Task` state machines multiplexed onto a small worker pool, a
+//!   hashed `TimerWheel` for deadlines and batch flushes, and the
+//!   `Waker`/`EventSource` readiness abstraction (`Notify`,
+//!   `ExecQueue`) that an epoll-backed reactor can later slot into —
+//!   the substrate under the async serve plane (`[serve.async]`).
 //! * [`serve`] — the traffic-facing layer on top of the engine: typed
 //!   requests (`Request`/`RequestBuilder`, per-sensor `Session` sequence
 //!   spaces) with a `QosClass` each, per-class bounded admission queues
@@ -106,6 +112,7 @@ pub mod dpu;
 pub mod energy;
 pub mod engine;
 pub mod error;
+pub mod exec;
 pub mod fleet;
 pub mod hw;
 pub mod isa;

@@ -75,7 +75,7 @@ use ns_lbp::engine::{BackendKind, Engine, QosClass};
 use ns_lbp::hw::{ab::AbHarness, CostModel, HwProfile};
 use ns_lbp::params::NetParams;
 use ns_lbp::sensor::Frame;
-use ns_lbp::serve::{Server, Session, Ticket};
+use ns_lbp::serve::{parse_mix, Server, Ticket};
 use ns_lbp::testing::synth_frames;
 use ns_lbp::{params, Result};
 
@@ -129,6 +129,9 @@ fn command() -> Command {
         .opt("deadline-us", "US", "serve-bench: batch deadline [µs]")
         .opt("queue-depth", "N", "serve-bench: admission-control depth")
         .opt("load", "FPS", "serve-bench: offered load (0 = unthrottled)")
+        .opt("sensors", "N",
+             "serve-bench: distinct sensor streams the frames fan out \
+              across (default: one per class×model pair)")
         .opt_repeated("route", "CLASS=BACKEND",
                       "route a QoS class to a backend, e.g. billed=architectural")
         .opt("mix", "A:B:C",
@@ -158,6 +161,8 @@ fn command() -> Command {
                it match from-params engines bit for bit")
         .flag("json", "serve-bench: emit one machine-readable JSON report")
         .flag("compare", "serve-bench: also run 1 shard, print speedup")
+        .flag("async", "serve-bench: run the event-driven serve plane \
+                        ([serve.async]: DRR fairness + shard autoscaling)")
         .flag("drill", "fleet-bench: kill fleet.drill.kill_node mid-stream \
                         and gate re-homing against the baseline pass")
         .flag("push-rollover", "fleet-bench: roll a synthetic compiled \
@@ -209,41 +214,6 @@ fn apply_engine_opts(parsed: &ns_lbp::cli::Parsed, system: &mut SystemConfig)
         system.engine.routing.apply_spec(&spec)?;
     }
     Ok(())
-}
-
-/// Parse a `--mix A:B:C` weight spec (best_effort:standard:billed) into
-/// the repeating class pattern submitted frames cycle through.
-fn parse_mix(spec: &str) -> Result<Vec<QosClass>> {
-    let parts: Vec<&str> = spec.split(':').collect();
-    if parts.len() != QosClass::COUNT {
-        return Err(ns_lbp::Error::Usage(format!(
-            "--mix expects {} ':'-separated weights \
-             (best_effort:standard:billed), got {spec:?}",
-            QosClass::COUNT
-        )));
-    }
-    let mut weights = [0usize; QosClass::COUNT];
-    for (w, part) in weights.iter_mut().zip(&parts) {
-        *w = part.trim().parse().map_err(|_| {
-            ns_lbp::Error::Usage(format!("--mix: bad weight {part:?}"))
-        })?;
-    }
-    let max = weights.iter().copied().max().unwrap_or(0);
-    if max == 0 {
-        return Err(ns_lbp::Error::Usage(
-            "--mix needs at least one non-zero weight".into(),
-        ));
-    }
-    // round-robin interleave so classes blend rather than run in blocks
-    let mut pattern = Vec::new();
-    for i in 0..max {
-        for (ci, &w) in weights.iter().enumerate() {
-            if i < w {
-                pattern.push(QosClass::ALL[ci]);
-            }
-        }
-    }
-    Ok(pattern)
 }
 
 /// Resolve `--dataset` / `--artifacts` and keep the engine's artifact
@@ -374,17 +344,27 @@ fn run_pipeline(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig)
     Ok(())
 }
 
+/// Outcome of one [`serve_replay`] pass: the drained report plus the
+/// async-plane counters (when that plane ran) and the per-sensor
+/// completed-count spread the soak fairness gate checks.
+struct ServeRun {
+    report: ns_lbp::serve::MetricsReport,
+    async_stats: Option<ns_lbp::serve::AsyncStats>,
+    fairness_spread: u64,
+}
+
 /// Replay `frames` through one server instance at `load` offered fps
-/// (0 = unthrottled), cycling frames through the `mix` class pattern and
+/// (0 = unthrottled), cycling frames through the `mix` class pattern,
 /// round-robin across the served models (the from-params default plus
-/// one pushed model per `--model-artifact`) — one session (= one sensor
-/// stream) per (class, model) pair.  Rejected submissions are retried so
-/// every frame is offered; tickets shed by drop-oldest admission or
+/// one pushed model per `--model-artifact`), and round-robin across
+/// `sensors` distinct sensor streams.  Rejected submissions are retried
+/// so every frame is offered; tickets shed by drop-oldest admission or
 /// deadline expiry count as drops, not errors.
+#[allow(clippy::too_many_arguments)]
 fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
                 shards: usize, frames: &[Frame], load: f64,
-                mix: &[QosClass], models: &[CompiledModel])
-                -> Result<ns_lbp::serve::metrics::MetricsReport> {
+                mix: &[QosClass], models: &[CompiledModel], sensors: usize)
+                -> Result<ServeRun> {
     let mut system = system.clone();
     system.serve.shards = shards;
     let server = Server::start(
@@ -410,15 +390,11 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
         server.push_model(i as u32 + 1, model)?;
     }
     let n_models = models.len() + 1;
-    let sessions: Vec<Session<'_>> = (0..n_models)
-        .flat_map(|mid| QosClass::ALL.iter().map(move |&class| (mid, class)))
-        .map(|(mid, class)| {
-            server
-                .session((mid * QosClass::COUNT + class.index()) as u32)
-                .with_class(class)
-                .with_model(mid as u32)
-        })
-        .collect();
+    let sensors = sensors.max(1);
+    // the caller-side seq ledger advances only on accepted admissions,
+    // so retried rejections never punch holes in a sensor's seq space
+    let mut seqs: std::collections::HashMap<u32, u64> =
+        std::collections::HashMap::new();
     let t0 = std::time::Instant::now();
     let mut tickets: Vec<Ticket> = Vec::with_capacity(frames.len());
     for (i, frame) in frames.iter().enumerate() {
@@ -429,11 +405,20 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
                 std::thread::sleep(due - now);
             }
         }
-        let session = &sessions[(i % n_models) * QosClass::COUNT
-                                + mix[i % mix.len()].index()];
+        let class = mix[i % mix.len()];
+        let model = (i % n_models) as u32;
+        let sensor = (i % sensors) as u32;
         loop {
-            match session.submit(frame.clone()) {
+            let seq = *seqs.get(&sensor).unwrap_or(&0);
+            let request = ns_lbp::serve::Request::builder(
+                frame.clone().with_seq(seq))
+                .sensor_id(sensor)
+                .class(class)
+                .model(model)
+                .build();
+            match server.submit(request) {
                 Ok(t) => {
+                    seqs.insert(sensor, seq + 1);
                     tickets.push(t);
                     break;
                 }
@@ -445,12 +430,16 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
             }
         }
     }
-    drop(sessions);
     let mut mismatches = 0u64;
     let mut cross_mismatches = 0u64;
+    // every offered sensor starts at zero so a fully-shed stream still
+    // counts against the fairness spread
+    let mut completed: std::collections::HashMap<u32, u64> =
+        seqs.keys().map(|&s| (s, 0)).collect();
     for t in tickets {
         match t.wait() {
             Ok(r) => {
+                *completed.entry(r.sensor_id).or_insert(0) += 1;
                 mismatches += r.report.telemetry.arch_mismatches;
                 cross_mismatches += r.report.telemetry.cross_check_mismatches;
             }
@@ -460,6 +449,15 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
             Err(e) => return Err(e),
         }
     }
+    // round-robin offered every sensor within one frame of every other,
+    // so completed counts may spread only by that skew plus drops; DRR
+    // keeps the drop side bounded per sensor instead of bursty
+    let fairness_spread = match (completed.values().min(),
+                                 completed.values().max()) {
+        (Some(&lo), Some(&hi)) => hi - lo,
+        _ => 0,
+    };
+    let async_stats = server.async_stats();
     let report = server.drain()?;
     if mismatches != 0 {
         return Err(ns_lbp::Error::Coordinator(format!(
@@ -471,17 +469,36 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
             "{cross_mismatches} cross-check divergences under serve"
         )));
     }
-    Ok(report)
+    Ok(ServeRun { report, async_stats, fairness_spread })
+}
+
+/// Render the async-plane counters as a JSON object (or `null` for the
+/// thread-per-stage plane).
+fn async_json(stats: &Option<ns_lbp::serve::AsyncStats>) -> String {
+    match stats {
+        None => "null".into(),
+        Some(a) => format!(
+            "{{\"workers\":{},\"min_shards\":{},\"max_shards\":{},\
+             \"active_shards\":{},\"shards_high_water\":{},\
+             \"scale_up_events\":{},\"scale_down_events\":{}}}",
+            a.workers, a.min_shards, a.max_shards, a.active_shards,
+            a.shards_high_water, a.scale_up_events, a.scale_down_events
+        ),
+    }
 }
 
 fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()> {
     let frames_n: usize = parsed.opt_parse("frames", 256)?;
     let seed: u64 = parsed.opt_parse("seed", 7)?;
     let load: f64 = parsed.opt_parse("load", 0.0)?;
+    let sensors_opt: usize = parsed.opt_parse("sensors", 0)?;
     let json = parsed.flag("json");
     let mix = parse_mix(parsed.opt("mix").unwrap_or("0:1:0"))?;
 
     let mut system = system;
+    if parsed.flag("async") {
+        system.serve.async_plane.enabled = true;
+    }
     if let Some(path) = parsed.opt("trace") {
         // --trace switches the obs pipeline on and points the feed at
         // FILE (its Chrome twin lands next to it); with --compare the
@@ -529,21 +546,32 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
         .map(CompiledModel::load)
         .collect::<Result<_>>()?;
     let frames = synth_frames(&params, frames_n, seed)?;
+    // default stream fan-out keeps the historical one-stream-per
+    // (class, model) pair shape when --sensors isn't given
+    let sensors = if sensors_opt == 0 {
+        (models.len() + 1) * QosClass::COUNT
+    } else {
+        sensors_opt
+    };
     let mix_banner: Vec<String> =
         mix.iter().map(|c| c.as_str().to_string()).collect();
     if !json {
         println!(
-            "offered: {} frames at {} | backend {} | mix [{}] | shards {} | \
-             batch ≤{} | deadline {} µs | queue depth {}",
+            "offered: {} frames at {} over {} sensors | backend {} | \
+             mix [{}] | shards {} | batch ≤{} | deadline {} µs | \
+             queue depth {}{}",
             frames.len(),
             if load > 0.0 { format!("{load:.0} fps") }
             else { "full rate".into() },
+            sensors,
             engine_banner(&system),
             mix_banner.join(","),
             system.serve.shards,
             system.serve.max_batch,
             system.serve.batch_deadline_us,
             system.serve.queue_depth,
+            if system.serve.async_plane.enabled { " | async plane" }
+            else { "" },
         );
         for (i, m) in models.iter().enumerate() {
             println!(
@@ -560,17 +588,30 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
     };
     let mut results = Vec::new();
     for &n in &shard_counts {
-        let report = serve_replay(&params, &system, arch, n, &frames, load,
-                                  &mix, &models)?;
+        let run = serve_replay(&params, &system, arch, n, &frames, load,
+                               &mix, &models, sensors)?;
         if !json {
-            report.print(&format!("{n} shard(s)"));
+            run.report.print(&format!("{n} shard(s)"));
             println!(
                 "  modeled   : {:.0} fps on the accelerator's {}-way bank \
                  split",
-                report.modeled_fps(n), n
+                run.report.modeled_fps(n), n
             );
+            println!(
+                "  fairness  : per-sensor completed-frame spread {}",
+                run.fairness_spread
+            );
+            if let Some(a) = &run.async_stats {
+                println!(
+                    "  async     : {} workers | shards {}..{} (high water \
+                     {}, now {}) | scale +{} / -{}",
+                    a.workers, a.min_shards, a.max_shards,
+                    a.shards_high_water, a.active_shards,
+                    a.scale_up_events, a.scale_down_events
+                );
+            }
         }
-        results.push((n, report));
+        results.push((n, run));
     }
     if json {
         // exactly one JSON document on stdout, so
@@ -589,22 +630,26 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
             })
             .collect();
         let mut s = format!(
-            "{{\"frames\":{},\"backend\":\"{}\",\"routes\":{{{}}},\
-             \"load_fps\":{},\"results\":[",
+            "{{\"frames\":{},\"sensors\":{},\"backend\":\"{}\",\
+             \"routes\":{{{}}},\"load_fps\":{},\"results\":[",
             frames.len(),
+            sensors,
             system.engine.backend,
             routes.join(","),
             load
         );
-        for (i, (n, r)) in results.iter().enumerate() {
+        for (i, (n, run)) in results.iter().enumerate() {
             if i > 0 {
                 s.push(',');
             }
             s.push_str(&format!(
-                "{{\"shards\":{},\"modeled_fps\":{},\"report\":{}}}",
+                "{{\"shards\":{},\"modeled_fps\":{},\"fairness_spread\":{},\
+                 \"async\":{},\"report\":{}}}",
                 n,
-                r.modeled_fps(*n),
-                r.to_json()
+                run.report.modeled_fps(*n),
+                run.fairness_spread,
+                async_json(&run.async_stats),
+                run.report.to_json()
             ));
         }
         s.push_str("]}");
@@ -613,9 +658,9 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
         println!(
             "speedup: {n2} shards vs {n1} → {:.2}x wall throughput \
              ({:.1} vs {:.1} fps)",
-            r2.throughput_fps / r1.throughput_fps.max(1e-12),
-            r2.throughput_fps,
-            r1.throughput_fps
+            r2.report.throughput_fps / r1.report.throughput_fps.max(1e-12),
+            r2.report.throughput_fps,
+            r1.report.throughput_fps
         );
     }
     Ok(())

@@ -61,8 +61,22 @@
 //! `[serve.best_effort]` / `[serve.standard]` / `[serve.billed]`
 //! (per class) of the system config ([`crate::config::ServeConfig`]);
 //! `ns-lbp serve-bench` exercises the whole stack from the CLI.
+//!
+//! # The async plane
+//!
+//! With `[serve.async] enabled = true` the same lifecycle runs on the
+//! event-driven plane instead of dedicated threads: admission lands in
+//! per-sensor deficit-round-robin lanes ([`fairness`]), batch formation
+//! and shard dispatch are cooperative tasks on a small
+//! [`crate::exec::Executor`] pool ([`async_plane`]), and the active
+//! shard count follows offered load between `min_shards` and
+//! `max_shards`.  Admission errors, trace spans, metrics, and — because
+//! sharding never changes logits — the outputs themselves are identical
+//! across the two planes; only the concurrency substrate differs.
 
+pub mod async_plane;
 pub mod batcher;
+pub mod fairness;
 pub mod metrics;
 pub mod queue;
 pub mod shard;
@@ -80,7 +94,9 @@ use crate::params::NetParams;
 use crate::sensor::Frame;
 
 pub use crate::engine::QosClass;
+pub use async_plane::AsyncStats;
 pub use batcher::{BatchPolicy, Batcher, FlushReason};
+pub use fairness::DrrScheduler;
 pub use metrics::{percentile_ns, ClassReport, Metrics, MetricsReport,
                   ModelReport};
 pub use queue::{BoundedQueue, PopResult, PushError};
@@ -356,6 +372,9 @@ pub struct Server {
     metrics: Arc<Metrics>,
     batchers: Vec<std::thread::JoinHandle<()>>,
     pool: Option<ShardPool>,
+    /// The event-driven plane, when `[serve.async] enabled = true`; the
+    /// thread-per-stage fields above stay idle in that mode.
+    async_plane: Option<async_plane::AsyncPlane>,
     started: Instant,
     shards: usize,
     serve: ServeConfig,
@@ -399,9 +418,54 @@ impl Server {
         let batches = Arc::new(BoundedQueue::new(serve.shards * 2));
         let metrics = Arc::new(Metrics::default());
 
+        // the async plane's shared state exists before the trace session
+        // so the gauge sampler below can observe its lanes
+        let shared = serve
+            .async_plane
+            .enabled
+            .then(|| async_plane::AsyncShared::new(&serve));
+
         // tracing (off by default): the exporter session owns the ring
         // and the sink files; its sampler observes the live queues
-        let trace = {
+        let trace = if let Some(sh) = &shared {
+            let sh = sh.clone();
+            let gauge_metrics = Arc::clone(&metrics);
+            TraceSession::start(&config.system.obs, move |t| {
+                let ts = t.now();
+                for class in QosClass::ALL {
+                    t.emit(TraceEvent {
+                        kind: EventKind::Gauge,
+                        ts_ns: ts,
+                        class: Some(class),
+                        label: "queue_depth",
+                        value: sh.lanes[class.index()].len() as f64,
+                        ..TraceEvent::default()
+                    });
+                    t.emit(TraceEvent {
+                        kind: EventKind::Gauge,
+                        ts_ns: ts,
+                        class: Some(class),
+                        label: "in_flight",
+                        value: gauge_metrics.in_flight(class) as f64,
+                        ..TraceEvent::default()
+                    });
+                }
+                t.emit(TraceEvent {
+                    kind: EventKind::Gauge,
+                    ts_ns: ts,
+                    label: "batch_queue_depth",
+                    value: sh.batch_depth() as f64,
+                    ..TraceEvent::default()
+                });
+                t.emit(TraceEvent {
+                    kind: EventKind::Gauge,
+                    ts_ns: ts,
+                    label: "active_shards",
+                    value: sh.active_shards() as f64,
+                    ..TraceEvent::default()
+                });
+            })?
+        } else {
             let queues: Vec<Arc<BoundedQueue<QueuedRequest>>> =
                 class_queues.iter().map(Arc::clone).collect();
             let batches_q = Arc::clone(&batches);
@@ -436,6 +500,28 @@ impl Server {
             })?
         };
         let tracer = trace.tracer();
+
+        if let Some(sh) = shared {
+            // event-driven plane: class schedulers, dispatch tasks, and
+            // the autoscaler replace the batcher threads and shard pool
+            let plane = async_plane::AsyncPlane::start(
+                sh, &default_model, &config, &backends, &metrics, &tracer)?;
+            return Ok(Self {
+                class_queues,
+                batches,
+                metrics,
+                batchers: Vec::new(),
+                pool: None,
+                async_plane: Some(plane),
+                started: Instant::now(),
+                shards: serve.shards,
+                serve,
+                models: RwLock::new(BTreeMap::from([(0u32, default_model)])),
+                sensors: Mutex::new(BTreeMap::new()),
+                tracer,
+                trace: Some(trace),
+            });
+        }
 
         // spawn() validates the shard slicing against the cache geometry
         // (and every routed backend's availability) before any batcher
@@ -573,6 +659,7 @@ impl Server {
             metrics,
             batchers,
             pool: Some(pool),
+            async_plane: None,
             started: Instant::now(),
             shards: serve.shards,
             serve,
@@ -684,6 +771,49 @@ impl Server {
             enqueued_at,
             slot: Arc::clone(&slot),
         };
+        if let Some(plane) = &self.async_plane {
+            // same verdicts, metrics, spans, and error text as the
+            // threaded path below — only the queue structure differs
+            // (per-sensor DRR lanes instead of one FIFO per class)
+            return match plane.admit(class, queued) {
+                async_plane::Admit::Accepted => {
+                    self.metrics.record_accepted(class);
+                    self.trace_admission(EventKind::Submit, class,
+                                         sensor_id, seq, model_id, "");
+                    Ok(Ticket { slot })
+                }
+                async_plane::Admit::AcceptedDisplacing(old) => {
+                    self.metrics.record_accepted(class);
+                    self.trace_admission(EventKind::Submit, class,
+                                         sensor_id, seq, model_id, "");
+                    self.metrics.record_dropped(class, old.model_id);
+                    self.trace_admission(EventKind::Drop, class,
+                                         old.sensor_id, old.frame.seq,
+                                         old.model_id, "displaced");
+                    old.slot.fulfill(Err(Error::Dropped(
+                        "displaced by a fresher frame (drop-oldest \
+                         admission)"
+                            .into(),
+                    )));
+                    Ok(Ticket { slot })
+                }
+                async_plane::Admit::Full => {
+                    self.metrics.record_rejected(class);
+                    self.trace_admission(EventKind::Reject, class,
+                                         sensor_id, seq, model_id,
+                                         "queue_full");
+                    Err(Error::Serve(format!(
+                        "admission rejected: {class} queue at configured \
+                         depth {}",
+                        plane.depth(class)
+                    )))
+                }
+                async_plane::Admit::Closed => {
+                    Err(Error::Serve("server is draining".into()))
+                }
+            };
+        }
+
         let queue = &self.class_queues[class.index()];
         if knobs.drop_oldest {
             match queue.push_dropping_oldest(queued) {
@@ -756,12 +886,24 @@ impl Server {
         &self.metrics
     }
 
+    /// Autoscale/worker counters of the async plane, or `None` when the
+    /// server runs the thread-per-stage plane.
+    pub fn async_stats(&self) -> Option<AsyncStats> {
+        self.async_plane.as_ref().map(|p| p.stats())
+    }
+
     /// Graceful drain: stop admission, flush every queued request through
     /// the per-class batchers and shards, join all threads, and return
     /// the final report.
     pub fn drain(mut self) -> Result<MetricsReport> {
         for q in &self.class_queues {
             q.close();
+        }
+        if let Some(mut plane) = self.async_plane.take() {
+            // closing the lanes cascades: schedulers flush and retire,
+            // the last one closes the batch queue, dispatch tasks drain
+            // it, the autoscaler observes the closure
+            plane.drain()?;
         }
         for b in std::mem::take(&mut self.batchers) {
             b.join()
@@ -790,6 +932,43 @@ impl Drop for Server {
         }
         self.batches.close();
     }
+}
+
+/// Parse a `--mix A:B:C` weight spec (best_effort:standard:billed) into
+/// the repeating class pattern submitted frames cycle through.  Rejects
+/// specs with the wrong arity, non-numeric weights, and the all-zero
+/// mix (which would describe no traffic at all).
+pub fn parse_mix(spec: &str) -> Result<Vec<QosClass>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.len() != QosClass::COUNT {
+        return Err(Error::Usage(format!(
+            "--mix expects {} ':'-separated weights \
+             (best_effort:standard:billed), got {spec:?}",
+            QosClass::COUNT
+        )));
+    }
+    let mut weights = [0usize; QosClass::COUNT];
+    for (w, part) in weights.iter_mut().zip(&parts) {
+        *w = part.trim().parse().map_err(|_| {
+            Error::Usage(format!("--mix: bad weight {part:?}"))
+        })?;
+    }
+    let max = weights.iter().copied().max().unwrap_or(0);
+    if max == 0 {
+        return Err(Error::Usage(
+            "--mix needs at least one non-zero weight".into(),
+        ));
+    }
+    // round-robin interleave so classes blend rather than run in blocks
+    let mut pattern = Vec::new();
+    for i in 0..max {
+        for (ci, &w) in weights.iter().enumerate() {
+            if i < w {
+                pattern.push(QosClass::ALL[ci]);
+            }
+        }
+    }
+    Ok(pattern)
 }
 
 #[cfg(test)]
@@ -982,6 +1161,29 @@ mod tests {
         assert_eq!(report.failed, 0);
         let m1 = report.model(QosClass::Standard, 1).unwrap();
         assert_eq!(m1.completed, 12);
+    }
+
+    #[test]
+    fn parse_mix_validates_and_interleaves() {
+        // weights round-robin so classes blend rather than run in blocks
+        assert_eq!(
+            parse_mix("1:2:1").unwrap(),
+            vec![QosClass::BestEffort, QosClass::Standard, QosClass::Billed,
+                 QosClass::Standard]
+        );
+        assert_eq!(parse_mix("0:1:0").unwrap(), vec![QosClass::Standard]);
+        assert_eq!(parse_mix(" 2 : 0 : 0 ").unwrap().len(), 2);
+        // wrong arity names the expected form
+        let err = parse_mix("1:2").unwrap_err();
+        assert!(err.to_string().contains("best_effort:standard:billed"),
+                "{err}");
+        // junk weights, the all-zero mix, and empty specs are usage
+        // errors, never panics or silently empty patterns
+        for bad in ["1:2:3:4", "a:1:0", "1: :0", "", "0:0:0", "-1:1:0",
+                    "1:2:"] {
+            let err = parse_mix(bad).unwrap_err();
+            assert!(matches!(err, Error::Usage(_)), "{bad:?} -> {err}");
+        }
     }
 
     #[test]

@@ -17,6 +17,14 @@
 //! model stay prebuilt and pinned.  A cache miss builds the engine from
 //! the batch's pinned [`ModelEntry`] — all packing already done at
 //! compile time, so a build is table wiring, not bit-plane transposes.
+//!
+//! The per-batch dispatch logic lives in `ShardWorker`, shared by two
+//! drivers: the thread-per-shard pool below (one dedicated OS thread
+//! blocking on the batch queue) and the async plane's dispatch tasks
+//! ([`crate::serve::async_plane`]), where the same worker is polled by
+//! the executor and the shard count autoscales.  Both produce
+//! bit-identical logits — the worker is the single source of truth for
+//! what "dispatch a batch" means.
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -66,34 +74,26 @@ impl ShardPool {
                  batches: &Arc<BoundedQueue<Batch>>, metrics: &Arc<Metrics>,
                  tracer: &Tracer)
                  -> Result<Self> {
-        let model_cache = base.system.serve.model_cache.max(1);
-        let mut engine_sets = Vec::with_capacity(count);
+        let mut shard_workers = Vec::with_capacity(count);
         for index in 0..count {
-            let config = EngineConfig {
-                shard: Some(ShardSlice { index, count }),
-                ..base.clone()
-            };
-            let mut engines = Vec::with_capacity(backends.len());
-            for &kind in backends {
-                let mut engine =
-                    build_model_engine(default_model, &config, kind)?;
-                engine.set_tracer(tracer.clone());
-                engines.push((kind, engine));
-            }
-            engine_sets.push((config, engines));
+            shard_workers.push(ShardWorker::build(
+                default_model, base, ShardSlice { index, count }, backends,
+                tracer,
+            )?);
         }
-        let workers = engine_sets
+        let workers = shard_workers
             .into_iter()
             .enumerate()
-            .map(|(index, (config, engines))| {
+            .map(|(index, mut worker)| {
                 let batches = Arc::clone(batches);
                 let metrics = Arc::clone(metrics);
                 let tracer = tracer.clone();
                 std::thread::Builder::new()
                     .name(format!("nslbp-shard-{index}"))
                     .spawn(move || {
-                        shard_main(index, engines, config, model_cache,
-                                   &batches, &metrics, &tracer)
+                        while let Some(batch) = batches.pop() {
+                            worker.dispatch(batch, &metrics, &tracer);
+                        }
                     })
                     .map_err(Error::Io)
             })
@@ -173,26 +173,69 @@ fn cached_engine<'c>(cache: &'c mut Vec<CachedEngine>,
     Ok(&mut cache[last].engine)
 }
 
-fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
-              config: EngineConfig, model_cache: usize,
-              batches: &BoundedQueue<Batch>, metrics: &Metrics,
-              tracer: &Tracer) {
-    // dispatch buffers persist across batches (like the backends' scratch
-    // arenas): the steady-state loop reuses them instead of reallocating
-    // per batch
-    let mut frames: Vec<Frame> = Vec::new();
-    let mut shells = Vec::new();
-    let mut cache: Vec<CachedEngine> = Vec::new();
-    let mut tick: u64 = 0;
-    while let Some(batch) = batches.pop() {
+/// One shard's dispatch state: its pinned default-model engines, its
+/// artifact-engine LRU, and the persistent scratch buffers the
+/// steady-state loop reuses instead of reallocating per batch.
+///
+/// The worker is *driver-agnostic*: [`ShardWorker::dispatch`] is one
+/// synchronous batch → fulfilled-slots step, equally at home on a
+/// dedicated thread (blocking queue pop around it) or inside an
+/// executor task's poll.
+pub(crate) struct ShardWorker {
+    index: usize,
+    engines: Vec<(BackendKind, Engine)>,
+    config: EngineConfig,
+    model_cache: usize,
+    frames: Vec<Frame>,
+    shells: Vec<(u32, u64, Instant, super::ResponseSlot)>,
+    cache: Vec<CachedEngine>,
+    tick: u64,
+}
+
+impl ShardWorker {
+    /// Build the pinned engine set for `slice` — one engine per routed
+    /// backend, each seeing only its disjoint bank slice.  The async
+    /// plane passes `slice.count = max_shards` for every worker so the
+    /// slices stay disjoint (and logits stay identical) no matter how
+    /// many shards are currently active.
+    pub(crate) fn build(default_model: &Arc<ModelEntry>,
+                        base: &EngineConfig, slice: ShardSlice,
+                        backends: &[BackendKind], tracer: &Tracer)
+                        -> Result<Self> {
+        let config = EngineConfig { shard: Some(slice), ..base.clone() };
+        let mut engines = Vec::with_capacity(backends.len());
+        for &kind in backends {
+            let mut engine = build_model_engine(default_model, &config, kind)?;
+            engine.set_tracer(tracer.clone());
+            engines.push((kind, engine));
+        }
+        Ok(Self {
+            index: slice.index,
+            model_cache: base.system.serve.model_cache.max(1),
+            engines,
+            config,
+            frames: Vec::new(),
+            shells: Vec::new(),
+            cache: Vec::new(),
+            tick: 0,
+        })
+    }
+
+    /// Dispatch one batch: shed expired members, resolve the engine,
+    /// run one whole-batch `infer_batch`, and fulfill every member's
+    /// response slot (success or failure — no slot is ever left
+    /// dangling).
+    pub(crate) fn dispatch(&mut self, batch: Batch, metrics: &Metrics,
+                           tracer: &Tracer) {
         let Batch { class, backend, model_id, model, batch_id, requests } =
             batch;
+        let index = self.index;
 
         // shed requests whose per-request deadline expired while queued:
         // the caller asked for freshness, not a stale answer
         let now = Instant::now();
-        frames.clear();
-        shells.clear();
+        self.frames.clear();
+        self.shells.clear();
         for req in requests {
             let expired = req
                 .deadline
@@ -219,33 +262,35 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                 ))));
             } else {
                 let seq = req.frame.seq;
-                frames.push(req.frame);
-                shells.push((req.sensor_id, seq, req.enqueued_at, req.slot));
+                self.frames.push(req.frame);
+                self.shells
+                    .push((req.sensor_id, seq, req.enqueued_at, req.slot));
             }
         }
-        if frames.is_empty() {
-            continue; // fully-expired batch: nothing was dispatched
+        if self.frames.is_empty() {
+            return; // fully-expired batch: nothing was dispatched
         }
         metrics.record_batch();
-        let batch_size = frames.len();
+        let batch_size = self.frames.len();
 
         // resolve the engine: default-model batches hit the prebuilt,
         // pinned per-backend set; artifact batches go through the
         // bounded LRU, building from the pinned entry on a miss
-        tick += 1;
+        self.tick += 1;
         let engine = if model.version == 0 {
-            engines
+            self.engines
                 .iter_mut()
                 .find(|(kind, _)| *kind == backend)
                 .map(|(_, engine)| engine)
                 .expect("batch routed to a backend this shard does not host")
         } else {
-            match cached_engine(&mut cache, &model, backend, &config,
-                                model_cache, tick, tracer) {
+            match cached_engine(&mut self.cache, &model, backend,
+                                &self.config, self.model_cache, self.tick,
+                                tracer) {
                 Ok(engine) => engine,
                 Err(e) => {
                     let msg = e.to_string();
-                    for (sensor_id, seq, _, slot) in shells.drain(..) {
+                    for (sensor_id, seq, _, slot) in self.shells.drain(..) {
                         metrics.record_failure(class, model_id);
                         if tracer.enabled() {
                             tracer.emit(TraceEvent {
@@ -265,7 +310,7 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                             "engine build for model {model_id} failed: {msg}"
                         ))));
                     }
-                    continue;
+                    return;
                 }
             }
         };
@@ -273,8 +318,8 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
         // one whole-batch dispatch — the engine (and its cross-check)
         // sees the entire batch at once
         let dispatch_start = Instant::now();
-        match engine.infer_batch(&frames) {
-            Ok(out) if out.frames.len() == shells.len() => {
+        match engine.infer_batch(&self.frames) {
+            Ok(out) if out.frames.len() == self.shells.len() => {
                 if tracer.enabled() {
                     // dispatch span with the batch's telemetry energy
                     // rolled up into the paper's stage decomposition
@@ -299,7 +344,7 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                     });
                 }
                 for (report, (sensor_id, seq, enqueued_at, slot)) in
-                    out.frames.into_iter().zip(shells.drain(..))
+                    out.frames.into_iter().zip(self.shells.drain(..))
                 {
                     let latency = enqueued_at.elapsed();
                     metrics.record_completion(class, model_id, latency,
@@ -338,9 +383,9 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
                 let msg = format!(
                     "backend returned {} outputs for a {}-frame batch",
                     out.frames.len(),
-                    shells.len()
+                    self.shells.len()
                 );
-                for (sensor_id, seq, _, slot) in shells.drain(..) {
+                for (sensor_id, seq, _, slot) in self.shells.drain(..) {
                     metrics.record_failure(class, model_id);
                     if tracer.enabled() {
                         tracer.emit(TraceEvent {
@@ -361,7 +406,7 @@ fn shard_main(index: usize, mut engines: Vec<(BackendKind, Engine)>,
             }
             Err(e) => {
                 let msg = e.to_string();
-                for (sensor_id, seq, _, slot) in shells.drain(..) {
+                for (sensor_id, seq, _, slot) in self.shells.drain(..) {
                     metrics.record_failure(class, model_id);
                     if tracer.enabled() {
                         tracer.emit(TraceEvent {

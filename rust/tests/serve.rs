@@ -435,6 +435,71 @@ fn traced_serve_feed_is_balanced_and_matches_report() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The async plane is an execution strategy, not a math change: the same
+/// frames through the event-driven plane (small worker pool, DRR
+/// fairness, autoscaling shard pool) and through the thread-per-stage
+/// plane yield bit-identical logits per (sensor, seq) — even though the
+/// async run may grow and shrink its engine pool mid-stream.
+#[test]
+fn async_plane_logits_bit_identical_to_threaded() {
+    use std::collections::BTreeMap;
+
+    let (params, frames) = synth_frames(16, 55);
+    let arch = ArchSim { lbp: true, mlp: false, early_exit: false };
+    let sensors = 4u32;
+    let run = |event_driven: bool| -> BTreeMap<(u32, u64), (Vec<f32>, usize)> {
+        let mut config = CoordinatorConfig { arch, ..Default::default() };
+        config.system.serve.shards = 2;
+        config.system.serve.max_batch = 4;
+        config.system.serve.batch_deadline_us = 200;
+        config.system.serve.queue_depth = 64;
+        if event_driven {
+            config.system.serve.async_plane.enabled = true;
+            config.system.serve.async_plane.workers = 2;
+            config.system.serve.async_plane.min_shards = 1;
+            config.system.serve.async_plane.max_shards = 4;
+        }
+        let server = Server::start(params.clone(), config).unwrap();
+        // explicit per-sensor seq stamping, so both planes key responses
+        // identically no matter how batches interleave
+        let mut seqs = vec![0u64; sensors as usize];
+        let tickets: Vec<_> = frames
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                let s = i as u32 % sensors;
+                let seq = seqs[s as usize];
+                seqs[s as usize] += 1;
+                server
+                    .submit(Request::builder(f.clone().with_seq(seq))
+                        .sensor_id(s)
+                        .build())
+                    .unwrap()
+            })
+            .collect();
+        let mut out = BTreeMap::new();
+        for t in tickets {
+            let r = t.wait().unwrap();
+            out.insert((r.sensor_id, r.seq()),
+                       (r.report.logits.clone(), r.predicted()));
+        }
+        let report = server.drain().unwrap();
+        assert_eq!(report.completed, frames.len() as u64);
+        assert_eq!(report.dropped + report.rejected + report.failed, 0);
+        assert_eq!(report.arch_mismatches, 0);
+        out
+    };
+    let threaded = run(false);
+    let evented = run(true);
+    assert_eq!(threaded.len(), frames.len());
+    assert_eq!(evented.len(), frames.len());
+    for (key, (logits, predicted)) in &threaded {
+        let (ev_logits, ev_predicted) = &evented[key];
+        assert_eq!(logits, ev_logits, "logits diverge at {key:?}");
+        assert_eq!(predicted, ev_predicted, "argmax diverges at {key:?}");
+    }
+}
+
 /// A server dropped without `drain()` orphans whatever was still queued;
 /// `Ticket::wait_timeout` bounds the wait instead of blocking forever.
 #[test]

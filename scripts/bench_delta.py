@@ -10,6 +10,8 @@ covering every trajectory artifact:
 * BENCH_hotpath.json — bench_harness schema: per-case median ns,
 * BENCH_serve.json   — serve-bench schema: per-shard-count throughput,
   p95 latency, energy per frame,
+* BENCH_serve_async.json — same schema from the async-plane soak
+  (EXPERIMENTS.md §Async-serve),
 * BENCH_fleet.json   — fleet-bench schema: baseline/drill pass latency
   and completion counts,
 * AB_energy.json     — A/B harness schema: per-arm energy/time/TOPS-W.
@@ -126,7 +128,8 @@ def main():
 
     hard = []
     for name in ("BENCH_hotpath.json", "BENCH_serve.json",
-                 "BENCH_fleet.json", "AB_energy.json"):
+                 "BENCH_serve_async.json", "BENCH_fleet.json",
+                 "AB_energy.json"):
         if name not in zf.namelist():
             if os.path.exists(name):
                 # a newly introduced series: this run produced it but the

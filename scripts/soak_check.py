@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Validate a `serve-bench --async --json` soak document
+(see EXPERIMENTS.md §Async-serve).
+
+Usage: soak_check.py BENCH_serve_async.json [--sensors N]
+           [--max-spread K] [--p99-budget-ms MS] [--require-autoscale]
+
+Checks, in order:
+
+1. the document parses and carries the serve-bench schema
+   (`frames`/`sensors`/`results`, each result a `report`);
+2. lifecycle balance after drain, per result and per QoS class:
+   accepted == completed + dropped + failed (nothing in flight, nothing
+   double-counted), and something actually completed;
+3. zero billed-frame loss: the billed class sheds nothing voluntarily
+   or otherwise (dropped == failed == 0, completed == accepted);
+4. correctness riders: no architectural/functional mismatches and no
+   cross-check mismatches survived the soak;
+5. fairness: per-sensor completed-frame spread (max - min across all
+   offered streams) within `--max-spread` — the end-to-end deficit-
+   round-robin bound;
+6. p99 bounded: end-to-end p99 latency within `--p99-budget-ms` (a
+   soak that completes by queueing unboundedly proves nothing);
+7. with `--require-autoscale`: the async plane ran (`async` non-null),
+   its worker pool is real (workers >= 1), the active shard count sits
+   inside [min_shards, max_shards] with a consistent high water, and
+   load actually grew the pool at least once (scale_up_events >= 1).
+
+Exit 0 on a valid soak, 1 with a diagnostic on the first violated
+check.  `--sensors N` additionally pins the document's stream fan-out
+(CI runs the 100k-sensor soak with it).
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"soak check: FAIL: {msg}")
+    sys.exit(1)
+
+
+def class_counts(report, name):
+    for c in report.get("per_class", []):
+        if c["class"] == name:
+            return c
+    return None
+
+
+def check_balance(tag, report):
+    acc, comp = report["accepted"], report["completed"]
+    drop, failed = report["dropped"], report["failed"]
+    if acc != comp + drop + failed:
+        fail(f"{tag}: lifecycle imbalance: accepted {acc} != "
+             f"completed {comp} + dropped {drop} + failed {failed}")
+    if comp == 0:
+        fail(f"{tag}: nothing completed — the soak did no work")
+    for c in report.get("per_class", []):
+        if c["accepted"] != c["completed"] + c["dropped"] + c["failed"]:
+            fail(f"{tag}: class {c['class']} imbalance: "
+                 f"accepted {c['accepted']} != completed {c['completed']} "
+                 f"+ dropped {c['dropped']} + failed {c['failed']}")
+
+
+def check_billed_loss(tag, report):
+    billed = class_counts(report, "billed")
+    if billed is None or billed["accepted"] == 0:
+        return  # the mix offered no billed traffic; nothing to lose
+    if billed["dropped"] != 0 or billed["failed"] != 0:
+        fail(f"{tag}: billed-frame loss: dropped {billed['dropped']}, "
+             f"failed {billed['failed']} (must both be 0)")
+    if billed["completed"] != billed["accepted"]:
+        fail(f"{tag}: billed completions {billed['completed']} != "
+             f"accepted {billed['accepted']}")
+
+
+def check_async(tag, result, require):
+    a = result.get("async")
+    if a is None:
+        if require:
+            fail(f"{tag}: no async stats — the soak ran the threaded "
+                 f"plane (pass --async to serve-bench)")
+        return
+    if a["workers"] < 1:
+        fail(f"{tag}: async plane reports {a['workers']} workers")
+    lo, hi = a["min_shards"], a["max_shards"]
+    if not (1 <= lo <= hi):
+        fail(f"{tag}: bad autoscale range [{lo}, {hi}]")
+    if not (lo <= a["active_shards"] <= hi):
+        fail(f"{tag}: active_shards {a['active_shards']} outside "
+             f"[{lo}, {hi}]")
+    if not (a["active_shards"] <= a["shards_high_water"] <= hi):
+        fail(f"{tag}: shards_high_water {a['shards_high_water']} "
+             f"inconsistent (active {a['active_shards']}, max {hi})")
+    if require and hi > lo and a["scale_up_events"] < 1:
+        fail(f"{tag}: no scale-up events under soak load "
+             f"(range [{lo}, {hi}], high water {a['shards_high_water']})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("doc")
+    ap.add_argument("--sensors", type=int, default=0,
+                    help="require exactly this stream fan-out")
+    ap.add_argument("--max-spread", type=int, default=4,
+                    help="per-sensor completed-frame spread bound")
+    ap.add_argument("--p99-budget-ms", type=float, default=5000.0,
+                    help="end-to-end p99 latency budget [ms]")
+    ap.add_argument("--require-autoscale", action="store_true",
+                    help="fail unless the async plane ran and scaled up")
+    args = ap.parse_args()
+
+    try:
+        with open(args.doc, "rb") as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as exc:
+        fail(f"{args.doc}: {exc}")
+    for key in ("frames", "sensors", "results"):
+        if key not in doc:
+            fail(f"{args.doc}: not a serve-bench document (missing {key!r})")
+    if args.sensors and doc["sensors"] != args.sensors:
+        fail(f"sensors {doc['sensors']} != required {args.sensors}")
+    if not doc["results"]:
+        fail("document carries no results")
+
+    for result in doc["results"]:
+        report = result["report"]
+        tag = f"shards={result['shards']}"
+        check_balance(tag, report)
+        check_billed_loss(tag, report)
+        if report.get("arch_mismatches", 0) != 0:
+            fail(f"{tag}: {report['arch_mismatches']} arch mismatches")
+        if report.get("cross_check_mismatches", 0) != 0:
+            fail(f"{tag}: {report['cross_check_mismatches']} cross-check "
+                 f"mismatches")
+        spread = result["fairness_spread"]
+        if spread > args.max_spread:
+            fail(f"{tag}: fairness spread {spread} > bound "
+                 f"{args.max_spread}")
+        p99 = report["latency_ms"]["p99"]
+        if p99 > args.p99_budget_ms:
+            fail(f"{tag}: p99 {p99:.1f} ms > budget "
+                 f"{args.p99_budget_ms:.1f} ms")
+        check_async(tag, result, args.require_autoscale)
+        a = result.get("async")
+        scaling = (f", shards {a['min_shards']}..{a['max_shards']} high "
+                   f"water {a['shards_high_water']} (+{a['scale_up_events']}"
+                   f"/-{a['scale_down_events']})" if a else "")
+        print(f"soak check: {tag}: OK — {report['completed']} completed "
+              f"over {doc['sensors']} sensors, spread {spread}, "
+              f"p99 {p99:.1f} ms{scaling}")
+
+    print(f"soak check: PASS ({args.doc})")
+
+
+if __name__ == "__main__":
+    main()
