@@ -396,4 +396,29 @@ mod tests {
         }
         assert!(CompiledModel::from_bytes(&bytes[..bytes.len() - 2]).is_err());
     }
+
+    #[test]
+    fn chaos_plane_corruption_is_always_detected() {
+        // the fault plan corrupts a pushed artifact by xor-ing one byte
+        // (0x40) at a schedule-chosen position; the content hash must
+        // catch every position the schedule can pick, or a corrupted
+        // model could reach an engine during a chaos run
+        let mut m = sample();
+        let bytes = m.to_bytes();
+        let mut cfg = crate::config::FaultsConfig::default();
+        cfg.enabled = true;
+        cfg.artifact_corrupt_prob = 1.0;
+        for attempt in 0..64 {
+            let pos = crate::faults::artifact_corruption(
+                &cfg, 0, attempt, bytes.len(),
+            ).expect("corrupt_prob 1.0 must pick a byte");
+            assert!(pos < bytes.len());
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(
+                CompiledModel::from_bytes(&bad).is_err(),
+                "chaos flip at byte {pos} went undetected"
+            );
+        }
+    }
 }

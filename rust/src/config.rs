@@ -470,6 +470,8 @@ pub struct SystemConfig {
     pub serve: ServeConfig,
     /// Multi-node fleet knobs (see [`crate::fleet`]).
     pub fleet: FleetConfig,
+    /// Fault-injection / recovery knobs (see [`crate::faults`]).
+    pub faults: FaultsConfig,
     /// Engine-layer backend selection.
     pub engine: EngineSelection,
     /// Hardware cost-model selection.
@@ -557,6 +559,142 @@ impl FleetConfig {
     }
 }
 
+/// Fault-injection and recovery knobs (`[faults]` section — see
+/// [`crate::faults`]).  Everything is seeded and deterministic: the same
+/// `seed` yields the same fault schedule, so chaos drills are
+/// reproducible.  Probabilities are per-decision (per wire message, per
+/// shard dispatch, per artifact load); the node-flap window counts
+/// messages, not wall time, so the blackhole is schedule-stable too.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Master switch: when false no fault is ever injected and no
+    /// health-monitor thread is spawned.
+    pub enabled: bool,
+    /// Seed for every fault draw (`ns-lbp chaos --seed` overrides).
+    pub seed: u64,
+    /// Transport: drop a wire message.
+    pub drop_prob: f64,
+    /// Transport: duplicate a wire message.
+    pub dup_prob: f64,
+    /// Transport: hold a wire message back (delivered out of order).
+    pub delay_prob: f64,
+    /// How many later sends a held message waits behind (count-space
+    /// delay, so the schedule stays deterministic).
+    pub delay_slots: usize,
+    /// Node-flap: node whose links black-hole for a message-count window.
+    pub flap_node: usize,
+    /// Node-flap: window starts after this many messages on the link.
+    pub flap_after: usize,
+    /// Node-flap: window length in messages (0 = no flap).
+    pub flap_len: usize,
+    /// Shard: probability a dispatch stalls for `stall_us`.
+    pub stall_prob: f64,
+    /// Shard: injected stall length [µs].
+    pub stall_us: u64,
+    /// Shard: probability a dispatch panics (at most one injected panic
+    /// per process — a crash does not resurrect).
+    pub panic_prob: f64,
+    /// Probability a pushed `.nslbpc` artifact is corrupted in transit
+    /// (one flipped byte; the artifact checksum must catch it).
+    pub artifact_corrupt_prob: f64,
+    /// Comparator bit-flips: scale factor on the circuit variation
+    /// sigmas; the flip rate is the Monte-Carlo decision-error rate at
+    /// the scaled sigma (1.0 = nominal, which the paper shows is
+    /// error-free).
+    pub bitflip_sigma_scale: f64,
+    /// Router: re-home a pending frame this old [ms].
+    pub retransmit_ms: u64,
+    /// Health monitor: ping period [ms].
+    pub probe_ms: u64,
+    /// Health: a node silent this long is suspect [ms].
+    pub suspect_ms: u64,
+    /// Health: a node silent this long is dead (re-homed) [ms].
+    pub dead_ms: u64,
+    /// Degrade a Standard submit to BestEffort after this many
+    /// consecutive admission failures (0 = never degrade).
+    pub degrade_after: u64,
+    /// Chaos gate: recovery p99 must stay under this bound [ms].
+    pub p99_budget: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            seed: 42,
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            delay_prob: 0.0,
+            delay_slots: 2,
+            flap_node: 0,
+            flap_after: 0,
+            flap_len: 0,
+            stall_prob: 0.0,
+            stall_us: 2000,
+            panic_prob: 0.0,
+            artifact_corrupt_prob: 0.0,
+            bitflip_sigma_scale: 1.0,
+            retransmit_ms: 250,
+            probe_ms: 25,
+            suspect_ms: 100,
+            dead_ms: 300,
+            degrade_after: 3,
+            p99_budget: 1500.0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    pub fn validate(&self) -> Result<()> {
+        for (key, p) in [
+            ("faults.drop_prob", self.drop_prob),
+            ("faults.dup_prob", self.dup_prob),
+            ("faults.delay_prob", self.delay_prob),
+            ("faults.stall_prob", self.stall_prob),
+            ("faults.panic_prob", self.panic_prob),
+            ("faults.artifact_corrupt_prob", self.artifact_corrupt_prob),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "{key} must be in [0, 1], got {p}"
+                )));
+            }
+        }
+        if !(self.bitflip_sigma_scale > 0.0) {
+            return Err(Error::Config(
+                "faults.bitflip_sigma_scale must be > 0".into(),
+            ));
+        }
+        if self.delay_slots == 0 {
+            return Err(Error::Config(
+                "faults.delay_slots must be >= 1".into(),
+            ));
+        }
+        for (key, v) in [
+            ("faults.retransmit_ms", self.retransmit_ms),
+            ("faults.probe_ms", self.probe_ms),
+            ("faults.suspect_ms", self.suspect_ms),
+            ("faults.dead_ms", self.dead_ms),
+        ] {
+            if v == 0 {
+                return Err(Error::Config(format!("{key} must be >= 1")));
+            }
+        }
+        if self.suspect_ms > self.dead_ms {
+            return Err(Error::Config(format!(
+                "faults.suspect_ms ({}) must be <= faults.dead_ms ({})",
+                self.suspect_ms, self.dead_ms
+            )));
+        }
+        if !(self.p99_budget > 0.0) {
+            return Err(Error::Config(
+                "faults.p99_budget must be > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Where `ns-lbp compile` puts things (`[compile]` section); the CLI
 /// `--out-dir` / `--cache-dir` options override per invocation.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -584,6 +722,7 @@ impl Default for SystemConfig {
             sensor: crate::sensor::SensorConfig::default(),
             serve: ServeConfig::default(),
             fleet: FleetConfig::default(),
+            faults: FaultsConfig::default(),
             engine: EngineSelection::default(),
             hw: HwSelection::default(),
             obs: crate::obs::ObsConfig::default(),
@@ -625,6 +764,14 @@ impl SystemConfig {
             "fleet.capacity.billed",
             "fleet.drill.kill_node", "fleet.drill.kill_after",
             "fleet.drill.p99_budget",
+            "faults.enabled", "faults.seed",
+            "faults.drop_prob", "faults.dup_prob", "faults.delay_prob",
+            "faults.delay_slots",
+            "faults.flap_node", "faults.flap_after", "faults.flap_len",
+            "faults.stall_prob", "faults.stall_us", "faults.panic_prob",
+            "faults.artifact_corrupt_prob", "faults.bitflip_sigma_scale",
+            "faults.retransmit_ms", "faults.probe_ms", "faults.suspect_ms",
+            "faults.dead_ms", "faults.degrade_after", "faults.p99_budget",
             "engine.backend", "engine.cross_check", "engine.pjrt_artifact",
             "engine.routing.best_effort", "engine.routing.standard",
             "engine.routing.billed",
@@ -774,6 +921,46 @@ impl SystemConfig {
         };
         fleet.validate()?;
 
+        let df = d.faults;
+        let faults = FaultsConfig {
+            enabled: file.get_bool("faults.enabled", df.enabled)?,
+            seed: file.get_usize("faults.seed", df.seed as usize)? as u64,
+            drop_prob: file.get_f64("faults.drop_prob", df.drop_prob)?,
+            dup_prob: file.get_f64("faults.dup_prob", df.dup_prob)?,
+            delay_prob: file.get_f64("faults.delay_prob", df.delay_prob)?,
+            delay_slots: file
+                .get_usize("faults.delay_slots", df.delay_slots)?,
+            flap_node: file.get_usize("faults.flap_node", df.flap_node)?,
+            flap_after: file.get_usize("faults.flap_after", df.flap_after)?,
+            flap_len: file.get_usize("faults.flap_len", df.flap_len)?,
+            stall_prob: file.get_f64("faults.stall_prob", df.stall_prob)?,
+            stall_us: file
+                .get_usize("faults.stall_us", df.stall_us as usize)?
+                as u64,
+            panic_prob: file.get_f64("faults.panic_prob", df.panic_prob)?,
+            artifact_corrupt_prob: file.get_f64(
+                "faults.artifact_corrupt_prob", df.artifact_corrupt_prob)?,
+            bitflip_sigma_scale: file.get_f64(
+                "faults.bitflip_sigma_scale", df.bitflip_sigma_scale)?,
+            retransmit_ms: file
+                .get_usize("faults.retransmit_ms", df.retransmit_ms as usize)?
+                as u64,
+            probe_ms: file
+                .get_usize("faults.probe_ms", df.probe_ms as usize)?
+                as u64,
+            suspect_ms: file
+                .get_usize("faults.suspect_ms", df.suspect_ms as usize)?
+                as u64,
+            dead_ms: file
+                .get_usize("faults.dead_ms", df.dead_ms as usize)?
+                as u64,
+            degrade_after: file
+                .get_usize("faults.degrade_after", df.degrade_after as usize)?
+                as u64,
+            p99_budget: file.get_f64("faults.p99_budget", df.p99_budget)?,
+        };
+        faults.validate()?;
+
         let mut routing = RoutingPolicy::default();
         for class in QosClass::ALL {
             let key = format!("engine.routing.{class}");
@@ -827,6 +1014,7 @@ impl SystemConfig {
             sensor,
             serve,
             fleet,
+            faults,
             engine,
             hw,
             obs,
@@ -1180,6 +1368,52 @@ mod tests {
             .unwrap();
         assert!(SystemConfig::from_file(&bad).is_err());
         let bad = ConfigFile::parse("[fleet]\nnods = 3").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+    }
+
+    #[test]
+    fn faults_knobs_parse_and_validate() {
+        // defaults: disabled, nominal sigma, sane recovery windows
+        let sc = SystemConfig::default();
+        assert!(!sc.faults.enabled);
+        assert_eq!(sc.faults.seed, 42);
+        assert_eq!(sc.faults.bitflip_sigma_scale, 1.0);
+
+        let f = ConfigFile::parse(
+            "[faults]\nenabled = true\nseed = 7\ndrop_prob = 0.05\n\
+             dup_prob = 0.02\ndelay_prob = 0.1\ndelay_slots = 3\n\
+             flap_node = 1\nflap_after = 10\nflap_len = 20\n\
+             stall_prob = 0.5\nstall_us = 800\npanic_prob = 0.01\n\
+             artifact_corrupt_prob = 0.25\nbitflip_sigma_scale = 2.5\n\
+             retransmit_ms = 100\nprobe_ms = 10\nsuspect_ms = 40\n\
+             dead_ms = 120\ndegrade_after = 2\np99_budget = 900.0",
+        )
+        .unwrap();
+        let sc = SystemConfig::from_file(&f).unwrap();
+        assert!(sc.faults.enabled);
+        assert_eq!(sc.faults.seed, 7);
+        assert_eq!(sc.faults.drop_prob, 0.05);
+        assert_eq!(sc.faults.delay_slots, 3);
+        assert_eq!((sc.faults.flap_node, sc.faults.flap_after,
+                    sc.faults.flap_len), (1, 10, 20));
+        assert_eq!(sc.faults.stall_us, 800);
+        assert_eq!(sc.faults.bitflip_sigma_scale, 2.5);
+        assert_eq!(sc.faults.retransmit_ms, 100);
+        assert_eq!((sc.faults.suspect_ms, sc.faults.dead_ms), (40, 120));
+        assert_eq!(sc.faults.degrade_after, 2);
+        assert_eq!(sc.faults.p99_budget, 900.0);
+
+        // out-of-range probabilities, inverted health windows, and typos
+        // fail loudly
+        let bad = ConfigFile::parse("[faults]\ndrop_prob = 1.5").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad = ConfigFile::parse(
+            "[faults]\nsuspect_ms = 500\ndead_ms = 100").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad = ConfigFile::parse("[faults]\ndorp_prob = 0.1").unwrap();
+        assert!(SystemConfig::from_file(&bad).is_err());
+        let bad =
+            ConfigFile::parse("[faults]\nbitflip_sigma_scale = 0.0").unwrap();
         assert!(SystemConfig::from_file(&bad).is_err());
     }
 }

@@ -109,6 +109,10 @@ pub struct ArchitecturalBackend {
     arena: ArchScratch,
     /// Stage-phase span source (disabled by default — zero cost).
     tracer: Tracer,
+    /// Chaos comparator-variation injector: flips read bits at the
+    /// Monte-Carlo decision-error rate of the `[faults]`-scaled sigma
+    /// (`None` — zero cost — unless that rate is nonzero).
+    flips: Option<crate::faults::BitFlips>,
 }
 
 impl ArchitecturalBackend {
@@ -151,6 +155,11 @@ impl ArchitecturalBackend {
             Some(p) => p.plans_for(&params)?,
             None => model::plan_layers(&params),
         };
+        let flips = crate::faults::BitFlips::new(
+            &config.system.faults,
+            &config.system.circuit,
+            config.shard.map_or(0, |s| s.index),
+        );
         Ok(Self {
             params,
             config,
@@ -162,6 +171,7 @@ impl ArchitecturalBackend {
             plans,
             arena: ArchScratch::default(),
             tracer: Tracer::disabled(),
+            flips,
         })
     }
 
@@ -213,7 +223,8 @@ impl InferenceBackend for ArchitecturalBackend {
         };
         Ok(BackendOutput {
             frames: core.process_batch(frames, &mut self.scratch,
-                                       &mut self.arena)?,
+                                       &mut self.arena,
+                                       self.flips.as_mut())?,
         })
     }
 
@@ -317,6 +328,7 @@ impl ArchCore<'_> {
                             pairs: &mut Vec<(u8, u8)>,
                             frame_ends: &mut Vec<usize>,
                             bits: &mut Vec<bool>, planes: &mut Vec<u64>,
+                            flips: Option<&mut crate::faults::BitFlips>,
                             accs: &mut [FrameAcc]) -> Result<()> {
         let cfg = &self.params.config;
         let apx = cfg.apx_code;
@@ -369,6 +381,14 @@ impl ArchCore<'_> {
         let share_ns = layer_time_ns / xs.len() as f64;
         for acc in accs.iter_mut() {
             acc.arch_time_ns += share_ns;
+        }
+
+        // chaos comparator variation: flip sensed bits at the scaled
+        // Monte-Carlo decision-error rate *before* code assembly, so the
+        // divergence flows through the functional cross-check below and
+        // surfaces as arch mismatches in the frame telemetry
+        if let Some(f) = flips {
+            f.apply(bits);
         }
 
         // split the bit stream back per frame; assemble codes in the
@@ -460,7 +480,9 @@ impl ArchCore<'_> {
     /// passes across frames in the LBP *and* in-memory-MLP stages.  All
     /// transients live in `arena`; only the per-frame outputs allocate.
     fn process_batch(&self, frames: &[Frame], scratch: &mut SubArray,
-                     arena: &mut ArchScratch) -> Result<Vec<FrameOutput>> {
+                     arena: &mut ArchScratch,
+                     mut flips: Option<&mut crate::faults::BitFlips>)
+                     -> Result<Vec<FrameOutput>> {
         if frames.is_empty() {
             return Ok(Vec::new());
         }
@@ -480,7 +502,8 @@ impl ArchCore<'_> {
         for (layer, plan) in self.params.lbp_layers.iter().zip(self.plans) {
             if self.config.arch.lbp {
                 self.lbp_layer_arch_batch(layer, scratch, xs, ys, pairs,
-                                          frame_ends, bits, planes, accs)?;
+                                          frame_ends, bits, planes,
+                                          flips.as_deref_mut(), accs)?;
             } else {
                 ys.resize_with(xs.len(), TensorU8::default);
                 for ((x, y), acc) in

@@ -1,0 +1,197 @@
+//! `faults::health` — the node liveness state machine.
+//!
+//! The fleet router used to learn about node death two ways only: an
+//! explicit `kill_node` or the link closing under the collector.  A
+//! *transiently* dark node (flapping link, long GC-style stall) showed
+//! up as neither — frames just aged.  The tracker closes that gap with
+//! the classic three-state machine:
+//!
+//! ```text
+//!            silent > suspect_ms          silent > dead_ms
+//!   Alive ───────────────────────▶ Suspect ────────────────▶ Dead
+//!     ▲                              │                        │
+//!     └───── any message ────────────┘     any message        │
+//!     └───────────────────────── (rejoin) ◀───────────────────┘
+//! ```
+//!
+//! "Any message" includes [`crate::fleet::transport::WireResponse::Pong`]
+//! answers to the monitor's health probes, so liveness never depends on
+//! the node owing frames.  A node the operator killed explicitly is
+//! pinned `Dead` and cannot rejoin.  Transition counters feed the fleet
+//! report (`health.suspect` / `health.dead` / `health.rejoined`) — the
+//! chaos gate asserts a node-flap scenario actually walked the machine.
+
+use std::time::{Duration, Instant};
+
+/// Liveness verdict for one node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    Alive,
+    /// Silent past `suspect_ms`; still routed to, but on notice.
+    Suspect,
+    /// Silent past `dead_ms` (or explicitly killed): out of rotation,
+    /// its frames re-homed.
+    Dead,
+}
+
+/// Per-node last-seen bookkeeping plus transition counters.
+#[derive(Debug)]
+pub struct HealthTracker {
+    states: Vec<NodeState>,
+    killed: Vec<bool>,
+    last_seen: Vec<Instant>,
+    suspect_after: Duration,
+    dead_after: Duration,
+    /// Alive → Suspect transitions observed.
+    pub to_suspect: u64,
+    /// (Alive|Suspect) → Dead transitions observed.
+    pub to_dead: u64,
+    /// Dead → Alive rejoins observed.
+    pub rejoined: u64,
+}
+
+impl HealthTracker {
+    pub fn new(nodes: usize, suspect_after: Duration, dead_after: Duration) -> Self {
+        let now = Instant::now();
+        HealthTracker {
+            states: vec![NodeState::Alive; nodes],
+            killed: vec![false; nodes],
+            last_seen: vec![now; nodes],
+            suspect_after,
+            dead_after: dead_after.max(suspect_after),
+            to_suspect: 0,
+            to_dead: 0,
+            rejoined: 0,
+        }
+    }
+
+    pub fn state(&self, node: usize) -> NodeState {
+        self.states.get(node).copied().unwrap_or(NodeState::Dead)
+    }
+
+    /// A message arrived from `node`.  Refreshes last-seen and walks the
+    /// machine back to `Alive`; returns `true` when this was a rejoin
+    /// (the caller puts the node back into routing rotation).
+    pub fn mark_seen(&mut self, node: usize) -> bool {
+        if node >= self.states.len() || self.killed[node] {
+            return false;
+        }
+        self.last_seen[node] = Instant::now();
+        match self.states[node] {
+            NodeState::Dead => {
+                self.states[node] = NodeState::Alive;
+                self.rejoined += 1;
+                true
+            }
+            NodeState::Suspect => {
+                self.states[node] = NodeState::Alive;
+                false
+            }
+            NodeState::Alive => false,
+        }
+    }
+
+    /// Pin `node` dead forever (operator kill / permanent link loss).
+    pub fn mark_killed(&mut self, node: usize) {
+        if node < self.states.len() {
+            self.killed[node] = true;
+            self.states[node] = NodeState::Dead;
+        }
+    }
+
+    /// Advance every node's machine against `now`; returns the nodes
+    /// that transitioned to `Dead` this sweep (the caller re-homes their
+    /// frames).
+    pub fn sweep(&mut self, now: Instant) -> Vec<usize> {
+        let mut died = Vec::new();
+        for node in 0..self.states.len() {
+            if self.killed[node] {
+                continue;
+            }
+            let silent = now.saturating_duration_since(self.last_seen[node]);
+            match self.states[node] {
+                NodeState::Alive if silent >= self.suspect_after => {
+                    self.states[node] = NodeState::Suspect;
+                    self.to_suspect += 1;
+                    if silent >= self.dead_after {
+                        self.states[node] = NodeState::Dead;
+                        self.to_dead += 1;
+                        died.push(node);
+                    }
+                }
+                NodeState::Suspect if silent >= self.dead_after => {
+                    self.states[node] = NodeState::Dead;
+                    self.to_dead += 1;
+                    died.push(node);
+                }
+                _ => {}
+            }
+        }
+        died
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker() -> HealthTracker {
+        // wide windows: the sweeps below pass synthetic `now` values, so
+        // the only real-clock sensitivity is the gap between `new()` and
+        // the test's `t0` — keep it far below suspect_after
+        HealthTracker::new(2, Duration::from_millis(50), Duration::from_millis(200))
+    }
+
+    #[test]
+    fn walks_alive_suspect_dead_and_rejoins() {
+        let mut h = tracker();
+        let t0 = Instant::now();
+        assert_eq!(h.state(0), NodeState::Alive);
+        assert!(h.sweep(t0).is_empty());
+        // past suspect_after but not dead_after: Suspect
+        assert!(h.sweep(t0 + Duration::from_millis(80)).is_empty());
+        assert_eq!(h.state(0), NodeState::Suspect);
+        assert_eq!(h.to_suspect, 2, "both nodes went suspect");
+        // past dead_after: Dead, reported once
+        let died = h.sweep(t0 + Duration::from_millis(300));
+        assert_eq!(died, vec![0, 1]);
+        assert_eq!(h.state(1), NodeState::Dead);
+        // a second sweep does not re-report the death
+        assert!(h.sweep(t0 + Duration::from_millis(400)).is_empty());
+        assert_eq!(h.to_dead, 2);
+        // a message brings node 0 back
+        assert!(h.mark_seen(0));
+        assert_eq!(h.state(0), NodeState::Alive);
+        assert_eq!(h.rejoined, 1);
+        // fresh last-seen: an immediate sweep keeps it alive
+        assert!(h.sweep(Instant::now()).is_empty());
+        assert_eq!(h.state(0), NodeState::Alive);
+    }
+
+    #[test]
+    fn suspect_recovers_without_counting_a_rejoin() {
+        let mut h = tracker();
+        let t0 = Instant::now();
+        h.sweep(t0 + Duration::from_millis(80));
+        assert_eq!(h.state(0), NodeState::Suspect);
+        assert!(!h.mark_seen(0), "suspect -> alive is not a rejoin");
+        assert_eq!(h.state(0), NodeState::Alive);
+        assert_eq!(h.rejoined, 0);
+    }
+
+    #[test]
+    fn killed_nodes_are_pinned_dead() {
+        let mut h = tracker();
+        h.mark_killed(1);
+        assert_eq!(h.state(1), NodeState::Dead);
+        assert!(!h.mark_seen(1), "a killed node cannot rejoin");
+        assert_eq!(h.state(1), NodeState::Dead);
+        // sweeps skip it (no double-counted death)
+        let died = h.sweep(Instant::now() + Duration::from_millis(500));
+        assert_eq!(died, vec![0]);
+        assert_eq!(h.to_dead, 1);
+        // out-of-range nodes read as dead, harmlessly
+        assert_eq!(h.state(99), NodeState::Dead);
+        assert!(!h.mark_seen(99));
+    }
+}

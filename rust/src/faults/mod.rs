@@ -1,0 +1,705 @@
+//! `faults` — the deterministic fault-injection plane (chaos plane).
+//!
+//! Serving hardware near the sensor fails in undramatic ways: a flaky
+//! aggregation link drops or reorders frames, a shard wedges on a slow
+//! DMA, a node browns out for half a second, comparator read margins
+//! collapse under voltage droop.  This module injects exactly those
+//! faults — and nothing nondeterministic — so the recovery machinery
+//! (retransmit, health tracking, rejoin, dedup) can be exercised in CI
+//! with byte-identical schedules run to run.
+//!
+//! **Determinism contract.**  Every injection decision is a pure
+//! function of `(seed, site, index)` hashed through
+//! [`crate::rng::splitmix64`]: the same seed always produces the same
+//! fault *schedule* (which message slots drop, duplicate, delay; which
+//! dispatch ticks stall).  What varies between runs is only *which real
+//! message lands in which slot* — thread interleaving — which is exactly
+//! the degree of freedom a recovery layer must tolerate anyway.  The
+//! schedule itself ([`FaultPlan::schedule_digest`],
+//! [`FaultPlan::schedule_events`]) is computed without executing
+//! anything, so `ns-lbp chaos --seed S` emits an identical schedule
+//! section every run.
+//!
+//! Sites covered:
+//!
+//! * **Wire** ([`transport::FaultyTransport`]): drop / duplicate /
+//!   delay(reorder) / blackhole at the [`crate::fleet::transport`] seam,
+//!   per link direction, indexed by a per-link message counter.  Delay
+//!   is *count-space*: a held message is released after `delay_slots`
+//!   subsequent sends (or on close/disarm), so no timers are involved.
+//! * **Shard** ([`ShardFaults`]): stall or panic a shard worker
+//!   mid-dispatch, proving the exec plane's panic isolation end to end.
+//! * **Artifact** ([`artifact_corruption`]): flip one byte of a pushed
+//!   `.nslbpc` image in transit; the node's checksum rejects it and the
+//!   router retries.
+//! * **Comparator** ([`BitFlips`]): flip architectural read bits at the
+//!   Monte-Carlo decision-error rate of a sigma-scaled
+//!   [`crate::circuit::CircuitParams`] — the paper's Fig. 10 variation
+//!   model driving live-serving bit errors.
+//!
+//! Recovery primitives live alongside: [`retry::RetryPolicy`] (jittered
+//! exponential backoff), [`health::HealthTracker`] (alive → suspect →
+//! dead → rejoin), and [`SeqLedger`] (exactly-once completion under
+//! duplicated / reordered wire responses).
+
+pub mod health;
+pub mod retry;
+pub mod transport;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::FaultsConfig;
+use crate::rng::splitmix64;
+
+pub use health::{HealthTracker, NodeState};
+pub use retry::{RetryPolicy, Retrier};
+pub use transport::FaultyTransport;
+
+// ---------------------------------------------------------------------------
+// Deterministic draws
+// ---------------------------------------------------------------------------
+
+/// Domain tags keep the per-site draw streams independent: the same
+/// (seed, index) pair must not correlate a wire drop with a shard stall.
+const TAG_WIRE_REQ: u64 = 0x5749_5245_0000_0001;
+const TAG_WIRE_RSP: u64 = 0x5749_5245_0000_0002;
+const TAG_DELAY_LEN: u64 = 0x5749_5245_0000_0003;
+const TAG_SHARD: u64 = 0x5348_4152_4400_0001;
+const TAG_ARTIFACT: u64 = 0x4152_5446_0000_0001;
+const TAG_BITFLIP: u64 = 0x4249_5446_0000_0001;
+
+/// One 64-bit draw, pure in `(seed, tag, a, b)`.
+fn raw_draw(seed: u64, tag: u64, a: u64, b: u64) -> u64 {
+    let mut s = seed
+        ^ tag.rotate_left(17)
+        ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ b.wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+    splitmix64(&mut s)
+}
+
+/// Uniform in [0, 1), pure in `(seed, tag, a, b)`.
+fn unit_draw(seed: u64, tag: u64, a: u64, b: u64) -> f64 {
+    (raw_draw(seed, tag, a, b) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Wire fault schedule
+// ---------------------------------------------------------------------------
+
+/// Direction of a wire message; part of every wire draw's key so the
+/// request and response streams of one link fault independently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// Router → node.
+    Request,
+    /// Node → router.
+    Response,
+}
+
+impl Dir {
+    fn tag(self) -> u64 {
+        match self {
+            Dir::Request => TAG_WIRE_REQ,
+            Dir::Response => TAG_WIRE_RSP,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dir::Request => "req",
+            Dir::Response => "rsp",
+        }
+    }
+}
+
+/// The plan's decision for one wire-message slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFault {
+    /// Pass through untouched.
+    Deliver,
+    /// Silently discard (the sender still sees `Ok`).
+    Drop,
+    /// Deliver twice.
+    Duplicate,
+    /// Hold for this many subsequent sends on the same link direction,
+    /// then deliver (reordering past everything sent in between).
+    Delay(u32),
+    /// Inside the node-flap window: discard, modelling a node that has
+    /// gone dark for a stretch of its message timeline.
+    Blackhole,
+}
+
+impl WireFault {
+    /// Stable code for digesting / naming the schedule.
+    fn code(self) -> u64 {
+        match self {
+            WireFault::Deliver => 0,
+            WireFault::Drop => 1,
+            WireFault::Duplicate => 2,
+            WireFault::Blackhole => 3,
+            WireFault::Delay(slots) => 0x100 + slots as u64,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireFault::Deliver => "deliver",
+            WireFault::Drop => "drop",
+            WireFault::Duplicate => "duplicate",
+            WireFault::Delay(_) => "delay",
+            WireFault::Blackhole => "blackhole",
+        }
+    }
+}
+
+/// One non-`Deliver` slot of the schedule, for the chaos report.
+#[derive(Clone, Debug)]
+pub struct ScheduleEvent {
+    pub node: usize,
+    pub dir: Dir,
+    pub index: u64,
+    pub fault: WireFault,
+}
+
+// ---------------------------------------------------------------------------
+// Executed-fault ledger
+// ---------------------------------------------------------------------------
+
+/// Counters for faults actually executed (the schedule says what *would*
+/// happen at each slot; the ledger says what *did*, given how much
+/// traffic really flowed).
+#[derive(Debug, Default)]
+pub struct FaultLedger {
+    pub dropped: AtomicU64,
+    pub duplicated: AtomicU64,
+    pub delayed: AtomicU64,
+    pub blackholed: AtomicU64,
+    pub artifacts_corrupted: AtomicU64,
+}
+
+impl FaultLedger {
+    pub fn total(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+            + self.duplicated.load(Ordering::Relaxed)
+            + self.delayed.load(Ordering::Relaxed)
+            + self.blackholed.load(Ordering::Relaxed)
+            + self.artifacts_corrupted.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultPlan
+// ---------------------------------------------------------------------------
+
+/// A seeded, armed/disarmed fault schedule shared by every injection
+/// site that has a handle to it (the wire wrappers and the chaos
+/// harness; shard and comparator sites rebuild the same decisions from
+/// the [`FaultsConfig`] they carry).
+pub struct FaultPlan {
+    config: FaultsConfig,
+    armed: AtomicBool,
+    pub ledger: FaultLedger,
+}
+
+impl FaultPlan {
+    pub fn new(config: FaultsConfig) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            armed: AtomicBool::new(config.enabled),
+            config,
+            ledger: FaultLedger::default(),
+        })
+    }
+
+    pub fn config(&self) -> &FaultsConfig {
+        &self.config
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed.load(Ordering::Acquire)
+    }
+
+    /// Stop injecting.  The wire wrappers flush held messages on their
+    /// next send and pass everything through untouched — call this
+    /// before draining a fleet so control traffic cannot be eaten.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Release);
+    }
+
+    /// Pure schedule lookup: what happens to message `index` on the
+    /// `(node, dir)` link.  Independent of execution history.
+    pub fn wire_fault(&self, node: usize, dir: Dir, index: u64) -> WireFault {
+        let c = &self.config;
+        if c.flap_len > 0 && node == c.flap_node {
+            let start = c.flap_after as u64;
+            if index >= start && index < start + c.flap_len as u64 {
+                return WireFault::Blackhole;
+            }
+        }
+        let u = unit_draw(c.seed, dir.tag(), node as u64, index);
+        let mut edge = c.drop_prob;
+        if u < edge {
+            return WireFault::Drop;
+        }
+        edge += c.dup_prob;
+        if u < edge {
+            return WireFault::Duplicate;
+        }
+        edge += c.delay_prob;
+        if u < edge {
+            let span = c.delay_slots.max(1) as u64;
+            let slots =
+                1 + (raw_draw(c.seed, TAG_DELAY_LEN, node as u64, index) % span) as u32;
+            return WireFault::Delay(slots);
+        }
+        WireFault::Deliver
+    }
+
+    /// Flip one byte of an outbound artifact image?  Pure in
+    /// `(seed, node, index)`; `index` is the per-node push attempt
+    /// counter, so a retry redraws and (almost surely) goes clean.
+    pub fn corrupt_artifact(&self, node: usize, index: u64, bytes: &mut [u8]) -> bool {
+        if !self.armed() {
+            return false;
+        }
+        match artifact_corruption(&self.config, node, index, bytes.len()) {
+            Some(pos) => {
+                bytes[pos] ^= 0x40;
+                self.ledger.artifacts_corrupted.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// FNV-flavoured digest of the wire schedule over `nodes` links and
+    /// the first `horizon` message slots per direction.  Two runs with
+    /// the same seed and knobs produce the same digest by construction.
+    pub fn schedule_digest(&self, nodes: usize, horizon: u64) -> u64 {
+        let mut h: u64 = 0x9E37_79B9_7F4A_7C15 ^ self.config.seed;
+        for node in 0..nodes {
+            for dir in [Dir::Request, Dir::Response] {
+                for index in 0..horizon {
+                    let code = self.wire_fault(node, dir, index).code();
+                    let mut s = h
+                        ^ code
+                        ^ ((node as u64) << 40)
+                        ^ (dir.tag() << 1)
+                        ^ index;
+                    h = splitmix64(&mut s);
+                }
+            }
+        }
+        h
+    }
+
+    /// The first `max` non-`Deliver` slots of the schedule, in
+    /// `(node, dir, index)` order — the human-readable half of the
+    /// determinism proof in `BENCH_chaos.json`.
+    pub fn schedule_events(
+        &self,
+        nodes: usize,
+        horizon: u64,
+        max: usize,
+    ) -> Vec<ScheduleEvent> {
+        let mut events = Vec::new();
+        for node in 0..nodes {
+            for dir in [Dir::Request, Dir::Response] {
+                for index in 0..horizon {
+                    let fault = self.wire_fault(node, dir, index);
+                    if fault != WireFault::Deliver {
+                        events.push(ScheduleEvent { node, dir, index, fault });
+                        if events.len() >= max {
+                            return events;
+                        }
+                    }
+                }
+            }
+        }
+        events
+    }
+}
+
+/// Pure corruption schedule for model pushes, usable without a plan
+/// handle (the fleet router rebuilds decisions from its
+/// [`FaultsConfig`]): the byte to flip in a `len`-byte artifact for push
+/// attempt `index` to `node`, or `None` for a clean push.
+pub fn artifact_corruption(
+    cfg: &FaultsConfig,
+    node: usize,
+    index: u64,
+    len: usize,
+) -> Option<usize> {
+    if !cfg.enabled || cfg.artifact_corrupt_prob <= 0.0 || len == 0 {
+        return None;
+    }
+    let u = unit_draw(cfg.seed, TAG_ARTIFACT, node as u64, index);
+    if u >= cfg.artifact_corrupt_prob {
+        return None;
+    }
+    Some((raw_draw(cfg.seed, TAG_ARTIFACT, node as u64, !index) % len as u64) as usize)
+}
+
+// ---------------------------------------------------------------------------
+// Shard faults (stall / panic)
+// ---------------------------------------------------------------------------
+
+/// Process-wide panic token: at most one injected panic per process, so
+/// a chaos run proves isolation without cascading every shard into the
+/// recovery path at once.
+static PANIC_TOKEN: AtomicBool = AtomicBool::new(false);
+
+fn take_panic_token() -> bool {
+    !PANIC_TOKEN.swap(true, Ordering::Relaxed)
+}
+
+/// Re-arm the panic token (tests only — each test binary gets one
+/// injected panic unless it resets between scenarios).
+pub fn reset_panic_token() {
+    PANIC_TOKEN.store(false, Ordering::Relaxed);
+}
+
+/// What a shard dispatch was told to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardFault {
+    /// Sleep this long before serving the batch (a wedged DMA / slow
+    /// memory lane); the batch still completes.
+    Stall(Duration),
+    /// Panic mid-dispatch.  The pool's isolation wrapper must fail the
+    /// batch's tickets and keep the worker thread alive.
+    Panic,
+}
+
+/// Per-shard dispatch fault stream, rebuilt from config inside the serve
+/// plane (no shared plan handle crosses the serve boundary).  Decisions
+/// are pure in `(seed, shard, tick)`.
+pub struct ShardFaults {
+    seed: u64,
+    shard: u64,
+    tick: u64,
+    stall_prob: f64,
+    stall: Duration,
+    panic_prob: f64,
+}
+
+impl ShardFaults {
+    /// `None` when the config injects nothing at this site.
+    pub fn new(cfg: &FaultsConfig, shard: usize) -> Option<ShardFaults> {
+        if !cfg.enabled || (cfg.stall_prob <= 0.0 && cfg.panic_prob <= 0.0) {
+            return None;
+        }
+        Some(ShardFaults {
+            seed: cfg.seed,
+            shard: shard as u64,
+            tick: 0,
+            stall_prob: cfg.stall_prob,
+            stall: Duration::from_micros(cfg.stall_us),
+            panic_prob: cfg.panic_prob,
+        })
+    }
+
+    /// Decide the fault (if any) for the next dispatch tick.
+    pub fn next(&mut self) -> Option<ShardFault> {
+        let t = self.tick;
+        self.tick += 1;
+        let u = unit_draw(self.seed, TAG_SHARD, self.shard, t);
+        if u < self.panic_prob {
+            if take_panic_token() {
+                return Some(ShardFault::Panic);
+            }
+            // token spent: degrade the scheduled panic to a stall so the
+            // tick still exercises the slow path deterministically
+            return Some(ShardFault::Stall(self.stall));
+        }
+        if u < self.panic_prob + self.stall_prob {
+            return Some(ShardFault::Stall(self.stall));
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Comparator bit flips
+// ---------------------------------------------------------------------------
+
+/// Process-wide count of comparator bits actually flipped (the
+/// architectural backend has no metrics handle; the chaos harness reads
+/// the delta around a run).
+static BITFLIPS: AtomicU64 = AtomicU64::new(0);
+
+pub fn bitflips_injected() -> u64 {
+    BITFLIPS.load(Ordering::Relaxed)
+}
+
+/// Comparator read-bit flip injector for the architectural backend.
+///
+/// The flip rate is not a free knob: it is the Monte-Carlo decision
+/// error rate ([`crate::circuit::MonteCarlo`]) of the circuit's
+/// variation model with both sigmas scaled by
+/// `faults.bitflip_sigma_scale` — the paper's Fig. 10 methodology
+/// projected onto live serving.  At nominal sigma (scale 1.0) the rate
+/// is exactly zero, so enabling faults without touching the scale
+/// leaves the architectural datapath bit-identical.
+pub struct BitFlips {
+    rate: f64,
+    state: u64,
+    pub flipped: u64,
+}
+
+impl BitFlips {
+    /// `None` when the configured scale produces a zero error rate (or
+    /// faults are disabled) — the hot loop then pays nothing.
+    pub fn new(
+        cfg: &FaultsConfig,
+        circuit: &crate::circuit::CircuitParams,
+        lane: usize,
+    ) -> Option<BitFlips> {
+        if !cfg.enabled || cfg.bitflip_sigma_scale <= 0.0 {
+            return None;
+        }
+        let rate = Self::rate_for(cfg, circuit);
+        if rate <= 0.0 {
+            return None;
+        }
+        Some(BitFlips {
+            rate,
+            state: raw_draw(cfg.seed, TAG_BITFLIP, lane as u64, 0),
+            flipped: 0,
+        })
+    }
+
+    /// The Monte-Carlo decision-error rate at the scaled sigma.  Pure in
+    /// `(cfg.seed, scale, circuit)`; monotone (statistically) in scale.
+    pub fn rate_for(cfg: &FaultsConfig, circuit: &crate::circuit::CircuitParams) -> f64 {
+        let mut params = circuit.clone();
+        params.sigma_process *= cfg.bitflip_sigma_scale;
+        params.sigma_mismatch *= cfg.bitflip_sigma_scale;
+        let mc = crate::circuit::MonteCarlo { params, trials: 64, bitlines: 256 };
+        mc.run(cfg.seed ^ TAG_BITFLIP).decision_error_rate
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Flip-flag for one comparator read; deterministic in construction
+    /// order.
+    #[inline]
+    fn flip(&mut self) -> bool {
+        let u = (splitmix64(&mut self.state) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.rate
+    }
+
+    /// Apply flips to a slice of comparator read bits; returns how many
+    /// flipped.
+    pub fn apply(&mut self, bits: &mut [bool]) -> u64 {
+        let mut n = 0u64;
+        for b in bits.iter_mut() {
+            if self.flip() {
+                *b = !*b;
+                n += 1;
+            }
+        }
+        if n > 0 {
+            self.flipped += n;
+            BITFLIPS.fetch_add(n, Ordering::Relaxed);
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exactly-once sequence ledger
+// ---------------------------------------------------------------------------
+
+/// Request ids that reached a terminal resolution (or were superseded by
+/// a retransmit / re-home).  The fleet collector consults it before
+/// counting an unmatched response as orphaned: a duplicated, reordered,
+/// or late wire response for a resolved id is *deduplicated*, never
+/// double-completed — the exactly-once half of the recovery contract.
+#[derive(Debug, Default)]
+pub struct SeqLedger {
+    seen: std::collections::HashSet<u64>,
+}
+
+impl SeqLedger {
+    pub fn new() -> SeqLedger {
+        SeqLedger::default()
+    }
+
+    /// Record `id` as resolved; `false` if it already was.
+    pub fn record(&mut self, id: u64) -> bool {
+        self.seen.insert(id)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.seen.contains(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.seen.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_with(f: impl FnOnce(&mut FaultsConfig)) -> Arc<FaultPlan> {
+        let mut cfg = FaultsConfig::default();
+        cfg.enabled = true;
+        f(&mut cfg);
+        FaultPlan::new(cfg)
+    }
+
+    #[test]
+    fn schedule_is_pure_in_seed() {
+        let a = plan_with(|c| {
+            c.seed = 77;
+            c.drop_prob = 0.1;
+            c.dup_prob = 0.1;
+            c.delay_prob = 0.1;
+        });
+        let b = plan_with(|c| {
+            c.seed = 77;
+            c.drop_prob = 0.1;
+            c.dup_prob = 0.1;
+            c.delay_prob = 0.1;
+        });
+        assert_eq!(a.schedule_digest(3, 256), b.schedule_digest(3, 256));
+        for node in 0..3 {
+            for index in 0..256 {
+                assert_eq!(
+                    a.wire_fault(node, Dir::Request, index),
+                    b.wire_fault(node, Dir::Request, index)
+                );
+            }
+        }
+        let c = plan_with(|c| {
+            c.seed = 78;
+            c.drop_prob = 0.1;
+            c.dup_prob = 0.1;
+            c.delay_prob = 0.1;
+        });
+        assert_ne!(a.schedule_digest(3, 256), c.schedule_digest(3, 256));
+    }
+
+    #[test]
+    fn probabilities_partition_the_unit_interval() {
+        // with all three probs at 1/3 every slot faults; with all zero
+        // none do
+        let hot = plan_with(|c| {
+            c.drop_prob = 1.0 / 3.0;
+            c.dup_prob = 1.0 / 3.0;
+            c.delay_prob = 1.0 / 3.0;
+        });
+        let cold = plan_with(|_| {});
+        let (mut drops, mut dups, mut delays) = (0u32, 0u32, 0u32);
+        for index in 0..300 {
+            match hot.wire_fault(0, Dir::Response, index) {
+                WireFault::Drop => drops += 1,
+                WireFault::Duplicate => dups += 1,
+                WireFault::Delay(s) => {
+                    assert!(s >= 1 && s as usize <= hot.config().delay_slots);
+                    delays += 1;
+                }
+                other => panic!("unexpected {other:?} with saturated probs"),
+            }
+            assert_eq!(cold.wire_fault(0, Dir::Response, index), WireFault::Deliver);
+        }
+        // all three arms actually drawn
+        assert!(drops > 0 && dups > 0 && delays > 0, "{drops}/{dups}/{delays}");
+    }
+
+    #[test]
+    fn flap_window_blackholes_exactly_its_slots() {
+        let plan = plan_with(|c| {
+            c.flap_node = 1;
+            c.flap_after = 10;
+            c.flap_len = 5;
+        });
+        for index in 0..30 {
+            let f = plan.wire_fault(1, Dir::Request, index);
+            if (10..15).contains(&index) {
+                assert_eq!(f, WireFault::Blackhole, "index {index}");
+            } else {
+                assert_eq!(f, WireFault::Deliver, "index {index}");
+            }
+            // the other node is untouched
+            assert_eq!(plan.wire_fault(0, Dir::Request, index), WireFault::Deliver);
+        }
+    }
+
+    #[test]
+    fn disarm_stops_artifact_corruption() {
+        let plan = plan_with(|c| c.artifact_corrupt_prob = 1.0);
+        let mut bytes = vec![0u8; 64];
+        assert!(plan.corrupt_artifact(0, 0, &mut bytes));
+        assert!(bytes.iter().any(|&b| b != 0));
+        plan.disarm();
+        let mut clean = vec![0u8; 64];
+        assert!(!plan.corrupt_artifact(0, 1, &mut clean));
+        assert!(clean.iter().all(|&b| b == 0));
+        assert_eq!(plan.ledger.artifacts_corrupted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn shard_faults_draw_stalls_and_one_panic() {
+        reset_panic_token();
+        let mut cfg = FaultsConfig::default();
+        cfg.enabled = true;
+        cfg.panic_prob = 1.0;
+        let mut a = ShardFaults::new(&cfg, 0).expect("armed");
+        assert_eq!(a.next(), Some(ShardFault::Panic));
+        // token spent: the next scheduled panic degrades to a stall
+        assert!(matches!(a.next(), Some(ShardFault::Stall(_))));
+        let mut b = ShardFaults::new(&cfg, 1).expect("armed");
+        assert!(matches!(b.next(), Some(ShardFault::Stall(_))));
+        reset_panic_token();
+        // disabled or zero-prob configs opt out entirely
+        assert!(ShardFaults::new(&FaultsConfig::default(), 0).is_none());
+    }
+
+    #[test]
+    fn bitflip_rate_zero_at_nominal_sigma_and_grows_with_scale() {
+        let circuit = crate::circuit::CircuitParams::default();
+        let mut cfg = FaultsConfig::default();
+        cfg.enabled = true;
+        // nominal sigma: the Fig. 10 reproduction has zero decision
+        // errors, so no flips are injected at all
+        assert!(BitFlips::new(&cfg, &circuit, 0).is_none());
+        cfg.bitflip_sigma_scale = 8.0;
+        let hot = BitFlips::new(&cfg, &circuit, 0).expect("8x sigma must err");
+        assert!(hot.rate() > 0.0);
+        cfg.bitflip_sigma_scale = 16.0;
+        let hotter_rate = BitFlips::rate_for(&cfg, &circuit);
+        assert!(hotter_rate >= hot.rate(), "{hotter_rate} < {}", hot.rate());
+        // apply() flips roughly rate * n bits, deterministically
+        cfg.bitflip_sigma_scale = 8.0;
+        let mut x = BitFlips::new(&cfg, &circuit, 3).unwrap();
+        let mut y = BitFlips::new(&cfg, &circuit, 3).unwrap();
+        let mut bx = vec![false; 4096];
+        let mut by = vec![false; 4096];
+        let nx = x.apply(&mut bx);
+        let ny = y.apply(&mut by);
+        assert_eq!(nx, ny);
+        assert_eq!(bx, by);
+        assert!(nx > 0);
+    }
+
+    #[test]
+    fn seq_ledger_records_once() {
+        let mut l = SeqLedger::new();
+        assert!(l.is_empty());
+        assert!(l.record(9));
+        assert!(!l.record(9));
+        assert!(l.contains(9));
+        assert!(!l.contains(10));
+        assert_eq!(l.len(), 1);
+    }
+}

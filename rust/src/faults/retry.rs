@@ -1,0 +1,195 @@
+//! `faults::retry` — typed retry with jittered exponential backoff.
+//!
+//! Replaces the crate's hand-rolled sleep-and-retry admission loops with
+//! one policy object: a retryable failure ([`Error::Serve`] — admission
+//! backpressure by contract, see [`crate::error`]) backs off
+//! exponentially with seeded jitter (so lockstep harness threads don't
+//! re-collide) up to a hard attempt budget.  Every other error is
+//! terminal and propagates untouched on the first occurrence.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::rng::Xoshiro256;
+
+/// Backoff shape plus attempt budget.  Durations are capped, jitter is a
+/// symmetric fraction of the capped backoff.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// First backoff.
+    pub base: Duration,
+    /// Multiplier per subsequent retry.
+    pub factor: f64,
+    /// Ceiling on any single backoff.
+    pub max_backoff: Duration,
+    /// Jitter amplitude as a fraction of the backoff in [0, 1]: the
+    /// slept time is `backoff * (1 ± jitter)`.
+    pub jitter: f64,
+    /// Maximum number of *retries* (the first attempt is free).
+    pub budget: u32,
+}
+
+impl RetryPolicy {
+    /// Admission loops: tight first backoff (the queue usually frees in
+    /// microseconds), generous budget — replaces the harness loops that
+    /// slept a flat 200 µs forever.
+    pub fn admission() -> RetryPolicy {
+        RetryPolicy {
+            base: Duration::from_micros(200),
+            factor: 2.0,
+            max_backoff: Duration::from_millis(5),
+            jitter: 0.5,
+            budget: 20_000,
+        }
+    }
+
+    /// Control-plane operations (model push, drain acks): slower cadence,
+    /// small budget — failing fast matters more than persistence.
+    pub fn control() -> RetryPolicy {
+        RetryPolicy {
+            base: Duration::from_millis(10),
+            factor: 2.0,
+            max_backoff: Duration::from_millis(200),
+            jitter: 0.5,
+            budget: 6,
+        }
+    }
+
+    /// The backoff to sleep before retry number `attempt` (0-based),
+    /// jittered by `rng`.
+    pub fn backoff(&self, attempt: u32, rng: &mut Xoshiro256) -> Duration {
+        let exp = self.factor.max(1.0).powi(attempt.min(30) as i32);
+        let capped = (self.base.as_secs_f64() * exp)
+            .min(self.max_backoff.as_secs_f64());
+        let jitter = self.jitter.clamp(0.0, 1.0);
+        let scale = 1.0 + jitter * (2.0 * rng.next_f64() - 1.0);
+        Duration::from_secs_f64((capped * scale).max(0.0))
+    }
+}
+
+/// A policy bound to a jitter stream, counting the retries it spends.
+pub struct Retrier {
+    policy: RetryPolicy,
+    rng: Xoshiro256,
+    /// Total retries across every `run` call on this retrier.
+    pub retries: u64,
+}
+
+impl Retrier {
+    pub fn new(policy: RetryPolicy, seed: u64) -> Retrier {
+        Retrier { policy, rng: Xoshiro256::new(seed), retries: 0 }
+    }
+
+    /// Run `op` until it succeeds, fails terminally, or exhausts the
+    /// retry budget (the last `Error::Serve` is then returned).
+    pub fn run<T>(&mut self, mut op: impl FnMut() -> Result<T>) -> Result<T> {
+        let mut attempt = 0u32;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(Error::Serve(msg)) => {
+                    if attempt >= self.policy.budget {
+                        return Err(Error::Serve(msg));
+                    }
+                    self.retries += 1;
+                    let pause = self.policy.backoff(attempt, &mut self.rng);
+                    std::thread::sleep(pause);
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_and_respects_cap() {
+        let policy = RetryPolicy {
+            base: Duration::from_millis(1),
+            factor: 2.0,
+            max_backoff: Duration::from_millis(8),
+            jitter: 0.0,
+            budget: 10,
+        };
+        let mut rng = Xoshiro256::new(1);
+        assert_eq!(policy.backoff(0, &mut rng), Duration::from_millis(1));
+        assert_eq!(policy.backoff(1, &mut rng), Duration::from_millis(2));
+        assert_eq!(policy.backoff(2, &mut rng), Duration::from_millis(4));
+        // attempts 3.. hit the cap
+        assert_eq!(policy.backoff(3, &mut rng), Duration::from_millis(8));
+        assert_eq!(policy.backoff(9, &mut rng), Duration::from_millis(8));
+    }
+
+    #[test]
+    fn jitter_stays_inside_the_band() {
+        let policy = RetryPolicy {
+            base: Duration::from_millis(4),
+            factor: 1.0,
+            max_backoff: Duration::from_millis(4),
+            jitter: 0.5,
+            budget: 1,
+        };
+        let mut rng = Xoshiro256::new(7);
+        for _ in 0..200 {
+            let b = policy.backoff(0, &mut rng);
+            assert!(b >= Duration::from_millis(2) && b <= Duration::from_millis(6),
+                    "jittered backoff {b:?} outside [2ms, 6ms]");
+        }
+    }
+
+    #[test]
+    fn retries_serve_errors_until_success() {
+        let mut retrier = Retrier::new(
+            RetryPolicy { base: Duration::from_micros(10), ..RetryPolicy::admission() },
+            3,
+        );
+        let mut failures_left = 3;
+        let got = retrier.run(|| {
+            if failures_left > 0 {
+                failures_left -= 1;
+                Err(Error::Serve("queue full".into()))
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(got.unwrap(), 42);
+        assert_eq!(retrier.retries, 3);
+    }
+
+    #[test]
+    fn budget_exhaustion_returns_the_last_serve_error() {
+        let policy = RetryPolicy {
+            base: Duration::from_micros(1),
+            factor: 1.0,
+            max_backoff: Duration::from_micros(1),
+            jitter: 0.0,
+            budget: 4,
+        };
+        let mut retrier = Retrier::new(policy, 5);
+        let mut calls = 0u32;
+        let got: Result<()> = retrier.run(|| {
+            calls += 1;
+            Err(Error::Serve(format!("still full ({calls})")))
+        });
+        assert!(matches!(got, Err(Error::Serve(_))));
+        assert_eq!(calls, 5, "first attempt + 4 retries");
+        assert_eq!(retrier.retries, 4);
+    }
+
+    #[test]
+    fn terminal_errors_are_not_retried() {
+        let mut retrier = Retrier::new(RetryPolicy::control(), 9);
+        let mut calls = 0u32;
+        let got: Result<()> = retrier.run(|| {
+            calls += 1;
+            Err(Error::Runtime("backend exploded".into()))
+        });
+        assert!(matches!(got, Err(Error::Runtime(_))));
+        assert_eq!(calls, 1);
+        assert_eq!(retrier.retries, 0);
+    }
+}

@@ -1,0 +1,279 @@
+//! `faults::transport` — a [`Transport`] decorator that executes the
+//! [`FaultPlan`]'s wire schedule.
+//!
+//! Every link half handed out by the inner transport is wrapped in a
+//! [`FaultyTx`] that counts its sends and consults
+//! [`FaultPlan::wire_fault`] per message: drop and blackhole discard,
+//! duplicate sends twice, delay holds the message in *count space* —
+//! it is released after `Delay(n)` subsequent sends on the same link
+//! direction (reordering it past them), not after a wall-clock timer, so
+//! the executed schedule is a pure function of the message sequence.
+//! Held messages are flushed in schedule order when the link closes or
+//! the plan is disarmed: nothing is ever lost *by the harness itself*
+//! once injection stops, which is what lets the chaos gates demand zero
+//! billed loss.
+//!
+//! Only the sender side is wrapped; receivers are untouched.  Both
+//! directions of every node link get an independent fault stream
+//! ([`Dir::Request`] / [`Dir::Response`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::fleet::transport::{
+    NodeId, NodeLink, RouterLink, Transport, WireRequest, WireResponse, WireTx,
+};
+
+use super::{Dir, FaultPlan, WireFault};
+
+/// Sender wrapper executing the plan on one link direction.
+struct FaultyTx<T> {
+    inner: Arc<dyn WireTx<T>>,
+    plan: Arc<FaultPlan>,
+    node: NodeId,
+    dir: Dir,
+    /// Per-link message index; the key into the fault schedule.
+    sent: AtomicU64,
+    /// Delayed messages: `(release_at_index, msg)`, released once the
+    /// link's send index passes `release_at_index` (or on close/disarm).
+    held: Mutex<Vec<(u64, T)>>,
+}
+
+impl<T: Send + Clone> FaultyTx<T> {
+    fn new(inner: Arc<dyn WireTx<T>>, plan: Arc<FaultPlan>, node: NodeId, dir: Dir) -> Self {
+        FaultyTx { inner, plan, node, dir, sent: AtomicU64::new(0), held: Mutex::new(Vec::new()) }
+    }
+
+    /// Deliver held messages due at or before `now`, oldest release
+    /// index first.
+    fn release_due(&self, now: u64) {
+        let due: Vec<(u64, T)> = {
+            let mut held = self.held.lock().unwrap();
+            if held.iter().all(|&(at, _)| at > now) {
+                return;
+            }
+            let mut due = Vec::new();
+            let mut i = 0;
+            while i < held.len() {
+                if held[i].0 <= now {
+                    due.push(held.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            due.sort_by_key(|&(at, _)| at);
+            due
+        };
+        for (_, msg) in due {
+            let _ = self.inner.send(msg);
+        }
+    }
+
+    /// Deliver everything held, regardless of release index.
+    fn flush(&self) {
+        let mut held: Vec<(u64, T)> = std::mem::take(&mut *self.held.lock().unwrap());
+        held.sort_by_key(|&(at, _)| at);
+        for (_, msg) in held {
+            let _ = self.inner.send(msg);
+        }
+    }
+}
+
+impl<T: Send + Clone> WireTx<T> for FaultyTx<T> {
+    fn send(&self, msg: T) -> std::result::Result<(), T> {
+        if !self.plan.armed() {
+            self.flush();
+            return self.inner.send(msg);
+        }
+        let index = self.sent.fetch_add(1, Ordering::Relaxed);
+        let ledger = &self.plan.ledger;
+        let result = match self.plan.wire_fault(self.node, self.dir, index) {
+            WireFault::Deliver => self.inner.send(msg),
+            WireFault::Drop => {
+                ledger.dropped.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            WireFault::Blackhole => {
+                ledger.blackholed.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            WireFault::Duplicate => {
+                ledger.duplicated.fetch_add(1, Ordering::Relaxed);
+                let copy = msg.clone();
+                match self.inner.send(msg) {
+                    Ok(()) => {
+                        // best-effort second copy; a full queue dropping
+                        // it just makes the duplicate a no-op
+                        let _ = self.inner.send(copy);
+                        Ok(())
+                    }
+                    Err(back) => Err(back),
+                }
+            }
+            WireFault::Delay(slots) => {
+                ledger.delayed.fetch_add(1, Ordering::Relaxed);
+                self.held.lock().unwrap().push((index + slots as u64, msg));
+                Ok(())
+            }
+        };
+        self.release_due(index);
+        result
+    }
+
+    fn close(&self) {
+        self.flush();
+        self.inner.close();
+    }
+}
+
+/// [`Transport`] decorator: wraps the sender half of every link handed
+/// out by `inner` with the plan's wire schedule.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultyTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: Arc<FaultPlan>) -> FaultyTransport {
+        FaultyTransport { inner, plan }
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn connect(&mut self, node: NodeId) -> (RouterLink, NodeLink) {
+        let (router, node_link) = self.inner.connect(node);
+        let req_tx: Arc<dyn WireTx<WireRequest>> = Arc::new(FaultyTx::new(
+            router.tx,
+            Arc::clone(&self.plan),
+            node,
+            Dir::Request,
+        ));
+        let rsp_inner: Arc<dyn WireTx<WireResponse>> = Arc::from(node_link.tx);
+        let rsp_tx: Box<dyn WireTx<WireResponse>> = Box::new(FaultyTx::new(
+            rsp_inner,
+            Arc::clone(&self.plan),
+            node,
+            Dir::Response,
+        ));
+        (
+            RouterLink { tx: req_tx, rx: router.rx },
+            NodeLink { rx: node_link.rx, tx: rsp_tx },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FaultsConfig;
+    use crate::fleet::transport::ChannelTransport;
+    use crate::fleet::transport::TryRecv;
+
+    fn plan_with(f: impl FnOnce(&mut FaultsConfig)) -> Arc<FaultPlan> {
+        let mut cfg = FaultsConfig::default();
+        cfg.enabled = true;
+        f(&mut cfg);
+        FaultPlan::new(cfg)
+    }
+
+    fn connect(plan: &Arc<FaultPlan>) -> (RouterLink, NodeLink) {
+        let mut t =
+            FaultyTransport::new(Box::new(ChannelTransport::new(1024)), Arc::clone(plan));
+        t.connect(0)
+    }
+
+    fn drain_req_ids(rx: &dyn crate::fleet::transport::WireRx<WireRequest>) -> Vec<u64> {
+        let mut ids = Vec::new();
+        loop {
+            match rx.try_recv() {
+                TryRecv::Msg(WireRequest::Ping { req_id }) => ids.push(req_id),
+                TryRecv::Msg(_) => unreachable!("tests only send pings"),
+                _ => return ids,
+            }
+        }
+    }
+
+    #[test]
+    fn disarmed_plan_passes_everything_through() {
+        let plan = plan_with(|c| c.drop_prob = 1.0);
+        plan.disarm();
+        let (router, node) = connect(&plan);
+        for req_id in 0..32 {
+            router.tx.send(WireRequest::Ping { req_id }).unwrap();
+        }
+        assert_eq!(drain_req_ids(node.rx.as_ref()).len(), 32);
+        assert_eq!(plan.ledger.total(), 0);
+    }
+
+    #[test]
+    fn drop_all_delivers_nothing_and_counts() {
+        let plan = plan_with(|c| c.drop_prob = 1.0);
+        let (router, node) = connect(&plan);
+        for req_id in 0..16 {
+            router.tx.send(WireRequest::Ping { req_id }).unwrap();
+        }
+        assert!(drain_req_ids(node.rx.as_ref()).is_empty());
+        assert_eq!(plan.ledger.dropped.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn duplicate_all_doubles_delivery() {
+        let plan = plan_with(|c| c.dup_prob = 1.0);
+        let (router, node) = connect(&plan);
+        for req_id in 0..8 {
+            router.tx.send(WireRequest::Ping { req_id }).unwrap();
+        }
+        let ids = drain_req_ids(node.rx.as_ref());
+        assert_eq!(ids.len(), 16);
+        for req_id in 0..8 {
+            assert_eq!(ids.iter().filter(|&&i| i == req_id).count(), 2);
+        }
+    }
+
+    #[test]
+    fn delay_reorders_but_loses_nothing() {
+        let plan = plan_with(|c| {
+            c.delay_prob = 0.5;
+            c.delay_slots = 3;
+        });
+        let (router, node) = connect(&plan);
+        let n = 64u64;
+        for req_id in 0..n {
+            router.tx.send(WireRequest::Ping { req_id }).unwrap();
+        }
+        // tail-held messages flush on close
+        router.tx.close();
+        let mut ids = drain_req_ids(node.rx.as_ref());
+        assert_eq!(plan.ledger.delayed.load(Ordering::Relaxed) > 0, true);
+        assert_ne!(ids, (0..n).collect::<Vec<_>>(), "some reordering expected");
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<_>>(), "nothing lost or duplicated");
+    }
+
+    #[test]
+    fn flap_window_blackholes_and_response_dir_is_independent() {
+        let plan = plan_with(|c| {
+            c.flap_node = 0;
+            c.flap_after = 4;
+            c.flap_len = 4;
+        });
+        let (router, node) = connect(&plan);
+        for req_id in 0..12 {
+            router.tx.send(WireRequest::Ping { req_id }).unwrap();
+        }
+        let ids = drain_req_ids(node.rx.as_ref());
+        assert_eq!(ids, vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(plan.ledger.blackholed.load(Ordering::Relaxed), 4);
+        // the response direction counts its own index space but shares
+        // the same flap window [4, 8): 12 sends -> 8 delivered
+        for req_id in 0..12 {
+            node.tx.send(WireResponse::Pong { req_id }).unwrap();
+        }
+        let mut got = 0;
+        while let TryRecv::Msg(_) = router.rx.try_recv() {
+            got += 1;
+        }
+        assert_eq!(got, 8);
+        assert_eq!(plan.ledger.blackholed.load(Ordering::Relaxed), 8);
+    }
+}

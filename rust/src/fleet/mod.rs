@@ -43,12 +43,14 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::compile::CompiledModel;
-use crate::config::FleetConfig;
+use crate::config::{FaultsConfig, FleetConfig};
 use crate::engine::{EngineConfig, QosClass};
 use crate::error::{Error, Result};
+use crate::faults::{HealthTracker, SeqLedger};
 use crate::obs::json as j;
 use crate::params::NetParams;
 use crate::sensor::Frame;
+use crate::serve::queue::wait_deadline;
 use crate::serve::{percentile_ns, InferResponse, MetricsReport};
 
 pub use router::{rendezvous_owner, rendezvous_rank, rendezvous_score, Placement,
@@ -122,19 +124,10 @@ impl FleetTicket {
     /// Bounded wait; `None` on timeout (claim stays valid).
     pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<FleetResponse>> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.slot.result.lock().unwrap();
-        loop {
-            if let Some(r) = g.take() {
-                return Some(r);
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, _) =
-                self.slot.ready.wait_timeout(g, deadline - now).unwrap();
-            g = guard;
-        }
+        let g = self.slot.result.lock().unwrap();
+        let (_g, r) =
+            wait_deadline(&self.slot.ready, g, deadline, |res| res.take());
+        r
     }
 
     /// Non-blocking poll.
@@ -170,18 +163,9 @@ impl ControlSlot {
 
     fn wait(&self, timeout: Duration) -> Option<Result<ControlAck>> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.result.lock().unwrap();
-        loop {
-            if let Some(r) = g.take() {
-                return Some(r);
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, _) = self.ready.wait_timeout(g, deadline - now).unwrap();
-            g = guard;
-        }
+        let g = self.result.lock().unwrap();
+        let (_g, r) = wait_deadline(&self.ready, g, deadline, |res| res.take());
+        r
     }
 }
 
@@ -197,8 +181,16 @@ struct PendingEntry {
     node: NodeId,
     attempts: u32,
     submitted: Instant,
+    /// When the frame last went on the wire (refreshed per placement);
+    /// the retransmit sweep ages on this, not on `submitted`.
+    last_sent: Instant,
     slot: Arc<FleetSlot>,
 }
+
+/// "Owner" of a parked frame (no placement available right now) — never
+/// a real node id, so link-down re-homing skips it and only the
+/// retransmit sweep picks it back up.
+const NO_NODE: NodeId = usize::MAX;
 
 #[derive(Clone, Debug, Default)]
 struct FleetStats {
@@ -212,9 +204,19 @@ struct FleetStats {
     rerouted: u64,
     spilled: u64,
     lost: [u64; QosClass::COUNT],
-    /// Responses with no pending entry (e.g. a late duplicate) — should
-    /// stay zero, tracked so it can't hide.
+    /// Responses with no pending entry *and* no resolved-ledger record —
+    /// a genuine protocol bug, tracked so it can't hide.
     orphaned: u64,
+    /// Responses for an already-resolved request id (late duplicates of
+    /// completed frames, stragglers from superseded placements) that the
+    /// ledger absorbed — the exactly-once counter.
+    deduped: u64,
+    /// Frames retransmitted by the monitor after `retransmit_ms` of
+    /// silence.
+    retries: u64,
+    /// Standard-class frames shed to best-effort routing under sustained
+    /// placement failure.
+    degraded: u64,
 }
 
 struct RouterState {
@@ -224,6 +226,12 @@ struct RouterState {
     reports: Vec<Option<MetricsReport>>,
     stats: FleetStats,
     latencies_ns: Vec<u64>,
+    /// Terminally-resolved (or superseded) request ids; see
+    /// [`crate::faults::SeqLedger`].
+    resolved: SeqLedger,
+    /// Node liveness machine — present only when `[faults]` is enabled
+    /// (the monitor thread owns the sweep cadence).
+    health: Option<HealthTracker>,
 }
 
 struct RouterCore {
@@ -266,6 +274,7 @@ fn route_and_send(core: &RouterCore, mut entry: PendingEntry)
                 st.stats.spilled += 1;
             }
             entry.node = placement.node;
+            entry.last_sent = Instant::now();
             let msg_parts = (entry.sensor_id, entry.class, entry.model_id,
                              entry.frame.clone());
             st.pending.insert(req_id, entry);
@@ -291,17 +300,31 @@ fn route_and_send(core: &RouterCore, mut entry: PendingEntry)
     }
 }
 
+/// Any message from `node` proves liveness; a rejoin (first sign of
+/// life from a health-dead node) puts it back into routing rotation.
+fn note_alive(core: &RouterCore, node: NodeId) {
+    let mut st = core.state.lock().unwrap();
+    let st = &mut *st;
+    if let Some(h) = st.health.as_mut() {
+        if h.mark_seen(node) {
+            st.table.mark_live(node);
+        }
+    }
+}
+
 /// One node's response collector: runs until the node's link closes,
 /// then re-homes whatever the dead node still owed.
 fn collect(core: &Arc<RouterCore>, node: NodeId,
            rx: Box<dyn transport::WireRx<WireResponse>>) {
     while let Some(msg) = rx.recv() {
+        note_alive(core, node);
         match msg {
             WireResponse::Completed { req_id, response } => {
                 let entry = {
                     let mut st = core.state.lock().unwrap();
                     match st.pending.remove(&req_id) {
                         Some(e) => {
+                            st.resolved.record(req_id);
                             st.table.release(node, e.class);
                             let ns = e.submitted.elapsed().as_nanos() as u64;
                             st.latencies_ns.push(ns);
@@ -311,7 +334,11 @@ fn collect(core: &Arc<RouterCore>, node: NodeId,
                             Some(e)
                         }
                         None => {
-                            st.stats.orphaned += 1;
+                            if st.resolved.contains(req_id) {
+                                st.stats.deduped += 1;
+                            } else {
+                                st.stats.orphaned += 1;
+                            }
                             None
                         }
                     }
@@ -360,6 +387,9 @@ fn collect(core: &Arc<RouterCore>, node: NodeId,
                     slot.fulfill(Ok(ControlAck::Drained));
                 }
             }
+            // Liveness was already noted above; a pong carries nothing
+            // else.
+            WireResponse::Pong { .. } => {}
         }
     }
     node_down(core, node);
@@ -376,6 +406,7 @@ fn resolve_error(core: &RouterCore, node: NodeId, req_id: u64, err: Error, term:
         let mut st = core.state.lock().unwrap();
         match st.pending.remove(&req_id) {
             Some(e) => {
+                st.resolved.record(req_id);
                 st.table.release(node, e.class);
                 match term {
                     Term::Rejected => st.stats.rejected += 1,
@@ -385,7 +416,11 @@ fn resolve_error(core: &RouterCore, node: NodeId, req_id: u64, err: Error, term:
                 Some(e)
             }
             None => {
-                st.stats.orphaned += 1;
+                if st.resolved.contains(req_id) {
+                    st.stats.deduped += 1;
+                } else {
+                    st.stats.orphaned += 1;
+                }
                 None
             }
         }
@@ -409,8 +444,15 @@ fn node_down(core: &Arc<RouterCore>, node: NodeId) {
             .filter(|(_, e)| e.node == node)
             .map(|(&id, _)| id)
             .collect();
-        let rehome: Vec<PendingEntry> =
-            ids.iter().map(|id| st.pending.remove(id).unwrap()).collect();
+        let rehome: Vec<PendingEntry> = ids
+            .iter()
+            .map(|id| {
+                // The re-home supersedes this placement: a straggler
+                // response under the old id dedups instead of orphaning.
+                st.resolved.record(*id);
+                st.pending.remove(id).unwrap()
+            })
+            .collect();
         let cids: Vec<u64> = st
             .control
             .iter()
@@ -428,10 +470,105 @@ fn node_down(core: &Arc<RouterCore>, node: NodeId) {
         entry.attempts += 1;
         core.state.lock().unwrap().stats.rerouted += 1;
         if let Err((err, entry)) = route_and_send(core, entry) {
+            dispose_unplaceable(core, entry, err);
+        }
+    }
+}
+
+/// A frame that could not be placed on any live node right now.  With
+/// the recovery plane on (health tracker present) it is parked for the
+/// next retransmit sweep — capacity frees up or a node rejoins, and
+/// nothing is lost while the fleet lives.  Without it the legacy drill
+/// semantics apply: the frame is lost and its ticket fails.
+fn dispose_unplaceable(core: &RouterCore, entry: PendingEntry, err: Error) {
+    let recovering = core.state.lock().unwrap().health.is_some();
+    if recovering {
+        park(core, entry);
+    } else {
+        let mut st = core.state.lock().unwrap();
+        st.stats.lost[entry.class.index()] += 1;
+        drop(st);
+        entry.slot.fulfill(Err(err));
+    }
+}
+
+/// Park a frame with no placement: it re-enters `pending` under a fresh
+/// id with no owning node, so the next retransmit sweep re-routes it.
+fn park(core: &RouterCore, mut entry: PendingEntry) {
+    entry.node = NO_NODE;
+    let req_id = core.req_id();
+    core.state.lock().unwrap().pending.insert(req_id, entry);
+}
+
+/// The recovery pulse (runs only while `[faults]` is enabled): every
+/// `probe_ms` it (1) pings every node — health-dead ones included, so a
+/// pong is what proves a rejoin — (2) advances the health machine,
+/// re-homing the frames of nodes that just went dead, and (3)
+/// retransmits pending frames older than `retransmit_ms`.
+fn monitor_loop(core: &Arc<RouterCore>, stop: &AtomicBool, cfg: &FaultsConfig) {
+    let probe = Duration::from_millis(cfg.probe_ms.max(1));
+    let retransmit_after = Duration::from_millis(cfg.retransmit_ms.max(1));
+    while !stop.load(Ordering::Acquire) {
+        for tx in &core.txs {
+            // A closed link (killed node) just errors; ignored.
+            let _ = tx.send(WireRequest::Ping { req_id: core.req_id() });
+        }
+        let died = {
             let mut st = core.state.lock().unwrap();
-            st.stats.lost[entry.class.index()] += 1;
-            drop(st);
-            entry.slot.fulfill(Err(err));
+            match st.health.as_mut() {
+                Some(h) => h.sweep(Instant::now()),
+                None => Vec::new(),
+            }
+        };
+        for node in died {
+            node_down(core, node);
+        }
+        retransmit_stale(core, retransmit_after, cfg.degrade_after);
+        std::thread::sleep(probe);
+    }
+}
+
+/// Retransmit every pending frame silent past `after`: release the old
+/// placement, record its request id as superseded (late responses dedup
+/// instead of double-completing), and re-route under a fresh id.  A
+/// Standard frame that keeps failing placement sheds to best-effort
+/// after `degrade_after` attempts (graceful degradation); frames that
+/// still cannot be placed are parked and swept again — never lost.
+fn retransmit_stale(core: &Arc<RouterCore>, after: Duration, degrade_after: u64) {
+    let now = Instant::now();
+    let stale: Vec<PendingEntry> = {
+        let mut st = core.state.lock().unwrap();
+        let ids: Vec<u64> = st
+            .pending
+            .iter()
+            .filter(|(_, e)| now.saturating_duration_since(e.last_sent) >= after)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut stale = Vec::with_capacity(ids.len());
+        for id in ids {
+            let e = st.pending.remove(&id).unwrap();
+            st.resolved.record(id);
+            st.table.release(e.node, e.class);
+            st.stats.retries += 1;
+            stale.push(e);
+        }
+        stale
+    };
+    for mut entry in stale {
+        entry.attempts += 1;
+        if let Err((_, mut entry)) = route_and_send(core, entry) {
+            if entry.class == QosClass::Standard
+                && degrade_after > 0
+                && entry.attempts as u64 >= degrade_after
+            {
+                entry.class = QosClass::BestEffort;
+                core.state.lock().unwrap().stats.degraded += 1;
+                match route_and_send(core, entry) {
+                    Ok(_) => continue,
+                    Err((_, e)) => entry = e,
+                }
+            }
+            park(core, entry);
         }
     }
 }
@@ -455,6 +592,10 @@ pub struct Fleet {
     killed: Mutex<Vec<NodeId>>,
     seqs: Mutex<HashMap<u32, u64>>,
     config: FleetConfig,
+    faults: FaultsConfig,
+    /// Health/retransmit monitor; present only with `[faults]` enabled.
+    monitor: Option<JoinHandle<()>>,
+    monitor_stop: Arc<AtomicBool>,
 }
 
 impl Fleet {
@@ -484,6 +625,7 @@ impl Fleet {
             links.push((router_link.rx, node_link));
         }
 
+        let faults_cfg = config.system.faults;
         let core = Arc::new(RouterCore {
             state: Mutex::new(RouterState {
                 table: RoutingTable::new(n, fleet_cfg.capacity),
@@ -495,6 +637,16 @@ impl Fleet {
                     ..FleetStats::default()
                 },
                 latencies_ns: Vec::new(),
+                resolved: SeqLedger::new(),
+                health: if faults_cfg.enabled {
+                    Some(HealthTracker::new(
+                        n,
+                        Duration::from_millis(faults_cfg.suspect_ms),
+                        Duration::from_millis(faults_cfg.dead_ms),
+                    ))
+                } else {
+                    None
+                },
             }),
             txs,
             next_req: AtomicU64::new(1),
@@ -532,12 +684,29 @@ impl Fleet {
             });
         }
 
+        let monitor_stop = Arc::new(AtomicBool::new(false));
+        let monitor = if faults_cfg.enabled {
+            let core = Arc::clone(&core);
+            let stop = Arc::clone(&monitor_stop);
+            Some(
+                std::thread::Builder::new()
+                    .name("fleet-monitor".into())
+                    .spawn(move || monitor_loop(&core, &stop, &faults_cfg))
+                    .map_err(|e| Error::Serve(format!("spawn fleet monitor: {e}")))?,
+            )
+        } else {
+            None
+        };
+
         Ok(Fleet {
             core,
             handles,
             killed: Mutex::new(Vec::new()),
             seqs: Mutex::new(HashMap::new()),
             config: fleet_cfg,
+            faults: faults_cfg,
+            monitor,
+            monitor_stop,
         })
     }
 
@@ -578,6 +747,7 @@ impl Fleet {
     pub fn submit_stamped(&self, sensor_id: u32, class: QosClass, model_id: u32,
                           frame: Frame) -> Result<FleetTicket> {
         let slot = Arc::new(FleetSlot::new());
+        let now = Instant::now();
         let entry = PendingEntry {
             sensor_id,
             class,
@@ -585,7 +755,8 @@ impl Fleet {
             frame,
             node: 0,
             attempts: 0,
-            submitted: Instant::now(),
+            submitted: now,
+            last_sent: now,
             slot: Arc::clone(&slot),
         };
         match route_and_send(&self.core, entry) {
@@ -613,7 +784,15 @@ impl Fleet {
         self.handles[node].kill.store(true, Ordering::Release);
         // Stop feeding it; in-flight responses still drain off the link.
         self.core.txs[node].close();
-        self.core.state.lock().unwrap().table.mark_dead(node);
+        {
+            let mut st = self.core.state.lock().unwrap();
+            let st = &mut *st;
+            st.table.mark_dead(node);
+            // An operator kill is permanent — no health rejoin.
+            if let Some(h) = st.health.as_mut() {
+                h.mark_killed(node);
+            }
+        }
         let mut killed = self.killed.lock().unwrap();
         if !killed.contains(&node) {
             killed.push(node);
@@ -634,41 +813,68 @@ impl Fleet {
         let version = stamped.version;
         let live = self.live_nodes();
         let mut acks = Vec::with_capacity(live.len());
-        for node in live {
-            let req_id = self.core.req_id();
-            let slot = Arc::new(ControlSlot::new(node));
-            self.core
-                .state
-                .lock()
-                .unwrap()
-                .control
-                .insert(req_id, Arc::clone(&slot));
-            let msg = WireRequest::PushModel {
-                req_id,
-                model_id,
-                artifact: Arc::clone(&artifact),
-            };
-            if self.core.txs[node].send(msg).is_err() {
-                self.core.state.lock().unwrap().control.remove(&req_id);
-                continue;
-            }
-            match slot.wait(CONTROL_TIMEOUT) {
-                Some(Ok(ControlAck::Pushed { version: acked })) => {
-                    if acked != version {
-                        return Err(Error::Serve(format!(
-                            "fleet push_model: node {node} acked version \
-                             {acked:016x}, expected {version:016x}"
-                        )));
+        let policy = crate::faults::RetryPolicy::control();
+        let mut rng = crate::rng::Xoshiro256::new(self.faults.seed ^ 0x9b75);
+        'nodes: for node in live {
+            for attempt in 0..=policy.budget {
+                // Chaos artifact fault: the plan may flip one byte of
+                // *this attempt's* copy in transit; the node's checksum
+                // rejects it and the retry redraws (fresh attempt index).
+                let payload = match crate::faults::artifact_corruption(
+                    &self.faults, node, attempt as u64, artifact.len(),
+                ) {
+                    Some(pos) => {
+                        let mut bytes = (*artifact).clone();
+                        bytes[pos] ^= 0x40;
+                        Arc::new(bytes)
                     }
-                    acks.push((node, acked));
+                    None => Arc::clone(&artifact),
+                };
+                let req_id = self.core.req_id();
+                let slot = Arc::new(ControlSlot::new(node));
+                self.core
+                    .state
+                    .lock()
+                    .unwrap()
+                    .control
+                    .insert(req_id, Arc::clone(&slot));
+                let msg = WireRequest::PushModel { req_id, model_id, artifact: payload };
+                if self.core.txs[node].send(msg).is_err() {
+                    self.core.state.lock().unwrap().control.remove(&req_id);
+                    continue 'nodes;
                 }
-                Some(Ok(ControlAck::Drained)) => unreachable!("push acked as drain"),
-                Some(Err(Error::Serve(e))) if e.contains("went down") => continue,
-                Some(Err(e)) => return Err(e),
-                None => {
-                    return Err(Error::Serve(format!(
-                        "fleet push_model: node {node} ack timed out"
-                    )))
+                match slot.wait(CONTROL_TIMEOUT) {
+                    Some(Ok(ControlAck::Pushed { version: acked })) => {
+                        if acked != version {
+                            return Err(Error::Serve(format!(
+                                "fleet push_model: node {node} acked version \
+                                 {acked:016x}, expected {version:016x}"
+                            )));
+                        }
+                        acks.push((node, acked));
+                        continue 'nodes;
+                    }
+                    Some(Ok(ControlAck::Drained)) => unreachable!("push acked as drain"),
+                    Some(Err(Error::Serve(e))) if e.contains("went down") => {
+                        continue 'nodes;
+                    }
+                    Some(Err(Error::Serve(e))) => {
+                        // PushFailed (bad bytes, checksum): retryable.
+                        if attempt >= policy.budget {
+                            return Err(Error::Serve(format!(
+                                "fleet push_model: node {node} refused the \
+                                 artifact after {attempt} retries: {e}"
+                            )));
+                        }
+                        self.core.state.lock().unwrap().stats.retries += 1;
+                        std::thread::sleep(policy.backoff(attempt, &mut rng));
+                    }
+                    Some(Err(e)) => return Err(e),
+                    None => {
+                        return Err(Error::Serve(format!(
+                            "fleet push_model: node {node} ack timed out"
+                        )))
+                    }
                 }
             }
         }
@@ -684,6 +890,12 @@ impl Fleet {
     /// in-flight frames, then reports), join the node threads, and fold
     /// everything into a [`FleetReport`].
     pub fn drain(mut self) -> Result<FleetReport> {
+        // Stop the recovery pulse first: no health death or retransmit
+        // may race the drain handshake.
+        self.monitor_stop.store(true, Ordering::Release);
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
         let live = self.live_nodes();
         let mut waits = Vec::with_capacity(live.len());
         for &node in &live {
@@ -721,6 +933,11 @@ impl Fleet {
         let stats = st.stats.clone();
         let reports = std::mem::take(&mut st.reports);
         let mut lat = std::mem::take(&mut st.latencies_ns);
+        let (health_suspect, health_dead, health_rejoined) = st
+            .health
+            .as_ref()
+            .map(|h| (h.to_suspect, h.to_dead, h.rejoined))
+            .unwrap_or((0, 0, 0));
         drop(st);
         lat.sort_unstable();
         let ms = |q: f64| percentile_ns(&lat, q) as f64 / 1e6;
@@ -739,6 +956,12 @@ impl Fleet {
             spilled: stats.spilled,
             lost: stats.lost,
             orphaned: stats.orphaned,
+            deduped: stats.deduped,
+            retries: stats.retries,
+            degraded: stats.degraded,
+            health_suspect,
+            health_dead,
+            health_rejoined,
             p50_ms: ms(0.50),
             p95_ms: ms(0.95),
             p99_ms: ms(0.99),
@@ -760,6 +983,10 @@ impl Drop for Fleet {
     fn drop(&mut self) {
         // Ungraceful teardown (e.g. a test bailed): sever every link so
         // node loops and collectors exit instead of leaking.
+        self.monitor_stop.store(true, Ordering::Release);
+        if let Some(h) = self.monitor.take() {
+            let _ = h.join();
+        }
         for (node, handle) in self.handles.iter_mut().enumerate() {
             handle.kill.store(true, Ordering::Release);
             self.core.txs[node].close();
@@ -845,6 +1072,18 @@ pub struct FleetReport {
     /// Frames lost per class (no live node left to serve them).
     pub lost: [u64; QosClass::COUNT],
     pub orphaned: u64,
+    /// Late/duplicate responses absorbed by the resolved ledger
+    /// (exactly-once under wire duplication and retransmits).
+    pub deduped: u64,
+    /// Monitor retransmits of silent frames.
+    pub retries: u64,
+    /// Standard frames shed to best-effort routing under fault pressure.
+    pub degraded: u64,
+    /// Health machine transitions observed (alive→suspect, →dead,
+    /// dead→alive).
+    pub health_suspect: u64,
+    pub health_dead: u64,
+    pub health_rejoined: u64,
     /// Router-observed end-to-end latency percentiles (spanning
     /// re-homes).
     pub p50_ms: f64,
@@ -886,6 +1125,15 @@ impl FleetReport {
         j::push_u64_field(&mut out, "rerouted", self.rerouted);
         j::push_u64_field(&mut out, "spilled", self.spilled);
         j::push_u64_field(&mut out, "orphaned", self.orphaned);
+        j::push_u64_field(&mut out, "deduped", self.deduped);
+        j::push_u64_field(&mut out, "retries", self.retries);
+        j::push_u64_field(&mut out, "degraded", self.degraded);
+        out.push_str("\"health\":{");
+        j::push_u64_field(&mut out, "suspect", self.health_suspect);
+        j::push_u64_field(&mut out, "dead", self.health_dead);
+        j::push_u64_field(&mut out, "rejoined", self.health_rejoined);
+        out.pop();
+        out.push_str("},");
         j::push_u64_field(&mut out, "billed_lost", self.billed_lost());
         out.push_str("\"completed_by_class\":{");
         for class in QosClass::ALL {
@@ -944,6 +1192,17 @@ impl FleetReport {
             self.rerouted, self.spilled, self.billed_lost(),
             self.p50_ms, self.p95_ms, self.p99_ms, self.max_ms
         );
+        if self.retries + self.deduped + self.degraded + self.health_dead
+            + self.health_rejoined
+            > 0
+        {
+            println!(
+                "  recovery: retries {}  deduped {}  degraded {}  \
+                 health suspect/dead/rejoined {}/{}/{}",
+                self.retries, self.deduped, self.degraded,
+                self.health_suspect, self.health_dead, self.health_rejoined
+            );
+        }
         for node in 0..self.nodes {
             match &self.node_reports[node] {
                 Some(r) => println!(

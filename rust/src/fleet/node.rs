@@ -24,7 +24,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::Error;
 use crate::serve::{Request, Server, Ticket};
@@ -36,12 +36,19 @@ use super::transport::{NodeId, NodeLink, TryRecv, WireRequest, WireResponse};
 /// deadline, high enough not to spin.
 const IDLE_POLL: Duration = Duration::from_micros(100);
 
+/// Upper bound on waiting for in-flight tickets during a drain.  A
+/// ticket can dangle forever if its shard died mid-dispatch (an injected
+/// panic whose batch was already claimed); past this bound the node
+/// fails the stragglers and drains anyway, instead of wedging the fleet
+/// against the router's much larger control timeout.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
 /// Run one node until drain, kill, or router disconnect.  `kill` is the
 /// drill switch: once set, the server is dropped without drain.
 pub(crate) fn run(id: NodeId, server: Server, link: NodeLink, kill: Arc<AtomicBool>) {
     let mut server = Some(server);
     let mut pending: Vec<(u64, Ticket)> = Vec::new();
-    let mut draining: Option<u64> = None;
+    let mut draining: Option<(u64, Instant)> = None;
 
     loop {
         if kill.load(Ordering::Acquire) {
@@ -53,8 +60,18 @@ pub(crate) fn run(id: NodeId, server: Server, link: NodeLink, kill: Arc<AtomicBo
 
         let mut progressed = poll_tickets(&mut pending, &link);
 
-        if let Some(drain_req) = draining {
+        if let Some((drain_req, since)) = draining {
             if pending.is_empty() {
+                finish_drain(id, drain_req, server.take(), &link);
+                return;
+            }
+            if since.elapsed() >= DRAIN_DEADLINE {
+                for (req_id, _) in pending.drain(..) {
+                    let _ = link.tx.send(WireResponse::Failed {
+                        req_id,
+                        error: "node drain deadline: ticket never resolved".into(),
+                    });
+                }
                 finish_drain(id, drain_req, server.take(), &link);
                 return;
             }
@@ -89,7 +106,12 @@ pub(crate) fn run(id: NodeId, server: Server, link: NodeLink, kill: Arc<AtomicBo
                                               model_id, &artifact, req_id);
                         let _ = link.tx.send(resp);
                     }
-                    WireRequest::Drain { req_id } => draining = Some(req_id),
+                    WireRequest::Drain { req_id } => {
+                        draining = Some((req_id, Instant::now()));
+                    }
+                    WireRequest::Ping { req_id } => {
+                        let _ = link.tx.send(WireResponse::Pong { req_id });
+                    }
                 }
             }
             TryRecv::Empty => {}

@@ -112,6 +112,17 @@ impl RoutingTable {
         }
     }
 
+    /// Put `node` back into rotation after a transient fault (health
+    /// monitor rejoin).  Its in-flight ledger restarts from zero: every
+    /// frame it owed was re-homed when it was marked dead, so the node
+    /// comes back empty.  No-op for a node that is already live.
+    pub fn mark_live(&mut self, node: NodeId) {
+        if node < self.live.len() && !self.live[node] {
+            self.live[node] = true;
+            self.in_flight[node] = [0; QosClass::COUNT];
+        }
+    }
+
     pub fn in_flight(&self, node: NodeId, class: QosClass) -> usize {
         self.in_flight[node][class.index()]
     }
@@ -204,5 +215,24 @@ mod tests {
         // Releasing against a dead node is a no-op, not an underflow.
         table.release(1, QosClass::Standard);
         assert_eq!(table.in_flight(1, QosClass::Standard), 0);
+    }
+
+    #[test]
+    fn rejoin_restores_rotation_with_a_clean_ledger() {
+        let mut table = RoutingTable::new(2, [1, 1, 1]);
+        table.admit(7, QosClass::Standard).unwrap();
+        table.admit(7, QosClass::Standard).unwrap();
+        table.mark_dead(0);
+        assert!(!table.is_live(0));
+        // rejoin: live again, in-flight zeroed (its frames were re-homed)
+        table.mark_live(0);
+        assert!(table.is_live(0));
+        assert_eq!(table.in_flight(0, QosClass::Standard), 0);
+        // mark_live on an already-live node must not zero a real ledger
+        let p = table.admit(9, QosClass::Standard).unwrap();
+        let before = table.in_flight(p.node, QosClass::Standard);
+        table.mark_live(p.node);
+        assert_eq!(table.in_flight(p.node, QosClass::Standard), before);
+        assert_eq!(table.live_nodes(), vec![0, 1]);
     }
 }

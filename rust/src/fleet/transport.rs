@@ -57,6 +57,11 @@ pub enum WireRequest {
     },
     /// Graceful shutdown: finish in-flight frames, then report.
     Drain { req_id: u64 },
+    /// Health probe (see [`crate::faults::health`]): the node answers
+    /// with [`WireResponse::Pong`] immediately.  Any response refreshes a
+    /// node's last-seen time; pings guarantee one exists even when the
+    /// node owes no frames.
+    Ping { req_id: u64 },
 }
 
 /// Node → router messages.
@@ -77,6 +82,8 @@ pub enum WireResponse {
     PushFailed { req_id: u64, error: String },
     /// `Drain` finished; the node's frozen serving metrics.
     Drained { req_id: u64, report: Box<MetricsReport> },
+    /// Answer to a [`WireRequest::Ping`] health probe.
+    Pong { req_id: u64 },
 }
 
 impl WireResponse {
@@ -89,7 +96,8 @@ impl WireResponse {
             | WireResponse::Failed { req_id, .. }
             | WireResponse::ModelPushed { req_id, .. }
             | WireResponse::PushFailed { req_id, .. }
-            | WireResponse::Drained { req_id, .. } => *req_id,
+            | WireResponse::Drained { req_id, .. }
+            | WireResponse::Pong { req_id } => *req_id,
         }
     }
 }

@@ -113,6 +113,7 @@ pub mod energy;
 pub mod engine;
 pub mod error;
 pub mod exec;
+pub mod faults;
 pub mod fleet;
 pub mod hw;
 pub mod isa;

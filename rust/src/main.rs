@@ -57,6 +57,15 @@
 //! * `profile`   — print a hardware profile as a standalone TOML file
 //!                 (the `configs/profiles/*.toml` format); with no name
 //!                 given, list the built-in profile names.
+//! * `chaos`     — run one named, seeded fault-injection scenario
+//!                 (`--scenario flaky-transport|slow-shard|node-flap|
+//!                 bitflip-sweep`) against the fleet/serve planes and
+//!                 report the recovery evidence: injected-fault ledger,
+//!                 recovery p99 vs `[faults] p99_budget`, billed loss,
+//!                 and completed-frame logit divergence against a
+//!                 fault-free pass; the seeded schedule section of the
+//!                 `--json` document is byte-identical across runs with
+//!                 the same `--seed` (`BENCH_chaos.json` in CI).
 //! * `transient` — print the Fig. 9 RBL discharge waveforms.
 //! * `montecarlo`— run the Fig. 10 variation analysis.
 //! * `info`      — show configuration, geometry, energy/area headline.
@@ -107,6 +116,9 @@ fn command() -> Command {
                               into one timeline)")
         .subcommand("profile", "print a hardware profile as TOML (no name: \
                                 list built-ins)")
+        .subcommand("chaos", "seeded fault-injection scenarios over the \
+                              serve/fleet planes (flaky-transport, \
+                              slow-shard, node-flap, bitflip-sweep)")
         .subcommand("transient", "Fig. 9 RBL discharge waveforms")
         .subcommand("montecarlo", "Fig. 10 sense-margin analysis")
         .subcommand("info", "configuration and headline numbers")
@@ -146,6 +158,8 @@ fn command() -> Command {
         .opt("kill-after", "N",
              "fleet-bench --drill: kill after N submitted frames \
               (0 = halfway; default fleet.drill.kill_after)")
+        .opt("scenario", "NAME",
+             "chaos: flaky-transport|slow-shard|node-flap|bitflip-sweep")
         .opt("chrome", "FILE",
              "trace: also write a merged Chrome trace of all feeds \
               (one process per feed)")
@@ -184,6 +198,7 @@ fn real_main(args: &[String]) -> Result<()> {
         Some("run") => run_pipeline(&parsed, system),
         Some("serve-bench") => serve_bench(&parsed, system),
         Some("fleet-bench") => fleet_bench(&parsed, system),
+        Some("chaos") => chaos_bench(&parsed, system),
         Some("compile") => compile_model(&parsed, system),
         Some("ab") => ab_compare(&parsed, system),
         Some("trace") => trace_summary(&parsed),
@@ -351,6 +366,7 @@ struct ServeRun {
     report: ns_lbp::serve::MetricsReport,
     async_stats: Option<ns_lbp::serve::AsyncStats>,
     fairness_spread: u64,
+    admission_retries: u64,
 }
 
 /// Replay `frames` through one server instance at `load` offered fps
@@ -397,6 +413,11 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
         std::collections::HashMap::new();
     let t0 = std::time::Instant::now();
     let mut tickets: Vec<Ticket> = Vec::with_capacity(frames.len());
+    // admission-control rejections retry under jittered exponential
+    // backoff; the budget turns a wedged server into an error instead
+    // of a silent spin
+    let mut retrier = ns_lbp::faults::Retrier::new(
+        ns_lbp::faults::RetryPolicy::admission(), 0x5e7e_ad31_0b5e_55ed);
     for (i, frame) in frames.iter().enumerate() {
         if load > 0.0 {
             let due = t0 + std::time::Duration::from_secs_f64(i as f64 / load);
@@ -408,28 +429,20 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
         let class = mix[i % mix.len()];
         let model = (i % n_models) as u32;
         let sensor = (i % sensors) as u32;
-        loop {
-            let seq = *seqs.get(&sensor).unwrap_or(&0);
+        let seq = *seqs.get(&sensor).unwrap_or(&0);
+        let ticket = retrier.run(|| {
             let request = ns_lbp::serve::Request::builder(
                 frame.clone().with_seq(seq))
                 .sensor_id(sensor)
                 .class(class)
                 .model(model)
                 .build();
-            match server.submit(request) {
-                Ok(t) => {
-                    seqs.insert(sensor, seq + 1);
-                    tickets.push(t);
-                    break;
-                }
-                // admission-control rejection: back off and retry
-                Err(ns_lbp::Error::Serve(_)) => {
-                    std::thread::sleep(std::time::Duration::from_micros(200));
-                }
-                Err(e) => return Err(e),
-            }
-        }
+            server.submit(request)
+        })?;
+        seqs.insert(sensor, seq + 1);
+        tickets.push(ticket);
     }
+    let admission_retries = retrier.retries;
     let mut mismatches = 0u64;
     let mut cross_mismatches = 0u64;
     // every offered sensor starts at zero so a fully-shed stream still
@@ -469,7 +482,7 @@ fn serve_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
             "{cross_mismatches} cross-check divergences under serve"
         )));
     }
-    Ok(ServeRun { report, async_stats, fairness_spread })
+    Ok(ServeRun { report, async_stats, fairness_spread, admission_retries })
 }
 
 /// Render the async-plane counters as a JSON object (or `null` for the
@@ -644,10 +657,11 @@ fn serve_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
             }
             s.push_str(&format!(
                 "{{\"shards\":{},\"modeled_fps\":{},\"fairness_spread\":{},\
-                 \"async\":{},\"report\":{}}}",
+                 \"admission_retries\":{},\"async\":{},\"report\":{}}}",
                 n,
                 run.report.modeled_fps(*n),
                 run.fairness_spread,
+                run.admission_retries,
                 async_json(&run.async_stats),
                 run.report.to_json()
             ));
@@ -674,6 +688,10 @@ struct FleetRun {
     report: ns_lbp::fleet::FleetReport,
     offered: [u64; QosClass::COUNT],
     push_acks: Option<Vec<(ns_lbp::fleet::NodeId, u64)>>,
+    admission_retries: u64,
+    /// Sum of per-response re-home counts the *clients* saw; the drill
+    /// gate checks it against the router's own `rerouted` counter.
+    rehomed_observed: u64,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -698,6 +716,10 @@ fn fleet_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
         std::collections::HashMap::new();
     let mut tickets = Vec::with_capacity(frames.len());
     let mut offered = [0u64; QosClass::COUNT];
+    // "every live node at class capacity" retries under jittered
+    // exponential backoff instead of a flat 200 µs spin
+    let mut retrier = ns_lbp::faults::Retrier::new(
+        ns_lbp::faults::RetryPolicy::admission(), 0xf1ee_70ad_155e_ed00);
     for (i, frame) in frames.iter().enumerate() {
         if i == event_at {
             if let Some((node, _)) = kill {
@@ -718,27 +740,20 @@ fn fleet_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
         let class = mix[i % mix.len()];
         offered[class.index()] += 1;
         let seq = *seqs.get(&sensor).unwrap_or(&0);
-        loop {
-            match fleet.submit_stamped(sensor, class, 0,
-                                       frame.clone().with_seq(seq)) {
-                Ok(t) => {
-                    seqs.insert(sensor, seq + 1);
-                    tickets.push(t);
-                    break;
-                }
-                // every live node at class capacity: back off and retry
-                Err(ns_lbp::Error::Serve(_)) => {
-                    std::thread::sleep(std::time::Duration::from_micros(200));
-                }
-                Err(e) => return Err(e),
-            }
-        }
+        let ticket = retrier.run(|| {
+            fleet.submit_stamped(sensor, class, 0, frame.clone().with_seq(seq))
+        })?;
+        seqs.insert(sensor, seq + 1);
+        tickets.push(ticket);
     }
+    let admission_retries = retrier.retries;
     let mut mismatches = 0u64;
     let mut cross_mismatches = 0u64;
+    let mut rehomed_observed = 0u64;
     for t in tickets {
         match t.wait() {
             Ok(r) => {
+                rehomed_observed += r.rerouted as u64;
                 mismatches += r.inner.report.telemetry.arch_mismatches;
                 cross_mismatches +=
                     r.inner.report.telemetry.cross_check_mismatches;
@@ -761,7 +776,7 @@ fn fleet_replay(params: &NetParams, system: &SystemConfig, arch: ArchSim,
             "{cross_mismatches} cross-check divergences under fleet"
         )));
     }
-    Ok(FleetRun { report, offered, push_acks })
+    Ok(FleetRun { report, offered, push_acks, admission_retries, rehomed_observed })
 }
 
 fn offered_json(offered: &[u64; QosClass::COUNT]) -> String {
@@ -883,9 +898,11 @@ fn fleet_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
                 let inflation =
                     run.report.p99_ms / baseline.report.p99_ms.max(1e-9);
                 println!(
-                    "  drill gate: billed lost {} | rerouted {} | p99 \
-                     {:.3} ms vs baseline {:.3} ms ({:.2}x, budget {:.1}x)",
+                    "  drill gate: billed lost {} | rerouted {} (clients \
+                     saw {}) | p99 {:.3} ms vs baseline {:.3} ms ({:.2}x, \
+                     budget {:.1}x)",
                     run.report.billed_lost(), run.report.rerouted,
+                    run.rehomed_observed,
                     run.report.p99_ms, baseline.report.p99_ms, inflation,
                     system.fleet.drill.p99_budget
                 );
@@ -930,11 +947,14 @@ fn fleet_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
                 }
                 s.push_str(&format!(
                     "\"p99_budget\":{},\"baseline_p99_ms\":{},\
-                     \"drill_p99_ms\":{},\"p99_inflation\":{},",
+                     \"drill_p99_ms\":{},\"p99_inflation\":{},\
+                     \"rehomed_observed\":{},\"admission_retries\":{},",
                     system.fleet.drill.p99_budget,
                     baseline.report.p99_ms,
                     run.report.p99_ms,
-                    run.report.p99_ms / baseline.report.p99_ms.max(1e-9)
+                    run.report.p99_ms / baseline.report.p99_ms.max(1e-9),
+                    run.rehomed_observed,
+                    run.admission_retries
                 ));
                 match &run.push_acks {
                     Some(acks) => {
@@ -962,6 +982,492 @@ fn fleet_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig) -> Result<()>
         }
         s.push('}');
         println!("{s}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// chaos: seeded fault-injection scenarios
+// ---------------------------------------------------------------------------
+
+/// One fleet pass for the chaos harness: the drained rollup, the
+/// completed-frame logits keyed by `(sensor, seq)` for the bit-identity
+/// comparison, and the caller-side admission retry count.
+struct ChaosPass {
+    report: ns_lbp::fleet::FleetReport,
+    logits: std::collections::HashMap<(u32, u64), Vec<f32>>,
+    admission_retries: u64,
+}
+
+/// Replay `frames` through a fleet built from `system`, optionally over
+/// a [`ns_lbp::faults::FaultyTransport`] armed with `plan`.  The plan
+/// (when given) is disarmed before drain so shutdown control traffic
+/// cannot be eaten by the schedule.
+fn chaos_fleet_pass(
+    params: &NetParams,
+    system: &SystemConfig,
+    frames: &[Frame],
+    mix: &[QosClass],
+    sensors: &[u32],
+    plan: Option<&std::sync::Arc<ns_lbp::faults::FaultPlan>>,
+    settle: std::time::Duration,
+) -> Result<ChaosPass> {
+    let arch = ArchSim { lbp: false, mlp: false, early_exit: false };
+    let config =
+        CoordinatorConfig { system: system.clone(), arch, shard: None };
+    let fleet = match plan {
+        Some(plan) => {
+            // duplicates and held-back deliveries inflate queue
+            // occupancy past the capacity-derived depth `start()` picks,
+            // so size the channels generously
+            let depth: usize =
+                system.fleet.capacity.iter().sum::<usize>() * 4 + 64;
+            let transport = ns_lbp::faults::FaultyTransport::new(
+                Box::new(ns_lbp::fleet::ChannelTransport::new(depth)),
+                std::sync::Arc::clone(plan),
+            );
+            ns_lbp::fleet::Fleet::start_with_transport(
+                params.clone(), config, Box::new(transport))?
+        }
+        None => ns_lbp::fleet::Fleet::start(params.clone(), config)?,
+    };
+    let mut seqs: std::collections::HashMap<u32, u64> =
+        std::collections::HashMap::new();
+    let mut retrier = ns_lbp::faults::Retrier::new(
+        ns_lbp::faults::RetryPolicy::admission(),
+        system.faults.seed ^ 0xc4a0_5bad_c0de_0001,
+    );
+    let mut tickets = Vec::with_capacity(frames.len());
+    for (i, frame) in frames.iter().enumerate() {
+        let sensor = sensors[i % sensors.len()];
+        let class = mix[i % mix.len()];
+        let seq = *seqs.get(&sensor).unwrap_or(&0);
+        let ticket = retrier.run(|| {
+            fleet.submit_stamped(sensor, class, 0, frame.clone().with_seq(seq))
+        })?;
+        seqs.insert(sensor, seq + 1);
+        tickets.push(ticket);
+    }
+    let mut logits = std::collections::HashMap::new();
+    for t in tickets {
+        // bounded wait, so a recovery bug fails the harness instead of
+        // hanging it
+        match t.wait_timeout(std::time::Duration::from_secs(30)) {
+            Some(Ok(r)) => {
+                logits.insert(
+                    (r.inner.sensor_id, r.seq()),
+                    r.inner.report.logits.clone(),
+                );
+            }
+            // shed or lost under faults: the rollup's drop/lost
+            // counters (and the billed-loss gate) account for these
+            Some(Err(ns_lbp::Error::Dropped(_)))
+            | Some(Err(ns_lbp::Error::Serve(_))) => {}
+            Some(Err(e)) => return Err(e),
+            None => {
+                return Err(ns_lbp::Error::Serve(
+                    "chaos: frame unresolved after 30 s".into(),
+                ));
+            }
+        }
+    }
+    // a flap window is measured in message indexes, so once the frames
+    // resolve only the probe stream advances it: the settle gives the
+    // probes wall-clock time to walk the blackhole off the link and let
+    // the dead node rejoin before the rollup is read
+    if !settle.is_zero() {
+        std::thread::sleep(settle);
+    }
+    if let Some(plan) = plan {
+        plan.disarm();
+    }
+    let report = fleet.drain()?;
+    Ok(ChaosPass { report, logits, admission_retries: retrier.retries })
+}
+
+/// The effective injection/recovery knobs, machine-readably.
+fn faults_json(f: &ns_lbp::config::FaultsConfig) -> String {
+    format!(
+        "{{\"seed\":{},\"drop_prob\":{},\"dup_prob\":{},\"delay_prob\":{},\
+         \"delay_slots\":{},\"flap_node\":{},\"flap_after\":{},\
+         \"flap_len\":{},\"stall_prob\":{},\"stall_us\":{},\
+         \"panic_prob\":{},\"artifact_corrupt_prob\":{},\
+         \"bitflip_sigma_scale\":{},\"retransmit_ms\":{},\"probe_ms\":{},\
+         \"suspect_ms\":{},\"dead_ms\":{},\"degrade_after\":{},\
+         \"p99_budget\":{}}}",
+        f.seed, f.drop_prob, f.dup_prob, f.delay_prob, f.delay_slots,
+        f.flap_node, f.flap_after, f.flap_len, f.stall_prob, f.stall_us,
+        f.panic_prob, f.artifact_corrupt_prob, f.bitflip_sigma_scale,
+        f.retransmit_ms, f.probe_ms, f.suspect_ms, f.dead_ms,
+        f.degrade_after, f.p99_budget
+    )
+}
+
+/// The determinism proof: a digest over the pure wire schedule plus its
+/// first non-`Deliver` slots.  Two runs with the same seed and knobs
+/// print this section byte-identically (`scripts/chaos_check.py`
+/// compares them verbatim).
+fn schedule_json(plan: &ns_lbp::faults::FaultPlan, nodes: usize) -> String {
+    let digest = plan.schedule_digest(nodes, 256);
+    let events = plan.schedule_events(nodes, 96, 48);
+    let mut s = format!("{{\"digest\":\"{digest:016x}\",\"events\":[");
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let arg = match e.fault {
+            ns_lbp::faults::WireFault::Delay(slots) => slots,
+            _ => 0,
+        };
+        s.push_str(&format!(
+            "{{\"node\":{},\"dir\":\"{}\",\"index\":{},\"fault\":\"{}\",\
+             \"arg\":{}}}",
+            e.node, e.dir.as_str(), e.index, e.fault.as_str(), arg
+        ));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// `ns-lbp chaos --scenario NAME [--seed S] [--frames N] [--nodes N]
+/// [--mix A:B:C] [--json]`: run one named, seeded fault-injection
+/// scenario and report the recovery evidence against a fault-free pass
+/// over the same frames.  `--json` emits one machine-readable document
+/// (`BENCH_chaos.json` in CI, gated by `scripts/chaos_check.py`).
+fn chaos_bench(parsed: &ns_lbp::cli::Parsed, system: SystemConfig)
+               -> Result<()> {
+    let scenario = parsed.opt("scenario").ok_or_else(|| {
+        ns_lbp::Error::Usage(
+            "chaos expects --scenario \
+             flaky-transport|slow-shard|node-flap|bitflip-sweep"
+                .into(),
+        )
+    })?;
+    let json = parsed.flag("json");
+    let mut system = system;
+    system.fleet.nodes = parsed.opt_parse("nodes", system.fleet.nodes)?;
+    system.fleet.validate()?;
+    // wire/shard scenarios drive the functional backend (recovery is
+    // backend-agnostic, and the fault-free logit comparison only needs
+    // determinism); the bitflip sweep exercises the architectural one
+    system.engine.backend = BackendKind::Functional;
+    system.engine.cross_check = None;
+
+    // one --seed steers both the fault schedule and the frame synth, so
+    // "same seed, same scenario" pins the whole run
+    let seed: u64 = parsed.opt_parse("seed", system.faults.seed)?;
+    {
+        // a named scenario owns the *injection* knobs outright (a
+        // config-file stall must not pollute flaky-transport); the
+        // recovery knobs (retransmit/probe/health/budget) stay tunable
+        // via `[faults]` and `--set faults.*`
+        let f = &mut system.faults;
+        f.enabled = true;
+        f.seed = seed;
+        f.drop_prob = 0.0;
+        f.dup_prob = 0.0;
+        f.delay_prob = 0.0;
+        f.flap_len = 0;
+        f.stall_prob = 0.0;
+        f.panic_prob = 0.0;
+        f.artifact_corrupt_prob = 0.0;
+        f.bitflip_sigma_scale = 1.0;
+    }
+    match scenario {
+        "flaky-transport" => {
+            let f = &mut system.faults;
+            f.drop_prob = 0.04;
+            f.dup_prob = 0.06;
+            f.delay_prob = 0.08;
+            f.delay_slots = 3;
+        }
+        "node-flap" => {
+            let f = &mut system.faults;
+            f.flap_node = 1 % system.fleet.nodes;
+            f.flap_after = 20;
+            f.flap_len = 60;
+        }
+        "slow-shard" => {
+            let f = &mut system.faults;
+            f.stall_prob = 0.25;
+            f.stall_us = 3000;
+        }
+        "bitflip-sweep" => {
+            return chaos_bitflip_sweep(parsed, system, seed, json);
+        }
+        other => {
+            return Err(ns_lbp::Error::Usage(format!(
+                "unknown chaos scenario {other:?} (expected \
+                 flaky-transport|slow-shard|node-flap|bitflip-sweep)"
+            )));
+        }
+    }
+
+    let frames_n: usize = parsed.opt_parse("frames", 192)?;
+    let (dataset, artifacts) = resolve_artifacts(parsed, &mut system);
+    let params = match params::load(format!(
+        "{artifacts}/{dataset}.params.bin"
+    )) {
+        Ok(p) => p,
+        Err(_) => params::synth::synth_params(seed).1,
+    };
+    let frames = synth_frames(&params, frames_n, seed)?;
+    let sensors: Vec<u32> = (0..(system.fleet.nodes as u32 * 2)).collect();
+    let mix = parse_mix(parsed.opt("mix").unwrap_or("1:2:1"))?;
+
+    if !json {
+        println!(
+            "chaos: {scenario} | seed {seed} | {} frames | {} nodes | \
+             {} sensors",
+            frames.len(), system.fleet.nodes, sensors.len()
+        );
+    }
+
+    // fault-free reference pass (no plan, no monitor, same traffic)
+    let mut quiet = system.clone();
+    quiet.faults.enabled = false;
+    let baseline = chaos_fleet_pass(&params, &quiet, &frames, &mix,
+                                    &sensors, None,
+                                    std::time::Duration::ZERO)?;
+
+    // faulted pass over the wrapped transport; node-flap settles long
+    // enough for 2x flap_len probe periods so the rejoin is observable
+    let settle = if scenario == "node-flap" {
+        let ms = (2 * system.faults.flap_len as u64
+                  * system.faults.probe_ms).max(500);
+        std::time::Duration::from_millis(ms)
+    } else {
+        std::time::Duration::ZERO
+    };
+    let plan = ns_lbp::faults::FaultPlan::new(system.faults.clone());
+    let faulted = chaos_fleet_pass(&params, &system, &frames, &mix,
+                                   &sensors, Some(&plan), settle)?;
+
+    // completed-frame bit-identity: every (sensor, seq) both passes
+    // finished must carry byte-for-byte equal logits
+    let mut compared = 0u64;
+    let mut divergent = 0u64;
+    for (key, logits) in &faulted.logits {
+        if let Some(base) = baseline.logits.get(key) {
+            compared += 1;
+            if base != logits {
+                divergent += 1;
+            }
+        }
+    }
+    let shard_faults: u64 = faulted
+        .report
+        .node_reports
+        .iter()
+        .flatten()
+        .map(|r| r.faults_injected)
+        .sum();
+    use std::sync::atomic::Ordering as ChaosOrd;
+    let (dropped, duplicated, delayed, blackholed) = (
+        plan.ledger.dropped.load(ChaosOrd::Relaxed),
+        plan.ledger.duplicated.load(ChaosOrd::Relaxed),
+        plan.ledger.delayed.load(ChaosOrd::Relaxed),
+        plan.ledger.blackholed.load(ChaosOrd::Relaxed),
+    );
+    let budget = system.faults.p99_budget;
+    let within = faulted.report.p99_ms <= budget;
+
+    if json {
+        let mut s = format!(
+            "{{\"scenario\":\"{scenario}\",\"seed\":{seed},\"frames\":{},\
+             \"nodes\":{},",
+            frames.len(),
+            system.fleet.nodes
+        );
+        s.push_str(&format!("\"faults\":{},", faults_json(&system.faults)));
+        s.push_str(&format!(
+            "\"schedule\":{},",
+            schedule_json(&plan, system.fleet.nodes)
+        ));
+        s.push_str(&format!(
+            "\"baseline\":{{\"completed\":{},\"p99_ms\":{},\
+             \"admission_retries\":{}}},",
+            baseline.report.completed, baseline.report.p99_ms,
+            baseline.admission_retries
+        ));
+        s.push_str(&format!(
+            "\"faulted\":{{\"admission_retries\":{},\
+             \"wire\":{{\"dropped\":{dropped},\"duplicated\":{duplicated},\
+             \"delayed\":{delayed},\"blackholed\":{blackholed}}},\
+             \"shard_faults\":{shard_faults},\"report\":{}}},",
+            faulted.admission_retries,
+            faulted.report.to_json()
+        ));
+        s.push_str(&format!(
+            "\"divergence\":{{\"compared\":{compared},\
+             \"divergent\":{divergent}}},"
+        ));
+        s.push_str(&format!(
+            "\"gates\":{{\"p99_budget_ms\":{budget},\
+             \"recovery_p99_ms\":{},\"within_budget\":{within},\
+             \"billed_lost\":{},\"orphaned\":{},\"deduped\":{},\
+             \"retries\":{}}}}}",
+            faulted.report.p99_ms,
+            faulted.report.billed_lost(),
+            faulted.report.orphaned,
+            faulted.report.deduped,
+            faulted.report.retries
+        ));
+        println!("{s}");
+    } else {
+        baseline.report.print("fault-free");
+        faulted.report.print("faulted");
+        println!(
+            "  injected  : {} wire ({dropped} dropped, {duplicated} dup, \
+             {delayed} delayed, {blackholed} blackholed) | {shard_faults} \
+             shard",
+            dropped + duplicated + delayed + blackholed
+        );
+        println!(
+            "  chaos gate: billed lost {} | orphaned {} | divergent {}/{} \
+             | recovery p99 {:.3} ms (budget {:.1} ms{}) | retransmits {} \
+             | deduped {}",
+            faulted.report.billed_lost(),
+            faulted.report.orphaned,
+            divergent,
+            compared,
+            faulted.report.p99_ms,
+            budget,
+            if within { "" } else { " EXCEEDED" },
+            faulted.report.retries,
+            faulted.report.deduped
+        );
+    }
+    Ok(())
+}
+
+/// The comparator-variation sweep: rerun the same frames through the
+/// architectural backend at increasing `bitflip_sigma_scale` and report
+/// the Monte-Carlo flip rate, flips actually injected, and logit
+/// divergence against the nominal (fault-free) pass.  Rates and flip
+/// sets are deterministic in the seed, and flip sets at a lower scale
+/// are subsets of those at a higher one, so divergence is monotone.
+fn chaos_bitflip_sweep(parsed: &ns_lbp::cli::Parsed, mut system: SystemConfig,
+                       seed: u64, json: bool) -> Result<()> {
+    let frames_n: usize = parsed.opt_parse("frames", 24)?;
+    let (dataset, artifacts) = resolve_artifacts(parsed, &mut system);
+    let params = match params::load(format!(
+        "{artifacts}/{dataset}.params.bin"
+    )) {
+        Ok(p) => p,
+        Err(_) => params::synth::synth_params(seed).1,
+    };
+    let frames = synth_frames(&params, frames_n, seed)?;
+
+    let build = |sys: &SystemConfig| -> Result<Engine> {
+        Engine::builder()
+            .config(CoordinatorConfig {
+                system: sys.clone(),
+                arch: ArchSim { lbp: true, mlp: false, early_exit: false },
+                shard: None,
+            })
+            .params(params.clone())
+            .backend(BackendKind::Architectural)
+            .no_cross_check()
+            .build()
+    };
+
+    let mut quiet = system.clone();
+    quiet.faults.enabled = false;
+    let mut engine = build(&quiet)?;
+    let base_out = engine.infer_batch(&frames)?;
+
+    // nominal sigma must be error-free (the paper's operating point)
+    let mut nominal = system.clone();
+    nominal.faults.bitflip_sigma_scale = 1.0;
+    let nominal_rate = ns_lbp::faults::BitFlips::rate_for(
+        &nominal.faults, &nominal.circuit);
+
+    struct SweepPoint {
+        scale: f64,
+        rate: f64,
+        flips: u64,
+        divergent: u64,
+        arch_mismatches: u64,
+    }
+    let scales = [4.0f64, 8.0, 16.0, 32.0];
+    let mut points: Vec<SweepPoint> = Vec::with_capacity(scales.len());
+    for &scale in &scales {
+        let mut sys = system.clone();
+        sys.faults.enabled = true;
+        sys.faults.bitflip_sigma_scale = scale;
+        let rate =
+            ns_lbp::faults::BitFlips::rate_for(&sys.faults, &sys.circuit);
+        let before = ns_lbp::faults::bitflips_injected();
+        let mut e = build(&sys)?;
+        let out = e.infer_batch(&frames)?;
+        let flips = ns_lbp::faults::bitflips_injected() - before;
+        let mut divergent = 0u64;
+        let mut arch_mismatches = 0u64;
+        for (b, o) in base_out.frames.iter().zip(&out.frames) {
+            if b.logits != o.logits {
+                divergent += 1;
+            }
+            arch_mismatches += o.telemetry.arch_mismatches;
+        }
+        points.push(SweepPoint { scale, rate, flips, divergent,
+                                 arch_mismatches });
+    }
+    let rates_monotone =
+        points.windows(2).all(|w| w[0].rate <= w[1].rate);
+    let flips_monotone =
+        points.windows(2).all(|w| w[0].flips <= w[1].flips);
+    let divergence_monotone =
+        points.windows(2).all(|w| w[0].divergent <= w[1].divergent);
+
+    if json {
+        let plan = ns_lbp::faults::FaultPlan::new(system.faults.clone());
+        let mut s = format!(
+            "{{\"scenario\":\"bitflip-sweep\",\"seed\":{seed},\
+             \"frames\":{},\"nodes\":1,",
+            frames.len()
+        );
+        s.push_str(&format!("\"faults\":{},", faults_json(&system.faults)));
+        s.push_str(&format!("\"schedule\":{},", schedule_json(&plan, 1)));
+        s.push_str("\"sweep\":[");
+        for (i, p) in points.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"sigma_scale\":{},\"rate\":{},\"bitflips\":{},\
+                 \"compared\":{},\"divergent\":{},\"arch_mismatches\":{}}}",
+                p.scale, p.rate, p.flips, frames.len(), p.divergent,
+                p.arch_mismatches
+            ));
+        }
+        s.push_str("],");
+        s.push_str(&format!(
+            "\"gates\":{{\"nominal_rate\":{nominal_rate},\
+             \"rates_monotone\":{rates_monotone},\
+             \"flips_monotone\":{flips_monotone},\
+             \"divergence_monotone\":{divergence_monotone}}}}}"
+        ));
+        println!("{s}");
+    } else {
+        println!(
+            "chaos: bitflip-sweep | seed {seed} | {} frames | nominal \
+             rate {nominal_rate:.3e}",
+            frames.len()
+        );
+        for p in &points {
+            println!(
+                "  sigma x{:<4} : rate {:.3e} | {} flips | {}/{} frames \
+                 divergent | {} arch mismatches",
+                p.scale, p.rate, p.flips, p.divergent, frames.len(),
+                p.arch_mismatches
+            );
+        }
+        println!(
+            "  chaos gate: rates monotone {rates_monotone} | flips \
+             monotone {flips_monotone} | divergence monotone \
+             {divergence_monotone}"
+        );
     }
     Ok(())
 }

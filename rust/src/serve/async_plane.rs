@@ -478,7 +478,18 @@ impl Task for DispatchTask {
                     }
                     let worker =
                         self.worker.as_mut().expect("worker built above");
-                    worker.dispatch(batch, &self.metrics, &self.tracer);
+                    // panic isolation (mirrors the thread pool): a
+                    // panicking dispatch fails its batch's slots instead
+                    // of killing the executor worker under this task
+                    let caught = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            worker.dispatch(batch, &self.metrics,
+                                            &self.tracer);
+                        }),
+                    );
+                    if caught.is_err() {
+                        worker.fail_pending(&self.metrics);
+                    }
                     // yield between batches: self-wake requeues this
                     // task at the back of the ready queue, so dispatch
                     // work round-robins across the worker pool instead

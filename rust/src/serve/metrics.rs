@@ -69,6 +69,16 @@ pub struct Metrics {
     cross_checked: AtomicU64,
     cross_check_mismatches: AtomicU64,
     batches: AtomicU64,
+    /// Chaos-plane injections executed by this node's shards (stalls +
+    /// panics); wire faults live in the router's [`crate::fleet`] stats
+    /// and bitflips in [`crate::faults::bitflips_injected`].
+    faults_injected: AtomicU64,
+    /// Recovery-plane retries spent on this node's traffic.
+    retries: AtomicU64,
+    /// Frames re-homed onto this node after another node died.
+    rehomed: AtomicU64,
+    /// Frames degraded to best-effort under sustained fault pressure.
+    degraded: AtomicU64,
     classes: [ClassCounters; QosClass::COUNT],
     inner: Mutex<Aggregates>,
 }
@@ -80,6 +90,10 @@ impl Default for Metrics {
             cross_checked: AtomicU64::new(0),
             cross_check_mismatches: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            faults_injected: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            rehomed: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
             classes: Default::default(),
             inner: Mutex::new(Aggregates {
                 all: Reservoir::default(),
@@ -153,6 +167,26 @@ impl Metrics {
 
     pub fn record_batch(&self) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A fault-plan injection fired on this node (shard stall or panic).
+    pub fn record_fault(&self) {
+        self.faults_injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A recovery retry was spent on behalf of this node's traffic.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A frame was re-homed onto this node after a peer died.
+    pub fn record_rehomed(&self) {
+        self.rehomed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A frame was degraded to best-effort under fault pressure.
+    pub fn record_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_failure(&self, class: QosClass, model_id: u32) {
@@ -316,6 +350,10 @@ impl Metrics {
             cross_check_mismatches: self
                 .cross_check_mismatches
                 .load(Ordering::Relaxed),
+            faults_injected: self.faults_injected.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            rehomed: self.rehomed.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
             batches,
             mean_batch: if batches == 0 {
                 0.0
@@ -420,6 +458,15 @@ pub struct MetricsReport {
     pub cross_checked: u64,
     /// Frames whose logits diverged from the reference backend (must be 0).
     pub cross_check_mismatches: u64,
+    /// Chaos-plane injections this node's shards executed (stalls +
+    /// panics); 0 whenever `[faults]` is disabled.
+    pub faults_injected: u64,
+    /// Recovery retries spent on this node's traffic.
+    pub retries: u64,
+    /// Frames re-homed onto this node after a peer died.
+    pub rehomed: u64,
+    /// Frames degraded to best-effort under sustained fault pressure.
+    pub degraded: u64,
     pub batches: u64,
     pub mean_batch: f64,
     pub p50_ms: f64,
@@ -518,6 +565,16 @@ impl MetricsReport {
                 self.cross_checked, self.cross_check_mismatches
             );
         }
+        if self.faults_injected + self.retries + self.rehomed
+            + self.degraded > 0
+        {
+            println!(
+                "  chaos     : {} faults injected | {} retries | \
+                 {} rehomed | {} degraded",
+                self.faults_injected, self.retries, self.rehomed,
+                self.degraded
+            );
+        }
     }
 
     /// Machine-readable report (`serve-bench --json`): counters, global
@@ -555,6 +612,10 @@ impl MetricsReport {
         j::push_u64_field(&mut s, "cross_checked", self.cross_checked);
         j::push_u64_field(&mut s, "cross_check_mismatches",
                           self.cross_check_mismatches);
+        j::push_u64_field(&mut s, "faults_injected", self.faults_injected);
+        j::push_u64_field(&mut s, "retries", self.retries);
+        j::push_u64_field(&mut s, "rehomed", self.rehomed);
+        j::push_u64_field(&mut s, "degraded", self.degraded);
         s.push_str("\"per_class\":[");
         for (i, c) in self.per_class.iter().enumerate() {
             if i > 0 {

@@ -285,22 +285,10 @@ impl Ticket {
     pub fn wait_timeout(&self, timeout: Duration)
                         -> Option<Result<InferResponse>> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.slot.result.lock().unwrap();
-        loop {
-            if let Some(r) = g.take() {
-                return Some(r);
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return None;
-            }
-            let (guard, _) = self
-                .slot
-                .ready
-                .wait_timeout(g, deadline - now)
-                .unwrap();
-            g = guard;
-        }
+        let g = self.slot.result.lock().unwrap();
+        let (_g, r) = queue::wait_deadline(&self.slot.ready, g, deadline,
+                                           |res| res.take());
+        r
     }
 
     /// Non-blocking poll; `None` while the frame is still in flight.

@@ -15,8 +15,35 @@
 //!   then observe the closed state, so every admitted item is processed.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Wait on `cv` until `take` yields a value or `deadline` passes,
+/// re-checking after every (possibly spurious) wakeup.  `take` runs
+/// *before* the first deadline check, so a result that is already
+/// available wins even when the deadline has already passed — the shared
+/// contract of every bounded wait in the crate ([`BoundedQueue::
+/// pop_timeout`], `Ticket::wait_timeout`, the fleet's ticket and control
+/// slots).  Returns the guard so the caller can drop it before notifying
+/// its own condvars.
+pub(crate) fn wait_deadline<'a, T, R>(
+    cv: &Condvar,
+    mut g: MutexGuard<'a, T>,
+    deadline: Instant,
+    mut take: impl FnMut(&mut T) -> Option<R>,
+) -> (MutexGuard<'a, T>, Option<R>) {
+    loop {
+        if let Some(r) = take(&mut g) {
+            return (g, Some(r));
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return (g, None);
+        }
+        let (guard, _) = cv.wait_timeout(g, deadline - now).unwrap();
+        g = guard;
+    }
+}
 
 /// Why a non-blocking push was refused (the item is handed back).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -150,28 +177,29 @@ impl<T> BoundedQueue<T> {
     }
 
     /// Pop with a bounded wait (used by the batcher's deadline logic).
+    /// An available item wins over the closed flag, and both win over an
+    /// already-expired deadline (see [`wait_deadline`]).
     pub fn pop_timeout(&self, timeout: Duration) -> PopResult<T> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
-        loop {
-            if let Some(item) = g.items.pop_front() {
-                drop(g);
+        let g = self.inner.lock().unwrap();
+        let (g, popped) =
+            wait_deadline(&self.not_empty, g, deadline, |inner| {
+                if let Some(item) = inner.items.pop_front() {
+                    Some(PopResult::Item(item))
+                } else if inner.closed {
+                    Some(PopResult::Closed)
+                } else {
+                    None
+                }
+            });
+        drop(g);
+        match popped {
+            Some(PopResult::Item(item)) => {
                 self.not_full.notify_one();
-                return PopResult::Item(item);
+                PopResult::Item(item)
             }
-            if g.closed {
-                return PopResult::Closed;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                return PopResult::TimedOut;
-            }
-            let (guard, res) =
-                self.not_empty.wait_timeout(g, deadline - now).unwrap();
-            g = guard;
-            if res.timed_out() && g.items.is_empty() && !g.closed {
-                return PopResult::TimedOut;
-            }
+            Some(res) => res,
+            None => PopResult::TimedOut,
         }
     }
 
@@ -232,6 +260,32 @@ mod tests {
         let (err, item) = q.push_dropping_oldest(4).unwrap_err();
         assert_eq!(err, PushError::Closed);
         assert_eq!(item, 4);
+    }
+
+    #[test]
+    fn wait_deadline_already_passed_still_takes_available_value() {
+        let m = Mutex::new(Some(7u32));
+        let cv = Condvar::new();
+        let past = Instant::now() - Duration::from_millis(50);
+        // value available: returned even though the deadline is long gone
+        let (g, r) = wait_deadline(&cv, m.lock().unwrap(), past,
+                                   |v: &mut Option<u32>| v.take());
+        assert_eq!(r, Some(7));
+        drop(g);
+        // nothing available + deadline passed: immediate None, no wait
+        let t0 = Instant::now();
+        let (_g, r) = wait_deadline(&cv, m.lock().unwrap(), past,
+                                    |v: &mut Option<u32>| v.take());
+        assert_eq!(r, None);
+        assert!(t0.elapsed() < Duration::from_millis(20));
+    }
+
+    #[test]
+    fn pop_timeout_with_zero_timeout_still_pops_available_item() {
+        let q = BoundedQueue::new(2);
+        q.try_push(5u32).unwrap();
+        assert!(matches!(q.pop_timeout(Duration::ZERO), PopResult::Item(5)));
+        assert!(matches!(q.pop_timeout(Duration::ZERO), PopResult::TimedOut));
     }
 
     #[test]

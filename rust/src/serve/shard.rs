@@ -32,6 +32,7 @@ use std::time::Instant;
 
 use crate::engine::{BackendKind, Engine, EngineConfig, QosClass, ShardSlice};
 use crate::error::{Error, Result};
+use crate::faults::{ShardFault, ShardFaults};
 use crate::obs::{EventKind, TraceEvent, Tracer};
 use crate::sensor::Frame;
 
@@ -92,7 +93,19 @@ impl ShardPool {
                     .name(format!("nslbp-shard-{index}"))
                     .spawn(move || {
                         while let Some(batch) = batches.pop() {
-                            worker.dispatch(batch, &metrics, &tracer);
+                            // Panic isolation: a panicking dispatch (an
+                            // injected chaos fault, or a genuine backend
+                            // bug) must not wedge the pool — fail every
+                            // slot the batch still owed and keep serving.
+                            let caught = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    worker.dispatch(batch, &metrics,
+                                                    &tracer);
+                                }),
+                            );
+                            if caught.is_err() {
+                                worker.fail_pending(&metrics);
+                            }
                         }
                     })
                     .map_err(Error::Io)
@@ -190,6 +203,14 @@ pub(crate) struct ShardWorker {
     shells: Vec<(u32, u64, Instant, super::ResponseSlot)>,
     cache: Vec<CachedEngine>,
     tick: u64,
+    /// Seeded chaos injector for this shard (`None` unless `[faults]`
+    /// arms stalls or panics).
+    faults: Option<ShardFaults>,
+    /// Class/model of the batch currently being dispatched, so
+    /// [`ShardWorker::fail_pending`] can attribute failures after a
+    /// mid-dispatch panic unwound the `dispatch` frame.
+    batch_class: QosClass,
+    batch_model: u32,
 }
 
 impl ShardWorker {
@@ -218,7 +239,23 @@ impl ShardWorker {
             shells: Vec::new(),
             cache: Vec::new(),
             tick: 0,
+            faults: ShardFaults::new(&base.system.faults, slice.index),
+            batch_class: QosClass::default(),
+            batch_model: 0,
         })
+    }
+
+    /// Fail every response slot the in-flight batch still owes — called
+    /// by the dispatch driver after a panic unwound `dispatch` (the
+    /// shells survive in `self`, so no caller is left waiting forever).
+    pub(crate) fn fail_pending(&mut self, metrics: &Metrics) {
+        for (_sensor_id, _seq, _enqueued_at, slot) in self.shells.drain(..) {
+            metrics.record_failure(self.batch_class, self.batch_model);
+            slot.fulfill(Err(Error::Serve(
+                "shard worker panicked mid-dispatch".into(),
+            )));
+        }
+        self.frames.clear();
     }
 
     /// Dispatch one batch: shed expired members, resolve the engine,
@@ -230,6 +267,8 @@ impl ShardWorker {
         let Batch { class, backend, model_id, model, batch_id, requests } =
             batch;
         let index = self.index;
+        self.batch_class = class;
+        self.batch_model = model_id;
 
         // shed requests whose per-request deadline expired while queued:
         // the caller asked for freshness, not a stale answer
@@ -269,6 +308,23 @@ impl ShardWorker {
         }
         if self.frames.is_empty() {
             return; // fully-expired batch: nothing was dispatched
+        }
+
+        // chaos injection point: after the shells are populated (so a
+        // panic here exercises the driver's fail-over path) and before
+        // any lock is held (so a panic can never poison the metrics)
+        if let Some(f) = self.faults.as_mut() {
+            match f.next() {
+                Some(ShardFault::Stall(d)) => {
+                    metrics.record_fault();
+                    std::thread::sleep(d);
+                }
+                Some(ShardFault::Panic) => {
+                    metrics.record_fault();
+                    panic!("injected shard fault: chaos panic");
+                }
+                None => {}
+            }
         }
         metrics.record_batch();
         let batch_size = self.frames.len();

@@ -674,3 +674,130 @@ fn prop_routing_table_caps_are_never_exceeded() {
         }
     });
 }
+
+/// Chaos shadow ledger: duplicated, reordered, delayed (and sometimes
+/// dropped) wire messages never double-complete a ticket and never lose
+/// a billed frame.  The router's resolved ledger absorbs every late or
+/// duplicate completion (surfacing as `deduped`, not as a second
+/// response), retransmits recover dropped messages, and every billed
+/// frame offered comes back exactly once while the nodes stay alive.
+#[test]
+fn prop_faulty_wire_exactly_once_no_billed_loss() {
+    use ns_lbp::engine::{ArchSim, BackendKind, EngineConfig, QosClass};
+    use ns_lbp::faults::{FaultPlan, FaultyTransport, Retrier, RetryPolicy};
+    use ns_lbp::fleet::{ChannelTransport, Fleet};
+    use ns_lbp::params::synth::synth_params;
+    use ns_lbp::testing::synth_frames;
+    use std::collections::HashSet;
+
+    let (_, params) = synth_params(11);
+    check(Config::default().cases(4), "faulty wire exactly-once",
+          |g: &mut Gen| {
+        let mut system = ns_lbp::config::SystemConfig::default();
+        system.engine.backend = BackendKind::Functional;
+        system.engine.cross_check = None;
+        system.fleet.nodes = g.usize_in(2, 3);
+        {
+            let f = &mut system.faults;
+            f.enabled = true;
+            f.seed = g.rng().next_u64();
+            f.dup_prob = g.f64_in(0.05, 0.15);
+            f.delay_prob = g.f64_in(0.05, 0.15);
+            f.delay_slots = g.usize_in(1, 4);
+            f.drop_prob = if g.bool() { 0.02 } else { 0.0 };
+            // fast recovery clocks so dropped messages retransmit
+            // within the test budget
+            f.retransmit_ms = 40;
+            f.probe_ms = 10;
+            f.suspect_ms = 60;
+            f.dead_ms = 250;
+        }
+        let n_frames = g.usize_in(24, 48);
+        let frames =
+            synth_frames(&params, n_frames, system.faults.seed ^ 0x9e37)
+                .unwrap();
+        let sensors: Vec<u32> =
+            (0..(system.fleet.nodes as u32 * 2)).collect();
+        let mix = [QosClass::Billed, QosClass::Standard, QosClass::BestEffort];
+
+        let depth: usize =
+            system.fleet.capacity.iter().sum::<usize>() * 4 + 64;
+        let plan = FaultPlan::new(system.faults.clone());
+        let transport = FaultyTransport::new(
+            Box::new(ChannelTransport::new(depth)),
+            std::sync::Arc::clone(&plan),
+        );
+        let config = EngineConfig {
+            system: system.clone(),
+            arch: ArchSim { lbp: false, mlp: false, early_exit: false },
+            shard: None,
+        };
+        let fleet =
+            Fleet::start_with_transport(params.clone(), config,
+                                        Box::new(transport))
+                .unwrap();
+
+        let mut retrier =
+            Retrier::new(RetryPolicy::admission(), system.faults.seed);
+        let mut seqs: std::collections::HashMap<u32, u64> =
+            std::collections::HashMap::new();
+        let mut offered_billed = 0u64;
+        let mut tickets = Vec::with_capacity(frames.len());
+        for (i, frame) in frames.iter().enumerate() {
+            let sensor = sensors[i % sensors.len()];
+            let class = mix[i % mix.len()];
+            if class == QosClass::Billed {
+                offered_billed += 1;
+            }
+            let seq = *seqs.get(&sensor).unwrap_or(&0);
+            let ticket = retrier
+                .run(|| {
+                    fleet.submit_stamped(sensor, class, 0,
+                                         frame.clone().with_seq(seq))
+                })
+                .unwrap();
+            seqs.insert(sensor, seq + 1);
+            tickets.push(ticket);
+        }
+
+        // exactly-once: no (sensor, seq) resolves twice, and the
+        // router's completed counter agrees with what clients saw
+        let mut seen: HashSet<(u32, u64)> = HashSet::new();
+        let mut ok = 0u64;
+        let mut billed_ok = 0u64;
+        for t in tickets {
+            match t.wait_timeout(std::time::Duration::from_secs(20)) {
+                Some(Ok(r)) => {
+                    ok += 1;
+                    if r.inner.class == QosClass::Billed {
+                        billed_ok += 1;
+                    }
+                    assert!(
+                        seen.insert((r.inner.sensor_id, r.seq())),
+                        "frame ({}, {}) completed twice",
+                        r.inner.sensor_id, r.seq()
+                    );
+                }
+                Some(Err(ns_lbp::Error::Dropped(_)))
+                | Some(Err(ns_lbp::Error::Serve(_))) => {}
+                Some(Err(e)) => panic!("unexpected terminal error: {e}"),
+                None => panic!("frame unresolved after 20 s under faults"),
+            }
+        }
+        plan.disarm();
+        let report = fleet.drain().unwrap();
+
+        assert_eq!(report.completed, ok, "router/client completion drift");
+        assert_eq!(report.orphaned, 0, "ticket leaked without a response");
+        assert_eq!(report.billed_lost(), 0, "billed frame lost");
+        assert_eq!(billed_ok, offered_billed,
+                   "billed frame shed while every node stayed alive");
+        // the ledger absorbed every duplicate the schedule executed: a
+        // duplicated response must never surface as a second completion
+        let duplicated =
+            plan.ledger.duplicated.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(report.deduped <= duplicated + report.retries,
+                "deduped {} exceeds duplicates {} + retransmits {}",
+                report.deduped, duplicated, report.retries);
+    });
+}

@@ -14,6 +14,9 @@ covering every trajectory artifact:
   (EXPERIMENTS.md §Async-serve),
 * BENCH_fleet.json   — fleet-bench schema: baseline/drill pass latency
   and completion counts,
+* BENCH_chaos_*.json — chaos schema (EXPERIMENTS.md §Chaos): recovery
+  p99 under injected faults and faulted-pass completion counts (the
+  bitflip-sweep document carries physical rates, not perf — no series),
 * AB_energy.json     — A/B harness schema: per-arm energy/time/TOPS-W.
 
 A series absent from the previous run's artifact is a *first sighting*
@@ -66,6 +69,15 @@ def flatten(name, blob):
             out[f"{tag} p95_ms"] = (rep["latency_ms"]["p95"], False)
             out[f"{tag} energy_per_frame_uj"] = (
                 rep["energy_per_frame_uj"], False)
+    elif "scenario" in doc:  # chaos schema (BENCH_chaos_*.json)
+        # NB: before the fleet branch — chaos docs also carry
+        # "baseline"/"nodes", but with a different shape
+        if doc["scenario"] != "bitflip-sweep":
+            tag = doc["scenario"]
+            out[f"{tag} recovery_p99_ms"] = (
+                doc["gates"]["recovery_p99_ms"], False)
+            out[f"{tag} completed"] = (
+                doc["faulted"]["report"]["completed"], True)
     elif "baseline" in doc and "nodes" in doc:  # fleet-bench (BENCH_fleet.json)
         for phase in ("baseline", "drill"):
             sub = doc.get(phase)
@@ -129,6 +141,7 @@ def main():
     hard = []
     for name in ("BENCH_hotpath.json", "BENCH_serve.json",
                  "BENCH_serve_async.json", "BENCH_fleet.json",
+                 "BENCH_chaos_flaky.json", "BENCH_chaos_flap.json",
                  "AB_energy.json"):
         if name not in zf.namelist():
             if os.path.exists(name):

@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Validate an `ns-lbp chaos --json` document (see EXPERIMENTS.md §Chaos).
+
+Usage: chaos_check.py BENCH_chaos.json [--expect-scenario NAME]
+                      [--same-schedule-as OTHER.json]
+
+Checks, in order:
+
+1. the document parses and carries the chaos schema (`scenario`, `seed`,
+   `faults`, `schedule`, and per-scenario sections);
+2. determinism: when `--same-schedule-as` names a second run, both runs
+   must share the scenario, the seed, the effective fault knobs, and an
+   identical `schedule` section (digest and event list) — the seeded
+   schedule is the whole point, so any drift is a hard failure;
+3. recovery (fleet scenarios): zero billed loss, zero orphaned tickets,
+   recovery p99 within the `[faults] p99_budget`, and completed-frame
+   logits bit-identical to the fault-free pass (`divergent == 0` over a
+   non-empty comparison set);
+4. the scenario actually injected something — a chaos run whose ledger
+   is empty proves nothing: wire faults for flaky-transport, blackholes
+   plus health dead/rejoin transitions and retransmits for node-flap,
+   shard stalls for slow-shard;
+5. bitflip-sweep: the nominal operating point is error-free
+   (`nominal_rate == 0`), the Monte-Carlo flip rate / injected flips /
+   logit divergence are all monotone in the sigma scale, and the top of
+   the sweep actually flipped something.
+
+Exit 0 on a valid document, 1 with a diagnostic on the first violated
+check.
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"chaos check: FAIL: {msg}")
+    sys.exit(1)
+
+
+def load(path):
+    with open(path, encoding="utf-8") as f:
+        try:
+            return json.load(f)
+        except json.JSONDecodeError as exc:
+            fail(f"{path}: not JSON ({exc})")
+
+
+def check_schema(path, doc):
+    for key in ("scenario", "seed", "frames", "faults", "schedule"):
+        if key not in doc:
+            fail(f"{path}: no {key!r} — not a chaos document")
+    sched = doc["schedule"]
+    for key in ("digest", "events"):
+        if key not in sched:
+            fail(f"{path}: schedule has no {key!r}")
+
+
+def check_same_schedule(path_a, a, path_b, b):
+    if a["scenario"] != b["scenario"] or a["seed"] != b["seed"]:
+        fail(f"{path_b}: scenario/seed differ from {path_a} — the "
+             "determinism comparison needs two identical invocations")
+    if a["faults"] != b["faults"]:
+        fail(f"{path_b}: effective fault knobs differ from {path_a}")
+    if a["schedule"] != b["schedule"]:
+        fail(f"{path_b}: schedule differs from {path_a} under the same "
+             f"seed {a['seed']} — the fault plan is not deterministic")
+
+
+def check_fleet_scenario(path, doc):
+    for key in ("baseline", "faulted", "divergence", "gates"):
+        if key not in doc:
+            fail(f"{path}: no {key!r} section")
+    gates = doc["gates"]
+    report = doc["faulted"]["report"]
+    wire = doc["faulted"]["wire"]
+
+    if gates["billed_lost"] != 0:
+        fail(f"{path}: {gates['billed_lost']} billed frame(s) lost")
+    if gates["orphaned"] != 0:
+        fail(f"{path}: {gates['orphaned']} orphaned responses")
+    if gates["recovery_p99_ms"] > gates["p99_budget_ms"]:
+        fail(f"{path}: recovery p99 {gates['recovery_p99_ms']:.3f} ms "
+             f"blew the budget {gates['p99_budget_ms']:.1f} ms")
+    div = doc["divergence"]
+    if div["compared"] == 0:
+        fail(f"{path}: no completed frame was comparable to the "
+             "fault-free pass — the bit-identity gate is vacuous")
+    if div["divergent"] != 0:
+        fail(f"{path}: {div['divergent']}/{div['compared']} completed "
+             "frames diverged from the fault-free logits")
+
+    scenario = doc["scenario"]
+    wire_total = (wire["dropped"] + wire["duplicated"] + wire["delayed"]
+                  + wire["blackholed"])
+    if scenario == "flaky-transport":
+        if wire_total == 0:
+            fail(f"{path}: flaky-transport injected no wire fault")
+        if gates["retries"] == 0:
+            fail(f"{path}: flaky-transport never exercised a retransmit")
+    elif scenario == "node-flap":
+        if wire["blackholed"] == 0:
+            fail(f"{path}: node-flap black-holed nothing")
+        health = report["health"]
+        if health["dead"] < 1:
+            fail(f"{path}: the flapped node was never declared dead")
+        if health["rejoined"] < 1:
+            fail(f"{path}: the flapped node never rejoined")
+        if gates["retries"] == 0:
+            fail(f"{path}: node-flap never exercised a retransmit")
+    elif scenario == "slow-shard":
+        if doc["faulted"]["shard_faults"] == 0:
+            fail(f"{path}: slow-shard injected no stall")
+    else:
+        fail(f"{path}: unknown fleet scenario {scenario!r}")
+    return (f"{report['completed']} completed, {wire_total} wire faults, "
+            f"{doc['faulted']['shard_faults']} shard faults, "
+            f"{gates['retries']} retransmits, p99 "
+            f"{gates['recovery_p99_ms']:.1f} ms, 0 billed lost, "
+            f"0/{div['compared']} divergent")
+
+
+def check_bitflip_sweep(path, doc):
+    for key in ("sweep", "gates"):
+        if key not in doc:
+            fail(f"{path}: no {key!r} section")
+    gates = doc["gates"]
+    sweep = doc["sweep"]
+    if not sweep:
+        fail(f"{path}: empty sweep")
+    if gates["nominal_rate"] != 0:
+        fail(f"{path}: nominal sigma flips bits (rate "
+             f"{gates['nominal_rate']}) — the paper's operating point "
+             "must be error-free")
+    for gate in ("rates_monotone", "flips_monotone", "divergence_monotone"):
+        if not gates[gate]:
+            fail(f"{path}: {gate} is false — divergence must grow with "
+                 "the sigma scale")
+    top = sweep[-1]
+    if top["rate"] <= 0:
+        fail(f"{path}: the top of the sweep (sigma x{top['sigma_scale']}) "
+             "still has flip rate 0 — the sweep proves nothing")
+    if top["bitflips"] == 0:
+        fail(f"{path}: rate {top['rate']} at sigma "
+             f"x{top['sigma_scale']} but no bit was flipped")
+    return (f"{len(sweep)} scales, top rate {top['rate']:.3e}, "
+            f"{top['bitflips']} flips, {top['divergent']}/"
+            f"{top['compared']} divergent at x{top['sigma_scale']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("doc", help="BENCH_chaos.json from chaos --json")
+    ap.add_argument("--expect-scenario",
+                    help="fail unless the document is this scenario")
+    ap.add_argument("--same-schedule-as", metavar="OTHER",
+                    help="second run of the same invocation; its schedule "
+                         "section must be identical (determinism gate)")
+    args = ap.parse_args()
+
+    doc = load(args.doc)
+    check_schema(args.doc, doc)
+    scenario = doc["scenario"]
+    if args.expect_scenario and scenario != args.expect_scenario:
+        fail(f"{args.doc}: scenario {scenario!r}, expected "
+             f"{args.expect_scenario!r}")
+
+    if args.same_schedule_as:
+        other = load(args.same_schedule_as)
+        check_schema(args.same_schedule_as, other)
+        check_same_schedule(args.doc, doc, args.same_schedule_as, other)
+
+    if scenario == "bitflip-sweep":
+        summary = check_bitflip_sweep(args.doc, doc)
+    else:
+        summary = check_fleet_scenario(args.doc, doc)
+
+    bits = [f"seed {doc['seed']}", summary]
+    if args.same_schedule_as:
+        bits.append(f"schedule identical to {args.same_schedule_as}")
+    print(f"chaos check: OK: {args.doc}: {scenario}: " + ", ".join(bits))
+
+
+if __name__ == "__main__":
+    main()

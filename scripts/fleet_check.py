@@ -149,6 +149,22 @@ def main():
         if report["rerouted"] == 0:
             fail("drill: a node was killed but nothing was re-homed — "
                  "the drill proved nothing")
+        # the clients' summed per-response re-home counts must agree
+        # with the router's own counter: every re-home the router
+        # performed is visible on exactly one completed response, except
+        # frames shed *after* being re-homed (their count dies with the
+        # drop), so equality is required whenever nothing was shed
+        if "rehomed_observed" in drill:
+            observed = drill["rehomed_observed"]
+            if observed > report["rerouted"]:
+                fail(f"drill: clients observed {observed} re-homes, the "
+                     f"router only counted {report['rerouted']}")
+            shed = (report["dropped"] + report["failed"]
+                    + sum(report["lost_by_class"].values()))
+            if shed == 0 and observed != report["rerouted"]:
+                fail(f"drill: router re-homed {report['rerouted']} "
+                     f"frame(s) but completed responses only carry "
+                     f"{observed} — a re-home went unaccounted")
         budget = drill["p99_budget"]
         baseline_p99 = max(drill["baseline_p99_ms"], 1e-3)
         if drill["drill_p99_ms"] > budget * baseline_p99:
